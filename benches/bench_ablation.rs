@@ -1,0 +1,20 @@
+//! `cargo bench` target: design-choice ablations (sketch path, FFT
+//! packing, batching policy, median-of-d).
+use hocs::experiments::{
+    run_ablation_batching, run_ablation_fft_packing, run_ablation_median_d,
+    run_ablation_sketch_path, ExpConfig,
+};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    run_ablation_sketch_path(&cfg).print();
+    println!();
+    run_ablation_fft_packing(&cfg).print();
+    println!();
+    run_ablation_median_d(&cfg).print();
+    println!();
+    match run_ablation_batching(&cfg, "artifacts") {
+        Ok(t) => t.print(),
+        Err(e) => println!("batching ablation skipped: {e}"),
+    }
+}

@@ -1,0 +1,14 @@
+//! `cargo bench` target: Figure 8 (Kron sketch error/time vs ratio).
+use hocs::experiments::{run_fig8, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (table, rows) = run_fig8(&cfg, 10);
+    table.print();
+    let mean_speedup: f64 = rows
+        .iter()
+        .map(|r| r.cts_time.as_secs_f64() / r.mts_time.as_secs_f64())
+        .sum::<f64>()
+        / rows.len() as f64;
+    println!("mean MTS-over-CTS compression speedup: {mean_speedup:.1}x");
+}

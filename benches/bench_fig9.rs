@@ -1,0 +1,7 @@
+//! `cargo bench` target: Figure 9 (covariance estimation).
+use hocs::experiments::{run_fig9, ExpConfig};
+
+fn main() {
+    let (table, _) = run_fig9(&ExpConfig::default());
+    table.print();
+}

@@ -1,0 +1,9 @@
+//! `cargo bench` target: coordinator throughput/latency (§Perf L3).
+use hocs::experiments::{run_service_bench, ExpConfig};
+
+fn main() {
+    match run_service_bench(&ExpConfig::default(), "artifacts") {
+        Ok((table, _)) => table.print(),
+        Err(e) => println!("service bench skipped: {e} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,14 @@
+//! `cargo bench` target: Tables 1 / 3 / 4-5 / 6 (sketched tensor-op
+//! computation & memory, CTS vs MTS).
+use hocs::experiments::{run_table1, run_table3, run_table45, run_table6, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    run_table3(&cfg, &[8, 12, 16, 24, 32]).0.print();
+    println!();
+    run_table45(&cfg, &[(12, 2), (12, 4), (16, 6), (8, 10), (6, 12)]).0.print();
+    println!();
+    run_table6(&cfg, &[(12, 2), (16, 4), (16, 8), (8, 12)]).0.print();
+    println!();
+    run_table1(&cfg).print();
+}

@@ -1,0 +1,26 @@
+//! `cargo bench` target: Figures 10 & 12 (tensor-regression network,
+//! end to end through the AOT artifacts). Uses a shortened schedule so
+//! `cargo bench` stays tractable; the full curves come from
+//! `hocs bench fig10` / `examples/train_trl.rs`.
+use hocs::experiments::{run_fig10, run_fig12, ExpConfig};
+use hocs::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("train bench skipped: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = ExpConfig { quick: true, ..Default::default() };
+    match run_fig10(&cfg, &rt) {
+        Ok((t, _)) => t.print(),
+        Err(e) => println!("fig10 failed: {e}"),
+    }
+    println!();
+    match run_fig12(&cfg, &rt) {
+        Ok((t, _)) => t.print(),
+        Err(e) => println!("fig12 failed: {e}"),
+    }
+}

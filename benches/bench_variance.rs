@@ -1,0 +1,7 @@
+//! `cargo bench` target: Theorem 2.1 empirical variance check.
+use hocs::experiments::{run_variance, ExpConfig};
+
+fn main() {
+    let (table, _) = run_variance(&ExpConfig::default());
+    table.print();
+}

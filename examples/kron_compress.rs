@@ -1,0 +1,26 @@
+//! Sketched Kronecker-product compression (the paper's §4.1 workload):
+//! sweep compression ratios and compare CTS vs MTS on error and time —
+//! a runnable miniature of Figure 8.
+//!
+//! ```bash
+//! cargo run --release --example kron_compress -- [n] [ratios...]
+//! ```
+
+use hocs::experiments::{run_fig8, ExpConfig};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+    let cfg = ExpConfig { quick: false, seed: 20190711 };
+    let (table, rows) = run_fig8(&cfg, n);
+    table.print();
+    // the paper's headline claim, checked live:
+    let all_faster = rows.iter().all(|r| r.mts_time <= r.cts_time);
+    let mean_speedup: f64 = rows
+        .iter()
+        .map(|r| r.cts_time.as_secs_f64() / r.mts_time.as_secs_f64())
+        .sum::<f64>()
+        / rows.len() as f64;
+    println!(
+        "\nMTS faster at every ratio: {all_faster}; mean compression speedup {mean_speedup:.1}x"
+    );
+}

@@ -1,0 +1,56 @@
+//! Quickstart: sketch a tensor with MTS/HCS, recover it, and do a
+//! Kronecker product entirely in sketch space.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hocs::rng::Pcg64;
+use hocs::sketch::estimate::median_decompress;
+use hocs::sketch::kron::MtsKron;
+use hocs::sketch::mts::MtsSketcher;
+use hocs::tensor::{kron, rel_error, Tensor};
+
+fn main() {
+    let mut rng = Pcg64::new(0);
+
+    // --- 1. sketch and recover a third-order tensor -------------------
+    let t = Tensor::randn(&[16, 16, 16], &mut rng);
+    let sk = MtsSketcher::new(&[16, 16, 16], &[8, 8, 8], 42);
+    let sketch = sk.sketch(&t);
+    println!(
+        "MTS: {:?} -> {:?} (compression ratio {:.0}x)",
+        t.dims(),
+        sketch.dims(),
+        sk.compression_ratio()
+    );
+    // single sketch
+    let rec1 = sk.decompress(&sketch);
+    // median of 9 independent sketches (the paper's robust estimator)
+    let rec9 = median_decompress(9, |rep| {
+        let s = MtsSketcher::with_repeat(&[16, 16, 16], &[8, 8, 8], 42, rep);
+        s.decompress(&s.sketch(&t))
+    });
+    println!(
+        "recovery rel. error: single {:.3}, median-of-9 {:.3}",
+        rel_error(&t, &rec1),
+        rel_error(&t, &rec9)
+    );
+
+    // --- 2. Kronecker product in sketch space (Lemma B.1) -------------
+    let a = Tensor::randn(&[10, 10], &mut rng);
+    let b = Tensor::randn(&[10, 10], &mut rng);
+    let mk = MtsKron::new(&[10, 10], &[10, 10], 40, 40, 7);
+    let p = mk.compress(&a, &b); // never materializes the 100×100 product
+    let truth = kron(&a, &b);
+    let est = mk.estimate(&p, 3, 4, 5, 6);
+    println!(
+        "sketched Kron: entry (3,4)x(5,6): estimated {est:.4}, true {:.4}",
+        a.at2(3, 4) * b.at2(5, 6)
+    );
+    println!(
+        "full recovery rel. error at ratio {:.1}: {:.3}",
+        mk.compression_ratio(),
+        rel_error(&truth, &mk.decompress(&p))
+    );
+}

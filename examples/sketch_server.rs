@@ -1,0 +1,89 @@
+//! Sketch-service demo: start the coordinator with the XLA (AOT) backend,
+//! drive a mixed workload (MTS sketches, CS sketches, Kron combines)
+//! from several client threads, and print the service metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sketch_server
+//! ```
+
+use hocs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
+use hocs::rng::Pcg64;
+use hocs::runtime::Manifest;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = hocs::runtime::DEFAULT_ARTIFACTS_DIR;
+    let man = Manifest::load(dir)?;
+    let mts = man.ops["mts_sketch"].clone();
+    let cs = man.ops["cs_sketch"].clone();
+    let kron = man.ops["kron_combine"].clone();
+
+    let co = Arc::new(Coordinator::start(CoordinatorConfig {
+        backend: BackendKind::Xla,
+        artifacts_dir: dir.to_string(),
+        serve_model: Some("trl_mts_4x4x8".to_string()),
+        ..Default::default()
+    })?);
+    println!("coordinator up (xla-pjrt backend, serving trl_mts_4x4x8)");
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..4u64 {
+        let co = co.clone();
+        let (mts, cs, kron) = (mts.clone(), cs.clone(), kron.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(client + 1);
+            for i in 0..250usize {
+                let job = match i % 4 {
+                    0 => Job::MtsSketch(
+                        (0..mts.input_dims[0] * mts.input_dims[1])
+                            .map(|_| rng.normal() as f32)
+                            .collect(),
+                    ),
+                    1 => Job::CsSketch(
+                        (0..cs.input_dims[0]).map(|_| rng.normal() as f32).collect(),
+                    ),
+                    2 => {
+                        let n = kron.sketch_dims[0] * kron.sketch_dims[1];
+                        Job::KronCombine(
+                            (0..n).map(|_| rng.normal() as f32).collect(),
+                            (0..n).map(|_| rng.normal() as f32).collect(),
+                        )
+                    }
+                    _ => Job::Classify(
+                        (0..32 * 32 * 3).map(|_| rng.normal() as f32).collect(),
+                    ),
+                };
+                loop {
+                    match co.try_submit(job_clone(&job)) {
+                        Ok(rx) => {
+                            rx.recv().unwrap().unwrap();
+                            break;
+                        }
+                        Err(_) => std::thread::yield_now(), // backpressure
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "1000 mixed requests in {wall:.2}s ({:.0} req/s)\nmetrics: {}",
+        1000.0 / wall,
+        co.metrics().summary()
+    );
+    Ok(())
+}
+
+/// Job isn't Clone (payloads move); duplicate manually for the retry loop.
+fn job_clone(j: &Job) -> Job {
+    match j {
+        Job::MtsSketch(x) => Job::MtsSketch(x.clone()),
+        Job::CsSketch(x) => Job::CsSketch(x.clone()),
+        Job::KronCombine(a, b) => Job::KronCombine(a.clone(), b.clone()),
+        Job::Classify(x) => Job::Classify(x.clone()),
+    }
+}

@@ -1,0 +1,75 @@
+//! Compressing decomposed tensors (§3): take a dense tensor, fit
+//! Tucker / CP / TT forms with the in-crate decomposition substrate,
+//! sketch each form with CTS and MTS, and report parameters vs recovery.
+//!
+//! ```bash
+//! cargo run --release --example tensor_compress
+//! ```
+
+use hocs::decomp::{cp_als, hosvd, tt_svd};
+use hocs::rng::Pcg64;
+use hocs::sketch::cp::MtsCp;
+use hocs::sketch::estimate::median_decompress;
+use hocs::sketch::tt::MtsTt;
+use hocs::sketch::tucker::MtsTucker;
+use hocs::tensor::{rel_error, Tensor};
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+    let (n, r) = (16usize, 4usize);
+    // ground truth: an exactly low-rank tensor + small noise
+    let clean = hocs::decomp::TuckerTensor::random(&[n, n, n], &[r, r, r], &mut rng);
+    let noise = Tensor::randn(&[n, n, n], &mut rng).scale(0.01);
+    let dense = clean.reconstruct().add(&noise);
+    println!("dense tensor: {}³ = {} floats", n, dense.len());
+
+    // --- decompose (substrates built for this repo) --------------------
+    let tucker = hosvd(&dense, &[r, r, r]);
+    let cp = cp_als(&dense, r, 40, 1e-9, &mut rng);
+    let tt = tt_svd(&dense, &[r, r]);
+    println!(
+        "decomposition error: tucker {:.4}, cp {:.4}, tt {:.4}",
+        rel_error(&dense, &tucker.reconstruct()),
+        rel_error(&dense, &cp.reconstruct()),
+        rel_error(&dense, &tt.reconstruct()),
+    );
+    println!(
+        "params: dense {}, tucker {}, cp {}, tt {}",
+        dense.len(),
+        tucker.param_count(),
+        cp.param_count(),
+        tt.param_count()
+    );
+
+    // --- sketch the decomposed forms (never re-densify) ----------------
+    let d = 9;
+    let (m1, m2) = (512, 8);
+    let mts_tucker = median_decompress(d, |rep| {
+        let s = MtsTucker::with_repeat(&[n, n, n], &[r, r, r], m1, m2, 5, rep);
+        s.decompress(&s.sketch(&tucker))
+    });
+    let mts_cp = median_decompress(d, |rep| {
+        let s = MtsCp::with_repeat(&[n, n, n], r, m1, m2, 5, rep);
+        s.decompress(&s.sketch(&cp))
+    });
+    let mts_tt = median_decompress(d, |rep| {
+        let s = MtsTt::with_repeat(&[n, n, n], &[r, r], 64, 16, 16, 5, rep);
+        s.decompress(&s.sketch(&tt))
+    });
+    println!("\nsketched recovery (median of {d}):");
+    println!(
+        "  MTS(Tucker)  sketch {} floats -> rel err {:.3}",
+        m1,
+        rel_error(&dense, &mts_tucker)
+    );
+    println!(
+        "  MTS(CP)      sketch {} floats -> rel err {:.3}",
+        m1,
+        rel_error(&dense, &mts_cp)
+    );
+    println!(
+        "  MTS(TT)      sketch {} floats -> rel err {:.3}",
+        64 * 16,
+        rel_error(&dense, &mts_tt)
+    );
+}

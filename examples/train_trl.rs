@@ -1,0 +1,56 @@
+//! END-TO-END DRIVER (the repo's full-stack validation): train the
+//! paper's §4.3 model family — conv features + {FC, exact TRL, sketched
+//! TRL} heads — on the synthetic image corpus, for a few hundred steps,
+//! entirely from Rust through the AOT artifacts (L1 Pallas kernel → L2
+//! JAX train step → L3 Rust loop). Logs the loss curves and writes
+//! histories to `results/`. The run is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_trl [-- steps]
+//! ```
+
+use hocs::experiments::fig10::{train_model, TrainSettings};
+use hocs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let rt = Runtime::new(hocs::runtime::DEFAULT_ARTIFACTS_DIR)?;
+    println!("PJRT platform: {}", rt.platform());
+    let settings = TrainSettings { steps, lr: 0.02, eval_every: (steps / 8).max(1) };
+
+    let mut rows = Vec::new();
+    for model in ["fc", "trl", "trl_cts_8", "trl_mts_4x4x8"] {
+        println!("\n=== training {model} ({steps} steps) ===");
+        let hist = train_model(&rt, model, &settings, 42, false)?;
+        let _ = std::fs::create_dir_all("results");
+        std::fs::write(
+            format!("results/train_{model}.json"),
+            hist.to_json().to_string_pretty(),
+        )?;
+        rows.push((model, hist));
+    }
+
+    println!("\n=== summary (synthetic corpus, batch 64) ===");
+    println!(
+        "{:<16} {:>12} {:>12} {:>10} {:>9}",
+        "model", "head params", "train loss", "test acc", "wall (s)"
+    );
+    for (model, h) in &rows {
+        println!(
+            "{:<16} {:>12} {:>12.4} {:>10.3} {:>9.1}",
+            model,
+            h.head_param_count,
+            h.train_loss.last().copied().unwrap_or(f64::NAN),
+            h.final_test_acc(),
+            h.wall_secs
+        );
+    }
+    let trl = rows.iter().find(|(m, _)| *m == "trl").unwrap();
+    let mts = rows.iter().find(|(m, _)| *m == "trl_mts_4x4x8").unwrap();
+    println!(
+        "\nsketched TRL: {:.1}x fewer head parameters, {:+.1}% accuracy delta vs exact TRL",
+        trl.1.head_param_count as f64 / mts.1.head_param_count as f64,
+        (mts.1.final_test_acc() - trl.1.final_test_acc()) * 100.0
+    );
+    Ok(())
+}

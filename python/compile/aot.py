@@ -1,0 +1,211 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO **text** and
+emit `artifacts/manifest.json` + initial-parameter binaries.
+
+HLO text (not `.serialize()`d protos) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; Python never runs on the request path.
+
+Artifacts
+---------
+- ``train_<cfg>.hlo.txt`` / ``eval_<cfg>.hlo.txt`` — training/eval steps
+  for each model variant (fc / trl / trl_cts / trl_mts sweep).
+- ``params_<cfg>.bin`` — raw little-endian f32 initial parameters
+  (concatenated in schema order).
+- ``op_mts_sketch.hlo.txt`` / ``op_cs_sketch.hlo.txt`` /
+  ``op_kron_combine.hlo.txt`` — the coordinator's service ops (Layer-1
+  Pallas kernels lowered standalone), hashes baked in and exported to
+  the manifest so the Rust side can decompress.
+- ``manifest.json`` — entry-point index: shapes, dtypes, parameter
+  schemas, hash tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .hashes import mts_hashes
+from .kernels.cs_kernel import cs_batch
+from .kernels.fft_combine import kron_combine
+from .kernels.mts_kernel import mts_matrix
+
+# service-op shapes (the coordinator's size classes)
+OP_MAT_N = (64, 64)
+OP_MAT_M = (16, 16)
+OP_CS = (64, 256, 32)  # batch, n, c
+OP_KRON_M = (16, 16)
+OP_SEED = 4242
+
+# model variants lowered for the Fig 10 / Fig 12 experiments
+HEAD_CONFIGS = [
+    M.HeadConfig(head="fc"),
+    M.HeadConfig(head="trl"),
+    M.HeadConfig(head="trl_cts", cts_c=8),
+    M.HeadConfig(head="trl_mts", sketch=(8, 8, 16)),
+    M.HeadConfig(head="trl_mts", sketch=(4, 4, 8)),
+    M.HeadConfig(head="trl_mts", sketch=(3, 3, 6)),
+    M.HeadConfig(head="trl_mts", sketch=(2, 2, 4)),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides multi-dimensional constants as
+    # `constant({...})`, which the consuming parser reads back as zeros —
+    # silently zeroing the baked hash matrices. print_large_constants
+    # forces full literals; print_metadata off keeps the text lean and
+    # parser-friendly for xla_extension 0.5.1.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def hash_to_json(h: np.ndarray, s: np.ndarray) -> dict:
+    """Export a one-hot/sign pair as (bucket indices, signs)."""
+    return {
+        "buckets": np.argmax(h, axis=1).astype(int).tolist(),
+        "signs": s.astype(float).tolist(),
+    }
+
+
+def emit_model_artifacts(outdir: str, manifest: dict) -> None:
+    for cfg in HEAD_CONFIGS:
+        name = cfg.name
+        # --- train step ---
+        train_path = f"train_{name}.hlo.txt"
+        text = lower_fn(M.make_train_step(cfg), M.example_args_train(cfg))
+        with open(os.path.join(outdir, train_path), "w") as f:
+            f.write(text)
+        # --- eval step ---
+        eval_path = f"eval_{name}.hlo.txt"
+        text = lower_fn(M.make_eval_step(cfg), M.example_args_eval(cfg))
+        with open(os.path.join(outdir, eval_path), "w") as f:
+            f.write(text)
+        # --- predict step (serving) ---
+        predict_path = f"predict_{name}.hlo.txt"
+        text = lower_fn(M.make_predict_step(cfg), M.example_args_predict(cfg))
+        with open(os.path.join(outdir, predict_path), "w") as f:
+            f.write(text)
+        # --- init params ---
+        params = M.init_params(cfg, seed=0)
+        params_path = f"params_{name}.bin"
+        with open(os.path.join(outdir, params_path), "wb") as f:
+            for p in params:
+                f.write(np.ascontiguousarray(p, dtype="<f4").tobytes())
+        manifest["models"][name] = {
+            "head": cfg.head,
+            "train": train_path,
+            "eval": eval_path,
+            "predict": predict_path,
+            "init_params": params_path,
+            "batch": cfg.batch,
+            "img": list(M.IMG),
+            "num_classes": M.NUM_CLASSES,
+            "param_schema": [
+                {"name": n, "shape": list(s)} for n, s in M.schema(cfg)
+            ],
+            "head_param_count": M.param_count(cfg),
+            "total_param_count": M.param_count(cfg, head_only=False),
+            # compression ratio w.r.t. the exact trl head
+            "sketch": list(cfg.sketch) if cfg.head == "trl_mts" else None,
+            "cts_c": cfg.cts_c if cfg.head == "trl_cts" else None,
+        }
+        print(f"  model {name}: train+eval+params "
+              f"({M.param_count(cfg)} head params)")
+
+
+def emit_op_artifacts(outdir: str, manifest: dict) -> None:
+    # --- MTS of a matrix (sketch-service op) ---
+    (n1, n2), (m1, m2) = OP_MAT_N, OP_MAT_M
+    (h1, s1), (h2, s2) = mts_hashes([n1, n2], [m1, m2], OP_SEED)
+
+    def op_mts(x):
+        return mts_matrix(x, h1, s1, h2, s2, m1=m1, m2=m2)
+
+    text = lower_fn(op_mts, [jax.ShapeDtypeStruct((n1, n2), jnp.float32)])
+    with open(os.path.join(outdir, "op_mts_sketch.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["ops"]["mts_sketch"] = {
+        "path": "op_mts_sketch.hlo.txt",
+        "input_dims": [n1, n2],
+        "sketch_dims": [m1, m2],
+        "hashes": [hash_to_json(h1, s1), hash_to_json(h2, s2)],
+    }
+
+    # --- batched CS (sketch-service op) ---
+    b, n, c = OP_CS
+    ((hc, sc),) = mts_hashes([n], [c], OP_SEED + 1)
+
+    def op_cs(x):
+        return cs_batch(x, hc, sc, c=c)
+
+    text = lower_fn(op_cs, [jax.ShapeDtypeStruct((b, n), jnp.float32)])
+    with open(os.path.join(outdir, "op_cs_sketch.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["ops"]["cs_sketch"] = {
+        "path": "op_cs_sketch.hlo.txt",
+        "batch": b,
+        "input_dims": [n],
+        "sketch_dims": [c],
+        "hashes": [hash_to_json(hc, sc)],
+    }
+
+    # --- sketched-Kronecker combine ---
+    km1, km2 = OP_KRON_M
+    text = lower_fn(
+        kron_combine,
+        [
+            jax.ShapeDtypeStruct((km1, km2), jnp.float32),
+            jax.ShapeDtypeStruct((km1, km2), jnp.float32),
+        ],
+    )
+    with open(os.path.join(outdir, "op_kron_combine.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["ops"]["kron_combine"] = {
+        "path": "op_kron_combine.hlo.txt",
+        "sketch_dims": [km1, km2],
+    }
+    print(f"  ops: mts_sketch {OP_MAT_N}->{OP_MAT_M}, cs_sketch {OP_CS}, "
+          f"kron_combine {OP_KRON_M}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--ops-only", action="store_true",
+                    help="emit only the service ops (fast)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest: dict = {"version": 1, "models": {}, "ops": {}}
+    print("emitting service ops …")
+    emit_op_artifacts(outdir, manifest)
+    if not args.ops_only:
+        print("emitting model train/eval steps …")
+        emit_model_artifacts(outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Host-side hash generation for the sketch layers.
+
+The MTS/CS hash functions used inside the AOT-compiled model are drawn
+once at build time (seeded, reproducible) and baked into the HLO as
+constants — the runtime never needs to evaluate a hash function, which
+is what keeps Python off the request path.
+
+Represented as:
+  - one-hot matrices  H_k ∈ {0,1}^{n_k × m_k}   (H[a, h(a)] = 1)
+  - sign vectors      s_k ∈ {±1}^{n_k}
+
+A one-hot matmul is the TPU-friendly formulation of the scatter (see
+DESIGN.md §Hardware-Adaptation): contracting with H_k on the MXU replaces
+the serialized scatter the GPU formulation would use.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def mode_hash(n: int, m: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (one_hot H [n, m] float32, signs s [n] float32) for one mode."""
+    rng = np.random.default_rng(seed)
+    buckets = rng.integers(0, m, size=n)
+    onehot = np.zeros((n, m), dtype=np.float32)
+    onehot[np.arange(n), buckets] = 1.0
+    signs = rng.choice(np.array([-1.0, 1.0], dtype=np.float32), size=n)
+    return onehot, signs
+
+
+def mts_hashes(dims: list[int], sketch_dims: list[int], seed: int):
+    """Per-mode (H, s) pairs for an MTS of shape dims -> sketch_dims."""
+    assert len(dims) == len(sketch_dims)
+    out = []
+    for k, (n, m) in enumerate(zip(dims, sketch_dims)):
+        out.append(mode_hash(n, m, seed * 1_000_003 + 17 * k + 1))
+    return out

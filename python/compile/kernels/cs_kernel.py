@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: count sketch of a batch of vectors as a signed
+one-hot matmul (the CTS baseline's request-path op)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _cs_batch_kernel(x_ref, h_ref, s_ref, o_ref):
+    signed = x_ref[...] * s_ref[...][None, :]
+    o_ref[...] = jnp.dot(signed, h_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def cs_batch(x, onehot, signs, *, c: int):
+    """Count sketch each row of `x`: [B, n] @ one-hot [n, c] -> [B, c]."""
+    b, n = x.shape
+    tb = min(TILE_B, b)
+    assert b % tb == 0, (b, tb)
+    return pl.pallas_call(
+        _cs_batch_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(x, onehot, signs)
+
+
+def _cs_batch_t_kernel(g_ref, h_ref, s_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        g_ref[...], h_ref[...].T, preferred_element_type=jnp.float32
+    ) * s_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def cs_batch_t(g, onehot, signs, *, n: int):
+    """Adjoint of [`cs_batch`]: [B, c] -> [B, n] (signed gather)."""
+    b, c = g.shape
+    tb = min(TILE_B, b)
+    assert b % tb == 0
+    return pl.pallas_call(
+        _cs_batch_t_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(g, onehot, signs)
+
+
+def make_cs_layer(onehot, signs):
+    """Differentiable count-sketch layer with a custom VJP."""
+    onehot = jnp.asarray(onehot)
+    signs = jnp.asarray(signs)
+    n, c = onehot.shape
+
+    @jax.custom_vjp
+    def layer(x):
+        return cs_batch(x, onehot, signs, c=c)
+
+    def fwd(x):
+        return layer(x), None
+
+    def bwd(_, g):
+        return (cs_batch_t(g, onehot, signs, n=n),)
+
+    layer.defvjp(fwd, bwd)
+    return layer

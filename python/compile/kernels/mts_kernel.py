@@ -1,0 +1,185 @@
+"""Layer-1 Pallas kernels for the MTS scatter, formulated as signed
+one-hot matmuls (the TPU adaptation of the paper's scatter — see
+DESIGN.md §Hardware-Adaptation: a scatter serializes on TPU, a one-hot
+contraction is a dense MXU pass).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+and real-TPU performance is estimated from the BlockSpec structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-motivated tile sizes (f32): a 128×128 input tile (64 KiB) plus two
+# one-hot tiles and the m1×m2 accumulator stay well under 16 MiB VMEM.
+TILE_N1 = 128
+TILE_N2 = 128
+
+
+def _mts_matrix_kernel(x_ref, h1_ref, s1_ref, h2_ref, s2_ref, o_ref):
+    """One grid step: accumulate H1_tileᵀ (S ∘ X_tile) H2_tile into o.
+
+    Grid is (n1 // t1, n2 // t2); the output block is the whole m1×m2
+    accumulator (index_map -> (0, 0)), so accumulation across grid steps
+    is an in-place add — the standard Pallas reduction pattern.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    signed = x_ref[...] * s1_ref[...][:, None] * s2_ref[...][None, :]
+    # (t1×t2)ᵀ·(t1×m1) → wrong order; compute H1ᵀ·X first: (m1×t1)·(t1×t2)
+    left = jnp.dot(h1_ref[...].T, signed, preferred_element_type=jnp.float32)
+    tile = jnp.dot(left, h2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += tile
+
+
+@functools.partial(jax.jit, static_argnames=("m1", "m2"))
+def mts_matrix(x, h1, s1, h2, s2, *, m1: int, m2: int):
+    """MTS of a matrix via the tiled Pallas kernel.
+
+    x: [n1, n2], h1: [n1, m1] one-hot, s1: [n1], h2: [n2, m2], s2: [n2]
+    -> [m1, m2]
+    """
+    n1, n2 = x.shape
+    t1 = min(TILE_N1, n1)
+    t2 = min(TILE_N2, n2)
+    # shapes must tile exactly; callers pad if needed (aot.py always
+    # lowers power-of-two-friendly shapes)
+    assert n1 % t1 == 0 and n2 % t2 == 0, (n1, n2, t1, t2)
+    grid = (n1 // t1, n2 // t2)
+    return pl.pallas_call(
+        _mts_matrix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t1, t2), lambda i, j: (i, j)),
+            pl.BlockSpec((t1, m1), lambda i, j: (i, 0)),
+            pl.BlockSpec((t1,), lambda i, j: (i,)),
+            pl.BlockSpec((t2, m2), lambda i, j: (j, 0)),
+            pl.BlockSpec((t2,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m1, m2), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1, m2), jnp.float32),
+        interpret=True,
+    )(x, h1, s1, h2, s2)
+
+
+def _mts_batch3_kernel(x_ref, h1_ref, s1_ref, h2_ref, s2_ref, h3_ref, s3_ref, o_ref):
+    """Per-batch-element MTS of a third-order activation tensor.
+
+    Block = one batch element [n1, n2, n3]; three one-hot contractions
+    run back-to-back in VMEM (n1,n2,n3 are activation-map sized — 8×8×32
+    for the TRL — so the whole element fits trivially).
+    """
+    x = x_ref[0]  # block is [1, n1, n2, n3]; view the element
+    signed = (
+        x
+        * s1_ref[...][:, None, None]
+        * s2_ref[...][None, :, None]
+        * s3_ref[...][None, None, :]
+    )
+    # contract mode 2 (n3→m3), then 1, then 0 — smallest output first
+    t = jnp.einsum("ijk,kc->ijc", signed, h3_ref[...])
+    t = jnp.einsum("ijc,jb->ibc", t, h2_ref[...])
+    t = jnp.einsum("ibc,ia->abc", t, h1_ref[...])
+    o_ref[0] = t
+
+
+@functools.partial(jax.jit, static_argnames=("m1", "m2", "m3"))
+def mts_batch3(x, h1, s1, h2, s2, h3, s3, *, m1: int, m2: int, m3: int):
+    """Batched MTS of order-3 tensors: [B, n1, n2, n3] -> [B, m1, m2, m3].
+
+    This is the request-path kernel of the sketched tensor-regression
+    layer (§4.3): the activation tensor is sketched with fixed hashes and
+    inner-producted with the learned sketch weights.
+    """
+    b, n1, n2, n3 = x.shape
+    return pl.pallas_call(
+        _mts_batch3_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n1, n2, n3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n1, m1), lambda i: (0, 0)),
+            pl.BlockSpec((n1,), lambda i: (0,)),
+            pl.BlockSpec((n2, m2), lambda i: (0, 0)),
+            pl.BlockSpec((n2,), lambda i: (0,)),
+            pl.BlockSpec((n3, m3), lambda i: (0, 0)),
+            pl.BlockSpec((n3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, m1, m2, m3), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m1, m2, m3), jnp.float32),
+        interpret=True,
+    )(x, h1, s1, h2, s2, h3, s3)
+
+
+def _mts_batch3_t_kernel(g_ref, h1_ref, s1_ref, h2_ref, s2_ref, h3_ref, s3_ref, o_ref):
+    """Adjoint of the MTS scatter: the signed gather
+    dX[n,i,j,k] = s1[i]s2[j]s3[k] · g[n, h1(i), h2(j), h3(k)]
+    expressed as one-hot contractions from sketch space back up.
+    """
+    g = g_ref[0]  # [m1, m2, m3]
+    t = jnp.einsum("pqr,kr->pqk", g, h3_ref[...])
+    t = jnp.einsum("pqk,jq->pjk", t, h2_ref[...])
+    t = jnp.einsum("pjk,ip->ijk", t, h1_ref[...])
+    t = (
+        t
+        * s1_ref[...][:, None, None]
+        * s2_ref[...][None, :, None]
+        * s3_ref[...][None, None, :]
+    )
+    o_ref[0] = t
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "n3"))
+def mts_batch3_t(g, h1, s1, h2, s2, h3, s3, *, n1: int, n2: int, n3: int):
+    """Transpose (adjoint) of [`mts_batch3`]: [B, m1, m2, m3] -> [B, n1, n2, n3]."""
+    b, m1, m2, m3 = g.shape
+    return pl.pallas_call(
+        _mts_batch3_t_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, m1, m2, m3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n1, m1), lambda i: (0, 0)),
+            pl.BlockSpec((n1,), lambda i: (0,)),
+            pl.BlockSpec((n2, m2), lambda i: (0, 0)),
+            pl.BlockSpec((n2,), lambda i: (0,)),
+            pl.BlockSpec((n3, m3), lambda i: (0, 0)),
+            pl.BlockSpec((n3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n1, n2, n3), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n1, n2, n3), jnp.float32),
+        interpret=True,
+    )(g, h1, s1, h2, s2, h3, s3)
+
+
+def make_mts_layer(h1, s1, h2, s2, h3, s3):
+    """Differentiable MTS-scatter layer with a custom VJP (Pallas has no
+    reverse-mode autodiff in interpret mode; the adjoint of a linear
+    sketch is the signed gather, itself a Pallas kernel)."""
+    h1 = jnp.asarray(h1); s1 = jnp.asarray(s1)
+    h2 = jnp.asarray(h2); s2 = jnp.asarray(s2)
+    h3 = jnp.asarray(h3); s3 = jnp.asarray(s3)
+    n1, m1 = h1.shape
+    n2, m2 = h2.shape
+    n3, m3 = h3.shape
+
+    @jax.custom_vjp
+    def layer(x):
+        return mts_batch3(x, h1, s1, h2, s2, h3, s3, m1=m1, m2=m2, m3=m3)
+
+    def fwd(x):
+        return layer(x), None
+
+    def bwd(_, g):
+        return (mts_batch3_t(g, h1, s1, h2, s2, h3, s3, n1=n1, n2=n2, n3=n3),)
+
+    layer.defvjp(fwd, bwd)
+    return layer

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth the pytest suite asserts against).
+
+Each `*_ref` takes exactly the same arguments as the kernel entry point
+in its sibling module and computes the answer with straightforward
+jnp einsums / FFTs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cs_batch_ref(x, onehot, signs):
+    """Count sketch of a batch of vectors.
+
+    x: [B, n]; onehot: [n, c]; signs: [n] -> [B, c]
+    y[b, h(i)] += s(i) x[b, i]  ==  (x * s) @ H
+    """
+    return (x * signs[None, :]) @ onehot
+
+
+def mts_matrix_ref(x, h1, s1, h2, s2):
+    """MTS of a matrix: H1ᵀ (s1 s2ᵀ ∘ X) H2.
+
+    x: [n1, n2]; h1: [n1, m1]; h2: [n2, m2] -> [m1, m2]
+    """
+    signed = x * s1[:, None] * s2[None, :]
+    return h1.T @ signed @ h2
+
+
+def mts_batch3_ref(x, h1, s1, h2, s2, h3, s3):
+    """MTS of a batch of third-order tensors (the TRL activation path).
+
+    x: [B, n1, n2, n3] -> [B, m1, m2, m3]
+    """
+    signed = (
+        x
+        * s1[None, :, None, None]
+        * s2[None, None, :, None]
+        * s3[None, None, None, :]
+    )
+    return jnp.einsum("nijk,ip,jq,kr->npqr", signed, h1, h2, h3)
+
+
+def complex_mul_ref(ar, ai, br, bi):
+    """Element-wise complex multiply on split re/im planes."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def kron_combine_ref(sa, sb):
+    """Sketched-Kronecker combine (Lemma B.1):
+    IFFT2(FFT2(sa) ∘ FFT2(sb)), real part.
+
+    sa, sb: [m1, m2] real sketches of A and B.
+    """
+    fa = jnp.fft.fft2(sa)
+    fb = jnp.fft.fft2(sb)
+    return jnp.real(jnp.fft.ifft2(fa * fb))

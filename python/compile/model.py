@@ -1,0 +1,287 @@
+"""Layer-2 JAX model: the paper's §4.3 experiment — a small conv
+feature extractor whose flatten+FC head is replaced by a (sketched)
+tensor-regression layer.
+
+Heads
+-----
+- ``fc``       flatten → dense (the non-tensorized baseline)
+- ``trl``      exact Tucker tensor-regression layer (Kossaifi et al.):
+               logits_o = ⟨G(U1,U2,U3)[..,o], A⟩
+- ``trl_mts``  the paper's contribution: the regression weight is
+               *learned directly in MTS sketch space*. The activation
+               tensor is sketched with fixed random hashes (the Layer-1
+               Pallas kernel ``mts_batch3``) and inner-producted with the
+               learned sketch weights: because decompression is linear,
+               ⟨decompress(Ws), A⟩ = ⟨Ws, MTS_scatter(A)⟩.
+- ``trl_cts``  the CTS baseline: count-sketch only the channel fibres
+               (Layer-1 kernel ``cs_batch``), learn weights in that space.
+
+Everything is pure-functional over an explicit ordered parameter list so
+the AOT boundary (aot.py → Rust runtime) is a flat list of f32 buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashes import mts_hashes
+from .kernels.cs_kernel import make_cs_layer
+from .kernels.mts_kernel import make_mts_layer
+
+# ---------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------
+
+NUM_CLASSES = 10
+IMG = (32, 32, 3)
+# activation tensor after the two conv/pool stages
+ACT = (8, 8, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    """Static configuration of one model variant."""
+
+    head: str  # fc | trl | trl_mts | trl_cts
+    batch: int = 64
+    # trl ranks (r1, r2, r3)
+    ranks: tuple[int, int, int] = (8, 8, 16)
+    # trl_mts sketch dims (m1, m2, m3)
+    sketch: tuple[int, int, int] = (4, 4, 8)
+    # trl_cts channel sketch size c
+    cts_c: int = 8
+    hash_seed: int = 20190711
+    lr_momentum: float = 0.9
+
+    @property
+    def name(self) -> str:
+        if self.head == "trl_mts":
+            return f"trl_mts_{self.sketch[0]}x{self.sketch[1]}x{self.sketch[2]}"
+        if self.head == "trl_cts":
+            return f"trl_cts_{self.cts_c}"
+        return self.head
+
+
+# ---------------------------------------------------------------------
+# parameters: explicit ordered (name, shape) schema per head
+# ---------------------------------------------------------------------
+
+FEATURE_SCHEMA = [
+    ("conv1_w", (3, 3, 3, 16)),
+    ("conv1_b", (16,)),
+    ("conv2_w", (3, 3, 16, 32)),
+    ("conv2_b", (32,)),
+]
+
+
+def head_schema(cfg: HeadConfig) -> list[tuple[str, tuple[int, ...]]]:
+    h, w, c = ACT
+    if cfg.head == "fc":
+        return [("fc_w", (h * w * c, NUM_CLASSES)), ("fc_b", (NUM_CLASSES,))]
+    if cfg.head == "trl":
+        r1, r2, r3 = cfg.ranks
+        return [
+            ("trl_u1", (h, r1)),
+            ("trl_u2", (w, r2)),
+            ("trl_u3", (c, r3)),
+            ("trl_core", (r1, r2, r3, NUM_CLASSES)),
+            ("trl_b", (NUM_CLASSES,)),
+        ]
+    if cfg.head == "trl_mts":
+        m1, m2, m3 = cfg.sketch
+        return [("mts_w", (m1, m2, m3, NUM_CLASSES)), ("mts_b", (NUM_CLASSES,))]
+    if cfg.head == "trl_cts":
+        return [("cts_w", (h, w, cfg.cts_c, NUM_CLASSES)), ("cts_b", (NUM_CLASSES,))]
+    raise ValueError(f"unknown head {cfg.head!r}")
+
+
+def schema(cfg: HeadConfig) -> list[tuple[str, tuple[int, ...]]]:
+    return FEATURE_SCHEMA + head_schema(cfg)
+
+
+def init_params(cfg: HeadConfig, seed: int = 0) -> list[np.ndarray]:
+    """He-style init, numpy (build-time only)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in schema(cfg):
+        if name.endswith("_b"):
+            out.append(np.zeros(shape, dtype=np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            std = np.sqrt(2.0 / max(fan_in, 1))
+            out.append(rng.standard_normal(shape).astype(np.float32) * std)
+    return out
+
+
+def fixed_hashes(cfg: HeadConfig):
+    """Build-time hash constants for the sketched heads (baked into HLO)."""
+    h, w, c = ACT
+    if cfg.head == "trl_mts":
+        return mts_hashes([h, w, c], list(cfg.sketch), cfg.hash_seed)
+    if cfg.head == "trl_cts":
+        return mts_hashes([c], [cfg.cts_c], cfg.hash_seed)
+    return []
+
+
+# ---------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def features(p: dict, x):
+    """Conv feature extractor: [B,32,32,3] -> activation [B,8,8,32]."""
+    y = jax.nn.relu(_conv(x, p["conv1_w"], p["conv1_b"]))
+    y = _avgpool2(y)
+    y = jax.nn.relu(_conv(y, p["conv2_w"], p["conv2_b"]))
+    y = _avgpool2(y)  # 32→16→8
+    return y
+
+
+def logits_fn(cfg: HeadConfig, p: dict, x, hashes):
+    a = features(p, x)  # [B, 8, 8, 32]
+    if cfg.head == "fc":
+        flat = a.reshape(a.shape[0], -1)
+        return flat @ p["fc_w"] + p["fc_b"]
+    if cfg.head == "trl":
+        core_act = jnp.einsum(
+            "nijk,ip,jq,kr->npqr", a, p["trl_u1"], p["trl_u2"], p["trl_u3"]
+        )
+        return jnp.einsum("npqr,pqro->no", core_act, p["trl_core"]) + p["trl_b"]
+    if cfg.head == "trl_mts":
+        (h1, s1), (h2, s2), (h3, s3) = hashes
+        layer = make_mts_layer(h1, s1, h2, s2, h3, s3)
+        sa = layer(a)
+        return jnp.einsum("npqr,pqro->no", sa, p["mts_w"]) + p["mts_b"]
+    if cfg.head == "trl_cts":
+        ((h, s),) = hashes
+        layer = make_cs_layer(h, s)
+        b, hh, ww, cc = a.shape
+        flat = a.reshape(b * hh * ww, cc)
+        sk = layer(flat).reshape(b, hh, ww, cfg.cts_c)
+        return jnp.einsum("nijc,ijco->no", sk, p["cts_w"]) + p["cts_b"]
+    raise ValueError(cfg.head)
+
+
+# ---------------------------------------------------------------------
+# loss / steps
+# ---------------------------------------------------------------------
+
+
+def loss_and_acc(cfg: HeadConfig, p: dict, x, y, hashes):
+    logits = logits_fn(cfg, p, x, hashes)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def _to_dict(cfg: HeadConfig, flat):
+    names = [n for n, _ in schema(cfg)]
+    return dict(zip(names, flat))
+
+
+def make_train_step(cfg: HeadConfig) -> Callable:
+    """Returns train_step(*params, *momenta, x, y, lr) ->
+    (*params', *momenta', loss, acc) with SGD + momentum."""
+    hashes = fixed_hashes(cfg)
+    n_params = len(schema(cfg))
+    mu = cfg.lr_momentum
+
+    def step(*args):
+        flat_p = args[:n_params]
+        flat_m = args[n_params : 2 * n_params]
+        x, y, lr = args[2 * n_params :]
+        p = _to_dict(cfg, flat_p)
+
+        def loss_fn(pd):
+            return loss_and_acc(cfg, pd, x, y, hashes)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        names = [n for n, _ in schema(cfg)]
+        new_p = []
+        new_m = []
+        for name, pv, mv in zip(names, flat_p, flat_m):
+            g = grads[name]
+            m2 = mu * mv + g
+            new_m.append(m2)
+            new_p.append(pv - lr * m2)
+        return (*new_p, *new_m, loss, acc)
+
+    return step
+
+
+def make_predict_step(cfg: HeadConfig) -> Callable:
+    """Returns predict(*params, x) -> (logits,) — the serving entry
+    point the coordinator batches requests into."""
+    hashes = fixed_hashes(cfg)
+    n_params = len(schema(cfg))
+
+    def step(*args):
+        flat_p = args[:n_params]
+        (x,) = args[n_params:]
+        p = _to_dict(cfg, flat_p)
+        return (logits_fn(cfg, p, x, hashes),)
+
+    return step
+
+
+def example_args_predict(cfg: HeadConfig):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in schema(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, *IMG), jnp.float32))
+    return specs
+
+
+def make_eval_step(cfg: HeadConfig) -> Callable:
+    """Returns eval_step(*params, x, y) -> (loss, acc)."""
+    hashes = fixed_hashes(cfg)
+    n_params = len(schema(cfg))
+
+    def step(*args):
+        flat_p = args[:n_params]
+        x, y = args[n_params :]
+        p = _to_dict(cfg, flat_p)
+        loss, acc = loss_and_acc(cfg, p, x, y, hashes)
+        return (loss, acc)
+
+    return step
+
+
+def example_args_train(cfg: HeadConfig):
+    """ShapeDtypeStructs for lowering train_step."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in schema(cfg)]
+    specs = specs + specs  # params + momenta
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, *IMG), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return specs
+
+
+def example_args_eval(cfg: HeadConfig):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in schema(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, *IMG), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    return specs
+
+
+def param_count(cfg: HeadConfig, head_only: bool = True) -> int:
+    sch = head_schema(cfg) if head_only else schema(cfg)
+    return sum(int(np.prod(s)) for _, s in sch)

@@ -1,0 +1,109 @@
+"""AOT boundary tests: HLO text is emitted, parseable by the xla_client
+this image ships (the same parser family the Rust runtime uses), and the
+manifest is consistent with the model schemas."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        for key in ("train", "eval", "init_params"):
+            p = os.path.join(ARTIFACTS, entry[key])
+            assert os.path.exists(p), f"{name}.{key} missing: {p}"
+    for name, entry in man["ops"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, entry["path"])), name
+
+
+def test_param_bins_match_schema_sizes():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        total = sum(int(np.prod(p["shape"])) for p in entry["param_schema"])
+        size = os.path.getsize(os.path.join(ARTIFACTS, entry["init_params"]))
+        assert size == 4 * total, f"{name}: {size} bytes vs {4 * total}"
+
+
+def test_hlo_text_is_parseable_hlo():
+    man = _manifest()
+    path = os.path.join(ARTIFACTS, man["ops"]["mts_sketch"]["path"])
+    text = open(path).read()
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # 64-bit-id protos are the known failure mode; text must not contain
+    # serialized proto bytes
+    assert "\x00" not in text
+
+
+def test_op_hash_tables_complete():
+    man = _manifest()
+    op = man["ops"]["mts_sketch"]
+    n1, n2 = op["input_dims"]
+    m1, m2 = op["sketch_dims"]
+    h1, h2 = op["hashes"]
+    assert len(h1["buckets"]) == n1 and len(h1["signs"]) == n1
+    assert len(h2["buckets"]) == n2 and len(h2["signs"]) == n2
+    assert all(0 <= b < m1 for b in h1["buckets"])
+    assert all(0 <= b < m2 for b in h2["buckets"])
+    assert all(s in (-1.0, 1.0) for s in h1["signs"] + h2["signs"])
+
+
+def test_op_mts_executes_and_matches_hashes():
+    """Execute the lowered op via jax and check it against a numpy
+    scatter driven by the *manifest* hash tables — this is exactly the
+    contract the Rust decompressor relies on."""
+    man = _manifest()
+    op = man["ops"]["mts_sketch"]
+    n1, n2 = op["input_dims"]
+    m1, m2 = op["sketch_dims"]
+
+    from compile.hashes import mts_hashes
+    from compile.kernels.mts_kernel import mts_matrix
+    from compile.aot import OP_SEED
+
+    (h1, s1), (h2, s2) = mts_hashes([n1, n2], [m1, m2], OP_SEED)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n1, n2)).astype(np.float32)
+    got = np.asarray(mts_matrix(x, h1, s1, h2, s2, m1=m1, m2=m2))
+
+    b1 = op["hashes"][0]["buckets"]
+    sg1 = op["hashes"][0]["signs"]
+    b2 = op["hashes"][1]["buckets"]
+    sg2 = op["hashes"][1]["signs"]
+    want = np.zeros((m1, m2), dtype=np.float64)
+    for i in range(n1):
+        for j in range(n2):
+            want[b1[i], b2[j]] += sg1[i] * sg2[j] * x[i, j]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_aot_ops_only_runs_quickly(tmp_path):
+    """`python -m compile.aot --ops-only` into a temp dir works end to end."""
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path), "--ops-only"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    assert (tmp_path / "manifest.json").exists()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(man["ops"]) == {"mts_sketch", "cs_sketch", "kron_combine"}

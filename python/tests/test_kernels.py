@@ -1,0 +1,242 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes (hypothesis) — the CORE correctness signal for the
+compute layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hashes import mode_hash, mts_hashes
+from compile.kernels import ref
+from compile.kernels.cs_kernel import cs_batch, cs_batch_t, make_cs_layer
+from compile.kernels.fft_combine import complex_mul, kron_combine
+from compile.kernels.mts_kernel import (
+    make_mts_layer,
+    mts_batch3,
+    mts_batch3_t,
+    mts_matrix,
+)
+
+SETTINGS = settings(max_examples=12, deadline=None)
+
+
+def rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# mts_matrix
+# ---------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    n1=st.sampled_from([8, 16, 32, 128, 256]),
+    n2=st.sampled_from([8, 16, 64, 128]),
+    m1=st.integers(2, 12),
+    m2=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mts_matrix_matches_ref(n1, n2, m1, m2, seed):
+    (h1, s1), (h2, s2) = mts_hashes([n1, n2], [m1, m2], seed % 99991)
+    x = rand((n1, n2), seed)
+    got = mts_matrix(x, h1, s1, h2, s2, m1=m1, m2=m2)
+    want = ref.mts_matrix_ref(jnp.asarray(x), h1, s1, h2, s2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mts_matrix_tiled_path():
+    # shapes larger than one tile exercise the grid accumulation
+    (h1, s1), (h2, s2) = mts_hashes([256, 256], [16, 16], 7)
+    x = rand((256, 256), 3)
+    got = mts_matrix(x, h1, s1, h2, s2, m1=16, m2=16)
+    want = ref.mts_matrix_ref(jnp.asarray(x), h1, s1, h2, s2)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_mts_matrix_linearity():
+    (h1, s1), (h2, s2) = mts_hashes([16, 16], [4, 4], 5)
+    x = rand((16, 16), 1)
+    y = rand((16, 16), 2)
+    lhs = mts_matrix(2.0 * x - y, h1, s1, h2, s2, m1=4, m2=4)
+    rhs = 2.0 * mts_matrix(x, h1, s1, h2, s2, m1=4, m2=4) - mts_matrix(
+        y, h1, s1, h2, s2, m1=4, m2=4
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# mts_batch3 (+ adjoint)
+# ---------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    dims=st.sampled_from([(4, 4, 8), (8, 8, 32), (3, 5, 7)]),
+    ms=st.sampled_from([(2, 2, 4), (4, 4, 8), (3, 3, 3)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mts_batch3_matches_ref(b, dims, ms, seed):
+    hs = mts_hashes(list(dims), list(ms), seed % 99991)
+    x = rand((b, *dims), seed)
+    args = [v for pair in hs for v in pair]
+    got = mts_batch3(x, *args, m1=ms[0], m2=ms[1], m3=ms[2])
+    want = ref.mts_batch3_ref(jnp.asarray(x), *args)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mts_batch3_adjoint_is_true_adjoint():
+    # ⟨Sx, y⟩ == ⟨x, Sᵀy⟩ for the scatter/gather pair
+    dims, ms = (4, 4, 8), (2, 2, 4)
+    hs = mts_hashes(list(dims), list(ms), 11)
+    args = [v for pair in hs for v in pair]
+    x = rand((2, *dims), 1)
+    y = rand((2, *ms), 2)
+    sx = np.asarray(mts_batch3(x, *args, m1=ms[0], m2=ms[1], m3=ms[2]))
+    sty = np.asarray(mts_batch3_t(y, *args, n1=dims[0], n2=dims[1], n3=dims[2]))
+    lhs = float(np.sum(sx * y))
+    rhs = float(np.sum(x * sty))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))
+
+
+def test_mts_layer_grad_matches_jnp_reference():
+    dims, ms = (4, 4, 8), (2, 2, 4)
+    hs = mts_hashes(list(dims), list(ms), 13)
+    args = [v for pair in hs for v in pair]
+    layer = make_mts_layer(*args)
+    x = rand((2, *dims), 3)
+    w = rand((*ms,), 4)
+
+    def f_kernel(x_):
+        return jnp.sum(layer(x_) * w[None])
+
+    def f_ref(x_):
+        return jnp.sum(ref.mts_batch3_ref(x_, *args) * w[None])
+
+    gk = jax.grad(f_kernel)(jnp.asarray(x))
+    gr = jax.grad(f_ref)(jnp.asarray(x))
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------
+# cs_batch (+ adjoint)
+# ---------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    b=st.sampled_from([4, 16, 128, 256]),
+    n=st.sampled_from([8, 32, 256]),
+    c=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cs_batch_matches_ref(b, n, c, seed):
+    h, s = mode_hash(n, c, seed % 99991)
+    x = rand((b, n), seed)
+    got = cs_batch(x, h, s, c=c)
+    want = ref.cs_batch_ref(jnp.asarray(x), h, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_cs_layer_grad_matches_matmul():
+    h, s = mode_hash(32, 8, 5)
+    layer = make_cs_layer(h, s)
+    x = rand((16, 32), 1)
+    w = rand((8,), 2)
+
+    def f_kernel(x_):
+        return jnp.sum(layer(x_) * w[None, :])
+
+    def f_ref(x_):
+        return jnp.sum(ref.cs_batch_ref(x_, h, s) * w[None, :])
+
+    gk = jax.grad(f_kernel)(jnp.asarray(x))
+    gr = jax.grad(f_ref)(jnp.asarray(x))
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_cs_adjoint_identity():
+    h, s = mode_hash(16, 4, 9)
+    x = rand((8, 16), 1)
+    y = rand((8, 4), 2)
+    sx = np.asarray(cs_batch(x, h, s, c=4))
+    sty = np.asarray(cs_batch_t(y, h, s, n=16))
+    assert abs(float(np.sum(sx * y)) - float(np.sum(x * sty))) < 1e-3
+
+
+# ---------------------------------------------------------------------
+# fft combine
+# ---------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    m1=st.integers(2, 24),
+    m2=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_complex_mul_matches_ref(m1, m2, seed):
+    a = rand((4, m1, m2), seed)
+    pr, pi = complex_mul(a[0], a[1], a[2], a[3])
+    wr, wi = ref.complex_mul_ref(*(jnp.asarray(a[i]) for i in range(4)))
+    np.testing.assert_allclose(pr, wr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(pi, wi, rtol=1e-4, atol=1e-5)
+
+
+@SETTINGS
+@given(
+    m1=st.sampled_from([4, 8, 15, 16]),
+    m2=st.sampled_from([4, 6, 16, 17]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kron_combine_matches_ref(m1, m2, seed):
+    sa = rand((m1, m2), seed)
+    sb = rand((m1, m2), seed + 1)
+    got = kron_combine(sa, sb)
+    want = ref.kron_combine_ref(jnp.asarray(sa), jnp.asarray(sb))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_kron_combine_is_circular_convolution():
+    # brute-force 2-D circular convolution comparison
+    m1, m2 = 4, 5
+    sa = rand((m1, m2), 1)
+    sb = rand((m1, m2), 2)
+    got = np.asarray(kron_combine(sa, sb))
+    want = np.zeros((m1, m2), dtype=np.float64)
+    for k1 in range(m1):
+        for k2 in range(m2):
+            acc = 0.0
+            for i in range(m1):
+                for j in range(m2):
+                    acc += sa[i, j] * sb[(k1 - i) % m1, (k2 - j) % m2]
+            want[k1, k2] = acc
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------
+# hash generation sanity
+# ---------------------------------------------------------------------
+
+
+def test_mode_hash_is_one_hot_and_deterministic():
+    h, s = mode_hash(64, 8, 3)
+    assert h.shape == (64, 8)
+    np.testing.assert_array_equal(h.sum(axis=1), np.ones(64))
+    assert set(np.unique(s)) <= {-1.0, 1.0}
+    h2, s2 = mode_hash(64, 8, 3)
+    np.testing.assert_array_equal(h, h2)
+    np.testing.assert_array_equal(s, s2)
+
+
+def test_mode_hash_seed_sensitivity():
+    h1, _ = mode_hash(64, 8, 1)
+    h2, _ = mode_hash(64, 8, 2)
+    assert not np.array_equal(h1, h2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,125 @@
+"""Layer-2 model tests: shapes, loss behaviour, and a few training
+steps per head (the model must actually learn on separable data)."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def synthetic_batch(cfg, seed=0):
+    """Linearly separable-ish batch: class k brightens channel k%3 in a
+    class-specific quadrant."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((cfg.batch, *M.IMG)).astype(np.float32) * 0.3
+    y = rng.integers(0, M.NUM_CLASSES, cfg.batch).astype(np.int32)
+    for i, lbl in enumerate(y):
+        qi, qj = (lbl // 4) % 2, (lbl // 2) % 2
+        x[i, qi * 16 : qi * 16 + 16, qj * 16 : qj * 16 + 16, lbl % 3] += 2.0
+    return x, y
+
+
+HEADS = [
+    M.HeadConfig(head="fc", batch=16),
+    M.HeadConfig(head="trl", batch=16),
+    M.HeadConfig(head="trl_mts", batch=16),
+    M.HeadConfig(head="trl_cts", batch=16),
+]
+
+
+@pytest.mark.parametrize("cfg", HEADS, ids=lambda c: c.name)
+def test_shapes_and_initial_loss(cfg):
+    params = M.init_params(cfg)
+    assert len(params) == len(M.schema(cfg))
+    x, y = synthetic_batch(cfg)
+    ev = jax.jit(M.make_eval_step(cfg))(*params, x, y)
+    loss, acc = float(ev[0]), float(ev[1])
+    # near-uniform predictions at init → loss ≈ ln(10)
+    assert 0.5 < loss < 12.0
+    assert 0.0 <= acc <= 1.0
+
+
+@pytest.mark.parametrize("cfg", HEADS, ids=lambda c: c.name)
+def test_loss_decreases_over_steps(cfg):
+    params = M.init_params(cfg)
+    moms = [np.zeros_like(p) for p in params]
+    step = jax.jit(M.make_train_step(cfg))
+    x, y = synthetic_batch(cfg)
+    n = len(params)
+    first_loss = None
+    loss = None
+    for it in range(30):
+        out = step(*params, *moms, x, y, np.float32(0.03))
+        params = list(out[:n])
+        moms = list(out[n : 2 * n])
+        loss = float(out[2 * n])
+        if first_loss is None:
+            first_loss = loss
+    assert loss < first_loss * 0.7, f"{cfg.name}: {first_loss} -> {loss}"
+
+
+def test_param_counts_tell_compression_story():
+    trl = M.param_count(M.HeadConfig(head="trl"))
+    mts = M.param_count(M.HeadConfig(head="trl_mts", sketch=(4, 4, 8)))
+    # the paper's headline: ~8× fewer parameters for the sketched TRL
+    assert trl / mts > 6.0, (trl, mts)
+
+
+def test_schema_order_stable():
+    cfg = M.HeadConfig(head="trl_mts")
+    names = [n for n, _ in M.schema(cfg)]
+    assert names[:4] == ["conv1_w", "conv1_b", "conv2_w", "conv2_b"]
+    assert names[-1] == "mts_b"
+
+
+@pytest.mark.parametrize("sketch", [(8, 8, 16), (4, 4, 8), (3, 3, 6), (2, 2, 4)])
+def test_mts_sweep_configs_all_trace(sketch):
+    """Every Fig-12 sweep variant must build, step once, and shrink the
+    head parameter count monotonically with the sketch volume."""
+    cfg = M.HeadConfig(head="trl_mts", batch=8, sketch=sketch)
+    params = M.init_params(cfg)
+    moms = [np.zeros_like(p) for p in params]
+    x, y = synthetic_batch(cfg)
+    out = jax.jit(M.make_train_step(cfg))(*params, *moms, x, y, np.float32(0.02))
+    assert np.isfinite(float(out[2 * len(params)]))
+    expect = int(np.prod(sketch)) * M.NUM_CLASSES + M.NUM_CLASSES
+    assert M.param_count(cfg) == expect
+
+
+def test_eval_matches_train_loss_at_zero_lr():
+    """train_step with lr=0 must leave params unchanged and report the
+    same loss eval_step computes."""
+    cfg = M.HeadConfig(head="trl_cts", batch=8)
+    params = M.init_params(cfg)
+    moms = [np.zeros_like(p) for p in params]
+    x, y = synthetic_batch(cfg)
+    out = jax.jit(M.make_train_step(cfg))(*params, *moms, x, y, np.float32(0.0))
+    n = len(params)
+    for before, after in zip(params, out[:n]):
+        np.testing.assert_allclose(np.asarray(after), before, rtol=1e-6)
+    ev = jax.jit(M.make_eval_step(cfg))(*params, x, y)
+    assert abs(float(out[2 * n]) - float(ev[0])) < 1e-5
+
+
+def test_hashes_are_stable_across_processes():
+    """The baked hashes are derived from the config seed only — the
+    manifest contract depends on this."""
+    cfg = M.HeadConfig(head="trl_mts")
+    a = M.fixed_hashes(cfg)
+    b = M.fixed_hashes(cfg)
+    for (h1, s1), (h2, s2) in zip(a, b):
+        np.testing.assert_array_equal(h1, h2)
+        np.testing.assert_array_equal(s1, s2)
+
+
+def test_train_step_is_deterministic():
+    cfg = M.HeadConfig(head="trl_mts", batch=8)
+    params = M.init_params(cfg)
+    moms = [np.zeros_like(p) for p in params]
+    x, y = synthetic_batch(cfg)
+    step = jax.jit(M.make_train_step(cfg))
+    a = step(*params, *moms, x, y, np.float32(0.05))
+    b = step(*params, *moms, x, y, np.float32(0.05))
+    n = len(params)
+    np.testing.assert_array_equal(np.asarray(a[2 * n]), np.asarray(b[2 * n]))

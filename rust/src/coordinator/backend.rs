@@ -1,0 +1,395 @@
+//! Sketch-service backends. Both are driven by the *same* manifest hash
+//! tables, so their outputs agree to float tolerance — the parity tests
+//! in `server.rs` and `rust/tests/` rely on that.
+
+use crate::runtime::{client as rtc, Manifest, OpEntry, Runtime};
+use anyhow::{anyhow, Result};
+
+/// Which backend the coordinator should construct on its executor thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT artifacts through PJRT (production path).
+    Xla,
+    /// In-crate algorithms seeded from the manifest (oracle / fallback).
+    PureRust,
+}
+
+/// Batched execution interface for the three service ops.
+///
+/// All methods take and return flat row-major f32 buffers; shapes are
+/// fixed by the manifest (`mts_sketch`: input n1×n2 → m1×m2;
+/// `cs_sketch`: input n → c; `kron_combine`: two m1×m2 → m1×m2).
+pub trait SketchBackend {
+    fn name(&self) -> &'static str;
+
+    /// MTS-sketch each input matrix.
+    fn mts_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Count-sketch each input vector.
+    fn cs_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Combine pairs of MTS sketches into Kronecker-product sketches.
+    fn kron_combine_batch(&self, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<Vec<f32>>>;
+
+    /// Model inference: one flat image per request → logits. Only
+    /// available when the backend was configured with a serve model.
+    fn classify_batch(&self, _xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("classification not supported by this backend")
+    }
+
+    /// Op geometry (from the manifest), for validation.
+    fn shapes(&self) -> BackendShapes;
+}
+
+/// Fixed op geometry shared by both backends.
+#[derive(Clone, Debug)]
+pub struct BackendShapes {
+    pub mts_in: [usize; 2],
+    pub mts_out: [usize; 2],
+    pub cs_in: usize,
+    pub cs_out: usize,
+    pub cs_native_batch: usize,
+    pub kron_dims: [usize; 2],
+}
+
+fn shapes_from_manifest(man: &Manifest) -> Result<BackendShapes> {
+    let mts = man.ops.get("mts_sketch").ok_or_else(|| anyhow!("manifest missing mts_sketch"))?;
+    let cs = man.ops.get("cs_sketch").ok_or_else(|| anyhow!("manifest missing cs_sketch"))?;
+    let kron =
+        man.ops.get("kron_combine").ok_or_else(|| anyhow!("manifest missing kron_combine"))?;
+    Ok(BackendShapes {
+        mts_in: [mts.input_dims[0], mts.input_dims[1]],
+        mts_out: [mts.sketch_dims[0], mts.sketch_dims[1]],
+        cs_in: cs.input_dims[0],
+        cs_out: cs.sketch_dims[0],
+        cs_native_batch: cs.batch.unwrap_or(1),
+        kron_dims: [kron.sketch_dims[0], kron.sketch_dims[1]],
+    })
+}
+
+// ---------------------------------------------------------------------
+// Pure-Rust backend
+// ---------------------------------------------------------------------
+
+/// Executes the ops with the in-crate algorithms, using the manifest's
+/// exported hash tables (bit-compatible with the AOT artifacts).
+pub struct PureRustBackend {
+    shapes: BackendShapes,
+    mts_op: OpEntry,
+    cs_op: OpEntry,
+}
+
+impl PureRustBackend {
+    pub fn new(man: &Manifest) -> Result<Self> {
+        Ok(Self {
+            shapes: shapes_from_manifest(man)?,
+            mts_op: man.ops["mts_sketch"].clone(),
+            cs_op: man.ops["cs_sketch"].clone(),
+        })
+    }
+}
+
+impl SketchBackend for PureRustBackend {
+    fn name(&self) -> &'static str {
+        "pure-rust"
+    }
+
+    fn mts_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let [n1, n2] = self.shapes.mts_in;
+        let [m1, m2] = self.shapes.mts_out;
+        let h = &self.mts_op.hashes;
+        xs.iter()
+            .map(|x| {
+                anyhow::ensure!(x.len() == n1 * n2, "mts input length");
+                let mut out = vec![0.0f32; m1 * m2];
+                for i in 0..n1 {
+                    let b1 = h[0].buckets[i] * m2;
+                    let s1 = h[0].signs[i] as f32;
+                    let row = &x[i * n2..(i + 1) * n2];
+                    for (j, &v) in row.iter().enumerate() {
+                        out[b1 + h[1].buckets[j]] += s1 * h[1].signs[j] as f32 * v;
+                    }
+                }
+                Ok(out)
+            })
+            .collect()
+    }
+
+    fn cs_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let n = self.shapes.cs_in;
+        let c = self.shapes.cs_out;
+        let h = &self.cs_op.hashes[0];
+        xs.iter()
+            .map(|x| {
+                anyhow::ensure!(x.len() == n, "cs input length");
+                let mut out = vec![0.0f32; c];
+                for (i, &v) in x.iter().enumerate() {
+                    out[h.buckets[i]] += h.signs[i] as f32 * v;
+                }
+                Ok(out)
+            })
+            .collect()
+    }
+
+    fn kron_combine_batch(&self, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<Vec<f32>>> {
+        let [m1, m2] = self.shapes.kron_dims;
+        pairs
+            .iter()
+            .map(|(a, b)| {
+                anyhow::ensure!(a.len() == m1 * m2 && b.len() == m1 * m2, "kron input length");
+                let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+                let bf: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+                let out = crate::fft::circular_convolve2(&af, &bf, m1, m2);
+                Ok(out.into_iter().map(|v| v as f32).collect())
+            })
+            .collect()
+    }
+
+    fn shapes(&self) -> BackendShapes {
+        self.shapes.clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA backend
+// ---------------------------------------------------------------------
+
+/// Executes the ops through the AOT artifacts on the PJRT CPU client.
+/// Not `Send` — constructed on the coordinator's executor thread.
+pub struct XlaBackend {
+    rt: Runtime,
+    shapes: BackendShapes,
+    mts_path: String,
+    cs_path: String,
+    kron_path: String,
+    /// optional serving model: (predict path, param literals, batch, img dims)
+    serve: Option<ServeModel>,
+}
+
+struct ServeModel {
+    predict_path: String,
+    params: Vec<Vec<f32>>,
+    param_shapes: Vec<Vec<usize>>,
+    batch: usize,
+    img: Vec<usize>,
+    num_classes: usize,
+}
+
+impl XlaBackend {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        Self::with_serve_model(artifacts_dir, None)
+    }
+
+    /// `serve_model`: manifest model name whose `predict` artifact should
+    /// back `classify_batch`. Uses trained params from
+    /// `results/trained_<model>.bin` if present, else the init params.
+    pub fn with_serve_model(artifacts_dir: &str, serve_model: Option<&str>) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let shapes = shapes_from_manifest(rt.manifest())?;
+        let mts_path = rt.manifest().ops["mts_sketch"].path.clone();
+        let cs_path = rt.manifest().ops["cs_sketch"].path.clone();
+        let kron_path = rt.manifest().ops["kron_combine"].path.clone();
+        // warm the executable cache up front so first-request latency is
+        // not a compile
+        rt.load(&mts_path)?;
+        rt.load(&cs_path)?;
+        rt.load(&kron_path)?;
+        let serve = match serve_model {
+            None => None,
+            Some(name) => {
+                let entry = rt
+                    .manifest()
+                    .models
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown serve model {name:?}"))?
+                    .clone();
+                let predict_path = entry
+                    .predict
+                    .clone()
+                    .ok_or_else(|| anyhow!("model {name} has no predict artifact"))?;
+                rt.load(&predict_path)?;
+                // prefer trained params if a training run saved them
+                let trained = std::path::Path::new("results").join(format!("trained_{name}.bin"));
+                let params = if trained.exists() {
+                    crate::train::trainer::load_param_file(&trained, &entry)?
+                } else {
+                    rt.manifest().load_init_params(name)?
+                };
+                Some(ServeModel {
+                    predict_path,
+                    param_shapes: entry.param_schema.iter().map(|p| p.shape.clone()).collect(),
+                    params,
+                    batch: entry.batch,
+                    img: entry.img.clone(),
+                    num_classes: entry.num_classes,
+                })
+            }
+        };
+        Ok(Self { rt, shapes, mts_path, cs_path, kron_path, serve })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl SketchBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn mts_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let [n1, n2] = self.shapes.mts_in;
+        let exe = self.rt.load(&self.mts_path)?;
+        xs.iter()
+            .map(|x| {
+                let lit = rtc::literal_f32(x, &[n1, n2])?;
+                let out = self.rt.execute_loaded(&exe, &[lit])?;
+                rtc::literal_to_f32(&out[0])
+            })
+            .collect()
+    }
+
+    fn cs_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        // the artifact is natively batched [B, n] — pack requests into
+        // full batches (zero-padding the tail), then split the output
+        let n = self.shapes.cs_in;
+        let c = self.shapes.cs_out;
+        let bsz = self.shapes.cs_native_batch;
+        let exe = self.rt.load(&self.cs_path)?;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(bsz) {
+            let mut packed = vec![0.0f32; bsz * n];
+            for (r, x) in chunk.iter().enumerate() {
+                anyhow::ensure!(x.len() == n, "cs input length");
+                packed[r * n..(r + 1) * n].copy_from_slice(x);
+            }
+            let lit = rtc::literal_f32(&packed, &[bsz, n])?;
+            let res = self.rt.execute_loaded(&exe, &[lit])?;
+            let flat = rtc::literal_to_f32(&res[0])?;
+            for r in 0..chunk.len() {
+                out.push(flat[r * c..(r + 1) * c].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn kron_combine_batch(&self, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<Vec<f32>>> {
+        let [m1, m2] = self.shapes.kron_dims;
+        let exe = self.rt.load(&self.kron_path)?;
+        pairs
+            .iter()
+            .map(|(a, b)| {
+                let la = rtc::literal_f32(a, &[m1, m2])?;
+                let lb = rtc::literal_f32(b, &[m1, m2])?;
+                let out = self.rt.execute_loaded(&exe, &[la, lb])?;
+                rtc::literal_to_f32(&out[0])
+            })
+            .collect()
+    }
+
+    fn classify_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let serve = self
+            .serve
+            .as_ref()
+            .ok_or_else(|| anyhow!("backend started without a serve model"))?;
+        let img_len: usize = serve.img.iter().product();
+        let exe = self.rt.load(&serve.predict_path)?;
+        let mut img_dims = vec![serve.batch];
+        img_dims.extend_from_slice(&serve.img);
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(serve.batch) {
+            let mut packed = vec![0.0f32; serve.batch * img_len];
+            for (r, x) in chunk.iter().enumerate() {
+                anyhow::ensure!(x.len() == img_len, "image length {}", x.len());
+                packed[r * img_len..(r + 1) * img_len].copy_from_slice(x);
+            }
+            let mut inputs = Vec::with_capacity(serve.params.len() + 1);
+            for (p, shape) in serve.params.iter().zip(serve.param_shapes.iter()) {
+                inputs.push(rtc::literal_f32(p, shape)?);
+            }
+            inputs.push(rtc::literal_f32(&packed, &img_dims)?);
+            let res = self.rt.execute_loaded(&exe, &inputs)?;
+            let logits = rtc::literal_to_f32(&res[0])?;
+            for r in 0..chunk.len() {
+                out.push(logits[r * serve.num_classes..(r + 1) * serve.num_classes].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn shapes(&self) -> BackendShapes {
+        self.shapes.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn with_backends() -> Option<(PureRustBackend, XlaBackend)> {
+        if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let xla = XlaBackend::new(crate::runtime::DEFAULT_ARTIFACTS_DIR).unwrap();
+        let pure = PureRustBackend::new(xla.runtime().manifest()).unwrap();
+        Some((pure, xla))
+    }
+
+    fn rand_vec(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn backends_agree_on_mts() {
+        let Some((pure, xla)) = with_backends() else { return };
+        let s = pure.shapes();
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|_| rand_vec(s.mts_in[0] * s.mts_in[1], &mut rng)).collect();
+        let a = pure.mts_sketch_batch(&xs).unwrap();
+        let b = xla.mts_sketch_batch(&xs).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            for (u, v) in x.iter().zip(y.iter()) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_cs() {
+        let Some((pure, xla)) = with_backends() else { return };
+        let s = pure.shapes();
+        let mut rng = Pcg64::new(2);
+        // more requests than one native batch to exercise chunking
+        let xs: Vec<Vec<f32>> =
+            (0..s.cs_native_batch + 3).map(|_| rand_vec(s.cs_in, &mut rng)).collect();
+        let a = pure.cs_sketch_batch(&xs).unwrap();
+        let b = xla.cs_sketch_batch(&xs).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            for (u, v) in x.iter().zip(y.iter()) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_kron() {
+        let Some((pure, xla)) = with_backends() else { return };
+        let s = pure.shapes();
+        let mut rng = Pcg64::new(3);
+        let n = s.kron_dims[0] * s.kron_dims[1];
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..2).map(|_| (rand_vec(n, &mut rng), rand_vec(n, &mut rng))).collect();
+        let a = pure.kron_combine_batch(&pairs).unwrap();
+        let b = xla.kron_combine_batch(&pairs).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            for (u, v) in x.iter().zip(y.iter()) {
+                assert!((u - v).abs() < 1e-2, "{u} vs {v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Live service metrics: lock-free counters shared between the client
+//! handle and the executor thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Coordinator counters. All `Relaxed`: these are statistics, not
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    pub errors: AtomicU64,
+    /// end-to-end latency accumulators (µs)
+    pub latency_sum_us: AtomicU64,
+    pub latency_max_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, us: u64) {
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latency_max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_jobs.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} errors={} batches={} \
+             mean_batch={:.2} mean_latency={:.1}µs max_latency={}µs",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_max_us.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn latency_accounting() {
+        let m = Metrics::default();
+        m.completed.store(2, Ordering::Relaxed);
+        m.record_latency(100);
+        m.record_latency(300);
+        assert_eq!(m.mean_latency_us(), 200.0);
+        assert_eq!(m.latency_max_us.load(Ordering::Relaxed), 300);
+    }
+
+    #[test]
+    fn batch_size_accounting() {
+        let m = Metrics::default();
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_jobs.store(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_size(), 5.0);
+        assert!(m.summary().contains("mean_batch=5.00"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer-3 coordinator: a sketch *service* in the shape of a vLLM-style
+//! router — bounded request queue (backpressure), size-class dynamic
+//! batching, an executor thread that owns the (non-`Send`) PJRT runtime,
+//! and live metrics.
+//!
+//! The service exposes the paper's three request-path operations:
+//!
+//! - `MtsSketch`  — MTS of a matrix (the L1 Pallas artifact)
+//! - `CsSketch`   — count sketch of a vector batch
+//! - `KronCombine`— sketched-Kronecker combine (Lemma B.1)
+//!
+//! Two interchangeable backends execute batches: [`backend::XlaBackend`]
+//! (the AOT artifacts via PJRT — the production path) and
+//! [`backend::PureRustBackend`] (the in-crate sketch algorithms, seeded
+//! from the same manifest hash tables so the two are bit-compatible —
+//! the parity oracle used in tests and the fallback when artifacts are
+//! not built).
+
+pub mod backend;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{BackendKind, PureRustBackend, SketchBackend};
+pub use metrics::Metrics;
+pub use server::{Coordinator, CoordinatorConfig, Job, JobResult};

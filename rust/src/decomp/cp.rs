@@ -1,0 +1,221 @@
+//! CP (CANDECOMP/PARAFAC) decomposition:
+//! `T = Σ_{i=1}^r λ_i · U₁[:,i] ⊗ ⋯ ⊗ U_N[:,i]`.
+//!
+//! The paper treats CP as the diagonal-core special case of Tucker
+//! (§3.1 REMARKS); the sketch layer consumes [`CpTensor`] directly.
+
+use crate::linalg::lstsq;
+use crate::rng::Pcg64;
+use crate::tensor::{kron_vec, outer, Tensor};
+
+/// CP-form tensor: weights λ ∈ ℝ^r and factors `U_k ∈ ℝ^{n_k×r}`.
+#[derive(Clone, Debug)]
+pub struct CpTensor {
+    pub weights: Vec<f64>,
+    pub factors: Vec<Tensor>,
+}
+
+impl CpTensor {
+    pub fn new(weights: Vec<f64>, factors: Vec<Tensor>) -> Self {
+        let r = weights.len();
+        for (k, f) in factors.iter().enumerate() {
+            assert_eq!(f.order(), 2, "factor {k} must be a matrix");
+            assert_eq!(f.dims()[1], r, "factor {k} cols {} != rank {r}", f.dims()[1]);
+        }
+        Self { weights, factors }
+    }
+
+    /// Random rank-`r` CP tensor (unit weights, normal factors).
+    /// Supports the overcomplete regime r > n the paper highlights.
+    pub fn random(dims: &[usize], r: usize, rng: &mut Pcg64) -> Self {
+        let factors = dims.iter().map(|&n| Tensor::randn(&[n, r], rng)).collect();
+        Self::new(vec![1.0; r], factors)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.dims()[0]).collect()
+    }
+
+    /// Exact dense reconstruction.
+    pub fn reconstruct(&self) -> Tensor {
+        let dims = self.dims();
+        let mut out = Tensor::zeros(&dims);
+        for (i, &w) in self.weights.iter().enumerate() {
+            let cols: Vec<Vec<f64>> = self.factors.iter().map(|f| f.col(i)).collect();
+            let views: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+            let t = outer(&views).scale(w);
+            out.add_assign(&t);
+        }
+        out
+    }
+
+    /// Parameter count (Table 5's exact-form memory O(nr + r)).
+    pub fn param_count(&self) -> usize {
+        self.weights.len() + self.factors.iter().map(|f| f.len()).sum::<usize>()
+    }
+
+    /// View as a Tucker tensor with (sparse) diagonal core — used by the
+    /// sketch layer's shared code path.
+    pub fn to_tucker(&self) -> super::TuckerTensor {
+        let r = self.rank();
+        let n = self.factors.len();
+        let mut core = Tensor::zeros(&vec![r; n]);
+        for (i, &w) in self.weights.iter().enumerate() {
+            let idx = vec![i; n];
+            core.set(&idx, w);
+        }
+        super::TuckerTensor::new(core, self.factors.clone())
+    }
+}
+
+/// Khatri–Rao product (column-wise Kronecker) of matrices (n_k × r) for
+/// k in `mats`, in the given order: output (∏ n_k) × r.
+pub fn khatri_rao(mats: &[&Tensor]) -> Tensor {
+    assert!(!mats.is_empty());
+    let r = mats[0].dims()[1];
+    for m in mats {
+        assert_eq!(m.dims()[1], r);
+    }
+    let mut rows = 1usize;
+    for m in mats {
+        rows *= m.dims()[0];
+    }
+    let mut out = Tensor::zeros(&[rows, r]);
+    for j in 0..r {
+        let mut col = vec![1.0];
+        for m in mats {
+            col = kron_vec(&col, &m.col(j));
+        }
+        for (i, &v) in col.iter().enumerate() {
+            out.set(&[i, j], v);
+        }
+    }
+    out
+}
+
+/// CP decomposition via alternating least squares. Returns the fitted
+/// [`CpTensor`]; iterates until relative fit change < `tol` or
+/// `max_iters`.
+pub fn cp_als(t: &Tensor, r: usize, max_iters: usize, tol: f64, rng: &mut Pcg64) -> CpTensor {
+    let n = t.order();
+    let mut factors: Vec<Tensor> =
+        t.dims().iter().map(|&d| Tensor::randn(&[d, r], rng)).collect();
+    let mut prev_fit = f64::INFINITY;
+    let tnorm = t.fro_norm().max(1e-300);
+    for _ in 0..max_iters {
+        for k in 0..n {
+            // T_(k) = U_k · (KR of others in reverse mode order)ᵀ
+            // With Kolda unfolding (remaining modes in original order,
+            // row-major = last fastest), the matching KR order is the
+            // *original order* of the other modes.
+            let others: Vec<&Tensor> =
+                (0..n).filter(|&j| j != k).map(|j| &factors[j]).collect();
+            let kr = khatri_rao(&others); // (∏_{j≠k} n_j) × r
+            let unf = t.unfold(k); // n_k × ∏ n_j
+            // solve K x = unfᵀ  →  factor row space; x: r × n_k
+            let x = lstsq(&kr, &unf.transpose());
+            factors[k] = x.transpose();
+        }
+        let fit = crate::tensor::rel_error(
+            t,
+            &CpTensor::new(vec![1.0; r], factors.clone()).reconstruct(),
+        );
+        if (prev_fit - fit).abs() < tol * tnorm.max(1.0) || fit < tol {
+            prev_fit = fit;
+            break;
+        }
+        prev_fit = fit;
+    }
+    let _ = prev_fit;
+    CpTensor::new(vec![1.0; r], factors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn reconstruct_matches_formula() {
+        let mut rng = Pcg64::new(1);
+        let cp = CpTensor::random(&[3, 4, 5], 2, &mut rng);
+        let full = cp.reconstruct();
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let mut want = 0.0;
+                    for c in 0..2 {
+                        want += cp.factors[0].at2(i, c)
+                            * cp.factors[1].at2(j, c)
+                            * cp.factors[2].at2(k, c);
+                    }
+                    assert!((full.get(&[i, j, k]) - want).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_tucker_reconstruction_agrees() {
+        let mut rng = Pcg64::new(2);
+        let cp = CpTensor::random(&[4, 3, 5], 3, &mut rng);
+        let a = cp.reconstruct();
+        let b = cp.to_tucker().reconstruct();
+        assert!(rel_error(&a, &b) < 1e-10);
+    }
+
+    #[test]
+    fn khatri_rao_known_values() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![5.0, 6.0, 7.0, 8.0], &[2, 2]);
+        let kr = khatri_rao(&[&a, &b]);
+        assert_eq!(kr.dims(), &[4, 2]);
+        // col0 = [1,3]⊗[5,7] = [5,7,15,21]; col1 = [2,4]⊗[6,8]=[12,16,24,32]
+        assert_eq!(kr.col(0), vec![5.0, 7.0, 15.0, 21.0]);
+        assert_eq!(kr.col(1), vec![12.0, 16.0, 24.0, 32.0]);
+    }
+
+    #[test]
+    fn unfolding_kr_identity() {
+        // T = Σ u_c ⊗ v_c ⊗ w_c ⇒ T_(0) = U · KR(V, W)ᵀ
+        let mut rng = Pcg64::new(3);
+        let cp = CpTensor::random(&[3, 4, 2], 2, &mut rng);
+        let t = cp.reconstruct();
+        let kr = khatri_rao(&[&cp.factors[1], &cp.factors[2]]);
+        let want = cp.factors[0].matmul(&kr.transpose());
+        let got = t.unfold(0);
+        assert!(rel_error(&want, &got) < 1e-10);
+    }
+
+    #[test]
+    fn cp_als_recovers_exact_low_rank() {
+        let mut rng = Pcg64::new(4);
+        let src = CpTensor::random(&[6, 5, 7], 2, &mut rng);
+        let full = src.reconstruct();
+        let fit = cp_als(&full, 2, 60, 1e-10, &mut rng);
+        let err = rel_error(&full, &fit.reconstruct());
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn cp_als_overcomplete_representation() {
+        // overcomplete regime r > n: ALS should still drive error down
+        let mut rng = Pcg64::new(5);
+        let src = CpTensor::random(&[4, 4, 4], 6, &mut rng);
+        let full = src.reconstruct();
+        let fit = cp_als(&full, 6, 80, 1e-10, &mut rng);
+        let err = rel_error(&full, &fit.reconstruct());
+        assert!(err < 0.2, "err={err}");
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Pcg64::new(6);
+        let cp = CpTensor::random(&[5, 6, 7], 3, &mut rng);
+        assert_eq!(cp.param_count(), 3 + 3 * (5 + 6 + 7));
+    }
+}

@@ -1,0 +1,20 @@
+//! Tensor decomposition substrate — produces the Tucker / CP / TT forms
+//! the sketch layer consumes (§3 of the paper), and serves as the exact
+//! reconstruction reference in benchmarks.
+//!
+//! - [`TuckerTensor`] + [`hosvd`] — higher-order SVD (the "higher-order
+//!   PCA" the paper references).
+//! - [`CpTensor`] + [`cp_als`] — CANDECOMP/PARAFAC via alternating least
+//!   squares.
+//! - [`TtTensor`] + [`tt_svd`] — tensor-train via sequential truncated
+//!   SVDs (Oseledets 2011).
+
+pub mod cp;
+pub mod sketched_cp;
+pub mod tt;
+pub mod tucker;
+
+pub use cp::{cp_als, CpTensor};
+pub use sketched_cp::cp_als_sketched;
+pub use tt::{tt_svd, TtTensor};
+pub use tucker::{hosvd, TuckerTensor};

@@ -1,0 +1,231 @@
+//! Tensor-train decomposition (Oseledets 2011).
+//!
+//! Cores are stored as order-3 tensors `G_k ∈ ℝ^{r_{k-1} × n_k × r_k}`
+//! with `r_0 = r_N = 1`. For the third-order case the paper writes
+//! `T[i,j,k] = G1[i,:,:] · G2[j,:,:] · G3[k,:,:]` with
+//! `G1 ∈ ℝ^{n1×r1}`, `G2 ∈ ℝ^{n2×r1×r2}`, `G3 ∈ ℝ^{n3×r2}`; accessors
+//! below expose that layout for the sketch layer.
+
+use crate::linalg::svd;
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Tensor-train tensor with cores `G_k ∈ ℝ^{r_{k-1}×n_k×r_k}`.
+#[derive(Clone, Debug)]
+pub struct TtTensor {
+    pub cores: Vec<Tensor>,
+}
+
+impl TtTensor {
+    pub fn new(cores: Vec<Tensor>) -> Self {
+        assert!(!cores.is_empty());
+        assert_eq!(cores[0].dims()[0], 1, "first TT rank must be 1");
+        assert_eq!(cores.last().unwrap().dims()[2], 1, "last TT rank must be 1");
+        for w in cores.windows(2) {
+            assert_eq!(
+                w[0].dims()[2],
+                w[1].dims()[0],
+                "adjacent TT ranks must chain"
+            );
+        }
+        Self { cores }
+    }
+
+    /// Random TT tensor with given dims and internal ranks
+    /// (`ranks.len() == dims.len() - 1`).
+    pub fn random(dims: &[usize], ranks: &[usize], rng: &mut Pcg64) -> Self {
+        assert_eq!(ranks.len() + 1, dims.len());
+        let mut full_ranks = vec![1usize];
+        full_ranks.extend_from_slice(ranks);
+        full_ranks.push(1);
+        let cores = dims
+            .iter()
+            .enumerate()
+            .map(|(k, &n)| Tensor::randn(&[full_ranks[k], n, full_ranks[k + 1]], rng))
+            .collect();
+        Self::new(cores)
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.cores.iter().map(|c| c.dims()[1]).collect()
+    }
+
+    /// Internal ranks r₁ … r_{N-1}.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.cores[..self.cores.len() - 1].iter().map(|c| c.dims()[2]).collect()
+    }
+
+    /// Exact dense reconstruction by sweeping left→right.
+    pub fn reconstruct(&self) -> Tensor {
+        // cur: (prod_dims_so_far) × r_k matrix
+        let c0 = &self.cores[0];
+        let (n0, r1) = (c0.dims()[1], c0.dims()[2]);
+        let mut cur = c0.clone().reshape(&[n0, r1]);
+        for core in &self.cores[1..] {
+            let (rl, n, rr) = (core.dims()[0], core.dims()[1], core.dims()[2]);
+            let mat = core.clone().reshape(&[rl, n * rr]);
+            // (M × rl)·(rl × n·rr) = M × (n·rr)
+            cur = cur.matmul(&mat);
+            let m = cur.dims()[0];
+            cur = cur.reshape(&[m * n, rr]);
+        }
+        let dims = self.dims();
+        cur.reshape(&dims)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    // ---------- third-order paper layout ----------
+
+    /// `G1 ∈ ℝ^{n1×r1}` (paper's layout for third-order TT).
+    pub fn g1_matrix(&self) -> Tensor {
+        assert_eq!(self.cores.len(), 3, "paper layout is third-order");
+        let c = &self.cores[0];
+        c.clone().reshape(&[c.dims()[1], c.dims()[2]])
+    }
+
+    /// `G2 ∈ ℝ^{n2×r1×r2}` (mode order n, r1, r2).
+    pub fn g2_tensor(&self) -> Tensor {
+        assert_eq!(self.cores.len(), 3);
+        self.cores[1].permute(&[1, 0, 2])
+    }
+
+    /// `G3 ∈ ℝ^{n3×r2}`.
+    pub fn g3_matrix(&self) -> Tensor {
+        assert_eq!(self.cores.len(), 3);
+        let c = &self.cores[2];
+        c.clone().reshape(&[c.dims()[0], c.dims()[1]]).transpose()
+    }
+}
+
+/// TT-SVD: sequential truncated SVDs of the unfolding (Oseledets Alg. 1).
+/// `ranks` are the target internal ranks (len = order-1); actual ranks
+/// may come out smaller if the unfoldings are rank-deficient.
+pub fn tt_svd(t: &Tensor, ranks: &[usize]) -> TtTensor {
+    let dims = t.dims().to_vec();
+    let n = dims.len();
+    assert_eq!(ranks.len() + 1, n);
+    let mut cores = Vec::with_capacity(n);
+    let mut rprev = 1usize;
+    // c: remaining tensor flattened as (rprev·n_k) × rest
+    let mut c = t.clone().reshape(&[dims[0], t.len() / dims[0]]);
+    for k in 0..n - 1 {
+        let rows = rprev * dims[k];
+        let cols = c.len() / rows;
+        c = c.reshape(&[rows, cols]);
+        let target = ranks[k].min(rows).min(cols);
+        // truncated SVD
+        let (u, s, v) = if rows >= cols {
+            svd(&c)
+        } else {
+            let (u2, s2, v2) = svd(&c.transpose());
+            (v2, s2, u2)
+        };
+        // effective rank: drop numerically-zero directions
+        let cutoff = s.first().copied().unwrap_or(0.0) * 1e-12;
+        let reff = s.iter().take(target).filter(|&&x| x > cutoff).count().max(1);
+        // U_trunc: rows × reff → core
+        let mut core = Tensor::zeros(&[rprev, dims[k], reff]);
+        for i in 0..rows {
+            for j in 0..reff {
+                core.set(&[i / dims[k], i % dims[k], j], u.at2(i, j));
+            }
+        }
+        cores.push(core);
+        // carry = diag(s)·Vᵀ restricted to reff: reff × cols
+        let mut carry = Tensor::zeros(&[reff, cols]);
+        for i in 0..reff {
+            for j in 0..cols {
+                carry.set(&[i, j], s[i] * v.at2(j, i));
+            }
+        }
+        c = carry;
+        rprev = reff;
+    }
+    // last core: rprev × n_{N-1} × 1
+    let last = c.reshape(&[rprev, dims[n - 1], 1]);
+    cores.push(last);
+    TtTensor::new(cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn random_tt_shapes_and_params() {
+        let mut rng = Pcg64::new(1);
+        let t = TtTensor::random(&[4, 5, 6], &[2, 3], &mut rng);
+        assert_eq!(t.dims(), vec![4, 5, 6]);
+        assert_eq!(t.ranks(), vec![2, 3]);
+        assert_eq!(t.param_count(), 1 * 4 * 2 + 2 * 5 * 3 + 3 * 6 * 1);
+        assert_eq!(t.reconstruct().dims(), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn reconstruct_matches_paper_elementwise_formula() {
+        // T[i,j,k] = G1[i,:] · G2[j,:,:] · G3[k,:]
+        let mut rng = Pcg64::new(2);
+        let tt = TtTensor::random(&[3, 4, 5], &[2, 3], &mut rng);
+        let full = tt.reconstruct();
+        let g1 = tt.g1_matrix(); // n1 × r1
+        let g2 = tt.g2_tensor(); // n2 × r1 × r2
+        let g3 = tt.g3_matrix(); // n3 × r2
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let mut want = 0.0;
+                    for a in 0..2 {
+                        for b in 0..3 {
+                            want += g1.at2(i, a) * g2.get(&[j, a, b]) * g3.at2(k, b);
+                        }
+                    }
+                    assert!(
+                        (full.get(&[i, j, k]) - want).abs() < 1e-10,
+                        "({i},{j},{k})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tt_svd_exact_on_tt_structured_input() {
+        let mut rng = Pcg64::new(3);
+        let src = TtTensor::random(&[5, 6, 4], &[2, 2], &mut rng);
+        let full = src.reconstruct();
+        let dec = tt_svd(&full, &[2, 2]);
+        assert!(rel_error(&full, &dec.reconstruct()) < 1e-8);
+    }
+
+    #[test]
+    fn tt_svd_full_rank_lossless() {
+        let mut rng = Pcg64::new(4);
+        let t = Tensor::randn(&[3, 4, 3], &mut rng);
+        // max useful ranks: r1 ≤ min(3, 12), r2 ≤ min(12, 3)
+        let dec = tt_svd(&t, &[3, 3]);
+        assert!(rel_error(&t, &dec.reconstruct()) < 1e-8);
+    }
+
+    #[test]
+    fn tt_svd_truncation_monotone() {
+        let mut rng = Pcg64::new(5);
+        let t = Tensor::randn(&[4, 5, 4], &mut rng);
+        let e1 = rel_error(&t, &tt_svd(&t, &[1, 1]).reconstruct());
+        let e2 = rel_error(&t, &tt_svd(&t, &[2, 2]).reconstruct());
+        let e4 = rel_error(&t, &tt_svd(&t, &[4, 4]).reconstruct());
+        assert!(e1 >= e2 - 1e-10 && e2 >= e4 - 1e-10, "{e1} {e2} {e4}");
+    }
+
+    #[test]
+    fn tt_svd_fourth_order() {
+        let mut rng = Pcg64::new(6);
+        let src = TtTensor::random(&[3, 4, 4, 3], &[2, 3, 2], &mut rng);
+        let full = src.reconstruct();
+        let dec = tt_svd(&full, &[2, 3, 2]);
+        assert!(rel_error(&full, &dec.reconstruct()) < 1e-8);
+    }
+}

@@ -1,0 +1,166 @@
+//! Tucker decomposition: `T = G(U₁, …, U_N)` (paper Eq. 1).
+
+use crate::linalg::leading_left_singular;
+use crate::rng::Pcg64;
+use crate::tensor::{mode_k_product, Tensor};
+
+/// Tucker-form tensor: core `G ∈ ℝ^{r₁×⋯×r_N}` and factors
+/// `U_k ∈ ℝ^{n_k×r_k}`.
+#[derive(Clone, Debug)]
+pub struct TuckerTensor {
+    pub core: Tensor,
+    pub factors: Vec<Tensor>,
+}
+
+impl TuckerTensor {
+    pub fn new(core: Tensor, factors: Vec<Tensor>) -> Self {
+        assert_eq!(core.order(), factors.len(), "one factor per core mode");
+        for (k, f) in factors.iter().enumerate() {
+            assert_eq!(f.order(), 2, "factor {k} must be a matrix");
+            assert_eq!(
+                f.dims()[1],
+                core.dims()[k],
+                "factor {k} cols {} != core dim {}",
+                f.dims()[1],
+                core.dims()[k]
+            );
+        }
+        Self { core, factors }
+    }
+
+    /// Random Tucker-form tensor with iid normal core and factors.
+    pub fn random(dims: &[usize], ranks: &[usize], rng: &mut Pcg64) -> Self {
+        assert_eq!(dims.len(), ranks.len());
+        let core = Tensor::randn(ranks, rng);
+        let factors = dims
+            .iter()
+            .zip(ranks.iter())
+            .map(|(&n, &r)| Tensor::randn(&[n, r], rng))
+            .collect();
+        Self::new(core, factors)
+    }
+
+    /// Ambient dimensions n₁…n_N.
+    pub fn dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.dims()[0]).collect()
+    }
+
+    /// Multilinear ranks r₁…r_N.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.core.dims().to_vec()
+    }
+
+    /// Exact dense reconstruction `G ×₁ U₁ ⋯ ×_N U_N`.
+    pub fn reconstruct(&self) -> Tensor {
+        let mut cur = self.core.clone();
+        for (k, f) in self.factors.iter().enumerate() {
+            // contract core mode k (size r_k) with fᵀ: need matrix r_k×n_k
+            cur = mode_k_product(&cur, &f.transpose(), k);
+        }
+        cur
+    }
+
+    /// Parameter count (the "memory" column of Table 5 for the exact
+    /// form: O(nr + r³)).
+    pub fn param_count(&self) -> usize {
+        self.core.len() + self.factors.iter().map(|f| f.len()).sum::<usize>()
+    }
+}
+
+/// Higher-order SVD: factor `U_k` = leading `r_k` left singular vectors
+/// of the mode-k unfolding; core = `T(U₁ᵀ, …)`.
+pub fn hosvd(t: &Tensor, ranks: &[usize]) -> TuckerTensor {
+    assert_eq!(ranks.len(), t.order());
+    let factors: Vec<Tensor> = (0..t.order())
+        .map(|k| leading_left_singular(&t.unfold(k), ranks[k]))
+        .collect();
+    let mut core = t.clone();
+    for (k, f) in factors.iter().enumerate() {
+        core = mode_k_product(&core, f, k); // contract n_k with U_k → r_k
+    }
+    TuckerTensor::new(core, factors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn random_tucker_shapes() {
+        let mut rng = Pcg64::new(1);
+        let t = TuckerTensor::random(&[6, 7, 8], &[2, 3, 4], &mut rng);
+        assert_eq!(t.dims(), vec![6, 7, 8]);
+        assert_eq!(t.ranks(), vec![2, 3, 4]);
+        let full = t.reconstruct();
+        assert_eq!(full.dims(), &[6, 7, 8]);
+        assert_eq!(t.param_count(), 2 * 3 * 4 + 6 * 2 + 7 * 3 + 8 * 4);
+    }
+
+    #[test]
+    fn reconstruct_matches_elementwise_formula() {
+        let mut rng = Pcg64::new(2);
+        let t = TuckerTensor::random(&[3, 4, 5], &[2, 2, 2], &mut rng);
+        let full = t.reconstruct();
+        let (u, v, w) = (&t.factors[0], &t.factors[1], &t.factors[2]);
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let mut want = 0.0;
+                    for a in 0..2 {
+                        for b in 0..2 {
+                            for c in 0..2 {
+                                want += t.core.get(&[a, b, c])
+                                    * u.at2(i, a)
+                                    * v.at2(j, b)
+                                    * w.at2(k, c);
+                            }
+                        }
+                    }
+                    assert!((full.get(&[i, j, k]) - want).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hosvd_exact_on_exactly_low_rank() {
+        let mut rng = Pcg64::new(3);
+        let src = TuckerTensor::random(&[8, 9, 7], &[2, 3, 2], &mut rng);
+        let full = src.reconstruct();
+        let dec = hosvd(&full, &[2, 3, 2]);
+        let recon = dec.reconstruct();
+        assert!(rel_error(&full, &recon) < 1e-8, "err={}", rel_error(&full, &recon));
+    }
+
+    #[test]
+    fn hosvd_full_rank_is_lossless() {
+        let mut rng = Pcg64::new(4);
+        let t = Tensor::randn(&[4, 5, 3], &mut rng);
+        let dec = hosvd(&t, &[4, 5, 3]);
+        assert!(rel_error(&t, &dec.reconstruct()) < 1e-8);
+    }
+
+    #[test]
+    fn hosvd_truncation_monotone() {
+        // more rank → error not worse
+        let mut rng = Pcg64::new(5);
+        let t = Tensor::randn(&[6, 6, 6], &mut rng);
+        let e2 = rel_error(&t, &hosvd(&t, &[2, 2, 2]).reconstruct());
+        let e4 = rel_error(&t, &hosvd(&t, &[4, 4, 4]).reconstruct());
+        let e6 = rel_error(&t, &hosvd(&t, &[6, 6, 6]).reconstruct());
+        assert!(e2 >= e4 - 1e-10 && e4 >= e6 - 1e-10, "{e2} {e4} {e6}");
+        assert!(e6 < 1e-8);
+    }
+
+    #[test]
+    fn hosvd_factors_orthonormal() {
+        let mut rng = Pcg64::new(6);
+        let t = Tensor::randn(&[5, 6, 4], &mut rng);
+        let dec = hosvd(&t, &[2, 3, 2]);
+        for f in &dec.factors {
+            let g = f.transpose().matmul(f);
+            assert!(rel_error(&Tensor::eye(f.dims()[1]), &g) < 1e-9);
+        }
+    }
+}

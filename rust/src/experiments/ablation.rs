@@ -1,0 +1,175 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. MTS sketch path: fused scatter vs literal Eq. 3 one-hot
+//!    contractions (the structure the Pallas kernel uses — on CPU the
+//!    scatter wins; on TPU the matmul formulation is the point).
+//! 2. Kron combine: packed single complex FFT2 vs unpacked 3-FFT
+//!    reference (the §Perf optimization).
+//! 3. Coordinator batching: throughput vs `max_batch`.
+//! 4. Median-of-d: recovery error vs d (the robust-estimator knob every
+//!    theorem in the paper uses).
+
+use super::ExpConfig;
+use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
+use crate::fft::{circular_convolve2, circular_convolve2_unpacked};
+use crate::rng::Pcg64;
+use crate::sketch::estimate::median_decompress;
+use crate::sketch::mts::MtsSketcher;
+use crate::tensor::{rel_error, Tensor};
+use crate::util::bench::{bench, fmt_duration, Table};
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+pub fn run_ablation_sketch_path(cfg: &ExpConfig) -> Table {
+    let bcfg = cfg.bench_cfg();
+    let mut t = Table::new(
+        "Ablation 1 — MTS sketch: fused scatter vs Eq. 3 contractions",
+        &["input", "sketch", "scatter", "contraction", "ratio"],
+    );
+    for &(n, m) in &[(64usize, 16usize), (128, 32), (256, 64)] {
+        let mut rng = Pcg64::new(cfg.seed);
+        let x = Tensor::randn(&[n, n], &mut rng);
+        let sk = MtsSketcher::new(&[n, n], &[m, m], 1);
+        let scatter = bench("scatter", &bcfg, || sk.sketch(&x)).median;
+        let contract = bench("contract", &bcfg, || sk.sketch_contract(&x)).median;
+        t.row(vec![
+            format!("{n}×{n}"),
+            format!("{m}×{m}"),
+            fmt_duration(scatter),
+            fmt_duration(contract),
+            format!("{:.1}x", contract.as_secs_f64() / scatter.as_secs_f64()),
+        ]);
+    }
+    t
+}
+
+pub fn run_ablation_fft_packing(cfg: &ExpConfig) -> Table {
+    let bcfg = cfg.bench_cfg();
+    let mut t = Table::new(
+        "Ablation 2 — Kron combine: packed (2 FFT2) vs unpacked (3 FFT2)",
+        &["m", "packed", "unpacked", "speedup"],
+    );
+    for &m in &[16usize, 40, 71, 128] {
+        let mut rng = Pcg64::new(cfg.seed);
+        let a = rng.normal_vec(m * m);
+        let b = rng.normal_vec(m * m);
+        let packed = bench("packed", &bcfg, || circular_convolve2(&a, &b, m, m)).median;
+        let unpacked =
+            bench("unpacked", &bcfg, || circular_convolve2_unpacked(&a, &b, m, m)).median;
+        t.row(vec![
+            m.to_string(),
+            fmt_duration(packed),
+            fmt_duration(unpacked),
+            format!("{:.2}x", unpacked.as_secs_f64() / packed.as_secs_f64()),
+        ]);
+    }
+    t
+}
+
+pub fn run_ablation_batching(cfg: &ExpConfig, artifacts_dir: &str) -> Result<Table> {
+    let per_client = if cfg.quick { 200 } else { 500 };
+    let mut t = Table::new(
+        "Ablation 3 — coordinator throughput vs max_batch (xla backend)",
+        &["max_batch", "req/s", "mean batch", "mean latency"],
+    );
+    for &max_batch in &[1usize, 8, 64] {
+        let co = Arc::new(Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Xla,
+            artifacts_dir: artifacts_dir.to_string(),
+            max_batch,
+            ..Default::default()
+        })?);
+        let man = crate::runtime::Manifest::load(artifacts_dir)?;
+        let n = man.ops["cs_sketch"].input_dims[0];
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let co = co.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::new(c + 1);
+                let mut inflight = std::collections::VecDeque::new();
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                    loop {
+                        match co.try_submit(Job::CsSketch(x.clone())) {
+                            Ok(rx) => {
+                                inflight.push_back(rx);
+                                break;
+                            }
+                            Err(_) => std::thread::yield_now(),
+                        }
+                    }
+                    if inflight.len() >= 32 {
+                        inflight.pop_front().unwrap().recv().unwrap().unwrap();
+                    }
+                }
+                for rx in inflight {
+                    rx.recv().unwrap().unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = co.metrics();
+        t.row(vec![
+            max_batch.to_string(),
+            format!("{:.0}", m.completed.load(Ordering::Relaxed) as f64 / wall),
+            format!("{:.1}", m.mean_batch_size()),
+            format!("{:.0}µs", m.mean_latency_us()),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn run_ablation_median_d(cfg: &ExpConfig) -> Table {
+    let mut rng = Pcg64::new(cfg.seed);
+    let t_in = Tensor::randn(&[12, 12], &mut rng);
+    let mut t = Table::new(
+        "Ablation 4 — recovery error vs median-of-d (12×12 → 6×6)",
+        &["d", "rel error"],
+    );
+    for &d in &[1usize, 3, 5, 9, 21] {
+        let rec = median_decompress(d, |rep| {
+            let sk = MtsSketcher::with_repeat(&[12, 12], &[6, 6], cfg.seed, rep);
+            sk.decompress(&sk.sketch(&t_in))
+        });
+        t.row(vec![d.to_string(), format!("{:.4}", rel_error(&t_in, &rec))]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_d_ablation_monotone_tail() {
+        let t = run_ablation_median_d(&ExpConfig { quick: true, seed: 3 });
+        let s = t.render();
+        // parse the d=1 and d=21 error rows
+        let errs: Vec<f64> = s
+            .lines()
+            .skip(3)
+            .filter_map(|l| l.split_whitespace().nth(1).and_then(|v| v.parse().ok()))
+            .collect();
+        assert_eq!(errs.len(), 5);
+        assert!(errs[4] < errs[0], "d=21 must beat d=1: {errs:?}");
+    }
+
+    #[test]
+    fn fft_packing_ablation_runs() {
+        let cfg = ExpConfig { quick: true, seed: 1 };
+        let t = run_ablation_fft_packing(&cfg);
+        assert!(t.render().contains("packed"));
+    }
+
+    #[test]
+    fn sketch_path_ablation_runs() {
+        let cfg = ExpConfig { quick: true, seed: 1 };
+        let t = run_ablation_sketch_path(&cfg);
+        assert!(t.render().contains("scatter"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Figure 9: covariance matrix estimation. `A ∈ ℝ^{10×10}`, entries
+//! uniform on [-1,1] except rows 2 and 9 (1-based) positively
+//! correlated. Baseline: Pagh compressed matrix multiplication at
+//! compression ratio 2.5 (c = 40). MTS route: sketch `A ⊗ Aᵀ` at
+//! compression ratio 6.25 (m1·m2 = 1600) and read the covariance out of
+//! the Kronecker sketch. 300 repeats, median.
+//!
+//! Paper's reading: MTS estimate is *better* despite the *higher*
+//! compression ratio.
+
+use super::ExpConfig;
+use crate::rng::Pcg64;
+use crate::sketch::covariance::{
+    covariance_median_mts, covariance_median_pagh, figure9_matrix,
+};
+use crate::tensor::rel_error;
+use crate::util::bench::Table;
+
+pub struct Fig9Result {
+    pub pagh_ratio: f64,
+    pub mts_ratio: f64,
+    pub pagh_err: f64,
+    pub mts_err: f64,
+}
+
+pub fn run_fig9(cfg: &ExpConfig) -> (Table, Fig9Result) {
+    let mut rng = Pcg64::new(cfg.seed);
+    let a = figure9_matrix(&mut rng);
+    let truth = a.matmul(&a.transpose());
+    let d = if cfg.quick { 31 } else { 301 }; // paper: 300 repeats
+    let c = 40; // ratio 100²/…  → n²/c = 2.5
+    let (m1, m2) = (40, 40); // (nr)²/(m1·m2) = 10000/1600 = 6.25
+
+    let pagh = covariance_median_pagh(&a, c, d, cfg.seed);
+    let mts = covariance_median_mts(&a, m1, m2, d, cfg.seed);
+    let r = Fig9Result {
+        pagh_ratio: 100.0 / c as f64,
+        mts_ratio: 10_000.0 / (m1 * m2) as f64,
+        pagh_err: rel_error(&truth, &pagh),
+        mts_err: rel_error(&truth, &mts),
+    };
+
+    let mut t = Table::new(
+        &format!("Figure 9 — covariance estimation (median of {d})"),
+        &["method", "compression_ratio", "rel_error"],
+    );
+    t.row(vec![
+        "Pagh CS (AAᵀ)".into(),
+        format!("{:.2}", r.pagh_ratio),
+        format!("{:.4}", r.pagh_err),
+    ]);
+    t.row(vec![
+        "MTS (A⊗Aᵀ)".into(),
+        format!("{:.2}", r.mts_ratio),
+        format!("{:.4}", r.mts_err),
+    ]);
+    (t, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_both_methods_recover_covariance() {
+        // Reproduction note (recorded in EXPERIMENTS.md): under the
+        // matched median-of-d protocol both estimators land in the same
+        // error regime; the paper's claim that MTS is *strictly* better
+        // at the higher compression ratio did not reproduce point-for-
+        // point, but the structural claim (correlated rows visible in
+        // the reconstruction) does — see the structure test below.
+        let cfg = ExpConfig { quick: true, seed: 3 };
+        let (_t, r) = run_fig9(&cfg);
+        assert!(r.mts_ratio > r.pagh_ratio, "MTS runs at the higher ratio");
+        assert!(r.pagh_err < 1.0, "pagh err {}", r.pagh_err);
+        assert!(r.mts_err < 1.0, "mts err {}", r.mts_err);
+        assert!(
+            r.mts_err < 3.0 * r.pagh_err,
+            "errors should be the same order: {} vs {}",
+            r.mts_err,
+            r.pagh_err
+        );
+    }
+
+    #[test]
+    fn fig9_mts_preserves_correlated_row_structure() {
+        // Fig 9's visual claim: the strong (row2, row9) covariance block
+        // survives sketching. Check that cov[1,8] is the largest
+        // off-diagonal entry of the MTS reconstruction.
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(11);
+        let a = figure9_matrix(&mut rng);
+        let rec = covariance_median_mts(&a, 40, 40, 101, 11);
+        let target = rec.at2(1, 8).abs();
+        let mut larger = 0;
+        for i in 0..10 {
+            for j in 0..10 {
+                if i != j && !(i == 1 && j == 8) && !(i == 8 && j == 1)
+                    && rec.at2(i, j).abs() > target
+                {
+                    larger += 1;
+                }
+            }
+        }
+        // 90 off-diagonal entries; the correlated pair should rank near
+        // the top (sketching noise allows a few swaps)
+        assert!(larger <= 8, "cov(2,9) should stand out; {larger} entries larger");
+    }
+}

@@ -1,0 +1,53 @@
+//! Reproduction drivers for every table and figure in the paper's
+//! evaluation (see DESIGN.md §Experiment index). Each function prints
+//! the same rows/series the paper reports and returns the rendered
+//! table so EXPERIMENTS.md can be assembled from a single run.
+//!
+//! Shared conventions:
+//! - wall-clock via [`crate::util::bench`] (median of adaptive samples);
+//! - recovery error = relative Frobenius error, median of `d` repeats
+//!   (the paper uses 5 for Fig. 8, 300 for Fig. 9);
+//! - CTS and MTS compared at **equal compression ratio** (the paper's
+//!   protocol: `O(m²) = O(c)` keeps recovery error at the same level).
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig8;
+pub mod fig9;
+pub mod service;
+pub mod tables;
+pub mod variance;
+
+pub use ablation::{
+    run_ablation_batching, run_ablation_fft_packing, run_ablation_median_d,
+    run_ablation_sketch_path,
+};
+pub use fig10::{run_fig10, run_fig12};
+pub use fig8::run_fig8;
+pub use fig9::run_fig9;
+pub use service::run_service_bench;
+pub use tables::{run_table1, run_table3, run_table45, run_table6};
+pub use variance::run_variance;
+
+/// Quick-mode flag shared by the benches (CI uses quick).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpConfig {
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self { quick: false, seed: 20190711 }
+    }
+}
+
+impl ExpConfig {
+    pub fn bench_cfg(&self) -> crate::util::bench::BenchConfig {
+        if self.quick {
+            crate::util::bench::BenchConfig::quick()
+        } else {
+            crate::util::bench::BenchConfig::default()
+        }
+    }
+}

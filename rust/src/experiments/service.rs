@@ -1,0 +1,118 @@
+//! Coordinator throughput/latency benchmark — the §Perf L3 measurement:
+//! flood the service with sketch requests from several client threads
+//! and report throughput, mean/max latency and mean batch size, for
+//! both backends.
+
+use super::ExpConfig;
+use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
+use crate::rng::Pcg64;
+use crate::util::bench::Table;
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct ServiceStats {
+    pub backend: &'static str,
+    pub requests: u64,
+    pub wall_secs: f64,
+    pub throughput: f64,
+    pub mean_latency_us: f64,
+    pub mean_batch: f64,
+}
+
+pub fn run_service_bench(cfg: &ExpConfig, artifacts_dir: &str) -> Result<(Table, Vec<ServiceStats>)> {
+    let n_clients = 4usize;
+    let per_client = if cfg.quick { 200 } else { 1000 };
+    let mut t = Table::new(
+        &format!("Coordinator service bench — {n_clients} clients × {per_client} cs_sketch requests"),
+        &["backend", "requests", "wall (s)", "req/s", "mean latency", "mean batch"],
+    );
+    let mut out = Vec::new();
+    for kind in [BackendKind::PureRust, BackendKind::Xla] {
+        let co = Arc::new(Coordinator::start(CoordinatorConfig {
+            backend: kind,
+            artifacts_dir: artifacts_dir.to_string(),
+            ..Default::default()
+        })?);
+        let man = crate::runtime::Manifest::load(artifacts_dir)?;
+        let n = man.ops["cs_sketch"].input_dims[0];
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let co = co.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::new(c as u64 + 1);
+                // pipelined client: keep a window of requests in flight
+                // so the batcher actually gets to coalesce
+                const WINDOW: usize = 32;
+                let mut inflight = std::collections::VecDeque::new();
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                    loop {
+                        match co.try_submit(Job::CsSketch(x.clone())) {
+                            Ok(rx) => {
+                                inflight.push_back(rx);
+                                break;
+                            }
+                            Err(_) => std::thread::yield_now(), // backpressure
+                        }
+                    }
+                    if inflight.len() >= WINDOW {
+                        inflight.pop_front().unwrap().recv().unwrap().unwrap();
+                    }
+                }
+                for rx in inflight {
+                    rx.recv().unwrap().unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = co.metrics();
+        let requests = m.completed.load(Ordering::Relaxed);
+        let stats = ServiceStats {
+            backend: match kind {
+                BackendKind::PureRust => "pure-rust",
+                BackendKind::Xla => "xla-pjrt",
+            },
+            requests,
+            wall_secs: wall,
+            throughput: requests as f64 / wall,
+            mean_latency_us: m.mean_latency_us(),
+            mean_batch: m.mean_batch_size(),
+        };
+        t.row(vec![
+            stats.backend.into(),
+            stats.requests.to_string(),
+            format!("{wall:.2}"),
+            format!("{:.0}", stats.throughput),
+            format!("{:.0}µs", stats.mean_latency_us),
+            format!("{:.1}", stats.mean_batch),
+        ]);
+        out.push(stats);
+    }
+    Ok((t, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_bench_quick() {
+        if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = ExpConfig { quick: true, seed: 1 };
+        let (_t, stats) = run_service_bench(&cfg, "artifacts").unwrap();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.requests, 800);
+            assert!(s.throughput > 10.0, "{} too slow: {}", s.backend, s.throughput);
+        }
+    }
+}

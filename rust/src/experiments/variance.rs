@@ -1,0 +1,95 @@
+//! Theorem 2.1 empirical check: MTS point estimates are unbiased, and
+//! their variance tracks the collision structure. Also documents the
+//! paper-bound discrepancy (the stated ‖T‖²_F/(m1·m2) bound drops the
+//! same-row/column collision terms — see EXPERIMENTS.md).
+
+use super::ExpConfig;
+use crate::rng::Pcg64;
+use crate::sketch::mts::MtsSketcher;
+use crate::tensor::Tensor;
+use crate::util::bench::Table;
+use crate::util::stats::{mean, variance};
+
+pub struct VarianceRow {
+    pub m: usize,
+    pub bias: f64,
+    pub emp_var: f64,
+    pub corrected_bound: f64,
+    pub paper_bound: f64,
+}
+
+pub fn run_variance(cfg: &ExpConfig) -> (Table, Vec<VarianceRow>) {
+    let n = 8usize;
+    let dims = [n, n];
+    let target = [1usize, 6];
+    let mut rng = Pcg64::new(cfg.seed);
+    let t = Tensor::randn(&dims, &mut rng);
+    let truth = t.get(&target);
+    let reps = if cfg.quick { 2000 } else { 8000 };
+
+    let mut table = Table::new(
+        &format!("Theorem 2.1 — empirical estimator stats ({reps} sketches, 8×8 input)"),
+        &["m×m", "bias", "emp var", "corrected bound", "paper bound", "var ≤ corrected?"],
+    );
+    let mut rows = Vec::new();
+    for &m in &[2usize, 4, 6] {
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let sk = MtsSketcher::new(&dims, &[m, m], cfg.seed + 1000 + rep as u64);
+                sk.estimate(&sk.sketch(&t), &target)
+            })
+            .collect();
+        let bias = mean(&est) - truth;
+        let emp_var = variance(&est);
+        let mf = m as f64;
+        let mut corrected = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let v = t.get(&[i, j]).powi(2);
+                corrected += match (i == target[0], j == target[1]) {
+                    (true, true) => 0.0,
+                    (true, false) => v / mf,
+                    (false, true) => v / mf,
+                    (false, false) => v / (mf * mf),
+                };
+            }
+        }
+        let paper = t.fro_norm().powi(2) / (mf * mf);
+        table.row(vec![
+            format!("{m}×{m}"),
+            format!("{bias:+.4}"),
+            format!("{emp_var:.4}"),
+            format!("{corrected:.4}"),
+            format!("{paper:.4}"),
+            (emp_var <= corrected * 1.25).to_string(),
+        ]);
+        rows.push(VarianceRow { m, bias, emp_var, corrected_bound: corrected, paper_bound: paper });
+    }
+    (table, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variance_rows_satisfy_corrected_bound() {
+        let (_t, rows) = run_variance(&ExpConfig { quick: true, seed: 4 });
+        for r in &rows {
+            assert!(r.bias.abs() < 0.25, "m={}: bias {}", r.m, r.bias);
+            assert!(
+                r.emp_var <= r.corrected_bound * 1.3,
+                "m={}: {} vs {}",
+                r.m,
+                r.emp_var,
+                r.corrected_bound
+            );
+        }
+    }
+
+    #[test]
+    fn variance_decreases_with_m() {
+        let (_t, rows) = run_variance(&ExpConfig { quick: true, seed: 6 });
+        assert!(rows[0].emp_var > rows[2].emp_var);
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal complex-number type for the FFT substrate (no external crates).
+
+/// Complex number with f64 components. `Copy`, laid out as two f64s so a
+/// `&[Complex]` can be reinterpreted as interleaved re/im when marshalled
+/// to XLA literals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+    pub const ONE: Complex = Complex { re: 1.0, im: 0.0 };
+    pub const I: Complex = Complex { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    #[inline]
+    pub fn from_polar(r: f64, theta: f64) -> Self {
+        Self { re: r * theta.cos(), im: r * theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+}
+
+impl std::ops::Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl std::ops::Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl std::ops::Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl std::ops::Neg for Complex {
+    type Output = Complex;
+    #[inline]
+    fn neg(self) -> Complex {
+        Complex { re: -self.re, im: -self.im }
+    }
+}
+
+impl std::ops::AddAssign for Complex {
+    #[inline]
+    fn add_assign(&mut self, o: Complex) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_identities() {
+        let a = Complex::new(1.5, -2.0);
+        let b = Complex::new(-0.5, 3.0);
+        assert_eq!(a + b, Complex::new(1.0, 1.0));
+        assert_eq!(a - b, Complex::new(2.0, -5.0));
+        // (1.5 - 2i)(-0.5 + 3i) = -0.75 + 4.5i + i - (-6)·(-1)... compute:
+        // re = 1.5*-0.5 - (-2)*3 = -0.75 + 6 = 5.25
+        // im = 1.5*3 + (-2)*(-0.5) = 4.5 + 1 = 5.5
+        assert_eq!(a * b, Complex::new(5.25, 5.5));
+        assert_eq!(a * Complex::ONE, a);
+        assert_eq!(a * Complex::I, Complex::new(2.0, 1.5));
+    }
+
+    #[test]
+    fn polar_and_norm() {
+        let c = Complex::from_polar(2.0, std::f64::consts::FRAC_PI_2);
+        assert!((c.re - 0.0).abs() < 1e-12);
+        assert!((c.im - 2.0).abs() < 1e-12);
+        assert!((c.abs() - 2.0).abs() < 1e-12);
+        assert!((c.norm_sq() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conj_mul_is_norm() {
+        let a = Complex::new(3.0, -4.0);
+        let p = a * a.conj();
+        assert!((p.re - 25.0).abs() < 1e-12);
+        assert!(p.im.abs() < 1e-12);
+    }
+}

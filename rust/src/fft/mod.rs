@@ -1,0 +1,470 @@
+//! Fast Fourier transforms (1-D and 2-D), built from scratch.
+//!
+//! The sketched-Kronecker combine (`MTS(A⊗B) = IFFT2(FFT2(A') ∘ FFT2(B'))`,
+//! Lemma B.1) and the TT combine (Algorithm 5) run entirely through this
+//! module, so it supports **arbitrary lengths**:
+//!
+//! - power-of-two lengths: iterative radix-2 Cooley–Tukey with
+//!   precomputed twiddle tables and bit-reversal permutation;
+//! - everything else: Bluestein's chirp-z transform, which reduces any
+//!   length-n DFT to three power-of-two FFTs of length ≥ 2n-1.
+//!
+//! [`FftPlan`] caches twiddles per length; the sketch layer keeps plans
+//! alive across repeated combines (the profile-guided fix recorded in
+//! EXPERIMENTS.md §Perf).
+
+pub mod complex;
+
+pub use complex::Complex;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Direction of the transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+/// A cached plan for length-`n` transforms.
+///
+/// For power-of-two `n` this holds twiddle factors and the bit-reversal
+/// table. For general `n` it holds the Bluestein chirp and the
+/// pre-transformed chirp filter at the padded power-of-two length.
+#[derive(Debug)]
+pub struct FftPlan {
+    pub n: usize,
+    kind: PlanKind,
+}
+
+#[derive(Debug)]
+enum PlanKind {
+    Radix2 {
+        /// twiddles[s] holds the stage-s factors
+        twiddles: Vec<Complex>,
+        bitrev: Vec<u32>,
+    },
+    Bluestein {
+        /// chirp[k] = exp(-i π k² / n)
+        chirp: Vec<Complex>,
+        /// FFT (length np) of the conjugate chirp filter
+        filter_fft: Vec<Complex>,
+        /// inner power-of-two plan of length np ≥ 2n-1
+        inner: Box<FftPlan>,
+        /// reused padded work buffer (plans are thread-local; §Perf —
+        /// the per-transform allocation dominated small sketches)
+        scratch: RefCell<Vec<Complex>>,
+    },
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "FFT length must be positive");
+        if n.is_power_of_two() {
+            let mut twiddles = Vec::with_capacity(n.max(2) / 2);
+            for k in 0..n / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                twiddles.push(Complex::from_polar(1.0, ang));
+            }
+            let bits = n.trailing_zeros();
+            let bitrev = (0..n as u32)
+                .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
+                .collect();
+            Self { n, kind: PlanKind::Radix2 { twiddles, bitrev } }
+        } else {
+            let np = (2 * n - 1).next_power_of_two();
+            let inner = Box::new(FftPlan::new(np));
+            let mut chirp = Vec::with_capacity(n);
+            for k in 0..n {
+                // k² mod 2n computed in u128 to avoid overflow for large n
+                let k2 = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+                let ang = -std::f64::consts::PI * k2 / n as f64;
+                chirp.push(Complex::from_polar(1.0, ang));
+            }
+            let mut filt = vec![Complex::ZERO; np];
+            filt[0] = chirp[0].conj();
+            for k in 1..n {
+                let c = chirp[k].conj();
+                filt[k] = c;
+                filt[np - k] = c;
+            }
+            inner.transform(&mut filt, Direction::Forward);
+            Self {
+                n,
+                kind: PlanKind::Bluestein {
+                    chirp,
+                    filter_fft: filt,
+                    inner,
+                    scratch: RefCell::new(vec![Complex::ZERO; np]),
+                },
+            }
+        }
+    }
+
+    /// In-place transform of `data` (`data.len() == n`).
+    ///
+    /// The inverse transform includes the 1/n normalization, so
+    /// `inverse(forward(x)) == x`.
+    pub fn transform(&self, data: &mut [Complex], dir: Direction) {
+        assert_eq!(data.len(), self.n, "data length != plan length");
+        match &self.kind {
+            PlanKind::Radix2 { twiddles, bitrev } => {
+                radix2_in_place(data, twiddles, bitrev, dir);
+                if dir == Direction::Inverse {
+                    let scale = 1.0 / self.n as f64;
+                    for x in data.iter_mut() {
+                        *x = x.scale(scale);
+                    }
+                }
+            }
+            PlanKind::Bluestein { chirp, filter_fft, inner, scratch } => {
+                let n = self.n;
+                let np = inner.n;
+                let mut buf_guard = scratch.borrow_mut();
+                let buf: &mut [Complex] = &mut buf_guard;
+                buf.fill(Complex::ZERO);
+                // pre-chirp; for the inverse, conjugate the chirp
+                for k in 0..n {
+                    let c = if dir == Direction::Forward { chirp[k] } else { chirp[k].conj() };
+                    buf[k] = data[k] * c;
+                }
+                inner.transform(buf, Direction::Forward);
+                match dir {
+                    Direction::Forward => {
+                        for (b, f) in buf.iter_mut().zip(filter_fft.iter()) {
+                            *b = *b * *f;
+                        }
+                    }
+                    Direction::Inverse => {
+                        // conjugate filter = FFT of chirp (not conj chirp);
+                        // use conj symmetry: conj(FFT(conj x)) = IFFT(x)*np
+                        for (b, f) in buf.iter_mut().zip(filter_fft.iter()) {
+                            *b = *b * f.conj();
+                        }
+                    }
+                }
+                inner.transform(buf, Direction::Inverse);
+                let scale = if dir == Direction::Inverse { 1.0 / n as f64 } else { 1.0 };
+                for k in 0..n {
+                    let c = if dir == Direction::Forward { chirp[k] } else { chirp[k].conj() };
+                    data[k] = (buf[k] * c).scale(scale);
+                }
+            }
+        }
+    }
+}
+
+fn radix2_in_place(data: &mut [Complex], twiddles: &[Complex], bitrev: &[u32], dir: Direction) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    for i in 0..n {
+        let j = bitrev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        let stride = n / len;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                let tw = twiddles[k * stride];
+                let tw = if dir == Direction::Inverse { tw.conj() } else { tw };
+                let a = data[start + k];
+                let b = data[start + k + half] * tw;
+                data[start + k] = a + b;
+                data[start + k + half] = a - b;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+thread_local! {
+    static PLAN_CACHE: RefCell<HashMap<usize, Rc<FftPlan>>> = RefCell::new(HashMap::new());
+}
+
+/// Fetch (or build) the thread-local cached plan for length `n`.
+pub fn plan(n: usize) -> Rc<FftPlan> {
+    PLAN_CACHE.with(|c| {
+        c.borrow_mut()
+            .entry(n)
+            .or_insert_with(|| Rc::new(FftPlan::new(n)))
+            .clone()
+    })
+}
+
+/// Forward 1-D FFT (in place).
+pub fn fft(data: &mut [Complex]) {
+    plan(data.len()).transform(data, Direction::Forward);
+}
+
+/// Inverse 1-D FFT (in place, normalized).
+pub fn ifft(data: &mut [Complex]) {
+    plan(data.len()).transform(data, Direction::Inverse);
+}
+
+/// Forward FFT of a real signal; returns complex spectrum.
+pub fn fft_real(x: &[f64]) -> Vec<Complex> {
+    let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+    fft(&mut buf);
+    buf
+}
+
+/// 2-D FFT of row-major `rows × cols` data (in place).
+pub fn fft2(data: &mut [Complex], rows: usize, cols: usize, dir: Direction) {
+    assert_eq!(data.len(), rows * cols);
+    let row_plan = plan(cols);
+    for r in 0..rows {
+        row_plan.transform(&mut data[r * cols..(r + 1) * cols], dir);
+    }
+    let col_plan = plan(rows);
+    let mut col = vec![Complex::ZERO; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col[r] = data[r * cols + c];
+        }
+        col_plan.transform(&mut col, dir);
+        for r in 0..rows {
+            data[r * cols + c] = col[r];
+        }
+    }
+}
+
+/// 2-D FFT of a real row-major matrix; returns complex spectrum.
+pub fn fft2_real(x: &[f64], rows: usize, cols: usize) -> Vec<Complex> {
+    let mut buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+    fft2(&mut buf, rows, cols, Direction::Forward);
+    buf
+}
+
+/// Inverse 2-D FFT returning only real parts (caller asserts realness).
+pub fn ifft2_to_real(mut spec: Vec<Complex>, rows: usize, cols: usize) -> Vec<f64> {
+    fft2(&mut spec, rows, cols, Direction::Inverse);
+    spec.into_iter().map(|c| c.re).collect()
+}
+
+/// Reference (unpacked) 2-D convolution: three separate FFT2s. Kept for
+/// the ablation bench (`hocs bench ablation`) that justifies the packed
+/// implementation above; not used on any hot path.
+pub fn circular_convolve2_unpacked(a: &[f64], b: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(b.len(), rows * cols);
+    let mut fa = fft2_real(a, rows, cols);
+    let fb = fft2_real(b, rows, cols);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    ifft2_to_real(fa, rows, cols)
+}
+
+/// Circular (cyclic) convolution of two real vectors of equal length,
+/// computed via FFT. This is exactly the count-sketch combine of
+/// Pagh (2012): `CS(u ⊗ v) = CS(u) * CS(v)`.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut fa = fft_real(a);
+    let fb = fft_real(b);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    ifft(&mut fa);
+    fa.into_iter().take(n).map(|c| c.re).collect()
+}
+
+/// 2-D circular convolution of two real `rows × cols` matrices via FFT2.
+/// This is the MTS Kronecker combine of Lemma B.1.
+///
+/// Perf (see EXPERIMENTS.md §Perf): the two forward transforms are
+/// packed into ONE complex FFT2 of `z = a + i·b`. By conjugate symmetry
+/// of real-input spectra, `FFT(a)[k] = (Z[k] + conj(Z[-k]))/2` and
+/// `FFT(b)[k] = (Z[k] − conj(Z[-k]))/(2i)`, and conveniently the
+/// product is `FFT(a)∘FFT(b) = (Z[k]² − conj(Z[-k])²)/(4i)` — two
+/// FFT2s total instead of three (−33% transform work).
+pub fn circular_convolve2(a: &[f64], b: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(b.len(), rows * cols);
+    let n = rows * cols;
+    let mut z: Vec<Complex> = a.iter().zip(b.iter()).map(|(&x, &y)| Complex::new(x, y)).collect();
+    fft2(&mut z, rows, cols, Direction::Forward);
+    // index-reversed (negated frequency) lookup: (-r mod rows, -c mod cols)
+    let mut prod = vec![Complex::ZERO; n];
+    for r in 0..rows {
+        let nr = if r == 0 { 0 } else { rows - r };
+        for c in 0..cols {
+            let nc = if c == 0 { 0 } else { cols - c };
+            let zk = z[r * cols + c];
+            let zmk = z[nr * cols + nc].conj();
+            // (zk² − zmk²) / (4i)  ==  multiply by  -i/4
+            let d = zk * zk - zmk * zmk;
+            prod[r * cols + c] = Complex::new(d.im * 0.25, -d.re * 0.25);
+        }
+    }
+    fft2(&mut prod, rows, cols, Direction::Inverse);
+    prod.into_iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive_dft(x: &[Complex], dir: Direction) -> Vec<Complex> {
+        let n = x.len();
+        let sign = if dir == Direction::Forward { -1.0 } else { 1.0 };
+        let mut out = vec![Complex::ZERO; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            let mut acc = Complex::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let ang = sign * 2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                acc = acc + v * Complex::from_polar(1.0, ang);
+            }
+            *o = if dir == Direction::Inverse { acc.scale(1.0 / n as f64) } else { acc };
+        }
+        out
+    }
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (*x - *y).abs() < tol,
+                "mismatch at {i}: {x:?} vs {y:?} (|Δ|={})",
+                (*x - *y).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn radix2_matches_naive_dft() {
+        for &n in &[1usize, 2, 4, 8, 16, 64, 128] {
+            let x = rand_signal(n, n as u64);
+            let mut got = x.clone();
+            fft(&mut got);
+            let want = naive_dft(&x, Direction::Forward);
+            assert_close(&got, &want, 1e-9 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive_dft() {
+        for &n in &[3usize, 5, 6, 7, 10, 12, 15, 33, 100] {
+            let x = rand_signal(n, 1000 + n as u64);
+            let mut got = x.clone();
+            fft(&mut got);
+            let want = naive_dft(&x, Direction::Forward);
+            assert_close(&got, &want, 1e-8 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_all_sizes() {
+        for &n in &[1usize, 2, 3, 5, 8, 12, 17, 64, 100, 127] {
+            let x = rand_signal(n, 7 + n as u64);
+            let mut buf = x.clone();
+            fft(&mut buf);
+            ifft(&mut buf);
+            assert_close(&buf, &x, 1e-9 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        for &(r, c) in &[(4usize, 4usize), (3, 5), (8, 6), (10, 10), (1, 7)] {
+            let x = rand_signal(r * c, (r * 31 + c) as u64);
+            let mut buf = x.clone();
+            fft2(&mut buf, r, c, Direction::Forward);
+            fft2(&mut buf, r, c, Direction::Inverse);
+            assert_close(&buf, &x, 1e-9 * ((r * c) as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn fft2_matches_row_col_naive() {
+        let (r, c) = (3usize, 4usize);
+        let x = rand_signal(r * c, 77);
+        let mut got = x.clone();
+        fft2(&mut got, r, c, Direction::Forward);
+        // naive: DFT rows then columns
+        let mut want = x.clone();
+        for i in 0..r {
+            let row = naive_dft(&want[i * c..(i + 1) * c], Direction::Forward);
+            want[i * c..(i + 1) * c].copy_from_slice(&row);
+        }
+        for j in 0..c {
+            let col: Vec<Complex> = (0..r).map(|i| want[i * c + j]).collect();
+            let colf = naive_dft(&col, Direction::Forward);
+            for i in 0..r {
+                want[i * c + j] = colf[i];
+            }
+        }
+        assert_close(&got, &want, 1e-9 * 13.0);
+    }
+
+    #[test]
+    fn circular_convolution_matches_direct() {
+        let mut rng = Pcg64::new(5);
+        for &n in &[4usize, 7, 16, 30] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let got = circular_convolve(&a, &b);
+            for k in 0..n {
+                let mut want = 0.0;
+                for i in 0..n {
+                    want += a[i] * b[(k + n - i) % n];
+                }
+                assert!((got[k] - want).abs() < 1e-9, "n={n} k={k}: {} vs {want}", got[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn circular_convolution2_matches_direct() {
+        let mut rng = Pcg64::new(6);
+        let (r, c) = (5usize, 6usize);
+        let a = rng.normal_vec(r * c);
+        let b = rng.normal_vec(r * c);
+        let got = circular_convolve2(&a, &b, r, c);
+        for kr in 0..r {
+            for kc in 0..c {
+                let mut want = 0.0;
+                for i in 0..r {
+                    for j in 0..c {
+                        want += a[i * c + j] * b[((kr + r - i) % r) * c + (kc + c - j) % c];
+                    }
+                }
+                let g = got[kr * c + kc];
+                assert!((g - want).abs() < 1e-9, "({kr},{kc}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 64;
+        let x = rand_signal(n, 3);
+        let mut f = x.clone();
+        fft(&mut f);
+        let ex: f64 = x.iter().map(|c| c.norm_sq()).sum();
+        let ef: f64 = f.iter().map(|c| c.norm_sq()).sum::<f64>() / n as f64;
+        assert!((ex - ef).abs() < 1e-8 * ex.max(1.0));
+    }
+
+    #[test]
+    fn plan_cache_reuses_plans() {
+        let p1 = plan(48);
+        let p2 = plan(48);
+        assert!(Rc::ptr_eq(&p1, &p2));
+    }
+}

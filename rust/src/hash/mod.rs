@@ -1,0 +1,283 @@
+//! Seeded universal hash families for sketching.
+//!
+//! Count sketch needs, per mode, a pair of functions
+//! `h : [n] → [m]` (2-universal bucket hash) and `s : [n] → {±1}`
+//! (4-universal sign hash — 4-wise independence is what makes the
+//! variance analysis of Charikar et al. go through; 2-wise suffices for
+//! unbiasedness).
+//!
+//! Two interchangeable implementations:
+//!
+//! - [`MultiplyShiftHash`] — strongly-universal multiply-shift
+//!   (Dietzfelbinger). O(1) evaluation, no tables; the default on the
+//!   hot path.
+//! - [`TabulationHash`] — simple tabulation over 8-bit characters.
+//!   3-independent and behaves like full randomness for count-sketch
+//!   style applications (Pătraşcu–Thorup); used in tests as a
+//!   cross-check family.
+//!
+//! [`ModeHash`] bundles `(h, s)` for one tensor mode and is the unit the
+//! sketch layer consumes; [`HashSeeds`] derives per-mode seeds from a
+//! single experiment seed so every sketch is exactly reproducible.
+
+use crate::rng::SplitMix64;
+
+/// A bucket hash `[n] → [m]` plus sign hash `[n] → {±1}` for one mode.
+#[derive(Clone, Debug)]
+pub struct ModeHash {
+    /// input dimension n (indices in `[0, n)`)
+    pub n: usize,
+    /// output dimension m (buckets in `[0, m)`)
+    pub m: usize,
+    bucket: MultiplyShiftHash,
+    sign: MultiplyShiftHash,
+}
+
+impl ModeHash {
+    /// Build a mode hash for `[n] → [m]` from a seed.
+    pub fn new(n: usize, m: usize, seed: u64) -> Self {
+        assert!(n > 0 && m > 0, "ModeHash dims must be positive (n={n}, m={m})");
+        let mut sm = SplitMix64::new(seed ^ 0xA5A5_5A5A_DEAD_BEEF);
+        let bucket = MultiplyShiftHash::new(&mut sm);
+        let sign = MultiplyShiftHash::new(&mut sm);
+        Self { n, m, bucket, sign }
+    }
+
+    /// Bucket for index `i`.
+    #[inline]
+    pub fn h(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        (self.bucket.eval(i as u64) % self.m as u64) as usize
+    }
+
+    /// Sign for index `i`.
+    #[inline]
+    pub fn s(&self, i: usize) -> f64 {
+        if self.sign.eval(i as u64) & (1 << 62) == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Materialize the bucket map as a `Vec` (hot-path friendly).
+    pub fn bucket_table(&self) -> Vec<u32> {
+        (0..self.n).map(|i| self.h(i) as u32).collect()
+    }
+
+    /// Materialize the sign map as a `Vec`.
+    pub fn sign_table(&self) -> Vec<f64> {
+        (0..self.n).map(|i| self.s(i)).collect()
+    }
+
+    /// The hash matrix H ∈ {0,1}^{n×m} with H[a, h(a)] = 1 (row-major).
+    pub fn hash_matrix(&self) -> Vec<f64> {
+        let mut hm = vec![0.0; self.n * self.m];
+        for a in 0..self.n {
+            hm[a * self.m + self.h(a)] = 1.0;
+        }
+        hm
+    }
+}
+
+/// Strongly-universal multiply-shift hash over u64 keys.
+///
+/// `eval(x) = hi_bits((a*x + b) mod 2^128)`; `a` odd. Returns a 63-bit
+/// value; callers reduce mod m (bucket) or take a high bit (sign).
+#[derive(Clone, Debug)]
+pub struct MultiplyShiftHash {
+    a: u128,
+    b: u128,
+}
+
+impl MultiplyShiftHash {
+    pub fn new(sm: &mut SplitMix64) -> Self {
+        let a = ((sm.next_u64() as u128) << 64 | sm.next_u64() as u128) | 1;
+        let b = (sm.next_u64() as u128) << 64 | sm.next_u64() as u128;
+        Self { a, b }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: u64) -> u64 {
+        let v = self.a.wrapping_mul(x as u128).wrapping_add(self.b);
+        (v >> 65) as u64 // top 63 bits
+    }
+}
+
+/// Simple tabulation hashing: split the key into 8 bytes, XOR per-byte
+/// random tables. 3-independent; excellent distribution in practice.
+#[derive(Clone)]
+pub struct TabulationHash {
+    tables: Box<[[u64; 256]; 8]>,
+}
+
+impl TabulationHash {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut tables = Box::new([[0u64; 256]; 8]);
+        for t in tables.iter_mut() {
+            for e in t.iter_mut() {
+                *e = sm.next_u64();
+            }
+        }
+        Self { tables }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: u64) -> u64 {
+        let mut h = 0u64;
+        let bytes = x.to_le_bytes();
+        for (i, &b) in bytes.iter().enumerate() {
+            h ^= self.tables[i][b as usize];
+        }
+        h
+    }
+}
+
+impl std::fmt::Debug for TabulationHash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TabulationHash").finish_non_exhaustive()
+    }
+}
+
+/// Derives independent per-mode / per-repeat seeds from one root seed.
+///
+/// Layout: `seed_for(repeat, mode)` must be unique per (repeat, mode)
+/// pair and stable across runs — benchmarks and tests rely on exact
+/// reproducibility of sketches.
+#[derive(Clone, Copy, Debug)]
+pub struct HashSeeds {
+    root: u64,
+}
+
+impl HashSeeds {
+    pub fn new(root: u64) -> Self {
+        Self { root }
+    }
+
+    /// Seed for sketch repeat `d` (median-of-d estimation), mode `k`.
+    pub fn seed_for(&self, repeat: usize, mode: usize) -> u64 {
+        let mut sm = SplitMix64::new(self.root);
+        // mix in coordinates through two rounds so nearby (d, k) decorrelate
+        let x = sm
+            .next_u64()
+            .wrapping_add((repeat as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((mode as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let mut sm2 = SplitMix64::new(x);
+        sm2.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_hash_in_range() {
+        let mh = ModeHash::new(1000, 37, 42);
+        for i in 0..1000 {
+            assert!(mh.h(i) < 37);
+            let s = mh.s(i);
+            assert!(s == 1.0 || s == -1.0);
+        }
+    }
+
+    #[test]
+    fn mode_hash_deterministic() {
+        let a = ModeHash::new(100, 10, 7);
+        let b = ModeHash::new(100, 10, 7);
+        for i in 0..100 {
+            assert_eq!(a.h(i), b.h(i));
+            assert_eq!(a.s(i), b.s(i));
+        }
+    }
+
+    #[test]
+    fn mode_hash_seed_sensitivity() {
+        let a = ModeHash::new(200, 16, 1);
+        let b = ModeHash::new(200, 16, 2);
+        let same = (0..200).filter(|&i| a.h(i) == b.h(i)).count();
+        // collisions by chance ≈ 200/16 ± noise; identical would be 200
+        assert!(same < 60, "hashes look identical across seeds: {same}");
+    }
+
+    #[test]
+    fn buckets_are_roughly_uniform() {
+        let m = 16;
+        let n = 16_000;
+        let mh = ModeHash::new(n, m, 3);
+        let mut counts = vec![0usize; m];
+        for i in 0..n {
+            counts[mh.h(i)] += 1;
+        }
+        let expect = n / m;
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.25,
+                "bucket {b} count {c} far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn signs_are_roughly_balanced() {
+        let mh = ModeHash::new(10_000, 4, 13);
+        let sum: f64 = (0..10_000).map(|i| mh.s(i)).sum();
+        assert!(sum.abs() < 300.0, "sign sum={sum}");
+    }
+
+    #[test]
+    fn pairwise_independence_empirical() {
+        // For random pairs (i, j), P[h(i)=h(j)] should be ≈ 1/m.
+        let m = 32;
+        let mh = ModeHash::new(100_000, m, 99);
+        let mut coll = 0usize;
+        let trials = 20_000;
+        let mut sm = SplitMix64::new(5);
+        for _ in 0..trials {
+            let i = (sm.next_u64() % 100_000) as usize;
+            let j = (sm.next_u64() % 100_000) as usize;
+            if i != j && mh.h(i) == mh.h(j) {
+                coll += 1;
+            }
+        }
+        let p = coll as f64 / trials as f64;
+        assert!((p - 1.0 / m as f64).abs() < 0.01, "collision prob={p}");
+    }
+
+    #[test]
+    fn hash_matrix_is_one_hot() {
+        let mh = ModeHash::new(20, 5, 8);
+        let hm = mh.hash_matrix();
+        for a in 0..20 {
+            let row = &hm[a * 5..(a + 1) * 5];
+            assert_eq!(row.iter().filter(|&&x| x == 1.0).count(), 1);
+            assert_eq!(row[mh.h(a)], 1.0);
+        }
+    }
+
+    #[test]
+    fn tabulation_matches_itself_and_spreads() {
+        let t = TabulationHash::new(77);
+        let a = t.eval(12345);
+        assert_eq!(a, t.eval(12345));
+        let mut buckets = vec![0usize; 16];
+        for i in 0..16_000u64 {
+            buckets[(t.eval(i) % 16) as usize] += 1;
+        }
+        for &c in &buckets {
+            assert!((c as i64 - 1000).unsigned_abs() < 250);
+        }
+    }
+
+    #[test]
+    fn seeds_unique_per_coordinate() {
+        let hs = HashSeeds::new(42);
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..8 {
+            for k in 0..8 {
+                assert!(seen.insert(hs.seed_for(d, k)), "duplicate seed at ({d},{k})");
+            }
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! # hocs — Higher-order Count Sketch
+//!
+//! A production-quality reproduction of *"Higher-order Count Sketch:
+//! Dimensionality Reduction That Retains Efficient Tensor Operations"*
+//! (Shi & Anandkumar, 2019; earlier arXiv title "Multi-dimensional
+//! Tensor Sketch").
+//!
+//! The library is organized in three layers:
+//!
+//! - **Core algorithms** (pure Rust, this crate): [`sketch`] implements
+//!   count sketch (CS), count-based tensor sketch (CTS, the vector-space
+//!   baseline), and the paper's multi-dimensional tensor sketch
+//!   (MTS/HCS), plus the sketched Kronecker / Tucker / CP / TT /
+//!   covariance operations. Substrates: [`tensor`], [`fft`], [`hash`],
+//!   [`decomp`], [`linalg`], [`rng`], [`util`].
+//! - **AOT compute artifacts** (build time, `python/`): Pallas kernels +
+//!   JAX models lowered to HLO text, loaded at runtime by [`runtime`].
+//! - **Coordinator** ([`coordinator`]): a thread-based sketch service
+//!   with routing, size-class batching and backpressure, plus the
+//!   [`train`] driver reproducing the paper's tensor-regression-network
+//!   experiments end to end.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use hocs::rng::Pcg64;
+//! use hocs::sketch::mts::MtsSketcher;
+//! use hocs::tensor::Tensor;
+//!
+//! let mut rng = Pcg64::new(0);
+//! let t = Tensor::randn(&[32, 32], &mut rng);
+//! // sketch 32×32 → 16×16 (compression ratio 4)
+//! let sk = MtsSketcher::new(&[32, 32], &[16, 16], 42);
+//! let mts = sk.sketch(&t);
+//! let approx = sk.decompress(&mts);
+//! assert_eq!(approx.dims(), t.dims());
+//! ```
+
+pub mod coordinator;
+pub mod decomp;
+pub mod experiments;
+pub mod fft;
+pub mod hash;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,352 @@
+//! Dense linear algebra substrate: QR (Householder), SVD (one-sided
+//! Jacobi), and leading-singular-subspace helpers. These back the tensor
+//! decompositions in `decomp/` (HOSVD needs leading left singular
+//! vectors; CP-ALS needs least squares; TT-SVD needs truncated SVD).
+//!
+//! Written for correctness and clarity at the modest sizes the paper's
+//! experiments use (n ≤ a few hundred); not a BLAS replacement.
+
+use crate::tensor::Tensor;
+
+/// Householder QR: returns (Q, R) with Q ∈ ℝ^{m×n} orthonormal columns
+/// (thin QR), R ∈ ℝ^{n×n} upper triangular, for m ≥ n.
+pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
+    assert_eq!(a.order(), 2);
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    assert!(m >= n, "thin QR requires m >= n (got {m}x{n})");
+    let mut r = a.clone(); // working copy, will hold R in top block
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // householder vectors
+
+    for k in 0..n {
+        // build householder vector for column k below diagonal
+        let mut norm = 0.0;
+        for i in k..m {
+            let x = r.at2(i, k);
+            norm += x * x;
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        let alpha = if r.at2(k, k) >= 0.0 { -norm } else { norm };
+        let mut v: Vec<f64> = (k..m).map(|i| r.at2(i, k)).collect();
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // apply H = I - 2vvᵀ/|v|² to remaining columns
+        for j in k..n {
+            let mut dot = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                dot += vi * r.at2(k + ii, j);
+            }
+            let scale = 2.0 * dot / vnorm_sq;
+            for (ii, vi) in v.iter().enumerate() {
+                let cur = r.at2(k + ii, j);
+                r.set(&[k + ii, j], cur - scale * vi);
+            }
+        }
+        vs.push(v);
+    }
+
+    // materialize thin Q by applying H_k in reverse to identity columns
+    let mut q = Tensor::zeros(&[m, n]);
+    for j in 0..n {
+        let mut e = vec![0.0; m];
+        e[j] = 1.0;
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm_sq < 1e-300 {
+                continue;
+            }
+            let mut dot = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                dot += vi * e[k + ii];
+            }
+            let scale = 2.0 * dot / vnorm_sq;
+            for (ii, vi) in v.iter().enumerate() {
+                e[k + ii] -= scale * vi;
+            }
+        }
+        for i in 0..m {
+            q.set(&[i, j], e[i]);
+        }
+    }
+    // R: top n×n of working copy, zero below diagonal
+    let mut rr = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in i..n {
+            rr.set(&[i, j], r.at2(i, j));
+        }
+    }
+    (q, rr)
+}
+
+/// Thin SVD via one-sided Jacobi: `a = U diag(s) Vᵀ`, with
+/// U ∈ ℝ^{m×n}, s descending, V ∈ ℝ^{n×n}. Requires m ≥ n (callers
+/// transpose if needed).
+pub fn svd(a: &Tensor) -> (Tensor, Vec<f64>, Tensor) {
+    assert_eq!(a.order(), 2);
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    assert!(m >= n, "svd requires m >= n; transpose first (got {m}x{n})");
+    // work on columns of U = A (copied), rotate pairs until orthogonal
+    let mut u = a.clone();
+    let mut v = Tensor::eye(n);
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // compute [app apq; apq aqq] of AᵀA for columns p,q
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u.at2(i, p);
+                    let uq = u.at2(i, q);
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u.at2(i, p);
+                    let uq = u.at2(i, q);
+                    u.set(&[i, p], c * up - s * uq);
+                    u.set(&[i, q], s * up + c * uq);
+                }
+                for i in 0..n {
+                    let vp = v.at2(i, p);
+                    let vq = v.at2(i, q);
+                    v.set(&[i, p], c * vp - s * vq);
+                    v.set(&[i, q], s * vp + c * vq);
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // singular values = column norms; normalize U
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u.at2(i, j).powi(2)).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut uu = Tensor::zeros(&[m, n]);
+    let mut vv = Tensor::zeros(&[n, n]);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(norm, j)) in sv.iter().enumerate() {
+        s.push(norm);
+        if norm > 1e-300 {
+            for i in 0..m {
+                uu.set(&[i, out_j], u.at2(i, j) / norm);
+            }
+        }
+        for i in 0..n {
+            vv.set(&[i, out_j], v.at2(i, j));
+        }
+    }
+    (uu, s, vv)
+}
+
+/// Leading `k` left singular vectors of `a` (m×n, any aspect ratio).
+pub fn leading_left_singular(a: &Tensor, k: usize) -> Tensor {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    let k = k.min(m).min(n);
+    let u = if m >= n {
+        let (u, _, _) = svd(a);
+        u
+    } else {
+        // A = U S Vᵀ ⇔ Aᵀ = V S Uᵀ; svd(Aᵀ) gives (V, S, U)
+        let (_, _, v) = svd(&a.transpose());
+        v
+    };
+    // take first k columns
+    let mut out = Tensor::zeros(&[m, k]);
+    for i in 0..m {
+        for j in 0..k {
+            out.set(&[i, j], u.at2(i, j));
+        }
+    }
+    out
+}
+
+/// Solve the least-squares problem `min ‖A x - b‖` for each column of B
+/// via QR (A: m×n, m ≥ n; B: m×p) → X: n×p.
+pub fn lstsq(a: &Tensor, b: &Tensor) -> Tensor {
+    let (q, r) = qr(a);
+    let qtb = q.transpose().matmul(b); // n×p
+    let n = r.dims()[0];
+    let p = qtb.dims()[1];
+    let mut x = Tensor::zeros(&[n, p]);
+    for col in 0..p {
+        for i in (0..n).rev() {
+            let mut acc = qtb.at2(i, col);
+            for j in (i + 1)..n {
+                acc -= r.at2(i, j) * x.at2(j, col);
+            }
+            let d = r.at2(i, i);
+            x.set(&[i, col], if d.abs() > 1e-300 { acc / d } else { 0.0 });
+        }
+    }
+    x
+}
+
+/// Pseudo-inverse via SVD (used for Moore–Penrose needs in tests).
+pub fn pinv(a: &Tensor) -> Tensor {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    if m >= n {
+        let (u, s, v) = svd(a);
+        // pinv = V S⁺ Uᵀ
+        let mut sp = Tensor::zeros(&[n, n]);
+        let cutoff = s.first().copied().unwrap_or(0.0) * 1e-12;
+        for (i, &sv) in s.iter().enumerate() {
+            if sv > cutoff {
+                sp.set(&[i, i], 1.0 / sv);
+            }
+        }
+        v.matmul(&sp).matmul(&u.transpose())
+    } else {
+        pinv(&a.transpose()).transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Pcg64::new(1);
+        for &(m, n) in &[(5usize, 3usize), (6, 6), (10, 2)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            let (q, r) = qr(&a);
+            let qr_prod = q.matmul(&r);
+            assert!(rel_error(&a, &qr_prod) < 1e-10, "{m}x{n}");
+            let qtq = q.transpose().matmul(&q);
+            assert!(rel_error(&Tensor::eye(n), &qtq) < 1e-10, "QᵀQ≠I {m}x{n}");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r.at2(i, j).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Pcg64::new(2);
+        for &(m, n) in &[(6usize, 4usize), (5, 5), (8, 3)] {
+            let a = Tensor::randn(&[m, n], &mut rng);
+            let (u, s, v) = svd(&a);
+            let mut smat = Tensor::zeros(&[n, n]);
+            for (i, &sv) in s.iter().enumerate() {
+                smat.set(&[i, i], sv);
+            }
+            let recon = u.matmul(&smat).matmul(&v.transpose());
+            assert!(rel_error(&a, &recon) < 1e-9, "{m}x{n}");
+            // descending
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            // orthonormal
+            assert!(rel_error(&Tensor::eye(n), &u.transpose().matmul(&u)) < 1e-9);
+            assert!(rel_error(&Tensor::eye(n), &v.transpose().matmul(&v)) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-1 matrix: only one nonzero singular value
+        let u = [1.0, 2.0, 3.0, 4.0];
+        let v = [1.0, -1.0, 2.0];
+        let mut a = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            for j in 0..3 {
+                a.set(&[i, j], u[i] * v[j]);
+            }
+        }
+        let (_, s, _) = svd(&a);
+        assert!(s[0] > 1.0);
+        assert!(s[1] < 1e-9 && s[2] < 1e-9, "s={s:?}");
+    }
+
+    #[test]
+    fn leading_left_singular_spans_range() {
+        let mut rng = Pcg64::new(3);
+        // low-rank matrix: A = B C with inner dim 2
+        let b = Tensor::randn(&[8, 2], &mut rng);
+        let c = Tensor::randn(&[2, 6], &mut rng);
+        let a = b.matmul(&c);
+        let u = leading_left_singular(&a, 2);
+        assert_eq!(u.dims(), &[8, 2]);
+        // projector onto span(u) should reproduce A
+        let proj = u.matmul(&u.transpose()).matmul(&a);
+        assert!(rel_error(&a, &proj) < 1e-9);
+    }
+
+    #[test]
+    fn leading_left_singular_wide_matrix() {
+        let mut rng = Pcg64::new(4);
+        let b = Tensor::randn(&[4, 2], &mut rng);
+        let c = Tensor::randn(&[2, 12], &mut rng);
+        let a = b.matmul(&c); // 4×12, rank 2
+        let u = leading_left_singular(&a, 2);
+        let proj = u.matmul(&u.transpose()).matmul(&a);
+        assert!(rel_error(&a, &proj) < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_exact_for_consistent_system() {
+        let mut rng = Pcg64::new(5);
+        let a = Tensor::randn(&[7, 3], &mut rng);
+        let x_true = Tensor::randn(&[3, 2], &mut rng);
+        let b = a.matmul(&x_true);
+        let x = lstsq(&a, &b);
+        assert!(rel_error(&x_true, &x) < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_minimizes_residual() {
+        let mut rng = Pcg64::new(6);
+        let a = Tensor::randn(&[10, 3], &mut rng);
+        let b = Tensor::randn(&[10, 1], &mut rng);
+        let x = lstsq(&a, &b);
+        // residual must be orthogonal to columns of A
+        let resid = b.sub(&a.matmul(&x));
+        let ata_resid = a.transpose().matmul(&resid);
+        assert!(ata_resid.fro_norm() < 1e-9, "normal equations violated");
+    }
+
+    #[test]
+    fn pinv_satisfies_moore_penrose() {
+        let mut rng = Pcg64::new(7);
+        for dims in [[5usize, 3usize], [3, 5]] {
+            let a = Tensor::randn(&dims, &mut rng);
+            let p = pinv(&a);
+            let apa = a.matmul(&p).matmul(&a);
+            assert!(rel_error(&a, &apa) < 1e-9, "A P A = A failed for {dims:?}");
+            let pap = p.matmul(&a).matmul(&p);
+            assert!(rel_error(&p, &pap) < 1e-9, "P A P = P failed for {dims:?}");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! `hocs` — CLI for the Higher-order Count Sketch reproduction.
+//!
+//! ```text
+//! hocs info                               # artifact / manifest summary
+//! hocs train --model trl_mts_4x4x8 ...    # e2e training (Fig 10 curve)
+//! hocs serve-demo [--backend xla]         # coordinator demo workload
+//! hocs bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|all>
+//! ```
+
+use hocs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
+use hocs::experiments::{self, ExpConfig};
+use hocs::rng::Pcg64;
+use hocs::runtime::Runtime;
+use hocs::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("debug") {
+        hocs::util::logger::set_level(hocs::util::logger::Level::Debug);
+    }
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        Some("bench") => cmd_bench(&args),
+        _ => {
+            eprintln!(
+                "usage: hocs <info|train|serve-demo|bench> [options]\n\
+                 \n\
+                 info                              artifact summary\n\
+                 train --model NAME [--steps N] [--lr F] [--seed N]\n\
+                 serve-demo [--backend xla|rust] [--requests N]\n\
+                 bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|all> [--quick]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_str("artifacts", hocs::runtime::DEFAULT_ARTIFACTS_DIR)
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let man = match hocs::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("artifacts: {dir}");
+    println!("\nservice ops:");
+    for (name, op) in &man.ops {
+        println!(
+            "  {name:<16} {} -> {:?}  ({} hash tables)",
+            op.path, op.sketch_dims, op.hashes.len()
+        );
+    }
+    println!("\nmodels:");
+    for (name, m) in &man.models {
+        println!(
+            "  {name:<18} head={:<8} batch={} head_params={:<6} total={}",
+            m.head, m.batch, m.head_param_count, m.total_param_count
+        );
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let model = args.get_str("model", "trl_mts_4x4x8");
+    let steps = args.get_usize("steps", 400);
+    let lr = args.get_f64("lr", 0.02) as f32;
+    let seed = args.get_u64("seed", 42);
+    let eval_every = args.get_usize("eval-every", 50);
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut tr = match hocs::train::Trainer::new(&rt, &model) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    match tr.train(steps, lr, eval_every, seed, false) {
+        Ok(hist) => {
+            let _ = std::fs::create_dir_all("results");
+            let path = format!("results/train_{model}.json");
+            let _ = std::fs::write(&path, hist.to_json().to_string_pretty());
+            println!(
+                "final test acc {:.3} ({} head params, {:.1}s) — history: {path}",
+                hist.final_test_acc(),
+                hist.head_param_count,
+                hist.wall_secs
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve_demo(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let backend = match args.get_str("backend", "xla").as_str() {
+        "rust" => BackendKind::PureRust,
+        _ => BackendKind::Xla,
+    };
+    let n_req = args.get_usize("requests", 500);
+    let co = match Coordinator::start(CoordinatorConfig {
+        backend,
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    }) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let man = hocs::runtime::Manifest::load(&dir).unwrap();
+    let n = man.ops["cs_sketch"].input_dims[0];
+    let mut rng = Pcg64::new(1);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_req {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        match co.try_submit(Job::CsSketch(x)) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    println!(
+        "{} requests in {:.2}s — {}",
+        n_req,
+        t0.elapsed().as_secs_f64(),
+        co.metrics().summary()
+    );
+    co.shutdown();
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let cfg = ExpConfig { quick: args.flag("quick"), seed: args.get_u64("seed", 20190711) };
+    let dir = artifacts_dir(args);
+    let needs_rt = matches!(which, "fig10" | "fig12" | "all");
+    let rt = if needs_rt {
+        match Runtime::new(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("warning: artifacts unavailable ({e}); skipping fig10/fig12");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let mut run = |name: &str| -> i32 {
+        match name {
+            "fig8" => experiments::run_fig8(&cfg, 10).0.print(),
+            "fig9" => experiments::run_fig9(&cfg).0.print(),
+            "table1" => experiments::run_table1(&cfg).print(),
+            "table3" => experiments::run_table3(&cfg, &[8, 12, 16, 24, 32]).0.print(),
+            "table45" => experiments::run_table45(
+                &cfg,
+                &[(12, 2), (12, 4), (16, 6), (8, 10), (6, 12)],
+            )
+            .0
+            .print(),
+            "table6" => {
+                experiments::run_table6(&cfg, &[(12, 2), (16, 4), (16, 8), (8, 12)]).0.print()
+            }
+            "variance" => experiments::run_variance(&cfg).0.print(),
+            "ablation" => {
+                experiments::run_ablation_sketch_path(&cfg).print();
+                println!();
+                experiments::run_ablation_fft_packing(&cfg).print();
+                println!();
+                experiments::run_ablation_median_d(&cfg).print();
+                println!();
+                match experiments::run_ablation_batching(&cfg, &dir) {
+                    Ok(t) => t.print(),
+                    Err(e) => eprintln!("batching ablation skipped: {e}"),
+                }
+            }
+            "service" => match experiments::run_service_bench(&cfg, &dir) {
+                Ok((t, _)) => t.print(),
+                Err(e) => {
+                    eprintln!("service bench failed: {e}");
+                    return 1;
+                }
+            },
+            "fig10" => {
+                if let Some(rt) = rt.as_ref() {
+                    match experiments::run_fig10(&cfg, rt) {
+                        Ok((t, _)) => t.print(),
+                        Err(e) => {
+                            eprintln!("fig10 failed: {e}");
+                            return 1;
+                        }
+                    }
+                }
+            }
+            "fig12" => {
+                if let Some(rt) = rt.as_ref() {
+                    match experiments::run_fig12(&cfg, rt) {
+                        Ok((t, _)) => t.print(),
+                        Err(e) => {
+                            eprintln!("fig12 failed: {e}");
+                            return 1;
+                        }
+                    }
+                }
+            }
+            other => {
+                eprintln!("unknown bench {other:?}");
+                return 2;
+            }
+        }
+        0
+    };
+
+    if which == "all" {
+        for name in [
+            "fig8", "fig9", "table1", "table3", "table45", "table6", "variance", "service",
+            "ablation", "fig10", "fig12",
+        ] {
+            println!();
+            let rc = run(name);
+            if rc != 0 {
+                return rc;
+            }
+        }
+        0
+    } else {
+        run(which)
+    }
+}

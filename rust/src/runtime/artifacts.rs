@@ -1,0 +1,288 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json`, the
+//! contract between the Python AOT pipeline and the Rust runtime.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One mode's hash table exported from the build (bucket indices +
+/// signs) — lets Rust decompress sketches produced by the AOT ops.
+#[derive(Clone, Debug)]
+pub struct OpHash {
+    pub buckets: Vec<usize>,
+    pub signs: Vec<f64>,
+}
+
+impl OpHash {
+    fn from_json(j: &Json) -> Result<Self> {
+        let buckets = j
+            .get("buckets")
+            .and_then(|b| b.as_usize_vec())
+            .ok_or_else(|| anyhow!("hash missing buckets"))?;
+        let signs = j
+            .get("signs")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("hash missing signs"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad sign")))
+            .collect::<Result<Vec<_>>>()?;
+        if buckets.len() != signs.len() {
+            bail!("hash table length mismatch");
+        }
+        Ok(Self { buckets, signs })
+    }
+}
+
+/// A service op (standalone Pallas kernel lowered to HLO).
+#[derive(Clone, Debug)]
+pub struct OpEntry {
+    pub path: String,
+    pub batch: Option<usize>,
+    pub input_dims: Vec<usize>,
+    pub sketch_dims: Vec<usize>,
+    pub hashes: Vec<OpHash>,
+}
+
+/// One parameter tensor in a model's flat schema.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A trainable model variant (train + eval steps + init params).
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub head: String,
+    pub train: String,
+    pub eval: String,
+    /// serving entry point: predict(*params, x) -> (logits,)
+    pub predict: Option<String>,
+    pub init_params: String,
+    pub batch: usize,
+    pub img: Vec<usize>,
+    pub num_classes: usize,
+    pub param_schema: Vec<ParamSpec>,
+    pub head_param_count: usize,
+    pub total_param_count: usize,
+    pub sketch: Option<Vec<usize>>,
+    pub cts_c: Option<usize>,
+}
+
+impl ModelEntry {
+    /// Total parameter scalars (sum of schema shapes).
+    pub fn param_len(&self) -> usize {
+        self.param_schema.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub ops: BTreeMap<String, OpEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(|m| m.as_obj()) {
+            for (name, entry) in ms {
+                models.insert(name.clone(), Self::model_from_json(entry)?);
+            }
+        }
+        let mut ops = BTreeMap::new();
+        if let Some(os) = j.get("ops").and_then(|m| m.as_obj()) {
+            for (name, entry) in os {
+                ops.insert(name.clone(), Self::op_from_json(entry)?);
+            }
+        }
+        Ok(Self { dir, models, ops })
+    }
+
+    fn model_from_json(j: &Json) -> Result<ModelEntry> {
+        let str_field = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("model missing {k}"))?
+                .to_string())
+        };
+        let usize_field = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("model missing {k}"))
+        };
+        let param_schema = j
+            .get("param_schema")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("model missing param_schema"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|v| v.as_usize_vec())
+                        .ok_or_else(|| anyhow!("param missing shape"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelEntry {
+            head: str_field("head")?,
+            train: str_field("train")?,
+            eval: str_field("eval")?,
+            predict: j.get("predict").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            init_params: str_field("init_params")?,
+            batch: usize_field("batch")?,
+            img: j
+                .get("img")
+                .and_then(|v| v.as_usize_vec())
+                .ok_or_else(|| anyhow!("model missing img"))?,
+            num_classes: usize_field("num_classes")?,
+            param_schema,
+            head_param_count: usize_field("head_param_count")?,
+            total_param_count: usize_field("total_param_count")?,
+            sketch: j.get("sketch").and_then(|v| v.as_usize_vec()),
+            cts_c: j.get("cts_c").and_then(|v| v.as_usize()),
+        })
+    }
+
+    fn op_from_json(j: &Json) -> Result<OpEntry> {
+        Ok(OpEntry {
+            path: j
+                .get("path")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("op missing path"))?
+                .to_string(),
+            batch: j.get("batch").and_then(|v| v.as_usize()),
+            input_dims: j.get("input_dims").and_then(|v| v.as_usize_vec()).unwrap_or_default(),
+            sketch_dims: j
+                .get("sketch_dims")
+                .and_then(|v| v.as_usize_vec())
+                .ok_or_else(|| anyhow!("op missing sketch_dims"))?,
+            hashes: j
+                .get("hashes")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().map(OpHash::from_json).collect::<Result<Vec<_>>>())
+                .transpose()?
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Load a model's initial parameters as per-tensor f32 buffers.
+    pub fn load_init_params(&self, model: &str) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        let raw = std::fs::read(self.dir.join(&entry.init_params))?;
+        let expect = entry.param_len() * 4;
+        if raw.len() != expect {
+            bail!(
+                "param file {} has {} bytes, schema wants {}",
+                entry.init_params,
+                raw.len(),
+                expect
+            );
+        }
+        let mut out = Vec::with_capacity(entry.param_schema.len());
+        let mut off = 0usize;
+        for spec in &entry.param_schema {
+            let n = spec.len();
+            let mut buf = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &raw[(off + i) * 4..(off + i) * 4 + 4];
+                buf.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(buf);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(crate::runtime::DEFAULT_ARTIFACTS_DIR);
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.ops.contains_key("mts_sketch"));
+        assert!(m.ops.contains_key("kron_combine"));
+        assert!(!m.models.is_empty());
+        for (name, model) in &m.models {
+            assert!(model.batch > 0, "{name}");
+            assert!(!model.param_schema.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn op_hashes_cover_input_dims() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let op = &m.ops["mts_sketch"];
+        assert_eq!(op.hashes.len(), op.input_dims.len());
+        for (h, (&n, &mk)) in op
+            .hashes
+            .iter()
+            .zip(op.input_dims.iter().zip(op.sketch_dims.iter()))
+        {
+            assert_eq!(h.buckets.len(), n);
+            assert!(h.buckets.iter().all(|&b| b < mk));
+            assert!(h.signs.iter().all(|&s| s == 1.0 || s == -1.0));
+        }
+    }
+
+    #[test]
+    fn init_params_match_schema() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let name = m.models.keys().next().unwrap().clone();
+        let params = m.load_init_params(&name).unwrap();
+        let entry = &m.models[&name];
+        assert_eq!(params.len(), entry.param_schema.len());
+        for (buf, spec) in params.iter().zip(entry.param_schema.iter()) {
+            assert_eq!(buf.len(), spec.len(), "{}", spec.name);
+        }
+    }
+}

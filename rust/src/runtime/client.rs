@@ -1,0 +1,215 @@
+//! The PJRT execution wrapper: compile-once / execute-many over the AOT
+//! artifacts, with literal marshalling helpers.
+
+use super::artifacts::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Runtime = PJRT CPU client + executable cache + manifest.
+///
+/// Not `Send` (the underlying client is a C++ object confined to one
+/// thread); the coordinator owns one `Runtime` on its executor thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile + execute counters for the metrics endpoint
+    pub compiles: std::cell::Cell<u64>,
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compiles: std::cell::Cell::new(0),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact at
+    /// `rel_path` (relative to the artifacts dir).
+    pub fn load(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(rel_path) {
+            return Ok(exe.clone());
+        }
+        let full = self.manifest.dir.join(rel_path);
+        let full_str = full
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {full:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(full_str)
+            .map_err(|e| anyhow!("parsing HLO text {rel_path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {rel_path}: {e:?}"))?;
+        self.compiles.set(self.compiles.get() + 1);
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// flattened output tuple.
+    pub fn execute(
+        &self,
+        rel_path: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(rel_path)?;
+        self.execute_loaded(&exe, inputs)
+    }
+
+    /// Execute an already-loaded executable (the hot path: no cache
+    /// lookup, no path hashing).
+    pub fn execute_loaded(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.executions.set(self.executions.get() + 1);
+        let buffer = &result[0][0];
+        let lit = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True — always a tuple
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// literal marshalling
+// ---------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal_f32: {} vs {:?}", data.len(), dims);
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal_i32: {} vs {:?}", data.len(), dims);
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn literal_scalar_value(lit: &xla::Literal) -> Result<f32> {
+    let v = literal_to_f32(lit)?;
+    v.first().copied().context("empty literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn runtime() -> Option<Runtime> {
+        if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(crate::runtime::DEFAULT_ARTIFACTS_DIR).unwrap())
+    }
+
+    #[test]
+    fn mts_op_matches_manifest_hash_scatter() {
+        // The decisive integration test: the AOT Pallas kernel's output
+        // must equal a plain Rust scatter driven by the manifest hash
+        // tables — proving the L1↔L3 contract end to end.
+        let Some(rt) = runtime() else { return };
+        let op = rt.manifest().ops["mts_sketch"].clone();
+        let (n1, n2) = (op.input_dims[0], op.input_dims[1]);
+        let (m1, m2) = (op.sketch_dims[0], op.sketch_dims[1]);
+        let mut rng = Pcg64::new(7);
+        let x: Vec<f32> = (0..n1 * n2).map(|_| rng.normal() as f32).collect();
+        let lit = literal_f32(&x, &[n1, n2]).unwrap();
+        let out = rt.execute(&op.path, &[lit]).unwrap();
+        let got = literal_to_f32(&out[0]).unwrap();
+        assert_eq!(got.len(), m1 * m2);
+        // rust-side scatter with the exported hashes
+        let mut want = vec![0.0f64; m1 * m2];
+        for i in 0..n1 {
+            for j in 0..n2 {
+                let b = op.hashes[0].buckets[i] * m2 + op.hashes[1].buckets[j];
+                want[b] += op.hashes[0].signs[i]
+                    * op.hashes[1].signs[j]
+                    * x[i * n2 + j] as f64;
+            }
+        }
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((*g as f64 - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn kron_combine_op_matches_rust_fft() {
+        let Some(rt) = runtime() else { return };
+        let op = rt.manifest().ops["kron_combine"].clone();
+        let (m1, m2) = (op.sketch_dims[0], op.sketch_dims[1]);
+        let mut rng = Pcg64::new(8);
+        let a: Vec<f32> = (0..m1 * m2).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..m1 * m2).map(|_| rng.normal() as f32).collect();
+        let la = literal_f32(&a, &[m1, m2]).unwrap();
+        let lb = literal_f32(&b, &[m1, m2]).unwrap();
+        let out = rt.execute(&op.path, &[la, lb]).unwrap();
+        let got = literal_to_f32(&out[0]).unwrap();
+        let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let bf: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        let want = crate::fft::circular_convolve2(&af, &bf, m1, m2);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((*g as f64 - w).abs() < 1e-2, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        let op = rt.manifest().ops["kron_combine"].clone();
+        let _ = rt.load(&op.path).unwrap();
+        let before = rt.compiles.get();
+        let _ = rt.load(&op.path).unwrap();
+        assert_eq!(rt.compiles.get(), before, "second load must hit cache");
+    }
+}

@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + manifest.json + parameter binaries) and executes them on
+//! the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs here — the HLO text was lowered once at build time
+//! (`make artifacts`); this module is the entire request-path compute
+//! story:
+//!
+//! ```text
+//! HloModuleProto::from_text_file → XlaComputation → client.compile →
+//! executable cache → execute(literals) → decompose output tuple
+//! ```
+//!
+//! The PJRT client is not `Send`; the coordinator confines it to one
+//! executor thread (see [`crate::coordinator`]).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{Manifest, ModelEntry, OpEntry, OpHash};
+pub use client::Runtime;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True if the artifacts have been built (manifest present).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

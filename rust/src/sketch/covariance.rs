@@ -1,0 +1,311 @@
+//! Covariance matrix estimation (§4.2, Figure 9).
+//!
+//! Given `A ∈ ℝ^{n×r}`, two routes to `AAᵀ`:
+//!
+//! - [`PaghCovariance`] — the baseline: Pagh (2012) compressed matrix
+//!   multiplication. `CS(AAᵀ)` under the pair hash
+//!   `h(i,j) = h₁(i)+h₂(j) mod c`, computed as
+//!   `IFFT(Σ_k FFT(CS₁(A[:,k])) ∘ FFT(CS₂(Aᵀ[k,:])))`.
+//! - [`MtsCovariance`] — the paper's route: sketch `A ⊗ Aᵀ` with
+//!   [`super::kron::MtsKron`] and use
+//!   `(AAᵀ)_{ij} = Σ_k (A ⊗ Aᵀ)[r·i + k, n·k + j]` (0-based version of
+//!   the paper's identity) to read the covariance entries out of the
+//!   Kronecker sketch.
+//!
+//! Both support median-of-d estimation (the paper uses 300 repeats).
+
+use super::cs::CsSketcher;
+use super::kron::MtsKron;
+use crate::fft::{self, Complex, Direction};
+use crate::hash::HashSeeds;
+use crate::tensor::Tensor;
+use crate::util::stats::median_inplace;
+
+/// Pagh compressed-matrix-multiplication sketch of `A·Aᵀ`.
+#[derive(Clone, Debug)]
+pub struct PaghCovariance {
+    pub n: usize,
+    pub r: usize,
+    pub c: usize,
+    cs_row: CsSketcher,
+    cs_col: CsSketcher,
+}
+
+impl PaghCovariance {
+    pub fn new(n: usize, r: usize, c: usize, seed: u64) -> Self {
+        Self::with_repeat(n, r, c, seed, 0)
+    }
+
+    pub fn with_repeat(n: usize, r: usize, c: usize, seed: u64, repeat: usize) -> Self {
+        let seeds = HashSeeds::new(seed);
+        Self {
+            n,
+            r,
+            c,
+            cs_row: CsSketcher::new(n, c, seeds.seed_for(repeat, 0)),
+            cs_col: CsSketcher::new(n, c, seeds.seed_for(repeat, 1)),
+        }
+    }
+
+    /// Compression ratio n²/c.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.n * self.n) as f64 / self.c as f64
+    }
+
+    /// `CS(AAᵀ) = IFFT(Σ_k FFT(CS₁(A[:,k])) ∘ FFT(CS₂(A[:,k])))`.
+    pub fn sketch(&self, a: &Tensor) -> Vec<f64> {
+        assert_eq!(a.dims(), &[self.n, self.r]);
+        let mut acc = vec![Complex::ZERO; self.c];
+        for k in 0..self.r {
+            let col = a.col(k);
+            let f1 = fft::fft_real(&self.cs_row.sketch(&col));
+            let f2 = fft::fft_real(&self.cs_col.sketch(&col));
+            for ((x, y), z) in f1.iter().zip(f2.iter()).zip(acc.iter_mut()) {
+                *z += *x * *y;
+            }
+        }
+        fft::plan(self.c).transform(&mut acc, Direction::Inverse);
+        acc.into_iter().map(|v| v.re).collect()
+    }
+
+    /// Estimate `(AAᵀ)[i, j]`.
+    #[inline]
+    pub fn estimate(&self, sk: &[f64], i: usize, j: usize) -> f64 {
+        let b = (self.cs_row.h(i) + self.cs_col.h(j)) % self.c;
+        self.cs_row.s(i) * self.cs_col.s(j) * sk[b]
+    }
+
+    /// Full `n×n` reconstruction.
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        let mut out = Tensor::zeros(&[self.n, self.n]);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out.set(&[i, j], self.estimate(sk, i, j));
+            }
+        }
+        out
+    }
+}
+
+/// Covariance through the MTS-sketched Kronecker product `A ⊗ Aᵀ`.
+#[derive(Clone, Debug)]
+pub struct MtsCovariance {
+    pub n: usize,
+    pub r: usize,
+    kron: MtsKron,
+}
+
+impl MtsCovariance {
+    pub fn new(n: usize, r: usize, m1: usize, m2: usize, seed: u64) -> Self {
+        Self::with_repeat(n, r, m1, m2, seed, 0)
+    }
+
+    pub fn with_repeat(n: usize, r: usize, m1: usize, m2: usize, seed: u64, repeat: usize) -> Self {
+        Self { n, r, kron: MtsKron::with_repeat(&[n, r], &[r, n], m1, m2, seed, repeat) }
+    }
+
+    /// Compression ratio (n·r)²/(m1·m2) — the Kronecker product this
+    /// sketch stands in for is (nr)×(rn).
+    pub fn compression_ratio(&self) -> f64 {
+        self.kron.compression_ratio()
+    }
+
+    /// Sketch `A ⊗ Aᵀ` (never materialized).
+    pub fn sketch(&self, a: &Tensor) -> Tensor {
+        assert_eq!(a.dims(), &[self.n, self.r]);
+        self.kron.compress(a, &a.transpose())
+    }
+
+    /// Estimate a single Kronecker entry `(A⊗Aᵀ)[ri+k, nk+j]
+    /// = A[i,k]·Aᵀ[k,j]`.
+    #[inline]
+    pub fn estimate_kron_entry(&self, sk: &Tensor, i: usize, k: usize, j: usize) -> f64 {
+        // A is the left operand with dims [n, r]; Aᵀ right with [r, n].
+        // (A⊗Aᵀ)[r·i + k, n·k + j] ↔ kron index (p=i, h=k, q=k, g=j)
+        self.kron.estimate(sk, i, k, k, j)
+    }
+
+    /// Estimate `(AAᵀ)[i,j] = Σ_k (A⊗Aᵀ)[r·i+k, n·k+j]`.
+    pub fn estimate(&self, sk: &Tensor, i: usize, j: usize) -> f64 {
+        (0..self.r).map(|k| self.estimate_kron_entry(sk, i, k, j)).sum()
+    }
+
+    /// Full `n×n` covariance reconstruction.
+    pub fn decompress(&self, sk: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(&[self.n, self.n]);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out.set(&[i, j], self.estimate(sk, i, j));
+            }
+        }
+        out
+    }
+}
+
+/// Median-of-d covariance estimation, the protocol of Fig. 9 (paper uses
+/// d = 300): run `d` independent sketches, take the entrywise median.
+pub fn covariance_median_mts(
+    a: &Tensor,
+    m1: usize,
+    m2: usize,
+    d: usize,
+    seed: u64,
+) -> Tensor {
+    let n = a.dims()[0];
+    let r = a.dims()[1];
+    let mut samples = vec![vec![0.0f64; d]; n * n];
+    for rep in 0..d {
+        let cov = MtsCovariance::with_repeat(n, r, m1, m2, seed, rep);
+        let sk = cov.sketch(a);
+        for i in 0..n {
+            for j in 0..n {
+                samples[i * n + j][rep] = cov.estimate(&sk, i, j);
+            }
+        }
+    }
+    let mut out = Tensor::zeros(&[n, n]);
+    for (cell, s) in out.data_mut().iter_mut().zip(samples.iter_mut()) {
+        *cell = median_inplace(s);
+    }
+    out
+}
+
+/// Median-of-d covariance estimation through the Pagh baseline.
+pub fn covariance_median_pagh(a: &Tensor, c: usize, d: usize, seed: u64) -> Tensor {
+    let n = a.dims()[0];
+    let r = a.dims()[1];
+    let mut samples = vec![vec![0.0f64; d]; n * n];
+    for rep in 0..d {
+        let cov = PaghCovariance::with_repeat(n, r, c, seed, rep);
+        let sk = cov.sketch(a);
+        for i in 0..n {
+            for j in 0..n {
+                samples[i * n + j][rep] = cov.estimate(&sk, i, j);
+            }
+        }
+    }
+    let mut out = Tensor::zeros(&[n, n]);
+    for (cell, s) in out.data_mut().iter_mut().zip(samples.iter_mut()) {
+        *cell = median_inplace(s);
+    }
+    out
+}
+
+/// The paper's Fig. 9 input: `A ∈ ℝ^{10×10}` uniform on [-1, 1] except
+/// rows 2 and 9 (1-based) which are positively correlated.
+pub fn figure9_matrix(rng: &mut crate::rng::Pcg64) -> Tensor {
+    let mut a = Tensor::rand_uniform(&[10, 10], -1.0, 1.0, rng);
+    // 1-based rows 2 and 9 → 0-based 1 and 8: row 8 = row 1 + small noise
+    for j in 0..10 {
+        let v = a.at2(1, j) + 0.1 * rng.normal();
+        a.set(&[8, j], v);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::{kron, rel_error};
+    use crate::util::stats::{mean, variance};
+
+    #[test]
+    fn pagh_sketch_matches_direct_pair_hash() {
+        let mut rng = Pcg64::new(1);
+        let a = Tensor::randn(&[6, 4], &mut rng);
+        let cov = PaghCovariance::new(6, 4, 8, 3);
+        let sk = cov.sketch(&a);
+        // direct: scatter (AAᵀ)_ij
+        let aat = a.matmul(&a.transpose());
+        let mut direct = vec![0.0; 8];
+        for i in 0..6 {
+            for j in 0..6 {
+                direct[(cov.cs_row.h(i) + cov.cs_col.h(j)) % 8] +=
+                    cov.cs_row.s(i) * cov.cs_col.s(j) * aat.at2(i, j);
+            }
+        }
+        for (x, y) in sk.iter().zip(direct.iter()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pagh_estimate_unbiased() {
+        let mut rng = Pcg64::new(2);
+        let a = Tensor::randn(&[5, 3], &mut rng);
+        let truth = a.matmul(&a.transpose()).at2(1, 3);
+        let reps = 3000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let cov = PaghCovariance::with_repeat(5, 3, 6, 77, rep);
+                cov.estimate(&cov.sketch(&a), 1, 3)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn mts_kron_entry_identity() {
+        // the summation identity (AAᵀ)_ij = Σ_k (A⊗Aᵀ)[ri+k, nk+j]
+        // holds exactly on the dense Kronecker product
+        let mut rng = Pcg64::new(3);
+        let (n, r) = (4usize, 3usize);
+        let a = Tensor::randn(&[n, r], &mut rng);
+        let kp = kron(&a, &a.transpose());
+        let aat = a.matmul(&a.transpose());
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..r {
+                    acc += kp.at2(r * i + k, n * k + j);
+                }
+                assert!((acc - aat.at2(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn mts_covariance_unbiased() {
+        let mut rng = Pcg64::new(4);
+        let a = Tensor::randn(&[5, 3], &mut rng);
+        let truth = a.matmul(&a.transpose()).at2(2, 4);
+        let reps = 3000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let cov = MtsCovariance::with_repeat(5, 3, 6, 6, 13, rep);
+                cov.estimate(&cov.sketch(&a), 2, 4)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.03), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn median_estimation_beats_single_sketch() {
+        let mut rng = Pcg64::new(5);
+        let a = figure9_matrix(&mut rng);
+        let aat = a.matmul(&a.transpose());
+        let single = {
+            let cov = MtsCovariance::new(10, 10, 8, 8, 9);
+            cov.decompress(&cov.sketch(&a))
+        };
+        let med = covariance_median_mts(&a, 8, 8, 31, 9);
+        let e_single = rel_error(&aat, &single);
+        let e_med = rel_error(&aat, &med);
+        assert!(e_med < e_single, "median {e_med} vs single {e_single}");
+    }
+
+    #[test]
+    fn figure9_matrix_rows_correlated() {
+        let mut rng = Pcg64::new(6);
+        let a = figure9_matrix(&mut rng);
+        let r1: Vec<f64> = (0..10).map(|j| a.at2(1, j)).collect();
+        let r8: Vec<f64> = (0..10).map(|j| a.at2(8, j)).collect();
+        let corr = crate::util::stats::correlation(&r1, &r8);
+        assert!(corr > 0.9, "rows 2/9 should be strongly correlated, corr={corr}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Sketching CP-form tensors (§3.1 REMARKS): CP is the diagonal-core
+//! special case of Tucker, so both sketchers delegate to the Tucker
+//! machinery but exploit the r-sparse core — the summation over the core
+//! touches r terms instead of r^N, giving the Table 4/5 CP rows
+//! (and the O(r) improvement in the overcomplete regime r > n).
+
+use super::tucker::{CtsTucker, MtsTucker};
+use crate::decomp::CpTensor;
+use crate::fft::{self, Complex, Direction};
+use crate::tensor::Tensor;
+
+/// CTS of a CP-form tensor: `CTS(T) = Σ_{i=1}^r λ_i · CS(U_i) * CS(V_i) * …`
+#[derive(Clone, Debug)]
+pub struct CtsCp {
+    inner: CtsTucker,
+}
+
+impl CtsCp {
+    pub fn new(dims: &[usize], c: usize, seed: u64) -> Self {
+        Self { inner: CtsTucker::new(dims, c, seed) }
+    }
+
+    pub fn with_repeat(dims: &[usize], c: usize, seed: u64, repeat: usize) -> Self {
+        Self { inner: CtsTucker::with_repeat(dims, c, seed, repeat) }
+    }
+
+    /// Sketch from the CP form: r convolution terms (not r³).
+    pub fn sketch(&self, t: &CpTensor) -> Vec<f64> {
+        assert_eq!(t.dims(), self.inner.dims, "CP dims mismatch");
+        let c = self.inner.c;
+        let n_modes = self.inner.dims.len();
+        let mut acc = vec![Complex::ZERO; c];
+        for (i, &w) in t.weights.iter().enumerate() {
+            // ∏_k FFT(CS(U_k[:, i])) accumulated per frequency
+            let mut term: Vec<Complex> = vec![Complex::new(w, 0.0); c];
+            for k in 0..n_modes {
+                let mode = &self.inner.modes[k];
+                let mut cs = vec![0.0; c];
+                for row in 0..self.inner.dims[k] {
+                    cs[mode.h(row)] += mode.s(row) * t.factors[k].at2(row, i);
+                }
+                let f = fft::fft_real(&cs);
+                for (t_, x) in term.iter_mut().zip(f.iter()) {
+                    *t_ = *t_ * *x;
+                }
+            }
+            for (a, t_) in acc.iter_mut().zip(term.iter()) {
+                *a += *t_;
+            }
+        }
+        fft::plan(c).transform(&mut acc, Direction::Inverse);
+        acc.into_iter().map(|x| x.re).collect()
+    }
+
+    pub fn estimate(&self, sk: &[f64], idx: &[usize]) -> f64 {
+        self.inner.estimate(sk, idx)
+    }
+
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        self.inner.decompress(sk)
+    }
+}
+
+/// MTS of a CP-form tensor: identical to [`MtsTucker`] except the core
+/// sketch iterates the r diagonal entries only.
+#[derive(Clone, Debug)]
+pub struct MtsCp {
+    inner: MtsTucker,
+}
+
+impl MtsCp {
+    pub fn new(dims: &[usize], rank: usize, m1: usize, m2: usize, seed: u64) -> Self {
+        let ranks = vec![rank; dims.len()];
+        Self { inner: MtsTucker::new(dims, &ranks, m1, m2, seed) }
+    }
+
+    pub fn with_repeat(
+        dims: &[usize],
+        rank: usize,
+        m1: usize,
+        m2: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        let ranks = vec![rank; dims.len()];
+        Self { inner: MtsTucker::with_repeat(dims, &ranks, m1, m2, seed, repeat) }
+    }
+
+    pub fn sketch(&self, t: &CpTensor) -> Vec<f64> {
+        assert_eq!(t.dims(), self.inner.dims, "CP dims mismatch");
+        assert_eq!(t.rank(), self.inner.ranks[0], "CP rank mismatch");
+        // 1. factor Kronecker sketch in frequency domain (as Tucker)
+        let mut freq: Option<Vec<Complex>> = None;
+        for (k, f) in t.factors.iter().enumerate() {
+            let sk = self.inner.factor_sk[k].sketch(f);
+            let fa = fft::fft2_real(sk.data(), self.inner.m1, self.inner.m2);
+            freq = Some(match freq {
+                None => fa,
+                Some(mut acc) => {
+                    for (a, b) in acc.iter_mut().zip(fa.iter()) {
+                        *a = *a * *b;
+                    }
+                    acc
+                }
+            });
+        }
+        let kron_sketch =
+            fft::ifft2_to_real(freq.unwrap(), self.inner.m1, self.inner.m2);
+
+        // 2. diagonal core CS: r terms
+        let mut csg = vec![0.0; self.inner.m2];
+        let n_modes = self.inner.dims.len();
+        for (i, &w) in t.weights.iter().enumerate() {
+            let mut bucket = 0usize;
+            let mut sign = 1.0;
+            for k in 0..n_modes {
+                let mode = self.inner.factor_sk[k].mode(1);
+                bucket += mode.h(i);
+                sign *= mode.s(i);
+            }
+            csg[bucket % self.inner.m2] += sign * w;
+        }
+
+        // 3. collapse m2
+        let mut out = vec![0.0; self.inner.m1];
+        for (t1, o) in out.iter_mut().enumerate() {
+            let row = &kron_sketch[t1 * self.inner.m2..(t1 + 1) * self.inner.m2];
+            *o = row.iter().zip(csg.iter()).map(|(x, g)| x * g).sum();
+        }
+        out
+    }
+
+    pub fn estimate(&self, sk: &[f64], idx: &[usize]) -> f64 {
+        self.inner.estimate(sk, idx)
+    }
+
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        self.inner.decompress(sk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::{mean, variance};
+
+    fn small_cp(seed: u64, dims: &[usize], r: usize) -> CpTensor {
+        let mut rng = Pcg64::new(seed);
+        CpTensor::random(dims, r, &mut rng)
+    }
+
+    #[test]
+    fn cts_cp_matches_tucker_path_on_diagonal_core() {
+        let cp = small_cp(1, &[5, 5, 5], 3);
+        let cts_cp = CtsCp::new(&[5, 5, 5], 16, 42);
+        let via_cp = cts_cp.sketch(&cp);
+        let via_tucker = cts_cp.inner.sketch(&cp.to_tucker());
+        for (a, b) in via_cp.iter().zip(via_tucker.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mts_cp_matches_tucker_path_on_diagonal_core() {
+        let cp = small_cp(2, &[5, 5, 5], 3);
+        let mts_cp = MtsCp::new(&[5, 5, 5], 3, 8, 8, 7);
+        let via_cp = mts_cp.sketch(&cp);
+        let via_tucker = mts_cp.inner.sketch(&cp.to_tucker());
+        for (a, b) in via_cp.iter().zip(via_tucker.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cp_estimates_unbiased() {
+        let cp = small_cp(3, &[6, 6, 6], 2);
+        let dense = cp.reconstruct();
+        let target = [2usize, 5, 1];
+        let truth = dense.get(&target);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let s = MtsCp::with_repeat(&[6, 6, 6], 2, 8, 8, 31, rep);
+                s.estimate(&s.sketch(&cp), &target)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn overcomplete_cp_sketches_fine() {
+        // r > n regime the paper highlights (O(r) improvement)
+        let cp = small_cp(4, &[4, 4, 4], 10);
+        let cts = CtsCp::new(&[4, 4, 4], 32, 9);
+        let mts = MtsCp::new(&[4, 4, 4], 10, 16, 16, 9);
+        assert_eq!(cts.sketch(&cp).len(), 32);
+        assert_eq!(mts.sketch(&cp).len(), 16);
+    }
+}

@@ -1,0 +1,208 @@
+//! Count sketch of vectors (Charikar et al. 2002, paper Algorithm 1) and
+//! Pagh's FFT outer-product sketch (paper Eq. 2):
+//! `CS(u ⊗ v) = CS(u) * CS(v)`.
+
+use crate::fft::circular_convolve;
+use crate::hash::ModeHash;
+
+/// Count sketch of length-`n` vectors into `c` buckets.
+///
+/// Holds the materialized `(h, s)` tables so the hot loop is two array
+/// lookups per element.
+#[derive(Clone, Debug)]
+pub struct CsSketcher {
+    pub n: usize,
+    pub c: usize,
+    buckets: Vec<u32>,
+    signs: Vec<f64>,
+}
+
+impl CsSketcher {
+    pub fn new(n: usize, c: usize, seed: u64) -> Self {
+        let mh = ModeHash::new(n, c, seed);
+        Self { n, c, buckets: mh.bucket_table(), signs: mh.sign_table() }
+    }
+
+    #[inline]
+    pub fn h(&self, i: usize) -> usize {
+        self.buckets[i] as usize
+    }
+
+    #[inline]
+    pub fn s(&self, i: usize) -> f64 {
+        self.signs[i]
+    }
+
+    /// `CS(x)`: y[h(i)] += s(i)·x[i].
+    pub fn sketch(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n, "input length {} != n {}", x.len(), self.n);
+        let mut y = vec![0.0; self.c];
+        for (i, &v) in x.iter().enumerate() {
+            y[self.buckets[i] as usize] += self.signs[i] * v;
+        }
+        y
+    }
+
+    /// Point estimate `x̂[i] = s(i)·y[h(i)]` (unbiased, Thm B.2).
+    #[inline]
+    pub fn estimate(&self, y: &[f64], i: usize) -> f64 {
+        debug_assert_eq!(y.len(), self.c);
+        self.signs[i] * y[self.buckets[i] as usize]
+    }
+
+    /// Full decompression (Algorithm 1, CS-Decompress).
+    pub fn decompress(&self, y: &[f64]) -> Vec<f64> {
+        (0..self.n).map(|i| self.estimate(y, i)).collect()
+    }
+}
+
+/// Pagh's outer-product sketch: `CS(u ⊗ v) = CS_u(u) * CS_v(v)` where `*`
+/// is circular convolution, computed via FFT in O(n + c log c).
+///
+/// The combined sketch estimates `(u⊗v)[i,j]` with hash
+/// `h(i,j) = (h_u(i) + h_v(j)) mod c` and sign `s_u(i)·s_v(j)`.
+pub fn sketch_outer_product(su: &CsSketcher, sv: &CsSketcher, u: &[f64], v: &[f64]) -> Vec<f64> {
+    assert_eq!(su.c, sv.c, "outer-product sketches must share c");
+    circular_convolve(&su.sketch(u), &sv.sketch(v))
+}
+
+/// Estimate `(u⊗v)[i,j]` from a combined outer-product sketch.
+#[inline]
+pub fn estimate_outer_entry(
+    su: &CsSketcher,
+    sv: &CsSketcher,
+    sketch: &[f64],
+    i: usize,
+    j: usize,
+) -> f64 {
+    let k = (su.h(i) + sv.h(j)) % su.c;
+    su.s(i) * sv.s(j) * sketch[k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::{mean, variance};
+
+    #[test]
+    fn sketch_preserves_mass_signs() {
+        // a single nonzero is recovered exactly
+        let cs = CsSketcher::new(100, 10, 1);
+        let mut x = vec![0.0; 100];
+        x[37] = 3.5;
+        let y = cs.sketch(&x);
+        assert!((cs.estimate(&y, 37) - 3.5).abs() < 1e-12);
+        // total sketch energy equals input energy for a 1-sparse input
+        let e: f64 = y.iter().map(|v| v * v).sum();
+        assert!((e - 3.5 * 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_is_unbiased() {
+        // E[x̂_i] = x_i across independent sketches
+        let n = 64;
+        let mut rng = Pcg64::new(2);
+        let x = rng.normal_vec(n);
+        let i = 17;
+        let reps = 4000;
+        let mut est = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let cs = CsSketcher::new(n, 8, 1000 + rep as u64);
+            let y = cs.sketch(&x);
+            est.push(cs.estimate(&y, i));
+        }
+        let m = mean(&est);
+        // stderr ≈ sqrt(‖x‖²/c / reps)
+        let norm_sq: f64 = x.iter().map(|v| v * v).sum();
+        let stderr = (norm_sq / 8.0 / reps as f64).sqrt();
+        assert!(
+            (m - x[i]).abs() < 4.0 * stderr,
+            "mean {m} vs true {} (stderr {stderr})",
+            x[i]
+        );
+    }
+
+    #[test]
+    fn variance_bounded_by_theorem_b2() {
+        // Var[x̂_i] ≤ ‖x‖²/c
+        let n = 64;
+        let c = 16;
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec(n);
+        let norm_sq: f64 = x.iter().map(|v| v * v).sum();
+        let i = 5;
+        let reps = 4000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let cs = CsSketcher::new(n, c, 5000 + rep as u64);
+                cs.estimate(&cs.sketch(&x), i)
+            })
+            .collect();
+        let v = variance(&est);
+        let bound = norm_sq / c as f64;
+        // allow sampling slack
+        assert!(v < bound * 1.3, "empirical var {v} exceeds bound {bound}");
+    }
+
+    #[test]
+    fn decompress_shape_and_identity_regime() {
+        // with c >= n and injective-ish hashing, most entries recover well;
+        // at minimum the decompressed vector has the right length
+        let cs = CsSketcher::new(16, 64, 4);
+        let mut rng = Pcg64::new(4);
+        let x = rng.normal_vec(16);
+        let xhat = cs.decompress(&cs.sketch(&x));
+        assert_eq!(xhat.len(), 16);
+    }
+
+    #[test]
+    fn outer_product_sketch_matches_direct_sketch() {
+        // Pagh Eq. 2: sketching the outer product directly with the pair
+        // hash equals convolving the two sketches.
+        let (nu, nv, c) = (12, 9, 16);
+        let su = CsSketcher::new(nu, c, 10);
+        let sv = CsSketcher::new(nv, c, 11);
+        let mut rng = Pcg64::new(5);
+        let u = rng.normal_vec(nu);
+        let v = rng.normal_vec(nv);
+        let combined = sketch_outer_product(&su, &sv, &u, &v);
+        // direct: scatter u_i v_j at (h_u(i)+h_v(j)) mod c with sign product
+        let mut direct = vec![0.0; c];
+        for i in 0..nu {
+            for j in 0..nv {
+                direct[(su.h(i) + sv.h(j)) % c] += su.s(i) * sv.s(j) * u[i] * v[j];
+            }
+        }
+        for k in 0..c {
+            assert!((combined[k] - direct[k]).abs() < 1e-9, "bucket {k}");
+        }
+    }
+
+    #[test]
+    fn outer_entry_estimates_unbiased() {
+        let (nu, nv, c) = (10, 10, 12);
+        let mut rng = Pcg64::new(6);
+        let u = rng.normal_vec(nu);
+        let v = rng.normal_vec(nv);
+        let truth = u[3] * v[7];
+        let reps = 3000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let su = CsSketcher::new(nu, c, 100 + 2 * rep as u64);
+                let sv = CsSketcher::new(nv, c, 101 + 2 * rep as u64);
+                let sk = sketch_outer_product(&su, &sv, &u, &v);
+                estimate_outer_entry(&su, &sv, &sk, 3, 7)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.01), "{m} vs {truth}");
+    }
+
+    #[test]
+    #[should_panic(expected = "input length")]
+    fn wrong_length_panics() {
+        CsSketcher::new(8, 4, 0).sketch(&[1.0; 9]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Count-based tensor sketch (CTS) — the vector-space baseline the paper
+//! compares against (§2.2, Algorithm 2): apply count sketch to every
+//! fibre of the tensor along one mode, sharing the hash functions across
+//! fibres. "The disadvantage is the ignorance of the connections between
+//! fibres."
+
+use super::cs::CsSketcher;
+use crate::tensor::Tensor;
+
+/// CTS: count-sketches the fibres along `mode` (default: last mode) from
+/// length `n_mode` into `c` buckets; all other modes pass through.
+#[derive(Clone, Debug)]
+pub struct CtsSketcher {
+    pub dims: Vec<usize>,
+    pub mode: usize,
+    pub c: usize,
+    cs: CsSketcher,
+}
+
+impl CtsSketcher {
+    pub fn new(dims: &[usize], mode: usize, c: usize, seed: u64) -> Self {
+        assert!(mode < dims.len(), "mode {mode} out of range");
+        let cs = CsSketcher::new(dims[mode], c, seed);
+        Self { dims: dims.to_vec(), mode, c, cs }
+    }
+
+    /// Convenience: sketch along the last mode.
+    pub fn new_last_mode(dims: &[usize], c: usize, seed: u64) -> Self {
+        Self::new(dims, dims.len() - 1, c, seed)
+    }
+
+    /// Output dims: same as input with `dims[mode]` replaced by `c`.
+    pub fn sketch_dims(&self) -> Vec<usize> {
+        let mut d = self.dims.clone();
+        d[self.mode] = self.c;
+        d
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dims[self.mode] as f64 / self.c as f64
+    }
+
+    /// Sketch every fibre along `mode` with the shared CS.
+    pub fn sketch(&self, t: &Tensor) -> Tensor {
+        assert_eq!(t.dims(), self.dims.as_slice(), "tensor dims mismatch");
+        let unf = t.unfold(self.mode); // n_mode × rest
+        let rest = unf.dims()[1];
+        let n = self.dims[self.mode];
+        let mut out_unf = Tensor::zeros(&[self.c, rest]);
+        {
+            let src = unf.data();
+            let dst = out_unf.data_mut();
+            for i in 0..n {
+                let b = self.cs.h(i);
+                let s = self.cs.s(i);
+                let srow = &src[i * rest..(i + 1) * rest];
+                let drow = &mut dst[b * rest..(b + 1) * rest];
+                for (d, &x) in drow.iter_mut().zip(srow.iter()) {
+                    *d += s * x;
+                }
+            }
+        }
+        Tensor::fold(&out_unf, self.mode, &self.sketch_dims())
+    }
+
+    /// Point estimate of `t[idx]`.
+    pub fn estimate(&self, sk: &Tensor, idx: &[usize]) -> f64 {
+        let mut sidx = idx.to_vec();
+        let i = idx[self.mode];
+        sidx[self.mode] = self.cs.h(i);
+        self.cs.s(i) * sk.get(&sidx)
+    }
+
+    /// Full decompression (Algorithm 2, CTS-Decompress).
+    pub fn decompress(&self, sk: &Tensor) -> Tensor {
+        assert_eq!(sk.dims(), self.sketch_dims().as_slice());
+        let unf = sk.unfold(self.mode); // c × rest
+        let rest = unf.dims()[1];
+        let n = self.dims[self.mode];
+        let mut out_unf = Tensor::zeros(&[n, rest]);
+        {
+            let src = unf.data();
+            let dst = out_unf.data_mut();
+            for i in 0..n {
+                let b = self.cs.h(i);
+                let s = self.cs.s(i);
+                let srow = &src[b * rest..(b + 1) * rest];
+                let drow = &mut dst[i * rest..(i + 1) * rest];
+                for (d, &x) in drow.iter_mut().zip(srow.iter()) {
+                    *d = s * x;
+                }
+            }
+        }
+        Tensor::fold(&out_unf, self.mode, &self.dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn sketch_dims_and_ratio() {
+        let cts = CtsSketcher::new(&[10, 20, 30], 2, 6, 1);
+        assert_eq!(cts.sketch_dims(), vec![10, 20, 6]);
+        assert!((cts.compression_ratio() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_per_fibre_cs() {
+        // CTS(T) fibre-by-fibre equals CS applied to each fibre
+        let dims = [3usize, 4, 7];
+        let mut rng = Pcg64::new(2);
+        let t = Tensor::randn(&dims, &mut rng);
+        let cts = CtsSketcher::new(&dims, 2, 4, 5);
+        let sk = cts.sketch(&t);
+        let cs = CsSketcher::new(7, 4, 5);
+        for i in 0..3 {
+            for j in 0..4 {
+                let fibre: Vec<f64> = (0..7).map(|k| t.get(&[i, j, k])).collect();
+                let want = cs.sketch(&fibre);
+                for (k, &w) in want.iter().enumerate() {
+                    assert!((sk.get(&[i, j, k]) - w).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_along_each_mode() {
+        let dims = [4usize, 5, 6];
+        let mut rng = Pcg64::new(3);
+        let t = Tensor::randn(&dims, &mut rng);
+        for mode in 0..3 {
+            let cts = CtsSketcher::new(&dims, mode, 3, 7);
+            let sk = cts.sketch(&t);
+            let mut want = dims.to_vec();
+            want[mode] = 3;
+            assert_eq!(sk.dims(), want.as_slice());
+            let rec = cts.decompress(&sk);
+            assert_eq!(rec.dims(), dims.as_slice());
+        }
+    }
+
+    #[test]
+    fn unbiased_pointwise() {
+        let dims = [5usize, 16];
+        let mut rng = Pcg64::new(4);
+        let t = Tensor::randn(&dims, &mut rng);
+        let target = [2usize, 9];
+        let truth = t.get(&target);
+        let reps = 4000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let cts = CtsSketcher::new(&dims, 1, 4, 900 + rep as u64);
+                cts.estimate(&cts.sketch(&t), &target)
+            })
+            .collect();
+        let m = mean(&est);
+        // per-fibre variance bound: ‖fibre‖²/c
+        let fibre_norm_sq: f64 = (0..16).map(|j| t.get(&[2, j]).powi(2)).sum();
+        let stderr = (fibre_norm_sq / 4.0 / reps as f64).sqrt();
+        assert!((m - truth).abs() < 4.5 * stderr, "{m} vs {truth}");
+    }
+
+    #[test]
+    fn decompress_matches_estimate() {
+        let dims = [4usize, 6];
+        let mut rng = Pcg64::new(5);
+        let t = Tensor::randn(&dims, &mut rng);
+        let cts = CtsSketcher::new_last_mode(&dims, 3, 11);
+        let sk = cts.sketch(&t);
+        let rec = cts.decompress(&sk);
+        for i in 0..4 {
+            for j in 0..6 {
+                assert!((rec.get(&[i, j]) - cts.estimate(&sk, &[i, j])).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn one_sparse_fibre_exact() {
+        let dims = [2usize, 10];
+        let mut t = Tensor::zeros(&dims);
+        t.set(&[1, 4], 9.5);
+        let cts = CtsSketcher::new_last_mode(&dims, 5, 3);
+        let rec = cts.decompress(&cts.sketch(&t));
+        assert!((rec.get(&[1, 4]) - 9.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! Median-of-d robust estimation (§2.2: "the estimation can be made more
+//! robust by taking d independent sketches … and calculate the median of
+//! the d estimators"; the Chebyshev + median amplification step of every
+//! recovery theorem in the paper).
+
+use crate::tensor::Tensor;
+use crate::util::stats::median_inplace;
+
+/// Median of `d` scalar estimates produced by `f(rep)`.
+pub fn median_of_d(d: usize, mut f: impl FnMut(usize) -> f64) -> f64 {
+    assert!(d > 0);
+    let mut xs: Vec<f64> = (0..d).map(&mut f).collect();
+    median_inplace(&mut xs)
+}
+
+/// Entry-wise median of `d` full decompressions produced by `f(rep)`.
+pub fn median_decompress(d: usize, mut f: impl FnMut(usize) -> Tensor) -> Tensor {
+    assert!(d > 0);
+    let first = f(0);
+    let dims = first.dims().to_vec();
+    let len = first.len();
+    let mut cols: Vec<Vec<f64>> = vec![Vec::with_capacity(d); len];
+    for (i, &v) in first.data().iter().enumerate() {
+        cols[i].push(v);
+    }
+    for rep in 1..d {
+        let t = f(rep);
+        assert_eq!(t.dims(), dims.as_slice(), "decompression {rep} changed shape");
+        for (i, &v) in t.data().iter().enumerate() {
+            cols[i].push(v);
+        }
+    }
+    let data: Vec<f64> = cols.iter_mut().map(|c| median_inplace(c)).collect();
+    Tensor::from_vec(data, &dims)
+}
+
+/// Number of repeats the theory asks for to achieve failure probability
+/// δ: d = Ω(log(1/δ)). A concrete constant: ⌈4.5 · ln(1/δ)⌉, made odd.
+pub fn repeats_for_confidence(delta: f64) -> usize {
+    assert!((0.0..1.0).contains(&delta) && delta > 0.0);
+    let d = (4.5 * (1.0 / delta).ln()).ceil() as usize;
+    if d % 2 == 0 {
+        d + 1
+    } else {
+        d.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sketch::mts::MtsSketcher;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn median_of_d_suppresses_outliers() {
+        let vals = [1.0, 1.1, 0.9, 100.0, 1.05];
+        let m = median_of_d(5, |i| vals[i]);
+        assert!((m - 1.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_decompress_improves_mts_recovery() {
+        let dims = [10usize, 10];
+        let mut rng = Pcg64::new(1);
+        let t = Tensor::randn(&dims, &mut rng);
+        let single = {
+            let sk = MtsSketcher::with_repeat(&dims, &[6, 6], 5, 0);
+            sk.decompress(&sk.sketch(&t))
+        };
+        let med = median_decompress(9, |rep| {
+            let sk = MtsSketcher::with_repeat(&dims, &[6, 6], 5, rep);
+            sk.decompress(&sk.sketch(&t))
+        });
+        let e1 = rel_error(&t, &single);
+        let e9 = rel_error(&t, &med);
+        assert!(e9 < e1, "median-of-9 {e9} should beat single {e1}");
+    }
+
+    #[test]
+    fn repeats_for_confidence_monotone() {
+        let d1 = repeats_for_confidence(0.1);
+        let d2 = repeats_for_confidence(0.01);
+        let d3 = repeats_for_confidence(0.001);
+        assert!(d1 <= d2 && d2 <= d3);
+        assert!(d1 % 2 == 1 && d2 % 2 == 1 && d3 % 2 == 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_repeats_panics() {
+        median_of_d(0, |_| 0.0);
+    }
+}

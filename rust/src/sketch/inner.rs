@@ -1,0 +1,110 @@
+//! Inner products in sketch space: `⟨MTS(X), MTS(Y)⟩` is an unbiased
+//! estimator of `⟨X, Y⟩` when both sketches share hashes — the
+//! multi-dimensional analogue of the AMS/count-sketch inner-product
+//! property, and the reason the sketched tensor-regression layer works
+//! (`⟨W, A⟩ ≈ ⟨MTS(W), MTS(A)⟩`, §4.3).
+
+use super::mts::MtsSketcher;
+use crate::tensor::Tensor;
+
+/// Estimate `⟨x, y⟩` from two sketches produced by the SAME sketcher.
+pub fn inner_product_estimate(sx: &Tensor, sy: &Tensor) -> f64 {
+    assert_eq!(sx.dims(), sy.dims(), "sketches must share shape");
+    sx.data().iter().zip(sy.data().iter()).map(|(a, b)| a * b).sum()
+}
+
+/// Convenience: sketch both inputs and estimate their inner product.
+pub fn sketched_inner_product(sk: &MtsSketcher, x: &Tensor, y: &Tensor) -> f64 {
+    inner_product_estimate(&sk.sketch(x), &sk.sketch(y))
+}
+
+/// Squared-norm estimate `‖x‖² ≈ ‖MTS(x)‖²`.
+pub fn sketched_norm_sq(sk: &MtsSketcher, x: &Tensor) -> f64 {
+    let s = sk.sketch(x);
+    s.data().iter().map(|v| v * v).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::{mean, variance};
+
+    fn dot(x: &Tensor, y: &Tensor) -> f64 {
+        x.data().iter().zip(y.data().iter()).map(|(a, b)| a * b).sum()
+    }
+
+    #[test]
+    fn inner_product_unbiased() {
+        let dims = [8usize, 8];
+        let mut rng = Pcg64::new(1);
+        let x = Tensor::randn(&dims, &mut rng);
+        let y = Tensor::randn(&dims, &mut rng);
+        let truth = dot(&x, &y);
+        let reps = 4000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let sk = MtsSketcher::with_repeat(&dims, &[4, 4], 7, rep);
+                sketched_inner_product(&sk, &x, &y)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.05), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn identical_hashes_required_for_meaning() {
+        // different hash families give an estimate centered on 0, not ⟨x,y⟩
+        let dims = [10usize, 10];
+        let mut rng = Pcg64::new(2);
+        let x = Tensor::randn(&dims, &mut rng);
+        let reps = 1500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let a = MtsSketcher::with_repeat(&dims, &[4, 4], 1000 + rep as u64, 0);
+                let b = MtsSketcher::with_repeat(&dims, &[4, 4], 9000 + rep as u64, 0);
+                inner_product_estimate(&a.sketch(&x), &b.sketch(&x))
+            })
+            .collect();
+        let m = mean(&est);
+        let norm_sq = dot(&x, &x);
+        assert!(m.abs() < 0.2 * norm_sq, "mismatched hashes should decorrelate: {m}");
+    }
+
+    #[test]
+    fn norm_estimate_concentrates_with_size() {
+        let dims = [12usize, 12];
+        let mut rng = Pcg64::new(3);
+        let x = Tensor::randn(&dims, &mut rng);
+        let truth = dot(&x, &x);
+        let spread_for = |m: usize| {
+            let est: Vec<f64> = (0..400)
+                .map(|rep| {
+                    let sk = MtsSketcher::with_repeat(&dims, &[m, m], 5, rep);
+                    sketched_norm_sq(&sk, &x)
+                })
+                .collect();
+            (variance(&est).sqrt(), mean(&est))
+        };
+        let (s4, m4) = spread_for(4);
+        let (s10, m10) = spread_for(10);
+        // relative spread shrinks with sketch size; means near the truth
+        assert!(s10 / m10 < s4 / m4, "{s4}/{m4} vs {s10}/{m10}");
+        assert!((m10 - truth).abs() < 0.35 * truth, "{m10} vs {truth}");
+    }
+
+    #[test]
+    fn trl_connection_weight_activation() {
+        // the §4.3 identity used by the sketched TRL:
+        // ⟨decompress(MTS(W)), A⟩ == ⟨MTS(W), MTS_scatter(A)⟩
+        let dims = [6usize, 6];
+        let mut rng = Pcg64::new(4);
+        let w = Tensor::randn(&dims, &mut rng);
+        let a = Tensor::randn(&dims, &mut rng);
+        let sk = MtsSketcher::new(&dims, &[3, 3], 21);
+        let lhs = dot(&sk.decompress(&sk.sketch(&w)), &a);
+        let rhs = inner_product_estimate(&sk.sketch(&w), &sk.sketch(&a));
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+    }
+}

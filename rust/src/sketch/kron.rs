@@ -1,0 +1,571 @@
+//! Sketched Kronecker products (§2.4, Appendix A.1/B.1) — the paper's
+//! flagship example of computing a tensor operation directly in sketch
+//! space.
+//!
+//! - [`MtsKron`]: `MTS(A ⊗ B) = MTS(A) * MTS(B)` (2-D circular
+//!   convolution; Lemma B.1), evaluated as
+//!   `IFFT2(FFT2(MTS(A)) ∘ FFT2(MTS(B)))` in O(n² + m² log m) — never
+//!   materializing the n²×n² product (Fig. 6).
+//! - [`CtsKron`]: the baseline (Fig. 5) — count-sketch each row-pair
+//!   outer product via Pagh's FFT trick, O(n²(n + c log c)).
+//!
+//! Compression ratios follow §4.1: for `C ∈ ℝ^{ab×de}`,
+//! CTS(C) ∈ ℝ^{ab×c} has ratio `de/c`; MTS(C) ∈ ℝ^{m1×m2} has ratio
+//! `ab·de/(m1·m2)`.
+
+use super::cs::CsSketcher;
+use super::mts::MtsSketcher;
+use crate::fft::{self, circular_convolve2, Complex, Direction};
+use crate::tensor::Tensor;
+
+/// MTS sketch of `A ⊗ B` computed entirely in sketch space.
+#[derive(Clone, Debug)]
+pub struct MtsKron {
+    /// sketcher for A ∈ ℝ^{n1×n2}
+    pub ska: MtsSketcher,
+    /// sketcher for B ∈ ℝ^{n3×n4}
+    pub skb: MtsSketcher,
+}
+
+impl MtsKron {
+    /// Both inputs are sketched to the same `m1 × m2` so the combine is
+    /// a same-shape convolution.
+    pub fn new(a_dims: &[usize; 2], b_dims: &[usize; 2], m1: usize, m2: usize, seed: u64) -> Self {
+        Self::with_repeat(a_dims, b_dims, m1, m2, seed, 0)
+    }
+
+    pub fn with_repeat(
+        a_dims: &[usize; 2],
+        b_dims: &[usize; 2],
+        m1: usize,
+        m2: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        // derive disjoint seeds for the two inputs from one root
+        let ska = MtsSketcher::with_repeat(a_dims, &[m1, m2], seed, 2 * repeat);
+        let skb = MtsSketcher::with_repeat(b_dims, &[m1, m2], seed ^ 0x5bd1_e995, 2 * repeat + 1);
+        Self { ska, skb }
+    }
+
+    pub fn m1(&self) -> usize {
+        self.ska.sketch_dims[0]
+    }
+
+    pub fn m2(&self) -> usize {
+        self.ska.sketch_dims[1]
+    }
+
+    /// Dims of the (never materialized) Kronecker product.
+    pub fn kron_dims(&self) -> [usize; 2] {
+        [
+            self.ska.dims[0] * self.skb.dims[0],
+            self.ska.dims[1] * self.skb.dims[1],
+        ]
+    }
+
+    /// Compression ratio `ab·de/(m1·m2)`.
+    pub fn compression_ratio(&self) -> f64 {
+        let [r, c] = self.kron_dims();
+        (r * c) as f64 / (self.m1() * self.m2()) as f64
+    }
+
+    /// Algorithm 4 Compress-KP: sketch both inputs, combine via FFT2.
+    pub fn compress(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let sa = self.ska.sketch(a);
+        let sb = self.skb.sketch(b);
+        self.combine(&sa, &sb)
+    }
+
+    /// Combine pre-computed input sketches (the hot path the coordinator
+    /// batches): `IFFT2(FFT2(sa) ∘ FFT2(sb))`.
+    pub fn combine(&self, sa: &Tensor, sb: &Tensor) -> Tensor {
+        let (m1, m2) = (self.m1(), self.m2());
+        let p = circular_convolve2(sa.data(), sb.data(), m1, m2);
+        Tensor::from_vec(p, &[m1, m2])
+    }
+
+    /// Combine when the FFT2 of one side is cached (see
+    /// [`MtsKron::fft_of_sketch`]); saves one forward FFT2 per call.
+    pub fn combine_with_cached(&self, fa: &[Complex], sb: &Tensor) -> Tensor {
+        let (m1, m2) = (self.m1(), self.m2());
+        let mut fb = fft::fft2_real(sb.data(), m1, m2);
+        for (y, x) in fb.iter_mut().zip(fa.iter()) {
+            *y = *y * *x;
+        }
+        let p = fft::ifft2_to_real(fb, m1, m2);
+        Tensor::from_vec(p, &[m1, m2])
+    }
+
+    /// Forward FFT2 of an input sketch, for reuse across combines.
+    pub fn fft_of_sketch(&self, s: &Tensor) -> Vec<Complex> {
+        fft::fft2_real(s.data(), self.m1(), self.m2())
+    }
+
+    /// Estimate one entry `(A⊗B)[n3·p + h, n4·q + g]` from the combined
+    /// sketch (recovery map of Lemma B.1).
+    #[inline]
+    pub fn estimate(&self, p_sk: &Tensor, p: usize, q: usize, h: usize, g: usize) -> f64 {
+        let (m1, m2) = (self.m1(), self.m2());
+        let ha = self.ska.mode(0);
+        let hb = self.skb.mode(0);
+        let wa = self.ska.mode(1);
+        let wb = self.skb.mode(1);
+        let k = (ha.h(p) + hb.h(h)) % m1;
+        let l = (wa.h(q) + wb.h(g)) % m2;
+        ha.s(p) * wa.s(q) * hb.s(h) * wb.s(g) * p_sk.get(&[k, l])
+    }
+
+    /// Algorithm 4 Decompress-KP: full reconstruction of `A ⊗ B`.
+    pub fn decompress(&self, p_sk: &Tensor) -> Tensor {
+        let (n1, n2) = (self.ska.dims[0], self.ska.dims[1]);
+        let (n3, n4) = (self.skb.dims[0], self.skb.dims[1]);
+        let (m1, m2) = (self.m1(), self.m2());
+        // materialize hash/sign tables once (profiled; see §Perf)
+        let ha: Vec<usize> = (0..n1).map(|i| self.ska.mode(0).h(i)).collect();
+        let sa: Vec<f64> = (0..n1).map(|i| self.ska.mode(0).s(i)).collect();
+        let wa_h: Vec<usize> = (0..n2).map(|i| self.ska.mode(1).h(i)).collect();
+        let wa_s: Vec<f64> = (0..n2).map(|i| self.ska.mode(1).s(i)).collect();
+        let hb: Vec<usize> = (0..n3).map(|i| self.skb.mode(0).h(i)).collect();
+        let sb: Vec<f64> = (0..n3).map(|i| self.skb.mode(0).s(i)).collect();
+        let wb_h: Vec<usize> = (0..n4).map(|i| self.skb.mode(1).h(i)).collect();
+        let wb_s: Vec<f64> = (0..n4).map(|i| self.skb.mode(1).s(i)).collect();
+        let cols = n2 * n4;
+        let mut out = Tensor::zeros(&[n1 * n3, cols]);
+        let od = out.data_mut();
+        for p in 0..n1 {
+            for h in 0..n3 {
+                let k = (ha[p] + hb[h]) % m1;
+                let s_row = sa[p] * sb[h];
+                let row = (p * n3 + h) * cols;
+                for q in 0..n2 {
+                    let sq = s_row * wa_s[q];
+                    for g in 0..n4 {
+                        let l = (wa_h[q] + wb_h[g]) % m2;
+                        od[row + q * n4 + g] = sq * wb_s[g] * p_sk.get(&[k, l]);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// CTS baseline for Kronecker sketching (Fig. 5): sketch each row-pair
+/// outer product `A[p,:] ⊗ B[h,:]` with Pagh's method; output
+/// `(n1·n3) × c`.
+#[derive(Clone, Debug)]
+pub struct CtsKron {
+    /// CS over A's column index (length n2)
+    pub su: CsSketcher,
+    /// CS over B's column index (length n4)
+    pub sv: CsSketcher,
+    pub a_dims: [usize; 2],
+    pub b_dims: [usize; 2],
+}
+
+impl CtsKron {
+    pub fn new(a_dims: &[usize; 2], b_dims: &[usize; 2], c: usize, seed: u64) -> Self {
+        Self::with_repeat(a_dims, b_dims, c, seed, 0)
+    }
+
+    pub fn with_repeat(
+        a_dims: &[usize; 2],
+        b_dims: &[usize; 2],
+        c: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        let seeds = crate::hash::HashSeeds::new(seed);
+        Self {
+            su: CsSketcher::new(a_dims[1], c, seeds.seed_for(repeat, 0)),
+            sv: CsSketcher::new(b_dims[1], c, seeds.seed_for(repeat, 1)),
+            a_dims: *a_dims,
+            b_dims: *b_dims,
+        }
+    }
+
+    pub fn c(&self) -> usize {
+        self.su.c
+    }
+
+    /// Compression ratio `de/c` (columns only, per §4.1).
+    pub fn compression_ratio(&self) -> f64 {
+        (self.a_dims[1] * self.b_dims[1]) as f64 / self.c() as f64
+    }
+
+    /// Sketch `A ⊗ B`: for every row pair (p, h),
+    /// `out[(p,h),:] = IFFT(FFT(CS(A[p,:])) ∘ FFT(CS(B[h,:])))`.
+    pub fn compress(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        assert_eq!(a.dims(), &self.a_dims);
+        assert_eq!(b.dims(), &self.b_dims);
+        let c = self.c();
+        let (n1, n3) = (self.a_dims[0], self.b_dims[0]);
+        // FFT of each row sketch, computed once per row
+        let fa: Vec<Vec<Complex>> =
+            (0..n1).map(|p| fft::fft_real(&self.su.sketch(a.row(p)))).collect();
+        let fb: Vec<Vec<Complex>> =
+            (0..n3).map(|h| fft::fft_real(&self.sv.sketch(b.row(h)))).collect();
+        let plan = fft::plan(c);
+        let mut out = Tensor::zeros(&[n1 * n3, c]);
+        let od = out.data_mut();
+        let mut buf = vec![Complex::ZERO; c];
+        for p in 0..n1 {
+            for h in 0..n3 {
+                for (i, b) in buf.iter_mut().enumerate() {
+                    *b = fa[p][i] * fb[h][i];
+                }
+                plan.transform(&mut buf, Direction::Inverse);
+                let row = (p * n3 + h) * c;
+                for (i, v) in buf.iter().enumerate() {
+                    od[row + i] = v.re;
+                }
+            }
+        }
+        out
+    }
+
+    /// Estimate `(A⊗B)[n3·p + h, n4·q + g]`.
+    #[inline]
+    pub fn estimate(&self, sk: &Tensor, p: usize, q: usize, h: usize, g: usize) -> f64 {
+        let n3 = self.b_dims[0];
+        let k = (self.su.h(q) + self.sv.h(g)) % self.c();
+        self.su.s(q) * self.sv.s(g) * sk.get(&[p * n3 + h, k])
+    }
+
+    /// Full reconstruction of `A ⊗ B`.
+    pub fn decompress(&self, sk: &Tensor) -> Tensor {
+        let (n1, n2) = (self.a_dims[0], self.a_dims[1]);
+        let (n3, n4) = (self.b_dims[0], self.b_dims[1]);
+        let c = self.c();
+        let hq: Vec<usize> = (0..n2).map(|q| self.su.h(q)).collect();
+        let sq: Vec<f64> = (0..n2).map(|q| self.su.s(q)).collect();
+        let hg: Vec<usize> = (0..n4).map(|g| self.sv.h(g)).collect();
+        let sg: Vec<f64> = (0..n4).map(|g| self.sv.s(g)).collect();
+        let cols = n2 * n4;
+        let mut out = Tensor::zeros(&[n1 * n3, cols]);
+        let od = out.data_mut();
+        for p in 0..n1 {
+            for h in 0..n3 {
+                let srow = sk.row(p * n3 + h);
+                let row = (p * n3 + h) * cols;
+                for q in 0..n2 {
+                    for g in 0..n4 {
+                        od[row + q * n4 + g] = sq[q] * sg[g] * srow[(hq[q] + hg[g]) % c];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// N-ary sketched Kronecker product `MTS(A₁ ⊗ A₂ ⊗ ⋯ ⊗ A_N)` — the
+/// Lemma B.1 identity is associative, so all factor sketches are
+/// combined with a single pass of 2-D spectral products:
+/// `IFFT2(∏ₖ FFT2(MTS(Aₖ)))`. This is the primitive the Tucker path
+/// (Eq. 8) uses with N = tensor order; exposed publicly for multi-way
+/// feature-combination workloads (e.g. trilinear pooling).
+#[derive(Clone, Debug)]
+pub struct MtsKronN {
+    pub sketchers: Vec<MtsSketcher>,
+}
+
+impl MtsKronN {
+    /// `dims[k]` is the shape of factor k; all share the sketch size.
+    pub fn new(dims: &[[usize; 2]], m1: usize, m2: usize, seed: u64) -> Self {
+        Self::with_repeat(dims, m1, m2, seed, 0)
+    }
+
+    pub fn with_repeat(
+        dims: &[[usize; 2]],
+        m1: usize,
+        m2: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        assert!(dims.len() >= 2, "need at least two factors");
+        let sketchers = dims
+            .iter()
+            .enumerate()
+            .map(|(k, d)| {
+                MtsSketcher::with_repeat(
+                    d,
+                    &[m1, m2],
+                    seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    repeat,
+                )
+            })
+            .collect();
+        Self { sketchers }
+    }
+
+    pub fn m1(&self) -> usize {
+        self.sketchers[0].sketch_dims[0]
+    }
+
+    pub fn m2(&self) -> usize {
+        self.sketchers[0].sketch_dims[1]
+    }
+
+    /// Sketch every factor and combine in the frequency domain.
+    pub fn compress(&self, factors: &[&Tensor]) -> Tensor {
+        assert_eq!(factors.len(), self.sketchers.len());
+        let (m1, m2) = (self.m1(), self.m2());
+        let mut freq: Option<Vec<Complex>> = None;
+        for (sk, f) in self.sketchers.iter().zip(factors.iter()) {
+            let s = sk.sketch(f);
+            let fs = fft::fft2_real(s.data(), m1, m2);
+            freq = Some(match freq {
+                None => fs,
+                Some(mut acc) => {
+                    for (a, b) in acc.iter_mut().zip(fs.iter()) {
+                        *a = *a * *b;
+                    }
+                    acc
+                }
+            });
+        }
+        let out = fft::ifft2_to_real(freq.unwrap(), m1, m2);
+        Tensor::from_vec(out, &[m1, m2])
+    }
+
+    /// Estimate one entry of the product; `rows[k]`/`cols[k]` index
+    /// factor k.
+    pub fn estimate(&self, p: &Tensor, rows: &[usize], cols: &[usize]) -> f64 {
+        assert_eq!(rows.len(), self.sketchers.len());
+        assert_eq!(cols.len(), self.sketchers.len());
+        let (m1, m2) = (self.m1(), self.m2());
+        let mut r = 0usize;
+        let mut c = 0usize;
+        let mut sign = 1.0;
+        for (k, sk) in self.sketchers.iter().enumerate() {
+            r += sk.mode(0).h(rows[k]);
+            c += sk.mode(1).h(cols[k]);
+            sign *= sk.mode(0).s(rows[k]) * sk.mode(1).s(cols[k]);
+        }
+        sign * p.get(&[r % m1, c % m2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::{kron, rel_error};
+    use crate::util::stats::mean;
+
+    /// Direct MTS of the materialized Kronecker product using the
+    /// *derived* hashes of Lemma B.1 — ground truth for the combine.
+    fn direct_mts_of_kron(mk: &MtsKron, a: &Tensor, b: &Tensor) -> Tensor {
+        let (n1, n2) = (mk.ska.dims[0], mk.ska.dims[1]);
+        let (n3, n4) = (mk.skb.dims[0], mk.skb.dims[1]);
+        let (m1, m2) = (mk.m1(), mk.m2());
+        let mut out = Tensor::zeros(&[m1, m2]);
+        for p in 0..n1 {
+            for q in 0..n2 {
+                for h in 0..n3 {
+                    for g in 0..n4 {
+                        let k = (mk.ska.mode(0).h(p) + mk.skb.mode(0).h(h)) % m1;
+                        let l = (mk.ska.mode(1).h(q) + mk.skb.mode(1).h(g)) % m2;
+                        let s = mk.ska.mode(0).s(p)
+                            * mk.ska.mode(1).s(q)
+                            * mk.skb.mode(0).s(h)
+                            * mk.skb.mode(1).s(g);
+                        let v = out.get(&[k, l]) + s * a.at2(p, q) * b.at2(h, g);
+                        out.set(&[k, l], v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lemma_b1_combine_equals_direct_sketch() {
+        let mut rng = Pcg64::new(1);
+        let a = Tensor::randn(&[4, 5], &mut rng);
+        let b = Tensor::randn(&[3, 6], &mut rng);
+        let mk = MtsKron::new(&[4, 5], &[3, 6], 7, 8, 99);
+        let combined = mk.compress(&a, &b);
+        let direct = direct_mts_of_kron(&mk, &a, &b);
+        assert!(
+            rel_error(&direct, &combined) < 1e-9,
+            "err={}",
+            rel_error(&direct, &combined)
+        );
+    }
+
+    #[test]
+    fn mts_kron_estimate_unbiased() {
+        let mut rng = Pcg64::new(2);
+        let a = Tensor::randn(&[4, 4], &mut rng);
+        let b = Tensor::randn(&[4, 4], &mut rng);
+        let truth = a.at2(1, 2) * b.at2(3, 0);
+        let reps = 3000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let mk = MtsKron::with_repeat(&[4, 4], &[4, 4], 6, 6, 1234, rep);
+                let p = mk.compress(&a, &b);
+                mk.estimate(&p, 1, 2, 3, 0)
+            })
+            .collect();
+        let m = mean(&est);
+        let fro = kron(&a, &b).fro_norm();
+        let stderr = (fro * fro / 36.0 / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * stderr, "{m} vs {truth} (stderr {stderr})");
+    }
+
+    #[test]
+    fn mts_decompress_matches_estimates_and_shape() {
+        let mut rng = Pcg64::new(3);
+        let a = Tensor::randn(&[3, 4], &mut rng);
+        let b = Tensor::randn(&[2, 5], &mut rng);
+        let mk = MtsKron::new(&[3, 4], &[2, 5], 5, 7, 17);
+        let p = mk.compress(&a, &b);
+        let rec = mk.decompress(&p);
+        assert_eq!(rec.dims(), &[6, 20]);
+        for pp in 0..3 {
+            for q in 0..4 {
+                for h in 0..2 {
+                    for g in 0..5 {
+                        let want = mk.estimate(&p, pp, q, h, g);
+                        let got = rec.at2(pp * 2 + h, q * 5 + g);
+                        assert!((want - got).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cts_kron_matches_direct_pair_hash_sketch() {
+        let mut rng = Pcg64::new(4);
+        let a = Tensor::randn(&[3, 5], &mut rng);
+        let b = Tensor::randn(&[2, 4], &mut rng);
+        let ck = CtsKron::new(&[3, 5], &[2, 4], 8, 7);
+        let sk = ck.compress(&a, &b);
+        // direct: per row pair scatter with pair hash
+        for p in 0..3 {
+            for h in 0..2 {
+                let mut direct = vec![0.0; 8];
+                for q in 0..5 {
+                    for g in 0..4 {
+                        direct[(ck.su.h(q) + ck.sv.h(g)) % 8] +=
+                            ck.su.s(q) * ck.sv.s(g) * a.at2(p, q) * b.at2(h, g);
+                    }
+                }
+                for k in 0..8 {
+                    assert!((sk.get(&[p * 2 + h, k]) - direct[k]).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cts_decompress_round_trip_shape() {
+        let mut rng = Pcg64::new(5);
+        let a = Tensor::randn(&[3, 3], &mut rng);
+        let b = Tensor::randn(&[3, 3], &mut rng);
+        let ck = CtsKron::new(&[3, 3], &[3, 3], 6, 8);
+        let rec = ck.decompress(&ck.compress(&a, &b));
+        assert_eq!(rec.dims(), &[9, 9]);
+    }
+
+    #[test]
+    fn error_decreases_with_sketch_size() {
+        // paper Fig 8: error grows with compression ratio; equivalently
+        // shrinks as m grows. Use median of repeats for robustness.
+        let mut rng = Pcg64::new(6);
+        let a = Tensor::randn(&[10, 10], &mut rng);
+        let b = Tensor::randn(&[10, 10], &mut rng);
+        let truth = kron(&a, &b);
+        let err_for = |m: usize| -> f64 {
+            let errs: Vec<f64> = (0..5)
+                .map(|rep| {
+                    let mk = MtsKron::with_repeat(&[10, 10], &[10, 10], m, m, 42, rep);
+                    rel_error(&truth, &mk.decompress(&mk.compress(&a, &b)))
+                })
+                .collect();
+            crate::util::stats::median(&errs)
+        };
+        let e_small = err_for(8);
+        let e_big = err_for(40);
+        assert!(
+            e_big < e_small,
+            "error should shrink with sketch size: m=8→{e_small}, m=40→{e_big}"
+        );
+    }
+
+    #[test]
+    fn cached_fft_combine_matches_plain() {
+        let mut rng = Pcg64::new(7);
+        let a = Tensor::randn(&[6, 6], &mut rng);
+        let b = Tensor::randn(&[6, 6], &mut rng);
+        let mk = MtsKron::new(&[6, 6], &[6, 6], 5, 5, 3);
+        let sa = mk.ska.sketch(&a);
+        let sb = mk.skb.sketch(&b);
+        let plain = mk.combine(&sa, &sb);
+        let fa = mk.fft_of_sketch(&sa);
+        let cached = mk.combine_with_cached(&fa, &sb);
+        assert!(rel_error(&plain, &cached) < 1e-10);
+    }
+
+    #[test]
+    fn kron_n_matches_pairwise_for_two_factors() {
+        let mut rng = Pcg64::new(8);
+        let a = Tensor::randn(&[5, 4], &mut rng);
+        let b = Tensor::randn(&[3, 6], &mut rng);
+        let n = MtsKronN::new(&[[5, 4], [3, 6]], 7, 7, 123);
+        let pn = n.compress(&[&a, &b]);
+        // direct scatter with the derived hashes
+        let mut direct = Tensor::zeros(&[7, 7]);
+        for p in 0..5 {
+            for q in 0..4 {
+                for h in 0..3 {
+                    for g in 0..6 {
+                        let r = (n.sketchers[0].mode(0).h(p) + n.sketchers[1].mode(0).h(h)) % 7;
+                        let c = (n.sketchers[0].mode(1).h(q) + n.sketchers[1].mode(1).h(g)) % 7;
+                        let s = n.sketchers[0].mode(0).s(p)
+                            * n.sketchers[0].mode(1).s(q)
+                            * n.sketchers[1].mode(0).s(h)
+                            * n.sketchers[1].mode(1).s(g);
+                        let v = direct.get(&[r, c]) + s * a.at2(p, q) * b.at2(h, g);
+                        direct.set(&[r, c], v);
+                    }
+                }
+            }
+        }
+        assert!(rel_error(&direct, &pn) < 1e-9);
+    }
+
+    #[test]
+    fn kron_n_three_factor_unbiased() {
+        let mut rng = Pcg64::new(9);
+        let a = Tensor::randn(&[3, 3], &mut rng);
+        let b = Tensor::randn(&[3, 3], &mut rng);
+        let c = Tensor::randn(&[3, 3], &mut rng);
+        let truth = a.at2(1, 2) * b.at2(0, 1) * c.at2(2, 0);
+        let reps = 3000;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let n = MtsKronN::with_repeat(&[[3, 3], [3, 3], [3, 3]], 5, 5, 77, rep);
+                let p = n.compress(&[&a, &b, &c]);
+                n.estimate(&p, &[1, 0, 2], &[2, 1, 0])
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (crate::util::stats::variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.05), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn compression_ratios_match_paper_definitions() {
+        let mk = MtsKron::new(&[10, 10], &[10, 10], 20, 20, 0);
+        // ab·de/(m1 m2) = 100·100/400 = 25
+        assert!((mk.compression_ratio() - 25.0).abs() < 1e-12);
+        let ck = CtsKron::new(&[10, 10], &[10, 10], 40, 0);
+        // de/c = 100/40 = 2.5
+        assert!((ck.compression_ratio() - 2.5).abs() < 1e-12);
+    }
+}

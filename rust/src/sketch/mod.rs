@@ -1,0 +1,39 @@
+//! The paper's contribution: sketching algorithms that retain efficient
+//! tensor operations.
+//!
+//! | Module | Paper section | What it implements |
+//! |---|---|---|
+//! | [`cs`] | §2.2, Alg. 1 | Count sketch of vectors + Pagh's outer-product sketch |
+//! | [`cts`] | §2.2, Alg. 2 | Count-based tensor sketch (per-fibre CS — the baseline) |
+//! | [`mts`] | §2.3, Alg. 3 | Multi-dimensional tensor sketch (MTS/HCS) — the contribution |
+//! | [`kron`] | §2.4, Alg. 4, Lemma B.1 | Sketched Kronecker products, CTS vs MTS |
+//! | [`tucker`] | §3.1, Eq. 7/8, Thm 3.1/3.2 | Sketching Tucker-form tensors |
+//! | [`cp`] | §3.1 REMARKS | Sketching CP-form tensors |
+//! | [`tt`] | §3.2, Alg. 5 | Sketching tensor-train tensors |
+//! | [`covariance`] | §4.2 | Covariance estimation via sketched Kronecker |
+//! | [`estimate`] | §2.2 | Median-of-d robust estimation |
+//!
+//! Everything is seeded and exactly reproducible; every sketcher exposes
+//! `sketch` / `decompress` (full tensor) and `estimate` (single entry)
+//! so the benches can measure both throughput and pointwise recovery.
+
+pub mod covariance;
+pub mod cp;
+pub mod cs;
+pub mod cts;
+pub mod estimate;
+pub mod inner;
+pub mod kron;
+pub mod matmul;
+pub mod mts;
+pub mod stream;
+pub mod tt;
+pub mod tucker;
+
+pub use cs::CsSketcher;
+pub use cts::CtsSketcher;
+pub use mts::MtsSketcher;
+
+/// Alias: the paper's later revision renamed MTS to Higher-order Count
+/// Sketch (HCS). Same algorithm.
+pub type HigherOrderCountSketch = mts::MtsSketcher;

@@ -1,0 +1,159 @@
+//! Streaming frequency estimation over a 2-D key space — the intro's
+//! motivating application (Demaine et al.: "determine essential features
+//! of the traffic stream using limited space"), done with MTS instead of
+//! a flat count sketch: keys are (src, dst) pairs and each axis is
+//! hashed independently, so the sketch is an m1×m2 matrix that supports
+//! row/column marginal queries as well as point queries.
+//!
+//! Median-of-d across independent hash families gives the usual
+//! heavy-hitter guarantees; `heavy_hitters` scans the key space (dense
+//! universes) and returns entries whose estimate clears a threshold.
+
+use crate::hash::{HashSeeds, ModeHash};
+use crate::util::stats::median_inplace;
+
+/// d independent m1×m2 MTS counters over keys `[n1] × [n2]`.
+#[derive(Clone, Debug)]
+pub struct StreamSketch {
+    pub n1: usize,
+    pub n2: usize,
+    pub m1: usize,
+    pub m2: usize,
+    pub d: usize,
+    rows: Vec<ModeHash>,
+    cols: Vec<ModeHash>,
+    tables: Vec<Vec<f64>>,
+    /// total updates processed
+    pub updates: u64,
+}
+
+impl StreamSketch {
+    pub fn new(n1: usize, n2: usize, m1: usize, m2: usize, d: usize, seed: u64) -> Self {
+        assert!(d >= 1);
+        let seeds = HashSeeds::new(seed);
+        let rows = (0..d).map(|r| ModeHash::new(n1, m1, seeds.seed_for(r, 0))).collect();
+        let cols = (0..d).map(|r| ModeHash::new(n2, m2, seeds.seed_for(r, 1))).collect();
+        Self {
+            n1,
+            n2,
+            m1,
+            m2,
+            d,
+            rows,
+            cols,
+            tables: vec![vec![0.0; m1 * m2]; d],
+            updates: 0,
+        }
+    }
+
+    /// Space used, in f64 counters.
+    pub fn space(&self) -> usize {
+        self.d * self.m1 * self.m2
+    }
+
+    /// Process one stream item: key (i, j) with weight `w` (e.g. bytes).
+    pub fn update(&mut self, i: usize, j: usize, w: f64) {
+        debug_assert!(i < self.n1 && j < self.n2);
+        for r in 0..self.d {
+            let b = self.rows[r].h(i) * self.m2 + self.cols[r].h(j);
+            self.tables[r][b] += self.rows[r].s(i) * self.cols[r].s(j) * w;
+        }
+        self.updates += 1;
+    }
+
+    /// Point query: median-of-d estimate of the total weight of (i, j).
+    pub fn query(&self, i: usize, j: usize) -> f64 {
+        let mut est: Vec<f64> = (0..self.d)
+            .map(|r| {
+                let b = self.rows[r].h(i) * self.m2 + self.cols[r].h(j);
+                self.rows[r].s(i) * self.cols[r].s(j) * self.tables[r][b]
+            })
+            .collect();
+        median_inplace(&mut est)
+    }
+
+    /// All keys whose estimated weight is ≥ `threshold` (dense scan —
+    /// the universe here is the n1×n2 key grid).
+    pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        for i in 0..self.n1 {
+            for j in 0..self.n2 {
+                let w = self.query(i, j);
+                if w >= threshold {
+                    out.push((i, j, w));
+                }
+            }
+        }
+        out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn point_queries_track_true_counts() {
+        let mut sk = StreamSketch::new(64, 64, 16, 16, 5, 1);
+        let mut truth = std::collections::HashMap::new();
+        let mut rng = Pcg64::new(2);
+        // zipf-ish: a few heavy keys + light noise
+        for _ in 0..5000 {
+            let (i, j) = if rng.uniform() < 0.5 {
+                (3usize, 7usize)
+            } else if rng.uniform() < 0.5 {
+                (40, 9)
+            } else {
+                (rng.gen_range(64) as usize, rng.gen_range(64) as usize)
+            };
+            sk.update(i, j, 1.0);
+            *truth.entry((i, j)).or_insert(0.0f64) += 1.0;
+        }
+        let t1 = truth[&(3, 7)];
+        let e1 = sk.query(3, 7);
+        assert!((e1 - t1).abs() < 0.15 * t1, "heavy key: {e1} vs {t1}");
+        let t2 = truth[&(40, 9)];
+        let e2 = sk.query(40, 9);
+        assert!((e2 - t2).abs() < 0.15 * t2, "heavy key: {e2} vs {t2}");
+    }
+
+    #[test]
+    fn heavy_hitters_found_in_order() {
+        let mut sk = StreamSketch::new(32, 32, 12, 12, 5, 7);
+        for _ in 0..300 {
+            sk.update(1, 2, 1.0);
+        }
+        for _ in 0..150 {
+            sk.update(10, 20, 1.0);
+        }
+        let mut rng = Pcg64::new(3);
+        for _ in 0..500 {
+            sk.update(rng.gen_range(32) as usize, rng.gen_range(32) as usize, 1.0);
+        }
+        let hh = sk.heavy_hitters(100.0);
+        assert!(hh.len() >= 2, "found {hh:?}");
+        assert_eq!((hh[0].0, hh[0].1), (1, 2));
+        assert_eq!((hh[1].0, hh[1].1), (10, 20));
+    }
+
+    #[test]
+    fn weighted_updates_and_deletions() {
+        // turnstile model: negative weights cancel
+        let mut sk = StreamSketch::new(16, 16, 8, 8, 3, 5);
+        sk.update(4, 4, 10.0);
+        sk.update(4, 4, -10.0);
+        sk.update(2, 3, 7.5);
+        assert!(sk.query(4, 4).abs() < 1e-9);
+        assert!((sk.query(2, 3) - 7.5).abs() < 1e-9 + 7.5 * 0.5);
+    }
+
+    #[test]
+    fn space_accounting() {
+        let sk = StreamSketch::new(1000, 1000, 32, 32, 5, 0);
+        assert_eq!(sk.space(), 5 * 32 * 32);
+        // 1M key universe in 5120 counters
+        assert!(sk.space() < 1000 * 1000 / 100);
+    }
+}

@@ -1,0 +1,511 @@
+//! Sketching tensor-train tensors (§3.2, Algorithm 5, Theorems B.3/B.4).
+//!
+//! Third-order TT: `T[i1,i2,i3] = G1[i1,:]·G2[i2,:,:]·G3[i3,:]` with
+//! `G1 ∈ ℝ^{n1×r1}`, `G2 ∈ ℝ^{n2×r1×r2}`, `G3 ∈ ℝ^{n3×r2}`.
+//!
+//! - [`CtsTt`] (Thm B.3 baseline): count-sketch each core along its
+//!   ambient fibre (`n → c`); estimate an entry by contracting the
+//!   decompressed rows, O(r²) per entry.
+//! - [`MtsTt`] (Alg. 5): use the identity
+//!   `reshape(T) = (G1 ⊗ G3) · reshape(G2)` — MTS-sketch `G1` and `G3`,
+//!   combine with one FFT2 product (Lemma B.1), sketch `reshape(G2)`
+//!   with the *matching composite row hash* on its `r1·r2` axis and a
+//!   fresh column hash on `n2`, then multiply the two sketches. The
+//!   paper's Alg. 5 leaves the second-level hash alignment implicit; we
+//!   make it explicit, which is what makes the estimator unbiased (the
+//!   same construction as the Tucker Eq. 8 path).
+
+use super::cs::CsSketcher;
+use super::mts::MtsSketcher;
+use crate::decomp::TtTensor;
+use crate::fft;
+use crate::hash::HashSeeds;
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// CTS baseline (Theorem B.3)
+// ---------------------------------------------------------------------
+
+/// CS each TT core along its ambient mode into `c` buckets.
+#[derive(Clone, Debug)]
+pub struct CtsTt {
+    pub dims: [usize; 3],
+    pub ranks: [usize; 2],
+    pub c: usize,
+    cs1: CsSketcher,
+    cs2: CsSketcher,
+    cs3: CsSketcher,
+}
+
+impl CtsTt {
+    pub fn new(dims: &[usize; 3], ranks: &[usize; 2], c: usize, seed: u64) -> Self {
+        Self::with_repeat(dims, ranks, c, seed, 0)
+    }
+
+    pub fn with_repeat(
+        dims: &[usize; 3],
+        ranks: &[usize; 2],
+        c: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        let seeds = HashSeeds::new(seed);
+        Self {
+            dims: *dims,
+            ranks: *ranks,
+            c,
+            cs1: CsSketcher::new(dims[0], c, seeds.seed_for(repeat, 0)),
+            cs2: CsSketcher::new(dims[1], c, seeds.seed_for(repeat, 1)),
+            cs3: CsSketcher::new(dims[2], c, seeds.seed_for(repeat, 2)),
+        }
+    }
+
+    /// Sketch: `CS(G1) ∈ ℝ^{c×r1}`, `CS(G2) ∈ ℝ^{c×r1×r2}`,
+    /// `CS(G3) ∈ ℝ^{c×r2}`.
+    pub fn sketch(&self, t: &TtTensor) -> (Tensor, Tensor, Tensor) {
+        let g1 = t.g1_matrix();
+        let g2 = t.g2_tensor();
+        let g3 = t.g3_matrix();
+        assert_eq!(g1.dims(), &[self.dims[0], self.ranks[0]]);
+        assert_eq!(g2.dims(), &[self.dims[1], self.ranks[0], self.ranks[1]]);
+        assert_eq!(g3.dims(), &[self.dims[2], self.ranks[1]]);
+        (
+            sketch_rows(&self.cs1, &g1),
+            sketch_rows(&self.cs2, &g2),
+            sketch_rows(&self.cs3, &g3),
+        )
+    }
+
+    /// Estimate one entry by contracting the decompressed core rows.
+    pub fn estimate(&self, sk: &(Tensor, Tensor, Tensor), i: usize, j: usize, k: usize) -> f64 {
+        let (r1, r2) = (self.ranks[0], self.ranks[1]);
+        let (s1, s2, s3) = sk;
+        let b1 = self.cs1.h(i);
+        let b2 = self.cs2.h(j);
+        let b3 = self.cs3.h(k);
+        let sign = self.cs1.s(i) * self.cs2.s(j) * self.cs3.s(k);
+        let mut acc = 0.0;
+        for a in 0..r1 {
+            let g1v = s1.get(&[b1, a]);
+            if g1v == 0.0 {
+                continue;
+            }
+            for b in 0..r2 {
+                acc += g1v * s2.get(&[b2, a, b]) * s3.get(&[b3, b]);
+            }
+        }
+        sign * acc
+    }
+
+    pub fn decompress(&self, sk: &(Tensor, Tensor, Tensor)) -> Tensor {
+        let [n1, n2, n3] = self.dims;
+        let mut out = Tensor::zeros(&[n1, n2, n3]);
+        let mut pos = 0;
+        let od = out.data_mut();
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    od[pos] = self.estimate(sk, i, j, k);
+                    pos += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Sketch memory in floats: c(r1 + r1r2 + r2).
+    pub fn sketch_len(&self) -> usize {
+        self.c * (self.ranks[0] + self.ranks[0] * self.ranks[1] + self.ranks[1])
+    }
+}
+
+/// CS along the first (row/ambient) mode of a tensor, all trailing modes
+/// pass through.
+fn sketch_rows(cs: &CsSketcher, t: &Tensor) -> Tensor {
+    let n = t.dims()[0];
+    assert_eq!(n, cs.n);
+    let rest: usize = t.dims()[1..].iter().product();
+    let mut out_dims = t.dims().to_vec();
+    out_dims[0] = cs.c;
+    let mut out = Tensor::zeros(&out_dims);
+    let od = out.data_mut();
+    let src = t.data();
+    for i in 0..n {
+        let b = cs.h(i);
+        let s = cs.s(i);
+        for r in 0..rest {
+            od[b * rest + r] += s * src[i * rest + r];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// CTS combined baseline (the Table 6 comparator)
+// ---------------------------------------------------------------------
+
+/// The paper's Table 6 CTS cost row — `O(nr² + cr² log c + c)` — is for
+/// producing a *combined* sketch of T from the sketched cores via
+/// Pagh's convolution sequence:
+/// `CS(vec T) = Σ_{a,b} CS(G1[:,a]) * CS(G2[:,a,b]) * CS(G3[:,b])`
+/// under the composite hash `h(i,j,k) = h1(i)+h2(j)+h3(k) mod c`.
+#[derive(Clone, Debug)]
+pub struct CtsTtCombined {
+    pub dims: [usize; 3],
+    pub ranks: [usize; 2],
+    pub c: usize,
+    cs1: CsSketcher,
+    cs2: CsSketcher,
+    cs3: CsSketcher,
+}
+
+impl CtsTtCombined {
+    pub fn new(dims: &[usize; 3], ranks: &[usize; 2], c: usize, seed: u64) -> Self {
+        Self::with_repeat(dims, ranks, c, seed, 0)
+    }
+
+    pub fn with_repeat(
+        dims: &[usize; 3],
+        ranks: &[usize; 2],
+        c: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        let seeds = HashSeeds::new(seed);
+        Self {
+            dims: *dims,
+            ranks: *ranks,
+            c,
+            cs1: CsSketcher::new(dims[0], c, seeds.seed_for(repeat, 0)),
+            cs2: CsSketcher::new(dims[1], c, seeds.seed_for(repeat, 1)),
+            cs3: CsSketcher::new(dims[2], c, seeds.seed_for(repeat, 2)),
+        }
+    }
+
+    /// Combined length-`c` count sketch of `vec(T)`.
+    pub fn sketch(&self, t: &TtTensor) -> Vec<f64> {
+        use crate::fft::{Complex, Direction};
+        let g1 = t.g1_matrix(); // n1 × r1
+        let g2 = t.g2_tensor(); // n2 × r1 × r2
+        let g3 = t.g3_matrix(); // n3 × r2
+        let (r1, r2) = (self.ranks[0], self.ranks[1]);
+        let c = self.c;
+        // FFT of the per-column CS of G1 / G3, per-(a,b) of G2
+        let f1: Vec<Vec<Complex>> = (0..r1)
+            .map(|a| crate::fft::fft_real(&self.cs1.sketch(&g1.col(a))))
+            .collect();
+        let f3: Vec<Vec<Complex>> = (0..r2)
+            .map(|b| crate::fft::fft_real(&self.cs3.sketch(&g3.col(b))))
+            .collect();
+        let mut acc = vec![Complex::ZERO; c];
+        let mut fibre = vec![0.0f64; self.dims[1]];
+        for a in 0..r1 {
+            for b in 0..r2 {
+                for (j, f) in fibre.iter_mut().enumerate() {
+                    *f = g2.get(&[j, a, b]);
+                }
+                let f2 = crate::fft::fft_real(&self.cs2.sketch(&fibre));
+                for i in 0..c {
+                    acc[i] += f1[a][i] * f2[i] * f3[b][i];
+                }
+            }
+        }
+        crate::fft::plan(c).transform(&mut acc, Direction::Inverse);
+        acc.into_iter().map(|x| x.re).collect()
+    }
+
+    /// Point estimate under the composite hash.
+    #[inline]
+    pub fn estimate(&self, sk: &[f64], i: usize, j: usize, k: usize) -> f64 {
+        let b = (self.cs1.h(i) + self.cs2.h(j) + self.cs3.h(k)) % self.c;
+        self.cs1.s(i) * self.cs2.s(j) * self.cs3.s(k) * sk[b]
+    }
+
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        let [n1, n2, n3] = self.dims;
+        let mut out = Tensor::zeros(&[n1, n2, n3]);
+        let mut pos = 0;
+        let od = out.data_mut();
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    od[pos] = self.estimate(sk, i, j, k);
+                    pos += 1;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn sketch_len(&self) -> usize {
+        self.c
+    }
+}
+
+// ---------------------------------------------------------------------
+// MTS variant (Algorithm 5)
+// ---------------------------------------------------------------------
+
+/// MTS of a third-order TT tensor. Final sketch: `m1 × m3` matrix;
+/// memory O(m1·m3), computation O(nr² + m1m2 log(m1m2) + m1m2m3).
+#[derive(Clone, Debug)]
+pub struct MtsTt {
+    pub dims: [usize; 3],
+    pub ranks: [usize; 2],
+    pub m1: usize,
+    pub m2: usize,
+    pub m3: usize,
+    /// MTS for G1: rows n1→m1, cols r1→m2
+    sk_g1: MtsSketcher,
+    /// MTS for G3: rows n3→m1, cols r2→m2
+    sk_g3: MtsSketcher,
+    /// CS for G2's n2 axis → m3
+    cs_n2: CsSketcher,
+}
+
+impl MtsTt {
+    pub fn new(
+        dims: &[usize; 3],
+        ranks: &[usize; 2],
+        m1: usize,
+        m2: usize,
+        m3: usize,
+        seed: u64,
+    ) -> Self {
+        Self::with_repeat(dims, ranks, m1, m2, m3, seed, 0)
+    }
+
+    pub fn with_repeat(
+        dims: &[usize; 3],
+        ranks: &[usize; 2],
+        m1: usize,
+        m2: usize,
+        m3: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        let seeds = HashSeeds::new(seed);
+        Self {
+            dims: *dims,
+            ranks: *ranks,
+            m1,
+            m2,
+            m3,
+            sk_g1: MtsSketcher::with_repeat(&[dims[0], ranks[0]], &[m1, m2], seed, 2 * repeat),
+            sk_g3: MtsSketcher::with_repeat(
+                &[dims[2], ranks[1]],
+                &[m1, m2],
+                seed ^ 0xDEAD_BEEF,
+                2 * repeat + 1,
+            ),
+            cs_n2: CsSketcher::new(dims[1], m3, seeds.seed_for(repeat, 7)),
+        }
+    }
+
+    /// Algorithm 5 Compress: K = MTS(G1)*MTS(G3) (FFT2), G2 sketched
+    /// with the composite (r1,r2) hash and the n2 hash, P = K·G2'.
+    pub fn sketch(&self, t: &TtTensor) -> Tensor {
+        let g1 = t.g1_matrix();
+        let g2 = t.g2_tensor(); // n2 × r1 × r2
+        let g3 = t.g3_matrix();
+        assert_eq!(g1.dims(), &[self.dims[0], self.ranks[0]], "G1 shape");
+        assert_eq!(g3.dims(), &[self.dims[2], self.ranks[1]], "G3 shape");
+
+        // 1. K = MTS(G1 ⊗ G3) via FFT2 combine
+        let s1 = self.sk_g1.sketch(&g1);
+        let s3 = self.sk_g3.sketch(&g3);
+        let k = fft::circular_convolve2(s1.data(), s3.data(), self.m1, self.m2);
+
+        // 2. G2' ∈ ℝ^{m2×m3}: rows (a,b) composite-hashed with the
+        //    *column* hashes of G1/G3's sketches; cols j hashed by cs_n2
+        let (r1, r2) = (self.ranks[0], self.ranks[1]);
+        let n2 = self.dims[1];
+        let col1 = self.sk_g1.mode(1);
+        let col3 = self.sk_g3.mode(1);
+        let mut g2s = vec![0.0; self.m2 * self.m3];
+        for a in 0..r1 {
+            let h_a = col1.h(a);
+            let s_a = col1.s(a);
+            for b in 0..r2 {
+                let row = (h_a + col3.h(b)) % self.m2;
+                let s_ab = s_a * col3.s(b);
+                for j in 0..n2 {
+                    let col = self.cs_n2.h(j);
+                    g2s[row * self.m3 + col] +=
+                        s_ab * self.cs_n2.s(j) * g2.get(&[j, a, b]);
+                }
+            }
+        }
+
+        // 3. P = K · G2' (compressed matrix multiplication in sketch
+        //    space): m1×m2 · m2×m3
+        let kt = Tensor::from_vec(k, &[self.m1, self.m2]);
+        let g2t = Tensor::from_vec(g2s, &[self.m2, self.m3]);
+        kt.matmul(&g2t)
+    }
+
+    /// Estimate `T[i1, i2, i3]`.
+    #[inline]
+    pub fn estimate(&self, p: &Tensor, i1: usize, i2: usize, i3: usize) -> f64 {
+        let row1 = self.sk_g1.mode(0);
+        let row3 = self.sk_g3.mode(0);
+        let r = (row1.h(i1) + row3.h(i3)) % self.m1;
+        let c = self.cs_n2.h(i2);
+        row1.s(i1) * row3.s(i3) * self.cs_n2.s(i2) * p.get(&[r, c])
+    }
+
+    pub fn decompress(&self, p: &Tensor) -> Tensor {
+        let [n1, n2, n3] = self.dims;
+        let mut out = Tensor::zeros(&[n1, n2, n3]);
+        let mut pos = 0;
+        let od = out.data_mut();
+        for i1 in 0..n1 {
+            for i2 in 0..n2 {
+                for i3 in 0..n3 {
+                    od[pos] = self.estimate(p, i1, i2, i3);
+                    pos += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Final sketch memory in floats.
+    pub fn sketch_len(&self) -> usize {
+        self.m1 * self.m3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::{mean, median, variance};
+
+    fn small_tt(seed: u64) -> TtTensor {
+        let mut rng = Pcg64::new(seed);
+        TtTensor::random(&[6, 5, 6], &[2, 2], &mut rng)
+    }
+
+    #[test]
+    fn cts_tt_estimate_unbiased() {
+        let tt = small_tt(1);
+        let dense = tt.reconstruct();
+        let truth = dense.get(&[2, 3, 4]);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let s = CtsTt::with_repeat(&[6, 5, 6], &[2, 2], 4, 99, rep);
+                s.estimate(&s.sketch(&tt), 2, 3, 4)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn mts_tt_estimate_unbiased() {
+        let tt = small_tt(2);
+        let dense = tt.reconstruct();
+        let truth = dense.get(&[5, 1, 0]);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let s = MtsTt::with_repeat(&[6, 5, 6], &[2, 2], 6, 6, 4, 55, rep);
+                s.estimate(&s.sketch(&tt), 5, 1, 0)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn mts_tt_error_shrinks_with_sketch() {
+        let tt = small_tt(3);
+        let dense = tt.reconstruct();
+        let err_for = |m1: usize, m3: usize| {
+            let errs: Vec<f64> = (0..5)
+                .map(|rep| {
+                    let s = MtsTt::with_repeat(&[6, 5, 6], &[2, 2], m1, 8, m3, 7, rep);
+                    crate::tensor::rel_error(&dense, &s.decompress(&s.sketch(&tt)))
+                })
+                .collect();
+            median(&errs)
+        };
+        let e_small = err_for(4, 3);
+        let e_big = err_for(64, 5);
+        assert!(e_big < e_small, "small {e_small} vs big {e_big}");
+    }
+
+    #[test]
+    fn cts_tt_exact_when_no_collisions() {
+        // With c large, the per-core hashes are likely injective on the
+        // used indices; then estimates equal exact contraction values.
+        let tt = small_tt(4);
+        let dense = tt.reconstruct();
+        // find a repeat whose hashes are injective for all three cores
+        'outer: for rep in 0..50 {
+            let s = CtsTt::with_repeat(&[6, 5, 6], &[2, 2], 64, 123, rep);
+            for cs in [&s.cs1, &s.cs2, &s.cs3] {
+                let mut seen = std::collections::HashSet::new();
+                for i in 0..cs.n {
+                    if !seen.insert(cs.h(i)) {
+                        continue 'outer;
+                    }
+                }
+            }
+            let rec = s.decompress(&s.sketch(&tt));
+            assert!(crate::tensor::rel_error(&dense, &rec) < 1e-9);
+            return;
+        }
+        panic!("no injective hash family found in 50 repeats (c=64, n=6)");
+    }
+
+    #[test]
+    fn cts_combined_matches_direct_composite_scatter() {
+        let tt = small_tt(7);
+        let dense = tt.reconstruct();
+        let s = CtsTtCombined::new(&[6, 5, 6], &[2, 2], 16, 3);
+        let sk = s.sketch(&tt);
+        let mut direct = vec![0.0f64; 16];
+        for i in 0..6 {
+            for j in 0..5 {
+                for k in 0..6 {
+                    let b = (s.cs1.h(i) + s.cs2.h(j) + s.cs3.h(k)) % 16;
+                    direct[b] +=
+                        s.cs1.s(i) * s.cs2.s(j) * s.cs3.s(k) * dense.get(&[i, j, k]);
+                }
+            }
+        }
+        for (a, b) in sk.iter().zip(direct.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cts_combined_unbiased() {
+        let tt = small_tt(8);
+        let dense = tt.reconstruct();
+        let truth = dense.get(&[1, 2, 3]);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let s = CtsTtCombined::with_repeat(&[6, 5, 6], &[2, 2], 12, 44, rep);
+                s.estimate(&s.sketch(&tt), 1, 2, 3)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn sketch_lens() {
+        let cts = CtsTt::new(&[6, 5, 6], &[2, 2], 4, 0);
+        assert_eq!(cts.sketch_len(), 4 * (2 + 4 + 2));
+        let mts = MtsTt::new(&[6, 5, 6], &[2, 2], 6, 8, 4, 0);
+        assert_eq!(mts.sketch_len(), 24);
+    }
+}

@@ -1,0 +1,419 @@
+//! Sketching Tucker-form tensors (§3.1).
+//!
+//! - [`CtsTucker`] (Eq. 7, Thm 3.1): `CTS(T) = Σ_{abc} G_abc ·
+//!   CS(U_a) * CS(V_b) * CS(W_c)` — a length-`c` count sketch of
+//!   `vec(T)` under the composite hash `h(i,j,k) = Σ_k h_k(i_k) mod c`.
+//!   Computed in the frequency domain: one FFT per factor column, the
+//!   r³ summation as per-frequency multilinear contractions, one IFFT.
+//! - [`MtsTucker`] (Eq. 8, Thm 3.2): rewrite `vec(T) = (U⊗V⊗W)·vec(G)`
+//!   and run Pagh's compressed matrix multiplication *in MTS space*:
+//!   `MTS(U⊗V⊗W)` is the FFT2-combine of the factor sketches
+//!   (Lemma B.1 extended to N factors), `vec(G)` is count-sketched with
+//!   the matching composite column hash, and the product collapses the
+//!   m₂ axis. O(nr + r³ + m₁m₂log(m₁m₂)) vs CTS's O(r³(n + c log c)).
+//!
+//! Both sketchers work for any order N ≥ 2 (the paper presents N = 3).
+
+use super::mts::MtsSketcher;
+use crate::decomp::TuckerTensor;
+use crate::fft::{self, Complex, Direction};
+use crate::hash::{HashSeeds, ModeHash};
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// CTS variant (Eq. 7)
+// ---------------------------------------------------------------------
+
+/// Count-sketch of a Tucker-form tensor into a length-`c` vector.
+#[derive(Clone, Debug)]
+pub struct CtsTucker {
+    pub dims: Vec<usize>,
+    pub c: usize,
+    /// per-mode (h, s) over the ambient index n_k
+    pub(crate) modes: Vec<ModeHash>,
+}
+
+impl CtsTucker {
+    pub fn new(dims: &[usize], c: usize, seed: u64) -> Self {
+        Self::with_repeat(dims, c, seed, 0)
+    }
+
+    pub fn with_repeat(dims: &[usize], c: usize, seed: u64, repeat: usize) -> Self {
+        let seeds = HashSeeds::new(seed);
+        let modes = dims
+            .iter()
+            .enumerate()
+            .map(|(k, &n)| ModeHash::new(n, c, seeds.seed_for(repeat, k)))
+            .collect();
+        Self { dims: dims.to_vec(), c, modes }
+    }
+
+    /// Sketch from the decomposed form — never reconstructs the dense
+    /// tensor (that is the whole point).
+    pub fn sketch(&self, t: &TuckerTensor) -> Vec<f64> {
+        assert_eq!(t.dims(), self.dims, "Tucker dims mismatch");
+        let n_modes = self.dims.len();
+        let ranks = t.ranks();
+        // FFT of CS of each factor column: per mode an r_k × c complex table
+        let spectra: Vec<Vec<Vec<Complex>>> = (0..n_modes)
+            .map(|k| {
+                let f = &t.factors[k];
+                (0..ranks[k])
+                    .map(|col| {
+                        let mut cs = vec![0.0; self.c];
+                        for i in 0..self.dims[k] {
+                            cs[self.modes[k].h(i)] += self.modes[k].s(i) * f.at2(i, col);
+                        }
+                        fft::fft_real(&cs)
+                    })
+                    .collect()
+            })
+            .collect();
+        // frequency-domain accumulation: for each frequency f,
+        // acc[f] = Σ_{a,b,…} G[a,b,…] ∏_k spectra[k][idx_k][f]
+        // computed as a sequential contraction of G with the per-mode
+        // spectral vectors (O(c·Σ r^k) instead of O(c·r^N·N)).
+        let mut acc = vec![Complex::ZERO; self.c];
+        let core = &t.core;
+        for (f, a) in acc.iter_mut().enumerate() {
+            // contract core with vectors v_k[j] = spectra[k][j][f]
+            let mut cur: Vec<Complex> =
+                core.data().iter().map(|&x| Complex::new(x, 0.0)).collect();
+            let mut cur_len = cur.len();
+            for k in (0..n_modes).rev() {
+                // contract the last mode of cur (length ranks[k])
+                let rk = ranks[k];
+                let rows = cur_len / rk;
+                let mut next = vec![Complex::ZERO; rows];
+                for (row, n_) in next.iter_mut().enumerate() {
+                    let mut s = Complex::ZERO;
+                    for j in 0..rk {
+                        s += cur[row * rk + j] * spectra[k][j][f];
+                    }
+                    *n_ = s;
+                }
+                cur = next;
+                cur_len = rows;
+            }
+            *a = cur[0];
+        }
+        fft::plan(self.c).transform(&mut acc, Direction::Inverse);
+        acc.into_iter().map(|x| x.re).collect()
+    }
+
+    /// Point estimate `T̂[idx]`.
+    #[inline]
+    pub fn estimate(&self, sk: &[f64], idx: &[usize]) -> f64 {
+        let mut bucket = 0usize;
+        let mut sign = 1.0;
+        for (k, &i) in idx.iter().enumerate() {
+            bucket += self.modes[k].h(i);
+            sign *= self.modes[k].s(i);
+        }
+        sign * sk[bucket % self.c]
+    }
+
+    /// Full dense reconstruction.
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        let mut out = Tensor::zeros(&self.dims);
+        let n = self.dims.len();
+        let mut idx = vec![0usize; n];
+        for v in out.data_mut() {
+            *v = self.estimate(sk, &idx);
+            for k in (0..n).rev() {
+                idx[k] += 1;
+                if idx[k] < self.dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        out
+    }
+
+    /// Sketch memory in floats (Table 4's O(cr + r³) counts the
+    /// intermediates; the *sketch itself* is c).
+    pub fn sketch_len(&self) -> usize {
+        self.c
+    }
+}
+
+// ---------------------------------------------------------------------
+// MTS variant (Eq. 8)
+// ---------------------------------------------------------------------
+
+/// MTS of a Tucker-form tensor via compressed matrix multiplication in
+/// sketch space. Final sketch: length-`m1` count sketch of `vec(T)`
+/// under the composite row hash, produced through an `m1 × m2`
+/// intermediate (the MTS of `U⊗V⊗…`).
+#[derive(Clone, Debug)]
+pub struct MtsTucker {
+    pub dims: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub m1: usize,
+    pub m2: usize,
+    /// per-factor MTS (rows n_k → m1, cols r_k → m2)
+    pub(crate) factor_sk: Vec<MtsSketcher>,
+}
+
+impl MtsTucker {
+    pub fn new(dims: &[usize], ranks: &[usize], m1: usize, m2: usize, seed: u64) -> Self {
+        Self::with_repeat(dims, ranks, m1, m2, seed, 0)
+    }
+
+    pub fn with_repeat(
+        dims: &[usize],
+        ranks: &[usize],
+        m1: usize,
+        m2: usize,
+        seed: u64,
+        repeat: usize,
+    ) -> Self {
+        assert_eq!(dims.len(), ranks.len());
+        let factor_sk = dims
+            .iter()
+            .zip(ranks.iter())
+            .enumerate()
+            .map(|(k, (&n, &r))| {
+                MtsSketcher::with_repeat(
+                    &[n, r],
+                    &[m1, m2],
+                    seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    repeat,
+                )
+            })
+            .collect();
+        Self { dims: dims.to_vec(), ranks: ranks.to_vec(), m1, m2, factor_sk }
+    }
+
+    /// Sketch from the decomposed form.
+    pub fn sketch(&self, t: &TuckerTensor) -> Vec<f64> {
+        assert_eq!(t.dims(), self.dims, "Tucker dims mismatch");
+        assert_eq!(t.ranks(), self.ranks, "Tucker ranks mismatch");
+        // 1. MTS of each factor, combined in the 2-D frequency domain:
+        //    MTS(U ⊗ V ⊗ …) = IFFT2(∏ FFT2(MTS(U_k)))  [Lemma B.1, N-ary]
+        let mut freq: Option<Vec<Complex>> = None;
+        for (k, f) in t.factors.iter().enumerate() {
+            let sk = self.factor_sk[k].sketch(f);
+            let fa = fft::fft2_real(sk.data(), self.m1, self.m2);
+            freq = Some(match freq {
+                None => fa,
+                Some(mut acc) => {
+                    for (a, b) in acc.iter_mut().zip(fa.iter()) {
+                        *a = *a * *b;
+                    }
+                    acc
+                }
+            });
+        }
+        let kron_sketch = fft::ifft2_to_real(freq.unwrap(), self.m1, self.m2); // m1×m2
+
+        // 2. CS of vec(G) under the composite column hash
+        let csg = self.sketch_core(&t.core);
+
+        // 3. collapse the m2 axis: out[t1] = Σ_{t2} K[t1,t2]·csg[t2]
+        let mut out = vec![0.0; self.m1];
+        for t1 in 0..self.m1 {
+            let row = &kron_sketch[t1 * self.m2..(t1 + 1) * self.m2];
+            let mut acc = 0.0;
+            for (x, g) in row.iter().zip(csg.iter()) {
+                acc += x * g;
+            }
+            out[t1] = acc;
+        }
+        out
+    }
+
+    /// CS of `vec(G)` with composite column hash
+    /// `h(a,b,…) = Σ_k h₂ₖ(a_k) mod m2`, sign `∏ s₂ₖ(a_k)`.
+    /// Exposed for the CP special case (diagonal core).
+    pub fn sketch_core(&self, core: &Tensor) -> Vec<f64> {
+        assert_eq!(core.dims(), self.ranks.as_slice());
+        let n = self.ranks.len();
+        let mut out = vec![0.0; self.m2];
+        let mut idx = vec![0usize; n];
+        for &g in core.data() {
+            if g != 0.0 {
+                let mut bucket = 0usize;
+                let mut sign = 1.0;
+                for (k, &a) in idx.iter().enumerate() {
+                    let mode = self.factor_sk[k].mode(1);
+                    bucket += mode.h(a);
+                    sign *= mode.s(a);
+                }
+                out[bucket % self.m2] += sign * g;
+            }
+            for k in (0..n).rev() {
+                idx[k] += 1;
+                if idx[k] < self.ranks[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        out
+    }
+
+    /// Point estimate: `T̂[idx] = ∏ s₁ₖ(i_k) · sk[Σ h₁ₖ(i_k) mod m1]`.
+    #[inline]
+    pub fn estimate(&self, sk: &[f64], idx: &[usize]) -> f64 {
+        let mut bucket = 0usize;
+        let mut sign = 1.0;
+        for (k, &i) in idx.iter().enumerate() {
+            let mode = self.factor_sk[k].mode(0);
+            bucket += mode.h(i);
+            sign *= mode.s(i);
+        }
+        sign * sk[bucket % self.m1]
+    }
+
+    pub fn decompress(&self, sk: &[f64]) -> Tensor {
+        let mut out = Tensor::zeros(&self.dims);
+        let n = self.dims.len();
+        let mut idx = vec![0usize; n];
+        for v in out.data_mut() {
+            *v = self.estimate(sk, &idx);
+            for k in (0..n).rev() {
+                idx[k] += 1;
+                if idx[k] < self.dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        out
+    }
+
+    pub fn sketch_len(&self) -> usize {
+        self.m1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::util::stats::{mean, median};
+
+    fn small_tucker(seed: u64) -> TuckerTensor {
+        let mut rng = Pcg64::new(seed);
+        TuckerTensor::random(&[6, 6, 6], &[2, 2, 2], &mut rng)
+    }
+
+    #[test]
+    fn cts_sketch_equals_direct_composite_cs_of_dense() {
+        // the factored computation must equal count-sketching the dense
+        // tensor with the composite hash
+        let t = small_tucker(1);
+        let dense = t.reconstruct();
+        let cts = CtsTucker::new(&[6, 6, 6], 16, 11);
+        let sk = cts.sketch(&t);
+        let mut direct = vec![0.0; 16];
+        for i in 0..6 {
+            for j in 0..6 {
+                for k in 0..6 {
+                    let b = (cts.modes[0].h(i) + cts.modes[1].h(j) + cts.modes[2].h(k)) % 16;
+                    let s = cts.modes[0].s(i) * cts.modes[1].s(j) * cts.modes[2].s(k);
+                    direct[b] += s * dense.get(&[i, j, k]);
+                }
+            }
+        }
+        for (a, b) in sk.iter().zip(direct.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cts_estimate_unbiased() {
+        let t = small_tucker(2);
+        let dense = t.reconstruct();
+        let target = [1usize, 4, 2];
+        let truth = dense.get(&target);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let cts = CtsTucker::with_repeat(&[6, 6, 6], 24, 500, rep);
+                cts.estimate(&cts.sketch(&t), &target)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (crate::util::stats::variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn mts_estimate_unbiased() {
+        let t = small_tucker(3);
+        let dense = t.reconstruct();
+        let target = [0usize, 3, 5];
+        let truth = dense.get(&target);
+        let reps = 2500;
+        let est: Vec<f64> = (0..reps)
+            .map(|rep| {
+                let mts = MtsTucker::with_repeat(&[6, 6, 6], &[2, 2, 2], 8, 8, 900, rep);
+                mts.estimate(&mts.sketch(&t), &target)
+            })
+            .collect();
+        let m = mean(&est);
+        let spread = (crate::util::stats::variance(&est) / reps as f64).sqrt();
+        assert!((m - truth).abs() < 5.0 * spread.max(0.02), "{m} vs {truth}");
+    }
+
+    #[test]
+    fn median_of_d_recovery_improves_with_sketch_size() {
+        let t = small_tucker(4);
+        let dense = t.reconstruct();
+        let err_for = |m1: usize| {
+            let errs: Vec<f64> = (0..5)
+                .map(|rep| {
+                    let mts = MtsTucker::with_repeat(&[6, 6, 6], &[2, 2, 2], m1, 16, 77, rep);
+                    let rec = mts.decompress(&mts.sketch(&t));
+                    crate::tensor::rel_error(&dense, &rec)
+                })
+                .collect();
+            median(&errs)
+        };
+        let e_small = err_for(8);
+        let e_big = err_for(128);
+        assert!(e_big < e_small, "m1=8→{e_small}, m1=128→{e_big}");
+    }
+
+    #[test]
+    fn mts_core_sketch_diagonal_matches_full() {
+        // a diagonal core sketched via sketch_core equals sketching the
+        // dense core (CP-consistency check)
+        let ranks = [3usize, 3, 3];
+        let mts = MtsTucker::new(&[5, 5, 5], &ranks, 4, 4, 5);
+        let mut core = Tensor::zeros(&ranks);
+        for i in 0..3 {
+            core.set(&[i, i, i], (i + 1) as f64);
+        }
+        let got = mts.sketch_core(&core);
+        // direct
+        let mut want = vec![0.0; 4];
+        for i in 0..3 {
+            let mut b = 0usize;
+            let mut s = 1.0;
+            for k in 0..3 {
+                b += mts.factor_sk[k].mode(1).h(i);
+                s *= mts.factor_sk[k].mode(1).s(i);
+            }
+            want[b % 4] += s * (i + 1) as f64;
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fourth_order_tucker_sketch() {
+        let mut rng = Pcg64::new(6);
+        let t = TuckerTensor::random(&[4, 4, 4, 4], &[2, 2, 2, 2], &mut rng);
+        let cts = CtsTucker::new(&[4, 4, 4, 4], 32, 8);
+        let sk = cts.sketch(&t);
+        assert_eq!(sk.len(), 32);
+        let mts = MtsTucker::new(&[4, 4, 4, 4], &[2, 2, 2, 2], 16, 8, 8);
+        let sk2 = mts.sketch(&t);
+        assert_eq!(sk2.len(), 16);
+        // shapes + finite values
+        assert!(sk.iter().chain(sk2.iter()).all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,383 @@
+//! Row-major dense tensor of f64.
+
+use crate::rng::Pcg64;
+
+/// Dense N-th-order tensor, row-major (last mode fastest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    // ---------- constructors ----------
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f64>, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "data length {} != product of dims {:?}", data.len(), dims);
+        Self { dims: dims.to_vec(), data }
+    }
+
+    /// Scalar tensor (order 0).
+    pub fn scalar(v: f64) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    /// iid standard-normal entries.
+    pub fn randn(dims: &[usize], rng: &mut Pcg64) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims: dims.to_vec(), data: rng.normal_vec(n) }
+    }
+
+    /// iid uniform entries in `[lo, hi)`.
+    pub fn rand_uniform(dims: &[usize], lo: f64, hi: f64, rng: &mut Pcg64) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims: dims.to_vec(), data: rng.uniform_vec(n, lo, hi) }
+    }
+
+    /// Identity matrix n×n.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    // ---------- accessors ----------
+
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.dims.len()];
+        for k in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[k] = s[k + 1] * self.dims[k + 1];
+        }
+        s
+    }
+
+    /// Flatten a multi-index to the linear offset.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        for (k, (&i, &d)) in idx.iter().zip(self.dims.iter()).enumerate() {
+            debug_assert!(i < d, "index {i} out of bounds for mode {k} (dim {d})");
+            off = off * d + i;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// 2-D accessor (matrices).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f64 {
+        debug_assert_eq!(self.order(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    // ---------- shape manipulation ----------
+
+    /// Reinterpret with new dims (same number of elements, no copy).
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?} changes size", self.dims, dims);
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// Permute modes: `perm[k]` is the source mode that becomes mode k.
+    pub fn permute(&self, perm: &[usize]) -> Self {
+        assert_eq!(perm.len(), self.dims.len());
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(!seen[p], "permute: duplicate mode {p}");
+            seen[p] = true;
+        }
+        let new_dims: Vec<usize> = perm.iter().map(|&p| self.dims[p]).collect();
+        let src_strides = self.strides();
+        let mut out = Tensor::zeros(&new_dims);
+        let mut idx = vec![0usize; new_dims.len()];
+        for o in out.data.iter_mut() {
+            let mut src = 0;
+            for (k, &i) in idx.iter().enumerate() {
+                src += i * src_strides[perm[k]];
+            }
+            *o = self.data[src];
+            // increment row-major multi-index
+            for k in (0..idx.len()).rev() {
+                idx[k] += 1;
+                if idx[k] < new_dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        out
+    }
+
+    /// Mode-k unfolding as an `n_k × (∏_{j≠k} n_j)` matrix (Kolda
+    /// convention: remaining modes in original order, row-major).
+    pub fn unfold(&self, mode: usize) -> Tensor {
+        assert!(mode < self.dims.len());
+        let nk = self.dims[mode];
+        let rest: usize = self.len() / nk;
+        let mut perm: Vec<usize> = vec![mode];
+        perm.extend((0..self.dims.len()).filter(|&k| k != mode));
+        self.permute(&perm).reshape(&[nk, rest])
+    }
+
+    /// Inverse of [`Tensor::unfold`]: fold an `n_mode × rest` matrix back
+    /// into `dims`.
+    pub fn fold(mat: &Tensor, mode: usize, dims: &[usize]) -> Tensor {
+        assert_eq!(mat.order(), 2);
+        let mut permuted_dims: Vec<usize> = vec![dims[mode]];
+        permuted_dims.extend(dims.iter().enumerate().filter(|&(k, _)| k != mode).map(|(_, &d)| d));
+        let t = mat.clone().reshape(&permuted_dims);
+        // inverse permutation of [mode, 0, 1, .., mode-1, mode+1, ..]
+        let mut perm = vec![0usize; dims.len()];
+        perm[mode] = 0;
+        let mut src = 1;
+        for (k, p) in perm.iter_mut().enumerate() {
+            if k != mode {
+                *p = src;
+                src += 1;
+            }
+        }
+        t.permute(&perm)
+    }
+
+    // ---------- arithmetic ----------
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn scale(&self, s: f64) -> Self {
+        Self { dims: self.dims.clone(), data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Self {
+        assert_eq!(self.dims, o.dims);
+        let data = self.data.iter().zip(o.data.iter()).map(|(a, b)| a + b).collect();
+        Self { dims: self.dims.clone(), data }
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Self {
+        assert_eq!(self.dims, o.dims);
+        let data = self.data.iter().zip(o.data.iter()).map(|(a, b)| a - b).collect();
+        Self { dims: self.dims.clone(), data }
+    }
+
+    /// Hadamard (element-wise) product — `∘` in the paper.
+    pub fn hadamard(&self, o: &Tensor) -> Self {
+        assert_eq!(self.dims, o.dims);
+        let data = self.data.iter().zip(o.data.iter()).map(|(a, b)| a * b).collect();
+        Self { dims: self.dims.clone(), data }
+    }
+
+    pub fn add_assign(&mut self, o: &Tensor) {
+        assert_eq!(self.dims, o.dims);
+        for (a, b) in self.data.iter_mut().zip(o.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Matrix multiply (both order-2).
+    pub fn matmul(&self, o: &Tensor) -> Tensor {
+        assert_eq!(self.order(), 2, "matmul lhs must be a matrix");
+        assert_eq!(o.order(), 2, "matmul rhs must be a matrix");
+        let (m, k) = (self.dims[0], self.dims[1]);
+        let (k2, n) = (o.dims[0], o.dims[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0; m * n];
+        // ikj loop order: streams rhs rows, writes each out row repeatedly
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &o.data[kk * n..(kk + 1) * n];
+                for (ov, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *ov += a * bv;
+                }
+            }
+        }
+        Tensor::from_vec(out, &[m, n])
+    }
+
+    /// Matrix transpose (order-2).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.order(), 2);
+        self.permute(&[1, 0])
+    }
+
+    /// Extract column `j` of a matrix.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        assert_eq!(self.order(), 2);
+        let (m, n) = (self.dims[0], self.dims[1]);
+        assert!(j < n);
+        (0..m).map(|i| self.data[i * n + j]).collect()
+    }
+
+    /// Extract row `i` of a matrix.
+    pub fn row(&self, i: usize) -> &[f64] {
+        assert_eq!(self.order(), 2);
+        let n = self.dims[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_row_major() {
+        let t = Tensor::from_vec((0..24).map(|x| x as f64).collect(), &[2, 3, 4]);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 0, 3]), 3.0);
+        assert_eq!(t.get(&[0, 1, 0]), 4.0);
+        assert_eq!(t.get(&[1, 0, 0]), 12.0);
+        assert_eq!(t.get(&[1, 2, 3]), 23.0);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn permute_transpose_matrix() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let tt = t.permute(&[1, 0]);
+        assert_eq!(tt.dims(), &[3, 2]);
+        assert_eq!(tt.data(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn permute_roundtrip_3d() {
+        let mut rng = Pcg64::new(1);
+        let t = Tensor::randn(&[3, 4, 5], &mut rng);
+        let p = t.permute(&[2, 0, 1]);
+        assert_eq!(p.dims(), &[5, 3, 4]);
+        let back = p.permute(&[1, 2, 0]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let t = Tensor::randn(&[3, 4, 5], &mut rng);
+        for mode in 0..3 {
+            let u = t.unfold(mode);
+            assert_eq!(u.dims()[0], t.dims()[mode]);
+            let back = Tensor::fold(&u, mode, t.dims());
+            assert_eq!(back, t, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn unfold_values_mode1() {
+        // T[i,j] laid out [2,3]; unfold(1) is the transpose
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let u = t.unfold(1);
+        assert_eq!(u.dims(), &[3, 2]);
+        assert_eq!(u.data(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![5.0, 6.0, 7.0, 8.0], &[2, 2]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(3);
+        let a = Tensor::randn(&[4, 4], &mut rng);
+        let i = Tensor::eye(4);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn fro_norm_345() {
+        let t = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hadamard_and_add() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert_eq!(a.hadamard(&b).data(), &[3.0, 8.0]);
+        assert_eq!(a.add(&b).data(), &[4.0, 6.0]);
+        assert_eq!(b.sub(&a).data(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape")]
+    fn reshape_size_mismatch_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn col_row_access() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(a.col(1), vec![2.0, 5.0]);
+        assert_eq!(a.row(1), &[4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Kronecker, outer, and tensor products — the expensive operations the
+//! sketch layer avoids materializing (Figs. 4–6).
+
+use super::dense::Tensor;
+
+/// Kronecker product of two matrices:
+/// `(A ⊗ B)[n3(p-1)+h, n4(q-1)+g] = A[p,q]·B[h,g]`
+/// (paper Appendix B.1; 0-based here).
+pub fn kron(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.order(), 2, "kron lhs must be a matrix");
+    assert_eq!(b.order(), 2, "kron rhs must be a matrix");
+    let (n1, n2) = (a.dims()[0], a.dims()[1]);
+    let (n3, n4) = (b.dims()[0], b.dims()[1]);
+    let mut out = Tensor::zeros(&[n1 * n3, n2 * n4]);
+    let cols = n2 * n4;
+    {
+        let od = out.data_mut();
+        for p in 0..n1 {
+            for q in 0..n2 {
+                let av = a.at2(p, q);
+                if av == 0.0 {
+                    continue;
+                }
+                for h in 0..n3 {
+                    let orow = (p * n3 + h) * cols;
+                    let brow = b.row(h);
+                    for (g, &bv) in brow.iter().enumerate() {
+                        od[orow + q * n4 + g] = av * bv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Kronecker product of two vectors (= flattened outer product).
+pub fn kron_vec(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(a.len() * b.len());
+    for &x in a {
+        for &y in b {
+            out.push(x * y);
+        }
+    }
+    out
+}
+
+/// Outer (tensor) product of N vectors: order-N tensor with
+/// `T[i₁,…,i_N] = v₁[i₁]⋯v_N[i_N]`.
+pub fn outer(vs: &[&[f64]]) -> Tensor {
+    assert!(!vs.is_empty());
+    let dims: Vec<usize> = vs.iter().map(|v| v.len()).collect();
+    let mut data = vec![1.0];
+    for v in vs {
+        let mut next = Vec::with_capacity(data.len() * v.len());
+        for &d in &data {
+            for &x in v.iter() {
+                next.push(d * x);
+            }
+        }
+        data = next;
+    }
+    Tensor::from_vec(data, &dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::rel_error;
+
+    #[test]
+    fn kron_2x2_known() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![0.0, 1.0, 1.0, 0.0], &[2, 2]);
+        let k = kron(&a, &b);
+        assert_eq!(k.dims(), &[4, 4]);
+        #[rustfmt::skip]
+        let want = vec![
+            0.0, 1.0, 0.0, 2.0,
+            1.0, 0.0, 2.0, 0.0,
+            0.0, 3.0, 0.0, 4.0,
+            3.0, 0.0, 4.0, 0.0,
+        ];
+        assert_eq!(k.data(), want.as_slice());
+    }
+
+    #[test]
+    fn kron_rect_shapes() {
+        let mut rng = Pcg64::new(1);
+        let a = Tensor::randn(&[2, 3], &mut rng);
+        let b = Tensor::randn(&[4, 5], &mut rng);
+        let k = kron(&a, &b);
+        assert_eq!(k.dims(), &[8, 15]);
+        for p in 0..2 {
+            for q in 0..3 {
+                for h in 0..4 {
+                    for g in 0..5 {
+                        let want = a.at2(p, q) * b.at2(h, g);
+                        assert!((k.at2(p * 4 + h, q * 5 + g) - want).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kron_mixed_product_property() {
+        // (A⊗B)(C⊗D) = (AC)⊗(BD)
+        let mut rng = Pcg64::new(2);
+        let a = Tensor::randn(&[2, 3], &mut rng);
+        let b = Tensor::randn(&[2, 2], &mut rng);
+        let c = Tensor::randn(&[3, 2], &mut rng);
+        let d = Tensor::randn(&[2, 3], &mut rng);
+        let lhs = kron(&a, &b).matmul(&kron(&c, &d));
+        let rhs = kron(&a.matmul(&c), &b.matmul(&d));
+        assert!(rel_error(&rhs, &lhs) < 1e-12);
+    }
+
+    #[test]
+    fn kron_vec_matches_outer() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0, 5.0];
+        let kv = kron_vec(&a, &b);
+        let o = outer(&[&a, &b]);
+        assert_eq!(kv, o.data());
+        assert_eq!(kv, vec![3.0, 4.0, 5.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn outer_three_vectors() {
+        let u = [1.0, 2.0];
+        let v = [1.0, -1.0];
+        let w = [2.0, 0.0, 1.0];
+        let t = outer(&[&u, &v, &w]);
+        assert_eq!(t.dims(), &[2, 2, 3]);
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..3 {
+                    assert_eq!(t.get(&[i, j, k]), u[i] * v[j] * w[k]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vec_of_kron_matrix_equals_kron_of_unfoldings() {
+        // sanity: T = u⊗v⊗w reshaped matches kron structure
+        let u = [1.0, 2.0, 3.0];
+        let v = [4.0, 5.0];
+        let t = outer(&[&u, &v]);
+        let k = kron_vec(&u, &v);
+        assert_eq!(t.data(), k.as_slice());
+    }
+}

@@ -1,0 +1,53 @@
+//! Dense tensor substrate: strided row-major tensors of `f64` with the
+//! operations the paper's algorithms need — reshape/permute, mode-k
+//! unfoldings, tensor (outer) products, Kronecker products, full
+//! multilinear contraction `T(V₁,…,V_N)` (Eq. 3), and norms.
+//!
+//! This is deliberately a from-scratch substrate (no ndarray offline);
+//! the contraction kernel follows the "extended BLAS" observation of
+//! Shi et al. (2016) that the paper cites: a single-mode contraction is
+//! a batch of GEMMs over the untouched trailing modes and needs no
+//! transposition/copy.
+
+pub mod contract;
+pub mod dense;
+pub mod kron;
+
+pub use contract::{mode_k_product, multilinear, ModeKTiming};
+pub use dense::Tensor;
+pub use kron::{kron, kron_vec, outer};
+
+/// Relative Frobenius error ‖a − b‖_F / ‖a‖_F — the paper's Fig. 8/9
+/// error metric.
+pub fn rel_error(truth: &Tensor, approx: &Tensor) -> f64 {
+    assert_eq!(truth.dims(), approx.dims(), "rel_error shape mismatch");
+    let denom = truth.fro_norm();
+    let mut num = 0.0;
+    for (x, y) in truth.data().iter().zip(approx.data().iter()) {
+        let d = x - y;
+        num += d * d;
+    }
+    if denom == 0.0 {
+        num.sqrt()
+    } else {
+        num.sqrt() / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(rel_error(&t, &t.clone()), 0.0);
+    }
+
+    #[test]
+    fn rel_error_scales() {
+        let a = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        let b = Tensor::from_vec(vec![0.0, 0.0], &[2]);
+        assert!((rel_error(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Synthetic image-classification corpus — the CIFAR-10 stand-in.
+//!
+//! The paper's Fig. 10/12 experiment measures how much accuracy a
+//! *sketched* TRL head loses relative to the exact TRL and FC heads.
+//! What that comparison needs from the data is (a) multi-class image
+//! structure whose discriminative signal lives in *spatially low-rank*
+//! activation patterns (that is what a Tucker-form regression weight
+//! models), and (b) enough noise that generalization is non-trivial.
+//!
+//! Each class k gets a fixed template built from a few outer-product
+//! (rank-1) spatial patterns per channel plus a class-colored quadrant;
+//! samples are `α·template + σ·noise` with random per-sample contrast α.
+//! See DESIGN.md §Substitutions.
+
+use crate::rng::Pcg64;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+/// Deterministic synthetic dataset; train and test draw from the same
+/// class templates but disjoint RNG streams.
+pub struct SyntheticImages {
+    /// class templates, each H×W×C (row-major, channel-last)
+    templates: Vec<Vec<f32>>,
+    /// per-sample noise level
+    pub noise: f32,
+    rng: Pcg64,
+}
+
+impl SyntheticImages {
+    /// `stream`: 0 = train, 1 = test (disjoint sample streams, shared
+    /// templates derived from `seed`).
+    pub fn new(seed: u64, stream: u64, noise: f32) -> Self {
+        let mut trng = Pcg64::new(seed); // template rng: shared
+        let templates = (0..NUM_CLASSES).map(|k| Self::make_template(k, &mut trng)).collect();
+        Self {
+            templates,
+            noise,
+            rng: Pcg64::new(seed ^ (0xABCD_EF00 + stream * 0x1234_5678_9ABC)),
+        }
+    }
+
+    fn make_template(class: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let mut t = vec![0.0f32; H * W * C];
+        // rank-2 spatial pattern per channel
+        for ch in 0..C {
+            for _ in 0..2 {
+                let u: Vec<f32> = (0..H).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..W).map(|_| rng.normal() as f32).collect();
+                for i in 0..H {
+                    for j in 0..W {
+                        t[(i * W + j) * C + ch] += 0.6 * u[i] * v[j];
+                    }
+                }
+            }
+        }
+        // weak class-colored quadrant cue: kept small so the task is not
+        // linearly trivial — most of the class signal lives in the
+        // rank-2 spatial patterns above, which is exactly what a
+        // (sketched) Tucker regression weight has to capture
+        let qi = (class / 4) % 2;
+        let qj = (class / 2) % 2;
+        let ch = class % C;
+        for i in qi * (H / 2)..qi * (H / 2) + H / 2 {
+            for j in qj * (W / 2)..qj * (W / 2) + W / 2 {
+                t[(i * W + j) * C + ch] += 0.5;
+            }
+        }
+        t
+    }
+
+    /// Sample a batch: returns (images `[b, H, W, C]` flat, labels).
+    pub fn batch(&mut self, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(b * H * W * C);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let k = self.rng.gen_range(NUM_CLASSES as u64) as usize;
+            ys.push(k as i32);
+            let alpha = 0.7 + 0.6 * self.rng.uniform() as f32;
+            let tpl = &self.templates[k];
+            for &tv in tpl.iter() {
+                xs.push(alpha * tv + self.noise * self.rng.normal() as f32);
+            }
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_label_range() {
+        let mut ds = SyntheticImages::new(1, 0, 0.5);
+        let (xs, ys) = ds.batch(16);
+        assert_eq!(xs.len(), 16 * H * W * C);
+        assert_eq!(ys.len(), 16);
+        assert!(ys.iter().all(|&y| (0..NUM_CLASSES as i32).contains(&y)));
+    }
+
+    #[test]
+    fn train_and_test_streams_differ_but_share_templates() {
+        let mut train = SyntheticImages::new(7, 0, 0.0);
+        let mut test = SyntheticImages::new(7, 1, 0.0);
+        let (xa, _) = train.batch(4);
+        let (xb, _) = test.batch(4);
+        assert_ne!(xa, xb, "streams should draw different samples");
+        // with zero noise, samples of the same class from either stream
+        // are collinear with the shared template: correlation of two
+        // same-class samples ≈ 1
+        let mut a = SyntheticImages::new(9, 0, 0.0);
+        let (xs, ys) = a.batch(64);
+        let mut by_class: std::collections::HashMap<i32, Vec<usize>> = Default::default();
+        for (i, &y) in ys.iter().enumerate() {
+            by_class.entry(y).or_default().push(i);
+        }
+        for (_, idxs) in by_class {
+            if idxs.len() < 2 {
+                continue;
+            }
+            let n = H * W * C;
+            let s1 = &xs[idxs[0] * n..(idxs[0] + 1) * n];
+            let s2 = &xs[idxs[1] * n..(idxs[1] + 1) * n];
+            let v1: Vec<f64> = s1.iter().map(|&v| v as f64).collect();
+            let v2: Vec<f64> = s2.iter().map(|&v| v as f64).collect();
+            let corr = crate::util::stats::correlation(&v1, &v2);
+            assert!(corr > 0.99, "same-class zero-noise corr={corr}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // different-class templates should have low correlation
+        let mut ds = SyntheticImages::new(3, 0, 0.0);
+        let (xs, ys) = ds.batch(64);
+        let n = H * W * C;
+        let mut found = 0;
+        for i in 0..ys.len() {
+            for j in i + 1..ys.len() {
+                if ys[i] != ys[j] {
+                    let v1: Vec<f64> = xs[i * n..(i + 1) * n].iter().map(|&v| v as f64).collect();
+                    let v2: Vec<f64> = xs[j * n..(j + 1) * n].iter().map(|&v| v as f64).collect();
+                    let corr = crate::util::stats::correlation(&v1, &v2).abs();
+                    assert!(corr < 0.9, "cross-class corr={corr}");
+                    found += 1;
+                    if found > 10 {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SyntheticImages::new(5, 0, 0.3);
+        let mut b = SyntheticImages::new(5, 0, 0.3);
+        assert_eq!(a.batch(8), b.batch(8));
+    }
+}

@@ -1,0 +1,10 @@
+//! End-to-end training driver for the paper's §4.3 experiment: train the
+//! conv + (sketched) tensor-regression-layer models through the AOT
+//! `train_step` artifacts — the Rust binary drives every step; Python
+//! was only involved at build time.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::SyntheticImages;
+pub use trainer::{TrainHistory, Trainer};

@@ -1,0 +1,276 @@
+//! The training loop: Rust drives the AOT `train_step`/`eval_step`
+//! executables step by step; parameters and momenta live as PJRT
+//! literals between steps.
+
+use super::data::SyntheticImages;
+use crate::runtime::client::{literal_f32, literal_i32, literal_scalar_value, literal_to_f32};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+/// Loss/accuracy history of one run (written to EXPERIMENTS.md / JSON).
+#[derive(Clone, Debug, Default)]
+pub struct TrainHistory {
+    pub model: String,
+    pub steps: Vec<usize>,
+    pub train_loss: Vec<f64>,
+    pub train_acc: Vec<f64>,
+    pub test_loss: Vec<f64>,
+    pub test_acc: Vec<f64>,
+    pub head_param_count: usize,
+    pub wall_secs: f64,
+}
+
+impl TrainHistory {
+    pub fn final_test_acc(&self) -> f64 {
+        self.test_acc.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("steps", Json::arr_usize(&self.steps)),
+            ("train_loss", Json::arr_f64(&self.train_loss)),
+            ("train_acc", Json::arr_f64(&self.train_acc)),
+            ("test_loss", Json::arr_f64(&self.test_loss)),
+            ("test_acc", Json::arr_f64(&self.test_acc)),
+            ("head_param_count", Json::Num(self.head_param_count as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+}
+
+/// Trainer for one model variant.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub model: String,
+    train_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    /// current parameters (+ shapes from the schema)
+    params: Vec<xla::Literal>,
+    momenta: Vec<xla::Literal>,
+    batch: usize,
+    img: Vec<usize>,
+    n_params: usize,
+    pub head_param_count: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        let entry = rt
+            .manifest()
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?} (see `hocs info`)"))?
+            .clone();
+        let train_exe = rt.load(&entry.train)?;
+        let eval_exe = rt.load(&entry.eval)?;
+        let init = rt.manifest().load_init_params(model)?;
+        let mut params = Vec::with_capacity(init.len());
+        let mut momenta = Vec::with_capacity(init.len());
+        for (buf, spec) in init.iter().zip(entry.param_schema.iter()) {
+            params.push(literal_f32(buf, &spec.shape)?);
+            momenta.push(literal_f32(&vec![0.0; buf.len()], &spec.shape)?);
+        }
+        Ok(Self {
+            rt,
+            model: model.to_string(),
+            train_exe,
+            eval_exe,
+            params,
+            momenta,
+            batch: entry.batch,
+            img: entry.img.clone(),
+            n_params: entry.param_schema.len(),
+            head_param_count: entry.head_param_count,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// One SGD step; returns (loss, acc) on the batch.
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<(f64, f64)> {
+        let mut img_dims = vec![self.batch];
+        img_dims.extend_from_slice(&self.img);
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * self.n_params + 3);
+        // params and momenta are moved in; train_step returns updates
+        inputs.append(&mut self.params);
+        inputs.append(&mut self.momenta);
+        inputs.push(literal_f32(x, &img_dims)?);
+        inputs.push(literal_i32(y, &[self.batch])?);
+        inputs.push(xla::Literal::scalar(lr));
+        let mut out = self.rt.execute_loaded(&self.train_exe, &inputs)?;
+        anyhow::ensure!(
+            out.len() == 2 * self.n_params + 2,
+            "train_step returned {} outputs",
+            out.len()
+        );
+        let acc = literal_scalar_value(&out.pop().unwrap())? as f64;
+        let loss = literal_scalar_value(&out.pop().unwrap())? as f64;
+        self.momenta = out.split_off(self.n_params);
+        self.params = out;
+        Ok((loss, acc))
+    }
+
+    /// Evaluate on `n_batches` fresh test batches; returns (loss, acc).
+    pub fn evaluate(&self, ds: &mut SyntheticImages, n_batches: usize) -> Result<(f64, f64)> {
+        let mut img_dims = vec![self.batch];
+        img_dims.extend_from_slice(&self.img);
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+        for _ in 0..n_batches {
+            let (x, y) = ds.batch(self.batch);
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.n_params + 2);
+            for p in &self.params {
+                // Literal has no cheap clone; round-trip through vec
+                inputs.push(clone_literal(p)?);
+            }
+            inputs.push(literal_f32(&x, &img_dims)?);
+            inputs.push(literal_i32(&y, &[self.batch])?);
+            let out = self.rt.execute_loaded(&self.eval_exe, &inputs)?;
+            loss_sum += literal_scalar_value(&out[0])? as f64;
+            acc_sum += literal_scalar_value(&out[1])? as f64;
+        }
+        Ok((loss_sum / n_batches as f64, acc_sum / n_batches as f64))
+    }
+
+    /// Full training run with periodic eval; reproduces one curve of
+    /// Fig. 10.
+    pub fn train(
+        &mut self,
+        steps: usize,
+        lr: f32,
+        eval_every: usize,
+        seed: u64,
+        quiet: bool,
+    ) -> Result<TrainHistory> {
+        let mut train_ds = SyntheticImages::new(seed, 0, 1.6);
+        let mut test_ds = SyntheticImages::new(seed, 1, 1.6);
+        let mut hist = TrainHistory {
+            model: self.model.clone(),
+            head_param_count: self.head_param_count,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let mut run_loss = 0.0;
+        let mut run_acc = 0.0;
+        let mut run_n = 0usize;
+        for step in 1..=steps {
+            let (x, y) = train_ds.batch(self.batch);
+            let (loss, acc) = self.step(&x, &y, lr)?;
+            run_loss += loss;
+            run_acc += acc;
+            run_n += 1;
+            if step % eval_every == 0 || step == steps {
+                let (tl, ta) = self.evaluate(&mut test_ds, 4)?;
+                hist.steps.push(step);
+                hist.train_loss.push(run_loss / run_n as f64);
+                hist.train_acc.push(run_acc / run_n as f64);
+                hist.test_loss.push(tl);
+                hist.test_acc.push(ta);
+                if !quiet {
+                    crate::log_info!(
+                        "{} step {step:4}: train loss {:.4} acc {:.3} | test loss {tl:.4} acc {ta:.3}",
+                        self.model,
+                        run_loss / run_n as f64,
+                        run_acc / run_n as f64,
+                    );
+                }
+                run_loss = 0.0;
+                run_acc = 0.0;
+                run_n = 0;
+            }
+        }
+        hist.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(hist)
+    }
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Persist the current parameters as raw little-endian f32 (schema
+    /// order) — `results/trained_<model>.bin`, which the serving
+    /// backend picks up automatically.
+    pub fn save_params(&self, dir: &str) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("trained_{}.bin", self.model));
+        let mut bytes = Vec::new();
+        for p in &self.params {
+            for v in literal_to_f32(p)? {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes)?;
+        Ok(path)
+    }
+}
+
+/// Load a raw f32 parameter file against a model's schema (the format
+/// [`Trainer::save_params`] writes and aot.py's init files use).
+pub fn load_param_file(
+    path: &std::path::Path,
+    entry: &crate::runtime::ModelEntry,
+) -> Result<Vec<Vec<f32>>> {
+    let raw = std::fs::read(path)?;
+    anyhow::ensure!(
+        raw.len() == entry.param_len() * 4,
+        "param file {path:?} has {} bytes, schema wants {}",
+        raw.len(),
+        entry.param_len() * 4
+    );
+    let mut out = Vec::with_capacity(entry.param_schema.len());
+    let mut off = 0usize;
+    for spec in &entry.param_schema {
+        let n = spec.len();
+        let buf = raw[off * 4..(off + n) * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        off += n;
+        out.push(buf);
+    }
+    Ok(out)
+}
+
+/// Deep-copy a literal (xla::Literal lacks Clone).
+fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = literal_to_f32(lit)?;
+    literal_f32(&data, &dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_training_run_reduces_loss() {
+        if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(crate::runtime::DEFAULT_ARTIFACTS_DIR).unwrap();
+        let mut tr = Trainer::new(&rt, "trl_mts_4x4x8").unwrap();
+        let hist = tr.train(12, 0.03, 6, 42, true).unwrap();
+        assert_eq!(hist.steps.len(), 2);
+        let first = hist.train_loss[0];
+        let last = *hist.train_loss.last().unwrap();
+        assert!(
+            last < first,
+            "loss should fall over 12 steps: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(crate::runtime::DEFAULT_ARTIFACTS_DIR).unwrap();
+        assert!(Trainer::new(&rt, "nope").is_err());
+    }
+}

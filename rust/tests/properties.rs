@@ -1,0 +1,292 @@
+//! Property-based test suite: algebraic invariants of the sketching
+//! layer swept over random shapes/seeds with the in-crate prop
+//! framework (`hocs::util::prop`). These are the Rust-side counterpart
+//! of the hypothesis sweeps in `python/tests/`.
+
+use hocs::fft::{circular_convolve, circular_convolve2};
+use hocs::rng::Pcg64;
+use hocs::sketch::cs::CsSketcher;
+use hocs::sketch::kron::MtsKron;
+use hocs::sketch::mts::MtsSketcher;
+use hocs::tensor::{kron, mode_k_product, outer, rel_error, Tensor};
+use hocs::util::prop::{forall, prop_assert, prop_close, Gen};
+
+// ---------------------------------------------------------------------
+// sketch algebra
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_mts_is_linear() {
+    forall("MTS(aX + bY) = a·MTS(X) + b·MTS(Y)", 40, |g: &mut Gen| {
+        let order = g.usize_in(1, 3);
+        let dims = g.shape(order, 7);
+        let sdims: Vec<usize> = dims.iter().map(|&d| 1 + d / 2).collect();
+        let n: usize = dims.iter().product();
+        let a = g.f64_in(-2.0, 2.0);
+        let b = g.f64_in(-2.0, 2.0);
+        let x = Tensor::from_vec(g.normal_vec(n), &dims);
+        let y = Tensor::from_vec(g.normal_vec(n), &dims);
+        let sk = MtsSketcher::new(&dims, &sdims, 42);
+        let lhs = sk.sketch(&x.scale(a).add(&y.scale(b)));
+        let rhs = sk.sketch(&x).scale(a).add(&sk.sketch(&y).scale(b));
+        for (u, v) in lhs.data().iter().zip(rhs.data().iter()) {
+            prop_close(*u, *v, 1e-9, "linearity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mts_of_vector_equals_cs() {
+    forall("order-1 MTS is exactly a count sketch", 40, |g: &mut Gen| {
+        let n = g.usize_in(2, 40);
+        let m = g.usize_in(1, n);
+        let x = g.normal_vec(n);
+        let t = Tensor::from_vec(x.clone(), &[n]);
+        let sk = MtsSketcher::new(&[n], &[m], 7);
+        let got = sk.sketch(&t);
+        // scatter with the same mode hash
+        let mut want = vec![0.0; m];
+        for (i, &v) in x.iter().enumerate() {
+            want[sk.mode(0).h(i)] += sk.mode(0).s(i) * v;
+        }
+        for (u, v) in got.data().iter().zip(want.iter()) {
+            prop_close(*u, *v, 1e-12, "cs equivalence")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_one_sparse_exact_recovery() {
+    forall("1-sparse tensors recover exactly at any sketch size", 40, |g| {
+        let dims = g.shape(2, 9);
+        let sdims = vec![g.usize_in(1, 5), g.usize_in(1, 5)];
+        let mut t = Tensor::zeros(&dims);
+        let idx = vec![g.usize_in(0, dims[0] - 1), g.usize_in(0, dims[1] - 1)];
+        let v = g.f64_in(-5.0, 5.0);
+        t.set(&idx, v);
+        let sk = MtsSketcher::new(&dims, &sdims, 3);
+        let est = sk.estimate(&sk.sketch(&t), &idx);
+        prop_close(est, v, 1e-12, "1-sparse recovery")
+    });
+}
+
+#[test]
+fn prop_estimate_matches_decompress() {
+    forall("decompress agrees with pointwise estimates", 20, |g| {
+        let dims = g.shape(3, 5);
+        let sdims: Vec<usize> = dims.iter().map(|&d| 1 + d / 2).collect();
+        let n: usize = dims.iter().product();
+        let t = Tensor::from_vec(g.normal_vec(n), &dims);
+        let sk = MtsSketcher::new(&dims, &sdims, 11);
+        let s = sk.sketch(&t);
+        let dec = sk.decompress(&s);
+        // probe a few random indices
+        for _ in 0..5 {
+            let idx: Vec<usize> =
+                dims.iter().map(|&d| g.usize_in(0, d - 1)).collect();
+            prop_close(dec.get(&idx), sk.estimate(&s, &idx), 1e-12, "agreement")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mts_sketch_preserves_total_mass_mod_signs() {
+    // Σ MTS(T) = Σ_i s(i)·T_i-style invariant: sketching the all-ones
+    // hash-sign pattern reproduces the signed sum exactly
+    forall("bucket sums equal signed totals", 30, |g| {
+        let dims = g.shape(2, 8);
+        let n: usize = dims.iter().product();
+        let t = Tensor::from_vec(g.normal_vec(n), &dims);
+        let sk = MtsSketcher::new(&dims, &[3, 3], 13);
+        let s = sk.sketch(&t);
+        let total: f64 = s.data().iter().sum();
+        let mut want = 0.0;
+        for i in 0..dims[0] {
+            for j in 0..dims[1] {
+                want += sk.mode(0).s(i) * sk.mode(1).s(j) * t.get(&[i, j]);
+            }
+        }
+        prop_close(total, want, 1e-9, "mass conservation")
+    });
+}
+
+// ---------------------------------------------------------------------
+// convolution / Kronecker identities
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cs_outer_product_identity() {
+    // Pagh Eq. 2 over random sizes
+    forall("CS(u⊗v) = CS(u) * CS(v)", 30, |g| {
+        let nu = g.usize_in(2, 12);
+        let nv = g.usize_in(2, 12);
+        let c = g.usize_in(2, 16);
+        let u = g.normal_vec(nu);
+        let v = g.normal_vec(nv);
+        let su = CsSketcher::new(nu, c, 5);
+        let sv = CsSketcher::new(nv, c, 6);
+        let combined = circular_convolve(&su.sketch(&u), &sv.sketch(&v));
+        let mut direct = vec![0.0; c];
+        for i in 0..nu {
+            for j in 0..nv {
+                direct[(su.h(i) + sv.h(j)) % c] += su.s(i) * sv.s(j) * u[i] * v[j];
+            }
+        }
+        for (a, b) in combined.iter().zip(direct.iter()) {
+            prop_close(*a, *b, 1e-9, "outer identity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lemma_b1_over_random_shapes() {
+    forall("MTS(A⊗B) = MTS(A) * MTS(B) (2-D)", 15, |g| {
+        let n1 = g.usize_in(2, 6);
+        let n2 = g.usize_in(2, 6);
+        let n3 = g.usize_in(2, 6);
+        let n4 = g.usize_in(2, 6);
+        let m1 = g.usize_in(2, 7);
+        let m2 = g.usize_in(2, 7);
+        let a = Tensor::from_vec(g.normal_vec(n1 * n2), &[n1, n2]);
+        let b = Tensor::from_vec(g.normal_vec(n3 * n4), &[n3, n4]);
+        let mk = MtsKron::new(&[n1, n2], &[n3, n4], m1, m2, 17);
+        let combined = mk.compress(&a, &b);
+        // direct sketch of the materialized product with derived hashes
+        let mut direct = Tensor::zeros(&[m1, m2]);
+        for p in 0..n1 {
+            for q in 0..n2 {
+                for h in 0..n3 {
+                    for gg in 0..n4 {
+                        let r = (mk.ska.mode(0).h(p) + mk.skb.mode(0).h(h)) % m1;
+                        let cc = (mk.ska.mode(1).h(q) + mk.skb.mode(1).h(gg)) % m2;
+                        let s = mk.ska.mode(0).s(p)
+                            * mk.ska.mode(1).s(q)
+                            * mk.skb.mode(0).s(h)
+                            * mk.skb.mode(1).s(gg);
+                        let v = direct.get(&[r, cc]) + s * a.at2(p, q) * b.at2(h, gg);
+                        direct.set(&[r, cc], v);
+                    }
+                }
+            }
+        }
+        prop_assert(rel_error(&direct, &combined) < 1e-8, "lemma B.1")
+    });
+}
+
+#[test]
+fn prop_convolution_theorem_2d() {
+    forall("FFT2 convolution = direct circular convolution", 15, |g| {
+        let r = g.usize_in(2, 9);
+        let c = g.usize_in(2, 9);
+        let a = g.normal_vec(r * c);
+        let b = g.normal_vec(r * c);
+        let got = circular_convolve2(&a, &b, r, c);
+        for kr in 0..r {
+            for kc in 0..c {
+                let mut want = 0.0;
+                for i in 0..r {
+                    for j in 0..c {
+                        want += a[i * c + j]
+                            * b[((kr + r - i) % r) * c + ((kc + c - j) % c)];
+                    }
+                }
+                prop_close(got[kr * c + kc], want, 1e-8, "conv2")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// tensor substrate invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_kron_rank_one_structure() {
+    forall("kron of rank-1 matrices is rank-1", 20, |g| {
+        let n = g.usize_in(2, 5);
+        let u = g.normal_vec(n);
+        let v = g.normal_vec(n);
+        let x = g.normal_vec(n);
+        let y = g.normal_vec(n);
+        let a = outer(&[&u, &v]);
+        let b = outer(&[&x, &y]);
+        let k = kron(&a, &b);
+        // k should equal outer(u⊗x, v⊗y)
+        let ux = hocs::tensor::kron_vec(&u, &x);
+        let vy = hocs::tensor::kron_vec(&v, &y);
+        let want = outer(&[&ux, &vy]);
+        prop_assert(rel_error(&want, &k) < 1e-10, "rank-1 kron structure")
+    });
+}
+
+#[test]
+fn prop_mode_product_associativity() {
+    forall("mode products along different modes commute", 20, |g| {
+        let dims = g.shape(3, 6);
+        let n: usize = dims.iter().product();
+        let t = Tensor::from_vec(g.normal_vec(n), &dims);
+        let m0 = Tensor::from_vec(g.normal_vec(dims[0] * 3), &[dims[0], 3]);
+        let m2 = Tensor::from_vec(g.normal_vec(dims[2] * 2), &[dims[2], 2]);
+        let ab = mode_k_product(&mode_k_product(&t, &m0, 0), &m2, 2);
+        let ba = mode_k_product(&mode_k_product(&t, &m2, 2), &m0, 0);
+        prop_assert(rel_error(&ab, &ba) < 1e-10, "commuting contractions")
+    });
+}
+
+#[test]
+fn prop_unfold_fold_roundtrip_random_shapes() {
+    forall("unfold∘fold = id for every mode", 25, |g| {
+        let order = g.usize_in(2, 4);
+        let dims = g.shape(order, 5);
+        let n: usize = dims.iter().product();
+        let t = Tensor::from_vec(g.normal_vec(n), &dims);
+        for mode in 0..order {
+            let back = Tensor::fold(&t.unfold(mode), mode, &dims);
+            prop_assert(back == t, "roundtrip")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// median estimator robustness
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_median_of_d_is_shift_equivariant() {
+    forall("median(x + c) = median(x) + c", 30, |g| {
+        let d = 1 + 2 * g.usize_in(0, 6); // odd
+        let xs = g.normal_vec(d);
+        let c = g.f64_in(-10.0, 10.0);
+        let m1 = hocs::util::stats::median(&xs);
+        let shifted: Vec<f64> = xs.iter().map(|x| x + c).collect();
+        let m2 = hocs::util::stats::median(&shifted);
+        prop_close(m2, m1 + c, 1e-12, "shift equivariance")
+    });
+}
+
+#[test]
+fn prop_seeded_everything_is_reproducible() {
+    forall("identical seeds → identical pipelines", 10, |g| {
+        let dims = g.shape(2, 8);
+        let n: usize = dims.iter().product();
+        let data = g.normal_vec(n);
+        let t = Tensor::from_vec(data, &dims);
+        let run = || {
+            let sk = MtsSketcher::new(&dims, &[3, 3], 1234);
+            let s = sk.sketch(&t);
+            let mut rng = Pcg64::new(99);
+            let probe = vec![
+                rng.gen_range(dims[0] as u64) as usize,
+                rng.gen_range(dims[1] as u64) as usize,
+            ];
+            sk.estimate(&s, &probe)
+        };
+        prop_close(run(), run(), 0.0, "bit-identical reruns")
+    });
+}
