@@ -1,9 +1,85 @@
-//! `cargo bench` target: coordinator throughput/latency (§Perf L3).
-use hocs::experiments::{run_service_bench, ExpConfig};
+//! `cargo bench` target: coordinator throughput/latency (§Perf L3) plus
+//! the L1 combine microbench (complex vs real-input FFT path).
+//!
+//! Writes `BENCH_service.json` — throughput + p50/p99 latency per
+//! worker count × batch size, and the combine speedup per sketch size —
+//! so future PRs have a perf trajectory to compare against.
+use hocs::experiments::{run_combine_bench, run_service_bench, ExpConfig};
+use hocs::util::json::{self, Json};
+
+const OUT_PATH: &str = "BENCH_service.json";
+
+/// When the service bench cannot run (no artifacts), keep the service
+/// rows from an earlier BENCH_service.json instead of clobbering the
+/// perf trajectory with an empty array.
+fn previous_service_rows() -> Option<Json> {
+    let text = std::fs::read_to_string(OUT_PATH).ok()?;
+    let prev = json::parse(&text).ok()?;
+    prev.get("service").filter(|s| s.as_arr().is_some_and(|a| !a.is_empty())).cloned()
+}
 
 fn main() {
-    match run_service_bench(&ExpConfig::default(), "artifacts") {
-        Ok((table, _)) => table.print(),
-        Err(e) => println!("service bench skipped: {e} (run `make artifacts`)"),
+    let cfg = ExpConfig::default();
+
+    let (combine_table, combines) = run_combine_bench(&cfg);
+    combine_table.print();
+    println!();
+
+    let service_rows = match run_service_bench(&cfg, "artifacts") {
+        Ok((table, stats)) => {
+            table.print();
+            stats
+        }
+        Err(e) => {
+            println!("service bench skipped: {e} (run `make artifacts`)");
+            Vec::new()
+        }
+    };
+    let service_json = if service_rows.is_empty() {
+        previous_service_rows().unwrap_or(Json::Arr(Vec::new()))
+    } else {
+        Json::Arr(
+            service_rows
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("backend", Json::Str(s.backend.to_string())),
+                        ("workers", Json::Num(s.workers as f64)),
+                        ("max_batch", Json::Num(s.max_batch as f64)),
+                        ("requests", Json::Num(s.requests as f64)),
+                        ("wall_secs", Json::Num(s.wall_secs)),
+                        ("throughput_rps", Json::Num(s.throughput)),
+                        ("mean_latency_us", Json::Num(s.mean_latency_us)),
+                        ("p50_latency_us", Json::Num(s.p50_latency_us as f64)),
+                        ("p99_latency_us", Json::Num(s.p99_latency_us as f64)),
+                        ("mean_batch", Json::Num(s.mean_batch)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+
+    let json = Json::obj(vec![
+        (
+            "combine",
+            Json::Arr(
+                combines
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("m", Json::Num(c.m as f64)),
+                            ("complex_us", Json::Num(c.complex_us)),
+                            ("real_us", Json::Num(c.real_us)),
+                            ("speedup", Json::Num(c.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("service", service_json),
+    ]);
+    match std::fs::write(OUT_PATH, json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
     }
 }

@@ -89,6 +89,11 @@ impl PureRustBackend {
     }
 }
 
+/// Input-tile width for the fused batch scatters: small enough that a
+/// tile's outputs stay cache-resident, big enough to amortize one pass
+/// over the hash tables across several requests.
+const SCATTER_TILE: usize = 8;
+
 impl SketchBackend for PureRustBackend {
     fn name(&self) -> &'static str {
         "pure-rust"
@@ -98,37 +103,54 @@ impl SketchBackend for PureRustBackend {
         let [n1, n2] = self.shapes.mts_in;
         let [m1, m2] = self.shapes.mts_out;
         let h = &self.mts_op.hashes;
-        xs.iter()
-            .map(|x| {
-                anyhow::ensure!(x.len() == n1 * n2, "mts input length");
-                let mut out = vec![0.0f32; m1 * m2];
-                for i in 0..n1 {
-                    let b1 = h[0].buckets[i] * m2;
-                    let s1 = h[0].signs[i] as f32;
-                    let row = &x[i * n2..(i + 1) * n2];
-                    for (j, &v) in row.iter().enumerate() {
-                        out[b1 + h[1].buckets[j]] += s1 * h[1].signs[j] as f32 * v;
+        for (r, x) in xs.iter().enumerate() {
+            anyhow::ensure!(x.len() == n1 * n2, "mts input length (batch row {r})");
+        }
+        // fused batch kernel: the (bucket, sign) arithmetic per input
+        // cell is done once per tile and applied to every request in it
+        let mut outs = vec![vec![0.0f32; m1 * m2]; xs.len()];
+        let mut start = 0;
+        while start < xs.len() {
+            let end = (start + SCATTER_TILE).min(xs.len());
+            for i in 0..n1 {
+                let b1 = h[0].buckets[i] * m2;
+                let s1 = h[0].signs[i] as f32;
+                for j in 0..n2 {
+                    let b = b1 + h[1].buckets[j];
+                    let s = s1 * h[1].signs[j] as f32;
+                    let src = i * n2 + j;
+                    for (x, out) in xs[start..end].iter().zip(outs[start..end].iter_mut()) {
+                        out[b] += s * x[src];
                     }
                 }
-                Ok(out)
-            })
-            .collect()
+            }
+            start = end;
+        }
+        Ok(outs)
     }
 
     fn cs_sketch_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let n = self.shapes.cs_in;
         let c = self.shapes.cs_out;
         let h = &self.cs_op.hashes[0];
-        xs.iter()
-            .map(|x| {
-                anyhow::ensure!(x.len() == n, "cs input length");
-                let mut out = vec![0.0f32; c];
-                for (i, &v) in x.iter().enumerate() {
-                    out[h.buckets[i]] += h.signs[i] as f32 * v;
+        for (r, x) in xs.iter().enumerate() {
+            anyhow::ensure!(x.len() == n, "cs input length (batch row {r})");
+        }
+        // fused batch kernel: one pass over the hash tables per tile
+        let mut outs = vec![vec![0.0f32; c]; xs.len()];
+        let mut start = 0;
+        while start < xs.len() {
+            let end = (start + SCATTER_TILE).min(xs.len());
+            for i in 0..n {
+                let b = h.buckets[i];
+                let s = h.signs[i] as f32;
+                for (x, out) in xs[start..end].iter().zip(outs[start..end].iter_mut()) {
+                    out[b] += s * x[i];
                 }
-                Ok(out)
-            })
-            .collect()
+            }
+            start = end;
+        }
+        Ok(outs)
     }
 
     fn kron_combine_batch(&self, pairs: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<Vec<f32>>> {
@@ -139,7 +161,9 @@ impl SketchBackend for PureRustBackend {
                 anyhow::ensure!(a.len() == m1 * m2 && b.len() == m1 * m2, "kron input length");
                 let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
                 let bf: Vec<f64> = b.iter().map(|&v| v as f64).collect();
-                let out = crate::fft::circular_convolve2(&af, &bf, m1, m2);
+                // real-input half-spectrum path; the RFFT plans are
+                // cached thread-locally, so the whole batch shares them
+                let out = crate::fft::circular_convolve2_real(&af, &bf, m1, m2);
                 Ok(out.into_iter().map(|v| v as f32).collect())
             })
             .collect()
@@ -326,7 +350,131 @@ impl SketchBackend for XlaBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hash::ModeHash;
     use crate::rng::Pcg64;
+    use crate::runtime::OpHash;
+
+    /// A manifest built in-process so the fused batch kernels are
+    /// testable without the AOT artifacts.
+    fn synthetic_manifest() -> Manifest {
+        let mk_hash = |n: usize, m: usize, seed: u64| {
+            let mh = ModeHash::new(n, m, seed);
+            OpHash {
+                buckets: (0..n).map(|i| mh.h(i)).collect(),
+                signs: (0..n).map(|i| mh.s(i)).collect(),
+            }
+        };
+        let mut ops = std::collections::BTreeMap::new();
+        ops.insert(
+            "mts_sketch".to_string(),
+            OpEntry {
+                path: String::new(),
+                batch: None,
+                input_dims: vec![6, 5],
+                sketch_dims: vec![3, 4],
+                hashes: vec![mk_hash(6, 3, 1), mk_hash(5, 4, 2)],
+            },
+        );
+        ops.insert(
+            "cs_sketch".to_string(),
+            OpEntry {
+                path: String::new(),
+                batch: Some(4),
+                input_dims: vec![32],
+                sketch_dims: vec![8],
+                hashes: vec![mk_hash(32, 8, 3)],
+            },
+        );
+        ops.insert(
+            "kron_combine".to_string(),
+            OpEntry {
+                path: String::new(),
+                batch: None,
+                input_dims: vec![],
+                sketch_dims: vec![4, 6],
+                hashes: vec![],
+            },
+        );
+        Manifest { dir: std::path::PathBuf::new(), models: Default::default(), ops }
+    }
+
+    #[test]
+    fn cs_batch_kernel_matches_scalar_oracle() {
+        let be = PureRustBackend::new(&synthetic_manifest()).unwrap();
+        let s = be.shapes();
+        let mut rng = Pcg64::new(10);
+        // an odd batch size exercises the partial tail tile
+        let xs: Vec<Vec<f32>> = (0..19)
+            .map(|_| (0..s.cs_in).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let got = be.cs_sketch_batch(&xs).unwrap();
+        let man = synthetic_manifest();
+        let h = &man.ops["cs_sketch"].hashes[0];
+        for (x, out) in xs.iter().zip(got.iter()) {
+            let mut want = vec![0.0f32; s.cs_out];
+            for (i, &v) in x.iter().enumerate() {
+                want[h.buckets[i]] += h.signs[i] as f32 * v;
+            }
+            assert_eq!(out, &want);
+        }
+    }
+
+    #[test]
+    fn mts_batch_kernel_matches_scalar_oracle() {
+        let be = PureRustBackend::new(&synthetic_manifest()).unwrap();
+        let s = be.shapes();
+        let [n1, n2] = s.mts_in;
+        let [m1, m2] = s.mts_out;
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..n1 * n2).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let got = be.mts_sketch_batch(&xs).unwrap();
+        let man = synthetic_manifest();
+        let h = &man.ops["mts_sketch"].hashes;
+        for (x, out) in xs.iter().zip(got.iter()) {
+            let mut want = vec![0.0f32; m1 * m2];
+            for i in 0..n1 {
+                for j in 0..n2 {
+                    want[h[0].buckets[i] * m2 + h[1].buckets[j]] +=
+                        (h[0].signs[i] * h[1].signs[j]) as f32 * x[i * n2 + j];
+                }
+            }
+            assert_eq!(out, &want);
+        }
+    }
+
+    #[test]
+    fn kron_batch_matches_complex_reference() {
+        let be = PureRustBackend::new(&synthetic_manifest()).unwrap();
+        let [m1, m2] = be.shapes().kron_dims;
+        let mut rng = Pcg64::new(12);
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..3)
+            .map(|_| {
+                (
+                    (0..m1 * m2).map(|_| rng.normal() as f32).collect(),
+                    (0..m1 * m2).map(|_| rng.normal() as f32).collect(),
+                )
+            })
+            .collect();
+        let got = be.kron_combine_batch(&pairs).unwrap();
+        for ((a, b), out) in pairs.iter().zip(got.iter()) {
+            let af: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+            let bf: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+            let want = crate::fft::circular_convolve2(&af, &bf, m1, m2);
+            for (g, w) in out.iter().zip(want.iter()) {
+                assert!((*g as f64 - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernels_reject_bad_lengths() {
+        let be = PureRustBackend::new(&synthetic_manifest()).unwrap();
+        assert!(be.cs_sketch_batch(&[vec![0.0; 3]]).is_err());
+        assert!(be.mts_sketch_batch(&[vec![0.0; 3]]).is_err());
+        assert!(be.kron_combine_batch(&[(vec![0.0; 3], vec![0.0; 3])]).is_err());
+    }
 
     fn with_backends() -> Option<(PureRustBackend, XlaBackend)> {
         if !crate::runtime::artifacts_available(crate::runtime::DEFAULT_ARTIFACTS_DIR) {

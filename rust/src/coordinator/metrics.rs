@@ -1,7 +1,11 @@
 //! Live service metrics: lock-free counters shared between the client
-//! handle and the executor thread.
+//! handle and the worker threads.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two latency buckets (bucket `i` covers
+/// `[2^(i-1), 2^i)` µs; bucket 0 is `< 1µs`). 32 buckets reach ~35 min.
+const LAT_BUCKETS: usize = 32;
 
 /// Coordinator counters. All `Relaxed`: these are statistics, not
 /// synchronization.
@@ -16,12 +20,16 @@ pub struct Metrics {
     /// end-to-end latency accumulators (µs)
     pub latency_sum_us: AtomicU64,
     pub latency_max_us: AtomicU64,
+    /// log2-bucketed latency histogram (µs) for percentile estimates
+    latency_hist: [AtomicU64; LAT_BUCKETS],
 }
 
 impl Metrics {
     pub fn record_latency(&self, us: u64) {
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
         self.latency_max_us.fetch_max(us, Ordering::Relaxed);
+        let idx = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -30,6 +38,27 @@ impl Metrics {
             return 0.0;
         }
         self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency percentile (upper edge of the log2 bucket
+    /// containing the p-quantile — accurate to within 2×). `p` in
+    /// `[0, 1]`, e.g. 0.5 for p50, 0.99 for p99.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 { 1 } else { 1u64 << i };
+            }
+        }
+        1u64 << (LAT_BUCKETS - 1)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -43,7 +72,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} errors={} batches={} \
-             mean_batch={:.2} mean_latency={:.1}µs max_latency={}µs",
+             mean_batch={:.2} mean_latency={:.1}µs p50={}µs p99={}µs max_latency={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -51,6 +80,8 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.99),
             self.latency_max_us.load(Ordering::Relaxed),
         )
     }
@@ -85,5 +116,40 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.latency_percentile_us(0.5), 0);
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn percentiles_bracket_recorded_latencies() {
+        let m = Metrics::default();
+        // 99 fast requests (~100µs) and one slow outlier (~50ms)
+        for _ in 0..99 {
+            m.record_latency(100);
+        }
+        m.record_latency(50_000);
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        let p999 = m.latency_percentile_us(0.999);
+        // p50/p99 live in the 100µs bucket ([64, 128) → edge 128);
+        // p99.9 must see the outlier
+        assert!((64..=128).contains(&p50), "p50={p50}");
+        assert!((64..=128).contains(&p99), "p99={p99}");
+        assert!(p999 >= 32_768, "p99.9={p999}");
+        assert!(p50 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn percentile_monotone_in_p() {
+        let m = Metrics::default();
+        for us in [1u64, 10, 100, 1_000, 10_000] {
+            m.record_latency(us);
+        }
+        let mut last = 0;
+        for p in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let v = m.latency_percentile_us(p);
+            assert!(v >= last, "p={p}: {v} < {last}");
+            last = v;
+        }
     }
 }

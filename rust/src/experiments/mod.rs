@@ -25,7 +25,7 @@ pub use ablation::{
 pub use fig10::{run_fig10, run_fig12};
 pub use fig8::run_fig8;
 pub use fig9::run_fig9;
-pub use service::run_service_bench;
+pub use service::{run_combine_bench, run_service_bench};
 pub use tables::{run_table1, run_table3, run_table45, run_table6};
 pub use variance::run_variance;
 

@@ -9,13 +9,31 @@
 //! - everything else: Bluestein's chirp-z transform, which reduces any
 //!   length-n DFT to three power-of-two FFTs of length ≥ 2n-1.
 //!
-//! [`FftPlan`] caches twiddles per length; the sketch layer keeps plans
-//! alive across repeated combines (the profile-guided fix recorded in
-//! EXPERIMENTS.md §Perf).
+//! Two input paths share that machinery:
+//!
+//! - the **complex path** ([`FftPlan`], [`fft2`], [`circular_convolve2`])
+//!   — the general transform, kept as the parity oracle and for the
+//!   packing ablation;
+//! - the **real path** ([`real::RealFftPlan`], [`real::rfft2`],
+//!   [`real::circular_convolve2_real`]) — the hot path for every sketch
+//!   combine. Sketches are real, so conjugate symmetry halves the
+//!   transform arithmetic and spectral memory (pack-two-reals-per-
+//!   complex; see `real.rs`); all Kron / Tucker / TT / CP / covariance
+//!   combines run on half spectra.
+//!
+//! [`FftPlan`] / [`real::RealFftPlan`] cache twiddles per length in
+//! thread-local maps, so repeated and batched combines share plans and
+//! scratch (the profile-guided fix recorded in EXPERIMENTS.md §Perf;
+//! each coordinator worker thread warms its own cache).
 
 pub mod complex;
+pub mod real;
 
 pub use complex::Complex;
+pub use real::{
+    circular_convolve2_real, circular_convolve_real, irfft, irfft2, real_plan, rfft, rfft2,
+    RealFftPlan,
+};
 
 use std::cell::RefCell;
 use std::collections::HashMap;

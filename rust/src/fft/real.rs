@@ -1,0 +1,463 @@
+//! Real-input FFT path (§Perf, batch-engine PR).
+//!
+//! The sketch combines only ever transform *real* buffers — MTS/CTS
+//! sketches — and only ever need *real* inverse transforms, so running
+//! them through the fully complex machinery wastes half the arithmetic
+//! and memory traffic. [`RealFftPlan`] exploits conjugate symmetry:
+//!
+//! - even `n`: the classic pack-two-reals-per-complex scheme — the real
+//!   signal is viewed as an `n/2`-point complex signal
+//!   `z[j] = x[2j] + i·x[2j+1]`, transformed with one half-length
+//!   complex FFT, then untangled into the `n/2 + 1` non-redundant
+//!   spectrum bins;
+//! - odd `n` (rare on sketch paths — sketch dims are typically even):
+//!   falls back to the full complex transform and keeps only the
+//!   non-redundant half.
+//!
+//! On top of the 1-D plan sit [`rfft2`] / [`irfft2`] (row RFFTs, then
+//! complex column FFTs over the `cols/2 + 1` retained columns) and the
+//! half-spectrum convolutions [`circular_convolve_real`] /
+//! [`circular_convolve2_real`] that the Kron / Tucker / TT / CP /
+//! covariance combines run on. Plans are cached thread-locally (see
+//! [`real_plan`]) so a batch of combines shares twiddles and scratch.
+
+use super::{plan, Complex, Direction, FftPlan};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Number of non-redundant spectrum bins of a length-`n` real signal.
+#[inline]
+pub fn spectrum_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// A cached plan for length-`n` real-input transforms.
+#[derive(Debug)]
+pub struct RealFftPlan {
+    pub n: usize,
+    kind: RealKind,
+}
+
+#[derive(Debug)]
+enum RealKind {
+    /// even n: half-length complex FFT + spectrum untangle
+    Even {
+        /// complex plan of length n/2
+        half: Rc<FftPlan>,
+        /// w[k] = exp(-2πi·k/n), k = 0..=n/2
+        twiddles: Vec<Complex>,
+        /// reused packing buffer of length n/2
+        scratch: RefCell<Vec<Complex>>,
+    },
+    /// odd n: full complex transform, truncated to the half spectrum
+    Odd {
+        full: Rc<FftPlan>,
+        scratch: RefCell<Vec<Complex>>,
+    },
+}
+
+impl RealFftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "real FFT length must be positive");
+        if n % 2 == 0 {
+            let m = n / 2;
+            let half = plan(m);
+            let mut twiddles = Vec::with_capacity(m + 1);
+            for k in 0..=m {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                twiddles.push(Complex::from_polar(1.0, ang));
+            }
+            Self {
+                n,
+                kind: RealKind::Even {
+                    half,
+                    twiddles,
+                    scratch: RefCell::new(vec![Complex::ZERO; m]),
+                },
+            }
+        } else {
+            Self {
+                n,
+                kind: RealKind::Odd {
+                    full: plan(n),
+                    scratch: RefCell::new(vec![Complex::ZERO; n]),
+                },
+            }
+        }
+    }
+
+    /// Length of the half spectrum this plan produces/consumes.
+    #[inline]
+    pub fn spectrum_len(&self) -> usize {
+        spectrum_len(self.n)
+    }
+
+    /// Forward transform of the length-`n` real signal `x` into the
+    /// `n/2 + 1` non-redundant bins (same sign/normalization convention
+    /// as [`FftPlan::transform`]: unnormalized forward).
+    pub fn forward(&self, x: &[f64], out: &mut [Complex]) {
+        assert_eq!(x.len(), self.n, "input length != plan length");
+        assert_eq!(out.len(), self.spectrum_len(), "output length != n/2 + 1");
+        match &self.kind {
+            RealKind::Even { half, twiddles, scratch } => {
+                let m = self.n / 2;
+                let mut z = scratch.borrow_mut();
+                for j in 0..m {
+                    z[j] = Complex::new(x[2 * j], x[2 * j + 1]);
+                }
+                half.transform(&mut z, Direction::Forward);
+                // untangle: X[k] = Xe[k] + w^k·Xo[k], where
+                //   Xe[k] = (Z[k] + conj(Z[m-k]))/2      (even samples)
+                //   Xo[k] = (Z[k] - conj(Z[m-k]))/(2i)   (odd samples)
+                // with Z[m] ≡ Z[0].
+                for k in 0..=m {
+                    let zk = if k < m { z[k] } else { z[0] };
+                    let zmk = if k == 0 { z[0].conj() } else { z[m - k].conj() };
+                    let xe = (zk + zmk).scale(0.5);
+                    let d = zk - zmk;
+                    // d / (2i) == d · (-i/2)
+                    let xo = Complex::new(d.im * 0.5, -d.re * 0.5);
+                    out[k] = xe + twiddles[k] * xo;
+                }
+            }
+            RealKind::Odd { full, scratch } => {
+                let mut buf = scratch.borrow_mut();
+                for (b, &v) in buf.iter_mut().zip(x.iter()) {
+                    *b = Complex::new(v, 0.0);
+                }
+                full.transform(&mut buf, Direction::Forward);
+                out.copy_from_slice(&buf[..self.spectrum_len()]);
+            }
+        }
+    }
+
+    /// Inverse transform of the half spectrum `spec` (length `n/2 + 1`)
+    /// back to a length-`n` real signal, including the 1/n
+    /// normalization, so `inverse(forward(x)) == x`.
+    pub fn inverse(&self, spec: &[Complex], out: &mut [f64]) {
+        assert_eq!(spec.len(), self.spectrum_len(), "spectrum length != n/2 + 1");
+        assert_eq!(out.len(), self.n, "output length != plan length");
+        match &self.kind {
+            RealKind::Even { half, twiddles, scratch } => {
+                let m = self.n / 2;
+                let mut z = scratch.borrow_mut();
+                // re-tangle: Z[k] = Xe[k] + i·Xo[k] with
+                //   Xe[k] = (X[k] + conj(X[m-k]))/2
+                //   Xo[k] = (X[k] - conj(X[m-k]))·w^{-k}/2
+                for k in 0..m {
+                    let xk = spec[k];
+                    let xmk = spec[m - k].conj();
+                    let xe = (xk + xmk).scale(0.5);
+                    let xo = (xk - xmk).scale(0.5) * twiddles[k].conj();
+                    // Z[k] = Xe[k] + i·Xo[k]
+                    z[k] = Complex::new(xe.re - xo.im, xe.im + xo.re);
+                }
+                half.transform(&mut z, Direction::Inverse);
+                for j in 0..m {
+                    out[2 * j] = z[j].re;
+                    out[2 * j + 1] = z[j].im;
+                }
+            }
+            RealKind::Odd { full, scratch } => {
+                let n = self.n;
+                let hc = self.spectrum_len();
+                let mut buf = scratch.borrow_mut();
+                buf[..hc].copy_from_slice(spec);
+                for k in 1..hc {
+                    buf[n - k] = spec[k].conj();
+                }
+                full.transform(&mut buf, Direction::Inverse);
+                for (o, b) in out.iter_mut().zip(buf.iter()) {
+                    *o = b.re;
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    static REAL_PLAN_CACHE: RefCell<HashMap<usize, Rc<RealFftPlan>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Fetch (or build) the thread-local cached real plan for length `n`.
+/// Worker threads in the coordinator each hold their own cache, so a
+/// batch of same-shape combines pays plan construction once per worker.
+pub fn real_plan(n: usize) -> Rc<RealFftPlan> {
+    REAL_PLAN_CACHE.with(|c| {
+        c.borrow_mut()
+            .entry(n)
+            .or_insert_with(|| Rc::new(RealFftPlan::new(n)))
+            .clone()
+    })
+}
+
+/// Forward real FFT; returns the `n/2 + 1` non-redundant bins.
+pub fn rfft(x: &[f64]) -> Vec<Complex> {
+    let p = real_plan(x.len());
+    let mut out = vec![Complex::ZERO; p.spectrum_len()];
+    p.forward(x, &mut out);
+    out
+}
+
+/// Inverse of [`rfft`]: half spectrum (length `n/2 + 1`) → length-`n`
+/// real signal.
+pub fn irfft(spec: &[Complex], n: usize) -> Vec<f64> {
+    let p = real_plan(n);
+    let mut out = vec![0.0; n];
+    p.inverse(spec, &mut out);
+    out
+}
+
+/// 2-D real-input FFT of a row-major `rows × cols` matrix. Returns the
+/// row-major `rows × (cols/2 + 1)` slab of the full spectrum — the
+/// remaining columns are redundant by `S[r, cols-c] =
+/// conj(S[(rows-r) % rows, c])`.
+pub fn rfft2(x: &[f64], rows: usize, cols: usize) -> Vec<Complex> {
+    assert_eq!(x.len(), rows * cols);
+    let rp = real_plan(cols);
+    let hc = rp.spectrum_len();
+    let mut out = vec![Complex::ZERO; rows * hc];
+    for r in 0..rows {
+        rp.forward(&x[r * cols..(r + 1) * cols], &mut out[r * hc..(r + 1) * hc]);
+    }
+    let cp = plan(rows);
+    let mut col = vec![Complex::ZERO; rows];
+    for c in 0..hc {
+        for r in 0..rows {
+            col[r] = out[r * hc + c];
+        }
+        cp.transform(&mut col, Direction::Forward);
+        for r in 0..rows {
+            out[r * hc + c] = col[r];
+        }
+    }
+    out
+}
+
+/// Inverse of [`rfft2`]: `rows × (cols/2 + 1)` half-spectrum slab →
+/// `rows × cols` real matrix (normalized, so `irfft2(rfft2(x)) == x`).
+pub fn irfft2(spec: &[Complex], rows: usize, cols: usize) -> Vec<f64> {
+    let rp = real_plan(cols);
+    let hc = rp.spectrum_len();
+    assert_eq!(spec.len(), rows * hc);
+    let mut buf = spec.to_vec();
+    let cp = plan(rows);
+    let mut col = vec![Complex::ZERO; rows];
+    for c in 0..hc {
+        for r in 0..rows {
+            col[r] = buf[r * hc + c];
+        }
+        cp.transform(&mut col, Direction::Inverse);
+        for r in 0..rows {
+            buf[r * hc + c] = col[r];
+        }
+    }
+    let mut out = vec![0.0; rows * cols];
+    for r in 0..rows {
+        rp.inverse(&buf[r * hc..(r + 1) * hc], &mut out[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Circular convolution of two real vectors via the half-spectrum path
+/// (the real-input counterpart of [`super::circular_convolve`]).
+pub fn circular_convolve_real(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut fa = rfft(a);
+    let fb = rfft(b);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    irfft(&fa, n)
+}
+
+/// 2-D circular convolution of two real `rows × cols` matrices via the
+/// half-spectrum path — the real-input MTS Kronecker combine of
+/// Lemma B.1. Versus the packed complex path
+/// ([`super::circular_convolve2`]) this runs 1.5 half-size transforms
+/// instead of 2 full-size ones, touches half the spectral memory, and
+/// skips the negated-frequency gather pass.
+pub fn circular_convolve2_real(a: &[f64], b: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(b.len(), rows * cols);
+    let mut fa = rfft2(a, rows, cols);
+    let fb = rfft2(b, rows, cols);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    irfft2(&fa, rows, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{circular_convolve, circular_convolve2, fft, fft_real, ifft};
+    use crate::rng::Pcg64;
+
+    /// The satellite sweep: every length class the crate meets — powers
+    /// of two, even composites, odd composites, and primes (Bluestein).
+    const LENGTH_SWEEP: &[usize] = &[
+        1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 15, 16, 17, 24, 30, 31, 32, 33, 48, 64, 97, 100, 127,
+        128, 251, 256,
+    ];
+
+    #[test]
+    fn real_forward_matches_complex_across_length_sweep() {
+        for &n in LENGTH_SWEEP {
+            let mut rng = Pcg64::new(100 + n as u64);
+            let x = rng.normal_vec(n);
+            let got = rfft(&x);
+            let want = fft_real(&x);
+            assert_eq!(got.len(), n / 2 + 1);
+            for (k, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (*g - *w).abs() < 1e-9,
+                    "n={n} bin {k}: {g:?} vs {w:?} (|Δ|={})",
+                    (*g - *w).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn real_roundtrip_across_length_sweep() {
+        for &n in LENGTH_SWEEP {
+            let mut rng = Pcg64::new(200 + n as u64);
+            let x = rng.normal_vec(n);
+            let rec = irfft(&rfft(&x), n);
+            for (i, (r, v)) in rec.iter().zip(x.iter()).enumerate() {
+                assert!((r - v).abs() < 1e-9, "n={n} idx {i}: {r} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bluestein_roundtrip_prime_lengths() {
+        // the non-power-of-two (chirp-z) path at odd / prime lengths
+        for &n in &[3usize, 7, 11, 13, 23, 29, 61, 97, 127, 251, 509, 1021] {
+            let mut rng = Pcg64::new(300 + n as u64);
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let mut buf = x.clone();
+            fft(&mut buf);
+            ifft(&mut buf);
+            for (i, (b, v)) in buf.iter().zip(x.iter()).enumerate() {
+                assert!(
+                    (*b - *v).abs() < 1e-9 * (n as f64 + 1.0),
+                    "n={n} idx {i}: {b:?} vs {v:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2_matches_complex_fft2_half_plane() {
+        use crate::fft::fft2_real;
+        for &(r, c) in &[(4usize, 4usize), (3, 5), (8, 6), (5, 8), (10, 10), (1, 7), (7, 1)] {
+            let mut rng = Pcg64::new((r * 37 + c) as u64);
+            let x = rng.normal_vec(r * c);
+            let got = rfft2(&x, r, c);
+            let want = fft2_real(&x, r, c);
+            let hc = c / 2 + 1;
+            for row in 0..r {
+                for col in 0..hc {
+                    let g = got[row * hc + col];
+                    let w = want[row * c + col];
+                    assert!((g - w).abs() < 1e-9, "({r}x{c}) at ({row},{col}): {g:?} vs {w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2_roundtrip() {
+        for &(r, c) in &[(4usize, 4usize), (3, 5), (8, 6), (10, 10), (1, 7), (6, 1), (2, 2)] {
+            let mut rng = Pcg64::new((r * 101 + c) as u64);
+            let x = rng.normal_vec(r * c);
+            let rec = irfft2(&rfft2(&x, r, c), r, c);
+            for (i, (a, b)) in rec.iter().zip(x.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-9, "({r}x{c}) idx {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn convolve_real_matches_complex_path() {
+        for &n in &[4usize, 7, 16, 30, 33, 64, 100] {
+            let mut rng = Pcg64::new(n as u64);
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let got = circular_convolve_real(&a, &b);
+            let want = circular_convolve(&a, &b);
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!((g - w).abs() < 1e-9, "n={n} idx {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn convolve2_real_matches_complex_path_across_sweep() {
+        // the acceptance sweep: the optimized path must agree with the
+        // packed complex path to ≤ 1e-9 absolute error
+        for &(r, c) in &[
+            (4usize, 4usize),
+            (5, 6),
+            (6, 5),
+            (7, 7),
+            (8, 8),
+            (9, 12),
+            (16, 16),
+            (17, 13),
+            (32, 32),
+            (64, 64),
+        ] {
+            let mut rng = Pcg64::new((r * 13 + c) as u64);
+            let a = rng.normal_vec(r * c);
+            let b = rng.normal_vec(r * c);
+            let got = circular_convolve2_real(&a, &b, r, c);
+            let want = circular_convolve2(&a, &b, r, c);
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!((g - w).abs() < 1e-9, "({r}x{c}) idx {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn convolve2_real_matches_direct() {
+        let mut rng = Pcg64::new(99);
+        let (r, c) = (5usize, 6usize);
+        let a = rng.normal_vec(r * c);
+        let b = rng.normal_vec(r * c);
+        let got = circular_convolve2_real(&a, &b, r, c);
+        for kr in 0..r {
+            for kc in 0..c {
+                let mut want = 0.0;
+                for i in 0..r {
+                    for j in 0..c {
+                        want += a[i * c + j] * b[((kr + r - i) % r) * c + (kc + c - j) % c];
+                    }
+                }
+                let g = got[kr * c + kc];
+                assert!((g - want).abs() < 1e-9, "({kr},{kc}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn real_plan_cache_reuses_plans() {
+        let p1 = real_plan(48);
+        let p2 = real_plan(48);
+        assert!(Rc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn trivial_lengths() {
+        // n = 1 and n = 2 hit the degenerate plan branches
+        assert_eq!(irfft(&rfft(&[3.5]), 1), vec![3.5]);
+        let rec = irfft(&rfft(&[1.0, -2.0]), 2);
+        assert!((rec[0] - 1.0).abs() < 1e-12 && (rec[1] + 2.0).abs() < 1e-12);
+    }
+}

@@ -15,10 +15,11 @@
 //!   [`decomp`], [`linalg`], [`rng`], [`util`].
 //! - **AOT compute artifacts** (build time, `python/`): Pallas kernels +
 //!   JAX models lowered to HLO text, loaded at runtime by [`runtime`].
-//! - **Coordinator** ([`coordinator`]): a thread-based sketch service
-//!   with routing, size-class batching and backpressure, plus the
-//!   [`train`] driver reproducing the paper's tensor-regression-network
-//!   experiments end to end.
+//! - **Coordinator** ([`coordinator`]): a pooled sketch service — a
+//!   size-class batcher feeding a configurable worker pool (each worker
+//!   owns its backend and FFT plan caches) with backpressure and
+//!   p50/p99 latency metrics — plus the [`train`] driver reproducing
+//!   the paper's tensor-regression-network experiments end to end.
 //!
 //! ## Quickstart
 //!

@@ -2,6 +2,7 @@
 //! artifacts, with literal marshalling helpers.
 
 use super::artifacts::Manifest;
+use super::xla_stub as xla;
 use anyhow::{anyhow, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;

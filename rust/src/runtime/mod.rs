@@ -16,6 +16,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifacts::{Manifest, ModelEntry, OpEntry, OpHash};
 pub use client::Runtime;

@@ -16,7 +16,7 @@
 
 use super::cs::CsSketcher;
 use super::kron::MtsKron;
-use crate::fft::{self, Complex, Direction};
+use crate::fft::{self, Complex};
 use crate::hash::HashSeeds;
 use crate::tensor::Tensor;
 use crate::util::stats::median_inplace;
@@ -52,20 +52,21 @@ impl PaghCovariance {
         (self.n * self.n) as f64 / self.c as f64
     }
 
-    /// `CS(AAᵀ) = IFFT(Σ_k FFT(CS₁(A[:,k])) ∘ FFT(CS₂(A[:,k])))`.
+    /// `CS(AAᵀ) = IFFT(Σ_k FFT(CS₁(A[:,k])) ∘ FFT(CS₂(A[:,k])))`,
+    /// accumulated on half spectra (real inputs).
     pub fn sketch(&self, a: &Tensor) -> Vec<f64> {
         assert_eq!(a.dims(), &[self.n, self.r]);
-        let mut acc = vec![Complex::ZERO; self.c];
+        let hc = self.c / 2 + 1;
+        let mut acc = vec![Complex::ZERO; hc];
         for k in 0..self.r {
             let col = a.col(k);
-            let f1 = fft::fft_real(&self.cs_row.sketch(&col));
-            let f2 = fft::fft_real(&self.cs_col.sketch(&col));
+            let f1 = fft::rfft(&self.cs_row.sketch(&col));
+            let f2 = fft::rfft(&self.cs_col.sketch(&col));
             for ((x, y), z) in f1.iter().zip(f2.iter()).zip(acc.iter_mut()) {
                 *z += *x * *y;
             }
         }
-        fft::plan(self.c).transform(&mut acc, Direction::Inverse);
-        acc.into_iter().map(|v| v.re).collect()
+        fft::irfft(&acc, self.c)
     }
 
     /// Estimate `(AAᵀ)[i, j]`.

@@ -6,7 +6,7 @@
 
 use super::tucker::{CtsTucker, MtsTucker};
 use crate::decomp::CpTensor;
-use crate::fft::{self, Complex, Direction};
+use crate::fft::{self, Complex};
 use crate::tensor::Tensor;
 
 /// CTS of a CP-form tensor: `CTS(T) = Σ_{i=1}^r λ_i · CS(U_i) * CS(V_i) * …`
@@ -24,22 +24,24 @@ impl CtsCp {
         Self { inner: CtsTucker::with_repeat(dims, c, seed, repeat) }
     }
 
-    /// Sketch from the CP form: r convolution terms (not r³).
+    /// Sketch from the CP form: r convolution terms (not r³), run on
+    /// half spectra (one RFFT per factor column, one IRFFT total).
     pub fn sketch(&self, t: &CpTensor) -> Vec<f64> {
         assert_eq!(t.dims(), self.inner.dims, "CP dims mismatch");
         let c = self.inner.c;
+        let hc = c / 2 + 1;
         let n_modes = self.inner.dims.len();
-        let mut acc = vec![Complex::ZERO; c];
+        let mut acc = vec![Complex::ZERO; hc];
         for (i, &w) in t.weights.iter().enumerate() {
             // ∏_k FFT(CS(U_k[:, i])) accumulated per frequency
-            let mut term: Vec<Complex> = vec![Complex::new(w, 0.0); c];
+            let mut term: Vec<Complex> = vec![Complex::new(w, 0.0); hc];
             for k in 0..n_modes {
                 let mode = &self.inner.modes[k];
                 let mut cs = vec![0.0; c];
                 for row in 0..self.inner.dims[k] {
                     cs[mode.h(row)] += mode.s(row) * t.factors[k].at2(row, i);
                 }
-                let f = fft::fft_real(&cs);
+                let f = fft::rfft(&cs);
                 for (t_, x) in term.iter_mut().zip(f.iter()) {
                     *t_ = *t_ * *x;
                 }
@@ -48,8 +50,7 @@ impl CtsCp {
                 *a += *t_;
             }
         }
-        fft::plan(c).transform(&mut acc, Direction::Inverse);
-        acc.into_iter().map(|x| x.re).collect()
+        fft::irfft(&acc, c)
     }
 
     pub fn estimate(&self, sk: &[f64], idx: &[usize]) -> f64 {
@@ -89,11 +90,12 @@ impl MtsCp {
     pub fn sketch(&self, t: &CpTensor) -> Vec<f64> {
         assert_eq!(t.dims(), self.inner.dims, "CP dims mismatch");
         assert_eq!(t.rank(), self.inner.ranks[0], "CP rank mismatch");
-        // 1. factor Kronecker sketch in frequency domain (as Tucker)
+        // 1. factor Kronecker sketch in frequency domain (as Tucker),
+        //    accumulated on real-input half spectra
         let mut freq: Option<Vec<Complex>> = None;
         for (k, f) in t.factors.iter().enumerate() {
             let sk = self.inner.factor_sk[k].sketch(f);
-            let fa = fft::fft2_real(sk.data(), self.inner.m1, self.inner.m2);
+            let fa = fft::rfft2(sk.data(), self.inner.m1, self.inner.m2);
             freq = Some(match freq {
                 None => fa,
                 Some(mut acc) => {
@@ -104,8 +106,7 @@ impl MtsCp {
                 }
             });
         }
-        let kron_sketch =
-            fft::ifft2_to_real(freq.unwrap(), self.inner.m1, self.inner.m2);
+        let kron_sketch = fft::irfft2(&freq.unwrap(), self.inner.m1, self.inner.m2);
 
         // 2. diagonal core CS: r terms
         let mut csg = vec![0.0; self.inner.m2];

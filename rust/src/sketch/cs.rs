@@ -2,7 +2,7 @@
 //! Pagh's FFT outer-product sketch (paper Eq. 2):
 //! `CS(u ⊗ v) = CS(u) * CS(v)`.
 
-use crate::fft::circular_convolve;
+use crate::fft::circular_convolve_real;
 use crate::hash::ModeHash;
 
 /// Count sketch of length-`n` vectors into `c` buckets.
@@ -43,10 +43,41 @@ impl CsSketcher {
         y
     }
 
+    /// `CS(x)` for a whole batch of inputs. The bucket/sign tables are
+    /// streamed once per tile of inputs instead of once per input, so
+    /// table traffic amortizes over the batch. This is the f64 library
+    /// form of the tiling; the coordinator's `PureRustBackend` applies
+    /// the same scheme to its f32 manifest-driven kernels.
+    pub fn sketch_batch(&self, xs: &[&[f64]]) -> Vec<Vec<f64>> {
+        for (r, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.n, "batch row {r}: input length {} != n {}", x.len(), self.n);
+        }
+        let mut outs = vec![vec![0.0f64; self.c]; xs.len()];
+        // tile so the tile's outputs stay cache-resident while the
+        // tables stream through
+        const TILE: usize = 8;
+        let mut start = 0;
+        while start < xs.len() {
+            let end = (start + TILE).min(xs.len());
+            for i in 0..self.n {
+                let b = self.buckets[i] as usize;
+                let s = self.signs[i];
+                for (x, out) in xs[start..end].iter().zip(outs[start..end].iter_mut()) {
+                    out[b] += s * x[i];
+                }
+            }
+            start = end;
+        }
+        outs
+    }
+
     /// Point estimate `x̂[i] = s(i)·y[h(i)]` (unbiased, Thm B.2).
+    ///
+    /// The sketch length is validated with a real assert: a short slice
+    /// would silently read the wrong bucket in release builds.
     #[inline]
     pub fn estimate(&self, y: &[f64], i: usize) -> f64 {
-        debug_assert_eq!(y.len(), self.c);
+        assert_eq!(y.len(), self.c, "sketch length {} != c {}", y.len(), self.c);
         self.signs[i] * y[self.buckets[i] as usize]
     }
 
@@ -63,7 +94,7 @@ impl CsSketcher {
 /// `h(i,j) = (h_u(i) + h_v(j)) mod c` and sign `s_u(i)·s_v(j)`.
 pub fn sketch_outer_product(su: &CsSketcher, sv: &CsSketcher, u: &[f64], v: &[f64]) -> Vec<f64> {
     assert_eq!(su.c, sv.c, "outer-product sketches must share c");
-    circular_convolve(&su.sketch(u), &sv.sketch(v))
+    circular_convolve_real(&su.sketch(u), &sv.sketch(v))
 }
 
 /// Estimate `(u⊗v)[i,j]` from a combined outer-product sketch.
@@ -204,5 +235,34 @@ mod tests {
     #[should_panic(expected = "input length")]
     fn wrong_length_panics() {
         CsSketcher::new(8, 4, 0).sketch(&[1.0; 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sketch length")]
+    fn estimate_rejects_short_sketch_in_release_too() {
+        let cs = CsSketcher::new(8, 4, 0);
+        let y = vec![0.0; 3]; // one short of c = 4
+        cs.estimate(&y, 0);
+    }
+
+    #[test]
+    fn sketch_batch_matches_single_sketches() {
+        let cs = CsSketcher::new(50, 7, 11);
+        let mut rng = Pcg64::new(8);
+        // more rows than one tile to exercise the tiling
+        let rows: Vec<Vec<f64>> = (0..19).map(|_| rng.normal_vec(50)).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let batch = cs.sketch_batch(&refs);
+        assert_eq!(batch.len(), 19);
+        for (row, got) in rows.iter().zip(batch.iter()) {
+            // identical accumulation order → exact equality
+            assert_eq!(got, &cs.sketch(row));
+        }
+    }
+
+    #[test]
+    fn sketch_batch_empty_is_empty() {
+        let cs = CsSketcher::new(4, 2, 0);
+        assert!(cs.sketch_batch(&[]).is_empty());
     }
 }

@@ -15,8 +15,9 @@
 
 use super::cs::CsSketcher;
 use super::mts::MtsSketcher;
-use crate::fft::{self, circular_convolve2, Complex, Direction};
+use crate::fft::{self, circular_convolve2_real, Complex};
 use crate::tensor::Tensor;
+use std::collections::HashMap;
 
 /// MTS sketch of `A ⊗ B` computed entirely in sketch space.
 #[derive(Clone, Debug)]
@@ -78,28 +79,66 @@ impl MtsKron {
     }
 
     /// Combine pre-computed input sketches (the hot path the coordinator
-    /// batches): `IFFT2(FFT2(sa) ∘ FFT2(sb))`.
+    /// batches): `IFFT2(FFT2(sa) ∘ FFT2(sb))`, evaluated on the
+    /// real-input half-spectrum path (sketches are real, so conjugate
+    /// symmetry halves the transform work — see `fft::real`).
     pub fn combine(&self, sa: &Tensor, sb: &Tensor) -> Tensor {
         let (m1, m2) = (self.m1(), self.m2());
-        let p = circular_convolve2(sa.data(), sb.data(), m1, m2);
+        let p = circular_convolve2_real(sa.data(), sb.data(), m1, m2);
         Tensor::from_vec(p, &[m1, m2])
     }
 
-    /// Combine when the FFT2 of one side is cached (see
-    /// [`MtsKron::fft_of_sketch`]); saves one forward FFT2 per call.
+    /// Combine a whole batch of sketch pairs. One forward RFFT2 is run
+    /// per *distinct* operand (repeats within the batch — e.g. one A
+    /// combined against many Bs — reuse the cached spectrum), and all
+    /// transforms share the thread-local plans and scratch.
+    pub fn combine_batch(&self, pairs: &[(&Tensor, &Tensor)]) -> Vec<Tensor> {
+        let (m1, m2) = (self.m1(), self.m2());
+        let hc = m2 / 2 + 1;
+        // spectra cache keyed by operand identity (data pointer)
+        let mut spectra: Vec<Vec<Complex>> = Vec::new();
+        let mut index: HashMap<usize, usize> = HashMap::new();
+        let mut spectrum_of = |t: &Tensor, spectra: &mut Vec<Vec<Complex>>| -> usize {
+            assert_eq!(t.dims(), &[m1, m2], "combine_batch operand dims");
+            let key = t.data().as_ptr() as usize;
+            *index.entry(key).or_insert_with(|| {
+                spectra.push(fft::rfft2(t.data(), m1, m2));
+                spectra.len() - 1
+            })
+        };
+        let mut prod = vec![Complex::ZERO; m1 * hc];
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                let ia = spectrum_of(a, &mut spectra);
+                let ib = spectrum_of(b, &mut spectra);
+                let (fa, fb) = (&spectra[ia], &spectra[ib]);
+                for ((p, x), y) in prod.iter_mut().zip(fa.iter()).zip(fb.iter()) {
+                    *p = *x * *y;
+                }
+                Tensor::from_vec(fft::irfft2(&prod, m1, m2), &[m1, m2])
+            })
+            .collect()
+    }
+
+    /// Combine when the RFFT2 of one side is cached (see
+    /// [`MtsKron::fft_of_sketch`]); saves one forward transform per call.
     pub fn combine_with_cached(&self, fa: &[Complex], sb: &Tensor) -> Tensor {
         let (m1, m2) = (self.m1(), self.m2());
-        let mut fb = fft::fft2_real(sb.data(), m1, m2);
+        let mut fb = fft::rfft2(sb.data(), m1, m2);
         for (y, x) in fb.iter_mut().zip(fa.iter()) {
             *y = *y * *x;
         }
-        let p = fft::ifft2_to_real(fb, m1, m2);
+        let p = fft::irfft2(&fb, m1, m2);
         Tensor::from_vec(p, &[m1, m2])
     }
 
-    /// Forward FFT2 of an input sketch, for reuse across combines.
+    /// Forward RFFT2 of an input sketch, for reuse across combines.
+    /// Returns the `m1 × (m2/2 + 1)` half-spectrum slab (the layout
+    /// [`fft::rfft2`] produces); treat it as opaque and feed it back to
+    /// [`MtsKron::combine_with_cached`].
     pub fn fft_of_sketch(&self, s: &Tensor) -> Vec<Complex> {
-        fft::fft2_real(s.data(), self.m1(), self.m2())
+        fft::rfft2(s.data(), self.m1(), self.m2())
     }
 
     /// Estimate one entry `(A⊗B)[n3·p + h, n4·q + g]` from the combined
@@ -196,30 +235,30 @@ impl CtsKron {
 
     /// Sketch `A ⊗ B`: for every row pair (p, h),
     /// `out[(p,h),:] = IFFT(FFT(CS(A[p,:])) ∘ FFT(CS(B[h,:])))`.
+    /// Runs on the real half-spectrum path: one RFFT per input row
+    /// (cached spectra), one half-size product + IRFFT per pair.
     pub fn compress(&self, a: &Tensor, b: &Tensor) -> Tensor {
         assert_eq!(a.dims(), &self.a_dims);
         assert_eq!(b.dims(), &self.b_dims);
         let c = self.c();
         let (n1, n3) = (self.a_dims[0], self.b_dims[0]);
-        // FFT of each row sketch, computed once per row
+        // half spectrum of each row sketch, computed once per row
         let fa: Vec<Vec<Complex>> =
-            (0..n1).map(|p| fft::fft_real(&self.su.sketch(a.row(p)))).collect();
+            (0..n1).map(|p| fft::rfft(&self.su.sketch(a.row(p)))).collect();
         let fb: Vec<Vec<Complex>> =
-            (0..n3).map(|h| fft::fft_real(&self.sv.sketch(b.row(h)))).collect();
-        let plan = fft::plan(c);
+            (0..n3).map(|h| fft::rfft(&self.sv.sketch(b.row(h)))).collect();
+        let plan = fft::real_plan(c);
+        let hc = plan.spectrum_len();
         let mut out = Tensor::zeros(&[n1 * n3, c]);
         let od = out.data_mut();
-        let mut buf = vec![Complex::ZERO; c];
+        let mut buf = vec![Complex::ZERO; hc];
         for p in 0..n1 {
             for h in 0..n3 {
                 for (i, b) in buf.iter_mut().enumerate() {
                     *b = fa[p][i] * fb[h][i];
                 }
-                plan.transform(&mut buf, Direction::Inverse);
                 let row = (p * n3 + h) * c;
-                for (i, v) in buf.iter().enumerate() {
-                    od[row + i] = v.re;
-                }
+                plan.inverse(&buf, &mut od[row..row + c]);
             }
         }
         out
@@ -308,14 +347,16 @@ impl MtsKronN {
         self.sketchers[0].sketch_dims[1]
     }
 
-    /// Sketch every factor and combine in the frequency domain.
+    /// Sketch every factor and combine in the frequency domain (half
+    /// spectra — the N-ary product is accumulated on `m1 × (m2/2 + 1)`
+    /// slabs and inverted once).
     pub fn compress(&self, factors: &[&Tensor]) -> Tensor {
         assert_eq!(factors.len(), self.sketchers.len());
         let (m1, m2) = (self.m1(), self.m2());
         let mut freq: Option<Vec<Complex>> = None;
         for (sk, f) in self.sketchers.iter().zip(factors.iter()) {
             let s = sk.sketch(f);
-            let fs = fft::fft2_real(s.data(), m1, m2);
+            let fs = fft::rfft2(s.data(), m1, m2);
             freq = Some(match freq {
                 None => fs,
                 Some(mut acc) => {
@@ -326,7 +367,7 @@ impl MtsKronN {
                 }
             });
         }
-        let out = fft::ifft2_to_real(freq.unwrap(), m1, m2);
+        let out = fft::irfft2(&freq.unwrap(), m1, m2);
         Tensor::from_vec(out, &[m1, m2])
     }
 
@@ -509,6 +550,26 @@ mod tests {
         let fa = mk.fft_of_sketch(&sa);
         let cached = mk.combine_with_cached(&fa, &sb);
         assert!(rel_error(&plain, &cached) < 1e-10);
+    }
+
+    #[test]
+    fn combine_batch_matches_individual_combines() {
+        // batch with a repeated operand: one A against many Bs must
+        // reuse A's spectrum and still match job-by-job combines
+        let mut rng = Pcg64::new(21);
+        let mk = MtsKron::new(&[6, 6], &[6, 6], 5, 8, 9);
+        let a = Tensor::randn(&[6, 6], &mut rng);
+        let sa = mk.ska.sketch(&a);
+        let sbs: Vec<Tensor> = (0..4)
+            .map(|_| mk.skb.sketch(&Tensor::randn(&[6, 6], &mut rng)))
+            .collect();
+        let pairs: Vec<(&Tensor, &Tensor)> = sbs.iter().map(|sb| (&sa, sb)).collect();
+        let batch = mk.combine_batch(&pairs);
+        assert_eq!(batch.len(), 4);
+        for (got, sb) in batch.iter().zip(sbs.iter()) {
+            let want = mk.combine(&sa, sb);
+            assert!(rel_error(&want, got) < 1e-10);
+        }
     }
 
     #[test]

@@ -87,11 +87,27 @@ impl MtsSketcher {
     pub fn sketch(&self, t: &Tensor) -> Tensor {
         assert_eq!(t.dims(), self.dims.as_slice(), "tensor dims mismatch");
         let mut out = Tensor::zeros(&self.sketch_dims);
-        let n = self.order();
         let od = out.data_mut();
-        // iterate row-major, maintaining per-mode index + running output
-        // offset/sign incrementally (profiled: recomputing them per
-        // element was the initial hot spot — see EXPERIMENTS.md §Perf).
+        let data = t.data();
+        let mut pos = 0usize;
+        self.walk_fused(|off, sign| {
+            od[off] += sign * data[pos];
+            pos += 1;
+        });
+        out
+    }
+
+    /// Walk every input element position in row-major order, invoking
+    /// `f(output offset, sign)` per element — the shared core of
+    /// [`MtsSketcher::sketch`] and the batch path's fused tables.
+    ///
+    /// Maintains the per-mode index and the running offset/sign
+    /// incrementally (profiled: recomputing them per element was the
+    /// initial hot spot — see EXPERIMENTS.md §Perf).
+    #[inline]
+    fn walk_fused(&self, mut f: impl FnMut(usize, f64)) {
+        let n = self.order();
+        let total: usize = self.dims.iter().product();
         let mut idx = vec![0usize; n];
         // strides of the output tensor
         let mut out_strides = vec![1usize; n];
@@ -99,12 +115,13 @@ impl MtsSketcher {
             out_strides[k] = out_strides[k + 1] * self.sketch_dims[k + 1];
         }
         // current per-mode contributions
-        let mut off_parts: Vec<usize> = (0..n).map(|k| self.buckets[k][0] as usize * out_strides[k]).collect();
+        let mut off_parts: Vec<usize> =
+            (0..n).map(|k| self.buckets[k][0] as usize * out_strides[k]).collect();
         let mut sign_parts: Vec<f64> = (0..n).map(|k| self.signs[k][0]).collect();
         let mut off: usize = off_parts.iter().sum();
         let mut sign: f64 = sign_parts.iter().product();
-        for &v in t.data() {
-            od[off] += sign * v;
+        for _ in 0..total {
+            f(off, sign);
             // advance multi-index
             let mut k = n;
             loop {
@@ -131,7 +148,50 @@ impl MtsSketcher {
                 sign *= sign_parts[k];
             }
         }
-        out
+    }
+
+    /// Sketch a whole batch of same-shape tensors. The per-element
+    /// (output offset, sign) walk — the expensive part of
+    /// [`MtsSketcher::sketch`] — is materialized once into fused tables
+    /// and replayed over every tensor, so the multi-index arithmetic
+    /// and hash-table traversal amortize across the batch; each
+    /// tensor's pass is then a tight gather-scatter.
+    pub fn sketch_batch(&self, ts: &[&Tensor]) -> Vec<Tensor> {
+        for (r, t) in ts.iter().enumerate() {
+            assert_eq!(t.dims(), self.dims.as_slice(), "batch row {r}: tensor dims mismatch");
+        }
+        if ts.is_empty() {
+            return Vec::new();
+        }
+        let (offs, sgns) = self.fused_tables();
+        ts.iter()
+            .map(|t| {
+                let mut out = Tensor::zeros(&self.sketch_dims);
+                let od = out.data_mut();
+                for ((&off, &sign), &v) in offs.iter().zip(sgns.iter()).zip(t.data().iter()) {
+                    od[off as usize] += sign * v;
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Materialize the fused per-element output offset and sign tables
+    /// (row-major element order) that [`MtsSketcher::sketch_batch`]
+    /// replays. Uses the same [`MtsSketcher::walk_fused`] core as
+    /// `sketch`, so batch results are bit-identical to the
+    /// single-tensor path.
+    fn fused_tables(&self) -> (Vec<u32>, Vec<f64>) {
+        let total: usize = self.dims.iter().product();
+        let out_len: usize = self.sketch_dims.iter().product();
+        assert!(out_len <= u32::MAX as usize, "sketch too large for u32 offsets");
+        let mut offs = Vec::with_capacity(total);
+        let mut sgns = Vec::with_capacity(total);
+        self.walk_fused(|off, sign| {
+            offs.push(off as u32);
+            sgns.push(sign);
+        });
+        (offs, sgns)
     }
 
     /// Literal Eq. 3: `(S ∘ T)(H₁,…,H_N)` via hash-matrix contractions.
@@ -227,6 +287,32 @@ mod tests {
                 assert!((x - y).abs() < 1e-9, "dims {dims:?}");
             }
         }
+    }
+
+    #[test]
+    fn sketch_batch_matches_single_sketches() {
+        let mut rng = Pcg64::new(11);
+        for (dims, sdims) in [
+            (vec![6usize, 7], vec![3usize, 4]),
+            (vec![4, 5, 6], vec![2, 3, 3]),
+            (vec![9], vec![4]),
+        ] {
+            let ts: Vec<Tensor> = (0..5).map(|_| Tensor::randn(&dims, &mut rng)).collect();
+            let refs: Vec<&Tensor> = ts.iter().collect();
+            let sk = MtsSketcher::new(&dims, &sdims, 77);
+            let batch = sk.sketch_batch(&refs);
+            assert_eq!(batch.len(), 5);
+            for (t, got) in ts.iter().zip(batch.iter()) {
+                // fused tables replay the exact single-sketch walk
+                assert_eq!(got.data(), sk.sketch(t).data(), "dims {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_batch_empty_is_empty() {
+        let sk = MtsSketcher::new(&[4, 4], &[2, 2], 0);
+        assert!(sk.sketch_batch(&[]).is_empty());
     }
 
     #[test]

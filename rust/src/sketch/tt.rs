@@ -182,36 +182,37 @@ impl CtsTtCombined {
         }
     }
 
-    /// Combined length-`c` count sketch of `vec(T)`.
+    /// Combined length-`c` count sketch of `vec(T)` (half-spectrum
+    /// accumulation: one RFFT per sketched fibre, one IRFFT total).
     pub fn sketch(&self, t: &TtTensor) -> Vec<f64> {
-        use crate::fft::{Complex, Direction};
+        use crate::fft::Complex;
         let g1 = t.g1_matrix(); // n1 × r1
         let g2 = t.g2_tensor(); // n2 × r1 × r2
         let g3 = t.g3_matrix(); // n3 × r2
         let (r1, r2) = (self.ranks[0], self.ranks[1]);
         let c = self.c;
-        // FFT of the per-column CS of G1 / G3, per-(a,b) of G2
+        let hc = c / 2 + 1;
+        // half spectrum of the per-column CS of G1 / G3, per-(a,b) of G2
         let f1: Vec<Vec<Complex>> = (0..r1)
-            .map(|a| crate::fft::fft_real(&self.cs1.sketch(&g1.col(a))))
+            .map(|a| crate::fft::rfft(&self.cs1.sketch(&g1.col(a))))
             .collect();
         let f3: Vec<Vec<Complex>> = (0..r2)
-            .map(|b| crate::fft::fft_real(&self.cs3.sketch(&g3.col(b))))
+            .map(|b| crate::fft::rfft(&self.cs3.sketch(&g3.col(b))))
             .collect();
-        let mut acc = vec![Complex::ZERO; c];
+        let mut acc = vec![Complex::ZERO; hc];
         let mut fibre = vec![0.0f64; self.dims[1]];
         for a in 0..r1 {
             for b in 0..r2 {
                 for (j, f) in fibre.iter_mut().enumerate() {
                     *f = g2.get(&[j, a, b]);
                 }
-                let f2 = crate::fft::fft_real(&self.cs2.sketch(&fibre));
-                for i in 0..c {
+                let f2 = crate::fft::rfft(&self.cs2.sketch(&fibre));
+                for i in 0..hc {
                     acc[i] += f1[a][i] * f2[i] * f3[b][i];
                 }
             }
         }
-        crate::fft::plan(c).transform(&mut acc, Direction::Inverse);
-        acc.into_iter().map(|x| x.re).collect()
+        crate::fft::irfft(&acc, c)
     }
 
     /// Point estimate under the composite hash.
@@ -311,10 +312,10 @@ impl MtsTt {
         assert_eq!(g1.dims(), &[self.dims[0], self.ranks[0]], "G1 shape");
         assert_eq!(g3.dims(), &[self.dims[2], self.ranks[1]], "G3 shape");
 
-        // 1. K = MTS(G1 ⊗ G3) via FFT2 combine
+        // 1. K = MTS(G1 ⊗ G3) via FFT2 combine (real half-spectrum path)
         let s1 = self.sk_g1.sketch(&g1);
         let s3 = self.sk_g3.sketch(&g3);
-        let k = fft::circular_convolve2(s1.data(), s3.data(), self.m1, self.m2);
+        let k = fft::circular_convolve2_real(s1.data(), s3.data(), self.m1, self.m2);
 
         // 2. G2' ∈ ℝ^{m2×m3}: rows (a,b) composite-hashed with the
         //    *column* hashes of G1/G3's sketches; cols j hashed by cs_n2

@@ -16,7 +16,7 @@
 
 use super::mts::MtsSketcher;
 use crate::decomp::TuckerTensor;
-use crate::fft::{self, Complex, Direction};
+use crate::fft::{self, Complex};
 use crate::hash::{HashSeeds, ModeHash};
 use crate::tensor::Tensor;
 
@@ -54,7 +54,10 @@ impl CtsTucker {
         assert_eq!(t.dims(), self.dims, "Tucker dims mismatch");
         let n_modes = self.dims.len();
         let ranks = t.ranks();
-        // FFT of CS of each factor column: per mode an r_k × c complex table
+        let hc = self.c / 2 + 1;
+        // half spectrum (RFFT) of CS of each factor column: per mode an
+        // r_k × (c/2 + 1) complex table — real inputs, so the redundant
+        // half of every spectrum is never computed or multiplied
         let spectra: Vec<Vec<Vec<Complex>>> = (0..n_modes)
             .map(|k| {
                 let f = &t.factors[k];
@@ -64,7 +67,7 @@ impl CtsTucker {
                         for i in 0..self.dims[k] {
                             cs[self.modes[k].h(i)] += self.modes[k].s(i) * f.at2(i, col);
                         }
-                        fft::fft_real(&cs)
+                        fft::rfft(&cs)
                     })
                     .collect()
             })
@@ -73,7 +76,7 @@ impl CtsTucker {
         // acc[f] = Σ_{a,b,…} G[a,b,…] ∏_k spectra[k][idx_k][f]
         // computed as a sequential contraction of G with the per-mode
         // spectral vectors (O(c·Σ r^k) instead of O(c·r^N·N)).
-        let mut acc = vec![Complex::ZERO; self.c];
+        let mut acc = vec![Complex::ZERO; hc];
         let core = &t.core;
         for (f, a) in acc.iter_mut().enumerate() {
             // contract core with vectors v_k[j] = spectra[k][j][f]
@@ -97,8 +100,7 @@ impl CtsTucker {
             }
             *a = cur[0];
         }
-        fft::plan(self.c).transform(&mut acc, Direction::Inverse);
-        acc.into_iter().map(|x| x.re).collect()
+        fft::irfft(&acc, self.c)
     }
 
     /// Point estimate `T̂[idx]`.
@@ -192,10 +194,11 @@ impl MtsTucker {
         assert_eq!(t.ranks(), self.ranks, "Tucker ranks mismatch");
         // 1. MTS of each factor, combined in the 2-D frequency domain:
         //    MTS(U ⊗ V ⊗ …) = IFFT2(∏ FFT2(MTS(U_k)))  [Lemma B.1, N-ary]
+        //    — accumulated on real-input half spectra (m1 × (m2/2 + 1))
         let mut freq: Option<Vec<Complex>> = None;
         for (k, f) in t.factors.iter().enumerate() {
             let sk = self.factor_sk[k].sketch(f);
-            let fa = fft::fft2_real(sk.data(), self.m1, self.m2);
+            let fa = fft::rfft2(sk.data(), self.m1, self.m2);
             freq = Some(match freq {
                 None => fa,
                 Some(mut acc) => {
@@ -206,7 +209,7 @@ impl MtsTucker {
                 }
             });
         }
-        let kron_sketch = fft::ifft2_to_real(freq.unwrap(), self.m1, self.m2); // m1×m2
+        let kron_sketch = fft::irfft2(&freq.unwrap(), self.m1, self.m2); // m1×m2
 
         // 2. CS of vec(G) under the composite column hash
         let csg = self.sketch_core(&t.core);

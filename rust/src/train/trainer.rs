@@ -4,6 +4,7 @@
 
 use super::data::SyntheticImages;
 use crate::runtime::client::{literal_f32, literal_i32, literal_scalar_value, literal_to_f32};
+use crate::runtime::xla_stub as xla;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};

@@ -53,7 +53,8 @@ impl Gen {
 
     /// Random tensor shape: `order` modes each in `[1, max_dim]`.
     pub fn shape(&mut self, order: usize, max_dim: usize) -> Vec<usize> {
-        let s: Vec<usize> = (0..order).map(|_| 1 + self.rng.gen_range(max_dim as u64) as usize).collect();
+        let s: Vec<usize> =
+            (0..order).map(|_| 1 + self.rng.gen_range(max_dim as u64) as usize).collect();
         self.trace.push(format!("shape {s:?}"));
         s
     }
