@@ -1,0 +1,197 @@
+//! `cargo bench` target: sharded-store throughput/latency sweep.
+//!
+//! Measures, per shard count K ∈ {1, 2, 4, 8}:
+//! - multi-writer update throughput (4 threads hammering one store);
+//! - point-query latency p50/p99 (measured per call);
+//!
+//! plus one loopback-TCP row (framed protocol + batch updates through
+//! `StoreServer`/`StoreClient`). Writes everything to
+//! `BENCH_store.json` so future PRs have a perf trajectory.
+
+use hocs::rng::Pcg64;
+use hocs::store::{
+    ShardedStore, StoreClient, StoreConfig, StoreServer, StoreServerConfig,
+};
+use hocs::util::bench::Table;
+use hocs::util::json::Json;
+use std::time::Instant;
+
+const OUT_PATH: &str = "BENCH_store.json";
+
+/// Key universe / sketch geometry for the sweep: 16k×16k keys into
+/// 64×64×d counters — big enough that shard routing dominates, small
+/// enough that the bench stays seconds-long.
+fn bench_cfg(shards: usize) -> StoreConfig {
+    StoreConfig { n1: 1 << 14, n2: 1 << 14, m1: 64, m2: 64, d: 5, seed: 42, shards, window: 4 }
+}
+
+const WRITER_THREADS: usize = 4;
+const UPDATES_PER_THREAD: usize = 50_000;
+const QUERIES: usize = 5_000;
+
+fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
+    assert!(!sorted_ns.is_empty());
+    let idx = ((sorted_ns.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ns[idx] as f64 / 1e3
+}
+
+struct Row {
+    label: String,
+    shards: usize,
+    updates: usize,
+    updates_per_sec: f64,
+    queries: usize,
+    query_p50_us: f64,
+    query_p99_us: f64,
+}
+
+fn sweep_in_process() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = bench_cfg(shards);
+        let store = ShardedStore::new(cfg.clone());
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for t in 0..WRITER_THREADS {
+                let store = &store;
+                let cfg = &cfg;
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(1_000 + t as u64);
+                    for _ in 0..UPDATES_PER_THREAD {
+                        let i = rng.gen_range(cfg.n1 as u64) as usize;
+                        let j = rng.gen_range(cfg.n2 as u64) as usize;
+                        store.update(i, j, 1.0);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let updates = WRITER_THREADS * UPDATES_PER_THREAD;
+
+        let mut rng = Pcg64::new(7);
+        let mut lat_ns = Vec::with_capacity(QUERIES);
+        for _ in 0..QUERIES {
+            let i = rng.gen_range(cfg.n1 as u64) as usize;
+            let j = rng.gen_range(cfg.n2 as u64) as usize;
+            let q0 = Instant::now();
+            std::hint::black_box(store.point_query(i, j));
+            lat_ns.push(q0.elapsed().as_nanos() as u64);
+        }
+        lat_ns.sort_unstable();
+        rows.push(Row {
+            label: format!("in-process K={shards}"),
+            shards,
+            updates,
+            updates_per_sec: updates as f64 / wall,
+            queries: QUERIES,
+            query_p50_us: percentile_us(&lat_ns, 0.5),
+            query_p99_us: percentile_us(&lat_ns, 0.99),
+        });
+    }
+    rows
+}
+
+fn tcp_loopback_row() -> Option<Row> {
+    let shards = 4;
+    let server = match StoreServer::start(StoreServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        store: bench_cfg(shards),
+        ..Default::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("tcp row skipped: {e}");
+            return None;
+        }
+    };
+    let mut client = match StoreClient::connect(server.local_addr()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("tcp row skipped: {e}");
+            server.shutdown();
+            return None;
+        }
+    };
+    let n1 = 1u64 << 14;
+    let mut rng = Pcg64::new(3);
+    let total_updates = 40_000;
+    let chunk = 1_000;
+    let t0 = Instant::now();
+    let mut sent = 0usize;
+    while sent < total_updates {
+        let batch: Vec<(u32, u32, f64)> = (0..chunk)
+            .map(|_| (rng.gen_range(n1) as u32, rng.gen_range(n1) as u32, 1.0))
+            .collect();
+        if let Err(e) = client.update_batch(&batch) {
+            eprintln!("tcp row aborted: {e}");
+            server.shutdown();
+            return None;
+        }
+        sent += chunk;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let queries = 2_000;
+    let mut lat_ns = Vec::with_capacity(queries);
+    for _ in 0..queries {
+        let (i, j) = (rng.gen_range(n1) as usize, rng.gen_range(n1) as usize);
+        let q0 = Instant::now();
+        let _ = std::hint::black_box(client.query(i, j));
+        lat_ns.push(q0.elapsed().as_nanos() as u64);
+    }
+    lat_ns.sort_unstable();
+    server.shutdown();
+    Some(Row {
+        label: format!("tcp-loopback K={shards}"),
+        shards,
+        updates: sent,
+        updates_per_sec: sent as f64 / wall,
+        queries,
+        query_p50_us: percentile_us(&lat_ns, 0.5),
+        query_p99_us: percentile_us(&lat_ns, 0.99),
+    })
+}
+
+fn main() {
+    let mut rows = sweep_in_process();
+    if let Some(tcp) = tcp_loopback_row() {
+        rows.push(tcp);
+    }
+
+    let mut table = Table::new(
+        "store throughput/latency vs shard count",
+        &["path", "shards", "updates/s", "query p50", "query p99"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.label.clone(),
+            r.shards.to_string(),
+            format!("{:.0}", r.updates_per_sec),
+            format!("{:.1} µs", r.query_p50_us),
+            format!("{:.1} µs", r.query_p99_us),
+        ]);
+    }
+    table.print();
+
+    let json = Json::obj(vec![(
+        "store",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("path", Json::Str(r.label.clone())),
+                        ("shards", Json::Num(r.shards as f64)),
+                        ("updates", Json::Num(r.updates as f64)),
+                        ("updates_per_sec", Json::Num(r.updates_per_sec)),
+                        ("queries", Json::Num(r.queries as f64)),
+                        ("query_p50_us", Json::Num(r.query_p50_us)),
+                        ("query_p99_us", Json::Num(r.query_p99_us)),
+                    ])
+                })
+                .collect(),
+        ),
+    )]);
+    match std::fs::write(OUT_PATH, json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -574,6 +574,89 @@ mod tests {
         co.shutdown();
     }
 
+    /// Drive `batcher_loop` directly against synthetic worker channels:
+    /// worker 0 is dead (its receiver is dropped), worker 1 is a live
+    /// echo thread. Every job must be served by worker 1 — the
+    /// round-robin probe and the blocking fallback both have to skip
+    /// the disconnected channel. The store's fan-out path sits on top
+    /// of this behaviour, so it gets its own test.
+    #[test]
+    fn batcher_skips_dead_worker_when_picking_fallback() {
+        let cfg = CoordinatorConfig {
+            max_batch: 1, // one envelope per group: every job probes the pool
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Envelope>(64);
+
+        // worker 0: dead on arrival
+        let (dead_tx, dead_rx) = sync_channel::<Vec<Envelope>>(2);
+        drop(dead_rx);
+        // worker 1: alive, echoes Ok to every envelope
+        let (live_tx, live_rx) = sync_channel::<Vec<Envelope>>(2);
+        let live = std::thread::spawn(move || {
+            let mut served = 0usize;
+            while let Ok(group) = live_rx.recv() {
+                for env in group {
+                    served += 1;
+                    let _ = env.reply.send(Ok(vec![]));
+                }
+            }
+            served
+        });
+
+        let bmetrics = metrics.clone();
+        let batcher =
+            std::thread::spawn(move || batcher_loop(cfg, rx, vec![dead_tx, live_tx], bmetrics));
+
+        let n_jobs = 20;
+        let mut replies = Vec::new();
+        for _ in 0..n_jobs {
+            let (reply, reply_rx) = sync_channel(1);
+            tx.send(Envelope { job: Job::CsSketch(vec![]), submitted: Instant::now(), reply })
+                .unwrap();
+            replies.push(reply_rx);
+        }
+        for (k, rx) in replies.into_iter().enumerate() {
+            let got = rx.recv().expect("reply channel open");
+            assert!(got.is_ok(), "job {k} failed: {got:?}");
+        }
+        drop(tx); // close the queue: batcher drains and exits
+        batcher.join().unwrap();
+        assert_eq!(live.join().unwrap(), n_jobs, "live worker must serve every job");
+        assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    /// With every worker dead the batcher must fail jobs cleanly
+    /// ("worker unavailable") instead of wedging or panicking.
+    #[test]
+    fn batcher_fails_jobs_when_all_workers_dead() {
+        let cfg = CoordinatorConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Envelope>(8);
+        let (w0_tx, w0_rx) = sync_channel::<Vec<Envelope>>(2);
+        let (w1_tx, w1_rx) = sync_channel::<Vec<Envelope>>(2);
+        drop(w0_rx);
+        drop(w1_rx);
+        let bmetrics = metrics.clone();
+        let batcher =
+            std::thread::spawn(move || batcher_loop(cfg, rx, vec![w0_tx, w1_tx], bmetrics));
+        let (reply, reply_rx) = sync_channel(1);
+        tx.send(Envelope { job: Job::CsSketch(vec![]), submitted: Instant::now(), reply })
+            .unwrap();
+        let got = reply_rx.recv().expect("reply channel open");
+        let err = got.expect_err("job must fail with no live workers");
+        assert!(err.contains("worker unavailable"), "unexpected error: {err}");
+        drop(tx);
+        batcher.join().unwrap();
+        assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
     #[test]
     fn xla_backend_through_coordinator() {
         if !artifacts_ready() {

@@ -20,6 +20,12 @@
 //!   owns its backend and FFT plan caches) with backpressure and
 //!   p50/p99 latency metrics — plus the [`train`] driver reproducing
 //!   the paper's tensor-regression-network experiments end to end.
+//! - **Store** ([`store`]): the serving layer over the streaming
+//!   application — a K-way sharded, epoch-windowed store of mergeable
+//!   sketches with snapshot/WAL durability and a framed TCP front-end
+//!   (`hocs serve` / `hocs store-client`). Built entirely on sketch
+//!   linearity: shards, sliding windows, and cross-node merges are all
+//!   elementwise addition.
 //!
 //! ## Quickstart
 //!
@@ -46,6 +52,7 @@ pub mod linalg;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;
+pub mod store;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -4,6 +4,8 @@
 //! hocs info                               # artifact / manifest summary
 //! hocs train --model trl_mts_4x4x8 ...    # e2e training (Fig 10 curve)
 //! hocs serve-demo [--backend xla]         # coordinator demo workload
+//! hocs serve --addr HOST:PORT ...         # sharded sketch store server
+//! hocs store-client <update|query|...>    # talk to a running store
 //! hocs bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|all>
 //! ```
 
@@ -11,7 +13,24 @@ use hocs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
 use hocs::experiments::{self, ExpConfig};
 use hocs::rng::Pcg64;
 use hocs::runtime::Runtime;
+use hocs::store::{StoreClient, StoreConfig, StoreServer, StoreServerConfig};
 use hocs::util::cli::Args;
+
+const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench> [options]\n\
+\n\
+  info                              artifact summary\n\
+  train --model NAME [--steps N] [--lr F] [--eval-every N] [--seed N]\n\
+  serve-demo [--backend xla|rust] [--requests N]\n\
+  serve [--addr HOST:PORT] [--shards K] [--window N]\n\
+        [--n1 N --n2 N --m1 M --m2 M --d D] [--store-seed S]\n\
+        [--data-dir DIR] [--with-coordinator]\n\
+  store-client <update|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
+        [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
+  bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
+        [--quick] [--seed N]\n\
+\n\
+  global options: --artifacts DIR (AOT artifacts, default artifacts/),\n\
+                  --debug (verbose logging)";
 
 fn main() {
     let args = Args::from_env();
@@ -22,16 +41,11 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("store-client") => cmd_store_client(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
-            eprintln!(
-                "usage: hocs <info|train|serve-demo|bench> [options]\n\
-                 \n\
-                 info                              artifact summary\n\
-                 train --model NAME [--steps N] [--lr F] [--seed N]\n\
-                 serve-demo [--backend xla|rust] [--requests N]\n\
-                 bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|all> [--quick]"
-            );
+            eprintln!("{USAGE}");
             2
         }
     };
@@ -151,6 +165,100 @@ fn cmd_serve_demo(args: &Args) -> i32 {
     );
     co.shutdown();
     0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let store = StoreConfig {
+        n1: args.get_usize("n1", 1 << 16),
+        n2: args.get_usize("n2", 1 << 16),
+        m1: args.get_usize("m1", 64),
+        m2: args.get_usize("m2", 64),
+        d: args.get_usize("d", 5),
+        seed: args.get_u64("store-seed", 0x5EED),
+        shards: args.get_usize("shards", 4),
+        window: args.get_usize("window", 8),
+    };
+    let cfg = StoreServerConfig {
+        addr: args.get_str("addr", "127.0.0.1:7878"),
+        store,
+        data_dir: args.get("data-dir").map(str::to_string),
+        with_coordinator: args.flag("with-coordinator"),
+        artifacts_dir: artifacts_dir(args),
+    };
+    match StoreServer::start(cfg) {
+        Ok(server) => {
+            let st = server.store().stats();
+            println!(
+                "store server on {} — {} shard(s), window {} epoch(s); \
+                 stop with `hocs store-client shutdown --addr {}`",
+                server.local_addr(),
+                st.shards,
+                st.window,
+                server.local_addr()
+            );
+            server.wait();
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_store_client(args: &Args) -> i32 {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let action = args.positional.first().map(String::as_str).unwrap_or("stats");
+    let mut client = match StoreClient::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let print_entries = |entries: &[(usize, usize, f64)]| {
+        if entries.is_empty() {
+            println!("(no keys)");
+        }
+        for (rank, (i, j, w)) in entries.iter().enumerate() {
+            println!("{:>3}. ({i}, {j})  ~{w:.1}", rank + 1);
+        }
+    };
+    let outcome = match action {
+        "update" => {
+            let (i, j) = (args.get_usize("i", 0), args.get_usize("j", 0));
+            let w = args.get_f64("w", 1.0);
+            client.update(i, j, w).map(|()| println!("ok: ({i}, {j}) += {w}"))
+        }
+        "query" => {
+            let (i, j) = (args.get_usize("i", 0), args.get_usize("j", 0));
+            client.query(i, j).map(|est| println!("estimate({i}, {j}) = {est}"))
+        }
+        "topk" => client.top_k(args.get_usize("k", 10)).map(|e| print_entries(&e)),
+        "heavy" => {
+            client.heavy_hitters(args.get_f64("threshold", 100.0)).map(|e| print_entries(&e))
+        }
+        "stats" => client.stats().map(|s| {
+            println!(
+                "shards={} window={} epoch={} updates={}",
+                s.shards, s.window, s.epoch, s.updates
+            )
+        }),
+        "snapshot" => client.snapshot().map(|()| println!("snapshot written")),
+        "advance-epoch" => client.advance_epoch().map(|()| println!("epoch advanced")),
+        "shutdown" => client.shutdown_server().map(|()| println!("server stopping")),
+        other => {
+            eprintln!("unknown store-client action {other:?}\n{USAGE}");
+            return 2;
+        }
+    };
+    match outcome {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_bench(args: &Args) -> i32 {

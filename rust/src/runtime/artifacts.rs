@@ -57,7 +57,7 @@ impl ParamSpec {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shape.contains(&0)
     }
 }
 

@@ -3,14 +3,36 @@
 //! of the traffic stream using limited space"), done with MTS instead of
 //! a flat count sketch: keys are (src, dst) pairs and each axis is
 //! hashed independently, so the sketch is an m1×m2 matrix that supports
-//! row/column marginal queries as well as point queries.
+//! row/column marginal queries ([`StreamSketch::row_marginal`] /
+//! [`StreamSketch::col_marginal`]) as well as point queries.
 //!
 //! Median-of-d across independent hash families gives the usual
-//! heavy-hitter guarantees; `heavy_hitters` scans the key space (dense
-//! universes) and returns entries whose estimate clears a threshold.
+//! heavy-hitter guarantees; [`StreamSketch::heavy_hitters`] uses the
+//! marginal estimates to prune the key grid before scanning, and
+//! [`StreamSketch::top_k`] walks rows in marginal order with a bounded
+//! min-heap so neither needs a full n1·n2 pass on skewed streams.
+//!
+//! The sketch is *linear* in the update stream, which is what the
+//! [`crate::store`] subsystem builds on: [`StreamSketch::merge_scaled`]
+//! adds (or subtracts — sliding-window expiry) another sketch of the
+//! same hash family elementwise with zero accuracy loss.
 
 use crate::hash::{HashSeeds, ModeHash};
 use crate::util::stats::median_inplace;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Marginal-pruning slack for [`StreamSketch::heavy_hitters`]: a
+/// row/column survives when its estimated marginal clears
+/// `threshold * MARGINAL_PRUNE_SLACK`. Marginal estimates are unbiased
+/// but noisy, so we keep a 2× safety margin instead of cutting at the
+/// threshold itself.
+const MARGINAL_PRUNE_SLACK: f64 = 0.5;
+
+/// Early-exit slack for [`StreamSketch::top_k`]: stop scanning rows once
+/// the current row's marginal estimate, inflated by this factor, cannot
+/// reach the k-th best point estimate found so far.
+const TOP_K_SLACK: f64 = 2.0;
 
 /// d independent m1×m2 MTS counters over keys `[n1] × [n2]`.
 #[derive(Clone, Debug)]
@@ -20,11 +42,45 @@ pub struct StreamSketch {
     pub m1: usize,
     pub m2: usize,
     pub d: usize,
+    /// root seed the d hash families were derived from (part of the
+    /// sketch identity: only same-seed sketches are mergeable)
+    pub seed: u64,
     rows: Vec<ModeHash>,
     cols: Vec<ModeHash>,
     tables: Vec<Vec<f64>>,
     /// total updates processed
     pub updates: u64,
+}
+
+/// Min-heap entry for [`StreamSketch::top_k`] (ordered by estimate;
+/// key as a deterministic tie-break so `Ord` is total).
+struct TopEntry {
+    est: f64,
+    i: usize,
+    j: usize,
+}
+
+impl PartialEq for TopEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for TopEntry {}
+
+impl PartialOrd for TopEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TopEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.est
+            .total_cmp(&other.est)
+            .then_with(|| self.i.cmp(&other.i))
+            .then_with(|| self.j.cmp(&other.j))
+    }
 }
 
 impl StreamSketch {
@@ -39,6 +95,7 @@ impl StreamSketch {
             m1,
             m2,
             d,
+            seed,
             rows,
             cols,
             tables: vec![vec![0.0; m1 * m2]; d],
@@ -63,29 +120,305 @@ impl StreamSketch {
 
     /// Point query: median-of-d estimate of the total weight of (i, j).
     pub fn query(&self, i: usize, j: usize) -> f64 {
+        let mut est = vec![0.0; self.d];
+        self.query_scratch(i, j, &mut est)
+    }
+
+    /// [`StreamSketch::query`] into caller-owned scratch (the scan paths
+    /// call this per cell; one allocation per scan instead of per key).
+    fn query_scratch(&self, i: usize, j: usize, est: &mut [f64]) -> f64 {
+        debug_assert_eq!(est.len(), self.d);
+        for (r, e) in est.iter_mut().enumerate() {
+            let b = self.rows[r].h(i) * self.m2 + self.cols[r].h(j);
+            *e = self.rows[r].s(i) * self.cols[r].s(j) * self.tables[r][b];
+        }
+        median_inplace(est)
+    }
+
+    /// Add this sketch's raw bucket counters for key (i, j) into
+    /// `acc[r]` — no signs yet. The store's fan-out point query sums raw
+    /// counters across sketches of disjoint substreams, then applies the
+    /// signs once in [`StreamSketch::finalize_estimates`]: by linearity
+    /// the summed counter equals the merged sketch's counter, and
+    /// because the sign multiplies the *sum* (not each addend) the
+    /// result is bit-identical to querying the merged sketch — signed
+    /// zeros included, which summing pre-signed estimates would get
+    /// wrong on zero-sum buckets split across shards.
+    pub fn accumulate_raw(&self, i: usize, j: usize, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d, "accumulator length {} != d {}", acc.len(), self.d);
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a += self.tables[r][self.rows[r].h(i) * self.m2 + self.cols[r].h(j)];
+        }
+    }
+
+    /// Turn counters summed by [`StreamSketch::accumulate_raw`] into the
+    /// median-of-d point estimate for key (i, j). Any same-family sketch
+    /// (e.g. an empty probe) produces identical signs.
+    pub fn finalize_estimates(&self, i: usize, j: usize, acc: &mut [f64]) -> f64 {
+        assert_eq!(acc.len(), self.d, "accumulator length {} != d {}", acc.len(), self.d);
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a *= self.rows[r].s(i) * self.cols[r].s(j);
+        }
+        median_inplace(acc)
+    }
+
+    // ---------- marginals ----------
+
+    /// Estimated total weight of row key `i` (Σ_j count(i, j)): per
+    /// repeat, sum the hashed row with column signs, then median-of-d.
+    /// Unbiased; O(n2·d). For all rows at once use
+    /// [`StreamSketch::row_marginals`].
+    pub fn row_marginal(&self, i: usize) -> f64 {
+        assert!(i < self.n1, "row {i} out of range (n1 = {})", self.n1);
         let mut est: Vec<f64> = (0..self.d)
             .map(|r| {
-                let b = self.rows[r].h(i) * self.m2 + self.cols[r].h(j);
-                self.rows[r].s(i) * self.cols[r].s(j) * self.tables[r][b]
+                let base = self.rows[r].h(i) * self.m2;
+                let t = &self.tables[r];
+                let col = &self.cols[r];
+                let mut acc = 0.0;
+                for j in 0..self.n2 {
+                    acc += col.s(j) * t[base + col.h(j)];
+                }
+                self.rows[r].s(i) * acc
             })
             .collect();
         median_inplace(&mut est)
     }
 
-    /// All keys whose estimated weight is ≥ `threshold` (dense scan —
-    /// the universe here is the n1×n2 key grid).
-    pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
-        let mut out = Vec::new();
-        for i in 0..self.n1 {
+    /// Estimated total weight of column key `j` (Σ_i count(i, j)).
+    /// Unbiased; O(n1·d). For all columns at once use
+    /// [`StreamSketch::col_marginals`].
+    pub fn col_marginal(&self, j: usize) -> f64 {
+        assert!(j < self.n2, "col {j} out of range (n2 = {})", self.n2);
+        let mut est: Vec<f64> = (0..self.d)
+            .map(|r| {
+                let t = &self.tables[r];
+                let row = &self.rows[r];
+                let hj = self.cols[r].h(j);
+                let mut acc = 0.0;
+                for i in 0..self.n1 {
+                    acc += row.s(i) * t[row.h(i) * self.m2 + hj];
+                }
+                self.cols[r].s(j) * acc
+            })
+            .collect();
+        median_inplace(&mut est)
+    }
+
+    /// All row marginals. Per repeat, the column-signed sum of every
+    /// *bucket* row is materialized once (O(m1·n2)), then each of the n1
+    /// row keys is an O(1) lookup — O(d·(m1·n2 + n1)) total instead of
+    /// the O(d·n1·n2) of n1 separate [`StreamSketch::row_marginal`]
+    /// calls, with bit-identical results (same summation order).
+    pub fn row_marginals(&self) -> Vec<f64> {
+        let mut per_table: Vec<Vec<f64>> = Vec::with_capacity(self.d);
+        for r in 0..self.d {
+            let t = &self.tables[r];
+            let col = &self.cols[r];
+            let mut agg = vec![0.0; self.m1];
             for j in 0..self.n2 {
-                let w = self.query(i, j);
+                let (hj, sj) = (col.h(j), col.s(j));
+                for (b1, a) in agg.iter_mut().enumerate() {
+                    *a += sj * t[b1 * self.m2 + hj];
+                }
+            }
+            per_table.push(agg);
+        }
+        let mut est = vec![0.0; self.d];
+        (0..self.n1)
+            .map(|i| {
+                for (r, e) in est.iter_mut().enumerate() {
+                    *e = self.rows[r].s(i) * per_table[r][self.rows[r].h(i)];
+                }
+                median_inplace(&mut est)
+            })
+            .collect()
+    }
+
+    /// All column marginals (see [`StreamSketch::row_marginals`]).
+    pub fn col_marginals(&self) -> Vec<f64> {
+        let mut per_table: Vec<Vec<f64>> = Vec::with_capacity(self.d);
+        for r in 0..self.d {
+            let t = &self.tables[r];
+            let row = &self.rows[r];
+            let mut agg = vec![0.0; self.m2];
+            for i in 0..self.n1 {
+                let (hi, si) = (row.h(i), row.s(i));
+                for (b2, a) in agg.iter_mut().enumerate() {
+                    *a += si * t[hi * self.m2 + b2];
+                }
+            }
+            per_table.push(agg);
+        }
+        let mut est = vec![0.0; self.d];
+        (0..self.n2)
+            .map(|j| {
+                for (r, e) in est.iter_mut().enumerate() {
+                    *e = self.cols[r].s(j) * per_table[r][self.cols[r].h(j)];
+                }
+                median_inplace(&mut est)
+            })
+            .collect()
+    }
+
+    // ---------- scans ----------
+
+    /// All keys whose estimated weight is ≥ `threshold`, sorted
+    /// descending. For non-negative streams a cell's count is bounded by
+    /// its row and column marginals, so only rows/columns whose estimated
+    /// marginal clears `threshold/2` (noise slack) are scanned — on
+    /// skewed traffic that is a few candidate rows instead of the whole
+    /// n1×n2 grid. Turnstile streams whose deletions cancel most of a
+    /// marginal should use [`StreamSketch::heavy_hitters_dense`].
+    pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        let cut = threshold * MARGINAL_PRUNE_SLACK;
+        let rows: Vec<usize> = self
+            .row_marginals()
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &m)| (m >= cut).then_some(i))
+            .collect();
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        let cols: Vec<usize> = self
+            .col_marginals()
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &m)| (m >= cut).then_some(j))
+            .collect();
+        let mut out = Vec::new();
+        let mut est = vec![0.0; self.d];
+        for &i in &rows {
+            for &j in &cols {
+                let w = self.query_scratch(i, j, &mut est);
                 if w >= threshold {
                     out.push((i, j, w));
                 }
             }
         }
-        out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        out.sort_by(|a, b| b.2.total_cmp(&a.2));
         out
+    }
+
+    /// Unpruned full-grid scan (the pre-marginal behaviour): correct for
+    /// arbitrary turnstile streams, O(n1·n2·d).
+    pub fn heavy_hitters_dense(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        let mut est = vec![0.0; self.d];
+        for i in 0..self.n1 {
+            for j in 0..self.n2 {
+                let w = self.query_scratch(i, j, &mut est);
+                if w >= threshold {
+                    out.push((i, j, w));
+                }
+            }
+        }
+        out.sort_by(|a, b| b.2.total_cmp(&a.2));
+        out
+    }
+
+    /// The k keys with the largest estimated weight, sorted descending.
+    ///
+    /// Rows are visited in decreasing estimated-marginal order while a
+    /// size-k min-heap tracks the best cells; once the heap is full and a
+    /// row's marginal (×[`TOP_K_SLACK`] for estimator noise) cannot beat
+    /// the k-th best estimate, no later row can either (for non-negative
+    /// streams a cell never exceeds its row marginal) and the scan stops.
+    /// On skewed streams this touches a handful of rows, which is what
+    /// makes the store's TOPK RPC affordable per call.
+    pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let rm = self.row_marginals();
+        let mut order: Vec<usize> = (0..self.n1).collect();
+        order.sort_by(|&a, &b| rm[b].total_cmp(&rm[a]));
+        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> =
+            BinaryHeap::with_capacity(k + 1);
+        let mut est = vec![0.0; self.d];
+        for &i in &order {
+            if heap.len() == k {
+                let kth = heap.peek().expect("heap non-empty").0.est;
+                if rm[i] * TOP_K_SLACK < kth {
+                    break;
+                }
+            }
+            for j in 0..self.n2 {
+                let e = self.query_scratch(i, j, &mut est);
+                if heap.len() < k {
+                    heap.push(std::cmp::Reverse(TopEntry { est: e, i, j }));
+                } else if e > heap.peek().expect("heap non-empty").0.est {
+                    heap.pop();
+                    heap.push(std::cmp::Reverse(TopEntry { est: e, i, j }));
+                }
+            }
+        }
+        let mut out: Vec<(usize, usize, f64)> =
+            heap.into_iter().map(|std::cmp::Reverse(e)| (e.i, e.j, e.est)).collect();
+        out.sort_by(|a, b| b.2.total_cmp(&a.2));
+        out
+    }
+
+    // ---------- linearity (merge / scale / clear) ----------
+
+    /// True when `other` was built over the same key universe, sketch
+    /// geometry, and hash-family seed — the precondition for elementwise
+    /// merging to be meaningful.
+    pub fn same_family(&self, other: &Self) -> bool {
+        self.n1 == other.n1
+            && self.n2 == other.n2
+            && self.m1 == other.m1
+            && self.m2 == other.m2
+            && self.d == other.d
+            && self.seed == other.seed
+    }
+
+    /// `self += a · other`, elementwise over all d tables. With `a = 1`
+    /// this is the sketch of the concatenated streams (count sketches
+    /// are linear maps — zero accuracy loss); with `a = -1` it deletes a
+    /// substream, which is how the store expires window epochs.
+    pub fn merge_scaled(&mut self, other: &Self, a: f64) {
+        assert!(self.same_family(other), "merge of incompatible stream sketches");
+        for (t, o) in self.tables.iter_mut().zip(other.tables.iter()) {
+            for (x, y) in t.iter_mut().zip(o.iter()) {
+                *x += a * y;
+            }
+        }
+        if a >= 0.0 {
+            self.updates += other.updates;
+        } else {
+            self.updates = self.updates.saturating_sub(other.updates);
+        }
+    }
+
+    /// `self *= a` (decay weighting). `updates` is left untouched: it
+    /// counts stream items, not mass.
+    pub fn scale_tables(&mut self, a: f64) {
+        for t in &mut self.tables {
+            for x in t.iter_mut() {
+                *x *= a;
+            }
+        }
+    }
+
+    /// Zero all counters (reused window slots).
+    pub fn clear(&mut self) {
+        for t in &mut self.tables {
+            t.fill(0.0);
+        }
+        self.updates = 0;
+    }
+
+    /// Raw counter table of repeat `r` (serialization / diagnostics).
+    pub fn table(&self, r: usize) -> &[f64] {
+        &self.tables[r]
+    }
+
+    /// Mutable raw counter table of repeat `r` (deserialization only —
+    /// writing anything but a valid same-family table corrupts queries).
+    pub fn table_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.tables[r]
     }
 }
 
@@ -139,6 +472,126 @@ mod tests {
     }
 
     #[test]
+    fn pruned_heavy_hitters_match_dense_scan() {
+        // non-negative stream: the marginal pruning must not lose any hit
+        let mut sk = StreamSketch::new(48, 40, 14, 12, 5, 11);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..400 {
+            sk.update(5, 6, 1.0);
+        }
+        for _ in 0..220 {
+            sk.update(33, 1, 1.0);
+        }
+        for _ in 0..800 {
+            sk.update(rng.gen_range(48) as usize, rng.gen_range(40) as usize, 1.0);
+        }
+        for threshold in [80.0, 150.0, 300.0] {
+            let pruned = sk.heavy_hitters(threshold);
+            let dense = sk.heavy_hitters_dense(threshold);
+            assert_eq!(pruned, dense, "threshold {threshold}");
+        }
+    }
+
+    #[test]
+    fn top_k_matches_full_scan_ranking() {
+        let mut sk = StreamSketch::new(32, 32, 16, 16, 5, 9);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..500 {
+            sk.update(2, 3, 1.0);
+        }
+        for _ in 0..250 {
+            sk.update(17, 8, 1.0);
+        }
+        for _ in 0..120 {
+            sk.update(30, 30, 1.0);
+        }
+        for _ in 0..400 {
+            sk.update(rng.gen_range(32) as usize, rng.gen_range(32) as usize, 1.0);
+        }
+        let top = sk.top_k(3);
+        assert_eq!(top.len(), 3);
+        assert_eq!((top[0].0, top[0].1), (2, 3));
+        assert_eq!((top[1].0, top[1].1), (17, 8));
+        assert_eq!((top[2].0, top[2].1), (30, 30));
+        // against the oracle: dense scan sorted by estimate
+        let mut dense: Vec<(usize, usize, f64)> = Vec::new();
+        for i in 0..32 {
+            for j in 0..32 {
+                dense.push((i, j, sk.query(i, j)));
+            }
+        }
+        dense.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        for (got, want) in top.iter().zip(dense.iter()) {
+            assert_eq!(got.2.to_bits(), want.2.to_bits());
+        }
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let mut sk = StreamSketch::new(8, 8, 4, 4, 3, 1);
+        assert!(sk.top_k(0).is_empty());
+        sk.update(1, 1, 5.0);
+        // k larger than the universe: returns every cell, ranked
+        let all = sk.top_k(100);
+        assert_eq!(all.len(), 64);
+        // hash collisions can tie other cells at ±5, so assert the true
+        // key is at the top estimate rather than literally first
+        assert!((all[0].2 - 5.0).abs() < 1e-12, "top estimate {}", all[0].2);
+        assert!(
+            all.iter().any(|&(i, j, e)| i == 1 && j == 1 && (e - 5.0).abs() < 1e-12),
+            "true key missing from ranking"
+        );
+    }
+
+    #[test]
+    fn marginals_track_true_sums() {
+        // Marginal estimators carry own-mass collision noise of order
+        // mass/sqrt(m), so tolerances are ~4 median-of-d sigmas wide.
+        let mut sk = StreamSketch::new(40, 36, 16, 16, 7, 13);
+        let mut rng = Pcg64::new(6);
+        let mut row_truth = vec![0.0f64; 40];
+        let mut col_truth = vec![0.0f64; 36];
+        let mut hit = |sk: &mut StreamSketch, i: usize, j: usize| {
+            sk.update(i, j, 1.0);
+            row_truth[i] += 1.0;
+            col_truth[j] += 1.0;
+        };
+        for _ in 0..600 {
+            let j = rng.gen_range(36) as usize;
+            hit(&mut sk, 7, j);
+        }
+        for _ in 0..600 {
+            let i = rng.gen_range(40) as usize;
+            hit(&mut sk, i, 9);
+        }
+        for _ in 0..500 {
+            let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(36) as usize);
+            hit(&mut sk, i, j);
+        }
+        let row_est = sk.row_marginal(7);
+        assert!(
+            (row_est - row_truth[7]).abs() < 0.4 * row_truth[7],
+            "row marginal {row_est} vs {}",
+            row_truth[7]
+        );
+        let col_est = sk.col_marginal(9);
+        assert!(
+            (col_est - col_truth[9]).abs() < 0.4 * col_truth[9],
+            "col marginal {col_est} vs {}",
+            col_truth[9]
+        );
+        // batched paths are bit-identical to the single-key paths
+        let all_rows = sk.row_marginals();
+        for (i, m) in all_rows.iter().enumerate() {
+            assert_eq!(m.to_bits(), sk.row_marginal(i).to_bits(), "row {i}");
+        }
+        let all_cols = sk.col_marginals();
+        for (j, m) in all_cols.iter().enumerate() {
+            assert_eq!(m.to_bits(), sk.col_marginal(j).to_bits(), "col {j}");
+        }
+    }
+
+    #[test]
     fn weighted_updates_and_deletions() {
         // turnstile model: negative weights cancel
         let mut sk = StreamSketch::new(16, 16, 8, 8, 3, 5);
@@ -155,5 +608,80 @@ mod tests {
         assert_eq!(sk.space(), 5 * 32 * 32);
         // 1M key universe in 5120 counters
         assert!(sk.space() < 1000 * 1000 / 100);
+    }
+
+    #[test]
+    fn merge_equals_concatenated_stream() {
+        let mut a = StreamSketch::new(32, 32, 8, 8, 5, 21);
+        let mut b = StreamSketch::new(32, 32, 8, 8, 5, 21);
+        let mut whole = StreamSketch::new(32, 32, 8, 8, 5, 21);
+        let mut rng = Pcg64::new(8);
+        for step in 0..500 {
+            let (i, j) = (rng.gen_range(32) as usize, rng.gen_range(32) as usize);
+            let w = (1 + rng.gen_range(9)) as f64; // integer weights: exact sums
+            if step % 2 == 0 {
+                a.update(i, j, w);
+            } else {
+                b.update(i, j, w);
+            }
+            whole.update(i, j, w);
+        }
+        a.merge_scaled(&b, 1.0);
+        assert_eq!(a.updates, whole.updates);
+        for r in 0..5 {
+            assert_eq!(a.table(r), whole.table(r), "table {r}");
+        }
+        // and subtracting b back leaves exactly the a-substream
+        let mut rng2 = Pcg64::new(8);
+        let mut only_a = StreamSketch::new(32, 32, 8, 8, 5, 21);
+        for step in 0..500 {
+            let (i, j) = (rng2.gen_range(32) as usize, rng2.gen_range(32) as usize);
+            let w = (1 + rng2.gen_range(9)) as f64;
+            if step % 2 == 0 {
+                only_a.update(i, j, w);
+            }
+        }
+        a.merge_scaled(&b, -1.0);
+        for r in 0..5 {
+            assert_eq!(a.table(r), only_a.table(r), "table {r} after subtract");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn merge_rejects_different_seed() {
+        let mut a = StreamSketch::new(8, 8, 4, 4, 3, 1);
+        let b = StreamSketch::new(8, 8, 4, 4, 3, 2);
+        a.merge_scaled(&b, 1.0);
+    }
+
+    #[test]
+    fn scale_and_clear() {
+        let mut sk = StreamSketch::new(8, 8, 4, 4, 3, 3);
+        sk.update(1, 2, 4.0);
+        sk.scale_tables(0.5);
+        assert!((sk.query(1, 2) - 2.0).abs() < 1e-12);
+        sk.clear();
+        assert_eq!(sk.query(1, 2), 0.0);
+        assert_eq!(sk.updates, 0);
+    }
+
+    #[test]
+    fn raw_accumulation_plus_finalize_matches_query() {
+        let mut sk = StreamSketch::new(16, 16, 6, 6, 5, 17);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..300 {
+            sk.update(rng.gen_range(16) as usize, rng.gen_range(16) as usize, 1.0);
+        }
+        // a fresh same-family probe supplies identical signs
+        let probe = StreamSketch::new(16, 16, 6, 6, 5, 17);
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut acc = vec![0.0; 5];
+                sk.accumulate_raw(i, j, &mut acc);
+                let est = probe.finalize_estimates(i, j, &mut acc);
+                assert_eq!(est.to_bits(), sk.query(i, j).to_bits(), "key ({i}, {j})");
+            }
+        }
     }
 }

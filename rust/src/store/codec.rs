@@ -1,0 +1,172 @@
+//! Byte-level codec shared by the mergeable-sketch serializers, the
+//! snapshot/WAL persistence layer, and the TCP wire protocol.
+//!
+//! Everything is little-endian; floats travel as IEEE-754 bit patterns
+//! (`f64::to_bits`) so encode → decode is bit-exact — the store's merge
+//! and recovery fidelity guarantees are stated at the bit level, and the
+//! codec must not be the layer that loses them. CRC-32 (IEEE/zlib
+//! polynomial) frames the WAL and lets crash recovery tell a torn tail
+//! from good data.
+
+use anyhow::{bail, Result};
+
+// ---------- writers ----------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+// ---------- reader ----------
+
+/// Bounds-checked cursor over a byte slice. Every take returns a
+/// descriptive error instead of panicking — WAL frames and network
+/// payloads are untrusted input.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Consume the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated input: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+    }
+}
+
+// ---------- CRC-32 ----------
+
+const CRC32_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_f64(&mut out, -0.1);
+        put_f32(&mut out, 3.5);
+        let mut rd = Reader::new(&out);
+        assert_eq!(rd.u8().unwrap(), 7);
+        assert_eq!(rd.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(rd.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(rd.f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        assert_eq!(rd.f32().unwrap(), 3.5);
+        assert!(rd.is_empty());
+    }
+
+    #[test]
+    fn float_bit_patterns_survive() {
+        // NaN payloads and signed zero must roundtrip exactly
+        for v in [f64::NAN, -0.0, f64::INFINITY, f64::MIN_POSITIVE] {
+            let mut out = Vec::new();
+            put_f64(&mut out, v);
+            let got = Reader::new(&out).f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 1);
+        let mut rd = Reader::new(&out);
+        assert!(rd.u64().is_err());
+        // failed take consumes nothing
+        assert_eq!(rd.remaining(), 4);
+        assert_eq!(rd.u32().unwrap(), 1);
+        assert!(rd.u8().is_err());
+    }
+
+    #[test]
+    fn crc32_test_vectors() {
+        // the canonical check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+}

@@ -1,0 +1,333 @@
+//! [`MergeableSketch`] — the algebraic contract the store is built on.
+//!
+//! Count-sketch-style summaries are *linear* maps of the update stream
+//! (the same linearity the paper's compositional operations exploit),
+//! so summaries of disjoint substreams combine by elementwise addition
+//! with **zero** accuracy loss: `Sketch(A ⊎ B) = Sketch(A) + Sketch(B)`
+//! whenever both sides share the hash family. That one identity buys
+//! the whole store design: shards merge, replicas anti-entropy by
+//! addition, and sliding windows expire by *subtracting* the sketch of
+//! the expired epoch.
+//!
+//! Implementations:
+//! - `Vec<f64>` — a flat count-sketch table ([`crate::sketch::cs::CsSketcher`]
+//!   output);
+//! - [`Tensor`] — an MTS/HCS table ([`crate::sketch::mts::MtsSketcher`]
+//!   output);
+//! - [`StreamSketch`] — the d-repeat streaming sketch the store shards.
+//!
+//! `encode`/`decode` is the shared binary form used by snapshots, the
+//! WAL, and the MERGE RPC; floats travel as bit patterns, so a decode
+//! is bit-identical to what was encoded.
+
+use super::codec::{self, Reader};
+use crate::sketch::stream::StreamSketch;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Upper bound on decoded table sizes (elements). A corrupt or hostile
+/// frame must not be able to request an arbitrarily large allocation.
+const MAX_DECODE_ELEMS: usize = 1 << 28;
+
+/// A linear sketch that merges by addition. See the module docs for why
+/// these three operations are exact.
+pub trait MergeableSketch: Sized {
+    /// True when the two summaries share geometry (and hash family,
+    /// where the type carries one) — the precondition for `merge_from`.
+    fn mergeable_with(&self, other: &Self) -> bool;
+
+    /// `self += other`: afterwards `self` is exactly the summary of the
+    /// two input streams concatenated.
+    fn merge_from(&mut self, other: &Self) -> Result<()>;
+
+    /// `self *= a` — decay weighting, or subtraction when composed as
+    /// `scale_by(-1)` + `merge_from`.
+    fn scale_by(&mut self, a: f64);
+
+    /// Append the binary encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from the reader (bit-exact inverse of `encode`).
+    fn decode(rd: &mut Reader<'_>) -> Result<Self>;
+}
+
+// ---------- flat count-sketch tables ----------
+
+impl MergeableSketch for Vec<f64> {
+    fn mergeable_with(&self, other: &Self) -> bool {
+        self.len() == other.len()
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        ensure!(
+            self.mergeable_with(other),
+            "cannot merge sketch tables of lengths {} and {}",
+            self.len(),
+            other.len()
+        );
+        for (x, y) in self.iter_mut().zip(other.iter()) {
+            *x += *y;
+        }
+        Ok(())
+    }
+
+    fn scale_by(&mut self, a: f64) {
+        for x in self.iter_mut() {
+            *x *= a;
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, u32::try_from(self.len()).expect("table too large to encode"));
+        for &v in self {
+            codec::put_f64(out, v);
+        }
+    }
+
+    fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let n = rd.u32()? as usize;
+        ensure!(n <= MAX_DECODE_ELEMS, "table length {n} exceeds decode cap");
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(rd.f64()?);
+        }
+        Ok(v)
+    }
+}
+
+// ---------- MTS/HCS tables ----------
+
+impl MergeableSketch for Tensor {
+    fn mergeable_with(&self, other: &Self) -> bool {
+        self.dims() == other.dims()
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        ensure!(
+            self.mergeable_with(other),
+            "cannot merge MTS tables of shapes {:?} and {:?}",
+            self.dims(),
+            other.dims()
+        );
+        for (x, y) in self.data_mut().iter_mut().zip(other.data().iter()) {
+            *x += *y;
+        }
+        Ok(())
+    }
+
+    fn scale_by(&mut self, a: f64) {
+        for x in self.data_mut() {
+            *x *= a;
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, u32::try_from(self.order()).expect("order too large"));
+        for &d in self.dims() {
+            codec::put_u32(out, u32::try_from(d).expect("dim too large to encode"));
+        }
+        for &v in self.data() {
+            codec::put_f64(out, v);
+        }
+    }
+
+    fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let order = rd.u32()? as usize;
+        ensure!(order <= 16, "tensor order {order} exceeds decode cap");
+        let mut dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            dims.push(rd.u32()? as usize);
+        }
+        let n: usize = dims.iter().product();
+        ensure!(n <= MAX_DECODE_ELEMS, "tensor with {n} elements exceeds decode cap");
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(rd.f64()?);
+        }
+        Ok(Tensor::from_vec(data, &dims))
+    }
+}
+
+// ---------- streaming sketches ----------
+
+impl MergeableSketch for StreamSketch {
+    fn mergeable_with(&self, other: &Self) -> bool {
+        self.same_family(other)
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        ensure!(
+            self.mergeable_with(other),
+            "cannot merge stream sketches from different geometries/hash families"
+        );
+        self.merge_scaled(other, 1.0);
+        Ok(())
+    }
+
+    fn scale_by(&mut self, a: f64) {
+        self.scale_tables(a);
+    }
+
+    /// Only the counters and identity are written; the hash families are
+    /// rebuilt from the seed on decode (they are pure functions of it),
+    /// which keeps snapshots ~d·m1·m2 floats instead of shipping tables
+    /// of hashes.
+    fn encode(&self, out: &mut Vec<u8>) {
+        for v in [self.n1, self.n2, self.m1, self.m2, self.d] {
+            codec::put_u32(out, u32::try_from(v).expect("sketch dim too large to encode"));
+        }
+        codec::put_u64(out, self.seed);
+        codec::put_u64(out, self.updates);
+        for r in 0..self.d {
+            for &v in self.table(r) {
+                codec::put_f64(out, v);
+            }
+        }
+    }
+
+    fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let n1 = rd.u32()? as usize;
+        let n2 = rd.u32()? as usize;
+        let m1 = rd.u32()? as usize;
+        let m2 = rd.u32()? as usize;
+        let d = rd.u32()? as usize;
+        ensure!(
+            n1 > 0 && n2 > 0 && m1 > 0 && m2 > 0 && d >= 1,
+            "corrupt stream-sketch header ({n1}x{n2} -> {m1}x{m2}, d={d})"
+        );
+        ensure!(
+            m1.saturating_mul(m2).saturating_mul(d) <= MAX_DECODE_ELEMS,
+            "stream sketch of {d}x{m1}x{m2} counters exceeds decode cap"
+        );
+        let seed = rd.u64()?;
+        let updates = rd.u64()?;
+        let mut sk = StreamSketch::new(n1, n2, m1, m2, d, seed);
+        for r in 0..d {
+            for x in sk.table_mut(r).iter_mut() {
+                *x = rd.f64()?;
+            }
+        }
+        sk.updates = updates;
+        Ok(sk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sketch::cs::CsSketcher;
+    use crate::sketch::mts::MtsSketcher;
+
+    #[test]
+    fn cs_tables_merge_like_concatenated_streams() {
+        let cs = CsSketcher::new(64, 16, 3);
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(64);
+        let y = rng.normal_vec(64);
+        let whole: Vec<f64> = x.iter().zip(y.iter()).map(|(a, b)| a + b).collect();
+        let mut sx = cs.sketch(&x);
+        let sy = cs.sketch(&y);
+        sx.merge_from(&sy).unwrap();
+        let direct = cs.sketch(&whole);
+        for (a, b) in sx.iter().zip(direct.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mts_tables_merge_like_concatenated_streams() {
+        let sk = MtsSketcher::new(&[12, 10], &[5, 4], 7);
+        let mut rng = Pcg64::new(2);
+        let x = Tensor::randn(&[12, 10], &mut rng);
+        let y = Tensor::randn(&[12, 10], &mut rng);
+        let mut sx = sk.sketch(&x);
+        sx.merge_from(&sk.sketch(&y)).unwrap();
+        let direct = sk.sketch(&x.add(&y));
+        for (a, b) in sx.data().iter().zip(direct.data().iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scale_by_scales_estimates() {
+        let cs = CsSketcher::new(32, 8, 5);
+        let mut x = vec![0.0; 32];
+        x[9] = 2.0;
+        let mut y = cs.sketch(&x);
+        y.scale_by(3.0);
+        assert!((cs.estimate(&y, 9) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatched_merges_error() {
+        let mut a = vec![0.0; 4];
+        assert!(a.merge_from(&vec![0.0; 5]).is_err());
+        let mut t = Tensor::zeros(&[2, 3]);
+        assert!(t.merge_from(&Tensor::zeros(&[3, 2])).is_err());
+        let mut s = StreamSketch::new(8, 8, 4, 4, 3, 1);
+        assert!(s.merge_from(&StreamSketch::new(8, 8, 4, 4, 3, 2)).is_err());
+    }
+
+    #[test]
+    fn vec_roundtrips_bit_exact() {
+        let mut rng = Pcg64::new(3);
+        let v = rng.normal_vec(33);
+        let mut out = Vec::new();
+        v.encode(&mut out);
+        let got = Vec::<f64>::decode(&mut Reader::new(&out)).unwrap();
+        assert_eq!(v.len(), got.len());
+        for (a, b) in v.iter().zip(got.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tensor_roundtrips_bit_exact() {
+        let mut rng = Pcg64::new(4);
+        let t = Tensor::randn(&[3, 4, 5], &mut rng);
+        let mut out = Vec::new();
+        t.encode(&mut out);
+        let got = Tensor::decode(&mut Reader::new(&out)).unwrap();
+        assert_eq!(t.dims(), got.dims());
+        for (a, b) in t.data().iter().zip(got.data().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn stream_sketch_roundtrips_and_answers_identically() {
+        let mut sk = StreamSketch::new(40, 30, 10, 8, 5, 99);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..500 {
+            sk.update(rng.gen_range(40) as usize, rng.gen_range(30) as usize, rng.normal());
+        }
+        let mut out = Vec::new();
+        sk.encode(&mut out);
+        let got = StreamSketch::decode(&mut Reader::new(&out)).unwrap();
+        assert!(sk.same_family(&got));
+        assert_eq!(sk.updates, got.updates);
+        for _ in 0..50 {
+            let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(30) as usize);
+            assert_eq!(sk.query(i, j).to_bits(), got.query(i, j).to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_sketch_header_rejected() {
+        let sk = StreamSketch::new(8, 8, 4, 4, 3, 1);
+        let mut out = Vec::new();
+        sk.encode(&mut out);
+        // zero out d (bytes 16..20 of the header)
+        out[16] = 0;
+        out[17] = 0;
+        out[18] = 0;
+        out[19] = 0;
+        assert!(StreamSketch::decode(&mut Reader::new(&out)).is_err());
+        // truncated payload
+        let mut out2 = Vec::new();
+        sk.encode(&mut out2);
+        out2.truncate(out2.len() - 1);
+        assert!(StreamSketch::decode(&mut Reader::new(&out2)).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Sharded, mergeable, durable sketch store — the serving layer over
+//! the paper's streaming application.
+//!
+//! Count sketches are *linear* in the update stream, so sketches of
+//! disjoint substreams combine by elementwise addition with zero
+//! accuracy loss. The whole subsystem is that one identity applied
+//! three ways:
+//!
+//! - **scale-out** — [`ShardedStore`] routes each key to one of K
+//!   shards (one lock domain each); point queries fan out and sum
+//!   per-repeat estimates, scans merge shard totals into one sketch.
+//!   Estimates are bit-identical to an unsharded sketch fed the same
+//!   stream (see `rust/tests/store.rs`).
+//! - **sliding windows** — every shard keeps a ring of per-epoch
+//!   sketches; expiring an epoch *subtracts* its sketch from the
+//!   running total. No rescan, no approximation on top of the sketch's
+//!   own.
+//! - **federation** — the MERGE RPC accepts any serialized same-family
+//!   sketch ([`MergeableSketch::encode`]), so edge nodes can sketch
+//!   locally and ship summaries instead of raw streams.
+//!
+//! Durability is a versioned binary snapshot plus an append-only WAL of
+//! length-prefixed CRC-32-checked frames ([`DurableStore`]); recovery
+//! replays the WAL tail onto the snapshot and tolerates torn tails.
+//! The front-end ([`StoreServer`]) speaks a framed TCP protocol
+//! (UPDATE / QUERY / TOPK / HEAVY / MERGE / SNAPSHOT / ADVANCE_EPOCH /
+//! STATS / BATCH_SKETCH / SHUTDOWN) with a thread per connection and
+//! can reuse the PR-1 coordinator worker pool for batch sketch jobs.
+//!
+//! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
+//! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
+//! [`codec`] (bytes + CRC-32).
+
+pub mod client;
+pub mod codec;
+pub mod mergeable;
+pub mod server;
+pub mod sharded;
+pub mod wal;
+
+pub use client::StoreClient;
+pub use mergeable::MergeableSketch;
+pub use server::{StoreServer, StoreServerConfig};
+pub use sharded::{ShardedStore, StoreConfig, StoreStats};
+pub use wal::DurableStore;

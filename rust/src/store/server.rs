@@ -1,0 +1,528 @@
+//! Framed TCP front-end for the store.
+//!
+//! Wire protocol (all little-endian):
+//!
+//! ```text
+//! request  = u32 len | u8 opcode | body
+//! response = u32 len | u8 status (0 ok / 1 err) | body-or-utf8-error
+//! ```
+//!
+//! Plain `std::net` with one thread per connection (accept → spawn, the
+//! darkfi-style blocking net layer) — no async runtime: connections are
+//! long-lived and the per-request work is either O(d) table arithmetic
+//! or a store scan that dwarfs any scheduling overhead. Shard mutexes
+//! inside [`DurableStore`] are the only cross-connection coordination,
+//! so concurrent clients on different shards proceed in parallel.
+//!
+//! `BATCH_SKETCH` reuses the PR-1 coordinator worker pool
+//! ([`crate::coordinator::Coordinator`]) when the server is started
+//! `with_coordinator` and AOT artifacts are present; otherwise the
+//! opcode reports an error and everything else keeps working.
+
+use super::codec::{self, Reader};
+use super::mergeable::MergeableSketch;
+use super::sharded::StoreConfig;
+use super::wal::DurableStore;
+use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
+use crate::sketch::stream::StreamSketch;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Request opcodes (first payload byte).
+///
+/// TOPK and HEAVY run the marginal-pruned scans, which assume a
+/// non-negative update workload (see [`crate::sketch::stream`] — for
+/// turnstile streams with deletions the pruning can miss keys whose row
+/// marginal was cancelled). QUERY is exact under any workload.
+pub mod op {
+    pub const UPDATE: u8 = 1;
+    pub const UPDATE_BATCH: u8 = 2;
+    pub const QUERY: u8 = 3;
+    pub const TOPK: u8 = 4;
+    pub const HEAVY: u8 = 5;
+    pub const MERGE: u8 = 6;
+    pub const SNAPSHOT: u8 = 7;
+    pub const ADVANCE_EPOCH: u8 = 8;
+    pub const STATS: u8 = 9;
+    pub const BATCH_SKETCH: u8 = 10;
+    pub const SHUTDOWN: u8 = 11;
+}
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+
+/// Hard cap on a single frame — a hostile length prefix must not be
+/// able to allocate gigabytes.
+const MAX_FRAME: u32 = 64 << 20;
+/// Per-request caps on fan-in sizes.
+const MAX_BATCH_UPDATES: usize = 1 << 20;
+const MAX_TOPK: usize = 4096;
+const MAX_SKETCH_INPUT: usize = 1 << 22;
+
+/// Write one `len | payload` frame.
+pub(crate) fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = u32::try_from(payload.len()).context("frame too large")?;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds protocol cap");
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` is a clean EOF at a frame boundary.
+pub(crate) fn read_frame(stream: &mut TcpStream) -> Result<Option<Vec<u8>>> {
+    let mut lenb = [0u8; 4];
+    match stream.read_exact(&mut lenb) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(lenb);
+    ensure!(len <= MAX_FRAME, "oversized frame ({len} bytes)");
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// How to boot a [`StoreServer`].
+#[derive(Clone, Debug)]
+pub struct StoreServerConfig {
+    /// bind address (`host:port`; port 0 picks a free one)
+    pub addr: String,
+    pub store: StoreConfig,
+    /// snapshot/WAL directory; `None` = in-memory only
+    pub data_dir: Option<String>,
+    /// boot the coordinator worker pool for BATCH_SKETCH
+    pub with_coordinator: bool,
+    /// AOT artifacts for the coordinator backend
+    pub artifacts_dir: String,
+}
+
+impl Default for StoreServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            store: StoreConfig::default(),
+            data_dir: None,
+            with_coordinator: false,
+            artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    store: DurableStore,
+    coordinator: Option<Coordinator>,
+    stop: AtomicBool,
+    connections: AtomicU64,
+}
+
+/// Handle to a running server. Dropping it (or calling
+/// [`StoreServer::shutdown`]) stops the accept loop; in-flight
+/// connection threads finish their current request and exit when their
+/// client disconnects.
+pub struct StoreServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StoreServer {
+    pub fn start(cfg: StoreServerConfig) -> Result<Self> {
+        let store = match &cfg.data_dir {
+            Some(dir) => DurableStore::open(Path::new(dir), cfg.store.clone())?,
+            None => DurableStore::in_memory(cfg.store.clone()),
+        };
+        let coordinator = if cfg.with_coordinator {
+            match Coordinator::start(CoordinatorConfig {
+                backend: BackendKind::PureRust,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                ..Default::default()
+            }) {
+                Ok(co) => Some(co),
+                Err(e) => {
+                    crate::log_warn!("store: coordinator unavailable ({e}); BATCH_SKETCH disabled");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            store,
+            coordinator,
+            stop: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+        });
+        let ashared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("hocs-store-accept".into())
+            .spawn(move || accept_loop(listener, ashared))?;
+        crate::log_info!("store: serving on {addr}");
+        Ok(Self { addr, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served store (tests / embedding).
+    pub fn store(&self) -> &DurableStore {
+        &self.shared.store
+    }
+
+    /// Block until the server stops (SHUTDOWN RPC).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for StoreServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            // poke the blocking accept() so it observes the stop flag
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let cshared = shared.clone();
+                let id = cshared.connections.fetch_add(1, Ordering::Relaxed);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("hocs-store-conn-{id}"))
+                    .spawn(move || connection_loop(stream, cshared));
+                if spawned.is_err() {
+                    crate::log_warn!("store: could not spawn connection thread");
+                }
+            }
+            Err(e) => crate::log_debug!("store: accept error: {e}"),
+        }
+    }
+    crate::log_info!("store: accept loop exiting");
+}
+
+fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let req = match read_frame(&mut stream) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                crate::log_debug!("store: connection read error: {e}");
+                break;
+            }
+        };
+        let (resp, shutdown) = handle_request(&req, &shared);
+        if write_frame(&mut stream, &resp).is_err() {
+            break;
+        }
+        if shutdown {
+            shared.stop.store(true, Ordering::SeqCst);
+            // poke the accept loop from its own listening address
+            if let Ok(addr) = stream.local_addr() {
+                let _ = TcpStream::connect(addr);
+            }
+            break;
+        }
+    }
+}
+
+/// Wrap [`dispatch`] into a status-tagged response frame; protocol
+/// errors become `STATUS_ERR` + message instead of a dropped connection.
+fn handle_request(req: &[u8], shared: &Shared) -> (Vec<u8>, bool) {
+    match dispatch(req, shared) {
+        Ok((body, shutdown)) => {
+            let mut resp = Vec::with_capacity(body.len() + 1);
+            codec::put_u8(&mut resp, STATUS_OK);
+            resp.extend_from_slice(&body);
+            (resp, shutdown)
+        }
+        Err(e) => {
+            let mut resp = Vec::new();
+            codec::put_u8(&mut resp, STATUS_ERR);
+            resp.extend_from_slice(e.to_string().as_bytes());
+            (resp, false)
+        }
+    }
+}
+
+fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
+    let mut rd = Reader::new(req);
+    let opcode = rd.u8()?;
+    let cfg = shared.store.config();
+    let mut body = Vec::new();
+    match opcode {
+        op::UPDATE => {
+            let (i, j, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.f64()?);
+            ensure!(w.is_finite(), "non-finite update weight");
+            shared.store.update(i, j, w)?;
+        }
+        op::UPDATE_BATCH => {
+            let count = rd.u32()? as usize;
+            ensure!(count <= MAX_BATCH_UPDATES, "batch of {count} updates exceeds cap");
+            // decode + validate the whole batch before applying any of
+            // it: a bad item must not leave a half-applied batch behind
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                let (i, j, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.f64()?);
+                ensure!(
+                    i < cfg.n1 && j < cfg.n2,
+                    "batch key ({i}, {j}) outside universe {}x{}",
+                    cfg.n1,
+                    cfg.n2
+                );
+                ensure!(w.is_finite(), "non-finite update weight in batch");
+                items.push((i, j, w));
+            }
+            for (i, j, w) in items {
+                shared.store.update(i, j, w)?;
+            }
+            codec::put_u32(&mut body, count as u32);
+        }
+        op::QUERY => {
+            let (i, j) = (rd.u32()? as usize, rd.u32()? as usize);
+            ensure!(
+                i < cfg.n1 && j < cfg.n2,
+                "key ({i}, {j}) outside universe {}x{}",
+                cfg.n1,
+                cfg.n2
+            );
+            codec::put_f64(&mut body, shared.store.point_query(i, j));
+        }
+        op::TOPK => {
+            let k = rd.u32()? as usize;
+            ensure!(k <= MAX_TOPK, "top-k of {k} exceeds cap {MAX_TOPK}");
+            put_entries(&mut body, &shared.store.top_k(k));
+        }
+        op::HEAVY => {
+            let threshold = rd.f64()?;
+            ensure!(threshold.is_finite(), "non-finite heavy-hitter threshold");
+            put_entries(&mut body, &shared.store.heavy_hitters(threshold));
+        }
+        op::MERGE => {
+            let sk = StreamSketch::decode(&mut rd)?;
+            for r in 0..sk.d {
+                ensure!(
+                    sk.table(r).iter().all(|v| v.is_finite()),
+                    "merged sketch contains non-finite counters"
+                );
+            }
+            shared.store.merge_sketch(&sk)?;
+        }
+        op::SNAPSHOT => shared.store.snapshot()?,
+        op::ADVANCE_EPOCH => shared.store.advance_epoch()?,
+        op::STATS => {
+            let st = shared.store.stats();
+            codec::put_u32(&mut body, st.shards as u32);
+            codec::put_u32(&mut body, st.window as u32);
+            codec::put_u64(&mut body, st.epoch);
+            codec::put_u64(&mut body, st.updates);
+        }
+        op::BATCH_SKETCH => {
+            let co = shared
+                .coordinator
+                .as_ref()
+                .ok_or_else(|| anyhow!("coordinator not enabled on this server"))?;
+            let n = rd.u32()? as usize;
+            ensure!(n <= MAX_SKETCH_INPUT, "sketch input of {n} floats exceeds cap");
+            let mut x = Vec::with_capacity(n);
+            for _ in 0..n {
+                x.push(rd.f32()?);
+            }
+            let out = co.call(Job::CsSketch(x)).map_err(|e| anyhow!("sketch job: {e}"))?;
+            codec::put_u32(&mut body, u32::try_from(out.len()).expect("sketch output fits u32"));
+            for v in out {
+                codec::put_f32(&mut body, v);
+            }
+        }
+        op::SHUTDOWN => return Ok((body, true)),
+        other => bail!("unknown opcode {other}"),
+    }
+    Ok((body, false))
+}
+
+fn put_entries(out: &mut Vec<u8>, entries: &[(usize, usize, f64)]) {
+    codec::put_u32(out, u32::try_from(entries.len()).expect("entry count fits u32"));
+    for &(i, j, w) in entries {
+        codec::put_u32(out, i as u32);
+        codec::put_u32(out, j as u32);
+        codec::put_f64(out, w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::store::client::StoreClient;
+    use crate::store::sharded::ShardedStore;
+
+    fn test_cfg() -> StoreConfig {
+        StoreConfig { n1: 64, n2: 64, m1: 16, m2: 16, d: 5, seed: 1234, shards: 4, window: 4 }
+    }
+
+    /// `None` when the sandbox forbids loopback sockets — tests skip,
+    /// mirroring the artifacts_ready() convention elsewhere.
+    fn start_server(data_dir: Option<String>) -> Option<StoreServer> {
+        match StoreServer::start(StoreServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            store: test_cfg(),
+            data_dir,
+            with_coordinator: false,
+            artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
+        }) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn end_to_end_roundtrip_matches_in_process_store() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        let oracle = ShardedStore::new(test_cfg());
+        let mut rng = Pcg64::new(7);
+        let mut batch = Vec::new();
+        for _ in 0..300 {
+            let (i, j) = (rng.gen_range(64) as usize, rng.gen_range(64) as usize);
+            let w = (1 + rng.gen_range(9)) as f64;
+            oracle.update(i, j, w);
+            batch.push((i as u32, j as u32, w));
+        }
+        // half singly, half batched
+        for &(i, j, w) in &batch[..150] {
+            client.update(i as usize, j as usize, w).unwrap();
+        }
+        client.update_batch(&batch[150..]).unwrap();
+        for _ in 0..100 {
+            let (i, j) = (rng.gen_range(64) as usize, rng.gen_range(64) as usize);
+            let got = client.query(i, j).unwrap();
+            assert_eq!(got.to_bits(), oracle.point_query(i, j).to_bits(), "key ({i}, {j})");
+        }
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.updates, 300);
+        assert_eq!(stats.shards, 4);
+        let top = client.top_k(5).unwrap();
+        let want = oracle.top_k(5);
+        assert_eq!(top.len(), want.len());
+        for (g, w) in top.iter().zip(want.iter()) {
+            assert_eq!((g.0, g.1), (w.0, w.1));
+            assert_eq!(g.2.to_bits(), w.2.to_bits());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn merge_and_epoch_over_the_wire() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        client.update(3, 7, 2.0).unwrap();
+        let mut remote = test_cfg().fresh_sketch();
+        remote.update(3, 7, 5.0);
+        client.merge(&remote).unwrap();
+        assert_eq!(client.query(3, 7).unwrap(), 7.0);
+        // wrong-family merges surface as server errors, not hangups
+        let alien = StreamSketch::new(64, 64, 16, 16, 5, 4321);
+        let err = client.merge(&alien).unwrap_err().to_string();
+        assert!(err.contains("family"), "unexpected error: {err}");
+        // window = 4: four advances expire everything
+        for _ in 0..4 {
+            client.advance_epoch().unwrap();
+        }
+        assert_eq!(client.query(3, 7).unwrap(), 0.0);
+        assert_eq!(client.stats().unwrap().epoch, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn protocol_errors_keep_connection_alive() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        // out-of-range key
+        assert!(client.update(1 << 20, 0, 1.0).is_err());
+        // non-finite weights are rejected before they can poison a scan
+        assert!(client.update(1, 1, f64::NAN).is_err());
+        assert!(client.update_batch(&[(1, 1, 1.0), (2, 2, f64::INFINITY)]).is_err());
+        // all-or-nothing batch: the valid first item must not have landed
+        assert_eq!(client.query(1, 1).unwrap(), 0.0);
+        // unknown opcode straight through the framing
+        let err = client.raw_call(&[250]).unwrap_err().to_string();
+        assert!(err.contains("opcode"), "unexpected error: {err}");
+        // snapshot without a data dir
+        assert!(client.snapshot().is_err());
+        // batch sketch without a coordinator
+        assert!(client.batch_sketch(&[1.0f32; 4]).is_err());
+        // connection still serves after all of those
+        client.update(1, 1, 1.0).unwrap();
+        assert_eq!(client.query(1, 1).unwrap(), 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rpc_stops_the_server() {
+        let Some(server) = start_server(None) else { return };
+        let addr = server.local_addr();
+        let mut client = StoreClient::connect(addr).unwrap();
+        client.update(1, 2, 3.0).unwrap();
+        client.shutdown_server().unwrap();
+        // wait() returns because the accept loop observed the stop flag
+        server.wait();
+        // new connections are no longer served: either refused outright
+        // or accepted-then-ignored by the dead loop; a query must fail
+        let failed = match StoreClient::connect(addr) {
+            Ok(mut c2) => c2.query(1, 2).is_err(),
+            Err(_) => true,
+        };
+        assert!(failed, "server still answering after shutdown");
+    }
+
+    #[test]
+    fn durable_server_survives_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("hocs_store_srv_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_string_lossy().to_string();
+        {
+            let Some(server) = start_server(Some(dirs.clone())) else { return };
+            let mut client = StoreClient::connect(server.local_addr()).unwrap();
+            client.update(10, 20, 6.0).unwrap();
+            client.snapshot().unwrap();
+            client.update(11, 21, 4.0).unwrap(); // only in the WAL
+            server.shutdown();
+        }
+        {
+            let Some(server) = start_server(Some(dirs)) else { return };
+            let mut client = StoreClient::connect(server.local_addr()).unwrap();
+            assert_eq!(client.query(10, 20).unwrap(), 6.0);
+            assert_eq!(client.query(11, 21).unwrap(), 4.0);
+            server.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

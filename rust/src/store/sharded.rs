@@ -1,0 +1,543 @@
+//! K-way sharded, epoch-windowed sketch store.
+//!
+//! Layout: every shard owns a ring of `window` [`StreamSketch`] epoch
+//! slots plus a running `total` (the elementwise sum of the live ring).
+//! Updates hash their key to one shard, land in that shard's current
+//! slot *and* its total; [`ShardedStore::advance_epoch`] rotates the
+//! ring by **subtracting** the expiring slot from the total (linearity
+//! again — no rescan, no accuracy loss) and clearing it for reuse.
+//!
+//! Queries exploit the same linearity in two directions:
+//! - **fan-out** — a point query sums per-repeat *raw* bucket counters
+//!   across shard totals, applies the ±1 signs once, and takes one
+//!   median at the end: the summed counter equals the merged sketch's
+//!   counter, so the estimate is *bit-identical* to querying a single
+//!   sketch fed the whole stream (over exactly-representable update
+//!   weights, where addition reassociates without rounding);
+//! - **merge** — scans (top-k / heavy hitters) first add the shard
+//!   totals into one sketch, then run the pruned scan once.
+//!
+//! Sharding is by key hash, so one shard = one lock domain and writers
+//! on different shards never contend. Every shard uses the *same*
+//! sketch seed: that is what makes their tables addable.
+
+use super::codec::{self, Reader};
+use super::mergeable::MergeableSketch;
+use crate::rng::SplitMix64;
+use crate::sketch::stream::StreamSketch;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Geometry + topology of a store. Two stores (or a store and a remote
+/// sketch) interoperate iff the sketch-identity fields (`n1, n2, m1,
+/// m2, d, seed`) agree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreConfig {
+    /// key universe: keys are `(i, j) ∈ [n1] × [n2]`
+    pub n1: usize,
+    pub n2: usize,
+    /// sketch geometry per repeat
+    pub m1: usize,
+    pub m2: usize,
+    /// median-of-d repeats
+    pub d: usize,
+    /// hash-family seed — part of the mergeability contract
+    pub seed: u64,
+    /// number of shards (lock domains)
+    pub shards: usize,
+    /// sliding-window length in epochs
+    pub window: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            n1: 1 << 16,
+            n2: 1 << 16,
+            m1: 64,
+            m2: 64,
+            d: 5,
+            seed: 0x5EED,
+            shards: 4,
+            window: 8,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub(crate) fn fresh_sketch(&self) -> StreamSketch {
+        StreamSketch::new(self.n1, self.n2, self.m1, self.m2, self.d, self.seed)
+    }
+
+    /// Does `sk` belong to this store's sketch family?
+    pub fn matches(&self, sk: &StreamSketch) -> bool {
+        sk.n1 == self.n1
+            && sk.n2 == self.n2
+            && sk.m1 == self.m1
+            && sk.m2 == self.m2
+            && sk.d == self.d
+            && sk.seed == self.seed
+    }
+
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        for v in [self.n1, self.n2, self.m1, self.m2, self.d, self.shards, self.window] {
+            codec::put_u32(out, u32::try_from(v).expect("store config field too large"));
+        }
+        codec::put_u64(out, self.seed);
+    }
+
+    pub(crate) fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let n1 = rd.u32()? as usize;
+        let n2 = rd.u32()? as usize;
+        let m1 = rd.u32()? as usize;
+        let m2 = rd.u32()? as usize;
+        let d = rd.u32()? as usize;
+        let shards = rd.u32()? as usize;
+        let window = rd.u32()? as usize;
+        let seed = rd.u64()?;
+        let cfg = Self { n1, n2, m1, m2, d, seed, shards, window };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        ensure!(
+            self.n1 > 0 && self.n2 > 0 && self.m1 > 0 && self.m2 > 0 && self.d >= 1,
+            "store config has empty dimensions"
+        );
+        ensure!(self.shards >= 1, "store needs at least one shard");
+        ensure!(self.window >= 1, "store window must be at least one epoch");
+        Ok(())
+    }
+}
+
+/// Point-in-time counters for STATS / monitoring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StoreStats {
+    pub shards: usize,
+    pub window: usize,
+    pub epoch: u64,
+    pub updates: u64,
+}
+
+struct Shard {
+    /// `window` epoch slots; `ring[cur]` receives updates
+    ring: Vec<StreamSketch>,
+    cur: usize,
+    /// running sum of the live ring slots
+    total: StreamSketch,
+}
+
+/// The sharded, epoch-windowed store. All methods take `&self`; one
+/// mutex per shard is the only synchronization on the write path.
+pub struct ShardedStore {
+    cfg: StoreConfig,
+    shards: Vec<Mutex<Shard>>,
+    /// completed window advances
+    epoch: AtomicU64,
+    router_salt: u64,
+    /// empty same-family sketch: evaluates hashes/signs for the fan-out
+    /// query without locking any shard
+    probe: StreamSketch,
+}
+
+impl ShardedStore {
+    pub fn new(cfg: StoreConfig) -> Self {
+        cfg.validate().expect("invalid store config");
+        let shards = (0..cfg.shards)
+            .map(|_| {
+                Mutex::new(Shard {
+                    ring: (0..cfg.window).map(|_| cfg.fresh_sketch()).collect(),
+                    cur: 0,
+                    total: cfg.fresh_sketch(),
+                })
+            })
+            .collect();
+        let router_salt = Self::derive_salt(cfg.seed);
+        let probe = cfg.fresh_sketch();
+        Self { cfg, shards, epoch: AtomicU64::new(0), router_salt, probe }
+    }
+
+    fn derive_salt(seed: u64) -> u64 {
+        SplitMix64::new(seed ^ 0x5AAD_ED51_AB5A_17E5).next_u64()
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    /// Which shard owns key `(i, j)`. Deterministic in the config seed,
+    /// independent of the sketch hashes (a sketch-bucket hash would
+    /// correlate shard load with bucket collisions).
+    pub fn shard_of(&self, i: usize, j: usize) -> usize {
+        let key = ((i as u64) << 32) | (j as u64 & 0xFFFF_FFFF);
+        (SplitMix64::new(self.router_salt ^ key).next_u64() % self.cfg.shards as u64) as usize
+    }
+
+    /// Route one stream item to its shard.
+    pub fn update(&self, i: usize, j: usize, w: f64) {
+        assert!(
+            i < self.cfg.n1 && j < self.cfg.n2,
+            "key ({i}, {j}) outside universe {}x{}",
+            self.cfg.n1,
+            self.cfg.n2
+        );
+        let s = self.shard_of(i, j);
+        let mut guard = self.shards[s].lock().expect("shard lock");
+        let sh = &mut *guard;
+        sh.ring[sh.cur].update(i, j, w);
+        sh.total.update(i, j, w);
+    }
+
+    /// Fan-out point query: raw bucket counters summed across shard
+    /// totals, signs applied once, one median at the end. Bit-identical
+    /// (for exactly-representable weights) to querying the merged
+    /// sketch — summing *signed* estimates instead would flip signed
+    /// zeros on zero-sum buckets split across shards.
+    pub fn point_query(&self, i: usize, j: usize) -> f64 {
+        assert!(
+            i < self.cfg.n1 && j < self.cfg.n2,
+            "key ({i}, {j}) outside universe {}x{}",
+            self.cfg.n1,
+            self.cfg.n2
+        );
+        let mut acc = vec![0.0; self.cfg.d];
+        for shm in &self.shards {
+            shm.lock().expect("shard lock").total.accumulate_raw(i, j, &mut acc);
+        }
+        self.probe.finalize_estimates(i, j, &mut acc)
+    }
+
+    /// Merge every shard's live window into one sketch (scans,
+    /// replication hand-off, MERGE-RPC export).
+    pub fn merged(&self) -> StreamSketch {
+        let mut out = self.cfg.fresh_sketch();
+        for shm in &self.shards {
+            out.merge_scaled(&shm.lock().expect("shard lock").total, 1.0);
+        }
+        out
+    }
+
+    /// The k heaviest keys in the live window (merged scan).
+    ///
+    /// Uses the marginal-pruned scan, which assumes a non-negative
+    /// workload (the store's traffic use case; window expiry does not
+    /// break this — it only removes mass that was added). Turnstile
+    /// streams whose *deletions* can cancel a row's marginal while a
+    /// heavy cell survives should scan `merged().heavy_hitters_dense`
+    /// in-process instead; point queries are exact either way.
+    pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        self.merged().top_k(k)
+    }
+
+    /// All keys whose windowed weight clears `threshold` (merged scan).
+    /// Same non-negative-workload assumption as [`ShardedStore::top_k`].
+    pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        self.merged().heavy_hitters(threshold)
+    }
+
+    /// Merge a same-family sketch from outside (another node, a batch
+    /// job) into the store. It lands in shard 0's current epoch slot so
+    /// it ages out with the window like any other traffic.
+    pub fn merge_sketch(&self, sk: &StreamSketch) -> Result<()> {
+        ensure!(
+            self.cfg.matches(sk),
+            "sketch geometry/family does not match this store (want {}x{} -> {}x{}, d={}, seed={})",
+            self.cfg.n1,
+            self.cfg.n2,
+            self.cfg.m1,
+            self.cfg.m2,
+            self.cfg.d,
+            self.cfg.seed
+        );
+        let mut guard = self.shards[0].lock().expect("shard lock");
+        let sh = &mut *guard;
+        sh.ring[sh.cur].merge_scaled(sk, 1.0);
+        sh.total.merge_scaled(sk, 1.0);
+        Ok(())
+    }
+
+    /// Slide the window one epoch: in every shard the expiring slot is
+    /// subtracted out of the running total and cleared for reuse.
+    ///
+    /// Shards rotate under their own locks, so concurrent updates may
+    /// straddle the boundary (land in the old epoch on one shard and
+    /// the new on another); per-key ordering is still serialized by the
+    /// owning shard's lock.
+    pub fn advance_epoch(&self) {
+        for shm in &self.shards {
+            let mut guard = shm.lock().expect("shard lock");
+            let sh = &mut *guard;
+            let next = (sh.cur + 1) % self.cfg.window;
+            // expiring slot leaves the total by subtraction (linearity)
+            let (total, expiring) = (&mut sh.total, &sh.ring[next]);
+            total.merge_scaled(expiring, -1.0);
+            sh.ring[next].clear();
+            sh.cur = next;
+        }
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Completed `advance_epoch` calls.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Updates currently inside the live window (expired epochs are
+    /// subtracted out of this count too).
+    pub fn updates(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|shm| shm.lock().expect("shard lock").total.updates)
+            .sum()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            shards: self.cfg.shards,
+            window: self.cfg.window,
+            epoch: self.epoch(),
+            updates: self.updates(),
+        }
+    }
+
+    /// Serialize config + every shard's ring/cursor/total (snapshots).
+    pub(crate) fn encode_into(&self, out: &mut Vec<u8>) {
+        self.cfg.encode(out);
+        codec::put_u64(out, self.epoch());
+        for shm in &self.shards {
+            let sh = shm.lock().expect("shard lock");
+            codec::put_u32(out, sh.cur as u32);
+            for sk in &sh.ring {
+                sk.encode(out);
+            }
+            sh.total.encode(out);
+        }
+    }
+
+    /// Bit-exact inverse of [`ShardedStore::encode_into`].
+    pub(crate) fn decode_from(rd: &mut Reader<'_>) -> Result<Self> {
+        let cfg = StoreConfig::decode(rd)?;
+        let epoch = rd.u64()?;
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let cur = rd.u32()? as usize;
+            ensure!(cur < cfg.window, "corrupt snapshot: epoch cursor out of range");
+            let mut ring = Vec::with_capacity(cfg.window);
+            for _ in 0..cfg.window {
+                let sk = StreamSketch::decode(rd)?;
+                ensure!(cfg.matches(&sk), "corrupt snapshot: ring sketch family mismatch");
+                ring.push(sk);
+            }
+            let total = StreamSketch::decode(rd)?;
+            ensure!(cfg.matches(&total), "corrupt snapshot: total sketch family mismatch");
+            shards.push(Mutex::new(Shard { ring, cur, total }));
+        }
+        let router_salt = Self::derive_salt(cfg.seed);
+        let probe = cfg.fresh_sketch();
+        Ok(Self { cfg, shards, epoch: AtomicU64::new(epoch), router_salt, probe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn small_cfg(shards: usize, window: usize) -> StoreConfig {
+        StoreConfig { n1: 48, n2: 40, m1: 12, m2: 10, d: 5, seed: 77, shards, window }
+    }
+
+    /// Integer weights make every f64 partial sum exact, so accumulation
+    /// order (sharded vs interleaved) cannot change results and
+    /// bit-identity is a meaningful assertion.
+    fn int_weight(rng: &mut Pcg64) -> f64 {
+        let mag = (1 + rng.gen_range(16)) as f64;
+        if rng.uniform() < 0.25 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_covers_shards() {
+        let store = ShardedStore::new(small_cfg(4, 2));
+        let mut seen = [false; 4];
+        for i in 0..48 {
+            for j in 0..40 {
+                let s = store.shard_of(i, j);
+                assert!(s < 4);
+                assert_eq!(s, store.shard_of(i, j));
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some shard got no keys: {seen:?}");
+    }
+
+    #[test]
+    fn point_queries_bit_identical_to_unsharded_sketch() {
+        for shards in [1usize, 2, 4, 8] {
+            let cfg = small_cfg(shards, 3);
+            let store = ShardedStore::new(cfg.clone());
+            let mut reference = cfg.fresh_sketch();
+            let mut rng = Pcg64::new(100 + shards as u64);
+            for _ in 0..800 {
+                let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+                let w = int_weight(&mut rng);
+                store.update(i, j, w);
+                reference.update(i, j, w);
+            }
+            assert_eq!(store.updates(), reference.updates);
+            for i in 0..48 {
+                for j in 0..40 {
+                    assert_eq!(
+                        store.point_query(i, j).to_bits(),
+                        reference.query(i, j).to_bits(),
+                        "shards={shards} key=({i},{j})"
+                    );
+                }
+            }
+            // merged sketch answers identically too
+            let merged = store.merged();
+            for _ in 0..100 {
+                let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+                assert_eq!(merged.query(i, j).to_bits(), reference.query(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn window_expiry_leaves_exactly_the_recent_epochs() {
+        let cfg = small_cfg(4, 2);
+        let store = ShardedStore::new(cfg.clone());
+        let mut rng = Pcg64::new(9);
+        let phase = |rng: &mut Pcg64| -> Vec<(usize, usize, f64)> {
+            (0..300)
+                .map(|_| {
+                    (rng.gen_range(48) as usize, rng.gen_range(40) as usize, int_weight(rng))
+                })
+                .collect()
+        };
+        let a = phase(&mut rng);
+        let b = phase(&mut rng);
+        for &(i, j, w) in &a {
+            store.update(i, j, w);
+        }
+        store.advance_epoch();
+        for &(i, j, w) in &b {
+            store.update(i, j, w);
+        }
+        store.advance_epoch(); // phase A expires (window = 2)
+        assert_eq!(store.epoch(), 2);
+        let mut only_b = cfg.fresh_sketch();
+        for &(i, j, w) in &b {
+            only_b.update(i, j, w);
+        }
+        assert_eq!(store.updates(), only_b.updates);
+        for _ in 0..200 {
+            let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+            assert_eq!(
+                store.point_query(i, j).to_bits(),
+                only_b.query(i, j).to_bits(),
+                "key ({i}, {j})"
+            );
+        }
+    }
+
+    #[test]
+    fn window_one_keeps_only_current_epoch() {
+        let cfg = small_cfg(2, 1);
+        let store = ShardedStore::new(cfg);
+        store.update(1, 1, 5.0);
+        store.advance_epoch();
+        assert_eq!(store.updates(), 0);
+        assert_eq!(store.point_query(1, 1), 0.0);
+        store.update(2, 2, 3.0);
+        assert_eq!(store.updates(), 1);
+    }
+
+    #[test]
+    fn merge_sketch_adds_foreign_traffic() {
+        let cfg = small_cfg(3, 2);
+        let store = ShardedStore::new(cfg.clone());
+        store.update(5, 5, 2.0);
+        // a remote node observed more of the same key
+        let mut remote = cfg.fresh_sketch();
+        remote.update(5, 5, 3.0);
+        remote.update(7, 1, 4.0);
+        store.merge_sketch(&remote).unwrap();
+        assert_eq!(store.point_query(5, 5), 5.0);
+        assert_eq!(store.point_query(7, 1), 4.0);
+        // merged traffic ages out with the window
+        store.advance_epoch();
+        store.advance_epoch();
+        assert_eq!(store.point_query(5, 5), 0.0);
+        // wrong-family sketches are rejected
+        let alien = StreamSketch::new(48, 40, 12, 10, 5, 12345);
+        assert!(store.merge_sketch(&alien).is_err());
+    }
+
+    #[test]
+    fn topk_and_heavy_hitters_over_merged_window() {
+        let cfg = small_cfg(4, 2);
+        let store = ShardedStore::new(cfg);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..400 {
+            store.update(3, 4, 1.0);
+        }
+        for _ in 0..200 {
+            store.update(20, 30, 1.0);
+        }
+        for _ in 0..300 {
+            store.update(rng.gen_range(48) as usize, rng.gen_range(40) as usize, 1.0);
+        }
+        let top = store.top_k(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!((top[0].0, top[0].1), (3, 4));
+        assert_eq!((top[1].0, top[1].1), (20, 30));
+        let hh = store.heavy_hitters(150.0);
+        assert!(hh.iter().any(|&(i, j, _)| (i, j) == (3, 4)));
+        assert!(hh.iter().any(|&(i, j, _)| (i, j) == (20, 30)));
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_exact() {
+        let cfg = small_cfg(3, 4);
+        let store = ShardedStore::new(cfg);
+        let mut rng = Pcg64::new(6);
+        for _ in 0..500 {
+            store.update(rng.gen_range(48) as usize, rng.gen_range(40) as usize, rng.normal());
+        }
+        store.advance_epoch();
+        for _ in 0..200 {
+            store.update(rng.gen_range(48) as usize, rng.gen_range(40) as usize, rng.normal());
+        }
+        let mut bytes = Vec::new();
+        store.encode_into(&mut bytes);
+        let got = ShardedStore::decode_from(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got.config(), store.config());
+        assert_eq!(got.epoch(), store.epoch());
+        assert_eq!(got.updates(), store.updates());
+        for _ in 0..200 {
+            let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+            assert_eq!(got.point_query(i, j).to_bits(), store.point_query(i, j).to_bits());
+        }
+        // and the recovered store keeps working (same routing)
+        got.update(1, 2, 3.0);
+        store.update(1, 2, 3.0);
+        assert_eq!(got.point_query(1, 2).to_bits(), store.point_query(1, 2).to_bits());
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_cursor() {
+        let store = ShardedStore::new(small_cfg(2, 2));
+        let mut bytes = Vec::new();
+        store.encode_into(&mut bytes);
+        // config is 7 u32 + 1 u64 = 36 bytes, epoch u64 = 8; first
+        // shard's cursor starts at byte 44 — point it past the window
+        bytes[44] = 9;
+        assert!(ShardedStore::decode_from(&mut Reader::new(&bytes)).is_err());
+    }
+}

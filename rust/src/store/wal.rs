@@ -1,0 +1,580 @@
+//! Snapshot + write-ahead-log persistence for the sharded store.
+//!
+//! On-disk layout (one directory per store):
+//!
+//! ```text
+//! snapshot.bin  = "HOCSSNAP" | u32 version | u64 generation | ShardedStore encoding
+//! wal.bin       = "HOCSWAL0" | u32 version | u64 generation | frame*
+//! frame         = u32 payload_len | u32 crc32(payload) | payload
+//! payload       = u8 tag | fields           (see WalRecord)
+//! ```
+//!
+//! Everything is little-endian (see [`super::codec`]). Writes append a
+//! frame *before* mutating the in-memory store; recovery loads the
+//! snapshot and replays frames until the first torn or CRC-failing one
+//! (a crash mid-append leaves exactly such a tail). [`DurableStore::open`]
+//! then immediately re-snapshots and truncates the WAL, so the torn
+//! tail is healed rather than appended after.
+//!
+//! [`DurableStore::snapshot`] replaces `snapshot.bin` atomically
+//! (tmp-file + rename) and truncates the WAL under the same log lock
+//! that writers append under, so no record can fall between the
+//! snapshot image and the fresh log.
+//!
+//! The **generation** stamp makes the rename → truncate pair safe: a
+//! new snapshot (which already incorporates every logged record) is
+//! written with generation g+1, and only then is the WAL recreated with
+//! g+1. If a crash lands between the two, recovery sees a snapshot at
+//! g+1 next to a WAL still at g and skips the replay — without the
+//! stamp those records would be applied a second time.
+
+use super::codec::{self, Reader};
+use super::mergeable::MergeableSketch;
+use super::sharded::{ShardedStore, StoreConfig, StoreStats};
+use crate::sketch::stream::StreamSketch;
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
+const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
+const FORMAT_VERSION: u32 = 1;
+/// magic + version + generation
+const HEADER_LEN: usize = 20;
+
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+pub const WAL_FILE: &str = "wal.bin";
+
+/// One durable mutation. Queries never hit the log.
+#[derive(Debug)]
+pub enum WalRecord {
+    Update { i: u32, j: u32, w: f64 },
+    AdvanceEpoch,
+    MergeSketch(StreamSketch),
+}
+
+const TAG_UPDATE: u8 = 1;
+const TAG_ADVANCE: u8 = 2;
+const TAG_MERGE: u8 = 3;
+
+impl WalRecord {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Update { i, j, w } => {
+                codec::put_u8(out, TAG_UPDATE);
+                codec::put_u32(out, *i);
+                codec::put_u32(out, *j);
+                codec::put_f64(out, *w);
+            }
+            WalRecord::AdvanceEpoch => codec::put_u8(out, TAG_ADVANCE),
+            WalRecord::MergeSketch(sk) => {
+                codec::put_u8(out, TAG_MERGE);
+                sk.encode(out);
+            }
+        }
+    }
+
+    fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        match rd.u8()? {
+            TAG_UPDATE => Ok(WalRecord::Update { i: rd.u32()?, j: rd.u32()?, w: rd.f64()? }),
+            TAG_ADVANCE => Ok(WalRecord::AdvanceEpoch),
+            TAG_MERGE => Ok(WalRecord::MergeSketch(StreamSketch::decode(rd)?)),
+            other => bail!("unknown WAL record tag {other}"),
+        }
+    }
+}
+
+/// Append-only frame writer.
+struct WalWriter {
+    file: File,
+}
+
+impl WalWriter {
+    /// Create (truncating any previous log) and write the header,
+    /// stamped with the generation of the snapshot it extends.
+    fn create(path: &Path, generation: u64) -> Result<Self> {
+        let mut file = File::create(path).with_context(|| format!("creating WAL {path:?}"))?;
+        file.write_all(WAL_MAGIC)?;
+        file.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        file.write_all(&generation.to_le_bytes())?;
+        file.flush()?;
+        Ok(Self { file })
+    }
+
+    fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let mut payload = Vec::new();
+        rec.encode(&mut payload);
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        codec::put_u32(&mut frame, u32::try_from(payload.len()).expect("WAL record too large"));
+        codec::put_u32(&mut frame, codec::crc32(&payload));
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Read the WAL's generation stamp and every intact record; stop
+/// (without error) at the first torn or corrupt frame — that is the
+/// crash-recovery contract.
+fn read_wal(path: &Path) -> Result<(u64, Vec<WalRecord>)> {
+    let bytes = fs::read(path).with_context(|| format!("reading WAL {path:?}"))?;
+    ensure!(bytes.len() >= HEADER_LEN, "WAL shorter than its header");
+    ensure!(&bytes[..8] == WAL_MAGIC, "bad WAL magic");
+    let mut rd = Reader::new(&bytes[8..]);
+    let version = rd.u32()?;
+    ensure!(version == FORMAT_VERSION, "unsupported WAL version {version}");
+    let generation = rd.u64()?;
+    let mut out = Vec::new();
+    loop {
+        if rd.remaining() < 8 {
+            break; // torn or absent frame header
+        }
+        let len = rd.u32()? as usize;
+        let crc = rd.u32()?;
+        if rd.remaining() < len {
+            break; // torn payload
+        }
+        let payload = rd.take(len)?;
+        if codec::crc32(payload) != crc {
+            break; // corrupt frame
+        }
+        let mut prd = Reader::new(payload);
+        match WalRecord::decode(&mut prd) {
+            Ok(rec) => out.push(rec),
+            Err(_) => break, // CRC passed but the record is garbage
+        }
+    }
+    Ok((generation, out))
+}
+
+/// A [`ShardedStore`] with optional snapshot/WAL durability. All write
+/// paths log first, then mutate; `log == None` is a purely in-memory
+/// store with identical semantics and no I/O.
+pub struct DurableStore {
+    store: ShardedStore,
+    log: Option<Mutex<WalWriter>>,
+    dir: Option<PathBuf>,
+    /// generation of the current snapshot + WAL pair; bumped by every
+    /// snapshot (only ever touched under the log lock)
+    generation: AtomicU64,
+}
+
+impl DurableStore {
+    /// Purely in-memory store (no persistence; `snapshot()` errors).
+    pub fn in_memory(cfg: StoreConfig) -> Self {
+        Self {
+            store: ShardedStore::new(cfg),
+            log: None,
+            dir: None,
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Open or create a durable store under `dir`: load the snapshot if
+    /// one exists, replay the WAL tail onto it (only when the WAL's
+    /// generation matches the snapshot's — a mismatch means a crash
+    /// landed between snapshot rename and WAL truncation, and those
+    /// records are already inside the snapshot), then write a fresh
+    /// snapshot and truncate the WAL (healing any torn tail). An
+    /// existing store must match `cfg` — silently changing sketch
+    /// geometry would corrupt every merge invariant.
+    pub fn open(dir: &Path, cfg: StoreConfig) -> Result<Self> {
+        cfg.validate()?;
+        fs::create_dir_all(dir).with_context(|| format!("creating store dir {dir:?}"))?;
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let wal_path = dir.join(WAL_FILE);
+
+        let (store, snap_generation) = if snap_path.exists() {
+            let bytes = fs::read(&snap_path).with_context(|| format!("reading {snap_path:?}"))?;
+            ensure!(bytes.len() >= HEADER_LEN, "snapshot shorter than its header");
+            ensure!(&bytes[..8] == SNAP_MAGIC, "bad snapshot magic");
+            let mut rd = Reader::new(&bytes[8..]);
+            let version = rd.u32()?;
+            ensure!(version == FORMAT_VERSION, "unsupported snapshot version {version}");
+            let generation = rd.u64()?;
+            let store = ShardedStore::decode_from(&mut rd)?;
+            ensure!(
+                *store.config() == cfg,
+                "on-disk store config {:?} does not match requested {cfg:?}",
+                store.config()
+            );
+            (store, generation)
+        } else {
+            (ShardedStore::new(cfg), 0)
+        };
+
+        if wal_path.exists() {
+            let (wal_generation, records) = read_wal(&wal_path)?;
+            if wal_generation == snap_generation {
+                crate::log_debug!("store: replaying {} WAL record(s)", records.len());
+                for rec in &records {
+                    apply(&store, rec)?;
+                }
+            } else {
+                // crash between snapshot rename and WAL truncation: the
+                // snapshot already contains these records
+                crate::log_warn!(
+                    "store: skipping WAL generation {wal_generation} (snapshot is at \
+                     {snap_generation}) — records already applied"
+                );
+            }
+        }
+
+        let next_generation = snap_generation + 1;
+        let mut ds = Self {
+            store,
+            log: None,
+            dir: Some(dir.to_path_buf()),
+            generation: AtomicU64::new(next_generation),
+        };
+        // snapshot the replayed state first (at the bumped generation),
+        // then start a clean same-generation log: a crash between the
+        // two leaves snapshot g+1 + WAL g, which the next open skips
+        ds.write_snapshot_file()?;
+        ds.log = Some(Mutex::new(WalWriter::create(&wal_path, next_generation)?));
+        Ok(ds)
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        self.store.config()
+    }
+
+    /// The wrapped in-memory store (tests / read-only access).
+    pub fn store(&self) -> &ShardedStore {
+        &self.store
+    }
+
+    /// Log (if durable) then apply one update.
+    pub fn update(&self, i: usize, j: usize, w: f64) -> Result<()> {
+        let cfg = self.store.config();
+        ensure!(
+            i < cfg.n1 && j < cfg.n2,
+            "key ({i}, {j}) outside universe {}x{}",
+            cfg.n1,
+            cfg.n2
+        );
+        match &self.log {
+            Some(log) => {
+                // holding the log lock across the apply serializes the
+                // WAL order with the store order (and with snapshots)
+                let mut lw = log.lock().expect("wal lock");
+                lw.append(&WalRecord::Update { i: i as u32, j: j as u32, w })?;
+                self.store.update(i, j, w);
+            }
+            None => self.store.update(i, j, w),
+        }
+        Ok(())
+    }
+
+    pub fn advance_epoch(&self) -> Result<()> {
+        match &self.log {
+            Some(log) => {
+                let mut lw = log.lock().expect("wal lock");
+                lw.append(&WalRecord::AdvanceEpoch)?;
+                self.store.advance_epoch();
+            }
+            None => self.store.advance_epoch(),
+        }
+        Ok(())
+    }
+
+    pub fn merge_sketch(&self, sk: &StreamSketch) -> Result<()> {
+        ensure!(self.store.config().matches(sk), "sketch family does not match this store");
+        match &self.log {
+            Some(log) => {
+                let mut lw = log.lock().expect("wal lock");
+                lw.append(&WalRecord::MergeSketch(sk.clone()))?;
+                self.store.merge_sketch(sk)
+            }
+            None => self.store.merge_sketch(sk),
+        }
+    }
+
+    // -------- queries (never logged) --------
+
+    pub fn point_query(&self, i: usize, j: usize) -> f64 {
+        self.store.point_query(i, j)
+    }
+
+    pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        self.store.top_k(k)
+    }
+
+    pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        self.store.heavy_hitters(threshold)
+    }
+
+    pub fn merged(&self) -> StreamSketch {
+        self.store.merged()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Write a fresh snapshot (bumping the generation) and truncate the
+    /// WAL. Errors for in-memory stores.
+    pub fn snapshot(&self) -> Result<()> {
+        let Some(log) = &self.log else {
+            bail!("in-memory store has no snapshot directory (start with a data dir)");
+        };
+        // the log lock blocks writers, so the snapshot image and the
+        // truncated WAL describe the same instant
+        let mut lw = log.lock().expect("wal lock");
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        self.write_snapshot_file()?;
+        let dir = self.dir.as_ref().expect("durable store has a dir");
+        *lw = WalWriter::create(&dir.join(WAL_FILE), self.generation.load(Ordering::SeqCst))?;
+        Ok(())
+    }
+
+    fn write_snapshot_file(&self) -> Result<()> {
+        let Some(dir) = &self.dir else {
+            bail!("in-memory store has no snapshot directory");
+        };
+        let mut out = Vec::new();
+        out.extend_from_slice(SNAP_MAGIC);
+        codec::put_u32(&mut out, FORMAT_VERSION);
+        codec::put_u64(&mut out, self.generation.load(Ordering::SeqCst));
+        self.store.encode_into(&mut out);
+        let tmp = dir.join("snapshot.tmp");
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(&out)?;
+            f.flush()?;
+        }
+        fs::rename(&tmp, dir.join(SNAPSHOT_FILE)).context("atomically replacing snapshot")?;
+        Ok(())
+    }
+}
+
+/// Replay one record onto the store, validating against the config so a
+/// corrupt-but-CRC-clean record cannot panic the recovery path.
+fn apply(store: &ShardedStore, rec: &WalRecord) -> Result<()> {
+    let cfg = store.config();
+    match rec {
+        WalRecord::Update { i, j, w } => {
+            let (i, j) = (*i as usize, *j as usize);
+            ensure!(i < cfg.n1 && j < cfg.n2, "WAL update key ({i}, {j}) out of range");
+            store.update(i, j, *w);
+            Ok(())
+        }
+        WalRecord::AdvanceEpoch => {
+            store.advance_epoch();
+            Ok(())
+        }
+        WalRecord::MergeSketch(sk) => store.merge_sketch(sk),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn cfg() -> StoreConfig {
+        StoreConfig { n1: 40, n2: 32, m1: 10, m2: 8, d: 5, seed: 31, shards: 3, window: 3 }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("hocs_store_wal_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn int_weight(rng: &mut Pcg64) -> f64 {
+        (1 + rng.gen_range(9)) as f64
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let mut sk = StreamSketch::new(8, 8, 4, 4, 3, 1);
+        sk.update(1, 2, 3.0);
+        for rec in [
+            WalRecord::Update { i: 3, j: 9, w: -2.5 },
+            WalRecord::AdvanceEpoch,
+            WalRecord::MergeSketch(sk),
+        ] {
+            let mut out = Vec::new();
+            rec.encode(&mut out);
+            let got = WalRecord::decode(&mut Reader::new(&out)).unwrap();
+            match (&rec, &got) {
+                (
+                    WalRecord::Update { i, j, w },
+                    WalRecord::Update { i: gi, j: gj, w: gw },
+                ) => {
+                    assert_eq!((i, j), (gi, gj));
+                    assert_eq!(w.to_bits(), gw.to_bits());
+                }
+                (WalRecord::AdvanceEpoch, WalRecord::AdvanceEpoch) => {}
+                (WalRecord::MergeSketch(a), WalRecord::MergeSketch(b)) => {
+                    assert!(a.same_family(b));
+                    assert_eq!(a.table(0), b.table(0));
+                }
+                other => panic!("variant mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn crash_recovery_replays_wal_tail() {
+        let dir = tmpdir("replay");
+        let shadow = ShardedStore::new(cfg());
+        let mut rng = Pcg64::new(2);
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            for _ in 0..200 {
+                let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                let w = int_weight(&mut rng);
+                live.update(i, j, w).unwrap();
+                shadow.update(i, j, w);
+            }
+            live.snapshot().unwrap();
+            live.advance_epoch().unwrap();
+            shadow.advance_epoch();
+            for _ in 0..150 {
+                let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                let w = int_weight(&mut rng);
+                live.update(i, j, w).unwrap();
+                shadow.update(i, j, w);
+            }
+            // dropped without a final snapshot: the tail lives in the WAL
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.stats(), shadow.stats());
+        for i in 0..40 {
+            for j in 0..32 {
+                assert_eq!(
+                    recovered.point_query(i, j).to_bits(),
+                    shadow.point_query(i, j).to_bits(),
+                    "key ({i}, {j})"
+                );
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_without_any_snapshot_call() {
+        // never snapshot explicitly: open() writes the initial snapshot,
+        // everything else must come back from the WAL alone
+        let dir = tmpdir("wal_only");
+        let shadow = ShardedStore::new(cfg());
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(3, 4, 7.0).unwrap();
+            live.update(9, 9, 2.0).unwrap();
+            let mut remote = cfg().fresh_sketch();
+            remote.update(3, 4, 1.0);
+            live.merge_sketch(&remote).unwrap();
+            shadow.update(3, 4, 7.0);
+            shadow.update(9, 9, 2.0);
+            shadow.merge_sketch(&remote).unwrap();
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.point_query(3, 4).to_bits(), shadow.point_query(3, 4).to_bits());
+        assert_eq!(recovered.point_query(9, 9).to_bits(), shadow.point_query(9, 9).to_bits());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_wal_tail_is_ignored() {
+        let dir = tmpdir("torn");
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(1, 1, 5.0).unwrap();
+        }
+        // simulate a crash mid-append: a frame header promising more
+        // payload than was written
+        {
+            let mut f = OpenOptions::new().append(true).open(dir.join(WAL_FILE)).unwrap();
+            f.write_all(&100u32.to_le_bytes()).unwrap();
+            f.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap();
+            f.write_all(&[1, 2, 3]).unwrap();
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.point_query(1, 1), 5.0);
+        // and the healed store keeps accepting writes
+        recovered.update(2, 2, 1.0).unwrap();
+        assert_eq!(recovered.point_query(2, 2), 1.0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_frame_stops_replay_cleanly() {
+        let dir = tmpdir("crc");
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(1, 1, 5.0).unwrap();
+            live.update(2, 2, 6.0).unwrap();
+        }
+        // flip one payload byte of the last frame: CRC must catch it and
+        // recovery keeps everything before that frame
+        {
+            let path = dir.join(WAL_FILE);
+            let mut bytes = fs::read(&path).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0xFF;
+            fs::write(&path, &bytes).unwrap();
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.point_query(1, 1), 5.0);
+        assert_eq!(recovered.point_query(2, 2), 0.0, "corrupt record must not replay");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_wal_generation_is_not_double_applied() {
+        // simulate a crash *between* snapshot rename and WAL truncation:
+        // the snapshot already contains the WAL's records, so replaying
+        // them would double-count
+        let dir = tmpdir("stale_gen");
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(1, 1, 5.0).unwrap();
+            // keep a copy of the record-bearing WAL
+            fs::copy(dir.join(WAL_FILE), dir.join("wal.old")).unwrap();
+            live.snapshot().unwrap(); // snapshot g+1 + fresh WAL g+1
+        }
+        // crash left the old WAL (generation g) next to snapshot g+1
+        fs::copy(dir.join("wal.old"), dir.join(WAL_FILE)).unwrap();
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(
+            recovered.point_query(1, 1),
+            5.0,
+            "stale WAL record was double-applied"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_config_is_rejected() {
+        let dir = tmpdir("cfg");
+        {
+            DurableStore::open(&dir, cfg()).unwrap();
+        }
+        let mut other = cfg();
+        other.seed = 999;
+        assert!(DurableStore::open(&dir, other).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn in_memory_store_has_no_snapshot() {
+        let ds = DurableStore::in_memory(cfg());
+        ds.update(1, 1, 1.0).unwrap();
+        assert!(ds.snapshot().is_err());
+        assert_eq!(ds.point_query(1, 1), 1.0);
+    }
+}

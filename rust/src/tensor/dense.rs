@@ -209,12 +209,16 @@ impl Tensor {
         Self { dims: self.dims.clone(), data: self.data.iter().map(|x| x * s).collect() }
     }
 
+    // `add`/`sub` allocate a fresh tensor from borrowed operands, which
+    // does not fit the by-value `std::ops` signatures.
+    #[allow(clippy::should_implement_trait)]
     pub fn add(&self, o: &Tensor) -> Self {
         assert_eq!(self.dims, o.dims);
         let data = self.data.iter().zip(o.data.iter()).map(|(a, b)| a + b).collect();
         Self { dims: self.dims.clone(), data }
     }
 
+    #[allow(clippy::should_implement_trait)]
     pub fn sub(&self, o: &Tensor) -> Self {
         assert_eq!(self.dims, o.dims);
         let data = self.data.iter().zip(o.data.iter()).map(|(a, b)| a - b).collect();

@@ -92,12 +92,8 @@ impl Json {
     }
 
     // ---------- serialization ----------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // (compact form via `Display`, so `.to_string()` comes from the
+    // blanket `ToString` impl)
 
     /// Pretty-print with 2-space indent.
     pub fn to_string_pretty(&self) -> String {
@@ -177,6 +173,15 @@ impl Json {
             }
             other => other.write(out),
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    /// Compact single-line serialization.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

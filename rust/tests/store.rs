@@ -1,0 +1,195 @@
+//! Store-level acceptance properties (ISSUE 2):
+//!
+//! 1. **Merge fidelity** — for random update streams split across
+//!    K ∈ {2, 4, 8} shards, merged-shard point estimates are
+//!    bit-identical (f64) to a single un-sharded `StreamSketch` fed the
+//!    same stream.
+//! 2. **Crash recovery** — snapshot → WAL-replay → recovered store
+//!    answers identically to the pre-crash store.
+//!
+//! Streams use integer weights: every bucket partial sum is then exact
+//! in f64, so accumulation *order* (per-shard vs interleaved) provably
+//! cannot change a counter and bit-identity is the right assertion.
+//! The ±1 sign products are exact for any weight; only bucket-sum
+//! reassociation needs the integrality argument.
+
+use hocs::rng::Pcg64;
+use hocs::sketch::stream::StreamSketch;
+use hocs::store::{DurableStore, ShardedStore, StoreConfig};
+use hocs::util::prop::{forall, prop_assert, Gen};
+use std::path::PathBuf;
+
+fn reference_sketch(cfg: &StoreConfig) -> StreamSketch {
+    StreamSketch::new(cfg.n1, cfg.n2, cfg.m1, cfg.m2, cfg.d, cfg.seed)
+}
+
+fn store_cfg(shards: usize, window: usize, seed: u64) -> StoreConfig {
+    StoreConfig { n1: 48, n2: 40, m1: 12, m2: 10, d: 5, seed, shards, window }
+}
+
+fn int_weight(rng: &mut Pcg64) -> f64 {
+    let mag = (1 + rng.gen_range(16)) as f64;
+    if rng.uniform() < 0.2 {
+        -mag // turnstile deletions keep the linearity honest
+    } else {
+        mag
+    }
+}
+
+fn random_key(rng: &mut Pcg64, cfg: &StoreConfig) -> (usize, usize) {
+    (rng.gen_range(cfg.n1 as u64) as usize, rng.gen_range(cfg.n2 as u64) as usize)
+}
+
+#[test]
+fn merged_shards_bit_identical_to_unsharded_sketch() {
+    for k in [2usize, 4, 8] {
+        forall(&format!("merge fidelity K={k}"), 6, |g: &mut Gen| {
+            let seed = g.rng().next_u64();
+            let cfg = store_cfg(k, 2, seed);
+            let store = ShardedStore::new(cfg.clone());
+            let mut reference = reference_sketch(&cfg);
+            let n_updates = 500 + g.usize_in(0, 300);
+            for _ in 0..n_updates {
+                let (i, j) = random_key(g.rng(), &cfg);
+                let w = int_weight(g.rng());
+                store.update(i, j, w);
+                reference.update(i, j, w);
+            }
+            prop_assert(store.updates() == reference.updates, "update counts differ")?;
+            // every key of the universe, not a sample: bit-identical means
+            // bit-identical everywhere
+            for i in 0..cfg.n1 {
+                for j in 0..cfg.n2 {
+                    let a = store.point_query(i, j);
+                    let b = reference.query(i, j);
+                    prop_assert(
+                        a.to_bits() == b.to_bits(),
+                        &format!("estimate differs at ({i}, {j}): {a} vs {b}"),
+                    )?;
+                }
+            }
+            // the merged sketch (the TOPK/HEAVY path) agrees too
+            let merged = store.merged();
+            for _ in 0..50 {
+                let (i, j) = random_key(g.rng(), &cfg);
+                prop_assert(
+                    merged.query(i, j).to_bits() == reference.query(i, j).to_bits(),
+                    "merged sketch diverges from reference",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn window_expiry_is_exact_subtraction() {
+    forall("epoch expiry", 8, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let cfg = store_cfg(4, 2, seed);
+        let store = ShardedStore::new(cfg.clone());
+        let phase = |store: &ShardedStore, n: usize, record: bool, g: &mut Gen| {
+            let mut items = Vec::new();
+            for _ in 0..n {
+                let (i, j) = random_key(g.rng(), &cfg);
+                let w = int_weight(g.rng());
+                store.update(i, j, w);
+                if record {
+                    items.push((i, j, w));
+                }
+            }
+            items
+        };
+        phase(&store, 300, false, g); // epoch 0 (will expire)
+        store.advance_epoch();
+        let live_items = phase(&store, 250, true, g); // epoch 1 (stays)
+        store.advance_epoch(); // window=2: epoch 0 expires exactly
+        let mut reference = reference_sketch(&cfg);
+        for &(i, j, w) in &live_items {
+            reference.update(i, j, w);
+        }
+        prop_assert(store.updates() == reference.updates, "live update counts differ")?;
+        for i in 0..cfg.n1 {
+            for j in 0..cfg.n2 {
+                prop_assert(
+                    store.point_query(i, j).to_bits() == reference.query(i, j).to_bits(),
+                    &format!("expired mass leaked at ({i}, {j})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("hocs_store_prop_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn recovered_store_answers_identically_to_pre_crash_store() {
+    let dir = tmpdir("recover");
+    forall("snapshot + WAL replay", 4, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let cfg = store_cfg(3, 3, seed);
+        // fresh directory per case (different seeds are different stores)
+        let _ = std::fs::remove_dir_all(&dir);
+        let shadow = ShardedStore::new(cfg.clone());
+        {
+            let live = DurableStore::open(&dir, cfg.clone()).unwrap();
+            let drive = |live: &DurableStore, n: usize, g: &mut Gen| {
+                for _ in 0..n {
+                    let (i, j) = random_key(g.rng(), &cfg);
+                    let w = int_weight(g.rng());
+                    live.update(i, j, w).unwrap();
+                    shadow.update(i, j, w);
+                }
+            };
+            drive(&live, 150, g);
+            live.snapshot().unwrap(); // state up to here in the snapshot
+            drive(&live, 100, g);
+            live.advance_epoch().unwrap();
+            shadow.advance_epoch();
+            drive(&live, 80, g); // tail lives only in the WAL
+            // drop without snapshot = crash
+        }
+        let recovered = DurableStore::open(&dir, cfg.clone()).unwrap();
+        prop_assert(recovered.stats() == shadow.stats(), "stats diverged after recovery")?;
+        for i in 0..cfg.n1 {
+            for j in 0..cfg.n2 {
+                let a = recovered.point_query(i, j);
+                let b = shadow.point_query(i, j);
+                prop_assert(
+                    a.to_bits() == b.to_bits(),
+                    &format!("recovered estimate differs at ({i}, {j}): {a} vs {b}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_is_idempotent_across_reopens() {
+    // opening heals the WAL into a snapshot; a second open must not
+    // double-apply anything
+    let dir = tmpdir("idempotent");
+    let cfg = store_cfg(2, 2, 424242);
+    {
+        let live = DurableStore::open(&dir, cfg.clone()).unwrap();
+        live.update(1, 2, 3.0).unwrap();
+        live.update(4, 5, 6.0).unwrap();
+    }
+    let first = DurableStore::open(&dir, cfg.clone()).unwrap();
+    let q1 = (first.point_query(1, 2), first.point_query(4, 5));
+    drop(first);
+    let second = DurableStore::open(&dir, cfg).unwrap();
+    assert_eq!(second.point_query(1, 2).to_bits(), q1.0.to_bits());
+    assert_eq!(second.point_query(4, 5).to_bits(), q1.1.to_bits());
+    assert_eq!(q1.0, 3.0);
+    assert_eq!(q1.1, 6.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
