@@ -5,12 +5,14 @@
 //! - point-query latency p50/p99 (measured per call);
 //!
 //! plus one loopback-TCP row (framed protocol + batch updates through
-//! `StoreServer`/`StoreClient`). Writes everything to
-//! `BENCH_store.json` so future PRs have a perf trajectory.
+//! `StoreServer`/`StoreClient`) and a durable (WAL-on) comparison of
+//! per-item commits vs group-commit batches — the number that justifies
+//! the batched write path. Writes everything to `BENCH_store.json` so
+//! future PRs have a perf trajectory.
 
 use hocs::rng::Pcg64;
 use hocs::store::{
-    ShardedStore, StoreClient, StoreConfig, StoreServer, StoreServerConfig,
+    DurableStore, ShardedStore, StoreClient, StoreConfig, StoreServer, StoreServerConfig,
 };
 use hocs::util::bench::Table;
 use hocs::util::json::Json;
@@ -151,11 +153,83 @@ fn tcp_loopback_row() -> Option<Row> {
     })
 }
 
+/// Durable-path comparison: the same update volume through per-item
+/// WAL commits (one frame + flush each) and through group-commit
+/// batches (one frame + flush per batch, shard-grouped apply). The
+/// ratio is the group-commit win.
+fn durable_rows() -> Vec<Row> {
+    let shards = 4;
+    let base = std::env::temp_dir().join(format!("hocs_bench_store_wal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let n1 = 1u64 << 14;
+    let total = 20_000usize;
+    let mut rows = Vec::new();
+
+    let mut run = |label: String, batch: usize| {
+        let dir = base.join(label.replace(' ', "_").replace('=', "_"));
+        let store = match DurableStore::open(&dir, bench_cfg(shards)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("durable row {label:?} skipped: {e}");
+                return;
+            }
+        };
+        let mut rng = Pcg64::new(9);
+        let t0 = Instant::now();
+        if batch <= 1 {
+            for _ in 0..total {
+                store
+                    .update(rng.gen_range(n1) as usize, rng.gen_range(n1) as usize, 1.0)
+                    .expect("durable update");
+            }
+        } else {
+            let mut sent = 0usize;
+            while sent < total {
+                let n = batch.min(total - sent);
+                let items: Vec<(usize, usize, f64)> = (0..n)
+                    .map(|_| {
+                        (rng.gen_range(n1) as usize, rng.gen_range(n1) as usize, 1.0)
+                    })
+                    .collect();
+                store.update_batch(&items).expect("durable batch");
+                sent += n;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let queries = 2_000;
+        let mut lat_ns = Vec::with_capacity(queries);
+        for _ in 0..queries {
+            let (i, j) = (rng.gen_range(n1) as usize, rng.gen_range(n1) as usize);
+            let q0 = Instant::now();
+            std::hint::black_box(store.point_query(i, j));
+            lat_ns.push(q0.elapsed().as_nanos() as u64);
+        }
+        lat_ns.sort_unstable();
+        rows.push(Row {
+            label,
+            shards,
+            updates: total,
+            updates_per_sec: total as f64 / wall,
+            queries,
+            query_p50_us: percentile_us(&lat_ns, 0.5),
+            query_p99_us: percentile_us(&lat_ns, 0.99),
+        });
+    };
+
+    run("durable per-item".to_string(), 1);
+    for batch in [256usize, 1024] {
+        run(format!("durable batch={batch}"), batch);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+    rows
+}
+
 fn main() {
     let mut rows = sweep_in_process();
     if let Some(tcp) = tcp_loopback_row() {
         rows.push(tcp);
     }
+    rows.extend(durable_rows());
 
     let mut table = Table::new(
         "store throughput/latency vs shard count",
@@ -171,6 +245,15 @@ fn main() {
         ]);
     }
     table.print();
+
+    let per_item = rows.iter().find(|r| r.label == "durable per-item");
+    let batched = rows.iter().find(|r| r.label == "durable batch=256");
+    if let (Some(p), Some(b)) = (per_item, batched) {
+        println!(
+            "\ngroup-commit speedup at batch=256: {:.1}x over per-item durable commits",
+            b.updates_per_sec / p.updates_per_sec
+        );
+    }
 
     let json = Json::obj(vec![(
         "store",

@@ -23,9 +23,10 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench
   serve-demo [--backend xla|rust] [--requests N]\n\
   serve [--addr HOST:PORT] [--shards K] [--window N]\n\
         [--n1 N --n2 N --m1 M --m2 M --d D] [--store-seed S]\n\
-        [--data-dir DIR] [--with-coordinator]\n\
-  store-client <update|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
+        [--data-dir DIR] [--fsync] [--with-coordinator]\n\
+  store-client <update|update-batch|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
+        [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
   bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
         [--quick] [--seed N]\n\
 \n\
@@ -182,6 +183,7 @@ fn cmd_serve(args: &Args) -> i32 {
         addr: args.get_str("addr", "127.0.0.1:7878"),
         store,
         data_dir: args.get("data-dir").map(str::to_string),
+        fsync: args.flag("fsync"),
         with_coordinator: args.flag("with-coordinator"),
         artifacts_dir: artifacts_dir(args),
     };
@@ -230,6 +232,22 @@ fn cmd_store_client(args: &Args) -> i32 {
             let w = args.get_f64("w", 1.0);
             client.update(i, j, w).map(|()| println!("ok: ({i}, {j}) += {w}"))
         }
+        "update-batch" => {
+            let spec = args.get_str("items", "");
+            match parse_batch_items(&spec) {
+                Ok(items) if !items.is_empty() => client
+                    .update_batch(&items)
+                    .map(|()| println!("ok: {} update(s) in one batch", items.len())),
+                Ok(_) => {
+                    eprintln!("update-batch needs --items \"i,j,w;i,j,w;…\"\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
         "query" => {
             let (i, j) = (args.get_usize("i", 0), args.get_usize("j", 0));
             client.query(i, j).map(|est| println!("estimate({i}, {j}) = {est}"))
@@ -259,6 +277,22 @@ fn cmd_store_client(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Parse `"i,j,w;i,j,w;…"` into update triples for the batched RPC.
+fn parse_batch_items(spec: &str) -> Result<Vec<(u32, u32, f64)>, String> {
+    let mut items = Vec::new();
+    for chunk in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        let parts: Vec<&str> = chunk.split(',').map(str::trim).collect();
+        if parts.len() != 3 {
+            return Err(format!("batch item {chunk:?} is not \"i,j,w\""));
+        }
+        let i: u32 = parts[0].parse().map_err(|_| format!("bad row key in {chunk:?}"))?;
+        let j: u32 = parts[1].parse().map_err(|_| format!("bad col key in {chunk:?}"))?;
+        let w: f64 = parts[2].parse().map_err(|_| format!("bad weight in {chunk:?}"))?;
+        items.push((i, j, w));
+    }
+    Ok(items)
 }
 
 fn cmd_bench(args: &Args) -> i32 {

@@ -10,7 +10,11 @@
 //! heavy-hitter guarantees; [`StreamSketch::heavy_hitters`] uses the
 //! marginal estimates to prune the key grid before scanning, and
 //! [`StreamSketch::top_k`] walks rows in marginal order with a bounded
-//! min-heap so neither needs a full n1·n2 pass on skewed streams.
+//! min-heap so neither needs a full n1·n2 pass on skewed streams. The
+//! marginal bound only holds for non-negative workloads, so the sketch
+//! tracks a sticky [`StreamSketch::has_deletions`] flag (set by any
+//! negative-weight update, propagated through merges and the codec) and
+//! routes scans to the dense variants once it is set.
 //!
 //! The sketch is *linear* in the update stream, which is what the
 //! [`crate::store`] subsystem builds on: [`StreamSketch::merge_scaled`]
@@ -50,6 +54,15 @@ pub struct StreamSketch {
     tables: Vec<Vec<f64>>,
     /// total updates processed
     pub updates: u64,
+    /// true once any negative-weight update has been absorbed (directly
+    /// or via merge). The marginal-pruned scans are only sound for
+    /// non-negative streams — a deletion can cancel a row/column
+    /// marginal while a heavy cell survives — so [`StreamSketch::top_k`]
+    /// and [`StreamSketch::heavy_hitters`] fall back to the dense scans
+    /// whenever this is set. Sticky (only [`StreamSketch::clear`]
+    /// resets it): `false` proves the represented stream is
+    /// non-negative, `true` is merely conservative.
+    pub has_deletions: bool,
 }
 
 /// Min-heap entry for [`StreamSketch::top_k`] (ordered by estimate;
@@ -100,6 +113,7 @@ impl StreamSketch {
             cols,
             tables: vec![vec![0.0; m1 * m2]; d],
             updates: 0,
+            has_deletions: false,
         }
     }
 
@@ -116,6 +130,32 @@ impl StreamSketch {
             self.tables[r][b] += self.rows[r].s(i) * self.cols[r].s(j) * w;
         }
         self.updates += 1;
+        if w < 0.0 {
+            self.has_deletions = true;
+        }
+    }
+
+    /// Fused multi-key update: each repeat's hash pair and counter table
+    /// is walked once for the whole batch instead of once per item, so a
+    /// batch costs d table passes rather than `items.len() · d` scattered
+    /// ones. Per table, items land in batch order — exactly the order
+    /// the single-item path would apply them — so the result is
+    /// **bit-identical** to calling [`StreamSketch::update`] per item.
+    pub fn update_batch(&mut self, items: &[(usize, usize, f64)]) {
+        for r in 0..self.d {
+            let row = &self.rows[r];
+            let col = &self.cols[r];
+            let m2 = self.m2;
+            let table = &mut self.tables[r];
+            for &(i, j, w) in items {
+                debug_assert!(i < self.n1 && j < self.n2);
+                table[row.h(i) * m2 + col.h(j)] += row.s(i) * col.s(j) * w;
+            }
+        }
+        self.updates += items.len() as u64;
+        if items.iter().any(|&(_, _, w)| w < 0.0) {
+            self.has_deletions = true;
+        }
     }
 
     /// Point query: median-of-d estimate of the total weight of (i, j).
@@ -268,9 +308,14 @@ impl StreamSketch {
     /// its row and column marginals, so only rows/columns whose estimated
     /// marginal clears `threshold/2` (noise slack) are scanned — on
     /// skewed traffic that is a few candidate rows instead of the whole
-    /// n1×n2 grid. Turnstile streams whose deletions cancel most of a
-    /// marginal should use [`StreamSketch::heavy_hitters_dense`].
+    /// n1×n2 grid. Turnstile streams (any negative-weight update seen:
+    /// [`StreamSketch::has_deletions`]) are routed to the full
+    /// [`StreamSketch::heavy_hitters_dense`] scan automatically, because
+    /// a deletion-cancelled marginal can hide a surviving heavy cell.
     pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        if self.has_deletions {
+            return self.heavy_hitters_dense(threshold);
+        }
         let cut = threshold * MARGINAL_PRUNE_SLACK;
         let rows: Vec<usize> = self
             .row_marginals()
@@ -327,21 +372,58 @@ impl StreamSketch {
     /// streams a cell never exceeds its row marginal) and the scan stops.
     /// On skewed streams this touches a handful of rows, which is what
     /// makes the store's TOPK RPC affordable per call.
+    ///
+    /// The marginal bound only holds for non-negative streams; once any
+    /// deletion has been absorbed ([`StreamSketch::has_deletions`]) the
+    /// scan falls back to [`StreamSketch::top_k_dense`].
     pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
         if k == 0 {
             return Vec::new();
         }
+        if self.has_deletions {
+            return self.top_k_dense(k);
+        }
         let rm = self.row_marginals();
         let mut order: Vec<usize> = (0..self.n1).collect();
         order.sort_by(|&a, &b| rm[b].total_cmp(&rm[a]));
+        self.top_k_scan(k, &order, Some(&rm))
+    }
+
+    /// Unpruned top-k: the full n1·n2 grid through a size-k min-heap,
+    /// no marginal ordering or early exit. Correct for arbitrary
+    /// turnstile streams; same ranking semantics as
+    /// [`StreamSketch::top_k`] (estimate-descending, deterministic
+    /// key tie-break) — both go through the one scan loop in
+    /// [`StreamSketch::top_k_scan`].
+    pub fn top_k_dense(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let order: Vec<usize> = (0..self.n1).collect();
+        self.top_k_scan(k, &order, None)
+    }
+
+    /// The size-k min-heap scan shared by [`StreamSketch::top_k`] and
+    /// [`StreamSketch::top_k_dense`]: visit `rows` in the given order,
+    /// rank every cell. With `bound` (a per-row upper bound on any cell
+    /// estimate, rows sorted bound-descending), the scan stops at the
+    /// first row whose slack-inflated bound cannot beat the k-th best.
+    fn top_k_scan(
+        &self,
+        k: usize,
+        rows: &[usize],
+        bound: Option<&[f64]>,
+    ) -> Vec<(usize, usize, f64)> {
         let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> =
             BinaryHeap::with_capacity(k + 1);
         let mut est = vec![0.0; self.d];
-        for &i in &order {
-            if heap.len() == k {
-                let kth = heap.peek().expect("heap non-empty").0.est;
-                if rm[i] * TOP_K_SLACK < kth {
-                    break;
+        for &i in rows {
+            if let Some(rm) = bound {
+                if heap.len() == k {
+                    let kth = heap.peek().expect("heap non-empty").0.est;
+                    if rm[i] * TOP_K_SLACK < kth {
+                        break;
+                    }
                 }
             }
             for j in 0..self.n2 {
@@ -377,7 +459,11 @@ impl StreamSketch {
     /// `self += a · other`, elementwise over all d tables. With `a = 1`
     /// this is the sketch of the concatenated streams (count sketches
     /// are linear maps — zero accuracy loss); with `a = -1` it deletes a
-    /// substream, which is how the store expires window epochs.
+    /// **previously-added substream**, which is how the store expires
+    /// window epochs. That sub-stream contract is why a negative `a`
+    /// does not set [`StreamSketch::has_deletions`] by itself: removing
+    /// mass that was added leaves the represented stream non-negative if
+    /// it was before. `other`'s own deletion flag always propagates.
     pub fn merge_scaled(&mut self, other: &Self, a: f64) {
         assert!(self.same_family(other), "merge of incompatible stream sketches");
         for (t, o) in self.tables.iter_mut().zip(other.tables.iter()) {
@@ -390,6 +476,7 @@ impl StreamSketch {
         } else {
             self.updates = self.updates.saturating_sub(other.updates);
         }
+        self.has_deletions |= other.has_deletions;
     }
 
     /// `self *= a` (decay weighting). `updates` is left untouched: it
@@ -408,6 +495,7 @@ impl StreamSketch {
             t.fill(0.0);
         }
         self.updates = 0;
+        self.has_deletions = false;
     }
 
     /// Raw counter table of repeat `r` (serialization / diagnostics).
@@ -589,6 +677,94 @@ mod tests {
         for (j, m) in all_cols.iter().enumerate() {
             assert_eq!(m.to_bits(), sk.col_marginal(j).to_bits(), "col {j}");
         }
+    }
+
+    #[test]
+    fn update_batch_bit_identical_to_single_updates() {
+        let mut batched = StreamSketch::new(48, 40, 12, 10, 5, 19);
+        let mut single = StreamSketch::new(48, 40, 12, 10, 5, 19);
+        let mut rng = Pcg64::new(12);
+        let items: Vec<(usize, usize, f64)> = (0..500)
+            .map(|_| {
+                (rng.gen_range(48) as usize, rng.gen_range(40) as usize, rng.normal())
+            })
+            .collect();
+        // split the batch so the fused path also composes across calls
+        batched.update_batch(&items[..123]);
+        batched.update_batch(&items[123..]);
+        batched.update_batch(&[]);
+        for &(i, j, w) in &items {
+            single.update(i, j, w);
+        }
+        assert_eq!(batched.updates, single.updates);
+        assert_eq!(batched.has_deletions, single.has_deletions);
+        for r in 0..5 {
+            assert_eq!(batched.table(r), single.table(r), "table {r}");
+        }
+    }
+
+    #[test]
+    fn deletion_flag_tracks_stream_and_merges() {
+        let mut sk = StreamSketch::new(8, 8, 4, 4, 3, 2);
+        assert!(!sk.has_deletions);
+        sk.update(1, 1, 2.0);
+        assert!(!sk.has_deletions);
+        sk.update(1, 1, -1.0);
+        assert!(sk.has_deletions);
+        // the flag propagates through merges (either direction of mass)
+        let mut clean = StreamSketch::new(8, 8, 4, 4, 3, 2);
+        clean.merge_scaled(&sk, 1.0);
+        assert!(clean.has_deletions);
+        // subtracting a clean sub-stream does not set the flag
+        let mut a = StreamSketch::new(8, 8, 4, 4, 3, 2);
+        let mut b = StreamSketch::new(8, 8, 4, 4, 3, 2);
+        a.update(2, 2, 3.0);
+        b.update(2, 2, 3.0);
+        a.merge_scaled(&b, -1.0);
+        assert!(!a.has_deletions);
+        // clear() resets it (window slots are reused)
+        sk.clear();
+        assert!(!sk.has_deletions);
+        // and the batch path sets it too
+        sk.update_batch(&[(1, 1, 1.0), (2, 2, -2.0)]);
+        assert!(sk.has_deletions);
+    }
+
+    #[test]
+    fn deletion_cancelled_marginal_does_not_hide_heavy_cell() {
+        // Adversarial turnstile stream: (5, 6) carries +300 while a
+        // deletion at (5, 7) drives the *row-5 marginal* negative, so
+        // the marginal-pruned scans would drop row 5 and hide the
+        // surviving heavy cell. Seeds are searched so the test pins a
+        // hash family where that hiding provably happens (negative
+        // marginal, intact point estimate) — the exact regression.
+        let threshold = 200.0;
+        let cut = threshold * MARGINAL_PRUNE_SLACK;
+        let mut chosen = None;
+        for seed in 0..64 {
+            let mut sk = StreamSketch::new(16, 16, 16, 16, 5, seed);
+            sk.update(5, 6, 300.0);
+            sk.update(5, 7, -300.0);
+            let rm = sk.row_marginals()[5];
+            if sk.query(5, 6) >= threshold && rm < 0.0 && rm < cut {
+                chosen = Some(sk);
+                break;
+            }
+        }
+        let sk = chosen.expect("no seed produced a cancelled marginal with a live heavy cell");
+        assert!(sk.has_deletions);
+        let hh = sk.heavy_hitters(threshold);
+        assert!(
+            hh.iter().any(|&(i, j, _)| (i, j) == (5, 6)),
+            "pruned scan hid the heavy cell: {hh:?}"
+        );
+        assert_eq!(hh, sk.heavy_hitters_dense(threshold), "routing must hit the dense scan");
+        let top = sk.top_k(3);
+        assert!(
+            top.iter().any(|&(i, j, _)| (i, j) == (5, 6)),
+            "top-k hid the heavy cell: {top:?}"
+        );
+        assert_eq!(top, sk.top_k_dense(3));
     }
 
     #[test]

@@ -52,14 +52,15 @@ impl StoreClient {
         self.raw_call(&req).map(|_| ())
     }
 
-    /// Ship a whole batch of updates in one frame (bench hot path).
+    /// Ship a whole batch of updates in one frame (the write hot path):
+    /// the server applies it with one WAL group-commit frame — one
+    /// append + flush/fsync for the entire batch — and one shard-lock
+    /// acquisition per destination shard, all-or-nothing on validation.
     pub fn update_batch(&mut self, items: &[(u32, u32, f64)]) -> Result<()> {
         let mut req = vec![op::UPDATE_BATCH];
         codec::put_u32(&mut req, u32::try_from(items.len()).context("batch exceeds u32")?);
         for &(i, j, w) in items {
-            codec::put_u32(&mut req, i);
-            codec::put_u32(&mut req, j);
-            codec::put_f64(&mut req, w);
+            codec::put_update(&mut req, i, j, w);
         }
         self.raw_call(&req).map(|_| ())
     }

@@ -32,6 +32,15 @@ pub fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_bits().to_le_bytes());
 }
 
+/// One `(i, j, w)` update triple — the shared unit of the UPDATE /
+/// UPDATE_BATCH wire bodies and the WAL's update frames, so the client,
+/// server, and log can never drift apart on its layout.
+pub fn put_update(out: &mut Vec<u8>, i: u32, j: u32, w: f64) {
+    put_u32(out, i);
+    put_u32(out, j);
+    put_f64(out, w);
+}
+
 // ---------- reader ----------
 
 /// Bounds-checked cursor over a byte slice. Every take returns a
@@ -87,6 +96,11 @@ impl<'a> Reader<'a> {
         let b = self.take(4)?;
         Ok(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
     }
+
+    /// Inverse of [`put_update`].
+    pub fn update_triple(&mut self) -> Result<(u32, u32, f64)> {
+        Ok((self.u32()?, self.u32()?, self.f64()?))
+    }
 }
 
 // ---------- CRC-32 ----------
@@ -130,12 +144,16 @@ mod tests {
         put_u64(&mut out, u64::MAX - 1);
         put_f64(&mut out, -0.1);
         put_f32(&mut out, 3.5);
+        put_update(&mut out, 3, 9, -2.5);
         let mut rd = Reader::new(&out);
         assert_eq!(rd.u8().unwrap(), 7);
         assert_eq!(rd.u32().unwrap(), 0xDEAD_BEEF);
         assert_eq!(rd.u64().unwrap(), u64::MAX - 1);
         assert_eq!(rd.f64().unwrap().to_bits(), (-0.1f64).to_bits());
         assert_eq!(rd.f32().unwrap(), 3.5);
+        let (i, j, w) = rd.update_triple().unwrap();
+        assert_eq!((i, j), (3, 9));
+        assert_eq!(w.to_bits(), (-2.5f64).to_bits());
         assert!(rd.is_empty());
     }
 

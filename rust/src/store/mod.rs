@@ -22,10 +22,15 @@
 //! Durability is a versioned binary snapshot plus an append-only WAL of
 //! length-prefixed CRC-32-checked frames ([`DurableStore`]); recovery
 //! replays the WAL tail onto the snapshot and tolerates torn tails.
-//! The front-end ([`StoreServer`]) speaks a framed TCP protocol
-//! (UPDATE / QUERY / TOPK / HEAVY / MERGE / SNAPSHOT / ADVANCE_EPOCH /
-//! STATS / BATCH_SKETCH / SHUTDOWN) with a thread per connection and
-//! can reuse the PR-1 coordinator worker pool for batch sketch jobs.
+//! Batched writes **group-commit**: the whole batch is one WAL frame
+//! (one flush — one `sync_data` with fsync on) and one shard-grouped
+//! in-memory apply through the fused multi-key sketch kernel, and the
+//! log lock is not held across the apply, so writers on different
+//! shards run concurrently. The front-end ([`StoreServer`]) speaks a
+//! framed TCP protocol (UPDATE / UPDATE_BATCH / QUERY / TOPK / HEAVY /
+//! MERGE / SNAPSHOT / ADVANCE_EPOCH / STATS / BATCH_SKETCH / SHUTDOWN)
+//! with a thread per connection and can reuse the PR-1 coordinator
+//! worker pool for batch sketch jobs.
 //!
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
 //! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
@@ -37,6 +42,14 @@ pub mod mergeable;
 pub mod server;
 pub mod sharded;
 pub mod wal;
+
+/// One shared cap on a batch of updates, enforced in lockstep at the
+/// RPC boundary ([`server`]), at the durable API
+/// ([`DurableStore::update_batch`] — so an acknowledged batch can never
+/// exceed it), and at WAL decode (so recovery never refuses a frame the
+/// write path accepted; a drift between those two silently drops
+/// acknowledged data).
+pub(crate) const MAX_UPDATE_BATCH: usize = 1 << 20;
 
 pub use client::StoreClient;
 pub use mergeable::MergeableSketch;

@@ -34,10 +34,13 @@ use std::sync::Arc;
 
 /// Request opcodes (first payload byte).
 ///
-/// TOPK and HEAVY run the marginal-pruned scans, which assume a
-/// non-negative update workload (see [`crate::sketch::stream`] — for
-/// turnstile streams with deletions the pruning can miss keys whose row
-/// marginal was cancelled). QUERY is exact under any workload.
+/// TOPK and HEAVY run the marginal-pruned scans for non-negative
+/// workloads; once any deletion has been absorbed the merged sketch
+/// carries its turnstile flag and the scans route themselves to the
+/// dense variants (see [`crate::sketch::stream`]), so both opcodes are
+/// correct under any workload. QUERY is exact either way.
+/// UPDATE_BATCH is the write hot path: one WAL group-commit frame and
+/// one lock acquisition per destination shard for the whole batch.
 pub mod op {
     pub const UPDATE: u8 = 1;
     pub const UPDATE_BATCH: u8 = 2;
@@ -58,8 +61,10 @@ pub const STATUS_ERR: u8 = 1;
 /// Hard cap on a single frame — a hostile length prefix must not be
 /// able to allocate gigabytes.
 const MAX_FRAME: u32 = 64 << 20;
-/// Per-request caps on fan-in sizes.
-const MAX_BATCH_UPDATES: usize = 1 << 20;
+/// Per-request caps on fan-in sizes. The batch cap is the store-wide
+/// one so RPC validation, the durable API, and WAL decode stay in
+/// lockstep.
+const MAX_BATCH_UPDATES: usize = super::MAX_UPDATE_BATCH;
 const MAX_TOPK: usize = 4096;
 const MAX_SKETCH_INPUT: usize = 1 << 22;
 
@@ -95,6 +100,10 @@ pub struct StoreServerConfig {
     pub store: StoreConfig,
     /// snapshot/WAL directory; `None` = in-memory only
     pub data_dir: Option<String>,
+    /// `sync_data` every WAL append (power-loss durability; group
+    /// commit amortizes the sync over a batch). Ignored without
+    /// `data_dir`.
+    pub fsync: bool,
     /// boot the coordinator worker pool for BATCH_SKETCH
     pub with_coordinator: bool,
     /// AOT artifacts for the coordinator backend
@@ -107,6 +116,7 @@ impl Default for StoreServerConfig {
             addr: "127.0.0.1:0".to_string(),
             store: StoreConfig::default(),
             data_dir: None,
+            fsync: false,
             with_coordinator: false,
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
         }
@@ -134,7 +144,7 @@ pub struct StoreServer {
 impl StoreServer {
     pub fn start(cfg: StoreServerConfig) -> Result<Self> {
         let store = match &cfg.data_dir {
-            Some(dir) => DurableStore::open(Path::new(dir), cfg.store.clone())?,
+            Some(dir) => DurableStore::open_with(Path::new(dir), cfg.store.clone(), cfg.fsync)?,
             None => DurableStore::in_memory(cfg.store.clone()),
         };
         let coordinator = if cfg.with_coordinator {
@@ -276,7 +286,8 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
     let mut body = Vec::new();
     match opcode {
         op::UPDATE => {
-            let (i, j, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.f64()?);
+            let (i, j, w) = rd.update_triple()?;
+            let (i, j) = (i as usize, j as usize);
             ensure!(w.is_finite(), "non-finite update weight");
             shared.store.update(i, j, w)?;
         }
@@ -287,7 +298,8 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
             // it: a bad item must not leave a half-applied batch behind
             let mut items = Vec::with_capacity(count);
             for _ in 0..count {
-                let (i, j, w) = (rd.u32()? as usize, rd.u32()? as usize, rd.f64()?);
+                let (i, j, w) = rd.update_triple()?;
+                let (i, j) = (i as usize, j as usize);
                 ensure!(
                     i < cfg.n1 && j < cfg.n2,
                     "batch key ({i}, {j}) outside universe {}x{}",
@@ -297,9 +309,9 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
                 ensure!(w.is_finite(), "non-finite update weight in batch");
                 items.push((i, j, w));
             }
-            for (i, j, w) in items {
-                shared.store.update(i, j, w)?;
-            }
+            // group commit + shard-grouped apply: one WAL frame and one
+            // lock acquisition per destination shard for the whole batch
+            shared.store.update_batch(&items)?;
             codec::put_u32(&mut body, count as u32);
         }
         op::QUERY => {
@@ -391,6 +403,7 @@ mod tests {
             addr: "127.0.0.1:0".to_string(),
             store: test_cfg(),
             data_dir,
+            fsync: false,
             with_coordinator: false,
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
         }) {
@@ -514,6 +527,8 @@ mod tests {
             client.update(10, 20, 6.0).unwrap();
             client.snapshot().unwrap();
             client.update(11, 21, 4.0).unwrap(); // only in the WAL
+            // a batch after the snapshot: one group-commit WAL frame
+            client.update_batch(&[(12, 22, 2.0), (12, 22, 1.5)]).unwrap();
             server.shutdown();
         }
         {
@@ -521,6 +536,7 @@ mod tests {
             let mut client = StoreClient::connect(server.local_addr()).unwrap();
             assert_eq!(client.query(10, 20).unwrap(), 6.0);
             assert_eq!(client.query(11, 21).unwrap(), 4.0);
+            assert_eq!(client.query(12, 22).unwrap(), 3.5, "batched WAL frame lost");
             server.shutdown();
         }
         let _ = std::fs::remove_dir_all(&dir);

@@ -27,7 +27,7 @@ use crate::rng::SplitMix64;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 /// Geometry + topology of a store. Two stores (or a store and a remote
 /// sketch) interoperate iff the sketch-identity fields (`n1, n2, m1,
@@ -112,6 +112,12 @@ impl StoreConfig {
     }
 }
 
+/// Optimistic cross-shard reads ([`ShardedStore::point_query`],
+/// [`ShardedStore::stats`]) retry this many epoch-validation collisions
+/// before falling back to taking every shard lock — bounding reader
+/// latency even under a rotation storm.
+const EPOCH_RETRY_LIMIT: usize = 8;
+
 /// Point-in-time counters for STATS / monitoring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StoreStats {
@@ -190,11 +196,93 @@ impl ShardedStore {
         sh.total.update(i, j, w);
     }
 
+    /// Apply a whole batch with one lock acquisition per destination
+    /// shard instead of one per item: items are grouped by
+    /// [`ShardedStore::shard_of`] (stable — per-shard arrival order is
+    /// preserved), then each shard's run goes through the fused
+    /// [`StreamSketch::update_batch`] kernel on its current epoch slot
+    /// and total. Bit-identical to per-item [`ShardedStore::update`]
+    /// calls in batch order: grouping only reorders *across* shards,
+    /// whose tables are disjoint.
+    ///
+    /// The batch is not atomic across shards — a concurrent cross-shard
+    /// reader can see one shard's run applied and another's not, exactly
+    /// as it could between individual updates. Batches no larger than
+    /// the shard count skip the grouping and take the per-item path.
+    pub fn update_batch(&self, items: &[(usize, usize, f64)]) {
+        let k = self.cfg.shards;
+        // tiny batches: grouping overhead rivals the saved lock
+        // round-trips, so just take the per-item path (bit-identical by
+        // definition)
+        if items.len() <= k {
+            for &(i, j, w) in items {
+                self.update(i, j, w);
+            }
+            return;
+        }
+        // counting-sort by destination shard: one flat buffer plus
+        // exact-sized offset tables, no per-shard Vec growth on the
+        // write hot path
+        let mut dests = Vec::with_capacity(items.len());
+        let mut counts = vec![0usize; k];
+        for &(i, j, _) in items {
+            assert!(
+                i < self.cfg.n1 && j < self.cfg.n2,
+                "key ({i}, {j}) outside universe {}x{}",
+                self.cfg.n1,
+                self.cfg.n2
+            );
+            let s = self.shard_of(i, j);
+            dests.push(s);
+            counts[s] += 1;
+        }
+        let mut starts = vec![0usize; k + 1];
+        for s in 0..k {
+            starts[s + 1] = starts[s] + counts[s];
+        }
+        // stable fill: per-shard arrival order is preserved
+        let mut grouped: Vec<(usize, usize, f64)> = vec![(0, 0, 0.0); items.len()];
+        let mut fill = starts[..k].to_vec();
+        for (&s, &item) in dests.iter().zip(items.iter()) {
+            grouped[fill[s]] = item;
+            fill[s] += 1;
+        }
+        for s in 0..k {
+            let group = &grouped[starts[s]..starts[s + 1]];
+            if group.is_empty() {
+                continue;
+            }
+            let mut guard = self.shards[s].lock().expect("shard lock");
+            let sh = &mut *guard;
+            sh.ring[sh.cur].update_batch(group);
+            sh.total.update_batch(group);
+        }
+    }
+
+    /// Every shard lock, acquired in index order — the one order every
+    /// cross-shard operation (epoch rotation, merged scans, snapshot
+    /// encoding) must use, so none of them can deadlock against another
+    /// and none can observe shard 0 post-rotation next to shard 1
+    /// pre-rotation (the torn multi-shard read).
+    fn lock_all(&self) -> Vec<MutexGuard<'_, Shard>> {
+        self.shards.iter().map(|shm| shm.lock().expect("shard lock")).collect()
+    }
+
     /// Fan-out point query: raw bucket counters summed across shard
     /// totals, signs applied once, one median at the end. Bit-identical
     /// (for exactly-representable weights) to querying the merged
     /// sketch — summing *signed* estimates instead would flip signed
     /// zeros on zero-sum buckets split across shards.
+    ///
+    /// The fan-out locks shards one at a time (queries stay concurrent
+    /// with writers on other shards), which a concurrent
+    /// [`ShardedStore::advance_epoch`] could tear — shard 0 read
+    /// pre-rotation, shard 1 post. Rotation bumps the epoch counter
+    /// *while holding every shard lock*, so an unchanged epoch across
+    /// the fan-out proves no rotation interleaved; on a change the
+    /// cheap fan-out retries (single-shard updates commute and need no
+    /// guard), and after [`EPOCH_RETRY_LIMIT`] collisions it takes all
+    /// shard locks instead so a rotation storm cannot starve readers.
     pub fn point_query(&self, i: usize, j: usize) -> f64 {
         assert!(
             i < self.cfg.n1 && j < self.cfg.n2,
@@ -203,36 +291,53 @@ impl ShardedStore {
             self.cfg.n2
         );
         let mut acc = vec![0.0; self.cfg.d];
-        for shm in &self.shards {
-            shm.lock().expect("shard lock").total.accumulate_raw(i, j, &mut acc);
+        for _ in 0..EPOCH_RETRY_LIMIT {
+            let e0 = self.epoch();
+            acc.fill(0.0);
+            for shm in &self.shards {
+                shm.lock().expect("shard lock").total.accumulate_raw(i, j, &mut acc);
+            }
+            if self.epoch() == e0 {
+                return self.probe.finalize_estimates(i, j, &mut acc);
+            }
+        }
+        // rotation storm: fall back to one consistent fully-locked read
+        let guards = self.lock_all();
+        acc.fill(0.0);
+        for sh in &guards {
+            sh.total.accumulate_raw(i, j, &mut acc);
         }
         self.probe.finalize_estimates(i, j, &mut acc)
     }
 
     /// Merge every shard's live window into one sketch (scans,
-    /// replication hand-off, MERGE-RPC export).
+    /// replication hand-off, MERGE-RPC export). Holds every shard lock
+    /// (index order) for the duration, so the result is one consistent
+    /// instant — never a mix of pre- and post-rotation shards.
     pub fn merged(&self) -> StreamSketch {
+        let guards = self.lock_all();
         let mut out = self.cfg.fresh_sketch();
-        for shm in &self.shards {
-            out.merge_scaled(&shm.lock().expect("shard lock").total, 1.0);
+        for sh in &guards {
+            out.merge_scaled(&sh.total, 1.0);
         }
         out
     }
 
     /// The k heaviest keys in the live window (merged scan).
     ///
-    /// Uses the marginal-pruned scan, which assumes a non-negative
-    /// workload (the store's traffic use case; window expiry does not
-    /// break this — it only removes mass that was added). Turnstile
-    /// streams whose *deletions* can cancel a row's marginal while a
-    /// heavy cell survives should scan `merged().heavy_hitters_dense`
-    /// in-process instead; point queries are exact either way.
+    /// Uses the marginal-pruned scan for non-negative workloads (the
+    /// store's traffic use case; window expiry does not break this — it
+    /// only removes mass that was added). Once any shard has absorbed a
+    /// deletion, the merged sketch carries
+    /// [`StreamSketch::has_deletions`] and the scan routes itself to the
+    /// dense variant, so turnstile streams get correct answers without
+    /// caller intervention; point queries are exact either way.
     pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
         self.merged().top_k(k)
     }
 
     /// All keys whose windowed weight clears `threshold` (merged scan).
-    /// Same non-negative-workload assumption as [`ShardedStore::top_k`].
+    /// Same pruned-vs-dense routing as [`ShardedStore::top_k`].
     pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
         self.merged().heavy_hitters(threshold)
     }
@@ -261,14 +366,15 @@ impl ShardedStore {
     /// Slide the window one epoch: in every shard the expiring slot is
     /// subtracted out of the running total and cleared for reuse.
     ///
-    /// Shards rotate under their own locks, so concurrent updates may
-    /// straddle the boundary (land in the old epoch on one shard and
-    /// the new on another); per-key ordering is still serialized by the
-    /// owning shard's lock.
+    /// All shard locks are held (acquired in index order) while the
+    /// rings rotate and the epoch counter bumps, so cross-shard readers
+    /// ([`ShardedStore::merged`], [`ShardedStore::encode_into`]) see
+    /// every shard pre-rotation or every shard post-rotation — never a
+    /// torn mix. Point updates still only contend on their own shard.
     pub fn advance_epoch(&self) {
-        for shm in &self.shards {
-            let mut guard = shm.lock().expect("shard lock");
-            let sh = &mut *guard;
+        let mut guards = self.lock_all();
+        for guard in guards.iter_mut() {
+            let sh = &mut **guard;
             let next = (sh.cur + 1) % self.cfg.window;
             // expiring slot leaves the total by subtraction (linearity)
             let (total, expiring) = (&mut sh.total, &sh.ring[next]);
@@ -276,6 +382,8 @@ impl ShardedStore {
             sh.ring[next].clear();
             sh.cur = next;
         }
+        // bumped while the locks are still held, so epoch and cursors
+        // move together for any holder of all the locks
         self.epoch.fetch_add(1, Ordering::SeqCst);
     }
 
@@ -285,29 +393,48 @@ impl ShardedStore {
     }
 
     /// Updates currently inside the live window (expired epochs are
-    /// subtracted out of this count too).
+    /// subtracted out of this count too). Epoch-validated via
+    /// [`ShardedStore::stats`], so the sum never mixes pre- and
+    /// post-rotation shards.
     pub fn updates(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|shm| shm.lock().expect("shard lock").total.updates)
-            .sum()
+        self.stats().updates
     }
 
+    /// Epoch-validated like [`ShardedStore::point_query`]: the count is
+    /// retried while rotations interleave with the per-shard sums, with
+    /// the same bounded fall-back to a fully-locked read.
     pub fn stats(&self) -> StoreStats {
-        StoreStats {
+        let mk = |epoch: u64, updates: u64| StoreStats {
             shards: self.cfg.shards,
             window: self.cfg.window,
-            epoch: self.epoch(),
-            updates: self.updates(),
+            epoch,
+            updates,
+        };
+        for _ in 0..EPOCH_RETRY_LIMIT {
+            let e0 = self.epoch();
+            let updates = self
+                .shards
+                .iter()
+                .map(|shm| shm.lock().expect("shard lock").total.updates)
+                .sum();
+            if self.epoch() == e0 {
+                return mk(e0, updates);
+            }
         }
+        let guards = self.lock_all();
+        mk(self.epoch(), guards.iter().map(|sh| sh.total.updates).sum())
     }
 
     /// Serialize config + every shard's ring/cursor/total (snapshots).
+    /// Takes every shard lock up front (index order), so the encoded
+    /// image is one instant of the whole store — a concurrent
+    /// [`ShardedStore::advance_epoch`] lands entirely before or entirely
+    /// after it, never halfway through the shards.
     pub(crate) fn encode_into(&self, out: &mut Vec<u8>) {
+        let guards = self.lock_all();
         self.cfg.encode(out);
         codec::put_u64(out, self.epoch());
-        for shm in &self.shards {
-            let sh = shm.lock().expect("shard lock");
+        for sh in &guards {
             codec::put_u32(out, sh.cur as u32);
             for sk in &sh.ring {
                 sk.encode(out);
@@ -530,14 +657,148 @@ mod tests {
         assert_eq!(got.point_query(1, 2).to_bits(), store.point_query(1, 2).to_bits());
     }
 
+    /// Byte offset of the first shard's epoch cursor in an
+    /// [`ShardedStore::encode_into`] image, computed from the codec
+    /// itself (config encoding + the u64 epoch stamp) so a config-format
+    /// change moves the tests with it instead of silently neutering them.
+    fn cursor_base(cfg: &StoreConfig) -> usize {
+        let mut hdr = Vec::new();
+        cfg.encode(&mut hdr);
+        codec::put_u64(&mut hdr, 0);
+        hdr.len()
+    }
+
+    /// Encoded length of one sketch of this family (fixed: the tables
+    /// are dense, so empty and full sketches encode identically long).
+    fn sketch_encoded_len(cfg: &StoreConfig) -> usize {
+        let mut b = Vec::new();
+        cfg.fresh_sketch().encode(&mut b);
+        b.len()
+    }
+
+    #[test]
+    fn update_batch_bit_identical_to_per_item_updates() {
+        let cfg = small_cfg(4, 2);
+        let batched = ShardedStore::new(cfg.clone());
+        let single = ShardedStore::new(cfg.clone());
+        let mut rng = Pcg64::new(13);
+        let items: Vec<(usize, usize, f64)> = (0..700)
+            .map(|_| {
+                (rng.gen_range(48) as usize, rng.gen_range(40) as usize, int_weight(&mut rng))
+            })
+            .collect();
+        batched.update_batch(&items[..350]);
+        batched.update_batch(&[]);
+        batched.update_batch(&items[350..]);
+        for &(i, j, w) in &items {
+            single.update(i, j, w);
+        }
+        assert_eq!(batched.updates(), single.updates());
+        for i in 0..48 {
+            for j in 0..40 {
+                assert_eq!(
+                    batched.point_query(i, j).to_bits(),
+                    single.point_query(i, j).to_bits(),
+                    "key ({i}, {j})"
+                );
+            }
+        }
+        // and the batch respects the current epoch slot: advancing the
+        // window past it expires batched mass exactly like single mass
+        batched.advance_epoch();
+        batched.advance_epoch();
+        single.advance_epoch();
+        single.advance_epoch();
+        assert_eq!(batched.updates(), single.updates());
+        assert_eq!(batched.updates(), 0);
+    }
+
+    #[test]
+    fn concurrent_advance_and_reads_see_consistent_state() {
+        // Epoch rotation touches every shard; per-shard locking could
+        // let a cross-shard reader capture shard 0 post-rotation and
+        // shard 3 pre-rotation (a torn multi-shard read). Invariants
+        // hammered here, all of which only hold for reads of one
+        // consistent instant:
+        // - encode_into: all shards' epoch cursors are identical (they
+        //   start at 0 and only advance_epoch moves them, in lockstep);
+        // - updates()/stats(): one preloaded update per shard, window 3
+        //   → the live count is K before the preload epoch expires and
+        //   0 after, never a partial sum in between;
+        // - point_query: each preloaded key answers its pre-expiry
+        //   estimate or 0.0, bit-exactly, never a mix.
+        let cfg = small_cfg(4, 3);
+        let store = ShardedStore::new(cfg.clone());
+        // one weight-1 key per shard (seed 77 routing covers all four)
+        let mut keys: Vec<Option<(usize, usize)>> = vec![None; cfg.shards];
+        for i in 0..cfg.n1 {
+            for j in 0..cfg.n2 {
+                let s = store.shard_of(i, j);
+                if keys[s].is_none() {
+                    keys[s] = Some((i, j));
+                    store.update(i, j, 1.0);
+                }
+            }
+        }
+        let keys: Vec<(usize, usize)> = keys.into_iter().map(|k| k.unwrap()).collect();
+        let pre: Vec<u64> =
+            keys.iter().map(|&(i, j)| store.point_query(i, j).to_bits()).collect();
+        let preloaded = cfg.shards as u64;
+
+        let base = cursor_base(&cfg);
+        // per shard: u32 cursor + window ring sketches + the total
+        let stride = 4 + (cfg.window + 1) * sketch_encoded_len(&cfg);
+        std::thread::scope(|scope| {
+            let advancer = scope.spawn(|| {
+                for _ in 0..150 {
+                    store.advance_epoch();
+                }
+            });
+            for _ in 0..150 {
+                let mut bytes = Vec::new();
+                store.encode_into(&mut bytes);
+                let cursors: Vec<u32> = (0..cfg.shards)
+                    .map(|s| {
+                        let off = base + s * stride;
+                        u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+                    })
+                    .collect();
+                assert!(
+                    cursors.iter().all(|&c| c == cursors[0]),
+                    "torn multi-shard encode: cursors {cursors:?}"
+                );
+                let u = store.updates();
+                assert!(
+                    u == preloaded || u == 0,
+                    "torn multi-shard count: {u} (want {preloaded} or 0)"
+                );
+                let st = store.stats();
+                assert!(st.updates == preloaded || st.updates == 0, "torn stats: {st:?}");
+                for (&(i, j), &want) in keys.iter().zip(pre.iter()) {
+                    let got = store.point_query(i, j);
+                    // `== 0.0` (not bits): post-expiry estimates may be
+                    // a signed zero depending on the key's sign product
+                    assert!(
+                        got.to_bits() == want || got == 0.0,
+                        "torn point query at ({i}, {j}): {got}"
+                    );
+                }
+            }
+            advancer.join().unwrap();
+        });
+        assert_eq!(store.epoch(), 150);
+        assert_eq!(store.updates(), 0, "window 3 expired the preload long ago");
+    }
+
     #[test]
     fn decode_rejects_corrupt_cursor() {
-        let store = ShardedStore::new(small_cfg(2, 2));
+        let cfg = small_cfg(2, 2);
+        let store = ShardedStore::new(cfg.clone());
         let mut bytes = Vec::new();
         store.encode_into(&mut bytes);
-        // config is 7 u32 + 1 u64 = 36 bytes, epoch u64 = 8; first
-        // shard's cursor starts at byte 44 — point it past the window
-        bytes[44] = 9;
+        // first shard's cursor sits right after the config + epoch
+        // header; point it past the window
+        bytes[cursor_base(&cfg)] = 9;
         assert!(ShardedStore::decode_from(&mut Reader::new(&bytes)).is_err());
     }
 }

@@ -7,6 +7,7 @@
 //! wal.bin       = "HOCSWAL0" | u32 version | u64 generation | frame*
 //! frame         = u32 payload_len | u32 crc32(payload) | payload
 //! payload       = u8 tag | fields           (see WalRecord)
+//! batch payload = u8 4 | u32 count | (u32 i | u32 j | f64 w)*   (group commit)
 //! ```
 //!
 //! Everything is little-endian (see [`super::codec`]). Writes append a
@@ -16,17 +17,50 @@
 //! then immediately re-snapshots and truncates the WAL, so the torn
 //! tail is healed rather than appended after.
 //!
-//! [`DurableStore::snapshot`] replaces `snapshot.bin` atomically
-//! (tmp-file + rename) and truncates the WAL under the same log lock
-//! that writers append under, so no record can fall between the
-//! snapshot image and the fresh log.
+//! **Group commit.** A whole batch of updates is one
+//! [`WalRecord::UpdateBatch`] frame: one encode, one append, one flush
+//! (one `sync_data` when fsync is on) for the entire batch, instead of
+//! per item. The in-memory apply then goes through the shard-grouped
+//! [`ShardedStore::update_batch`], so the WAL cost and the lock cost
+//! both amortize over the batch.
 //!
-//! The **generation** stamp makes the rename → truncate pair safe: a
+//! **Concurrency.** The log mutex is held only for the append itself —
+//! not across the in-memory apply — so writers on different shards
+//! proceed in parallel after serializing briefly on the log. What keeps
+//! that safe is a commit *gate* (an `RwLock<()>`): every
+//! append→apply pair runs under a shared guard, while
+//! [`DurableStore::snapshot`] and [`DurableStore::advance_epoch`] take
+//! it exclusively. Exclusive acquisition therefore waits until every
+//! appended record has also been applied (so a snapshot image always
+//! contains exactly the records the truncated WAL held), and epoch
+//! rotation — which does not commute with updates — keeps the same
+//! relative order in the WAL as in the store. Update/merge records
+//! commute with each other (counter addition), so their apply order may
+//! differ from WAL order without changing any state reachable from
+//! either (bit-exact for exactly-representable weights, the store's
+//! standing contract).
+//!
+//! **Durability levels.** `flush` only moves bytes into the OS page
+//! cache: it survives a process crash, **not** a power failure or
+//! kernel panic. With `fsync` enabled ([`DurableStore::open_with`], the
+//! server's `--fsync` flag) every append also calls `sync_data`, so an
+//! acknowledged write survives power loss at the cost of one disk sync
+//! per frame — which is exactly why group commit matters: the sync
+//! amortizes over the whole batch.
+//!
+//! **Rotation safety.** [`DurableStore::snapshot`] replaces
+//! `snapshot.bin` atomically (tmp-file + rename) and then recreates the
+//! WAL, also via tmp-file + rename so a crash mid-header can never
+//! leave a truncated `wal.bin` that the next open refuses to parse.
+//! The **generation** stamp makes the rename → recreate pair safe: the
 //! new snapshot (which already incorporates every logged record) is
 //! written with generation g+1, and only then is the WAL recreated with
 //! g+1. If a crash lands between the two, recovery sees a snapshot at
 //! g+1 next to a WAL still at g and skips the replay — without the
-//! stamp those records would be applied a second time.
+//! stamp those records would be applied a second time. If recreating
+//! the WAL *fails*, the store **fail-stops** writes: appending to the
+//! stale-generation log would be acknowledged and then silently skipped
+//! by that same recovery rule, which is data loss. Reads keep working.
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
@@ -37,13 +71,21 @@ use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
 const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
-const FORMAT_VERSION: u32 = 1;
+/// Bumped to 2 when the embedded [`StreamSketch`] encoding grew its
+/// turnstile flags byte (group-commit PR); v1 files are rejected with a
+/// version error rather than misparsed.
+const FORMAT_VERSION: u32 = 2;
 /// magic + version + generation
 const HEADER_LEN: usize = 20;
+/// Cap on a batch frame's item count, shared with the server's
+/// per-request cap ([`super::MAX_UPDATE_BATCH`]) so the write path can
+/// never acknowledge a frame that decode would refuse; it also keeps a
+/// corrupt length from driving a huge allocation.
+const MAX_WAL_BATCH: usize = super::MAX_UPDATE_BATCH;
 
 pub const SNAPSHOT_FILE: &str = "snapshot.bin";
 pub const WAL_FILE: &str = "wal.bin";
@@ -54,65 +96,149 @@ pub enum WalRecord {
     Update { i: u32, j: u32, w: f64 },
     AdvanceEpoch,
     MergeSketch(StreamSketch),
+    /// Group commit: a whole client batch in one frame.
+    UpdateBatch(Vec<(u32, u32, f64)>),
 }
 
 const TAG_UPDATE: u8 = 1;
 const TAG_ADVANCE: u8 = 2;
 const TAG_MERGE: u8 = 3;
+const TAG_UPDATE_BATCH: u8 = 4;
 
 impl WalRecord {
     fn encode(&self, out: &mut Vec<u8>) {
         match self {
             WalRecord::Update { i, j, w } => {
                 codec::put_u8(out, TAG_UPDATE);
-                codec::put_u32(out, *i);
-                codec::put_u32(out, *j);
-                codec::put_f64(out, *w);
+                codec::put_update(out, *i, *j, *w);
             }
             WalRecord::AdvanceEpoch => codec::put_u8(out, TAG_ADVANCE),
             WalRecord::MergeSketch(sk) => {
                 codec::put_u8(out, TAG_MERGE);
                 sk.encode(out);
             }
+            WalRecord::UpdateBatch(items) => {
+                codec::put_u8(out, TAG_UPDATE_BATCH);
+                codec::put_u32(
+                    out,
+                    u32::try_from(items.len()).expect("WAL batch too large"),
+                );
+                for &(i, j, w) in items {
+                    codec::put_update(out, i, j, w);
+                }
+            }
+        }
+    }
+
+    /// Encode an [`WalRecord::UpdateBatch`] payload straight from the
+    /// caller's slice — the write hot path must not copy the whole
+    /// batch into an owned record first. Byte-identical to encoding
+    /// `WalRecord::UpdateBatch` of the same (bounds-checked) items.
+    fn encode_update_batch(out: &mut Vec<u8>, items: &[(usize, usize, f64)]) {
+        codec::put_u8(out, TAG_UPDATE_BATCH);
+        codec::put_u32(out, u32::try_from(items.len()).expect("WAL batch too large"));
+        for &(i, j, w) in items {
+            codec::put_update(out, i as u32, j as u32, w);
         }
     }
 
     fn decode(rd: &mut Reader<'_>) -> Result<Self> {
         match rd.u8()? {
-            TAG_UPDATE => Ok(WalRecord::Update { i: rd.u32()?, j: rd.u32()?, w: rd.f64()? }),
+            TAG_UPDATE => {
+                let (i, j, w) = rd.update_triple()?;
+                Ok(WalRecord::Update { i, j, w })
+            }
             TAG_ADVANCE => Ok(WalRecord::AdvanceEpoch),
             TAG_MERGE => Ok(WalRecord::MergeSketch(StreamSketch::decode(rd)?)),
+            TAG_UPDATE_BATCH => {
+                let count = rd.u32()? as usize;
+                ensure!(count <= MAX_WAL_BATCH, "WAL batch of {count} updates exceeds cap");
+                let mut items = Vec::with_capacity(count);
+                for _ in 0..count {
+                    items.push(rd.update_triple()?);
+                }
+                Ok(WalRecord::UpdateBatch(items))
+            }
             other => bail!("unknown WAL record tag {other}"),
         }
     }
 }
 
-/// Append-only frame writer.
+/// Append-only frame writer. `sync` upgrades the per-append flush to a
+/// `sync_data`, trading throughput for power-loss durability.
 struct WalWriter {
     file: File,
+    sync: bool,
+    /// bytes known durable-intended: header + every fully-acknowledged
+    /// frame. A failed append truncates back to this length (best
+    /// effort, followed by a best-effort sync) so a frame that landed
+    /// in the page cache but whose flush/sync errored — a NACKed write
+    /// — does not replay on recovery. An errored commit is inherently
+    /// ambiguous: if the device also refuses the truncation, or power
+    /// is lost before it persists, the NACKed frame can still resurface.
+    committed_len: u64,
 }
 
 impl WalWriter {
-    /// Create (truncating any previous log) and write the header,
-    /// stamped with the generation of the snapshot it extends.
-    fn create(path: &Path, generation: u64) -> Result<Self> {
-        let mut file = File::create(path).with_context(|| format!("creating WAL {path:?}"))?;
+    /// Create the new log **atomically** (tmp-file + rename) and write
+    /// the header, stamped with the generation of the snapshot it
+    /// extends. The rename means a crash mid-header can never leave a
+    /// truncated `wal.bin` behind — the old log survives intact until
+    /// the new one is fully formed.
+    fn create(path: &Path, generation: u64, sync: bool) -> Result<Self> {
+        let tmp = path.with_extension("tmp");
+        let mut file =
+            File::create(&tmp).with_context(|| format!("creating WAL tmp {tmp:?}"))?;
         file.write_all(WAL_MAGIC)?;
         file.write_all(&FORMAT_VERSION.to_le_bytes())?;
         file.write_all(&generation.to_le_bytes())?;
         file.flush()?;
-        Ok(Self { file })
+        if sync {
+            file.sync_data().context("syncing new WAL header")?;
+        }
+        fs::rename(&tmp, path).with_context(|| format!("installing WAL {path:?}"))?;
+        if sync {
+            // the rename itself must survive power loss too; an error
+            // here propagates, which the rotation path turns into a
+            // fail-stop — acknowledging writes into a WAL whose install
+            // may not be durable would re-open the data-loss window
+            if let Some(parent) = path.parent() {
+                File::open(parent)
+                    .and_then(|d| d.sync_all())
+                    .with_context(|| format!("syncing {parent:?} after WAL install"))?;
+            }
+        }
+        Ok(Self { file, sync, committed_len: HEADER_LEN as u64 })
     }
 
-    fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        let mut payload = Vec::new();
-        rec.encode(&mut payload);
+    /// Frame (length + CRC) and persist one record payload.
+    fn append_payload(&mut self, payload: &[u8]) -> Result<()> {
         let mut frame = Vec::with_capacity(payload.len() + 8);
         codec::put_u32(&mut frame, u32::try_from(payload.len()).expect("WAL record too large"));
-        codec::put_u32(&mut frame, codec::crc32(&payload));
-        frame.extend_from_slice(&payload);
-        self.file.write_all(&frame)?;
+        codec::put_u32(&mut frame, codec::crc32(payload));
+        frame.extend_from_slice(payload);
+        if let Err(e) = self.append_frame(&frame) {
+            // the frame may sit complete in the page cache (or on disk,
+            // in sync mode) even though the caller gets an error —
+            // truncate it back out and try to persist the truncation so
+            // the NACKed write does not replay on recovery. Best effort:
+            // the caller fail-stops either way, and see committed_len
+            // for the residual ambiguity of an errored commit.
+            if self.file.set_len(self.committed_len).is_ok() {
+                let _ = self.file.sync_data();
+            }
+            return Err(e);
+        }
+        self.committed_len += frame.len() as u64;
+        Ok(())
+    }
+
+    fn append_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.file.write_all(frame)?;
         self.file.flush()?;
+        if self.sync {
+            self.file.sync_data().context("syncing WAL append")?;
+        }
         Ok(())
     }
 }
@@ -154,13 +280,28 @@ fn read_wal(path: &Path) -> Result<(u64, Vec<WalRecord>)> {
 /// A [`ShardedStore`] with optional snapshot/WAL durability. All write
 /// paths log first, then mutate; `log == None` is a purely in-memory
 /// store with identical semantics and no I/O.
+///
+/// The log mutex guards only the append; the `commit` gate (shared for
+/// writers, exclusive for snapshot / epoch rotation) is what makes the
+/// append→apply pair atomic *relative to those two* without serializing
+/// writers against each other — see the module docs.
 pub struct DurableStore {
     store: ShardedStore,
-    log: Option<Mutex<WalWriter>>,
+    /// `None` inside the mutex = writes are fail-stopped after a failed
+    /// WAL rotation (see [`DurableStore::snapshot`]).
+    log: Option<Mutex<Option<WalWriter>>>,
+    /// shared by every append→apply pair, exclusive for snapshot and
+    /// epoch rotation. `std`'s futex-based `RwLock` (Linux) blocks new
+    /// readers once a writer waits, so sustained update traffic cannot
+    /// starve snapshot/rotation; platforms with reader-preferring locks
+    /// would need a fairness shim here.
+    commit: RwLock<()>,
     dir: Option<PathBuf>,
     /// generation of the current snapshot + WAL pair; bumped by every
-    /// snapshot (only ever touched under the log lock)
+    /// snapshot (only ever touched under the exclusive commit gate)
     generation: AtomicU64,
+    /// `sync_data` on every WAL append (power-loss durability)
+    fsync: bool,
 }
 
 impl DurableStore {
@@ -169,9 +310,17 @@ impl DurableStore {
         Self {
             store: ShardedStore::new(cfg),
             log: None,
+            commit: RwLock::new(()),
             dir: None,
             generation: AtomicU64::new(0),
+            fsync: false,
         }
+    }
+
+    /// [`DurableStore::open_with`] without fsync: appends are flushed
+    /// (process-crash safe) but not synced (not power-loss safe).
+    pub fn open(dir: &Path, cfg: StoreConfig) -> Result<Self> {
+        Self::open_with(dir, cfg, false)
     }
 
     /// Open or create a durable store under `dir`: load the snapshot if
@@ -182,7 +331,12 @@ impl DurableStore {
     /// snapshot and truncate the WAL (healing any torn tail). An
     /// existing store must match `cfg` — silently changing sketch
     /// geometry would corrupt every merge invariant.
-    pub fn open(dir: &Path, cfg: StoreConfig) -> Result<Self> {
+    ///
+    /// `fsync = true` makes every WAL append `sync_data`, so
+    /// acknowledged writes survive power loss, not just process
+    /// crashes. Pair it with batched updates: group commit pays one
+    /// sync per batch instead of per item.
+    pub fn open_with(dir: &Path, cfg: StoreConfig, fsync: bool) -> Result<Self> {
         cfg.validate()?;
         fs::create_dir_all(dir).with_context(|| format!("creating store dir {dir:?}"))?;
         let snap_path = dir.join(SNAPSHOT_FILE);
@@ -228,15 +382,51 @@ impl DurableStore {
         let mut ds = Self {
             store,
             log: None,
+            commit: RwLock::new(()),
             dir: Some(dir.to_path_buf()),
             generation: AtomicU64::new(next_generation),
+            fsync,
         };
         // snapshot the replayed state first (at the bumped generation),
         // then start a clean same-generation log: a crash between the
-        // two leaves snapshot g+1 + WAL g, which the next open skips
-        ds.write_snapshot_file()?;
-        ds.log = Some(Mutex::new(WalWriter::create(&wal_path, next_generation)?));
+        // two leaves snapshot g+1 + WAL g, which the next open skips.
+        // No WAL writer exists yet, so either failure side just fails
+        // the open — nothing can be acknowledged against a bad pair.
+        ds.write_snapshot_file().map_err(|e| match e {
+            SnapInstall::NotInstalled(err) | SnapInstall::Installed(err) => err,
+        })?;
+        ds.log =
+            Some(Mutex::new(Some(WalWriter::create(&wal_path, next_generation, fsync)?)));
         Ok(ds)
+    }
+
+    /// Append one record to the live WAL. Errors when writes are
+    /// fail-stopped; an append that itself fails (possibly leaving a
+    /// torn frame mid-log) also fail-stops, because recovery silently
+    /// drops everything after the first bad frame — later appends would
+    /// be acknowledged and then lost.
+    fn append_record(&self, rec: &WalRecord) -> Result<()> {
+        let mut payload = Vec::new();
+        rec.encode(&mut payload);
+        self.append_payload(&payload)
+    }
+
+    /// [`DurableStore::append_record`] for pre-encoded payloads (the
+    /// batch hot path encodes straight from the caller's slice).
+    fn append_payload(&self, payload: &[u8]) -> Result<()> {
+        let log = self.log.as_ref().expect("append requires a durable store");
+        let mut st = log.lock().expect("wal lock");
+        let Some(writer) = st.as_mut() else {
+            bail!(
+                "store is fail-stopped: a WAL write failed and appending to the \
+                 stale log would lose acknowledged writes on recovery"
+            );
+        };
+        if let Err(e) = writer.append_payload(payload) {
+            *st = None;
+            return Err(e.context("WAL append failed; store is now fail-stopped"));
+        }
+        Ok(())
     }
 
     pub fn config(&self) -> &StoreConfig {
@@ -248,7 +438,11 @@ impl DurableStore {
         &self.store
     }
 
-    /// Log (if durable) then apply one update.
+    /// Log (if durable) then apply one update. The log lock is released
+    /// before the apply, so updates bound for different shards only
+    /// serialize on the brief append itself; the shared commit guard
+    /// keeps the append→apply pair atomic relative to snapshot / epoch
+    /// rotation (which take the gate exclusively).
     pub fn update(&self, i: usize, j: usize, w: f64) -> Result<()> {
         let cfg = self.store.config();
         ensure!(
@@ -257,40 +451,83 @@ impl DurableStore {
             cfg.n1,
             cfg.n2
         );
-        match &self.log {
-            Some(log) => {
-                // holding the log lock across the apply serializes the
-                // WAL order with the store order (and with snapshots)
-                let mut lw = log.lock().expect("wal lock");
-                lw.append(&WalRecord::Update { i: i as u32, j: j as u32, w })?;
-                self.store.update(i, j, w);
-            }
-            None => self.store.update(i, j, w),
+        if self.log.is_some() {
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_record(&WalRecord::Update { i: i as u32, j: j as u32, w })?;
+            self.store.update(i, j, w);
+        } else {
+            self.store.update(i, j, w);
         }
         Ok(())
     }
 
+    /// Group commit: the whole batch becomes **one** WAL frame (one
+    /// append, one flush, one `sync_data` when fsync is on) and one
+    /// shard-grouped in-memory apply. Validated up front — a bad key
+    /// fails the entire batch before anything is logged or applied.
+    /// Bit-identical to per-item [`DurableStore::update`] calls, both
+    /// live and after recovery (the frame replays through the same
+    /// [`ShardedStore::update_batch`] kernel).
+    pub fn update_batch(&self, items: &[(usize, usize, f64)]) -> Result<()> {
+        // an oversized batch would encode and acknowledge fine but fail
+        // the decode cap on recovery, silently dropping it (and every
+        // later frame) — reject it up front instead
+        ensure!(
+            items.len() <= MAX_WAL_BATCH,
+            "batch of {} updates exceeds the {MAX_WAL_BATCH}-item cap (split it)",
+            items.len()
+        );
+        let cfg = self.store.config();
+        for &(i, j, _) in items {
+            ensure!(
+                i < cfg.n1 && j < cfg.n2,
+                "batch key ({i}, {j}) outside universe {}x{}",
+                cfg.n1,
+                cfg.n2
+            );
+        }
+        if items.is_empty() {
+            return Ok(());
+        }
+        if self.log.is_some() {
+            // encoded straight from the slice — no owned WalRecord copy
+            // of the batch on the hot path
+            let mut payload = Vec::with_capacity(5 + items.len() * 16);
+            WalRecord::encode_update_batch(&mut payload, items);
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_payload(&payload)?;
+            self.store.update_batch(items);
+        } else {
+            self.store.update_batch(items);
+        }
+        Ok(())
+    }
+
+    /// Epoch rotation takes the commit gate **exclusively**: it does not
+    /// commute with updates, so it must land in the same relative order
+    /// in the WAL as in the store — otherwise recovery could assign a
+    /// straddling update to a different epoch than the live store did.
     pub fn advance_epoch(&self) -> Result<()> {
-        match &self.log {
-            Some(log) => {
-                let mut lw = log.lock().expect("wal lock");
-                lw.append(&WalRecord::AdvanceEpoch)?;
-                self.store.advance_epoch();
-            }
-            None => self.store.advance_epoch(),
+        if self.log.is_some() {
+            let _excl = self.commit.write().expect("commit gate");
+            self.append_record(&WalRecord::AdvanceEpoch)?;
+            self.store.advance_epoch();
+        } else {
+            self.store.advance_epoch();
         }
         Ok(())
     }
 
     pub fn merge_sketch(&self, sk: &StreamSketch) -> Result<()> {
         ensure!(self.store.config().matches(sk), "sketch family does not match this store");
-        match &self.log {
-            Some(log) => {
-                let mut lw = log.lock().expect("wal lock");
-                lw.append(&WalRecord::MergeSketch(sk.clone()))?;
-                self.store.merge_sketch(sk)
-            }
-            None => self.store.merge_sketch(sk),
+        if self.log.is_some() {
+            // merges are counter additions — they commute with updates,
+            // so a shared guard suffices (same as the update paths)
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_record(&WalRecord::MergeSketch(sk.clone()))?;
+            self.store.merge_sketch(sk)
+        } else {
+            self.store.merge_sketch(sk)
         }
     }
 
@@ -316,45 +553,121 @@ impl DurableStore {
         self.store.stats()
     }
 
-    /// Write a fresh snapshot (bumping the generation) and truncate the
+    /// Write a fresh snapshot (bumping the generation) and rotate the
     /// WAL. Errors for in-memory stores.
+    ///
+    /// The exclusive commit gate waits out every in-flight append→apply
+    /// pair and blocks new ones, so the snapshot image contains exactly
+    /// the records the rotated-away WAL held. If the snapshot file write
+    /// fails, nothing rotated: the old WAL (whose generation still
+    /// matches the on-disk snapshot) keeps accepting writes. If the
+    /// snapshot succeeded but recreating the WAL fails, writes
+    /// **fail-stop**: the disk now holds snapshot g+1 next to WAL g,
+    /// and recovery (correctly) skips stale-generation records — so an
+    /// append acknowledged into that stale log would be silently lost.
+    /// Everything acknowledged before the failed rotation is already in
+    /// the g+1 snapshot; reads keep working.
     pub fn snapshot(&self) -> Result<()> {
         let Some(log) = &self.log else {
             bail!("in-memory store has no snapshot directory (start with a data dir)");
         };
-        // the log lock blocks writers, so the snapshot image and the
-        // truncated WAL describe the same instant
-        let mut lw = log.lock().expect("wal lock");
+        let _excl = self.commit.write().expect("commit gate");
+        let mut st = log.lock().expect("wal lock");
         self.generation.fetch_add(1, Ordering::SeqCst);
-        self.write_snapshot_file()?;
+        match self.write_snapshot_file() {
+            Ok(()) => {}
+            Err(SnapInstall::NotInstalled(e)) => {
+                // nothing was renamed: roll the in-memory generation
+                // back so it keeps matching the snapshot + WAL pair on
+                // disk, which is still valid and accepting writes
+                self.generation.fetch_sub(1, Ordering::SeqCst);
+                return Err(e);
+            }
+            Err(SnapInstall::Installed(e)) => {
+                // the g+1 snapshot is installed but its durability is in
+                // doubt and the WAL is still at g — appends there would
+                // be skipped by recovery, so fail-stop
+                *st = None;
+                return Err(e.context(
+                    "snapshot installed but not durably synced; \
+                     fail-stopping writes (reopen the store to recover)",
+                ));
+            }
+        }
         let dir = self.dir.as_ref().expect("durable store has a dir");
-        *lw = WalWriter::create(&dir.join(WAL_FILE), self.generation.load(Ordering::SeqCst))?;
-        Ok(())
+        match WalWriter::create(
+            &dir.join(WAL_FILE),
+            self.generation.load(Ordering::SeqCst),
+            self.fsync,
+        ) {
+            Ok(w) => {
+                *st = Some(w);
+                Ok(())
+            }
+            Err(e) => {
+                *st = None;
+                Err(e.context(
+                    "WAL rotation failed after the snapshot rename; \
+                     fail-stopping writes (reopen the store to recover)",
+                ))
+            }
+        }
     }
 
-    fn write_snapshot_file(&self) -> Result<()> {
+    fn write_snapshot_file(&self) -> std::result::Result<(), SnapInstall> {
         let Some(dir) = &self.dir else {
-            bail!("in-memory store has no snapshot directory");
+            return Err(SnapInstall::NotInstalled(anyhow::anyhow!(
+                "in-memory store has no snapshot directory"
+            )));
         };
-        let mut out = Vec::new();
-        out.extend_from_slice(SNAP_MAGIC);
-        codec::put_u32(&mut out, FORMAT_VERSION);
-        codec::put_u64(&mut out, self.generation.load(Ordering::SeqCst));
-        self.store.encode_into(&mut out);
-        let tmp = dir.join("snapshot.tmp");
-        {
-            let mut f = OpenOptions::new()
-                .write(true)
-                .create(true)
-                .truncate(true)
-                .open(&tmp)
-                .with_context(|| format!("creating {tmp:?}"))?;
-            f.write_all(&out)?;
-            f.flush()?;
+        let pre_install = || -> Result<()> {
+            let mut out = Vec::new();
+            out.extend_from_slice(SNAP_MAGIC);
+            codec::put_u32(&mut out, FORMAT_VERSION);
+            codec::put_u64(&mut out, self.generation.load(Ordering::SeqCst));
+            self.store.encode_into(&mut out);
+            let tmp = dir.join("snapshot.tmp");
+            {
+                let mut f = OpenOptions::new()
+                    .write(true)
+                    .create(true)
+                    .truncate(true)
+                    .open(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?;
+                f.write_all(&out)?;
+                f.flush()?;
+                // in fsync mode the rotation that follows makes this
+                // snapshot the only copy of older records, so its bytes
+                // must hit the platter before the rename installs it
+                if self.fsync {
+                    f.sync_data().context("syncing snapshot")?;
+                }
+            }
+            fs::rename(&tmp, dir.join(SNAPSHOT_FILE))
+                .context("atomically replacing snapshot")?;
+            Ok(())
+        };
+        pre_install().map_err(SnapInstall::NotInstalled)?;
+        if self.fsync {
+            // rename durability: until the directory entry is synced,
+            // power loss can surface the old snapshot next to a newer
+            // WAL — callers must treat a failure here as fail-stop
+            File::open(dir)
+                .and_then(|d| d.sync_all())
+                .context("syncing store dir after snapshot rename")
+                .map_err(SnapInstall::Installed)?;
         }
-        fs::rename(&tmp, dir.join(SNAPSHOT_FILE)).context("atomically replacing snapshot")?;
         Ok(())
     }
+}
+
+/// Which side of the rename a snapshot write failed on: before it the
+/// old snapshot is still installed and the caller may keep writing;
+/// after it the on-disk pair no longer matches the live WAL generation,
+/// so the caller must fail-stop.
+enum SnapInstall {
+    NotInstalled(anyhow::Error),
+    Installed(anyhow::Error),
 }
 
 /// Replay one record onto the store, validating against the config so a
@@ -373,6 +686,18 @@ fn apply(store: &ShardedStore, rec: &WalRecord) -> Result<()> {
             Ok(())
         }
         WalRecord::MergeSketch(sk) => store.merge_sketch(sk),
+        WalRecord::UpdateBatch(items) => {
+            let mut batch = Vec::with_capacity(items.len());
+            for &(i, j, w) in items {
+                let (i, j) = (i as usize, j as usize);
+                ensure!(i < cfg.n1 && j < cfg.n2, "WAL batch key ({i}, {j}) out of range");
+                batch.push((i, j, w));
+            }
+            // same fused kernel the live path used — replay stays
+            // bit-identical
+            store.update_batch(&batch);
+            Ok(())
+        }
     }
 }
 
@@ -405,6 +730,7 @@ mod tests {
             WalRecord::Update { i: 3, j: 9, w: -2.5 },
             WalRecord::AdvanceEpoch,
             WalRecord::MergeSketch(sk),
+            WalRecord::UpdateBatch(vec![(1, 2, 3.5), (4, 5, -6.0), (0, 0, 0.25)]),
         ] {
             let mut out = Vec::new();
             rec.encode(&mut out);
@@ -421,6 +747,13 @@ mod tests {
                 (WalRecord::MergeSketch(a), WalRecord::MergeSketch(b)) => {
                     assert!(a.same_family(b));
                     assert_eq!(a.table(0), b.table(0));
+                }
+                (WalRecord::UpdateBatch(a), WalRecord::UpdateBatch(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for ((ai, aj, aw), (bi, bj, bw)) in a.iter().zip(b.iter()) {
+                        assert_eq!((ai, aj), (bi, bj));
+                        assert_eq!(aw.to_bits(), bw.to_bits());
+                    }
                 }
                 other => panic!("variant mismatch: {other:?}"),
             }
@@ -555,6 +888,163 @@ mod tests {
             5.0,
             "stale WAL record was double-applied"
         );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn update_batch_is_one_wal_frame_and_replays_exactly() {
+        let dir = tmpdir("group_commit");
+        let shadow = ShardedStore::new(cfg());
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            let mut rng = Pcg64::new(3);
+            let items: Vec<(usize, usize, f64)> = (0..100)
+                .map(|_| {
+                    (
+                        rng.gen_range(40) as usize,
+                        rng.gen_range(32) as usize,
+                        int_weight(&mut rng),
+                    )
+                })
+                .collect();
+            live.update_batch(&items).unwrap();
+            for &(i, j, w) in &items {
+                shadow.update(i, j, w);
+            }
+            // the whole batch must be one group-commit frame
+            let (_, records) = read_wal(&dir.join(WAL_FILE)).unwrap();
+            assert_eq!(records.len(), 1, "group commit must write one frame per batch");
+            assert!(
+                matches!(records[0], WalRecord::UpdateBatch(ref v) if v.len() == 100),
+                "unexpected record: {:?}",
+                records[0]
+            );
+            // crash without snapshot: the batch replays from its frame
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.stats(), shadow.stats());
+        for i in 0..40 {
+            for j in 0..32 {
+                assert_eq!(
+                    recovered.point_query(i, j).to_bits(),
+                    shadow.point_query(i, j).to_bits(),
+                    "key ({i}, {j})"
+                );
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_wal_rotation_fail_stops_writes() {
+        let dir = tmpdir("failstop");
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(1, 1, 5.0).unwrap();
+            // fault injection: replace wal.bin with a directory, so the
+            // rotation's tmp-file rename over it must fail *after* the
+            // snapshot rename succeeded
+            fs::remove_file(dir.join(WAL_FILE)).unwrap();
+            fs::create_dir(dir.join(WAL_FILE)).unwrap();
+            assert!(live.snapshot().is_err());
+            // writes must fail-stop: an append acknowledged into the
+            // stale-generation log would be silently skipped on recovery
+            assert!(live.update(2, 2, 1.0).is_err());
+            assert!(live.update_batch(&[(3, 3, 1.0)]).is_err());
+            assert!(live.advance_epoch().is_err());
+            // reads keep working on the in-memory state
+            assert_eq!(live.point_query(1, 1), 5.0);
+        }
+        fs::remove_dir_all(dir.join(WAL_FILE)).unwrap();
+        // everything acknowledged before the failed rotation was already
+        // inside the g+1 snapshot — no data loss, no double-apply
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.point_query(1, 1), 5.0);
+        assert_eq!(recovered.point_query(2, 2), 0.0, "failed write must not resurface");
+        assert_eq!(recovered.point_query(3, 3), 0.0, "failed batch must not resurface");
+        // and the reopened store accepts writes again
+        recovered.update(4, 4, 2.0).unwrap();
+        assert_eq!(recovered.point_query(4, 4), 2.0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_durable_writers_recover_exactly() {
+        // the log lock is no longer held across the in-memory apply;
+        // four threads of integer-weight traffic must still recover to
+        // exactly the reference state (counter sums commute)
+        let dir = tmpdir("mt_writers");
+        let shadow = ShardedStore::new(cfg());
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            std::thread::scope(|scope| {
+                for t in 0..4u64 {
+                    let live = &live;
+                    scope.spawn(move || {
+                        let mut rng = Pcg64::new(90 + t);
+                        for step in 0..120 {
+                            let (i, j) =
+                                (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                            let w = (1 + rng.gen_range(9)) as f64;
+                            if step % 3 == 0 {
+                                live.update_batch(&[(i, j, w), (i, j, w)]).unwrap();
+                            } else {
+                                live.update(i, j, w).unwrap();
+                            }
+                        }
+                    });
+                }
+            });
+            for t in 0..4u64 {
+                let mut rng = Pcg64::new(90 + t);
+                for step in 0..120 {
+                    let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                    let w = (1 + rng.gen_range(9)) as f64;
+                    let reps = if step % 3 == 0 { 2 } else { 1 };
+                    for _ in 0..reps {
+                        shadow.update(i, j, w);
+                    }
+                }
+            }
+            assert_eq!(live.stats(), shadow.stats());
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.stats(), shadow.stats());
+        for i in 0..40 {
+            for j in 0..32 {
+                assert_eq!(
+                    recovered.point_query(i, j).to_bits(),
+                    shadow.point_query(i, j).to_bits(),
+                    "key ({i}, {j})"
+                );
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_mode_round_trips() {
+        let dir = tmpdir("fsync");
+        let shadow = ShardedStore::new(cfg());
+        {
+            let live = DurableStore::open_with(&dir, cfg(), true).unwrap();
+            live.update(1, 2, 3.0).unwrap();
+            live.update_batch(&[(4, 5, 6.0), (1, 2, 1.0)]).unwrap();
+            live.snapshot().unwrap();
+            live.update(7, 7, 2.0).unwrap(); // post-rotation append, synced
+        }
+        shadow.update(1, 2, 3.0);
+        shadow.update_batch(&[(4, 5, 6.0), (1, 2, 1.0)]);
+        shadow.update(7, 7, 2.0);
+        let recovered = DurableStore::open_with(&dir, cfg(), true).unwrap();
+        assert_eq!(recovered.stats(), shadow.stats());
+        for &(i, j) in &[(1usize, 2usize), (4, 5), (7, 7), (0, 0)] {
+            assert_eq!(
+                recovered.point_query(i, j).to_bits(),
+                shadow.point_query(i, j).to_bits(),
+                "key ({i}, {j})"
+            );
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -1,4 +1,4 @@
-//! Store-level acceptance properties (ISSUE 2):
+//! Store-level acceptance properties (ISSUE 2, extended by ISSUE 3):
 //!
 //! 1. **Merge fidelity** — for random update streams split across
 //!    K ∈ {2, 4, 8} shards, merged-shard point estimates are
@@ -6,6 +6,9 @@
 //!    same stream.
 //! 2. **Crash recovery** — snapshot → WAL-replay → recovered store
 //!    answers identically to the pre-crash store.
+//! 3. **Group commit** — batched durable updates (one WAL frame per
+//!    batch, shard-grouped apply) are bit-identical to per-item
+//!    updates, live and after crash recovery.
 //!
 //! Streams use integer weights: every bucket partial sum is then exact
 //! in f64, so accumulation *order* (per-shard vs interleaved) provably
@@ -164,6 +167,54 @@ fn recovered_store_answers_identically_to_pre_crash_store() {
                 prop_assert(
                     a.to_bits() == b.to_bits(),
                     &format!("recovered estimate differs at ({i}, {j}): {a} vs {b}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_durable_updates_bit_identical_and_recoverable() {
+    let dir = tmpdir("batch");
+    forall("group commit vs per-item", 4, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let cfg = store_cfg(4, 3, seed);
+        let _ = std::fs::remove_dir_all(&dir);
+        // shadow applies every item singly — the per-item oracle
+        let shadow = ShardedStore::new(cfg.clone());
+        {
+            let live = DurableStore::open(&dir, cfg.clone()).unwrap();
+            let drive_batch = |live: &DurableStore, n: usize, g: &mut Gen| {
+                let items: Vec<(usize, usize, f64)> = (0..n)
+                    .map(|_| {
+                        let (i, j) = random_key(g.rng(), &cfg);
+                        (i, j, int_weight(g.rng()))
+                    })
+                    .collect();
+                live.update_batch(&items).unwrap();
+                for &(i, j, w) in &items {
+                    shadow.update(i, j, w);
+                }
+            };
+            drive_batch(&live, 150 + g.usize_in(0, 100), g);
+            live.snapshot().unwrap(); // batches before here live in the snapshot
+            drive_batch(&live, 120, g);
+            live.advance_epoch().unwrap();
+            shadow.advance_epoch();
+            drive_batch(&live, 90, g); // tail lives only in UpdateBatch frames
+            // drop without snapshot = crash
+        }
+        let recovered = DurableStore::open(&dir, cfg.clone()).unwrap();
+        prop_assert(recovered.stats() == shadow.stats(), "stats diverged after recovery")?;
+        for i in 0..cfg.n1 {
+            for j in 0..cfg.n2 {
+                let a = recovered.point_query(i, j);
+                let b = shadow.point_query(i, j);
+                prop_assert(
+                    a.to_bits() == b.to_bits(),
+                    &format!("batched estimate differs at ({i}, {j}): {a} vs {b}"),
                 )?;
             }
         }
