@@ -19,7 +19,15 @@ fn previous_service_rows() -> Option<Json> {
 }
 
 fn main() {
-    let cfg = ExpConfig::default();
+    // HOCS_BENCH_QUICK=1 (CI's bench-smoke job) runs the short sweep —
+    // same rows and JSON schema, env-capped iteration counts
+    let cfg = ExpConfig {
+        quick: std::env::var("HOCS_BENCH_QUICK").is_ok(),
+        ..ExpConfig::default()
+    };
+    if cfg.quick {
+        println!("HOCS_BENCH_QUICK set: short sweep (CI smoke), same schema\n");
+    }
 
     let (combine_table, combines) = run_combine_bench(&cfg);
     combine_table.print();

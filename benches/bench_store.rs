@@ -3,16 +3,24 @@
 //! Measures, per shard count K ∈ {1, 2, 4, 8}:
 //! - multi-writer update throughput (4 threads hammering one store);
 //! - point-query latency p50/p99 (measured per call);
+//! - scan-plane throughput: TOPK and HEAVY through the version-stamped
+//!   cache vs the full K-way re-merge (`merged_uncached`), plus one
+//!   mixed 90/10 read/write row at K = 8;
 //!
 //! plus one loopback-TCP row (framed protocol + batch updates through
-//! `StoreServer`/`StoreClient`) and a durable (WAL-on) comparison of
-//! per-item commits vs group-commit batches — the number that justifies
-//! the batched write path. Writes everything to `BENCH_store.json` so
-//! future PRs have a perf trajectory.
+//! `StoreServer`/`StoreClient`), the durable (WAL-on) comparison of
+//! per-item commits vs group-commit batches, and the
+//! concurrent-single-update-writer sweep with the leader/follower
+//! cross-connection group commit on vs off (flush-only and fsync) — the
+//! numbers that justify the batched write path and the commit queue.
+//! Writes everything to `BENCH_store.json` so future PRs have a perf
+//! trajectory. Set `HOCS_BENCH_QUICK=1` (CI's `bench-smoke` job) for a
+//! seconds-long sweep with the same schema.
 
 use hocs::rng::Pcg64;
 use hocs::store::{
-    DurableStore, ShardedStore, StoreClient, StoreConfig, StoreServer, StoreServerConfig,
+    DurableOptions, DurableStore, ShardedStore, StoreClient, StoreConfig, StoreServer,
+    StoreServerConfig,
 };
 use hocs::util::bench::Table;
 use hocs::util::json::Json;
@@ -27,9 +35,23 @@ fn bench_cfg(shards: usize) -> StoreConfig {
     StoreConfig { n1: 1 << 14, n2: 1 << 14, m1: 64, m2: 64, d: 5, seed: 42, shards, window: 4 }
 }
 
+/// Short-sweep mode for CI smoke runs: same rows, same schema, capped
+/// iteration counts.
+fn quick() -> bool {
+    std::env::var("HOCS_BENCH_QUICK").is_ok()
+}
+
+/// Cap `n` in quick mode.
+fn scaled(n: usize) -> usize {
+    if quick() {
+        (n / 10).max(1)
+    } else {
+        n
+    }
+}
+
 const WRITER_THREADS: usize = 4;
-const UPDATES_PER_THREAD: usize = 50_000;
-const QUERIES: usize = 5_000;
+const CONCURRENT_WRITERS: usize = 8;
 
 fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
     assert!(!sorted_ns.is_empty());
@@ -48,6 +70,8 @@ struct Row {
 }
 
 fn sweep_in_process() -> Vec<Row> {
+    let updates_per_thread = scaled(50_000);
+    let queries = scaled(5_000);
     let mut rows = Vec::new();
     for shards in [1usize, 2, 4, 8] {
         let cfg = bench_cfg(shards);
@@ -59,7 +83,7 @@ fn sweep_in_process() -> Vec<Row> {
                 let cfg = &cfg;
                 scope.spawn(move || {
                     let mut rng = Pcg64::new(1_000 + t as u64);
-                    for _ in 0..UPDATES_PER_THREAD {
+                    for _ in 0..updates_per_thread {
                         let i = rng.gen_range(cfg.n1 as u64) as usize;
                         let j = rng.gen_range(cfg.n2 as u64) as usize;
                         store.update(i, j, 1.0);
@@ -68,11 +92,11 @@ fn sweep_in_process() -> Vec<Row> {
             }
         });
         let wall = t0.elapsed().as_secs_f64();
-        let updates = WRITER_THREADS * UPDATES_PER_THREAD;
+        let updates = WRITER_THREADS * updates_per_thread;
 
         let mut rng = Pcg64::new(7);
-        let mut lat_ns = Vec::with_capacity(QUERIES);
-        for _ in 0..QUERIES {
+        let mut lat_ns = Vec::with_capacity(queries);
+        for _ in 0..queries {
             let i = rng.gen_range(cfg.n1 as u64) as usize;
             let j = rng.gen_range(cfg.n2 as u64) as usize;
             let q0 = Instant::now();
@@ -85,7 +109,7 @@ fn sweep_in_process() -> Vec<Row> {
             shards,
             updates,
             updates_per_sec: updates as f64 / wall,
-            queries: QUERIES,
+            queries,
             query_p50_us: percentile_us(&lat_ns, 0.5),
             query_p99_us: percentile_us(&lat_ns, 0.99),
         });
@@ -116,8 +140,8 @@ fn tcp_loopback_row() -> Option<Row> {
     };
     let n1 = 1u64 << 14;
     let mut rng = Pcg64::new(3);
-    let total_updates = 40_000;
-    let chunk = 1_000;
+    let total_updates = scaled(40_000);
+    let chunk = 1_000.min(total_updates);
     let t0 = Instant::now();
     let mut sent = 0usize;
     while sent < total_updates {
@@ -132,7 +156,7 @@ fn tcp_loopback_row() -> Option<Row> {
         sent += chunk;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let queries = 2_000;
+    let queries = scaled(2_000);
     let mut lat_ns = Vec::with_capacity(queries);
     for _ in 0..queries {
         let (i, j) = (rng.gen_range(n1) as usize, rng.gen_range(n1) as usize);
@@ -162,7 +186,8 @@ fn durable_rows() -> Vec<Row> {
     let base = std::env::temp_dir().join(format!("hocs_bench_store_wal_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&base);
     let n1 = 1u64 << 14;
-    let total = 20_000usize;
+    let total = scaled(20_000);
+    let queries = scaled(2_000);
     let mut rows = Vec::new();
 
     let mut run = |label: String, batch: usize| {
@@ -196,7 +221,6 @@ fn durable_rows() -> Vec<Row> {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let queries = 2_000;
         let mut lat_ns = Vec::with_capacity(queries);
         for _ in 0..queries {
             let (i, j) = (rng.gen_range(n1) as usize, rng.gen_range(n1) as usize);
@@ -224,7 +248,218 @@ fn durable_rows() -> Vec<Row> {
     rows
 }
 
+// ---------- scan plane: cached vs uncached ----------
+
+struct ScanRow {
+    kind: String,
+    shards: usize,
+    cached_per_sec: f64,
+    uncached_per_sec: f64,
+    speedup: f64,
+}
+
+/// Smaller universe than the update sweep: a scan costs O(d·m1·n2) per
+/// re-scan, and the interesting ratio is cache hit vs full re-merge.
+fn scan_cfg(shards: usize) -> StoreConfig {
+    StoreConfig { n1: 1 << 12, n2: 1 << 12, m1: 64, m2: 64, d: 5, seed: 42, shards, window: 4 }
+}
+
+/// Skewed preload: a handful of heavy keys over uniform noise, the
+/// traffic shape the marginal-pruned scans are built for.
+fn preload_scan_store(store: &ShardedStore, cfg: &StoreConfig, total: usize) {
+    let mut rng = Pcg64::new(11);
+    let mut fed = 0usize;
+    let mut batch = Vec::with_capacity(1024);
+    while fed < total {
+        batch.clear();
+        let n = 1024.min(total - fed);
+        for _ in 0..n {
+            let (i, j) = if rng.uniform() < 0.2 {
+                ((rng.gen_range(16) as usize * 37) % cfg.n1, 7usize)
+            } else {
+                (rng.gen_range(cfg.n1 as u64) as usize, rng.gen_range(cfg.n2 as u64) as usize)
+            };
+            batch.push((i, j, 1.0));
+        }
+        store.update_batch(&batch);
+        fed += n;
+    }
+}
+
+fn scan_rows() -> Vec<ScanRow> {
+    let preload = scaled(60_000);
+    let uncached_iters = scaled(60);
+    let cached_iters = scaled(600);
+    let k = 32usize;
+    let threshold = 40.0f64;
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = scan_cfg(shards);
+        let store = ShardedStore::new(cfg.clone());
+        preload_scan_store(&store, &cfg, preload);
+
+        // TOPK: full re-merge + scan per call vs the cached scan plane
+        let t0 = Instant::now();
+        for _ in 0..uncached_iters {
+            std::hint::black_box(store.merged_uncached().top_k(k));
+        }
+        let un_topk = uncached_iters as f64 / t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..cached_iters {
+            std::hint::black_box(store.top_k(k));
+        }
+        let c_topk = cached_iters as f64 / t0.elapsed().as_secs_f64();
+        rows.push(ScanRow {
+            kind: "TOPK".to_string(),
+            shards,
+            cached_per_sec: c_topk,
+            uncached_per_sec: un_topk,
+            speedup: c_topk / un_topk,
+        });
+
+        // HEAVY, same comparison
+        let t0 = Instant::now();
+        for _ in 0..uncached_iters {
+            std::hint::black_box(store.merged_uncached().heavy_hitters(threshold));
+        }
+        let un_heavy = uncached_iters as f64 / t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..cached_iters {
+            std::hint::black_box(store.heavy_hitters(threshold));
+        }
+        let c_heavy = cached_iters as f64 / t0.elapsed().as_secs_f64();
+        rows.push(ScanRow {
+            kind: "HEAVY".to_string(),
+            shards,
+            cached_per_sec: c_heavy,
+            uncached_per_sec: un_heavy,
+            speedup: c_heavy / un_heavy,
+        });
+    }
+
+    // mixed 90/10 read/write at K = 8: every write invalidates the
+    // stamp, so this measures the incremental-refresh + re-scan cost,
+    // not just pure cache hits
+    let shards = 8;
+    let cfg = scan_cfg(shards);
+    let store = ShardedStore::new(cfg.clone());
+    preload_scan_store(&store, &cfg, preload);
+    let ops = scaled(1_000);
+    let mut rng = Pcg64::new(13);
+    let t0 = Instant::now();
+    for op in 0..ops {
+        if op % 10 == 9 {
+            let (i, j) =
+                (rng.gen_range(cfg.n1 as u64) as usize, rng.gen_range(cfg.n2 as u64) as usize);
+            store.update(i, j, 1.0);
+        } else {
+            std::hint::black_box(store.top_k(k));
+        }
+    }
+    let mixed_cached = ops as f64 / t0.elapsed().as_secs_f64();
+    let mut rng = Pcg64::new(13);
+    let t0 = Instant::now();
+    for op in 0..ops {
+        if op % 10 == 9 {
+            let (i, j) =
+                (rng.gen_range(cfg.n1 as u64) as usize, rng.gen_range(cfg.n2 as u64) as usize);
+            store.update(i, j, 1.0);
+        } else {
+            std::hint::black_box(store.merged_uncached().top_k(k));
+        }
+    }
+    let mixed_uncached = ops as f64 / t0.elapsed().as_secs_f64();
+    rows.push(ScanRow {
+        kind: "MIXED 90/10".to_string(),
+        shards,
+        cached_per_sec: mixed_cached,
+        uncached_per_sec: mixed_uncached,
+        speedup: mixed_cached / mixed_uncached,
+    });
+    rows
+}
+
+// ---------- concurrent un-batched writers: group commit on/off ----------
+
+struct ConcRow {
+    label: String,
+    writers: usize,
+    fsync: bool,
+    group: bool,
+    updates: usize,
+    updates_per_sec: f64,
+}
+
+fn durable_concurrent_rows() -> Vec<ConcRow> {
+    let shards = 4;
+    let writers = CONCURRENT_WRITERS;
+    let base = std::env::temp_dir().join(format!("hocs_bench_store_cc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let n1 = 1u64 << 14;
+    let mut rows = Vec::new();
+
+    let mut run = |label: String, fsync: bool, group: bool, per_writer: usize| {
+        let dir = base.join(label.replace(' ', "_").replace('=', "_"));
+        let store = match DurableStore::open_opts(
+            &dir,
+            bench_cfg(shards),
+            DurableOptions { fsync, group_commit: group },
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("concurrent durable row {label:?} skipped: {e}");
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for t in 0..writers {
+                let store = &store;
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(40 + t as u64);
+                    for _ in 0..per_writer {
+                        store
+                            .update(
+                                rng.gen_range(n1) as usize,
+                                rng.gen_range(n1) as usize,
+                                1.0,
+                            )
+                            .expect("durable update");
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let updates = writers * per_writer;
+        rows.push(ConcRow {
+            label,
+            writers,
+            fsync,
+            group,
+            updates,
+            updates_per_sec: updates as f64 / wall,
+        });
+    };
+
+    // flush-only (process-crash durability): the commit queue coalesces
+    // write syscalls and shrinks mutex hold times
+    let flush_per_writer = scaled(6_000);
+    run("cc flush group=off".to_string(), false, false, flush_per_writer);
+    run("cc flush group=on".to_string(), false, true, flush_per_writer);
+    // fsync (power-loss durability): one sync_data per *group* instead
+    // of per record — where leader/follower group commit earns its keep
+    let sync_per_writer = scaled(400);
+    run("cc fsync group=off".to_string(), true, false, sync_per_writer);
+    run("cc fsync group=on".to_string(), true, true, sync_per_writer);
+
+    let _ = std::fs::remove_dir_all(&base);
+    rows
+}
+
 fn main() {
+    if quick() {
+        println!("HOCS_BENCH_QUICK set: short sweep (CI smoke), same schema\n");
+    }
     let mut rows = sweep_in_process();
     if let Some(tcp) = tcp_loopback_row() {
         rows.push(tcp);
@@ -255,24 +490,116 @@ fn main() {
         );
     }
 
-    let json = Json::obj(vec![(
-        "store",
-        Json::Arr(
-            rows.iter()
-                .map(|r| {
-                    Json::obj(vec![
-                        ("path", Json::Str(r.label.clone())),
-                        ("shards", Json::Num(r.shards as f64)),
-                        ("updates", Json::Num(r.updates as f64)),
-                        ("updates_per_sec", Json::Num(r.updates_per_sec)),
-                        ("queries", Json::Num(r.queries as f64)),
-                        ("query_p50_us", Json::Num(r.query_p50_us)),
-                        ("query_p99_us", Json::Num(r.query_p99_us)),
-                    ])
-                })
-                .collect(),
+    let scans = scan_rows();
+    let mut scan_table = Table::new(
+        "scan plane: version-stamped cache vs full K-way re-merge",
+        &["scan", "shards", "cached/s", "uncached/s", "speedup"],
+    );
+    for r in &scans {
+        scan_table.row(vec![
+            r.kind.clone(),
+            r.shards.to_string(),
+            format!("{:.0}", r.cached_per_sec),
+            format!("{:.0}", r.uncached_per_sec),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    println!();
+    scan_table.print();
+    if let Some(r) = scans.iter().find(|r| r.kind == "TOPK" && r.shards == 8) {
+        println!(
+            "\ncached TOPK speedup at K=8: {:.1}x over per-call re-merge (target >= 5x)",
+            r.speedup
+        );
+    }
+
+    let conc = durable_concurrent_rows();
+    let mut conc_table = Table::new(
+        "concurrent single-update writers: leader/follower group commit",
+        &["path", "writers", "updates", "updates/s"],
+    );
+    for r in &conc {
+        conc_table.row(vec![
+            r.label.clone(),
+            r.writers.to_string(),
+            r.updates.to_string(),
+            format!("{:.0}", r.updates_per_sec),
+        ]);
+    }
+    println!();
+    conc_table.print();
+    let speedup = |on: &str, off: &str| -> Option<f64> {
+        let a = conc.iter().find(|r| r.label == on)?;
+        let b = conc.iter().find(|r| r.label == off)?;
+        Some(a.updates_per_sec / b.updates_per_sec)
+    };
+    if let Some(s) = speedup("cc flush group=on", "cc flush group=off") {
+        println!(
+            "\ncross-connection group commit speedup ({CONCURRENT_WRITERS} writers, flush): \
+             {s:.1}x over per-record commits"
+        );
+    }
+    if let Some(s) = speedup("cc fsync group=on", "cc fsync group=off") {
+        println!(
+            "cross-connection group commit speedup ({CONCURRENT_WRITERS} writers, fsync): \
+             {s:.1}x over per-record syncs (target >= 3x)"
+        );
+    }
+
+    let json = Json::obj(vec![
+        (
+            "store",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("path", Json::Str(r.label.clone())),
+                            ("shards", Json::Num(r.shards as f64)),
+                            ("updates", Json::Num(r.updates as f64)),
+                            ("updates_per_sec", Json::Num(r.updates_per_sec)),
+                            ("queries", Json::Num(r.queries as f64)),
+                            ("query_p50_us", Json::Num(r.query_p50_us)),
+                            ("query_p99_us", Json::Num(r.query_p99_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
-    )]);
+        (
+            "scan",
+            Json::Arr(
+                scans
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("kind", Json::Str(r.kind.clone())),
+                            ("shards", Json::Num(r.shards as f64)),
+                            ("cached_per_sec", Json::Num(r.cached_per_sec)),
+                            ("uncached_per_sec", Json::Num(r.uncached_per_sec)),
+                            ("speedup", Json::Num(r.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "durable_concurrent",
+            Json::Arr(
+                conc.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("path", Json::Str(r.label.clone())),
+                            ("writers", Json::Num(r.writers as f64)),
+                            ("fsync", Json::Bool(r.fsync)),
+                            ("group_commit", Json::Bool(r.group)),
+                            ("updates", Json::Num(r.updates as f64)),
+                            ("updates_per_sec", Json::Num(r.updates_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
     match std::fs::write(OUT_PATH, json.to_string_pretty()) {
         Ok(()) => println!("\nwrote {OUT_PATH}"),
         Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),

@@ -23,7 +23,7 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench
   serve-demo [--backend xla|rust] [--requests N]\n\
   serve [--addr HOST:PORT] [--shards K] [--window N]\n\
         [--n1 N --n2 N --m1 M --m2 M --d D] [--store-seed S]\n\
-        [--data-dir DIR] [--fsync] [--with-coordinator]\n\
+        [--data-dir DIR] [--fsync] [--no-group-commit] [--with-coordinator]\n\
   store-client <update|update-batch|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
         [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
@@ -184,6 +184,10 @@ fn cmd_serve(args: &Args) -> i32 {
         store,
         data_dir: args.get("data-dir").map(str::to_string),
         fsync: args.flag("fsync"),
+        // leader/follower cross-connection group commit is the default;
+        // the flag restores per-record WAL commits (bench baseline /
+        // debugging)
+        group_commit: !args.flag("no-group-commit"),
         with_coordinator: args.flag("with-coordinator"),
         artifacts_dir: artifacts_dir(args),
     };

@@ -135,6 +135,74 @@ impl StreamSketch {
         }
     }
 
+    /// Apply one update to several **same-family** sketches at once,
+    /// evaluating each repeat's bucket and signed contribution a single
+    /// time (hashes and signs are pure functions of the shared family,
+    /// so every target receives the identical `±w` at the identical
+    /// bucket). The store's write path fans one update into a shard's
+    /// epoch slot, running total, *and* scan-cache pending delta — this
+    /// kernel makes that one hash walk instead of three. Bit-identical
+    /// to calling [`StreamSketch::update`] on each target.
+    pub fn update_fanout(targets: &mut [&mut StreamSketch], i: usize, j: usize, w: f64) {
+        let Some((first, rest)) = targets.split_first_mut() else {
+            return;
+        };
+        debug_assert!(i < first.n1 && j < first.n2);
+        debug_assert!(rest.iter().all(|t| first.same_family(t)));
+        for r in 0..first.d {
+            let b = first.rows[r].h(i) * first.m2 + first.cols[r].h(j);
+            let v = first.rows[r].s(i) * first.cols[r].s(j) * w;
+            first.tables[r][b] += v;
+            for t in rest.iter_mut() {
+                t.tables[r][b] += v;
+            }
+        }
+        first.updates += 1;
+        for t in rest.iter_mut() {
+            t.updates += 1;
+        }
+        if w < 0.0 {
+            first.has_deletions = true;
+            for t in rest.iter_mut() {
+                t.has_deletions = true;
+            }
+        }
+    }
+
+    /// Batched [`StreamSketch::update_fanout`]: the fused table walk of
+    /// [`StreamSketch::update_batch`], broadcast to every target. Per
+    /// target and table, items land in batch order — bit-identical to
+    /// calling [`StreamSketch::update_batch`] on each target.
+    pub fn update_batch_fanout(targets: &mut [&mut StreamSketch], items: &[(usize, usize, f64)]) {
+        let Some((first, rest)) = targets.split_first_mut() else {
+            return;
+        };
+        debug_assert!(rest.iter().all(|t| first.same_family(t)));
+        for r in 0..first.d {
+            for &(i, j, w) in items {
+                debug_assert!(i < first.n1 && j < first.n2);
+                let b = first.rows[r].h(i) * first.m2 + first.cols[r].h(j);
+                let v = first.rows[r].s(i) * first.cols[r].s(j) * w;
+                first.tables[r][b] += v;
+                for t in rest.iter_mut() {
+                    t.tables[r][b] += v;
+                }
+            }
+        }
+        let n = items.len() as u64;
+        let deletions = items.iter().any(|&(_, _, w)| w < 0.0);
+        first.updates += n;
+        if deletions {
+            first.has_deletions = true;
+        }
+        for t in rest.iter_mut() {
+            t.updates += n;
+            if deletions {
+                t.has_deletions = true;
+            }
+        }
+    }
+
     /// Fused multi-key update: each repeat's hash pair and counter table
     /// is walked once for the whole batch instead of once per item, so a
     /// batch costs d table passes rather than `items.len() · d` scattered
@@ -701,6 +769,43 @@ mod tests {
         for r in 0..5 {
             assert_eq!(batched.table(r), single.table(r), "table {r}");
         }
+    }
+
+    #[test]
+    fn fanout_updates_bit_identical_to_per_sketch_updates() {
+        // three same-family sketches driven through the fused fan-out
+        // kernels must match three driven individually, bit for bit —
+        // including the updates counter and the turnstile flag
+        let mk = || StreamSketch::new(48, 40, 12, 10, 5, 23);
+        let (mut fa, mut fb, mut fc) = (mk(), mk(), mk());
+        let (mut sa, mut sb, mut sc) = (mk(), mk(), mk());
+        let mut rng = Pcg64::new(77);
+        let items: Vec<(usize, usize, f64)> = (0..300)
+            .map(|_| {
+                (rng.gen_range(48) as usize, rng.gen_range(40) as usize, rng.normal())
+            })
+            .collect();
+        for &(i, j, w) in &items[..150] {
+            StreamSketch::update_fanout(&mut [&mut fa, &mut fb, &mut fc], i, j, w);
+            sa.update(i, j, w);
+            sb.update(i, j, w);
+            sc.update(i, j, w);
+        }
+        StreamSketch::update_batch_fanout(&mut [&mut fa, &mut fb, &mut fc], &items[150..]);
+        StreamSketch::update_batch_fanout(&mut [&mut fa, &mut fb, &mut fc], &[]);
+        sa.update_batch(&items[150..]);
+        sb.update_batch(&items[150..]);
+        sc.update_batch(&items[150..]);
+        for (fanned, single) in [(&fa, &sa), (&fb, &sb), (&fc, &sc)] {
+            assert_eq!(fanned.updates, single.updates);
+            assert_eq!(fanned.has_deletions, single.has_deletions);
+            for r in 0..5 {
+                assert_eq!(fanned.table(r), single.table(r), "table {r}");
+            }
+        }
+        // degenerate target lists are no-ops
+        StreamSketch::update_fanout(&mut [], 1, 1, 1.0);
+        StreamSketch::update_batch_fanout(&mut [], &items);
     }
 
     #[test]

@@ -2,54 +2,80 @@
 //! the `hocs store-client` CLI, the end-to-end tests, and `bench_store`.
 //!
 //! One request in flight per connection (the protocol is strictly
-//! request/response); open several clients for pipelining.
+//! request/response); open several clients for pipelining. The request
+//! and response buffers live on the client and are reused across calls,
+//! so a settled RPC loop performs no per-call heap allocation on the
+//! wire path (typed results that return owned lists still allocate
+//! their output).
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
-use super::server::{op, read_frame, write_frame, STATUS_OK};
+use super::server::{op, read_frame_into, write_frame, STATUS_OK};
 use super::sharded::StoreStats;
 use crate::sketch::stream::StreamSketch;
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::net::{TcpStream, ToSocketAddrs};
 
 pub struct StoreClient {
     stream: TcpStream,
+    /// request scratch, reused across calls
+    req: Vec<u8>,
+    /// response scratch, reused across calls
+    resp: Vec<u8>,
 }
 
 impl StoreClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connecting to store server")?;
         let _ = stream.set_nodelay(true);
-        Ok(Self { stream })
+        Ok(Self { stream, req: Vec::new(), resp: Vec::new() })
+    }
+
+    /// Start a request in the reused buffer.
+    fn begin(&mut self, opcode: u8) -> &mut Vec<u8> {
+        self.req.clear();
+        self.req.push(opcode);
+        &mut self.req
+    }
+
+    /// Send the staged request and read the response into the reused
+    /// buffer, surfacing server-side errors as `Err`. Returns the
+    /// response body (after the status byte), borrowed from the buffer.
+    fn call(&mut self) -> Result<&[u8]> {
+        write_frame(&mut self.stream, &self.req)?;
+        ensure!(
+            read_frame_into(&mut self.stream, &mut self.resp)?,
+            "server closed the connection"
+        );
+        ensure!(!self.resp.is_empty(), "empty response frame");
+        if self.resp[0] == STATUS_OK {
+            Ok(&self.resp[1..])
+        } else {
+            bail!("store server: {}", String::from_utf8_lossy(&self.resp[1..]))
+        }
     }
 
     /// Send one raw request payload and return the response body, with
     /// server-side errors surfaced as `Err`. Exposed for protocol tests;
     /// the typed methods below are the real API.
     pub fn raw_call(&mut self, req: &[u8]) -> Result<Vec<u8>> {
-        write_frame(&mut self.stream, req)?;
-        let resp = read_frame(&mut self.stream)?
-            .ok_or_else(|| anyhow!("server closed the connection"))?;
-        ensure!(!resp.is_empty(), "empty response frame");
-        if resp[0] == STATUS_OK {
-            Ok(resp[1..].to_vec())
-        } else {
-            bail!("store server: {}", String::from_utf8_lossy(&resp[1..]))
-        }
+        self.req.clear();
+        self.req.extend_from_slice(req);
+        self.call().map(|body| body.to_vec())
     }
 
-    fn key_req(opcode: u8, i: usize, j: usize) -> Result<Vec<u8>> {
-        let mut req = vec![opcode];
-        codec::put_u32(&mut req, u32::try_from(i).context("row key exceeds u32")?);
-        codec::put_u32(&mut req, u32::try_from(j).context("col key exceeds u32")?);
-        Ok(req)
+    fn put_key(req: &mut Vec<u8>, i: usize, j: usize) -> Result<()> {
+        codec::put_u32(req, u32::try_from(i).context("row key exceeds u32")?);
+        codec::put_u32(req, u32::try_from(j).context("col key exceeds u32")?);
+        Ok(())
     }
 
     /// Count key `(i, j)` with weight `w`.
     pub fn update(&mut self, i: usize, j: usize, w: f64) -> Result<()> {
-        let mut req = Self::key_req(op::UPDATE, i, j)?;
-        codec::put_f64(&mut req, w);
-        self.raw_call(&req).map(|_| ())
+        let req = self.begin(op::UPDATE);
+        Self::put_key(req, i, j)?;
+        codec::put_f64(req, w);
+        self.call().map(|_| ())
     }
 
     /// Ship a whole batch of updates in one frame (the write hot path):
@@ -57,57 +83,61 @@ impl StoreClient {
     /// append + flush/fsync for the entire batch — and one shard-lock
     /// acquisition per destination shard, all-or-nothing on validation.
     pub fn update_batch(&mut self, items: &[(u32, u32, f64)]) -> Result<()> {
-        let mut req = vec![op::UPDATE_BATCH];
-        codec::put_u32(&mut req, u32::try_from(items.len()).context("batch exceeds u32")?);
+        let req = self.begin(op::UPDATE_BATCH);
+        codec::put_u32(req, u32::try_from(items.len()).context("batch exceeds u32")?);
         for &(i, j, w) in items {
-            codec::put_update(&mut req, i, j, w);
+            codec::put_update(req, i, j, w);
         }
-        self.raw_call(&req).map(|_| ())
+        self.call().map(|_| ())
     }
 
     /// Windowed point estimate for key `(i, j)`.
     pub fn query(&mut self, i: usize, j: usize) -> Result<f64> {
-        let req = Self::key_req(op::QUERY, i, j)?;
-        let body = self.raw_call(&req)?;
-        Reader::new(&body).f64()
+        let req = self.begin(op::QUERY);
+        Self::put_key(req, i, j)?;
+        let body = self.call()?;
+        Reader::new(body).f64()
     }
 
     /// The k heaviest keys in the live window.
     pub fn top_k(&mut self, k: usize) -> Result<Vec<(usize, usize, f64)>> {
-        let mut req = vec![op::TOPK];
-        codec::put_u32(&mut req, u32::try_from(k).context("k exceeds u32")?);
-        let body = self.raw_call(&req)?;
-        parse_entries(&body)
+        let req = self.begin(op::TOPK);
+        codec::put_u32(req, u32::try_from(k).context("k exceeds u32")?);
+        let body = self.call()?;
+        parse_entries(body)
     }
 
     /// All keys with windowed weight ≥ `threshold`.
     pub fn heavy_hitters(&mut self, threshold: f64) -> Result<Vec<(usize, usize, f64)>> {
-        let mut req = vec![op::HEAVY];
-        codec::put_f64(&mut req, threshold);
-        let body = self.raw_call(&req)?;
-        parse_entries(&body)
+        let req = self.begin(op::HEAVY);
+        codec::put_f64(req, threshold);
+        let body = self.call()?;
+        parse_entries(body)
     }
 
     /// Merge a locally-built same-family sketch into the server's store.
     pub fn merge(&mut self, sk: &StreamSketch) -> Result<()> {
-        let mut req = vec![op::MERGE];
-        sk.encode(&mut req);
-        self.raw_call(&req).map(|_| ())
+        let req = self.begin(op::MERGE);
+        sk.encode(req);
+        self.call().map(|_| ())
     }
 
     /// Force a snapshot + WAL truncation on the server.
     pub fn snapshot(&mut self) -> Result<()> {
-        self.raw_call(&[op::SNAPSHOT]).map(|_| ())
+        self.begin(op::SNAPSHOT);
+        self.call().map(|_| ())
     }
 
     /// Slide the server's window one epoch.
     pub fn advance_epoch(&mut self) -> Result<()> {
-        self.raw_call(&[op::ADVANCE_EPOCH]).map(|_| ())
+        self.begin(op::ADVANCE_EPOCH);
+        self.call().map(|_| ())
     }
 
     pub fn stats(&mut self) -> Result<StoreStats> {
-        let body = self.raw_call(&[op::STATS])?;
-        let mut rd = Reader::new(&body);
+        self.begin(op::STATS);
+        let body = self.call()?;
+        let mut rd = Reader::new(body);
         Ok(StoreStats {
             shards: rd.u32()? as usize,
             window: rd.u32()? as usize,
@@ -119,13 +149,13 @@ impl StoreClient {
     /// Run one count-sketch job through the server's coordinator pool
     /// (requires the server to be started `with_coordinator`).
     pub fn batch_sketch(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        let mut req = vec![op::BATCH_SKETCH];
-        codec::put_u32(&mut req, u32::try_from(x.len()).context("input exceeds u32")?);
+        let req = self.begin(op::BATCH_SKETCH);
+        codec::put_u32(req, u32::try_from(x.len()).context("input exceeds u32")?);
         for &v in x {
-            codec::put_f32(&mut req, v);
+            codec::put_f32(req, v);
         }
-        let body = self.raw_call(&req)?;
-        let mut rd = Reader::new(&body);
+        let body = self.call()?;
+        let mut rd = Reader::new(body);
         let n = rd.u32()? as usize;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
@@ -136,7 +166,8 @@ impl StoreClient {
 
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown_server(&mut self) -> Result<()> {
-        self.raw_call(&[op::SHUTDOWN]).map(|_| ())
+        self.begin(op::SHUTDOWN);
+        self.call().map(|_| ())
     }
 }
 

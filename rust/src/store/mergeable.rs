@@ -6,8 +6,11 @@
 //! with **zero** accuracy loss: `Sketch(A ⊎ B) = Sketch(A) + Sketch(B)`
 //! whenever both sides share the hash family. That one identity buys
 //! the whole store design: shards merge, replicas anti-entropy by
-//! addition, and sliding windows expire by *subtracting* the sketch of
-//! the expired epoch.
+//! addition, sliding windows expire by *subtracting* the sketch of
+//! the expired epoch, and the scan plane's cached merged sketch stays
+//! fresh by folding in small per-shard *delta* sketches instead of
+//! re-merging every shard per query (`cache + Σ deltas ≡ re-merge`,
+//! see [`crate::store::sharded`]).
 //!
 //! Implementations:
 //! - `Vec<f64>` — a flat count-sketch table ([`crate::sketch::cs::CsSketcher`]

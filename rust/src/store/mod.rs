@@ -24,13 +24,19 @@
 //! replays the WAL tail onto the snapshot and tolerates torn tails.
 //! Batched writes **group-commit**: the whole batch is one WAL frame
 //! (one flush — one `sync_data` with fsync on) and one shard-grouped
-//! in-memory apply through the fused multi-key sketch kernel, and the
-//! log lock is not held across the apply, so writers on different
-//! shards run concurrently. The front-end ([`StoreServer`]) speaks a
-//! framed TCP protocol (UPDATE / UPDATE_BATCH / QUERY / TOPK / HEAVY /
-//! MERGE / SNAPSHOT / ADVANCE_EPOCH / STATS / BATCH_SKETCH / SHUTDOWN)
-//! with a thread per connection and can reuse the PR-1 coordinator
-//! worker pool for batch sketch jobs.
+//! in-memory apply through the fused multi-key sketch kernel; on top of
+//! that, *concurrent un-batched* writers coalesce through a
+//! leader/follower commit queue (one group write + flush/sync for every
+//! staged frame — see [`wal`]), and no log lock is held across the
+//! in-memory apply, so writers on different shards run concurrently.
+//! Scans serve from [`sharded`]'s version-stamped cache (incremental
+//! pending-delta folds instead of per-call K-way re-merges). The
+//! front-end ([`StoreServer`]) speaks a framed TCP protocol (UPDATE /
+//! UPDATE_BATCH / QUERY / TOPK / HEAVY / MERGE / SNAPSHOT /
+//! ADVANCE_EPOCH / STATS / BATCH_SKETCH / SHUTDOWN) with a thread per
+//! connection — its request loop reuses per-connection buffers and
+//! thread-local scratch, allocating nothing per request once warm — and
+//! can reuse the PR-1 coordinator worker pool for batch sketch jobs.
 //!
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
 //! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
@@ -55,4 +61,4 @@ pub use client::StoreClient;
 pub use mergeable::MergeableSketch;
 pub use server::{StoreServer, StoreServerConfig};
 pub use sharded::{ShardedStore, StoreConfig, StoreStats};
-pub use wal::DurableStore;
+pub use wal::{DurableOptions, DurableStore};

@@ -14,6 +14,24 @@
 //! inside [`DurableStore`] are the only cross-connection coordination,
 //! so concurrent clients on different shards proceed in parallel.
 //!
+//! **Commit scheduling.** Durable single-record UPDATEs from different
+//! connections coalesce in the WAL's leader/follower commit queue
+//! ([`super::wal`]): the first arrival leads a group write (one flush /
+//! `sync_data` for every staged frame) while the rest wait on a condvar
+//! for their commit LSN — so un-batched clients get the batched-WAL win
+//! without protocol changes. `StoreServerConfig::group_commit = false`
+//! (CLI `--no-group-commit`) restores per-record commits.
+//!
+//! **Steady-state allocation.** The connection loop reuses one request
+//! and one response buffer per connection ([`read_frame_into`] fills in
+//! place, `dispatch` serializes straight into the response frame), the
+//! batch decode scratch is thread-local, and point queries run on the
+//! store's thread-local fan-out accumulator — a settled UPDATE / QUERY
+//! loop performs no per-request heap allocation. Scan responses
+//! (TOPK / HEAVY) come out of the store's version-stamped scan cache
+//! ([`super::sharded`]), which re-merges and re-scans only after a
+//! write invalidates its stamp.
+//!
 //! `BATCH_SKETCH` reuses the PR-1 coordinator worker pool
 //! ([`crate::coordinator::Coordinator`]) when the server is started
 //! `with_coordinator` and AOT artifacts are present; otherwise the
@@ -22,15 +40,22 @@
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
 use super::sharded::StoreConfig;
-use super::wal::DurableStore;
+use super::wal::{DurableOptions, DurableStore};
 use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
 use crate::sketch::stream::StreamSketch;
 use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::cell::RefCell;
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+
+thread_local! {
+    /// Per-connection-thread scratch for decoded UPDATE_BATCH items —
+    /// the batched write path allocates nothing per request once warm.
+    static BATCH_SCRATCH: RefCell<Vec<(usize, usize, f64)>> = RefCell::new(Vec::new());
+}
 
 /// Request opcodes (first payload byte).
 ///
@@ -77,19 +102,24 @@ pub(crate) fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> 
     Ok(())
 }
 
-/// Read one frame; `Ok(None)` is a clean EOF at a frame boundary.
-pub(crate) fn read_frame(stream: &mut TcpStream) -> Result<Option<Vec<u8>>> {
+/// Read one frame into `buf`, reusing its capacity (the per-connection
+/// steady state allocates nothing); `Ok(false)` is a clean EOF at a
+/// frame boundary.
+pub(crate) fn read_frame_into(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<bool> {
     let mut lenb = [0u8; 4];
     match stream.read_exact(&mut lenb) {
         Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
         Err(e) => return Err(e.into()),
     }
     let len = u32::from_le_bytes(lenb);
     ensure!(len <= MAX_FRAME, "oversized frame ({len} bytes)");
-    let mut buf = vec![0u8; len as usize];
-    stream.read_exact(&mut buf)?;
-    Ok(Some(buf))
+    // resize without clear: only buffer *growth* pays a zero-fill, and
+    // read_exact overwrites every byte (or errors, dropping the
+    // connection) — no stale bytes can leak into a served frame
+    buf.resize(len as usize, 0);
+    stream.read_exact(buf)?;
+    Ok(true)
 }
 
 /// How to boot a [`StoreServer`].
@@ -100,10 +130,14 @@ pub struct StoreServerConfig {
     pub store: StoreConfig,
     /// snapshot/WAL directory; `None` = in-memory only
     pub data_dir: Option<String>,
-    /// `sync_data` every WAL append (power-loss durability; group
-    /// commit amortizes the sync over a batch). Ignored without
-    /// `data_dir`.
+    /// `sync_data` every WAL commit (power-loss durability; group
+    /// commit amortizes the sync over a batch or a leader group).
+    /// Ignored without `data_dir`.
     pub fsync: bool,
+    /// leader/follower cross-connection group commit (default on);
+    /// `false` = one WAL write + flush per record, the measured
+    /// baseline. Ignored without `data_dir`.
+    pub group_commit: bool,
     /// boot the coordinator worker pool for BATCH_SKETCH
     pub with_coordinator: bool,
     /// AOT artifacts for the coordinator backend
@@ -117,6 +151,7 @@ impl Default for StoreServerConfig {
             store: StoreConfig::default(),
             data_dir: None,
             fsync: false,
+            group_commit: true,
             with_coordinator: false,
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
         }
@@ -144,7 +179,11 @@ pub struct StoreServer {
 impl StoreServer {
     pub fn start(cfg: StoreServerConfig) -> Result<Self> {
         let store = match &cfg.data_dir {
-            Some(dir) => DurableStore::open_with(Path::new(dir), cfg.store.clone(), cfg.fsync)?,
+            Some(dir) => DurableStore::open_opts(
+                Path::new(dir),
+                cfg.store.clone(),
+                DurableOptions { fsync: cfg.fsync, group_commit: cfg.group_commit },
+            )?,
             None => DurableStore::in_memory(cfg.store.clone()),
         };
         let coordinator = if cfg.with_coordinator {
@@ -236,16 +275,20 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_nodelay(true);
+    // one request and one response buffer per connection, reused across
+    // requests — the settled request loop allocates nothing
+    let mut req = Vec::new();
+    let mut resp = Vec::new();
     loop {
-        let req = match read_frame(&mut stream) {
-            Ok(Some(r)) => r,
-            Ok(None) => break,
+        match read_frame_into(&mut stream, &mut req) {
+            Ok(true) => {}
+            Ok(false) => break,
             Err(e) => {
                 crate::log_debug!("store: connection read error: {e}");
                 break;
             }
-        };
-        let (resp, shutdown) = handle_request(&req, &shared);
+        }
+        let shutdown = handle_request(&req, &shared, &mut resp);
         if write_frame(&mut stream, &resp).is_err() {
             break;
         }
@@ -260,30 +303,30 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
     }
 }
 
-/// Wrap [`dispatch`] into a status-tagged response frame; protocol
-/// errors become `STATUS_ERR` + message instead of a dropped connection.
-fn handle_request(req: &[u8], shared: &Shared) -> (Vec<u8>, bool) {
-    match dispatch(req, shared) {
-        Ok((body, shutdown)) => {
-            let mut resp = Vec::with_capacity(body.len() + 1);
-            codec::put_u8(&mut resp, STATUS_OK);
-            resp.extend_from_slice(&body);
-            (resp, shutdown)
-        }
+/// Run [`dispatch`] straight into the reused response buffer as a
+/// status-tagged frame; protocol errors become `STATUS_ERR` + message
+/// instead of a dropped connection. Returns the shutdown flag.
+fn handle_request(req: &[u8], shared: &Shared, resp: &mut Vec<u8>) -> bool {
+    resp.clear();
+    codec::put_u8(resp, STATUS_OK);
+    match dispatch(req, shared, resp) {
+        Ok(shutdown) => shutdown,
         Err(e) => {
-            let mut resp = Vec::new();
-            codec::put_u8(&mut resp, STATUS_ERR);
+            resp.clear();
+            codec::put_u8(resp, STATUS_ERR);
             resp.extend_from_slice(e.to_string().as_bytes());
-            (resp, false)
+            false
         }
     }
 }
 
-fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
+/// Handle one request, serializing the response body directly into
+/// `body` (which already holds the status byte). Returns the shutdown
+/// flag; on `Err` the caller discards `body` and frames the error.
+fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
     let mut rd = Reader::new(req);
     let opcode = rd.u8()?;
     let cfg = shared.store.config();
-    let mut body = Vec::new();
     match opcode {
         op::UPDATE => {
             let (i, j, w) = rd.update_triple()?;
@@ -294,25 +337,32 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
         op::UPDATE_BATCH => {
             let count = rd.u32()? as usize;
             ensure!(count <= MAX_BATCH_UPDATES, "batch of {count} updates exceeds cap");
-            // decode + validate the whole batch before applying any of
-            // it: a bad item must not leave a half-applied batch behind
-            let mut items = Vec::with_capacity(count);
-            for _ in 0..count {
-                let (i, j, w) = rd.update_triple()?;
-                let (i, j) = (i as usize, j as usize);
-                ensure!(
-                    i < cfg.n1 && j < cfg.n2,
-                    "batch key ({i}, {j}) outside universe {}x{}",
-                    cfg.n1,
-                    cfg.n2
-                );
-                ensure!(w.is_finite(), "non-finite update weight in batch");
-                items.push((i, j, w));
-            }
-            // group commit + shard-grouped apply: one WAL frame and one
-            // lock acquisition per destination shard for the whole batch
-            shared.store.update_batch(&items)?;
-            codec::put_u32(&mut body, count as u32);
+            // decode + validate the whole batch (into the thread-local
+            // scratch — no per-request allocation once warm) before
+            // applying any of it: a bad item must not leave a
+            // half-applied batch behind
+            BATCH_SCRATCH.with(|cell| -> Result<()> {
+                let mut items = cell.borrow_mut();
+                items.clear();
+                items.reserve(count);
+                for _ in 0..count {
+                    let (i, j, w) = rd.update_triple()?;
+                    let (i, j) = (i as usize, j as usize);
+                    ensure!(
+                        i < cfg.n1 && j < cfg.n2,
+                        "batch key ({i}, {j}) outside universe {}x{}",
+                        cfg.n1,
+                        cfg.n2
+                    );
+                    ensure!(w.is_finite(), "non-finite update weight in batch");
+                    items.push((i, j, w));
+                }
+                // group commit + shard-grouped apply: one WAL frame and
+                // one lock acquisition per destination shard for the
+                // whole batch
+                shared.store.update_batch(&items)
+            })?;
+            codec::put_u32(body, count as u32);
         }
         op::QUERY => {
             let (i, j) = (rd.u32()? as usize, rd.u32()? as usize);
@@ -322,17 +372,17 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
                 cfg.n1,
                 cfg.n2
             );
-            codec::put_f64(&mut body, shared.store.point_query(i, j));
+            codec::put_f64(body, shared.store.point_query(i, j));
         }
         op::TOPK => {
             let k = rd.u32()? as usize;
             ensure!(k <= MAX_TOPK, "top-k of {k} exceeds cap {MAX_TOPK}");
-            put_entries(&mut body, &shared.store.top_k(k));
+            put_entries(body, &shared.store.top_k(k));
         }
         op::HEAVY => {
             let threshold = rd.f64()?;
             ensure!(threshold.is_finite(), "non-finite heavy-hitter threshold");
-            put_entries(&mut body, &shared.store.heavy_hitters(threshold));
+            put_entries(body, &shared.store.heavy_hitters(threshold));
         }
         op::MERGE => {
             let sk = StreamSketch::decode(&mut rd)?;
@@ -348,10 +398,10 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
         op::ADVANCE_EPOCH => shared.store.advance_epoch()?,
         op::STATS => {
             let st = shared.store.stats();
-            codec::put_u32(&mut body, st.shards as u32);
-            codec::put_u32(&mut body, st.window as u32);
-            codec::put_u64(&mut body, st.epoch);
-            codec::put_u64(&mut body, st.updates);
+            codec::put_u32(body, st.shards as u32);
+            codec::put_u32(body, st.window as u32);
+            codec::put_u64(body, st.epoch);
+            codec::put_u64(body, st.updates);
         }
         op::BATCH_SKETCH => {
             let co = shared
@@ -365,15 +415,15 @@ fn dispatch(req: &[u8], shared: &Shared) -> Result<(Vec<u8>, bool)> {
                 x.push(rd.f32()?);
             }
             let out = co.call(Job::CsSketch(x)).map_err(|e| anyhow!("sketch job: {e}"))?;
-            codec::put_u32(&mut body, u32::try_from(out.len()).expect("sketch output fits u32"));
+            codec::put_u32(body, u32::try_from(out.len()).expect("sketch output fits u32"));
             for v in out {
-                codec::put_f32(&mut body, v);
+                codec::put_f32(body, v);
             }
         }
-        op::SHUTDOWN => return Ok((body, true)),
+        op::SHUTDOWN => return Ok(true),
         other => bail!("unknown opcode {other}"),
     }
-    Ok((body, false))
+    Ok(false)
 }
 
 fn put_entries(out: &mut Vec<u8>, entries: &[(usize, usize, f64)]) {
@@ -403,9 +453,7 @@ mod tests {
             addr: "127.0.0.1:0".to_string(),
             store: test_cfg(),
             data_dir,
-            fsync: false,
-            with_coordinator: false,
-            artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
+            ..Default::default()
         }) {
             Ok(s) => Some(s),
             Err(e) => {

@@ -14,8 +14,25 @@
 //!   counter, so the estimate is *bit-identical* to querying a single
 //!   sketch fed the whole stream (over exactly-representable update
 //!   weights, where addition reassociates without rounding);
-//! - **merge** — scans (top-k / heavy hitters) first add the shard
-//!   totals into one sketch, then run the pruned scan once.
+//! - **merge** — scans (top-k / heavy hitters) run over one merged
+//!   sketch of all shard totals.
+//!
+//! **Version-cached scan plane.** The merged sketch is not rebuilt per
+//! scan: the store keeps one cached merged sketch stamped with a
+//! monotonically increasing version (bumped, under the owning shard's
+//! lock, by every update / batch / merge — and by epoch rotation under
+//! all locks). Each shard additionally accumulates a small *pending*
+//! delta sketch of its updates since the cache last saw it; a scan
+//! whose stamp is stale folds only those per-shard deltas into the
+//! cache (clearing each under its own lock) instead of re-merging all
+//! K shards — linearity again: `cache + Σ deltas ≡ re-merge`,
+//! bit-identical over exactly-representable weights. Only an epoch
+//! rotation (which *subtracts* expiring slots from the totals, a
+//! change the deltas do not record) forces the full K-way re-merge,
+//! still available directly as [`ShardedStore::merged_uncached`] — the
+//! oracle the property tests compare the cache against. On top of the
+//! cached sketch the last TOPK / HEAVY answer is memoized per stamp,
+//! so a read-heavy serving loop pays zero re-scans between writes.
 //!
 //! Sharding is by key hash, so one shard = one lock domain and writers
 //! on different shards never contend. Every shard uses the *same*
@@ -26,8 +43,41 @@ use super::mergeable::MergeableSketch;
 use crate::rng::SplitMix64;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
+
+thread_local! {
+    /// Per-thread accumulator for the point-query fan-out (and any
+    /// other d-length scratch need): the steady-state read path
+    /// performs zero heap allocation. The contract is *returned
+    /// zeroed* — every user re-zeros after `finalize_estimates`
+    /// consumes the accumulated counters, and the debug assertion in
+    /// [`with_zeroed_scratch`] catches a caller that leaks a dirty
+    /// scratch back.
+    static POINT_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// Hand `f` a zeroed `d`-length slice from the thread-local scratch and
+/// re-zero it afterwards (so `finalize_estimates` always starts from a
+/// fully-zeroed accumulator on the next call).
+fn with_zeroed_scratch<R>(d: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    POINT_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < d {
+            buf.resize(d, 0.0);
+        }
+        let acc = &mut buf[..d];
+        debug_assert!(
+            acc.iter().all(|&x| x == 0.0),
+            "point-query scratch handed back dirty: finalize_estimates must \
+             see a fully-zeroed accumulator on entry"
+        );
+        let out = f(acc);
+        acc.fill(0.0);
+        out
+    })
+}
 
 /// Geometry + topology of a store. Two stores (or a store and a remote
 /// sketch) interoperate iff the sketch-identity fields (`n1, n2, m1,
@@ -133,7 +183,52 @@ struct Shard {
     cur: usize,
     /// running sum of the live ring slots
     total: StreamSketch,
+    /// delta sketch of everything applied since the scan cache last
+    /// folded this shard; cleared (under this shard's lock) by the fold
+    pending: StreamSketch,
+    /// cheap emptiness flag for `pending` — set by every mutation, so
+    /// the fold can skip the O(d·m1·m2) merge for untouched shards
+    pending_dirty: bool,
 }
+
+/// The incrementally maintained scan plane: one merged sketch stamped
+/// with the store version (and build epoch) it reflects, plus the last
+/// memoized TOPK / HEAVY answer at that stamp. Guarded by one mutex —
+/// concurrent scans serialize here instead of on every shard lock.
+struct ScanCache {
+    merged: StreamSketch,
+    /// store version `merged` is exact at; `u64::MAX` = never built
+    version: u64,
+    /// epoch `merged` was built at; a rotation invalidates incremental
+    /// maintenance (expiry subtracts from the totals, which the pending
+    /// deltas do not record) and forces a full K-way re-merge
+    epoch: u64,
+    /// memoized `merged.top_k(k)` for the last requested k
+    top_k: Option<(usize, Vec<(usize, usize, f64)>)>,
+    /// memoized `merged.heavy_hitters(t)` for the last threshold (bit
+    /// pattern, so the match is exact even for odd thresholds)
+    heavy: Option<(u64, Vec<(usize, usize, f64)>)>,
+}
+
+impl ScanCache {
+    /// Never-built cache: the `u64::MAX` stamps can match no live
+    /// version/epoch, so the first scan always takes the full-rebuild
+    /// path. Shared by [`ShardedStore::new`] and snapshot decoding.
+    fn empty(cfg: &StoreConfig) -> Mutex<ScanCache> {
+        Mutex::new(ScanCache {
+            merged: cfg.fresh_sketch(),
+            version: u64::MAX,
+            epoch: u64::MAX,
+            top_k: None,
+            heavy: None,
+        })
+    }
+}
+
+/// Bounded retries for an exact incremental version stamp while writers
+/// race the fold; past this the refresh takes every shard lock, which
+/// freezes the version and always yields an exact stamp.
+const SCAN_REFRESH_RETRY_LIMIT: usize = 4;
 
 /// The sharded, epoch-windowed store. All methods take `&self`; one
 /// mutex per shard is the only synchronization on the write path.
@@ -142,6 +237,14 @@ pub struct ShardedStore {
     shards: Vec<Mutex<Shard>>,
     /// completed window advances
     epoch: AtomicU64,
+    /// bumped by every mutation while the owning shard's lock (or, for
+    /// rotation, every lock) is held — the scan cache's staleness stamp
+    version: AtomicU64,
+    scan: Mutex<ScanCache>,
+    /// rotation-storm fallbacks taken by the optimistic readers
+    /// ([`ShardedStore::point_query`] / [`ShardedStore::stats`]) —
+    /// diagnostics, and how the tests prove the lock-all path runs
+    lockall_fallbacks: AtomicU64,
     router_salt: u64,
     /// empty same-family sketch: evaluates hashes/signs for the fan-out
     /// query without locking any shard
@@ -157,12 +260,24 @@ impl ShardedStore {
                     ring: (0..cfg.window).map(|_| cfg.fresh_sketch()).collect(),
                     cur: 0,
                     total: cfg.fresh_sketch(),
+                    pending: cfg.fresh_sketch(),
+                    pending_dirty: false,
                 })
             })
             .collect();
         let router_salt = Self::derive_salt(cfg.seed);
         let probe = cfg.fresh_sketch();
-        Self { cfg, shards, epoch: AtomicU64::new(0), router_salt, probe }
+        let scan = ScanCache::empty(&cfg);
+        Self {
+            cfg,
+            shards,
+            epoch: AtomicU64::new(0),
+            version: AtomicU64::new(0),
+            scan,
+            lockall_fallbacks: AtomicU64::new(0),
+            router_salt,
+            probe,
+        }
     }
 
     fn derive_salt(seed: u64) -> u64 {
@@ -181,7 +296,11 @@ impl ShardedStore {
         (SplitMix64::new(self.router_salt ^ key).next_u64() % self.cfg.shards as u64) as usize
     }
 
-    /// Route one stream item to its shard.
+    /// Route one stream item to its shard. The fused fan-out kernel
+    /// lands it in the current epoch slot, the running total, and the
+    /// scan cache's pending delta with **one** hash walk; the store
+    /// version bumps before the shard lock drops, so the scan cache can
+    /// tell exactly when it is stale.
     pub fn update(&self, i: usize, j: usize, w: f64) {
         assert!(
             i < self.cfg.n1 && j < self.cfg.n2,
@@ -192,18 +311,26 @@ impl ShardedStore {
         let s = self.shard_of(i, j);
         let mut guard = self.shards[s].lock().expect("shard lock");
         let sh = &mut *guard;
-        sh.ring[sh.cur].update(i, j, w);
-        sh.total.update(i, j, w);
+        let cur = sh.cur;
+        StreamSketch::update_fanout(
+            &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
+            i,
+            j,
+            w,
+        );
+        sh.pending_dirty = true;
+        self.version.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Apply a whole batch with one lock acquisition per destination
     /// shard instead of one per item: items are grouped by
     /// [`ShardedStore::shard_of`] (stable — per-shard arrival order is
     /// preserved), then each shard's run goes through the fused
-    /// [`StreamSketch::update_batch`] kernel on its current epoch slot
-    /// and total. Bit-identical to per-item [`ShardedStore::update`]
-    /// calls in batch order: grouping only reorders *across* shards,
-    /// whose tables are disjoint.
+    /// [`StreamSketch::update_batch_fanout`] kernel, landing in the
+    /// current epoch slot, the running total, and the scan cache's
+    /// pending delta with one hash walk per item. Bit-identical to
+    /// per-item [`ShardedStore::update`] calls in batch order: grouping
+    /// only reorders *across* shards, whose tables are disjoint.
     ///
     /// The batch is not atomic across shards — a concurrent cross-shard
     /// reader can see one shard's run applied and another's not, exactly
@@ -254,8 +381,13 @@ impl ShardedStore {
             }
             let mut guard = self.shards[s].lock().expect("shard lock");
             let sh = &mut *guard;
-            sh.ring[sh.cur].update_batch(group);
-            sh.total.update_batch(group);
+            let cur = sh.cur;
+            StreamSketch::update_batch_fanout(
+                &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
+                group,
+            );
+            sh.pending_dirty = true;
+            self.version.fetch_add(1, Ordering::SeqCst);
         }
     }
 
@@ -290,31 +422,56 @@ impl ShardedStore {
             self.cfg.n1,
             self.cfg.n2
         );
-        let mut acc = vec![0.0; self.cfg.d];
-        for _ in 0..EPOCH_RETRY_LIMIT {
-            let e0 = self.epoch();
+        // thread-local accumulator: the steady-state read path performs
+        // zero heap allocation per call
+        with_zeroed_scratch(self.cfg.d, |acc| {
+            for _ in 0..EPOCH_RETRY_LIMIT {
+                let e0 = self.epoch();
+                acc.fill(0.0);
+                for shm in &self.shards {
+                    shm.lock().expect("shard lock").total.accumulate_raw(i, j, acc);
+                }
+                if self.epoch() == e0 {
+                    return self.probe.finalize_estimates(i, j, acc);
+                }
+            }
+            // rotation storm: fall back to one consistent fully-locked
+            // read (counted, so tests can prove this path runs)
+            self.lockall_fallbacks.fetch_add(1, Ordering::Relaxed);
+            let guards = self.lock_all();
             acc.fill(0.0);
-            for shm in &self.shards {
-                shm.lock().expect("shard lock").total.accumulate_raw(i, j, &mut acc);
+            for sh in &guards {
+                sh.total.accumulate_raw(i, j, acc);
             }
-            if self.epoch() == e0 {
-                return self.probe.finalize_estimates(i, j, &mut acc);
-            }
-        }
-        // rotation storm: fall back to one consistent fully-locked read
-        let guards = self.lock_all();
-        acc.fill(0.0);
-        for sh in &guards {
-            sh.total.accumulate_raw(i, j, &mut acc);
-        }
-        self.probe.finalize_estimates(i, j, &mut acc)
+            self.probe.finalize_estimates(i, j, acc)
+        })
     }
 
-    /// Merge every shard's live window into one sketch (scans,
-    /// replication hand-off, MERGE-RPC export). Holds every shard lock
-    /// (index order) for the duration, so the result is one consistent
-    /// instant — never a mix of pre- and post-rotation shards.
+    /// How many times an optimistic reader ([`ShardedStore::point_query`]
+    /// / [`ShardedStore::stats`]) exhausted [`EPOCH_RETRY_LIMIT`] epoch
+    /// collisions and fell back to the fully-locked read. Diagnostics;
+    /// the rotation-storm tests assert it moves.
+    pub fn lockall_fallbacks(&self) -> u64 {
+        self.lockall_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Every-shard merge of the live window, served from the
+    /// version-stamped scan cache (refreshed incrementally from the
+    /// per-shard pending deltas; see the module docs). Bit-identical to
+    /// [`ShardedStore::merged_uncached`] over exactly-representable
+    /// weights — the store's standing contract.
     pub fn merged(&self) -> StreamSketch {
+        let mut cache = self.scan.lock().expect("scan cache lock");
+        self.refresh_scan_cache(&mut cache);
+        cache.merged.clone()
+    }
+
+    /// The pre-cache behaviour: merge every shard total into a fresh
+    /// sketch under every shard lock (index order), one consistent
+    /// instant. This is the full K-way re-merge the cache avoids — kept
+    /// public as the oracle for the cache-identity property tests and
+    /// the uncached side of the scan bench.
+    pub fn merged_uncached(&self) -> StreamSketch {
         let guards = self.lock_all();
         let mut out = self.cfg.fresh_sketch();
         for sh in &guards {
@@ -323,7 +480,10 @@ impl ShardedStore {
         out
     }
 
-    /// The k heaviest keys in the live window (merged scan).
+    /// The k heaviest keys in the live window, from the cached scan
+    /// plane: the merged sketch refreshes incrementally and the ranked
+    /// answer itself is memoized per (version, k) — a read-heavy loop
+    /// re-scans only after a write invalidates the stamp.
     ///
     /// Uses the marginal-pruned scan for non-negative workloads (the
     /// store's traffic use case; window expiry does not break this — it
@@ -333,13 +493,93 @@ impl ShardedStore {
     /// dense variant, so turnstile streams get correct answers without
     /// caller intervention; point queries are exact either way.
     pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
-        self.merged().top_k(k)
+        let mut cache = self.scan.lock().expect("scan cache lock");
+        self.refresh_scan_cache(&mut cache);
+        if let Some((ck, hits)) = &cache.top_k {
+            if *ck == k {
+                return hits.clone();
+            }
+        }
+        let hits = cache.merged.top_k(k);
+        cache.top_k = Some((k, hits.clone()));
+        hits
     }
 
-    /// All keys whose windowed weight clears `threshold` (merged scan).
+    /// All keys whose windowed weight clears `threshold`, memoized like
+    /// [`ShardedStore::top_k`] (exact threshold match, by bit pattern).
     /// Same pruned-vs-dense routing as [`ShardedStore::top_k`].
     pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
-        self.merged().heavy_hitters(threshold)
+        let mut cache = self.scan.lock().expect("scan cache lock");
+        self.refresh_scan_cache(&mut cache);
+        if let Some((ct, hits)) = &cache.heavy {
+            if *ct == threshold.to_bits() {
+                return hits.clone();
+            }
+        }
+        let hits = cache.merged.heavy_hitters(threshold);
+        cache.heavy = Some((threshold.to_bits(), hits.clone()));
+        hits
+    }
+
+    /// Bring the scan cache up to the current store version.
+    ///
+    /// Invalidation rules: any version bump clears the memoized scan
+    /// results; a version bump *without* an epoch change folds only the
+    /// dirty per-shard pending deltas into the cached sketch (each
+    /// cleared under its own shard lock); an epoch change means expiry
+    /// subtracted mass the deltas never saw, so the cache rebuilds from
+    /// a full K-way re-merge under every shard lock. The version stamp
+    /// is only written when it is *exact*: either no mutation raced the
+    /// incremental fold (checked by re-reading the version — bumps
+    /// happen under shard locks after the mutation is visible, so an
+    /// unchanged version proves the folds saw everything), or the
+    /// rebuild held every lock, freezing the version. Re-folding after
+    /// a raced attempt is safe because absorbed deltas were cleared.
+    fn refresh_scan_cache(&self, cache: &mut ScanCache) {
+        if cache.version == self.version.load(Ordering::SeqCst) && cache.epoch == self.epoch() {
+            return;
+        }
+        // something changed — whatever refresh path runs, the memoized
+        // scan answers are stale
+        cache.top_k = None;
+        cache.heavy = None;
+        if cache.epoch == self.epoch() {
+            for _ in 0..SCAN_REFRESH_RETRY_LIMIT {
+                let v0 = self.version.load(Ordering::SeqCst);
+                for shm in &self.shards {
+                    let mut guard = shm.lock().expect("shard lock");
+                    let sh = &mut *guard;
+                    if sh.pending_dirty {
+                        cache.merged.merge_scaled(&sh.pending, 1.0);
+                        sh.pending.clear();
+                        sh.pending_dirty = false;
+                    }
+                }
+                if self.epoch() != cache.epoch {
+                    break; // rotation raced the fold: rebuild below
+                }
+                if self.version.load(Ordering::SeqCst) == v0 {
+                    cache.version = v0;
+                    return;
+                }
+                // writers raced the fold; retry for an exact stamp
+            }
+        }
+        // full K-way re-merge under every shard lock (version and epoch
+        // are frozen while we hold them all, so the stamp is exact):
+        // the post-rotation path, and the bounded fallback when writers
+        // keep racing the incremental fold
+        let mut guards = self.lock_all();
+        let mut merged = self.cfg.fresh_sketch();
+        for guard in guards.iter_mut() {
+            let sh = &mut **guard;
+            merged.merge_scaled(&sh.total, 1.0);
+            sh.pending.clear();
+            sh.pending_dirty = false;
+        }
+        cache.merged = merged;
+        cache.version = self.version.load(Ordering::SeqCst);
+        cache.epoch = self.epoch();
     }
 
     /// Merge a same-family sketch from outside (another node, a batch
@@ -358,8 +598,13 @@ impl ShardedStore {
         );
         let mut guard = self.shards[0].lock().expect("shard lock");
         let sh = &mut *guard;
-        sh.ring[sh.cur].merge_scaled(sk, 1.0);
+        let cur = sh.cur;
+        sh.ring[cur].merge_scaled(sk, 1.0);
         sh.total.merge_scaled(sk, 1.0);
+        // the scan cache's delta record, like any other mutation
+        sh.pending.merge_scaled(sk, 1.0);
+        sh.pending_dirty = true;
+        self.version.fetch_add(1, Ordering::SeqCst);
         Ok(())
     }
 
@@ -382,8 +627,12 @@ impl ShardedStore {
             sh.ring[next].clear();
             sh.cur = next;
         }
-        // bumped while the locks are still held, so epoch and cursors
-        // move together for any holder of all the locks
+        // both bumped while the locks are still held, so epoch, version
+        // and cursors move together for any holder of all the locks.
+        // The version bump alone would not tell the scan cache that the
+        // totals shrank (pending deltas never record expiry); the epoch
+        // bump is what routes its next refresh to the full re-merge.
+        self.version.fetch_add(1, Ordering::SeqCst);
         self.epoch.fetch_add(1, Ordering::SeqCst);
     }
 
@@ -402,7 +651,8 @@ impl ShardedStore {
 
     /// Epoch-validated like [`ShardedStore::point_query`]: the count is
     /// retried while rotations interleave with the per-shard sums, with
-    /// the same bounded fall-back to a fully-locked read.
+    /// the same bounded (and counted) fall-back to a fully-locked read.
+    /// Already allocation-free — the sums are scalar accumulators.
     pub fn stats(&self) -> StoreStats {
         let mk = |epoch: u64, updates: u64| StoreStats {
             shards: self.cfg.shards,
@@ -421,6 +671,7 @@ impl ShardedStore {
                 return mk(e0, updates);
             }
         }
+        self.lockall_fallbacks.fetch_add(1, Ordering::Relaxed);
         let guards = self.lock_all();
         mk(self.epoch(), guards.iter().map(|sh| sh.total.updates).sum())
     }
@@ -459,11 +710,30 @@ impl ShardedStore {
             }
             let total = StreamSketch::decode(rd)?;
             ensure!(cfg.matches(&total), "corrupt snapshot: total sketch family mismatch");
-            shards.push(Mutex::new(Shard { ring, cur, total }));
+            // pendings are redundant state (already inside the totals),
+            // so snapshots do not carry them: a decoded store starts
+            // with clean deltas and a never-built scan cache
+            shards.push(Mutex::new(Shard {
+                ring,
+                cur,
+                total,
+                pending: cfg.fresh_sketch(),
+                pending_dirty: false,
+            }));
         }
         let router_salt = Self::derive_salt(cfg.seed);
         let probe = cfg.fresh_sketch();
-        Ok(Self { cfg, shards, epoch: AtomicU64::new(epoch), router_salt, probe })
+        let scan = ScanCache::empty(&cfg);
+        Ok(Self {
+            cfg,
+            shards,
+            epoch: AtomicU64::new(epoch),
+            version: AtomicU64::new(0),
+            scan,
+            lockall_fallbacks: AtomicU64::new(0),
+            router_salt,
+            probe,
+        })
     }
 }
 
@@ -627,6 +897,88 @@ mod tests {
         let hh = store.heavy_hitters(150.0);
         assert!(hh.iter().any(|&(i, j, _)| (i, j) == (3, 4)));
         assert!(hh.iter().any(|&(i, j, _)| (i, j) == (20, 30)));
+    }
+
+    #[test]
+    fn cached_scans_match_uncached_re_merge() {
+        // the scan cache must be indistinguishable from a full K-way
+        // re-merge after every kind of mutation: first build, then an
+        // incremental pending-delta fold, a rotation (full-rebuild
+        // path), a remote merge carrying a deletion (dense-scan
+        // routing), and total expiry
+        let cfg = small_cfg(4, 3);
+        let store = ShardedStore::new(cfg.clone());
+        let mut rng = Pcg64::new(21);
+        let step = |store: &ShardedStore, rng: &mut Pcg64, n: usize| {
+            for _ in 0..n {
+                let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+                store.update(i, j, (1 + rng.gen_range(9)) as f64);
+            }
+        };
+        let check = |store: &ShardedStore| {
+            let fresh = store.merged_uncached();
+            let cached = store.merged();
+            assert_eq!(cached.updates, fresh.updates);
+            assert_eq!(cached.has_deletions, fresh.has_deletions);
+            for r in 0..5 {
+                assert_eq!(cached.table(r), fresh.table(r), "table {r}");
+            }
+            for k in [1usize, 3, 8] {
+                assert_eq!(store.top_k(k), fresh.top_k(k), "k={k}");
+                // second call at the same k takes the memoized path
+                assert_eq!(store.top_k(k), fresh.top_k(k), "memoized k={k}");
+            }
+            for t in [5.0, 40.0] {
+                assert_eq!(store.heavy_hitters(t), fresh.heavy_hitters(t), "t={t}");
+                assert_eq!(store.heavy_hitters(t), fresh.heavy_hitters(t), "memoized t={t}");
+            }
+        };
+        step(&store, &mut rng, 300);
+        check(&store); // first build (never-built cache → full merge)
+        step(&store, &mut rng, 200);
+        check(&store); // incremental fold of the pending deltas
+        store.advance_epoch();
+        check(&store); // rotation forces the full-rebuild path
+        step(&store, &mut rng, 150);
+        let mut remote = cfg.fresh_sketch();
+        remote.update(1, 2, -3.0); // a deletion arrives via MERGE
+        store.merge_sketch(&remote).unwrap();
+        check(&store); // has_deletions routes scans to the dense variants
+        assert!(store.merged().has_deletions);
+        for _ in 0..3 {
+            store.advance_epoch();
+        }
+        check(&store); // everything expired
+        assert_eq!(store.updates(), 0);
+    }
+
+    #[test]
+    fn scan_cache_invalidates_on_every_mutation_kind() {
+        // after every kind of mutation the next scan must reflect it —
+        // i.e. match a fresh re-merge, never a stale memoized answer
+        let cfg = small_cfg(2, 2);
+        let store = ShardedStore::new(cfg.clone());
+        let expect_fresh = |store: &ShardedStore| {
+            let fresh = store.merged_uncached();
+            assert_eq!(store.top_k(3), fresh.top_k(3));
+            assert_eq!(store.heavy_hitters(1.0), fresh.heavy_hitters(1.0));
+            assert_eq!(store.merged().updates, fresh.updates);
+        };
+        store.update(1, 1, 10.0);
+        expect_fresh(&store);
+        store.update(2, 2, 20.0); // single update invalidates
+        expect_fresh(&store);
+        let mut remote = cfg.fresh_sketch();
+        remote.update(3, 3, 40.0);
+        store.merge_sketch(&remote).unwrap(); // remote merge invalidates
+        expect_fresh(&store);
+        store.update_batch(&[(4, 4, 1.0), (5, 5, 2.0), (6, 6, 3.0)]); // batch invalidates
+        expect_fresh(&store);
+        store.advance_epoch();
+        store.advance_epoch(); // window 2: everything expires
+        expect_fresh(&store);
+        assert_eq!(store.updates(), 0);
+        assert_eq!(store.merged().updates, 0, "expired mass still served from cache");
     }
 
     #[test]

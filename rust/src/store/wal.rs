@@ -17,28 +17,45 @@
 //! then immediately re-snapshots and truncates the WAL, so the torn
 //! tail is healed rather than appended after.
 //!
-//! **Group commit.** A whole batch of updates is one
+//! **Group commit, two ways.** A whole batch of updates is one
 //! [`WalRecord::UpdateBatch`] frame: one encode, one append, one flush
 //! (one `sync_data` when fsync is on) for the entire batch, instead of
 //! per item. The in-memory apply then goes through the shard-grouped
 //! [`ShardedStore::update_batch`], so the WAL cost and the lock cost
-//! both amortize over the batch.
+//! both amortize over the batch. On top of that, *cross-connection*
+//! commits coalesce via a **leader/follower commit queue**
+//! ([`GroupCommitLog`]): every appender frames its record outside any
+//! lock, stages it under the queue mutex, and is assigned a commit
+//! LSN. Leader election is implicit — the first appender to observe no
+//! leader in flight takes the file writer and writes *every* staged
+//! frame with one coalesced `write_all` + flush (one `sync_data` in
+//! fsync mode), with the queue mutex released so later arrivals keep
+//! staging the next group. Followers park on a condvar until the
+//! durable LSN covers their frame. The result: many independent
+//! un-batched connections pay one disk round-trip per *group*, not per
+//! record — the batched-WAL win without client changes. A failed group
+//! write truncates the chunk back out, **fail-stops** the log, and
+//! wakes every waiter with an error (nothing past the failure was
+//! acknowledged). `DurableOptions::group_commit = false` restores the
+//! per-record path (the bench baseline).
 //!
-//! **Concurrency.** The log mutex is held only for the append itself —
-//! not across the in-memory apply — so writers on different shards
-//! proceed in parallel after serializing briefly on the log. What keeps
-//! that safe is a commit *gate* (an `RwLock<()>`): every
-//! append→apply pair runs under a shared guard, while
-//! [`DurableStore::snapshot`] and [`DurableStore::advance_epoch`] take
-//! it exclusively. Exclusive acquisition therefore waits until every
-//! appended record has also been applied (so a snapshot image always
-//! contains exactly the records the truncated WAL held), and epoch
-//! rotation — which does not commute with updates — keeps the same
-//! relative order in the WAL as in the store. Update/merge records
-//! commute with each other (counter addition), so their apply order may
-//! differ from WAL order without changing any state reachable from
-//! either (bit-exact for exactly-representable weights, the store's
-//! standing contract).
+//! **Concurrency.** The queue mutex is held only for staging and
+//! hand-off — not across the file write, and never across the
+//! in-memory apply — so writers on different shards proceed in
+//! parallel after serializing briefly on the queue. What keeps that
+//! safe is a commit *gate* (an `RwLock<()>`): every append→apply pair
+//! runs under a shared guard, while [`DurableStore::snapshot`] and
+//! [`DurableStore::advance_epoch`] take it exclusively. Exclusive
+//! acquisition therefore waits until every appended record is durable
+//! *and* applied (a commit returns only once its LSN is durable, so
+//! the staged queue is empty whenever the gate is held exclusively —
+//! a snapshot image always contains exactly the records the truncated
+//! WAL held), and epoch rotation — which does not commute with updates
+//! — keeps the same relative order in the WAL as in the store.
+//! Update/merge records commute with each other (counter addition), so
+//! their apply order may differ from WAL order without changing any
+//! state reachable from either (bit-exact for exactly-representable
+//! weights, the store's standing contract).
 //!
 //! **Durability levels.** `flush` only moves bytes into the OS page
 //! cache: it survives a process crash, **not** a power failure or
@@ -71,7 +88,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Condvar, Mutex, RwLock};
 
 const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
 const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
@@ -211,35 +228,155 @@ impl WalWriter {
         Ok(Self { file, sync, committed_len: HEADER_LEN as u64 })
     }
 
-    /// Frame (length + CRC) and persist one record payload.
-    fn append_payload(&mut self, payload: &[u8]) -> Result<()> {
-        let mut frame = Vec::with_capacity(payload.len() + 8);
-        codec::put_u32(&mut frame, u32::try_from(payload.len()).expect("WAL record too large"));
-        codec::put_u32(&mut frame, codec::crc32(payload));
-        frame.extend_from_slice(payload);
-        if let Err(e) = self.append_frame(&frame) {
-            // the frame may sit complete in the page cache (or on disk,
-            // in sync mode) even though the caller gets an error —
-            // truncate it back out and try to persist the truncation so
-            // the NACKed write does not replay on recovery. Best effort:
-            // the caller fail-stops either way, and see committed_len
-            // for the residual ambiguity of an errored commit.
+    /// Persist pre-framed bytes — one frame, or a whole coalesced
+    /// group-commit chunk — with one `write_all` + flush (one
+    /// `sync_data` in sync mode).
+    fn append_frames(&mut self, framed: &[u8]) -> Result<()> {
+        if let Err(e) = self.write_and_sync(framed) {
+            // the chunk may sit (partly) complete in the page cache (or
+            // on disk, in sync mode) even though the callers get an
+            // error — truncate it back out and try to persist the
+            // truncation so the NACKed writes do not replay on
+            // recovery. Best effort: the log fail-stops either way, and
+            // see committed_len for the residual ambiguity of an
+            // errored commit.
             if self.file.set_len(self.committed_len).is_ok() {
                 let _ = self.file.sync_data();
             }
             return Err(e);
         }
-        self.committed_len += frame.len() as u64;
+        self.committed_len += framed.len() as u64;
         Ok(())
     }
 
-    fn append_frame(&mut self, frame: &[u8]) -> Result<()> {
-        self.file.write_all(frame)?;
+    fn write_and_sync(&mut self, framed: &[u8]) -> Result<()> {
+        self.file.write_all(framed)?;
         self.file.flush()?;
         if self.sync {
             self.file.sync_data().context("syncing WAL append")?;
         }
         Ok(())
+    }
+}
+
+fn failstop_error() -> anyhow::Error {
+    anyhow::anyhow!(
+        "store is fail-stopped: a WAL write failed and appending to the \
+         stale log would lose acknowledged writes on recovery"
+    )
+}
+
+/// Leader/follower commit queue over one [`WalWriter`] — see the module
+/// docs. Concurrent appenders stage framed records and the first to
+/// find no leader in flight writes the whole staged group with a single
+/// flush/`sync_data`; the rest wait on the condvar for their LSN.
+struct GroupCommitLog {
+    state: Mutex<CommitQueue>,
+    cv: Condvar,
+    /// `false` = one write + flush per record under the queue mutex
+    /// (the measured baseline; [`DurableOptions::group_commit`])
+    group: bool,
+}
+
+struct CommitQueue {
+    /// `None` while the leader holds the writer during a group write
+    /// (`writing == true`), or permanently after fail-stop
+    /// (`writing == false`)
+    writer: Option<WalWriter>,
+    writing: bool,
+    /// framed bytes staged for the next leader write
+    staged: Vec<u8>,
+    /// LSN of the newest staged frame
+    staged_lsn: u64,
+    /// every LSN ≤ this is durable (written + flushed / synced)
+    durable_lsn: u64,
+    /// next LSN to assign
+    next_lsn: u64,
+}
+
+impl GroupCommitLog {
+    fn new(writer: WalWriter, group: bool) -> Self {
+        Self {
+            state: Mutex::new(CommitQueue {
+                writer: Some(writer),
+                writing: false,
+                staged: Vec::new(),
+                staged_lsn: 0,
+                durable_lsn: 0,
+                next_lsn: 1,
+            }),
+            cv: Condvar::new(),
+            group,
+        }
+    }
+
+    /// Commit one framed record: stage it, then either lead the next
+    /// group write or park until a leader makes its LSN durable.
+    /// Returns only once the frame is durable at this log's level
+    /// (flushed; synced in fsync mode) — or with the fail-stop error if
+    /// a write failed before it got there.
+    fn commit_frame(&self, frame: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().expect("wal lock");
+        if st.writer.is_none() && !st.writing {
+            return Err(failstop_error());
+        }
+        if !self.group {
+            // per-record baseline: one write + flush per frame,
+            // serialized on the queue mutex (PR-3 behaviour)
+            let writer = st.writer.as_mut().expect("writer present");
+            if let Err(e) = writer.append_frames(frame) {
+                st.writer = None;
+                return Err(e.context("WAL append failed; store is now fail-stopped"));
+            }
+            return Ok(());
+        }
+        st.staged.extend_from_slice(frame);
+        let lsn = st.next_lsn;
+        st.next_lsn += 1;
+        st.staged_lsn = lsn;
+        loop {
+            if st.durable_lsn >= lsn {
+                return Ok(());
+            }
+            if st.writer.is_none() && !st.writing {
+                // a leader failed with our frame staged or in its
+                // chunk: nothing past the failure was acknowledged
+                return Err(failstop_error());
+            }
+            if !st.writing {
+                // leader election is implicit: we found no write in
+                // flight and our frame is still staged, so we take the
+                // writer and commit everything staged so far
+                let chunk = std::mem::take(&mut st.staged);
+                let group_lsn = st.staged_lsn;
+                let mut writer = st.writer.take().expect("writer present when not writing");
+                st.writing = true;
+                drop(st);
+                let res = writer.append_frames(&chunk);
+                st = self.state.lock().expect("wal lock");
+                st.writing = false;
+                match res {
+                    Ok(()) => {
+                        st.writer = Some(writer);
+                        if group_lsn > st.durable_lsn {
+                            st.durable_lsn = group_lsn;
+                        }
+                        self.cv.notify_all();
+                        // loop re-checks: durable_lsn now covers us
+                    }
+                    Err(e) => {
+                        // fail-stop (writer stays None); wake everyone
+                        // so followers observe it and error out
+                        self.cv.notify_all();
+                        return Err(e.context(
+                            "WAL append failed; store is now fail-stopped",
+                        ));
+                    }
+                }
+            } else {
+                st = self.cv.wait(st).expect("wal cv");
+            }
+        }
     }
 }
 
@@ -277,19 +414,38 @@ fn read_wal(path: &Path) -> Result<(u64, Vec<WalRecord>)> {
     Ok((generation, out))
 }
 
+/// Durability / commit-scheduling knobs for [`DurableStore::open_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct DurableOptions {
+    /// `sync_data` every WAL commit (power-loss durability; the group
+    /// commit amortizes the sync over the whole group)
+    pub fsync: bool,
+    /// leader/follower cross-connection group commit (default on);
+    /// `false` restores one write + flush per record under the log
+    /// mutex — the baseline `bench_store`'s concurrent-writer sweep
+    /// compares against
+    pub group_commit: bool,
+}
+
+impl Default for DurableOptions {
+    fn default() -> Self {
+        Self { fsync: false, group_commit: true }
+    }
+}
+
 /// A [`ShardedStore`] with optional snapshot/WAL durability. All write
 /// paths log first, then mutate; `log == None` is a purely in-memory
 /// store with identical semantics and no I/O.
 ///
-/// The log mutex guards only the append; the `commit` gate (shared for
-/// writers, exclusive for snapshot / epoch rotation) is what makes the
-/// append→apply pair atomic *relative to those two* without serializing
-/// writers against each other — see the module docs.
+/// The commit queue serializes only staging and the leader hand-off;
+/// the `commit` gate (shared for writers, exclusive for snapshot /
+/// epoch rotation) is what makes the append→apply pair atomic
+/// *relative to those two* without serializing writers against each
+/// other — see the module docs.
 pub struct DurableStore {
     store: ShardedStore,
-    /// `None` inside the mutex = writes are fail-stopped after a failed
-    /// WAL rotation (see [`DurableStore::snapshot`]).
-    log: Option<Mutex<Option<WalWriter>>>,
+    /// leader/follower commit queue; fail-stop lives inside it
+    log: Option<GroupCommitLog>,
     /// shared by every append→apply pair, exclusive for snapshot and
     /// epoch rotation. `std`'s futex-based `RwLock` (Linux) blocks new
     /// readers once a writer waits, so sustained update traffic cannot
@@ -323,6 +479,12 @@ impl DurableStore {
         Self::open_with(dir, cfg, false)
     }
 
+    /// [`DurableStore::open_opts`] with the default commit scheduling
+    /// (leader/follower group commit on) and the given fsync level.
+    pub fn open_with(dir: &Path, cfg: StoreConfig, fsync: bool) -> Result<Self> {
+        Self::open_opts(dir, cfg, DurableOptions { fsync, ..DurableOptions::default() })
+    }
+
     /// Open or create a durable store under `dir`: load the snapshot if
     /// one exists, replay the WAL tail onto it (only when the WAL's
     /// generation matches the snapshot's — a mismatch means a crash
@@ -332,11 +494,13 @@ impl DurableStore {
     /// existing store must match `cfg` — silently changing sketch
     /// geometry would corrupt every merge invariant.
     ///
-    /// `fsync = true` makes every WAL append `sync_data`, so
+    /// `opts.fsync = true` makes every WAL commit `sync_data`, so
     /// acknowledged writes survive power loss, not just process
-    /// crashes. Pair it with batched updates: group commit pays one
-    /// sync per batch instead of per item.
-    pub fn open_with(dir: &Path, cfg: StoreConfig, fsync: bool) -> Result<Self> {
+    /// crashes; both batched updates and the cross-connection group
+    /// commit amortize that sync over a whole group of records.
+    /// `opts.group_commit = false` restores per-record commits.
+    pub fn open_opts(dir: &Path, cfg: StoreConfig, opts: DurableOptions) -> Result<Self> {
+        let fsync = opts.fsync;
         cfg.validate()?;
         fs::create_dir_all(dir).with_context(|| format!("creating store dir {dir:?}"))?;
         let snap_path = dir.join(SNAPSHOT_FILE);
@@ -395,16 +559,18 @@ impl DurableStore {
         ds.write_snapshot_file().map_err(|e| match e {
             SnapInstall::NotInstalled(err) | SnapInstall::Installed(err) => err,
         })?;
-        ds.log =
-            Some(Mutex::new(Some(WalWriter::create(&wal_path, next_generation, fsync)?)));
+        ds.log = Some(GroupCommitLog::new(
+            WalWriter::create(&wal_path, next_generation, fsync)?,
+            opts.group_commit,
+        ));
         Ok(ds)
     }
 
-    /// Append one record to the live WAL. Errors when writes are
-    /// fail-stopped; an append that itself fails (possibly leaving a
-    /// torn frame mid-log) also fail-stops, because recovery silently
-    /// drops everything after the first bad frame — later appends would
-    /// be acknowledged and then lost.
+    /// Append one record to the live WAL through the commit queue.
+    /// Errors when writes are fail-stopped; a group write that itself
+    /// fails (possibly leaving a torn frame mid-log) also fail-stops,
+    /// because recovery silently drops everything after the first bad
+    /// frame — later appends would be acknowledged and then lost.
     fn append_record(&self, rec: &WalRecord) -> Result<()> {
         let mut payload = Vec::new();
         rec.encode(&mut payload);
@@ -412,21 +578,16 @@ impl DurableStore {
     }
 
     /// [`DurableStore::append_record`] for pre-encoded payloads (the
-    /// batch hot path encodes straight from the caller's slice).
+    /// batch hot path encodes straight from the caller's slice). The
+    /// CRC frame is built outside any lock; the commit queue only ever
+    /// sees ready-to-write bytes.
     fn append_payload(&self, payload: &[u8]) -> Result<()> {
         let log = self.log.as_ref().expect("append requires a durable store");
-        let mut st = log.lock().expect("wal lock");
-        let Some(writer) = st.as_mut() else {
-            bail!(
-                "store is fail-stopped: a WAL write failed and appending to the \
-                 stale log would lose acknowledged writes on recovery"
-            );
-        };
-        if let Err(e) = writer.append_payload(payload) {
-            *st = None;
-            return Err(e.context("WAL append failed; store is now fail-stopped"));
-        }
-        Ok(())
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        codec::put_u32(&mut frame, u32::try_from(payload.len()).expect("WAL record too large"));
+        codec::put_u32(&mut frame, codec::crc32(payload));
+        frame.extend_from_slice(payload);
+        log.commit_frame(&frame)
     }
 
     pub fn config(&self) -> &StoreConfig {
@@ -572,7 +733,19 @@ impl DurableStore {
             bail!("in-memory store has no snapshot directory (start with a data dir)");
         };
         let _excl = self.commit.write().expect("commit gate");
-        let mut st = log.lock().expect("wal lock");
+        let mut st = log.state.lock().expect("wal lock");
+        // Every commit returns only after its frame is durable, and the
+        // exclusive gate waits out every in-flight append→apply pair —
+        // so with a live writer the queue is drained here. After a
+        // fail-stop, NACKed frames (whose committers all saw errors)
+        // can remain staged; a successful rotation below heals the
+        // store onto a fresh generation, and those dead frames must not
+        // leak into the new log.
+        debug_assert!(
+            st.writer.is_none() || (st.staged.is_empty() && !st.writing),
+            "commit queue not drained under the exclusive gate"
+        );
+        st.staged.clear();
         self.generation.fetch_add(1, Ordering::SeqCst);
         match self.write_snapshot_file() {
             Ok(()) => {}
@@ -587,7 +760,7 @@ impl DurableStore {
                 // the g+1 snapshot is installed but its durability is in
                 // doubt and the WAL is still at g — appends there would
                 // be skipped by recovery, so fail-stop
-                *st = None;
+                st.writer = None;
                 return Err(e.context(
                     "snapshot installed but not durably synced; \
                      fail-stopping writes (reopen the store to recover)",
@@ -601,11 +774,11 @@ impl DurableStore {
             self.fsync,
         ) {
             Ok(w) => {
-                *st = Some(w);
+                st.writer = Some(w);
                 Ok(())
             }
             Err(e) => {
-                *st = None;
+                st.writer = None;
                 Err(e.context(
                     "WAL rotation failed after the snapshot rename; \
                      fail-stopping writes (reopen the store to recover)",
@@ -1004,6 +1177,89 @@ mod tests {
                     for _ in 0..reps {
                         shadow.update(i, j, w);
                     }
+                }
+            }
+            assert_eq!(live.stats(), shadow.stats());
+        }
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.stats(), shadow.stats());
+        for i in 0..40 {
+            for j in 0..32 {
+                assert_eq!(
+                    recovered.point_query(i, j).to_bits(),
+                    shadow.point_query(i, j).to_bits(),
+                    "key ({i}, {j})"
+                );
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_group_commit_writers_preserve_every_frame() {
+        // eight un-batched writers race through the leader/follower
+        // queue; every acknowledged update must survive as its own
+        // intact frame inside the coalesced leader writes
+        let dir = tmpdir("group_cc");
+        {
+            let live = DurableStore::open_opts(
+                &dir,
+                cfg(),
+                DurableOptions { fsync: false, group_commit: true },
+            )
+            .unwrap();
+            std::thread::scope(|scope| {
+                for t in 0..8u64 {
+                    let live = &live;
+                    scope.spawn(move || {
+                        for s in 0..50u64 {
+                            let i = ((t * 50 + s) % 40) as usize;
+                            live.update(i, (s % 32) as usize, 1.0).unwrap();
+                        }
+                    });
+                }
+            });
+            assert_eq!(live.stats().updates, 400);
+        }
+        let (_, records) = read_wal(&dir.join(WAL_FILE)).unwrap();
+        assert_eq!(records.len(), 400, "a group write dropped or merged frames");
+        assert!(records.iter().all(|r| matches!(r, WalRecord::Update { .. })));
+        let recovered = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(recovered.stats().updates, 400);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_off_path_round_trips() {
+        // the per-record baseline stays a first-class path (it is the
+        // bench's comparison point): concurrent writers recover exactly
+        let dir = tmpdir("no_group");
+        let shadow = ShardedStore::new(cfg());
+        {
+            let live = DurableStore::open_opts(
+                &dir,
+                cfg(),
+                DurableOptions { fsync: false, group_commit: false },
+            )
+            .unwrap();
+            std::thread::scope(|scope| {
+                for t in 0..4u64 {
+                    let live = &live;
+                    scope.spawn(move || {
+                        let mut rng = Pcg64::new(500 + t);
+                        for _ in 0..80 {
+                            let (i, j) =
+                                (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                            live.update(i, j, (1 + rng.gen_range(9)) as f64).unwrap();
+                        }
+                    });
+                }
+            });
+            for t in 0..4u64 {
+                let mut rng = Pcg64::new(500 + t);
+                for _ in 0..80 {
+                    let (i, j) = (rng.gen_range(40) as usize, rng.gen_range(32) as usize);
+                    shadow.update(i, j, (1 + rng.gen_range(9)) as f64);
                 }
             }
             assert_eq!(live.stats(), shadow.stats());

@@ -9,6 +9,16 @@
 //! 3. **Group commit** — batched durable updates (one WAL frame per
 //!    batch, shard-grouped apply) are bit-identical to per-item
 //!    updates, live and after crash recovery.
+//! 4. **Scan-cache fidelity (ISSUE 4)** — the version-stamped scan
+//!    plane (cached merged sketch + memoized TOPK/HEAVY) answers
+//!    bit-identically to a fresh full K-way re-merge
+//!    (`merged_uncached`) across interleaved updates, batches, remote
+//!    merges (including deletion-carrying ones, which flip the scans
+//!    onto their dense routes), and epoch rotations.
+//! 5. **Rotation-storm fallback** — concurrent `advance_epoch` drives
+//!    `point_query`/`stats` past their `EPOCH_RETRY_LIMIT` optimistic
+//!    retries into the counted lock-all path, which must still answer
+//!    consistently.
 //!
 //! Streams use integer weights: every bucket partial sum is then exact
 //! in f64, so accumulation *order* (per-shard vs interleaved) provably
@@ -122,6 +132,154 @@ fn window_expiry_is_exact_subtraction() {
         }
         Ok(())
     });
+}
+
+fn entry_bits(v: &[(usize, usize, f64)]) -> Vec<(usize, usize, u64)> {
+    v.iter().map(|&(i, j, w)| (i, j, w.to_bits())).collect()
+}
+
+#[test]
+fn cached_scans_bit_identical_to_fresh_re_merge() {
+    forall("scan cache vs full re-merge", 6, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let cfg = store_cfg(4, 3, seed);
+        let store = ShardedStore::new(cfg.clone());
+        for _step in 0..10 {
+            // one random mutation kind per step, then prove the cached
+            // plane is indistinguishable from a fresh K-way re-merge
+            match g.usize_in(0, 3) {
+                0 => {
+                    for _ in 0..60 {
+                        let (i, j) = random_key(g.rng(), &cfg);
+                        store.update(i, j, int_weight(g.rng()));
+                    }
+                }
+                1 => {
+                    let items: Vec<(usize, usize, f64)> = (0..40)
+                        .map(|_| {
+                            let (i, j) = random_key(g.rng(), &cfg);
+                            (i, j, int_weight(g.rng()))
+                        })
+                        .collect();
+                    store.update_batch(&items);
+                }
+                2 => {
+                    // a remote merge; int_weight's negatives make some
+                    // of these deletion-carrying, exercising the sticky
+                    // has_deletions dense-scan routing through the cache
+                    let mut remote = StreamSketch::new(
+                        cfg.n1, cfg.n2, cfg.m1, cfg.m2, cfg.d, cfg.seed,
+                    );
+                    for _ in 0..20 {
+                        let (i, j) = random_key(g.rng(), &cfg);
+                        remote.update(i, j, int_weight(g.rng()));
+                    }
+                    store.merge_sketch(&remote).unwrap();
+                }
+                _ => store.advance_epoch(),
+            }
+            let fresh = store.merged_uncached();
+            let cached = store.merged();
+            prop_assert(cached.updates == fresh.updates, "merged update counts diverge")?;
+            prop_assert(
+                cached.has_deletions == fresh.has_deletions,
+                "dense-scan routing flag diverges",
+            )?;
+            for r in 0..cfg.d {
+                prop_assert(
+                    cached.table(r) == fresh.table(r),
+                    &format!("cached table {r} diverges from re-merge"),
+                )?;
+            }
+            let k = 1 + g.usize_in(0, 7);
+            let want_top = entry_bits(&fresh.top_k(k));
+            prop_assert(entry_bits(&store.top_k(k)) == want_top, "cached top-k diverges")?;
+            // second serve at the same k is the memoized path
+            prop_assert(
+                entry_bits(&store.top_k(k)) == want_top,
+                "memoized top-k diverges",
+            )?;
+            let t = (5 + g.usize_in(0, 40)) as f64;
+            let want_heavy = entry_bits(&fresh.heavy_hitters(t));
+            prop_assert(
+                entry_bits(&store.heavy_hitters(t)) == want_heavy,
+                "cached heavy-hitters diverge",
+            )?;
+            prop_assert(
+                entry_bits(&store.heavy_hitters(t)) == want_heavy,
+                "memoized heavy-hitters diverge",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rotation_storm_exercises_the_lockall_fallback() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+
+    // Tiny tables make rotations fast and 8 shards make the optimistic
+    // fan-out long, so epoch validations keep colliding until a reader
+    // exhausts EPOCH_RETRY_LIMIT and takes the counted lock-all path.
+    let cfg = StoreConfig { n1: 64, n2: 64, m1: 4, m2: 4, d: 3, seed: 5, shards: 8, window: 3 };
+    let store = ShardedStore::new(cfg.clone());
+    // one weight-1 key per shard: during the storm each key answers its
+    // pre-expiry estimate or (once the window slides past the preload)
+    // exactly zero — anything else is a torn read
+    let mut keys: Vec<Option<(usize, usize)>> = vec![None; cfg.shards];
+    for i in 0..cfg.n1 {
+        for j in 0..cfg.n2 {
+            let s = store.shard_of(i, j);
+            if keys[s].is_none() {
+                keys[s] = Some((i, j));
+                store.update(i, j, 1.0);
+            }
+        }
+    }
+    let keys: Vec<(usize, usize)> = keys.into_iter().map(|k| k.unwrap()).collect();
+    let pre: Vec<u64> = keys.iter().map(|&(i, j)| store.point_query(i, j).to_bits()).collect();
+    let preloaded = cfg.shards as u64;
+
+    let stop = AtomicBool::new(false);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    std::thread::scope(|scope| {
+        let advancer = scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                store.advance_epoch();
+            }
+        });
+        while store.lockall_fallbacks() == 0 && Instant::now() < deadline {
+            for (&(i, j), &want) in keys.iter().zip(pre.iter()) {
+                let got = store.point_query(i, j);
+                // `== 0.0` (not bits): post-expiry estimates may be a
+                // signed zero depending on the key's sign product
+                assert!(
+                    got.to_bits() == want || got == 0.0,
+                    "torn point query at ({i}, {j}): {got}"
+                );
+            }
+            let st = store.stats();
+            assert!(st.updates == preloaded || st.updates == 0, "torn stats: {st:?}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        advancer.join().unwrap();
+    });
+    // On any real multi-core box the storm exhausts EPOCH_RETRY_LIMIT
+    // within milliseconds. Whether 8 straight rotations interleave one
+    // reader's fan-out is ultimately the scheduler's call, though (a
+    // starved single-core or noisy-neighbor runner can simply never
+    // produce the collision run), so — mirroring the loopback-skip
+    // convention — deadline exhaustion skips the counter assertion
+    // loudly instead of failing on scheduler behaviour. The torn-read
+    // consistency assertions above ran either way, and the counter
+    // itself is proven wired by hitting this path in practice.
+    if store.lockall_fallbacks() == 0 {
+        eprintln!(
+            "skipping lock-all fallback assertion: scheduler never produced \
+             enough consecutive epoch collisions within the deadline"
+        );
+    }
 }
 
 fn tmpdir(tag: &str) -> PathBuf {
