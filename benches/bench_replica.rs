@@ -1,0 +1,267 @@
+//! `cargo bench` target: anti-entropy replication — staleness vs
+//! bandwidth.
+//!
+//! Boots two loopback store nodes (a writer W whose only peer is a
+//! replica R) per row and sweeps sync interval × write rate, once with
+//! delta shipping (the replicator's default: sparse per-peer cursor
+//! deltas, full ships only on first contact) and once with
+//! `full_ship_every = 1` (every sync ships the dense full origin state
+//! — the "ship `merged()` images" baseline the ROADMAP's replication
+//! item started from). Per row it reports:
+//!
+//! - **staleness** — replica-vs-writer point-query error over time: a
+//!   tracked heavy key is hammered at a known share of the write rate
+//!   and both nodes are polled concurrently; the |W − R| samples
+//!   (mean / p95 / max) are the replica's lag in key mass;
+//! - **bytes shipped** — from the writer's STATS replication counters
+//!   (acknowledged frame payload bytes), plus ships and full ships.
+//!
+//! The delta-vs-full bytes ratio at the first (shortest-interval)
+//! config is the headline number: steady-state delta shipping must
+//! move ≥ 5× fewer bytes than full-state shipping. Long intervals at
+//! high write rates saturate the delta (the sparse encoding
+//! auto-falls-back to dense once most buckets are touched), which the
+//! sweep shows honestly — that corner is *why* the full-ship fallback
+//! is acceptable at all.
+//!
+//! Writes everything to `BENCH_replica.json`. `HOCS_BENCH_QUICK=1`
+//! (CI's `replica-smoke` job) runs a seconds-long sweep with the same
+//! schema.
+
+use hocs::rng::Pcg64;
+use hocs::store::{StoreClient, StoreConfig, StoreServer, StoreServerConfig};
+use hocs::util::bench::Table;
+use hocs::util::json::Json;
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = "BENCH_replica.json";
+
+fn quick() -> bool {
+    std::env::var("HOCS_BENCH_QUICK").is_ok()
+}
+
+/// Same sketch geometry on both nodes (the mergeability contract).
+/// 64×64×5 counters make a dense full ship ~160 KB — the baseline the
+/// sparse deltas are measured against.
+fn bench_cfg() -> StoreConfig {
+    StoreConfig { n1: 1 << 12, n2: 1 << 12, m1: 64, m2: 64, d: 5, seed: 42, shards: 4, window: 4 }
+}
+
+struct Row {
+    sync_interval_ms: u64,
+    write_rate: usize,
+    mode: &'static str,
+    ships: u64,
+    full_ships: u64,
+    bytes_shipped: u64,
+    staleness_mean: f64,
+    staleness_p95: f64,
+    staleness_max: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// One writer→replica run; `None` when loopback networking is
+/// unavailable (the row is skipped, mirroring bench_store's TCP row).
+fn run_row(sync_interval_ms: u64, write_rate: usize, full_mode: bool, secs: f64) -> Option<Row> {
+    let cfg = bench_cfg();
+    let replica = match StoreServer::start(StoreServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        store: cfg.clone(),
+        ..Default::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("replica row skipped: {e}");
+            return None;
+        }
+    };
+    let writer_srv = match StoreServer::start(StoreServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        store: cfg.clone(),
+        peers: vec![replica.local_addr().to_string()],
+        sync_interval_ms,
+        full_ship_every: u64::from(full_mode),
+        ..Default::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("replica row skipped: {e}");
+            replica.shutdown();
+            return None;
+        }
+    };
+    let connect = |addr| StoreClient::connect(addr).ok();
+    let (Some(mut feed), Some(mut w_probe), Some(mut r_probe)) = (
+        connect(writer_srv.local_addr()),
+        connect(writer_srv.local_addr()),
+        connect(replica.local_addr()),
+    ) else {
+        eprintln!("replica row skipped: cannot connect");
+        writer_srv.shutdown();
+        replica.shutdown();
+        return None;
+    };
+
+    // the tracked key takes a fixed ~30% of the write rate, so its true
+    // mass grows at a known pace and |W − R| is pure replication lag
+    let tracked = (3usize, 7usize);
+    let tick = Duration::from_millis(10);
+    let per_tick = (write_rate / 100).max(1);
+    let mut rng = Pcg64::new(11);
+    let mut batch: Vec<(u32, u32, f64)> = Vec::with_capacity(per_tick);
+    let mut errs = Vec::new();
+    let t_end = Instant::now() + Duration::from_secs_f64(secs);
+    while Instant::now() < t_end {
+        let t0 = Instant::now();
+        batch.clear();
+        for k in 0..per_tick {
+            if k * 10 < per_tick * 3 {
+                batch.push((tracked.0 as u32, tracked.1 as u32, 1.0));
+            } else {
+                batch.push((
+                    rng.gen_range(cfg.n1 as u64) as u32,
+                    rng.gen_range(cfg.n2 as u64) as u32,
+                    1.0,
+                ));
+            }
+        }
+        if feed.update_batch(&batch).is_err() {
+            eprintln!("replica row aborted: writer gone");
+            break;
+        }
+        let (w_est, r_est) = match (
+            w_probe.query(tracked.0, tracked.1),
+            r_probe.query(tracked.0, tracked.1),
+        ) {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => break,
+        };
+        errs.push((w_est - r_est).abs());
+        let spent = t0.elapsed();
+        if spent < tick {
+            std::thread::sleep(tick - spent);
+        }
+    }
+    let repl = match w_probe.stats_full() {
+        Ok((_, Some(r))) => r,
+        _ => {
+            eprintln!("replica row aborted: no replication stats");
+            writer_srv.shutdown();
+            replica.shutdown();
+            return None;
+        }
+    };
+    writer_srv.shutdown();
+    replica.shutdown();
+    errs.sort_by(|a, b| a.partial_cmp(b).expect("finite staleness samples"));
+    let mean = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
+    Some(Row {
+        sync_interval_ms,
+        write_rate,
+        mode: if full_mode { "full" } else { "delta" },
+        ships: repl.ships,
+        full_ships: repl.full_ships,
+        bytes_shipped: repl.bytes_shipped,
+        staleness_mean: mean,
+        staleness_p95: percentile(&errs, 0.95),
+        staleness_max: percentile(&errs, 1.0),
+    })
+}
+
+fn main() {
+    if quick() {
+        println!("HOCS_BENCH_QUICK set: short sweep (CI smoke), same schema\n");
+    }
+    let secs = if quick() { 0.8 } else { 1.5 };
+    let intervals: &[u64] = if quick() { &[40] } else { &[10, 50, 200] };
+    let rates: &[usize] = if quick() { &[2_500] } else { &[5_000, 20_000] };
+
+    let mut rows = Vec::new();
+    for &interval in intervals {
+        for &rate in rates {
+            for full_mode in [false, true] {
+                if let Some(row) = run_row(interval, rate, full_mode, secs) {
+                    rows.push(row);
+                }
+            }
+        }
+    }
+
+    let mut table = Table::new(
+        "replication: staleness vs bytes shipped (writer -> replica)",
+        &["mode", "sync ms", "rate/s", "ships", "full", "bytes", "stale mean", "p95", "max"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.mode.to_string(),
+            r.sync_interval_ms.to_string(),
+            r.write_rate.to_string(),
+            r.ships.to_string(),
+            r.full_ships.to_string(),
+            r.bytes_shipped.to_string(),
+            format!("{:.1}", r.staleness_mean),
+            format!("{:.1}", r.staleness_p95),
+            format!("{:.1}", r.staleness_max),
+        ]);
+    }
+    table.print();
+
+    // headline: delta vs full bytes at the first (shortest-interval)
+    // config — the steady-state shipping comparison
+    let pair_ratio = |interval: u64, rate: usize| -> Option<f64> {
+        let delta = rows
+            .iter()
+            .find(|r| r.mode == "delta" && r.sync_interval_ms == interval && r.write_rate == rate)?;
+        let full = rows
+            .iter()
+            .find(|r| r.mode == "full" && r.sync_interval_ms == interval && r.write_rate == rate)?;
+        if delta.bytes_shipped == 0 {
+            None
+        } else {
+            Some(full.bytes_shipped as f64 / delta.bytes_shipped as f64)
+        }
+    };
+    let headline = pair_ratio(intervals[0], rates[0]);
+    if let Some(ratio) = headline {
+        println!(
+            "\ndelta shipping moved {ratio:.1}x fewer bytes than full-state shipping at \
+             sync={}ms rate={}/s (target >= 5x)",
+            intervals[0], rates[0]
+        );
+    }
+
+    let json = Json::obj(vec![
+        (
+            "replica",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("mode", Json::Str(r.mode.to_string())),
+                            ("sync_interval_ms", Json::Num(r.sync_interval_ms as f64)),
+                            ("write_rate", Json::Num(r.write_rate as f64)),
+                            ("ships", Json::Num(r.ships as f64)),
+                            ("full_ships", Json::Num(r.full_ships as f64)),
+                            ("bytes_shipped", Json::Num(r.bytes_shipped as f64)),
+                            ("staleness_mean", Json::Num(r.staleness_mean)),
+                            ("staleness_p95", Json::Num(r.staleness_p95)),
+                            ("staleness_max", Json::Num(r.staleness_max)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("delta_vs_full_bytes_ratio", Json::Num(headline.unwrap_or(0.0))),
+    ]);
+    match std::fs::write(OUT_PATH, json.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -13,7 +13,7 @@ use hocs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
 use hocs::experiments::{self, ExpConfig};
 use hocs::rng::Pcg64;
 use hocs::runtime::Runtime;
-use hocs::store::{StoreClient, StoreConfig, StoreServer, StoreServerConfig};
+use hocs::store::{ClientOptions, StoreClient, StoreConfig, StoreServer, StoreServerConfig};
 use hocs::util::cli::Args;
 
 const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench> [options]\n\
@@ -24,9 +24,12 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench
   serve [--addr HOST:PORT] [--shards K] [--window N]\n\
         [--n1 N --n2 N --m1 M --m2 M --d D] [--store-seed S]\n\
         [--data-dir DIR] [--fsync] [--no-group-commit] [--with-coordinator]\n\
+        [--peer ADDR[,ADDR…]] [--sync-interval-ms N] [--full-ship-every N]\n\
+        [--replica-timeout-ms N]   (peers make this node a replica-cluster member)\n\
   store-client <update|update-batch|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
         [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
+        [--timeout-ms N]   (connect + per-RPC timeout; 0 = wait forever)\n\
   bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
         [--quick] [--seed N]\n\
 \n\
@@ -179,6 +182,19 @@ fn cmd_serve(args: &Args) -> i32 {
         shards: args.get_usize("shards", 4),
         window: args.get_usize("window", 8),
     };
+    // `--peer a:1,b:2` (or `--peers …`): comma-separated peer store
+    // addresses; any peer makes this node a replica-cluster member
+    let peers: Vec<String> = args
+        .get("peer")
+        .or_else(|| args.get("peers"))
+        .map(|spec| {
+            spec.split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
     let cfg = StoreServerConfig {
         addr: args.get_str("addr", "127.0.0.1:7878"),
         store,
@@ -190,16 +206,22 @@ fn cmd_serve(args: &Args) -> i32 {
         group_commit: !args.flag("no-group-commit"),
         with_coordinator: args.flag("with-coordinator"),
         artifacts_dir: artifacts_dir(args),
+        peers,
+        sync_interval_ms: args.get_u64("sync-interval-ms", 100),
+        full_ship_every: args.get_u64("full-ship-every", 0),
+        replica_timeout_ms: args.get_u64("replica-timeout-ms", 2000),
     };
+    let n_peers = cfg.peers.len();
     match StoreServer::start(cfg) {
         Ok(server) => {
             let st = server.store().stats();
             println!(
-                "store server on {} — {} shard(s), window {} epoch(s); \
+                "store server on {} — {} shard(s), window {} epoch(s), {} peer(s); \
                  stop with `hocs store-client shutdown --addr {}`",
                 server.local_addr(),
                 st.shards,
                 st.window,
+                n_peers,
                 server.local_addr()
             );
             server.wait();
@@ -215,7 +237,10 @@ fn cmd_serve(args: &Args) -> i32 {
 fn cmd_store_client(args: &Args) -> i32 {
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let action = args.positional.first().map(String::as_str).unwrap_or("stats");
-    let mut client = match StoreClient::connect(&addr) {
+    // bounded connect + per-RPC timeouts (0 = wait forever): a hung
+    // server fails the CLI within the bound instead of stalling it
+    let opts = ClientOptions::timeout_ms(args.get_u64("timeout-ms", 10_000));
+    let mut client = match StoreClient::connect_with(&addr, opts) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("error: {e}");
@@ -260,11 +285,26 @@ fn cmd_store_client(args: &Args) -> i32 {
         "heavy" => {
             client.heavy_hitters(args.get_f64("threshold", 100.0)).map(|e| print_entries(&e))
         }
-        "stats" => client.stats().map(|s| {
+        "stats" => client.stats_full().map(|(s, repl)| {
             println!(
                 "shards={} window={} epoch={} updates={}",
                 s.shards, s.window, s.epoch, s.updates
-            )
+            );
+            if let Some(r) = repl {
+                println!(
+                    "replication: peers={} last_sync_age_ms={} cursor_version={} \
+                     ships={} full_ships={} bytes_shipped={} merges_applied={} \
+                     merges_deduped={}",
+                    r.peers,
+                    r.last_sync_age_ms.map_or_else(|| "never".to_string(), |a| a.to_string()),
+                    r.cursor_version,
+                    r.ships,
+                    r.full_ships,
+                    r.bytes_shipped,
+                    r.merges_applied,
+                    r.merges_deduped
+                );
+            }
         }),
         "snapshot" => client.snapshot().map(|()| println!("snapshot written")),
         "advance-epoch" => client.advance_epoch().map(|()| println!("epoch advanced")),

@@ -1,5 +1,6 @@
 //! Blocking TCP client for the store's framed wire protocol — used by
-//! the `hocs store-client` CLI, the end-to-end tests, and `bench_store`.
+//! the `hocs store-client` CLI, the replicator, the end-to-end tests,
+//! and `bench_store`.
 //!
 //! One request in flight per connection (the protocol is strictly
 //! request/response); open several clients for pipelining. The request
@@ -7,14 +8,50 @@
 //! so a settled RPC loop performs no per-call heap allocation on the
 //! wire path (typed results that return owned lists still allocate
 //! their output).
+//!
+//! [`StoreClient::connect_with`] takes [`ClientOptions`]: a connect
+//! timeout and a read/write timeout. Without them a hung or
+//! half-partitioned peer blocks the caller forever — fatal for the
+//! replicator (one dead peer would stall anti-entropy to every peer)
+//! and bad for the CLI; with them every RPC fails within a bound and
+//! the caller decides whether to back off and reconnect.
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
+use super::replica::{wire, ReplicationStats};
 use super::server::{op, read_frame_into, write_frame, STATUS_OK};
 use super::sharded::StoreStats;
 use crate::sketch::stream::StreamSketch;
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Prefix every server-side (STATUS_ERR) rejection carries, as opposed
+/// to transport failures. One shared const because the replicator
+/// classifies failures on it (server rejection = connection healthy,
+/// keep the frame staged; transport = reconnect + backoff): a reworded
+/// literal would silently break that routing, a reworded const cannot.
+pub(crate) const SERVER_ERR_PREFIX: &str = "store server: ";
+
+/// Connection-robustness knobs for [`StoreClient::connect_with`].
+/// `None` = block indefinitely (the pre-replication behaviour).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientOptions {
+    pub connect_timeout: Option<Duration>,
+    pub io_timeout: Option<Duration>,
+}
+
+impl ClientOptions {
+    /// Both timeouts set to `ms` milliseconds (`0` = no timeouts).
+    pub fn timeout_ms(ms: u64) -> Self {
+        if ms == 0 {
+            Self::default()
+        } else {
+            let t = Some(Duration::from_millis(ms));
+            Self { connect_timeout: t, io_timeout: t }
+        }
+    }
+}
 
 pub struct StoreClient {
     stream: TcpStream,
@@ -26,7 +63,41 @@ pub struct StoreClient {
 
 impl StoreClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
-        let stream = TcpStream::connect(addr).context("connecting to store server")?;
+        Self::connect_with(addr, ClientOptions::default())
+    }
+
+    /// [`StoreClient::connect`] with bounded connect and per-RPC I/O
+    /// timeouts. A timed-out RPC surfaces as an error; the connection
+    /// should then be considered dead (a late response would desynchronize
+    /// the request/response framing), so reconnect before retrying.
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, opts: ClientOptions) -> Result<Self> {
+        let stream = match opts.connect_timeout {
+            None => TcpStream::connect(&addr).context("connecting to store server")?,
+            Some(timeout) => {
+                let addrs: Vec<_> =
+                    addr.to_socket_addrs().context("resolving store server address")?.collect();
+                ensure!(!addrs.is_empty(), "store server address resolved to nothing");
+                let mut last_err = None;
+                let mut connected = None;
+                for a in &addrs {
+                    match TcpStream::connect_timeout(a, timeout) {
+                        Ok(s) => {
+                            connected = Some(s);
+                            break;
+                        }
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+                connected.ok_or_else(|| {
+                    anyhow!(
+                        "connecting to store server within {timeout:?}: {}",
+                        last_err.expect("at least one address attempted")
+                    )
+                })?
+            }
+        };
+        stream.set_read_timeout(opts.io_timeout).context("setting read timeout")?;
+        stream.set_write_timeout(opts.io_timeout).context("setting write timeout")?;
         let _ = stream.set_nodelay(true);
         Ok(Self { stream, req: Vec::new(), resp: Vec::new() })
     }
@@ -51,7 +122,7 @@ impl StoreClient {
         if self.resp[0] == STATUS_OK {
             Ok(&self.resp[1..])
         } else {
-            bail!("store server: {}", String::from_utf8_lossy(&self.resp[1..]))
+            bail!("{SERVER_ERR_PREFIX}{}", String::from_utf8_lossy(&self.resp[1..]))
         }
     }
 
@@ -115,11 +186,37 @@ impl StoreClient {
         parse_entries(body)
     }
 
-    /// Merge a locally-built same-family sketch into the server's store.
+    /// Merge a locally-built same-family sketch into the server's store
+    /// (legacy headerless MERGE: exact, but a retry double-counts — use
+    /// [`StoreClient::merge_origin`] when the call may be retried).
     pub fn merge(&mut self, sk: &StreamSketch) -> Result<()> {
         let req = self.begin(op::MERGE);
         sk.encode(req);
         self.call().map(|_| ())
+    }
+
+    /// Origin-headered merge: retry-safe via the server's per-origin
+    /// dedup window. Returns `true` when the frame was applied, `false`
+    /// when it was recognized as an already-applied retry (both are
+    /// success — the mass is in). `full` ships the sketch as cumulative
+    /// origin state (the server applies only the unseen remainder);
+    /// `ingest` marks the mass as this node's own traffic, re-originated
+    /// to its replication peers. Sequences must increase by one per
+    /// acknowledged frame on an (origin, server) channel; a skipped
+    /// delta sequence is rejected with a gap error that a full ship
+    /// heals.
+    pub fn merge_origin(
+        &mut self,
+        origin: u64,
+        seq: u64,
+        full: bool,
+        ingest: bool,
+        sk: &StreamSketch,
+    ) -> Result<bool> {
+        let mode = if full { wire::MODE_FULL } else { wire::MODE_DELTA };
+        let frame = wire::build_merge_origin(origin, seq, mode, ingest, sk);
+        let body = self.raw_call(&frame)?;
+        Ok(body.first().copied() == Some(1))
     }
 
     /// Force a snapshot + WAL truncation on the server.
@@ -135,15 +232,40 @@ impl StoreClient {
     }
 
     pub fn stats(&mut self) -> Result<StoreStats> {
+        self.stats_full().map(|(st, _)| st)
+    }
+
+    /// [`StoreClient::stats`] plus the replication counters (peer
+    /// count, last-sync age, cursor version, ship/byte/dedup totals).
+    /// `None` for pre-replication servers whose STATS body ends after
+    /// the store fields.
+    pub fn stats_full(&mut self) -> Result<(StoreStats, Option<ReplicationStats>)> {
         self.begin(op::STATS);
         let body = self.call()?;
         let mut rd = Reader::new(body);
-        Ok(StoreStats {
+        let store = StoreStats {
             shards: rd.u32()? as usize,
             window: rd.u32()? as usize,
             epoch: rd.u64()?,
             updates: rd.u64()?,
-        })
+        };
+        if rd.is_empty() {
+            return Ok((store, None));
+        }
+        let peers = rd.u32()? as u64;
+        let has_sync = rd.u8()? == 1;
+        let age = rd.u64()?;
+        let repl = ReplicationStats {
+            peers,
+            last_sync_age_ms: has_sync.then_some(age),
+            cursor_version: rd.u64()?,
+            ships: rd.u64()?,
+            full_ships: rd.u64()?,
+            bytes_shipped: rd.u64()?,
+            merges_applied: rd.u64()?,
+            merges_deduped: rd.u64()?,
+        };
+        Ok((store, Some(repl)))
     }
 
     /// Run one count-sketch job through the server's coordinator pool
@@ -180,4 +302,42 @@ fn parse_entries(body: &[u8]) -> Result<Vec<(usize, usize, f64)>> {
         out.push((i, j, rd.f64()?));
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    #[test]
+    fn timeout_ms_zero_means_no_timeouts() {
+        let opts = ClientOptions::timeout_ms(0);
+        assert!(opts.connect_timeout.is_none() && opts.io_timeout.is_none());
+        let opts = ClientOptions::timeout_ms(250);
+        assert_eq!(opts.io_timeout, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn io_timeout_bounds_an_unresponsive_server() {
+        // a listener that accepts (kernel backlog) but never serves:
+        // without an io timeout the query below would block forever —
+        // exactly how a hung peer used to stall the replicator
+        let listener = match TcpListener::bind("127.0.0.1:0") {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return;
+            }
+        };
+        let addr = listener.local_addr().unwrap();
+        let mut client =
+            StoreClient::connect_with(addr, ClientOptions::timeout_ms(200)).unwrap();
+        let t0 = Instant::now();
+        assert!(client.query(1, 1).is_err(), "query against a mute server must fail");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "timeout did not bound the hung RPC"
+        );
+    }
 }

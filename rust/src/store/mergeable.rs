@@ -30,7 +30,9 @@ use anyhow::{ensure, Result};
 
 /// Upper bound on decoded table sizes (elements). A corrupt or hostile
 /// frame must not be able to request an arbitrarily large allocation.
-const MAX_DECODE_ELEMS: usize = 1 << 28;
+/// Shared with the sparse replica codec ([`crate::store::replica::wire`])
+/// so the dense and sparse decoders can never drift on what they accept.
+pub(crate) const MAX_DECODE_ELEMS: usize = 1 << 28;
 
 /// A linear sketch that merges by addition. See the module docs for why
 /// these three operations are exact.

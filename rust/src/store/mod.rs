@@ -17,7 +17,16 @@
 //!   own.
 //! - **federation** — the MERGE RPC accepts any serialized same-family
 //!   sketch ([`MergeableSketch::encode`]), so edge nodes can sketch
-//!   locally and ship summaries instead of raw streams.
+//!   locally and ship summaries instead of raw streams;
+//! - **replication** — nodes with configured peers run an anti-entropy
+//!   replicator ([`replica`]) that ships each node's locally-originated
+//!   mass to its peers: per-peer *delta cursors* (sketch subtraction
+//!   against the last acknowledged origin snapshot — exact, linearity
+//!   again) keep steady-state traffic to the sparse-encoded new mass
+//!   instead of full `merged()` images, and the origin-headered MERGE
+//!   with a per-origin sequence dedup window makes re-delivery a no-op
+//!   (addition alone is not idempotent). Replicas converge to the
+//!   sketch of the union stream without consensus.
 //!
 //! Durability is a versioned binary snapshot plus an append-only WAL of
 //! length-prefixed CRC-32-checked frames ([`DurableStore`]); recovery
@@ -40,11 +49,13 @@
 //!
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
 //! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
-//! [`codec`] (bytes + CRC-32).
+//! [`replica`] (anti-entropy replication: delta cursors, origin dedup,
+//! the replicator thread), [`codec`] (bytes + CRC-32).
 
 pub mod client;
 pub mod codec;
 pub mod mergeable;
+pub mod replica;
 pub mod server;
 pub mod sharded;
 pub mod wal;
@@ -57,8 +68,9 @@ pub mod wal;
 /// acknowledged data).
 pub(crate) const MAX_UPDATE_BATCH: usize = 1 << 20;
 
-pub use client::StoreClient;
+pub use client::{ClientOptions, StoreClient};
 pub use mergeable::MergeableSketch;
+pub use replica::{ReplicaConfig, ReplicationStats, Replicator};
 pub use server::{StoreServer, StoreServerConfig};
 pub use sharded::{ShardedStore, StoreConfig, StoreStats};
 pub use wal::{DurableOptions, DurableStore};

@@ -1,0 +1,525 @@
+//! Anti-entropy replication: turns a [`DurableStore`]/`StoreServer`
+//! node into a cluster member that converges with its peers by
+//! **addition** — the same linearity (`Sketch(A ⊎ B) = Sketch(A) +
+//! Sketch(B)`) the paper's compositional operations exploit, applied
+//! across machines. No consensus, no ordering: every node keeps
+//! accepting writes, and replicas converge to the sketch of the union
+//! stream as soon as every node's locally-originated mass has reached
+//! every other node exactly once.
+//!
+//! **Delta cursor protocol.** Each node accumulates its
+//! locally-originated mass (UPDATE / UPDATE_BATCH / edge-ingest MERGE —
+//! never replication-plane merges, which would relay and double-deliver)
+//! in a per-shard *origin* sketch, fed by the store's fused fan-out
+//! kernel and stamped with a monotonic `origin_version`
+//! ([`super::sharded::ShardedStore::origin_snapshot`]). Per peer the replicator keeps a
+//! cursor: the last **acknowledged** origin snapshot and its version.
+//! Each sync tick it ships only the mass accumulated since —
+//! `snapshot − cursor`, an exact sketch subtraction — encoded
+//! *sparsely* (only non-zero counters travel, [`wire`]), which is where
+//! the ≥ 5× bandwidth win over shipping full `merged()` images comes
+//! from. An unchanged `origin_version` ships nothing — except a tiny
+//! empty-delta heartbeat every [`HEARTBEAT_TICKS`] idle ticks, which is
+//! how an idle sender discovers a restarted receiver (the heartbeat
+//! draws the sequence-gap error that triggers the healing full ship).
+//!
+//! **Full-ship fallback rules.** A dense full-state frame (the entire
+//! cumulative origin sketch) is shipped instead of a delta when:
+//! 1. the channel is new (first contact — the peer may hold nothing);
+//! 2. the receiver reports a **sequence gap** ([`wire::SEQ_GAP_MARKER`]
+//!    — it lost channel state, typically a restart, since replica-plane
+//!    mass is deliberately not WAL-logged and is restored by exactly
+//!    this path);
+//! 3. the configured cadence forces one every
+//!    [`ReplicaConfig::full_ship_every`] syncs (a periodic self-healing
+//!    safety net; `0` disables it).
+//! Full frames are safe to deliver at any time because the receiver
+//! applies only the *remainder* it has not seen ([`origins`]).
+//!
+//! **Dedup window / retry safety.** Every frame carries an origin id
+//! (fresh per process incarnation) and a per-channel sequence number;
+//! the receiver drops any sequence at or below its per-origin horizon.
+//! After an ambiguous failure the replicator re-sends the *identical
+//! bytes* under the same sequence (kept in `Pending`), so a frame that
+//! did land is acknowledged as a no-op and the cursor still advances
+//! exactly once. Connections use bounded connect/IO timeouts and
+//! exponential reconnect backoff — a hung peer can neither stall the
+//! replicator nor starve the other peers.
+//!
+//! **Durability split.** The *receiver* side is durable: the per-origin
+//! dedup table is part of every snapshot, ingest origin-merges are
+//! WAL-logged ([`super::wal`]), and replication-plane merges are
+//! deliberately not — the snapshot's origin records and store image
+//! describe the same instant, so after a receiver restart the sender's
+//! gap-triggered full ship re-delivers exactly the since-snapshot
+//! remainder. The *sender* side is per process incarnation: origin
+//! accumulators are volatile and the origin id is fresh on restart.
+//! **Known limitation:** acknowledged local writes that were
+//! WAL-recovered but had not shipped before the crash are served
+//! locally yet never re-shipped (shipping all recovered mass under the
+//! new origin id would instead double-count at peers that already hold
+//! part of it) — until sender cursors are made durable (ROADMAP),
+//! a crash in the ship window leaves replicas missing that mass, and a
+//! replica-side operator re-sync (e.g. replaying the writer's WAL tail
+//! through edge ingest) is the recovery. Window expiry is local —
+//! peers expire by their own rotations, so a replica's slot assignment
+//! for remote mass lags by the staleness the bench measures.
+
+pub mod origins;
+pub mod wire;
+
+use super::client::{ClientOptions, StoreClient, SERVER_ERR_PREFIX};
+use super::sharded::StoreConfig;
+use super::wal::DurableStore;
+use crate::rng::SplitMix64;
+use crate::sketch::stream::StreamSketch;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub use origins::{Admit, OriginTable, MAX_ORIGINS};
+
+/// How a node replicates to its peers.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// peer addresses (`host:port` of their store servers)
+    pub peers: Vec<String>,
+    /// anti-entropy tick interval
+    pub sync_interval_ms: u64,
+    /// force a dense full-state ship every Nth sync per peer (self-
+    /// healing cadence); `0` = only on first contact / sequence gaps
+    pub full_ship_every: u64,
+    /// connect timeout for peer connections
+    pub connect_timeout_ms: u64,
+    /// read/write timeout for peer RPCs — a hung peer costs at most
+    /// this long per tick, then backs off
+    pub io_timeout_ms: u64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            peers: Vec::new(),
+            sync_interval_ms: 100,
+            full_ship_every: 0,
+            connect_timeout_ms: 1_000,
+            io_timeout_ms: 2_000,
+        }
+    }
+}
+
+impl ReplicaConfig {
+    /// `0` means no timeout — the same convention as
+    /// [`ClientOptions::timeout_ms`] and the store-client CLI (not
+    /// recommended for the replicator: a hung peer then blocks its
+    /// whole sync tick).
+    fn client_options(&self) -> ClientOptions {
+        ClientOptions {
+            connect_timeout: (self.connect_timeout_ms > 0)
+                .then(|| Duration::from_millis(self.connect_timeout_ms)),
+            io_timeout: (self.io_timeout_ms > 0).then(|| Duration::from_millis(self.io_timeout_ms)),
+        }
+    }
+}
+
+/// Idle channels send a tiny empty-delta heartbeat every this many sync
+/// ticks. The heartbeat is what lets an idle sender discover a receiver
+/// restart: the receiver answers it with a sequence gap (its channel
+/// state died with its un-snapshotted replica mass) and the sender
+/// full-ships the recovery — without it, a cluster that goes quiet
+/// right before a receiver crash would never heal.
+const HEARTBEAT_TICKS: u64 = 50;
+
+/// Shared replication counters: written by the replicator thread and
+/// the server's origin-merge path, read by the STATS RPC.
+pub struct ReplicationCounters {
+    start: Instant,
+    peers: AtomicU64,
+    /// millis since `start` of the last *settled* sync tick (every
+    /// channel acked, nothing staged); `u64::MAX` = never settled
+    last_sync_ms: AtomicU64,
+    /// minimum acknowledged origin-version across peers
+    cursor_version: AtomicU64,
+    ships: AtomicU64,
+    full_ships: AtomicU64,
+    bytes_shipped: AtomicU64,
+    merges_applied: AtomicU64,
+    merges_deduped: AtomicU64,
+}
+
+/// Point-in-time replication counters (STATS RPC /
+/// `hocs store-client stats`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicationStats {
+    pub peers: u64,
+    /// age of the last *settled* sync tick — every channel acked with
+    /// nothing staged, so a partitioned peer makes this grow instead
+    /// of hiding behind a liveness tick; `None` = never settled
+    pub last_sync_age_ms: Option<u64>,
+    /// minimum acknowledged origin-version across peers (how far behind
+    /// the slowest peer's cursor is)
+    pub cursor_version: u64,
+    /// acknowledged frames (delta + full)
+    pub ships: u64,
+    pub full_ships: u64,
+    /// payload bytes of acknowledged frames
+    pub bytes_shipped: u64,
+    /// origin-headered merges applied by this node
+    pub merges_applied: u64,
+    /// origin-headered merges dropped by the dedup window
+    pub merges_deduped: u64,
+}
+
+impl ReplicationCounters {
+    pub fn new(peers: u64) -> Self {
+        Self {
+            start: Instant::now(),
+            peers: AtomicU64::new(peers),
+            last_sync_ms: AtomicU64::new(u64::MAX),
+            cursor_version: AtomicU64::new(0),
+            ships: AtomicU64::new(0),
+            full_ships: AtomicU64::new(0),
+            bytes_shipped: AtomicU64::new(0),
+            merges_applied: AtomicU64::new(0),
+            merges_deduped: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        u64::try_from(self.start.elapsed().as_millis()).unwrap_or(u64::MAX - 1)
+    }
+
+    pub(crate) fn note_tick(&self, cursor_version: u64, settled: bool) {
+        self.cursor_version.store(cursor_version, Ordering::Relaxed);
+        if settled {
+            self.last_sync_ms.store(self.now_ms(), Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn note_ship(&self, bytes: u64, full: bool) {
+        self.ships.fetch_add(1, Ordering::Relaxed);
+        self.bytes_shipped.fetch_add(bytes, Ordering::Relaxed);
+        if full {
+            self.full_ships.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn note_applied(&self) {
+        self.merges_applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_deduped(&self) {
+        self.merges_deduped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ReplicationStats {
+        let last = self.last_sync_ms.load(Ordering::Relaxed);
+        ReplicationStats {
+            peers: self.peers.load(Ordering::Relaxed),
+            last_sync_age_ms: (last != u64::MAX).then(|| self.now_ms().saturating_sub(last)),
+            cursor_version: self.cursor_version.load(Ordering::Relaxed),
+            ships: self.ships.load(Ordering::Relaxed),
+            full_ships: self.full_ships.load(Ordering::Relaxed),
+            bytes_shipped: self.bytes_shipped.load(Ordering::Relaxed),
+            merges_applied: self.merges_applied.load(Ordering::Relaxed),
+            merges_deduped: self.merges_deduped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A staged frame awaiting acknowledgement. Retries after ambiguous
+/// failures re-send exactly these bytes under the same sequence — the
+/// receiver's dedup window turns an already-applied copy into an
+/// acknowledged no-op, so the cursor advances exactly once either way.
+struct Pending {
+    frame: Vec<u8>,
+    /// origin snapshot/version this frame brings the peer up to
+    snap: StreamSketch,
+    version: u64,
+    full: bool,
+}
+
+struct Peer {
+    addr: String,
+    client: Option<StoreClient>,
+    /// next channel sequence to assign
+    next_seq: u64,
+    /// origin snapshot known applied at the peer (the delta cursor)
+    acked: StreamSketch,
+    acked_version: u64,
+    synced_once: bool,
+    syncs_since_full: u64,
+    /// consecutive ticks with nothing to ship; at [`HEARTBEAT_TICKS`]
+    /// an empty delta probes the channel (receiver-restart detection)
+    idle_ticks: u64,
+    pending: Option<Pending>,
+    backoff_ms: u64,
+    backoff_until: Instant,
+}
+
+impl Peer {
+    fn new(addr: String, cfg: &StoreConfig) -> Self {
+        Self {
+            addr,
+            client: None,
+            next_seq: 1,
+            acked: cfg.fresh_sketch(),
+            acked_version: 0,
+            synced_once: false,
+            syncs_since_full: 0,
+            idle_ticks: 0,
+            pending: None,
+            backoff_ms: 0,
+            backoff_until: Instant::now(),
+        }
+    }
+
+    fn bump_backoff(&mut self) {
+        self.backoff_ms = (self.backoff_ms * 2).clamp(50, 5_000);
+        self.backoff_until = Instant::now() + Duration::from_millis(self.backoff_ms);
+    }
+}
+
+struct Stop {
+    stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// The per-node anti-entropy thread: one loop over all configured
+/// peers, one origin snapshot per tick shared by every peer's delta.
+pub struct Replicator {
+    stop: Arc<Stop>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Replicator {
+    pub fn start(
+        store: Arc<DurableStore>,
+        cfg: ReplicaConfig,
+        counters: Arc<ReplicationCounters>,
+    ) -> Result<Self> {
+        ensure!(!cfg.peers.is_empty(), "replicator needs at least one peer");
+        ensure!(
+            store.store().replication_enabled(),
+            "enable_replication() must be called before starting the replicator"
+        );
+        let stop = Arc::new(Stop { stopped: Mutex::new(false), cv: Condvar::new() });
+        let tstop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("hocs-replicator".into())
+            .spawn(move || run(store, cfg, counters, tstop))?;
+        Ok(Self { stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for Replicator {
+    fn drop(&mut self) {
+        *self.stop.stopped.lock().expect("replicator stop lock") = true;
+        self.stop.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fresh origin id per process incarnation: a restarted node opens new
+/// channels instead of colliding with its old sequence space (whose
+/// horizon the peers still remember).
+fn derive_origin_id() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    SplitMix64::new(nanos ^ ((std::process::id() as u64) << 32) ^ 0x5EED_0121_6171).next_u64()
+}
+
+fn run(
+    store: Arc<DurableStore>,
+    cfg: ReplicaConfig,
+    counters: Arc<ReplicationCounters>,
+    stop: Arc<Stop>,
+) {
+    let origin_id = derive_origin_id();
+    let family = store.config().clone();
+    let mut peers: Vec<Peer> = cfg.peers.iter().map(|a| Peer::new(a.clone(), &family)).collect();
+    let interval = Duration::from_millis(cfg.sync_interval_ms.max(1));
+    crate::log_info!(
+        "replicator: origin {origin_id:#x}, {} peer(s), sync every {}ms",
+        peers.len(),
+        interval.as_millis()
+    );
+    loop {
+        {
+            let guard = stop.stopped.lock().expect("replicator stop lock");
+            let (guard, _) = stop
+                .cv
+                .wait_timeout_while(guard, interval, |stopped| !*stopped)
+                .expect("replicator stop cv");
+            if *guard {
+                break;
+            }
+        }
+        // cheap probe first: an idle cluster must not pay the lock-all
+        // K-way origin merge 60+ times a second just to discover there
+        // is nothing to ship and no staged retry outstanding. Peers in
+        // reconnect backoff are excluded (a dead peer must not force
+        // the snapshot either); synced idle channels accrue heartbeat
+        // credit here so receiver restarts are probed even with no
+        // local writes.
+        let stamp = store.origin_version();
+        let now = Instant::now();
+        let mut need = false;
+        for p in peers.iter_mut() {
+            if now < p.backoff_until {
+                continue;
+            }
+            if p.pending.is_some() || p.acked_version != stamp || !p.synced_once {
+                need = true;
+            } else {
+                p.idle_ticks += 1;
+                if p.idle_ticks >= HEARTBEAT_TICKS {
+                    need = true;
+                }
+            }
+        }
+        if need {
+            let (version, snap) = store.origin_snapshot();
+            for peer in peers.iter_mut() {
+                sync_peer(peer, &snap, version, &cfg, origin_id, &counters);
+            }
+        }
+        let cursor = peers.iter().map(|p| p.acked_version).min().unwrap_or(0);
+        // the sync age only advances when every channel is settled:
+        // contacted at least once, nothing staged, cursor at least at
+        // the probed stamp — a partitioned or never-reached peer makes
+        // the age grow (or stay "never") instead of masking the outage
+        // behind a liveness tick
+        let settled = peers
+            .iter()
+            .all(|p| p.synced_once && p.pending.is_none() && p.acked_version >= stamp);
+        counters.note_tick(cursor, settled);
+    }
+    crate::log_info!("replicator: stopping");
+}
+
+/// One peer's share of a sync tick: stage a frame if there is unshipped
+/// mass, then try to deliver whatever is staged (possibly a retry from
+/// an earlier tick). At most two delivery attempts per tick (the second
+/// only for the gap → full-ship fallback).
+fn sync_peer(
+    p: &mut Peer,
+    snap: &StreamSketch,
+    version: u64,
+    cfg: &ReplicaConfig,
+    origin_id: u64,
+    counters: &ReplicationCounters,
+) {
+    if Instant::now() < p.backoff_until {
+        return;
+    }
+    if p.client.is_none() {
+        match StoreClient::connect_with(&p.addr, cfg.client_options()) {
+            Ok(c) => {
+                p.client = Some(c);
+                p.backoff_ms = 0;
+            }
+            Err(e) => {
+                crate::log_debug!("replicator: cannot reach {} ({e})", p.addr);
+                p.bump_backoff();
+                return;
+            }
+        }
+    }
+    if p.pending.is_none() {
+        // nothing staged: establish a never-contacted channel (an
+        // eager first-contact full ship, so "synced" always means
+        // "actually acked"), ship new mass, or probe an idle channel
+        // with a tiny empty-delta heartbeat (a receiver that restarted
+        // and lost un-snapshotted replica mass answers it with a
+        // sequence gap, which triggers the healing full ship)
+        let heartbeat = p.synced_once && p.idle_ticks >= HEARTBEAT_TICKS;
+        if version == p.acked_version && p.synced_once && !heartbeat {
+            return; // unchanged cursor — zero bytes on idle channels
+        }
+        p.idle_ticks = 0;
+        let force_full = !p.synced_once
+            || (cfg.full_ship_every > 0 && p.syncs_since_full + 1 >= cfg.full_ship_every);
+        p.pending = Some(stage(p.next_seq, origin_id, snap, &p.acked, version, force_full));
+    }
+    for attempt in 0..2 {
+        let Some(pending) = p.pending.as_ref() else { return };
+        let client = p.client.as_mut().expect("client connected above");
+        match client.raw_call(&pending.frame) {
+            Ok(_) => {
+                // applied or deduped — both mean the peer now holds
+                // everything up to this frame's snapshot
+                let done = p.pending.take().expect("pending present");
+                counters.note_ship(done.frame.len() as u64, done.full);
+                p.acked = done.snap;
+                p.acked_version = done.version;
+                p.next_seq += 1;
+                p.synced_once = true;
+                p.syncs_since_full = if done.full { 0 } else { p.syncs_since_full + 1 };
+                p.backoff_ms = 0; // healthy channel: next failure starts backoff fresh
+                return;
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.contains(wire::SEQ_GAP_MARKER) && attempt == 0 {
+                    // the peer lost this channel's state (receiver
+                    // restart): rebuild the staged frame as a dense
+                    // full-state ship under the same sequence and try
+                    // once more this tick
+                    crate::log_info!(
+                        "replicator: {} reports a sequence gap; falling back to a \
+                         full-state ship",
+                        p.addr
+                    );
+                    p.pending = Some(stage(p.next_seq, origin_id, snap, &p.acked, version, true));
+                    continue;
+                }
+                if msg.contains(SERVER_ERR_PREFIX) {
+                    // server-side rejection that is not a gap (e.g. a
+                    // family mismatch): the connection is healthy and
+                    // the frame stays staged, but a persistent
+                    // rejection must not retry a possibly-large frame
+                    // at full tick rate — back off like a transport
+                    // failure while keeping the connection
+                    crate::log_warn!("replicator: {} rejected frame: {msg}", p.addr);
+                    p.bump_backoff();
+                } else {
+                    // transport failure — ambiguous delivery; keep the
+                    // staged bytes for an identical (dedup-safe) retry
+                    crate::log_debug!("replicator: {} transport error: {msg}", p.addr);
+                    p.client = None;
+                    p.bump_backoff();
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Build the staged frame for `seq`: a dense full-state ship of the
+/// whole origin snapshot, or the sparse-encoded exact delta since the
+/// peer's cursor.
+fn stage(
+    seq: u64,
+    origin_id: u64,
+    snap: &StreamSketch,
+    acked: &StreamSketch,
+    version: u64,
+    full: bool,
+) -> Pending {
+    let frame = if full {
+        wire::build_merge_origin(origin_id, seq, wire::MODE_FULL, false, snap)
+    } else {
+        // exact by linearity: snapshot − cursor is precisely the mass
+        // accumulated since the last acknowledged ship
+        let mut delta = snap.clone();
+        delta.merge_scaled(acked, -1.0);
+        wire::build_merge_origin(origin_id, seq, wire::MODE_DELTA, false, &delta)
+    };
+    Pending { frame, snap: snap.clone(), version, full }
+}

@@ -1,0 +1,369 @@
+//! Receiver-side per-origin replay protection and full-ship accounting.
+//!
+//! Addition-based merging is exact but **not idempotent**, so every
+//! origin-headered merge passes through this table before it may touch
+//! the store:
+//!
+//! - **Dedup window.** Per origin the table remembers the last applied
+//!   sequence number; any frame at or below it is a retry (the sender
+//!   re-sends the identical bytes after an ambiguous error) and is
+//!   dropped as an acknowledged no-op. Sequences on one channel are
+//!   strictly increasing, so "≤ last" is a full-history dedup horizon.
+//! - **Gap detection.** A *delta* frame whose sequence skips ahead
+//!   means the receiver lost channel state this delta builds on
+//!   (typically a receiver restart: replica-plane mass is deliberately
+//!   not WAL-logged — anti-entropy, not the log, restores it). The
+//!   frame is rejected with [`wire::SEQ_GAP_MARKER`] and the sender
+//!   falls back to a full-state ship. A *full* frame heals any gap: it
+//!   carries the origin's entire cumulative state, so it may arrive at
+//!   any sequence.
+//! - **Full-ship remainder.** The table keeps, per origin, the
+//!   cumulative sketch of everything applied from it (`received` —
+//!   fixed size, linearity again). A full frame is applied as
+//!   `full − received`: exactly the mass this receiver has not seen,
+//!   landing in the current epoch like any fresh delivery. Window
+//!   expiry cannot corrupt this — `received` tracks *deliveries*, not
+//!   live mass.
+//!
+//! [`OriginTable::admit`] validates and computes the sketch to apply;
+//! [`OriginTable::commit`] records it only after the store merge
+//! succeeded, so a failed merge (e.g. a fail-stopped WAL on the ingest
+//! path) leaves the channel ready for an exact retry.
+
+use super::super::codec::{self, Reader};
+use super::super::mergeable::MergeableSketch;
+use super::super::sharded::StoreConfig;
+use super::wire::{self, MODE_DELTA, MODE_FULL};
+use crate::sketch::stream::StreamSketch;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Cap on tracked origins: each entry retains one geometry-sized
+/// cumulative sketch, so an unbounded table would let a peer (or a
+/// hostile client) grow memory without limit. At the cap the
+/// least-recently-active origin is evicted — origin ids are fresh per
+/// sender incarnation, so with live channels touching the table every
+/// ship, the stalest entry is almost certainly a dead incarnation whose
+/// channel can never resume (a hard cap instead would permanently halt
+/// replication once enough restarts had been seen). Evicting a
+/// still-live origin degrades rather than corrupts: its next delta hits
+/// the unknown-origin gap path, and the recovery full ship re-delivers
+/// mass the table no longer remembers receiving — the bounded-memory
+/// price, documented here.
+pub const MAX_ORIGINS: usize = 64;
+
+struct OriginState {
+    last_seq: u64,
+    /// eviction clock stamp of the last applied frame
+    last_active: u64,
+    /// cumulative mass applied from this origin (deliveries, not live
+    /// window mass)
+    received: StreamSketch,
+}
+
+/// Outcome of admitting one origin-headered merge frame.
+pub enum Admit {
+    /// Merge this sketch into the store, then [`OriginTable::commit`].
+    Apply(StreamSketch),
+    /// Retry of an already-applied frame — acknowledged no-op.
+    Dedup,
+}
+
+/// Per-origin channel state for one receiving node.
+pub struct OriginTable {
+    origins: HashMap<u64, OriginState>,
+    cap: usize,
+    /// monotonic eviction clock, bumped per committed frame
+    clock: u64,
+}
+
+impl OriginTable {
+    pub fn new(cap: usize) -> Self {
+        Self { origins: HashMap::new(), cap, clock: 0 }
+    }
+
+    /// Origins currently tracked (diagnostics).
+    pub fn len(&self) -> usize {
+        self.origins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.origins.is_empty()
+    }
+
+    /// Validate one frame against the origin's channel state and return
+    /// what (if anything) to merge. Does not mutate — call
+    /// [`OriginTable::commit`] after the store merge succeeds.
+    pub fn admit(&self, origin: u64, seq: u64, mode: u8, sk: StreamSketch) -> Result<Admit> {
+        match self.origins.get(&origin) {
+            None => {
+                match mode {
+                    MODE_FULL => Ok(Admit::Apply(sk)),
+                    MODE_DELTA => {
+                        ensure!(
+                            seq == 1,
+                            "{}: first frame from origin {origin:#x} has seq {seq} \
+                             (want 1); ship full state",
+                            wire::SEQ_GAP_MARKER
+                        );
+                        Ok(Admit::Apply(sk))
+                    }
+                    other => bail!("unknown origin-merge mode {other}"),
+                }
+            }
+            Some(st) => {
+                if seq <= st.last_seq {
+                    return Ok(Admit::Dedup);
+                }
+                match mode {
+                    MODE_FULL => {
+                        // apply only the unseen remainder; merge_scaled
+                        // with -1 also subtracts the update counts, so
+                        // the remainder counts exactly the new items
+                        let mut delta = sk;
+                        delta.merge_scaled(&st.received, -1.0);
+                        Ok(Admit::Apply(delta))
+                    }
+                    MODE_DELTA => {
+                        ensure!(
+                            seq == st.last_seq + 1,
+                            "{}: got seq {seq} from origin {origin:#x} after {}; \
+                             ship full state",
+                            wire::SEQ_GAP_MARKER,
+                            st.last_seq
+                        );
+                        Ok(Admit::Apply(sk))
+                    }
+                    other => bail!("unknown origin-merge mode {other}"),
+                }
+            }
+        }
+    }
+
+    /// Record a successfully-applied frame: advance the dedup horizon
+    /// and fold the applied mass into the origin's cumulative record.
+    /// A new origin arriving at the cap evicts the least-recently-
+    /// active entry first (see [`MAX_ORIGINS`] for why that is safe in
+    /// practice and what it costs when it is not).
+    pub fn commit(&mut self, cfg: &StoreConfig, origin: u64, seq: u64, applied: &StreamSketch) {
+        self.clock += 1;
+        if !self.origins.contains_key(&origin) && self.origins.len() >= self.cap {
+            let stalest =
+                self.origins.iter().min_by_key(|(_, st)| st.last_active).map(|(id, _)| *id);
+            if let Some(id) = stalest {
+                // loud on purpose: if the evicted origin is still live,
+                // its recovery full ship will re-deliver mass this
+                // table no longer remembers receiving (see MAX_ORIGINS)
+                crate::log_warn!(
+                    "store: origin table at cap ({}); evicting stalest origin {id:#x} \
+                     to admit {origin:#x}",
+                    self.cap
+                );
+                self.origins.remove(&id);
+            }
+        }
+        let clock = self.clock;
+        let st = self.origins.entry(origin).or_insert_with(|| OriginState {
+            last_seq: 0,
+            last_active: 0,
+            received: cfg.fresh_sketch(),
+        });
+        st.received.merge_scaled(applied, 1.0);
+        st.last_seq = seq;
+        st.last_active = clock;
+    }
+
+    /// Serialize the table (snapshot persistence): the dedup horizons
+    /// and cumulative records must survive a receiver restart together
+    /// with the store image they describe, or a re-delivered frame /
+    /// full ship would double-count mass the snapshot already holds.
+    /// Origins are written in sorted id order so identical tables
+    /// encode identically.
+    pub(crate) fn encode_into(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.clock);
+        codec::put_u32(out, u32::try_from(self.origins.len()).expect("origin count fits u32"));
+        let mut ids: Vec<u64> = self.origins.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let st = &self.origins[&id];
+            codec::put_u64(out, id);
+            codec::put_u64(out, st.last_seq);
+            codec::put_u64(out, st.last_active);
+            st.received.encode(out);
+        }
+    }
+
+    /// Bit-exact inverse of [`OriginTable::encode_into`], validated
+    /// against the store's sketch family.
+    pub(crate) fn decode_from(rd: &mut Reader<'_>, cfg: &StoreConfig) -> Result<Self> {
+        let clock = rd.u64()?;
+        let count = rd.u32()? as usize;
+        ensure!(count <= MAX_ORIGINS, "snapshot origin table of {count} entries exceeds cap");
+        let mut origins = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let id = rd.u64()?;
+            let last_seq = rd.u64()?;
+            let last_active = rd.u64()?;
+            let received = StreamSketch::decode(rd)?;
+            ensure!(
+                cfg.matches(&received),
+                "corrupt snapshot: origin {id:#x} sketch family mismatch"
+            );
+            origins.insert(id, OriginState { last_seq, last_active, received });
+        }
+        Ok(Self { origins, cap: MAX_ORIGINS, clock })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> StoreConfig {
+        StoreConfig { n1: 32, n2: 32, m1: 8, m2: 8, d: 3, seed: 9, shards: 2, window: 2 }
+    }
+
+    fn sketch_of(cfg: &StoreConfig, items: &[(usize, usize, f64)]) -> StreamSketch {
+        let mut sk = cfg.fresh_sketch();
+        for &(i, j, w) in items {
+            sk.update(i, j, w);
+        }
+        sk
+    }
+
+    fn apply(
+        table: &mut OriginTable,
+        cfg: &StoreConfig,
+        origin: u64,
+        seq: u64,
+        mode: u8,
+        sk: StreamSketch,
+    ) -> Result<Option<StreamSketch>> {
+        match table.admit(origin, seq, mode, sk)? {
+            Admit::Apply(d) => {
+                table.commit(cfg, origin, seq, &d);
+                Ok(Some(d))
+            }
+            Admit::Dedup => Ok(None),
+        }
+    }
+
+    #[test]
+    fn retried_frames_dedup_and_sequences_advance() {
+        let cfg = cfg();
+        let mut t = OriginTable::new(4);
+        let d1 = sketch_of(&cfg, &[(1, 1, 5.0)]);
+        assert!(apply(&mut t, &cfg, 7, 1, MODE_DELTA, d1.clone()).unwrap().is_some());
+        // exact retry: acknowledged no-op
+        assert!(apply(&mut t, &cfg, 7, 1, MODE_DELTA, d1.clone()).unwrap().is_none());
+        // stale (below the horizon) too
+        assert!(apply(&mut t, &cfg, 7, 0, MODE_FULL, d1.clone()).unwrap().is_none());
+        // next in sequence applies
+        let d2 = sketch_of(&cfg, &[(2, 2, 3.0)]);
+        assert!(apply(&mut t, &cfg, 7, 2, MODE_DELTA, d2).unwrap().is_some());
+        // independent origins have independent horizons
+        assert!(apply(&mut t, &cfg, 8, 1, MODE_DELTA, d1).unwrap().is_some());
+    }
+
+    #[test]
+    fn delta_gaps_error_and_full_heals_them() {
+        let cfg = cfg();
+        let mut t = OriginTable::new(4);
+        let d1 = sketch_of(&cfg, &[(1, 1, 5.0)]);
+        apply(&mut t, &cfg, 7, 1, MODE_DELTA, d1.clone()).unwrap();
+        // skipped sequence: the receiver is missing seq 2
+        let err = t.admit(7, 3, MODE_DELTA, d1.clone()).unwrap_err().to_string();
+        assert!(err.contains(wire::SEQ_GAP_MARKER), "unexpected error: {err}");
+        // unknown origin starting mid-sequence is a gap too
+        let err2 = t.admit(99, 5, MODE_DELTA, d1).unwrap_err().to_string();
+        assert!(err2.contains(wire::SEQ_GAP_MARKER), "unexpected error: {err2}");
+        // a full frame at any sequence heals the channel
+        let full = sketch_of(&cfg, &[(1, 1, 5.0), (2, 2, 3.0), (3, 3, 4.0)]);
+        let applied = apply(&mut t, &cfg, 7, 9, MODE_FULL, full).unwrap().unwrap();
+        // only the unseen remainder is applied: (2,2,3) and (3,3,4)
+        assert_eq!(applied.updates, 2);
+        assert_eq!(applied.query(2, 2), 3.0);
+        assert_eq!(applied.query(1, 1), 0.0, "already-delivered mass re-applied");
+        // and a delta continuing from the full's sequence applies
+        let d3 = sketch_of(&cfg, &[(4, 4, 1.0)]);
+        assert!(apply(&mut t, &cfg, 7, 10, MODE_DELTA, d3).unwrap().is_some());
+    }
+
+    #[test]
+    fn full_frames_are_idempotent_via_the_remainder() {
+        let cfg = cfg();
+        let mut t = OriginTable::new(4);
+        let full = sketch_of(&cfg, &[(1, 1, 2.0), (2, 2, 3.0)]);
+        let first = apply(&mut t, &cfg, 5, 1, MODE_FULL, full.clone()).unwrap().unwrap();
+        assert_eq!(first.query(1, 1), 2.0);
+        // the same cumulative state at a later sequence applies nothing
+        let again = apply(&mut t, &cfg, 5, 2, MODE_FULL, full.clone()).unwrap().unwrap();
+        assert_eq!(again.updates, 0);
+        for r in 0..cfg.d {
+            assert!(again.table(r).iter().all(|&v| v == 0.0), "re-applied full mass");
+        }
+        // a grown cumulative state applies exactly the growth
+        let mut grown = full;
+        grown.update(3, 3, 7.0);
+        let third = apply(&mut t, &cfg, 5, 3, MODE_FULL, grown).unwrap().unwrap();
+        assert_eq!(third.updates, 1);
+        assert_eq!(third.query(3, 3), 7.0);
+    }
+
+    #[test]
+    fn table_roundtrips_bit_exact() {
+        let cfg = cfg();
+        let mut t = OriginTable::new(4);
+        apply(&mut t, &cfg, 3, 1, MODE_DELTA, sketch_of(&cfg, &[(1, 1, 2.0)])).unwrap();
+        apply(&mut t, &cfg, 3, 2, MODE_DELTA, sketch_of(&cfg, &[(2, 2, -3.0)])).unwrap();
+        apply(&mut t, &cfg, 8, 1, MODE_FULL, sketch_of(&cfg, &[(4, 4, 7.0)])).unwrap();
+        let mut bytes = Vec::new();
+        t.encode_into(&mut bytes);
+        let got = OriginTable::decode_from(&mut Reader::new(&bytes), &cfg).unwrap();
+        assert_eq!(got.len(), 2);
+        // identical tables encode identically (sorted id order)
+        let mut bytes2 = Vec::new();
+        got.encode_into(&mut bytes2);
+        assert_eq!(bytes, bytes2);
+        // the recovered horizons still dedup and still know the
+        // cumulative record: a stale retry is a no-op, a full ship
+        // applies only the remainder
+        let mut re = got;
+        assert!(apply(&mut re, &cfg, 3, 2, MODE_DELTA, sketch_of(&cfg, &[(2, 2, -3.0)]))
+            .unwrap()
+            .is_none());
+        let full = sketch_of(&cfg, &[(1, 1, 2.0), (2, 2, -3.0), (5, 5, 9.0)]);
+        let applied = apply(&mut re, &cfg, 3, 3, MODE_FULL, full).unwrap().unwrap();
+        assert_eq!(applied.updates, 1);
+        assert_eq!(applied.query(5, 5), 9.0);
+        // wrong-family snapshot bytes are rejected
+        let mut other = cfg.clone();
+        other.seed = 999;
+        assert!(OriginTable::decode_from(&mut Reader::new(&bytes), &other).is_err());
+    }
+
+    #[test]
+    fn stalest_origin_is_evicted_at_the_cap() {
+        let cfg = cfg();
+        let mut t = OriginTable::new(2);
+        let sk = sketch_of(&cfg, &[(1, 1, 1.0)]);
+        apply(&mut t, &cfg, 1, 1, MODE_FULL, sk.clone()).unwrap();
+        apply(&mut t, &cfg, 2, 1, MODE_FULL, sk.clone()).unwrap();
+        // touch origin 1 so origin 2 is the stalest
+        let mut grown = sk.clone();
+        grown.update(9, 9, 1.0);
+        apply(&mut t, &cfg, 1, 2, MODE_FULL, grown).unwrap();
+        // a third origin at the cap evicts origin 2, not origin 1
+        apply(&mut t, &cfg, 3, 1, MODE_FULL, sk.clone()).unwrap();
+        assert_eq!(t.len(), 2);
+        // origin 1's channel is intact: its dedup horizon still holds
+        assert!(apply(&mut t, &cfg, 1, 2, MODE_FULL, sk.clone()).unwrap().is_none());
+        // origin 2 was forgotten: a continuing delta hits the
+        // unknown-origin gap path (the sender will full-ship to recover)
+        let err = t.admit(2, 2, MODE_DELTA, sk.clone()).unwrap_err().to_string();
+        assert!(err.contains(wire::SEQ_GAP_MARKER), "unexpected error: {err}");
+        // replication never halts: new origins keep being admitted
+        apply(&mut t, &cfg, 4, 1, MODE_FULL, sk).unwrap();
+        assert_eq!(t.len(), 2);
+    }
+}

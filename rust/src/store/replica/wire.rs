@@ -1,0 +1,302 @@
+//! Wire format of the origin-headered MERGE (replication plane).
+//!
+//! The legacy MERGE opcode ships a bare [`StreamSketch`] and is applied
+//! by pure addition — re-delivering it double-counts, because addition
+//! is not idempotent. The replication plane therefore speaks a
+//! *headered* merge frame (`op::MERGE_ORIGIN`):
+//!
+//! ```text
+//! body = u64 origin_id | u64 seq | u8 mode | u8 enc | u8 ingest | sketch
+//! ```
+//!
+//! - `origin_id` names one sender incarnation (drawn fresh per process,
+//!   so a restarted sender can never collide with its old channel);
+//! - `seq` increases by one per acknowledged frame on the
+//!   origin→receiver channel; the receiver's per-origin dedup window
+//!   ([`super::origins`]) drops any `seq` at or below the last applied
+//!   one, which is what makes replication (and edge-node) retries safe;
+//! - `mode` is [`MODE_DELTA`] (add the sketch) or [`MODE_FULL`] (the
+//!   sender's whole cumulative origin state; the receiver applies only
+//!   the part it has not already received — see `origins`);
+//! - `enc` is [`ENC_DENSE`] (the standard [`MergeableSketch`] encoding)
+//!   or [`ENC_SPARSE`] (below) — deltas from a short sync interval touch
+//!   few buckets, and shipping only the non-zero counters is where the
+//!   replicator's bandwidth win over full-state ships comes from;
+//! - `ingest` distinguishes *edge ingest* (1: the mass counts as this
+//!   node's own traffic and is re-originated to its peers) from
+//!   *replication traffic* (0: never re-originated — relaying would
+//!   double-deliver in any mesh with more than one path).
+//!
+//! Sparse encoding (per-repeat non-zero counters):
+//!
+//! ```text
+//! sparse = u32 n1,n2,m1,m2,d | u64 seed | u64 updates | u8 flags
+//!        | d × ( u32 nnz | nnz × (u32 bucket | f64 value) )
+//! ```
+//!
+//! Skipping exact-zero counters is bit-safe: adding `±0.0` to any
+//! counter never changes its bit pattern, so a sparse-shipped delta
+//! merges bit-identically to its dense form.
+
+use super::super::codec::{self, Reader};
+use super::super::mergeable::{MergeableSketch, MAX_DECODE_ELEMS};
+use crate::sketch::stream::StreamSketch;
+use anyhow::{ensure, Result};
+
+/// Additive delta frame.
+pub const MODE_DELTA: u8 = 0;
+/// Cumulative full-state frame (receiver applies the unseen remainder).
+pub const MODE_FULL: u8 = 1;
+
+/// Payload is the standard dense [`MergeableSketch`] encoding.
+pub const ENC_DENSE: u8 = 0;
+/// Payload is the sparse non-zero-counter encoding.
+pub const ENC_SPARSE: u8 = 1;
+
+/// Marker substring for receiver-side sequence-gap errors. The sender
+/// matches on it to fall back to a full-state ship (the receiver lost
+/// this channel's cursor — typically a receiver restart).
+pub const SEQ_GAP_MARKER: &str = "origin sequence gap";
+
+/// Parsed origin header of a `MERGE_ORIGIN` body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OriginHeader {
+    pub origin: u64,
+    pub seq: u64,
+    pub mode: u8,
+    pub enc: u8,
+    pub ingest: bool,
+}
+
+pub fn put_header(out: &mut Vec<u8>, h: &OriginHeader) {
+    codec::put_u64(out, h.origin);
+    codec::put_u64(out, h.seq);
+    codec::put_u8(out, h.mode);
+    codec::put_u8(out, h.enc);
+    codec::put_u8(out, u8::from(h.ingest));
+}
+
+pub fn read_header(rd: &mut Reader<'_>) -> Result<OriginHeader> {
+    let origin = rd.u64()?;
+    let seq = rd.u64()?;
+    let mode = rd.u8()?;
+    ensure!(mode <= MODE_FULL, "unknown origin-merge mode {mode}");
+    let enc = rd.u8()?;
+    ensure!(enc <= ENC_SPARSE, "unknown origin-merge encoding {enc}");
+    let ingest = rd.u8()?;
+    ensure!(ingest <= 1, "corrupt origin-merge ingest flag {ingest}");
+    Ok(OriginHeader { origin, seq, mode, enc, ingest: ingest == 1 })
+}
+
+/// Sparse-encode `sk` (only non-zero counters travel).
+pub fn encode_sparse(sk: &StreamSketch, out: &mut Vec<u8>) {
+    for v in [sk.n1, sk.n2, sk.m1, sk.m2, sk.d] {
+        codec::put_u32(out, u32::try_from(v).expect("sketch dim too large to encode"));
+    }
+    codec::put_u64(out, sk.seed);
+    codec::put_u64(out, sk.updates);
+    codec::put_u8(out, u8::from(sk.has_deletions));
+    for r in 0..sk.d {
+        let table = sk.table(r);
+        let nnz = table.iter().filter(|&&v| v != 0.0).count();
+        codec::put_u32(out, u32::try_from(nnz).expect("nnz fits u32"));
+        for (idx, &v) in table.iter().enumerate() {
+            if v != 0.0 {
+                codec::put_u32(out, idx as u32);
+                codec::put_f64(out, v);
+            }
+        }
+    }
+}
+
+/// Bit-exact inverse of [`encode_sparse`] (untouched buckets decode to
+/// `+0.0`, which merges as a no-op).
+pub fn decode_sparse(rd: &mut Reader<'_>) -> Result<StreamSketch> {
+    let n1 = rd.u32()? as usize;
+    let n2 = rd.u32()? as usize;
+    let m1 = rd.u32()? as usize;
+    let m2 = rd.u32()? as usize;
+    let d = rd.u32()? as usize;
+    ensure!(
+        n1 > 0 && n2 > 0 && m1 > 0 && m2 > 0 && d >= 1,
+        "corrupt sparse-sketch header ({n1}x{n2} -> {m1}x{m2}, d={d})"
+    );
+    ensure!(
+        m1.saturating_mul(m2).saturating_mul(d) <= MAX_DECODE_ELEMS,
+        "sparse sketch of {d}x{m1}x{m2} counters exceeds decode cap"
+    );
+    let seed = rd.u64()?;
+    let updates = rd.u64()?;
+    let flags = rd.u8()?;
+    ensure!(flags <= 1, "corrupt sparse-sketch flags byte {flags}");
+    let mut sk = StreamSketch::new(n1, n2, m1, m2, d, seed);
+    let buckets = m1 * m2;
+    for r in 0..d {
+        let nnz = rd.u32()? as usize;
+        ensure!(nnz <= buckets, "sparse table {r} claims {nnz} entries in {buckets} buckets");
+        let table = sk.table_mut(r);
+        for _ in 0..nnz {
+            let idx = rd.u32()? as usize;
+            ensure!(idx < buckets, "sparse entry bucket {idx} outside table of {buckets}");
+            table[idx] = rd.f64()?;
+        }
+    }
+    sk.updates = updates;
+    sk.has_deletions = flags == 1;
+    Ok(sk)
+}
+
+/// Append `sk` in whichever encoding is smaller (deltas from a short
+/// sync interval are usually sparse; a saturated cumulative state is
+/// not). Returns the [`ENC_DENSE`] / [`ENC_SPARSE`] tag that was used.
+pub fn encode_sketch_auto(sk: &StreamSketch, out: &mut Vec<u8>) -> u8 {
+    let nnz: usize =
+        (0..sk.d).map(|r| sk.table(r).iter().filter(|&&v| v != 0.0).count()).sum();
+    // shared header is identical; per repeat sparse pays 4 + 12·nnz
+    // bytes against the dense 8·m1·m2
+    if 4 * sk.d + 12 * nnz < 8 * sk.space() {
+        encode_sparse(sk, out);
+        ENC_SPARSE
+    } else {
+        sk.encode(out);
+        ENC_DENSE
+    }
+}
+
+/// Build a complete `MERGE_ORIGIN` request payload (opcode byte
+/// included) — shared by [`StoreClient::merge_origin`] and the
+/// replicator, which retains the exact bytes for dedup-safe retries.
+/// Full-state ships always travel dense (they are the measured
+/// full-ship baseline); deltas pick the smaller encoding.
+///
+/// [`StoreClient::merge_origin`]: super::super::client::StoreClient::merge_origin
+pub fn build_merge_origin(
+    origin: u64,
+    seq: u64,
+    mode: u8,
+    ingest: bool,
+    sk: &StreamSketch,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(super::super::server::op::MERGE_ORIGIN);
+    // one serializer for the header layout: the enc byte is a
+    // placeholder until the payload encoding is chosen below
+    put_header(&mut out, &OriginHeader { origin, seq, mode, enc: ENC_DENSE, ingest });
+    let enc_pos = out.len() - 2; // enc byte sits before the ingest byte
+    let enc = if mode == MODE_FULL {
+        sk.encode(&mut out);
+        ENC_DENSE
+    } else {
+        encode_sketch_auto(sk, &mut out)
+    };
+    out[enc_pos] = enc;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn sample_sketch(n_updates: usize) -> StreamSketch {
+        let mut sk = StreamSketch::new(48, 40, 12, 10, 5, 77);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..n_updates {
+            let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+            let w = if rng.uniform() < 0.25 { -2.0 } else { 3.0 };
+            sk.update(i, j, w);
+        }
+        sk
+    }
+
+    #[test]
+    fn header_roundtrips() {
+        let h = OriginHeader {
+            origin: 0xFEED,
+            seq: 42,
+            mode: MODE_FULL,
+            enc: ENC_SPARSE,
+            ingest: true,
+        };
+        let mut out = Vec::new();
+        put_header(&mut out, &h);
+        assert_eq!(read_header(&mut Reader::new(&out)).unwrap(), h);
+        // corrupt mode / enc / ingest bytes are rejected
+        for (pos, bad) in [(16usize, 9u8), (17, 9), (18, 9)] {
+            let mut b = out.clone();
+            b[pos] = bad;
+            assert!(read_header(&mut Reader::new(&b)).is_err(), "byte {pos} accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_is_bit_exact() {
+        for n in [0usize, 1, 30, 400] {
+            let sk = sample_sketch(n);
+            let mut out = Vec::new();
+            encode_sparse(&sk, &mut out);
+            let got = decode_sparse(&mut Reader::new(&out)).unwrap();
+            assert!(sk.same_family(&got));
+            assert_eq!(sk.updates, got.updates);
+            assert_eq!(sk.has_deletions, got.has_deletions);
+            for r in 0..sk.d {
+                for (a, b) in sk.table(r).iter().zip(got.table(r).iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} table {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_beats_dense_for_small_deltas() {
+        let sk = sample_sketch(8);
+        let mut sparse = Vec::new();
+        let mut dense = Vec::new();
+        encode_sparse(&sk, &mut sparse);
+        sk.encode(&mut dense);
+        assert!(
+            sparse.len() * 4 < dense.len(),
+            "sparse {} vs dense {}",
+            sparse.len(),
+            dense.len()
+        );
+        // auto picks sparse for the delta, dense for a saturated sketch
+        let mut out = Vec::new();
+        assert_eq!(encode_sketch_auto(&sk, &mut out), ENC_SPARSE);
+        let saturated = sample_sketch(20_000);
+        let mut out2 = Vec::new();
+        assert_eq!(encode_sketch_auto(&saturated, &mut out2), ENC_DENSE);
+    }
+
+    #[test]
+    fn sparse_rejects_corrupt_entries() {
+        let sk = sample_sketch(20);
+        let mut out = Vec::new();
+        encode_sparse(&sk, &mut out);
+        // header ends at 5*4 + 8 + 8 + 1 = 37; first table's nnz there
+        let nnz_pos = 37;
+        let mut oversized = out.clone();
+        oversized[nnz_pos..nnz_pos + 4].copy_from_slice(&10_000u32.to_le_bytes());
+        assert!(decode_sparse(&mut Reader::new(&oversized)).is_err());
+        // out-of-range bucket index in the first entry
+        let mut bad_idx = out;
+        bad_idx[nnz_pos + 4..nnz_pos + 8].copy_from_slice(&9_999u32.to_le_bytes());
+        assert!(decode_sparse(&mut Reader::new(&bad_idx)).is_err());
+    }
+
+    #[test]
+    fn build_merge_origin_parses_back() {
+        let sk = sample_sketch(12);
+        let frame = build_merge_origin(7, 3, MODE_DELTA, false, &sk);
+        let mut rd = Reader::new(&frame);
+        assert_eq!(rd.u8().unwrap(), super::super::super::server::op::MERGE_ORIGIN);
+        let h = read_header(&mut rd).unwrap();
+        assert_eq!((h.origin, h.seq, h.mode, h.ingest), (7, 3, MODE_DELTA, false));
+        let got = match h.enc {
+            ENC_SPARSE => decode_sparse(&mut rd).unwrap(),
+            _ => StreamSketch::decode(&mut rd).unwrap(),
+        };
+        assert_eq!(got.updates, sk.updates);
+        assert!(rd.is_empty());
+    }
+}

@@ -36,9 +36,20 @@
 //! ([`crate::coordinator::Coordinator`]) when the server is started
 //! `with_coordinator` and AOT artifacts are present; otherwise the
 //! opcode reports an error and everything else keeps working.
+//!
+//! **Replication.** With `StoreServerConfig::peers` set the node is a
+//! cluster member: a replicator thread ([`super::replica`]) ships
+//! per-peer origin deltas over this same protocol, and the server
+//! accepts `MERGE_ORIGIN` frames — headered merges whose per-origin
+//! sequence dedup makes retries (replication *and* edge-node) safe,
+//! where a retried legacy MERGE would double-count. Legacy headerless
+//! MERGE keeps working unchanged. STATS carries the replication
+//! counters (peer count, last-sync age, cursor version, ships, bytes,
+//! dedups) after the store fields.
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
+use super::replica::{wire, ReplicaConfig, ReplicationCounters, Replicator};
 use super::sharded::StoreConfig;
 use super::wal::{DurableOptions, DurableStore};
 use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
@@ -78,6 +89,10 @@ pub mod op {
     pub const STATS: u8 = 9;
     pub const BATCH_SKETCH: u8 = 10;
     pub const SHUTDOWN: u8 = 11;
+    /// Origin-headered merge (replication plane + retry-safe edge
+    /// ingest): `u64 origin | u64 seq | u8 mode | u8 enc | u8 ingest |
+    /// sketch`, deduplicated per origin — see [`crate::store::replica`].
+    pub const MERGE_ORIGIN: u8 = 12;
 }
 
 pub const STATUS_OK: u8 = 0;
@@ -142,6 +157,17 @@ pub struct StoreServerConfig {
     pub with_coordinator: bool,
     /// AOT artifacts for the coordinator backend
     pub artifacts_dir: String,
+    /// replication peers (`host:port` of their store servers); non-empty
+    /// turns this node into a cluster member: local writes accumulate in
+    /// the origin sketch and a replicator thread ships per-peer deltas
+    pub peers: Vec<String>,
+    /// anti-entropy tick interval (staleness vs bandwidth knob)
+    pub sync_interval_ms: u64,
+    /// force a dense full-state ship every Nth sync per peer
+    /// (self-healing cadence; `0` = only on first contact / gaps)
+    pub full_ship_every: u64,
+    /// connect + I/O timeout for the replicator's peer connections
+    pub replica_timeout_ms: u64,
 }
 
 impl Default for StoreServerConfig {
@@ -154,26 +180,34 @@ impl Default for StoreServerConfig {
             group_commit: true,
             with_coordinator: false,
             artifacts_dir: crate::runtime::DEFAULT_ARTIFACTS_DIR.to_string(),
+            peers: Vec::new(),
+            sync_interval_ms: 100,
+            full_ship_every: 0,
+            replica_timeout_ms: 2_000,
         }
     }
 }
 
 /// State shared by the accept loop and every connection thread.
 struct Shared {
-    store: DurableStore,
+    store: Arc<DurableStore>,
     coordinator: Option<Coordinator>,
+    /// replication counters (zeros on a standalone node) — written by
+    /// the replicator thread and the origin-merge path, read by STATS
+    repl: Arc<ReplicationCounters>,
     stop: AtomicBool,
     connections: AtomicU64,
 }
 
 /// Handle to a running server. Dropping it (or calling
-/// [`StoreServer::shutdown`]) stops the accept loop; in-flight
-/// connection threads finish their current request and exit when their
-/// client disconnects.
+/// [`StoreServer::shutdown`]) stops the replicator and the accept loop;
+/// in-flight connection threads finish their current request and exit
+/// when their client disconnects.
 pub struct StoreServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
     accept: Option<std::thread::JoinHandle<()>>,
+    replicator: Option<Replicator>,
 }
 
 impl StoreServer {
@@ -185,6 +219,36 @@ impl StoreServer {
                 DurableOptions { fsync: cfg.fsync, group_commit: cfg.group_commit },
             )?,
             None => DurableStore::in_memory(cfg.store.clone()),
+        };
+        let store = Arc::new(store);
+        let repl = Arc::new(ReplicationCounters::new(cfg.peers.len() as u64));
+        let replicator = if cfg.peers.is_empty() {
+            None
+        } else {
+            // an easy copy-paste misconfig with a silent symptom: a node
+            // peered at itself re-ingests its own deltas and every
+            // estimate doubles. Catch the literal form of it here (alias
+            // addresses can still slip through — documented).
+            ensure!(
+                !cfg.peers.iter().any(|p| p == &cfg.addr),
+                "peer list contains this node's own address {} (self-replication \
+                 would double-count every update)",
+                cfg.addr
+            );
+            // flip the origin accumulators on before the listener
+            // exists, so every locally-originated write is captured
+            store.enable_replication();
+            Some(Replicator::start(
+                store.clone(),
+                ReplicaConfig {
+                    peers: cfg.peers.clone(),
+                    sync_interval_ms: cfg.sync_interval_ms,
+                    full_ship_every: cfg.full_ship_every,
+                    connect_timeout_ms: cfg.replica_timeout_ms,
+                    io_timeout_ms: cfg.replica_timeout_ms,
+                },
+                repl.clone(),
+            )?)
         };
         let coordinator = if cfg.with_coordinator {
             match Coordinator::start(CoordinatorConfig {
@@ -207,6 +271,7 @@ impl StoreServer {
         let shared = Arc::new(Shared {
             store,
             coordinator,
+            repl,
             stop: AtomicBool::new(false),
             connections: AtomicU64::new(0),
         });
@@ -215,7 +280,7 @@ impl StoreServer {
             .name("hocs-store-accept".into())
             .spawn(move || accept_loop(listener, ashared))?;
         crate::log_info!("store: serving on {addr}");
-        Ok(Self { addr, shared, accept: Some(accept) })
+        Ok(Self { addr, shared, accept: Some(accept), replicator })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -242,6 +307,9 @@ impl StoreServer {
 
 impl Drop for StoreServer {
     fn drop(&mut self) {
+        // stop shipping before the listener dies (peers see a clean
+        // connection drop, not a mid-frame hangup)
+        self.replicator.take();
         self.shared.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept.take() {
             // poke the blocking accept() so it observes the stop flag
@@ -394,6 +462,31 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
             }
             shared.store.merge_sketch(&sk)?;
         }
+        op::MERGE_ORIGIN => {
+            let hdr = wire::read_header(&mut rd)?;
+            let sk = match hdr.enc {
+                wire::ENC_SPARSE => wire::decode_sparse(&mut rd)?,
+                _ => StreamSketch::decode(&mut rd)?,
+            };
+            ensure!(cfg.matches(&sk), "origin-merge sketch family does not match this store");
+            for r in 0..sk.d {
+                ensure!(
+                    sk.table(r).iter().all(|v| v.is_finite()),
+                    "origin-merge sketch contains non-finite counters"
+                );
+            }
+            // the store runs the whole admit → log(ingest) → apply →
+            // commit sequence atomically relative to snapshots; a
+            // deduplicated retry is an acknowledged no-op
+            let applied =
+                shared.store.apply_origin_merge(hdr.origin, hdr.seq, hdr.mode, hdr.ingest, sk)?;
+            if applied {
+                shared.repl.note_applied();
+            } else {
+                shared.repl.note_deduped();
+            }
+            codec::put_u8(body, u8::from(applied));
+        }
         op::SNAPSHOT => shared.store.snapshot()?,
         op::ADVANCE_EPOCH => shared.store.advance_epoch()?,
         op::STATS => {
@@ -402,6 +495,18 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
             codec::put_u32(body, st.window as u32);
             codec::put_u64(body, st.epoch);
             codec::put_u64(body, st.updates);
+            // replication fields (zeros on a standalone node); old
+            // clients simply stop reading after the store fields
+            let rs = shared.repl.snapshot();
+            codec::put_u32(body, rs.peers as u32);
+            codec::put_u8(body, u8::from(rs.last_sync_age_ms.is_some()));
+            codec::put_u64(body, rs.last_sync_age_ms.unwrap_or(0));
+            codec::put_u64(body, rs.cursor_version);
+            codec::put_u64(body, rs.ships);
+            codec::put_u64(body, rs.full_ships);
+            codec::put_u64(body, rs.bytes_shipped);
+            codec::put_u64(body, rs.merges_applied);
+            codec::put_u64(body, rs.merges_deduped);
         }
         op::BATCH_SKETCH => {
             let co = shared
@@ -542,6 +647,61 @@ mod tests {
         // connection still serves after all of those
         client.update(1, 1, 1.0).unwrap();
         assert_eq!(client.query(1, 1).unwrap(), 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn retried_origin_merge_is_a_no_op() {
+        // the MERGE replay-protection regression test: an identical
+        // re-delivered origin-headered frame must not double-count,
+        // while legacy headerless MERGE keeps its additive semantics
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        let mut sk = test_cfg().fresh_sketch();
+        sk.update(3, 7, 5.0);
+        assert!(client.merge_origin(0xE0, 1, false, true, &sk).unwrap(), "first frame applies");
+        // identical retry (same origin, same seq): acknowledged no-op
+        assert!(!client.merge_origin(0xE0, 1, false, true, &sk).unwrap(), "retry re-applied");
+        assert_eq!(client.query(3, 7).unwrap(), 5.0, "retried frame double-counted");
+        // a second connection retrying the same frame is deduped too
+        let mut other = StoreClient::connect(server.local_addr()).unwrap();
+        assert!(!other.merge_origin(0xE0, 1, false, true, &sk).unwrap());
+        assert_eq!(client.query(3, 7).unwrap(), 5.0);
+        // the dedup is observable in STATS
+        let (_, repl) = client.stats_full().unwrap();
+        let repl = repl.expect("replication stats present");
+        assert_eq!(repl.merges_applied, 1);
+        assert_eq!(repl.merges_deduped, 2);
+        // legacy headerless MERGE still round-trips (and still adds)
+        client.merge(&sk).unwrap();
+        assert_eq!(client.query(3, 7).unwrap(), 10.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn origin_sequence_gaps_error_and_full_ships_heal() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        let mut d1 = test_cfg().fresh_sketch();
+        d1.update(1, 1, 2.0);
+        assert!(client.merge_origin(0xF1, 1, false, false, &d1).unwrap());
+        // a skipped delta sequence is rejected with the gap marker
+        let err = client.merge_origin(0xF1, 3, false, false, &d1).unwrap_err().to_string();
+        assert!(err.contains("origin sequence gap"), "unexpected error: {err}");
+        assert_eq!(client.query(1, 1).unwrap(), 2.0, "rejected frame was applied");
+        // a full-state ship at any sequence heals the channel: only the
+        // unseen remainder lands
+        let mut full = test_cfg().fresh_sketch();
+        full.update(1, 1, 2.0); // already delivered via d1
+        full.update(2, 2, 4.0); // new
+        assert!(client.merge_origin(0xF1, 9, true, false, &full).unwrap());
+        assert_eq!(client.query(1, 1).unwrap(), 2.0, "full ship double-counted");
+        assert_eq!(client.query(2, 2).unwrap(), 4.0);
+        // and the channel continues with deltas after the full
+        let mut d2 = test_cfg().fresh_sketch();
+        d2.update(5, 5, 1.0);
+        assert!(client.merge_origin(0xF1, 10, false, false, &d2).unwrap());
+        assert_eq!(client.query(5, 5).unwrap(), 1.0);
         server.shutdown();
     }
 

@@ -44,7 +44,7 @@ use crate::rng::SplitMix64;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{ensure, Result};
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 thread_local! {
@@ -189,6 +189,12 @@ struct Shard {
     /// cheap emptiness flag for `pending` — set by every mutation, so
     /// the fold can skip the O(d·m1·m2) merge for untouched shards
     pending_dirty: bool,
+    /// cumulative sketch of this shard's **locally-originated** mass
+    /// (updates, batches, and ingest merges — never replication-plane
+    /// merges), written by the same fused fan-out kernel when
+    /// replication is enabled. Never expired by the window: it is what
+    /// the replicator ships, and peers expire by their own rotations.
+    origin: StreamSketch,
 }
 
 /// The incrementally maintained scan plane: one merged sketch stamped
@@ -240,6 +246,16 @@ pub struct ShardedStore {
     /// bumped by every mutation while the owning shard's lock (or, for
     /// rotation, every lock) is held — the scan cache's staleness stamp
     version: AtomicU64,
+    /// whether the per-shard origin accumulators are fed (set once by
+    /// the server before replication traffic starts; a plain flag so a
+    /// standalone store pays one relaxed load per write and nothing
+    /// else)
+    replicate: AtomicBool,
+    /// bumped (under the owning shard's lock) only when locally-
+    /// originated mass lands — the replicator's per-peer cursor stamp.
+    /// Replica-plane merges and epoch rotations do not move it, so an
+    /// unchanged stamp means "nothing new to ship".
+    origin_version: AtomicU64,
     scan: Mutex<ScanCache>,
     /// rotation-storm fallbacks taken by the optimistic readers
     /// ([`ShardedStore::point_query`] / [`ShardedStore::stats`]) —
@@ -262,6 +278,7 @@ impl ShardedStore {
                     total: cfg.fresh_sketch(),
                     pending: cfg.fresh_sketch(),
                     pending_dirty: false,
+                    origin: cfg.fresh_sketch(),
                 })
             })
             .collect();
@@ -273,6 +290,8 @@ impl ShardedStore {
             shards,
             epoch: AtomicU64::new(0),
             version: AtomicU64::new(0),
+            replicate: AtomicBool::new(false),
+            origin_version: AtomicU64::new(0),
             scan,
             lockall_fallbacks: AtomicU64::new(0),
             router_salt,
@@ -312,12 +331,24 @@ impl ShardedStore {
         let mut guard = self.shards[s].lock().expect("shard lock");
         let sh = &mut *guard;
         let cur = sh.cur;
-        StreamSketch::update_fanout(
-            &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
-            i,
-            j,
-            w,
-        );
+        if self.replicate.load(Ordering::Relaxed) {
+            // replication adds a fourth fan-out target (the shipped
+            // origin accumulator) to the same single hash walk
+            StreamSketch::update_fanout(
+                &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending, &mut sh.origin],
+                i,
+                j,
+                w,
+            );
+            self.origin_version.fetch_add(1, Ordering::SeqCst);
+        } else {
+            StreamSketch::update_fanout(
+                &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
+                i,
+                j,
+                w,
+            );
+        }
         sh.pending_dirty = true;
         self.version.fetch_add(1, Ordering::SeqCst);
     }
@@ -382,10 +413,18 @@ impl ShardedStore {
             let mut guard = self.shards[s].lock().expect("shard lock");
             let sh = &mut *guard;
             let cur = sh.cur;
-            StreamSketch::update_batch_fanout(
-                &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
-                group,
-            );
+            if self.replicate.load(Ordering::Relaxed) {
+                StreamSketch::update_batch_fanout(
+                    &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending, &mut sh.origin],
+                    group,
+                );
+                self.origin_version.fetch_add(1, Ordering::SeqCst);
+            } else {
+                StreamSketch::update_batch_fanout(
+                    &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
+                    group,
+                );
+            }
             sh.pending_dirty = true;
             self.version.fetch_add(1, Ordering::SeqCst);
         }
@@ -584,8 +623,18 @@ impl ShardedStore {
 
     /// Merge a same-family sketch from outside (another node, a batch
     /// job) into the store. It lands in shard 0's current epoch slot so
-    /// it ages out with the window like any other traffic.
+    /// it ages out with the window like any other traffic. Counts as
+    /// locally-originated (edge-ingest) traffic: with replication on it
+    /// enters the origin accumulator and is relayed to peers.
     pub fn merge_sketch(&self, sk: &StreamSketch) -> Result<()> {
+        self.merge_sketch_opts(sk, true)
+    }
+
+    /// [`ShardedStore::merge_sketch`] with explicit origination.
+    /// `originate = false` is the replication plane: mass received from
+    /// a peer must never re-enter the origin accumulator, or every mesh
+    /// with more than one path would deliver it twice.
+    pub(crate) fn merge_sketch_opts(&self, sk: &StreamSketch, originate: bool) -> Result<()> {
         ensure!(
             self.cfg.matches(sk),
             "sketch geometry/family does not match this store (want {}x{} -> {}x{}, d={}, seed={})",
@@ -604,8 +653,46 @@ impl ShardedStore {
         // the scan cache's delta record, like any other mutation
         sh.pending.merge_scaled(sk, 1.0);
         sh.pending_dirty = true;
+        if originate && self.replicate.load(Ordering::Relaxed) {
+            sh.origin.merge_scaled(sk, 1.0);
+            self.origin_version.fetch_add(1, Ordering::SeqCst);
+        }
         self.version.fetch_add(1, Ordering::SeqCst);
         Ok(())
+    }
+
+    /// Turn the per-shard origin accumulators on (or off). The server
+    /// flips this on **before** serving when peers are configured, so
+    /// every locally-originated write is captured; mass written while
+    /// the flag is off (e.g. WAL replay during recovery) is not
+    /// replicated — anti-entropy state is per process incarnation.
+    pub fn set_replication(&self, on: bool) {
+        self.replicate.store(on, Ordering::SeqCst);
+    }
+
+    pub fn replication_enabled(&self) -> bool {
+        self.replicate.load(Ordering::SeqCst)
+    }
+
+    /// Current origin-version stamp without taking any lock — the
+    /// replicator's cheap "anything new to ship?" probe. May race a
+    /// concurrent write; [`ShardedStore::origin_snapshot`] re-reads it
+    /// under every shard lock for the exact cursor stamp.
+    pub fn origin_version(&self) -> u64 {
+        self.origin_version.load(Ordering::SeqCst)
+    }
+
+    /// One consistent (origin-version, cumulative local-origin sketch)
+    /// pair, merged across every shard under all shard locks — what the
+    /// replicator diffs per-peer cursors against. O(K·d·m1·m2) per call,
+    /// paid once per sync tick, never on the write path.
+    pub fn origin_snapshot(&self) -> (u64, StreamSketch) {
+        let guards = self.lock_all();
+        let mut out = self.cfg.fresh_sketch();
+        for sh in &guards {
+            out.merge_scaled(&sh.origin, 1.0);
+        }
+        (self.origin_version.load(Ordering::SeqCst), out)
     }
 
     /// Slide the window one epoch: in every shard the expiring slot is
@@ -712,13 +799,16 @@ impl ShardedStore {
             ensure!(cfg.matches(&total), "corrupt snapshot: total sketch family mismatch");
             // pendings are redundant state (already inside the totals),
             // so snapshots do not carry them: a decoded store starts
-            // with clean deltas and a never-built scan cache
+            // with clean deltas and a never-built scan cache. Origin
+            // accumulators are volatile too (replication state is per
+            // process incarnation; see `set_replication`).
             shards.push(Mutex::new(Shard {
                 ring,
                 cur,
                 total,
                 pending: cfg.fresh_sketch(),
                 pending_dirty: false,
+                origin: cfg.fresh_sketch(),
             }));
         }
         let router_salt = Self::derive_salt(cfg.seed);
@@ -729,6 +819,8 @@ impl ShardedStore {
             shards,
             epoch: AtomicU64::new(epoch),
             version: AtomicU64::new(0),
+            replicate: AtomicBool::new(false),
+            origin_version: AtomicU64::new(0),
             scan,
             lockall_fallbacks: AtomicU64::new(0),
             router_salt,
@@ -1140,6 +1232,65 @@ mod tests {
         });
         assert_eq!(store.epoch(), 150);
         assert_eq!(store.updates(), 0, "window 3 expired the preload long ago");
+    }
+
+    #[test]
+    fn origin_accumulator_tracks_exactly_the_local_mass() {
+        let cfg = small_cfg(3, 2);
+        let store = ShardedStore::new(cfg.clone());
+        // mass written before replication is enabled is not captured
+        store.update(1, 1, 4.0);
+        store.set_replication(true);
+        let (v0, empty) = store.origin_snapshot();
+        assert_eq!(v0, 0);
+        assert_eq!(empty.updates, 0);
+
+        // local traffic of every kind lands in the origin accumulator
+        let mut reference = cfg.fresh_sketch();
+        let mut rng = Pcg64::new(55);
+        for _ in 0..200 {
+            let (i, j) = (rng.gen_range(48) as usize, rng.gen_range(40) as usize);
+            let w = int_weight(&mut rng);
+            store.update(i, j, w);
+            reference.update(i, j, w);
+        }
+        let items: Vec<(usize, usize, f64)> = (0..60)
+            .map(|_| {
+                (rng.gen_range(48) as usize, rng.gen_range(40) as usize, int_weight(&mut rng))
+            })
+            .collect();
+        store.update_batch(&items);
+        reference.update_batch(&items);
+        let mut edge = cfg.fresh_sketch();
+        edge.update(5, 5, 9.0);
+        store.merge_sketch(&edge).unwrap(); // ingest: relayed
+        reference.merge_scaled(&edge, 1.0);
+
+        // replication-plane mass must NOT enter the accumulator
+        let mut remote = cfg.fresh_sketch();
+        remote.update(7, 7, 3.0);
+        store.merge_sketch_opts(&remote, false).unwrap();
+        // ... but it is in the store itself
+        assert_eq!(store.point_query(7, 7), 3.0);
+
+        let (v1, origin) = store.origin_snapshot();
+        assert!(v1 > 0);
+        assert_eq!(origin.updates, reference.updates);
+        for r in 0..cfg.d {
+            assert_eq!(origin.table(r), reference.table(r), "origin table {r} diverges");
+        }
+
+        // rotations expire the window but never the origin accumulator,
+        // and do not move the origin version (nothing new to ship)
+        store.advance_epoch();
+        store.advance_epoch();
+        assert_eq!(store.updates(), 0);
+        let (v2, after) = store.origin_snapshot();
+        assert_eq!(v2, v1);
+        assert_eq!(after.updates, reference.updates);
+        for r in 0..cfg.d {
+            assert_eq!(after.table(r), reference.table(r));
+        }
     }
 
     #[test]

@@ -3,12 +3,28 @@
 //! On-disk layout (one directory per store):
 //!
 //! ```text
-//! snapshot.bin  = "HOCSSNAP" | u32 version | u64 generation | ShardedStore encoding
+//! snapshot.bin  = "HOCSSNAP" | u32 version | u64 generation
+//!               | ShardedStore encoding | OriginTable encoding
 //! wal.bin       = "HOCSWAL0" | u32 version | u64 generation | frame*
 //! frame         = u32 payload_len | u32 crc32(payload) | payload
 //! payload       = u8 tag | fields           (see WalRecord)
 //! batch payload = u8 4 | u32 count | (u32 i | u32 j | f64 w)*   (group commit)
 //! ```
+//!
+//! **Replication state.** The durable store owns the receiver side of
+//! the replication plane: the per-origin dedup table
+//! ([`super::replica::origins::OriginTable`]) is part of the snapshot
+//! image, and *ingest* origin-merges are logged as their own record
+//! ([`WalRecord::OriginMerge`]) whose replay re-commits the dedup
+//! horizon — so a recovered node still recognizes a re-delivered frame.
+//! *Replication-plane* merges (ingest = 0) are deliberately **not**
+//! logged: the snapshot's origin records and the store image describe
+//! the same instant, so after a crash the peer's next full-state ship
+//! re-delivers exactly the since-snapshot remainder — anti-entropy is
+//! the redo log for remote mass, and logging it as well would
+//! double-count. [`DurableStore::apply_origin_merge`] runs the whole
+//! admit → log → apply → commit sequence under the shared commit gate,
+//! which keeps it atomic relative to snapshots.
 //!
 //! Everything is little-endian (see [`super::codec`]). Writes append a
 //! frame *before* mutating the in-memory store; recovery loads the
@@ -81,6 +97,7 @@
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
+use super::replica::origins::{Admit, OriginTable, MAX_ORIGINS};
 use super::sharded::{ShardedStore, StoreConfig, StoreStats};
 use crate::sketch::stream::StreamSketch;
 use anyhow::{bail, ensure, Context, Result};
@@ -93,9 +110,11 @@ use std::sync::{Condvar, Mutex, RwLock};
 const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
 const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
 /// Bumped to 2 when the embedded [`StreamSketch`] encoding grew its
-/// turnstile flags byte (group-commit PR); v1 files are rejected with a
-/// version error rather than misparsed.
-const FORMAT_VERSION: u32 = 2;
+/// turnstile flags byte (group-commit PR), and to 3 when snapshots
+/// grew the per-origin replication dedup table and the WAL its
+/// `OriginMerge` record (replication PR); older files are rejected
+/// with a version error rather than misparsed.
+const FORMAT_VERSION: u32 = 3;
 /// magic + version + generation
 const HEADER_LEN: usize = 20;
 /// Cap on a batch frame's item count, shared with the server's
@@ -115,12 +134,17 @@ pub enum WalRecord {
     MergeSketch(StreamSketch),
     /// Group commit: a whole client batch in one frame.
     UpdateBatch(Vec<(u32, u32, f64)>),
+    /// An applied *ingest* origin-merge: the already-computed remainder
+    /// plus the (origin, seq) whose dedup horizon replay must re-commit
+    /// — a recovered node keeps recognizing re-delivered frames.
+    OriginMerge { origin: u64, seq: u64, sketch: StreamSketch },
 }
 
 const TAG_UPDATE: u8 = 1;
 const TAG_ADVANCE: u8 = 2;
 const TAG_MERGE: u8 = 3;
 const TAG_UPDATE_BATCH: u8 = 4;
+const TAG_ORIGIN_MERGE: u8 = 5;
 
 impl WalRecord {
     fn encode(&self, out: &mut Vec<u8>) {
@@ -143,6 +167,12 @@ impl WalRecord {
                 for &(i, j, w) in items {
                     codec::put_update(out, i, j, w);
                 }
+            }
+            WalRecord::OriginMerge { origin, seq, sketch } => {
+                codec::put_u8(out, TAG_ORIGIN_MERGE);
+                codec::put_u64(out, *origin);
+                codec::put_u64(out, *seq);
+                sketch.encode(out);
             }
         }
     }
@@ -175,6 +205,12 @@ impl WalRecord {
                     items.push(rd.update_triple()?);
                 }
                 Ok(WalRecord::UpdateBatch(items))
+            }
+            TAG_ORIGIN_MERGE => {
+                let origin = rd.u64()?;
+                let seq = rd.u64()?;
+                let sketch = StreamSketch::decode(rd)?;
+                Ok(WalRecord::OriginMerge { origin, seq, sketch })
             }
             other => bail!("unknown WAL record tag {other}"),
         }
@@ -444,6 +480,10 @@ impl Default for DurableOptions {
 /// other — see the module docs.
 pub struct DurableStore {
     store: ShardedStore,
+    /// receiver side of the replication plane: per-origin dedup
+    /// horizons + cumulative records, persisted with every snapshot
+    /// and re-committed by `OriginMerge` replay (see the module docs)
+    origins: Mutex<OriginTable>,
     /// leader/follower commit queue; fail-stop lives inside it
     log: Option<GroupCommitLog>,
     /// shared by every append→apply pair, exclusive for snapshot and
@@ -465,6 +505,7 @@ impl DurableStore {
     pub fn in_memory(cfg: StoreConfig) -> Self {
         Self {
             store: ShardedStore::new(cfg),
+            origins: Mutex::new(OriginTable::new(MAX_ORIGINS)),
             log: None,
             commit: RwLock::new(()),
             dir: None,
@@ -506,7 +547,7 @@ impl DurableStore {
         let snap_path = dir.join(SNAPSHOT_FILE);
         let wal_path = dir.join(WAL_FILE);
 
-        let (store, snap_generation) = if snap_path.exists() {
+        let (store, mut origins, snap_generation) = if snap_path.exists() {
             let bytes = fs::read(&snap_path).with_context(|| format!("reading {snap_path:?}"))?;
             ensure!(bytes.len() >= HEADER_LEN, "snapshot shorter than its header");
             ensure!(&bytes[..8] == SNAP_MAGIC, "bad snapshot magic");
@@ -520,9 +561,13 @@ impl DurableStore {
                 "on-disk store config {:?} does not match requested {cfg:?}",
                 store.config()
             );
-            (store, generation)
+            // the origin dedup table is part of the same instant as the
+            // store image — decoding them together is what keeps
+            // full-ship remainders exact across restarts
+            let origins = OriginTable::decode_from(&mut rd, store.config())?;
+            (store, origins, generation)
         } else {
-            (ShardedStore::new(cfg), 0)
+            (ShardedStore::new(cfg), OriginTable::new(MAX_ORIGINS), 0)
         };
 
         if wal_path.exists() {
@@ -530,7 +575,7 @@ impl DurableStore {
             if wal_generation == snap_generation {
                 crate::log_debug!("store: replaying {} WAL record(s)", records.len());
                 for rec in &records {
-                    apply(&store, rec)?;
+                    apply(&store, &mut origins, rec)?;
                 }
             } else {
                 // crash between snapshot rename and WAL truncation: the
@@ -545,6 +590,7 @@ impl DurableStore {
         let next_generation = snap_generation + 1;
         let mut ds = Self {
             store,
+            origins: Mutex::new(origins),
             log: None,
             commit: RwLock::new(()),
             dir: Some(dir.to_path_buf()),
@@ -692,6 +738,69 @@ impl DurableStore {
         }
     }
 
+    /// Apply one origin-headered merge frame: admit it against the
+    /// per-origin dedup window, log it (ingest only), merge the
+    /// admitted remainder, and commit the horizon — all under the
+    /// shared commit gate, so a snapshot always captures the dedup
+    /// table and the store at the same instant. Returns `true` when
+    /// applied, `false` for a deduplicated retry (both are success).
+    ///
+    /// `ingest = true` counts as this node's own traffic: the applied
+    /// remainder is WAL-logged as [`WalRecord::OriginMerge`] (replay
+    /// re-commits the horizon) and re-originated to replication peers.
+    /// `ingest = false` is the replication plane: deliberately **not**
+    /// logged — after a restart the snapshot's origin record matches
+    /// the snapshot's store image exactly, so the peer's next
+    /// full-state ship re-delivers precisely the since-snapshot
+    /// remainder; anti-entropy is the redo log for remote mass, and
+    /// logging it too would double-count. Replica-plane merges also
+    /// keep working on a fail-stopped log (no append happens).
+    pub fn apply_origin_merge(
+        &self,
+        origin: u64,
+        seq: u64,
+        mode: u8,
+        ingest: bool,
+        sk: StreamSketch,
+    ) -> Result<bool> {
+        ensure!(self.store.config().matches(&sk), "sketch family does not match this store");
+        let _shared = self.commit.read().expect("commit gate");
+        let mut origins = self.origins.lock().expect("origin table lock");
+        let to_apply = match origins.admit(origin, seq, mode, sk)? {
+            Admit::Dedup => return Ok(false),
+            Admit::Apply(d) => d,
+        };
+        if ingest && self.log.is_some() {
+            // logged as the already-computed remainder, so replay needs
+            // no origin record from before the snapshot
+            self.append_record(&WalRecord::OriginMerge { origin, seq, sketch: to_apply.clone() })?;
+        }
+        self.store.merge_sketch_opts(&to_apply, ingest)?;
+        origins.commit(self.store.config(), origin, seq, &to_apply);
+        Ok(true)
+    }
+
+    /// Start capturing locally-originated mass for the replicator (see
+    /// [`ShardedStore::set_replication`]). Called after recovery, so
+    /// replication state is per process incarnation: WAL-replayed mass
+    /// was either already shipped by the previous incarnation or is not
+    /// replicated.
+    pub fn enable_replication(&self) {
+        self.store.set_replication(true);
+    }
+
+    /// The (origin-version, cumulative local-origin sketch) pair the
+    /// replicator diffs per-peer cursors against.
+    pub fn origin_snapshot(&self) -> (u64, StreamSketch) {
+        self.store.origin_snapshot()
+    }
+
+    /// Lock-free origin-version probe (see
+    /// [`ShardedStore::origin_version`]).
+    pub fn origin_version(&self) -> u64 {
+        self.store.origin_version()
+    }
+
     // -------- queries (never logged) --------
 
     pub fn point_query(&self, i: usize, j: usize) -> f64 {
@@ -799,6 +908,11 @@ impl DurableStore {
             codec::put_u32(&mut out, FORMAT_VERSION);
             codec::put_u64(&mut out, self.generation.load(Ordering::SeqCst));
             self.store.encode_into(&mut out);
+            // the origin dedup table rides in the same image: both are
+            // one instant here (open() is single-threaded; snapshot()
+            // holds the commit gate exclusively, and every origin merge
+            // runs under a shared guard)
+            self.origins.lock().expect("origin table lock").encode_into(&mut out);
             let tmp = dir.join("snapshot.tmp");
             {
                 let mut f = OpenOptions::new()
@@ -844,8 +958,10 @@ enum SnapInstall {
 }
 
 /// Replay one record onto the store, validating against the config so a
-/// corrupt-but-CRC-clean record cannot panic the recovery path.
-fn apply(store: &ShardedStore, rec: &WalRecord) -> Result<()> {
+/// corrupt-but-CRC-clean record cannot panic the recovery path. Origin
+/// merges also re-commit their dedup horizon into `origins`, so a
+/// recovered node keeps recognizing re-delivered frames.
+fn apply(store: &ShardedStore, origins: &mut OriginTable, rec: &WalRecord) -> Result<()> {
     let cfg = store.config();
     match rec {
         WalRecord::Update { i, j, w } => {
@@ -859,6 +975,14 @@ fn apply(store: &ShardedStore, rec: &WalRecord) -> Result<()> {
             Ok(())
         }
         WalRecord::MergeSketch(sk) => store.merge_sketch(sk),
+        WalRecord::OriginMerge { origin, seq, sketch } => {
+            // the logged sketch is the remainder that was applied live;
+            // replay re-applies it and re-commits the horizon (replay
+            // order is WAL order, so horizons advance monotonically)
+            store.merge_sketch(sketch)?;
+            origins.commit(cfg, *origin, *seq, sketch);
+            Ok(())
+        }
         WalRecord::UpdateBatch(items) => {
             let mut batch = Vec::with_capacity(items.len());
             for &(i, j, w) in items {
@@ -899,11 +1023,13 @@ mod tests {
     fn record_roundtrip() {
         let mut sk = StreamSketch::new(8, 8, 4, 4, 3, 1);
         sk.update(1, 2, 3.0);
+        let osk = sk.clone();
         for rec in [
             WalRecord::Update { i: 3, j: 9, w: -2.5 },
             WalRecord::AdvanceEpoch,
             WalRecord::MergeSketch(sk),
             WalRecord::UpdateBatch(vec![(1, 2, 3.5), (4, 5, -6.0), (0, 0, 0.25)]),
+            WalRecord::OriginMerge { origin: 0xBEEF, seq: 42, sketch: osk },
         ] {
             let mut out = Vec::new();
             rec.encode(&mut out);
@@ -927,6 +1053,14 @@ mod tests {
                         assert_eq!((ai, aj), (bi, bj));
                         assert_eq!(aw.to_bits(), bw.to_bits());
                     }
+                }
+                (
+                    WalRecord::OriginMerge { origin, seq, sketch },
+                    WalRecord::OriginMerge { origin: go, seq: gs, sketch: gsk },
+                ) => {
+                    assert_eq!((origin, seq), (go, gs));
+                    assert!(sketch.same_family(gsk));
+                    assert_eq!(sketch.table(0), gsk.table(0));
                 }
                 other => panic!("variant mismatch: {other:?}"),
             }
@@ -1301,6 +1435,75 @@ mod tests {
                 "key ({i}, {j})"
             );
         }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn origin_dedup_horizon_survives_crash_and_snapshot() {
+        use crate::store::replica::wire::{MODE_DELTA, MODE_FULL};
+        let dir = tmpdir("origin_replay");
+        let mut d1 = cfg().fresh_sketch();
+        d1.update(1, 1, 5.0);
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            // ingest origin-merge: logged as an OriginMerge record
+            assert!(live.apply_origin_merge(9, 1, MODE_DELTA, true, d1.clone()).unwrap());
+            assert!(!live.apply_origin_merge(9, 1, MODE_DELTA, true, d1.clone()).unwrap());
+            assert_eq!(live.point_query(1, 1), 5.0);
+            // crash without snapshot: the horizon must replay from the WAL
+        }
+        {
+            let re = DurableStore::open(&dir, cfg()).unwrap();
+            assert_eq!(re.point_query(1, 1), 5.0);
+            // the re-delivered frame is still recognized after recovery
+            assert!(!re.apply_origin_merge(9, 1, MODE_DELTA, true, d1.clone()).unwrap());
+            assert_eq!(re.point_query(1, 1), 5.0, "replayed horizon lost: double count");
+            // a full ship applies only the remainder: the cumulative
+            // record also survived
+            let mut full = cfg().fresh_sketch();
+            full.update(1, 1, 5.0);
+            full.update(2, 2, 3.0);
+            assert!(re.apply_origin_merge(9, 7, MODE_FULL, true, full).unwrap());
+            assert_eq!(re.point_query(1, 1), 5.0, "full ship double-counted");
+            assert_eq!(re.point_query(2, 2), 3.0);
+            re.snapshot().unwrap(); // horizon now persisted in the image
+        }
+        let re2 = DurableStore::open(&dir, cfg()).unwrap();
+        // recognized via the snapshot's origin table (the WAL was rotated)
+        let mut full2 = cfg().fresh_sketch();
+        full2.update(1, 1, 5.0);
+        full2.update(2, 2, 3.0);
+        assert!(!re2.apply_origin_merge(9, 7, MODE_FULL, true, full2).unwrap());
+        assert_eq!(re2.point_query(1, 1), 5.0);
+        assert_eq!(re2.point_query(2, 2), 3.0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replica_plane_mass_is_volatile_and_full_ships_resync_exactly() {
+        use crate::store::replica::wire::{MODE_DELTA, MODE_FULL};
+        let dir = tmpdir("replica_volatile");
+        let mut d1 = cfg().fresh_sketch();
+        d1.update(4, 4, 6.0);
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.update(1, 1, 2.0).unwrap(); // local mass: WAL-logged
+            // replication-plane merge (ingest = false): NOT logged
+            assert!(live.apply_origin_merge(5, 1, MODE_DELTA, false, d1.clone()).unwrap());
+            assert_eq!(live.point_query(4, 4), 6.0);
+            // crash: remote mass and its origin record die together
+        }
+        let re = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(re.point_query(1, 1), 2.0, "local mass must recover");
+        assert_eq!(re.point_query(4, 4), 0.0, "replica mass is anti-entropy's to restore");
+        // the peer's full-state ship re-delivers everything exactly once
+        // (this is the sender's gap → full fallback after our restart)
+        let mut full = cfg().fresh_sketch();
+        full.update(4, 4, 6.0);
+        full.update(6, 6, 1.0);
+        assert!(re.apply_origin_merge(5, 2, MODE_FULL, false, full).unwrap());
+        assert_eq!(re.point_query(4, 4), 6.0, "full ship lost or doubled remote mass");
+        assert_eq!(re.point_query(6, 6), 1.0);
         let _ = fs::remove_dir_all(&dir);
     }
 

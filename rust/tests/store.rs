@@ -19,6 +19,12 @@
 //!    `point_query`/`stats` past their `EPOCH_RETRY_LIMIT` optimistic
 //!    retries into the counted lock-all path, which must still answer
 //!    consistently.
+//! 6. **Multi-node convergence (ISSUE 5)** — three in-process replica
+//!    servers in a full mesh, writes (including deletion-carrying
+//!    updates, an edge-node MERGE, and an epoch rotation mid-stream)
+//!    split across nodes: after anti-entropy quiesces, every replica's
+//!    point queries are bit-identical to a single store fed the union
+//!    stream.
 //!
 //! Streams use integer weights: every bucket partial sum is then exact
 //! in f64, so accumulation *order* (per-shard vs interleaved) provably
@@ -28,7 +34,9 @@
 
 use hocs::rng::Pcg64;
 use hocs::sketch::stream::StreamSketch;
-use hocs::store::{DurableStore, ShardedStore, StoreConfig};
+use hocs::store::{
+    DurableStore, ShardedStore, StoreClient, StoreConfig, StoreServer, StoreServerConfig,
+};
 use hocs::util::prop::{forall, prop_assert, Gen};
 use std::path::PathBuf;
 
@@ -379,6 +387,153 @@ fn batched_durable_updates_bit_identical_and_recoverable() {
         Ok(())
     });
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Reserve a distinct loopback address per node by binding port 0 and
+/// immediately releasing it — replica peers must be named *before* the
+/// servers boot, and the replicator's reconnect backoff tolerates peers
+/// that are still coming up.
+fn reserve_addrs(n: usize) -> Option<Vec<String>> {
+    let mut listeners = Vec::new();
+    for _ in 0..n {
+        match std::net::TcpListener::bind("127.0.0.1:0") {
+            Ok(l) => listeners.push(l),
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return None;
+            }
+        }
+    }
+    Some(listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect())
+}
+
+#[test]
+fn replicated_nodes_converge_to_the_union_stream() {
+    use std::time::{Duration, Instant};
+
+    // Three replica servers in a full mesh. Writes — including
+    // turnstile deletions, an edge-node MERGE (relayed by its ingest
+    // node), and an epoch rotation mid-stream — are split across the
+    // nodes; the oracle is one ShardedStore fed the union stream.
+    // Convergence must be *bit-identical*: anti-entropy ships every
+    // locally-originated update to every peer exactly once (per-origin
+    // dedup + delta cursors), and integer weights make the counter sums
+    // exact under any arrival order. Window 4 with a single mid-stream
+    // rotation keeps all mass live, so slot assignment of late-arriving
+    // remote mass cannot skew expiry within the test horizon.
+    let cfg = store_cfg(2, 4, 0xAB5EED);
+    let Some(addrs) = reserve_addrs(3) else { return };
+    let mut servers = Vec::new();
+    for (n, addr) in addrs.iter().enumerate() {
+        let peers: Vec<String> =
+            addrs.iter().enumerate().filter(|&(m, _)| m != n).map(|(_, a)| a.clone()).collect();
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: addr.clone(),
+            store: cfg.clone(),
+            peers,
+            sync_interval_ms: 15,
+            // one node self-heals with periodic full-state ships, so the
+            // cumulative-replace path must also preserve exactness
+            full_ship_every: if n == 0 { 3 } else { 0 },
+            replica_timeout_ms: 2_000,
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot boot replica server ({e})");
+                return;
+            }
+        };
+        servers.push(server);
+    }
+    let mut clients: Vec<StoreClient> =
+        servers.iter().map(|s| StoreClient::connect(s.local_addr()).unwrap()).collect();
+    let oracle = ShardedStore::new(cfg.clone());
+
+    let mut rng = Pcg64::new(0xC0DE);
+    let drive = |clients: &mut Vec<StoreClient>, oracle: &ShardedStore, n: usize, rng: &mut Pcg64| {
+        for step in 0..n {
+            let (i, j) = random_key(rng, &cfg);
+            let w = int_weight(rng); // ~20% deletions
+            let node = step % clients.len();
+            if step % 7 == 0 {
+                clients[node].update_batch(&[(i as u32, j as u32, w)]).unwrap();
+            } else {
+                clients[node].update(i, j, w).unwrap();
+            }
+            oracle.update(i, j, w);
+        }
+    };
+    let quiesce = |clients: &mut Vec<StoreClient>, oracle: &ShardedStore| {
+        let want = oracle.updates();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            // a node's update counter reaches the union total exactly
+            // when every other node's mass has arrived exactly once —
+            // deltas carry their update counts, dedup forbids doubles
+            let counts: Vec<u64> = clients.iter_mut().map(|c| c.stats().unwrap().updates).collect();
+            if counts.iter().all(|&u| u == want) {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "anti-entropy did not quiesce: node counts {counts:?}, want {want}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    };
+
+    drive(&mut clients, &oracle, 240, &mut rng);
+    // an edge node ships a summary (legacy MERGE) to node 2; the
+    // ingest node must relay it to its peers like local traffic
+    let mut edge = reference_sketch(&cfg);
+    for _ in 0..30 {
+        let (i, j) = random_key(&mut rng, &cfg);
+        edge.update(i, j, int_weight(&mut rng));
+    }
+    clients[2].merge(&edge).unwrap();
+    oracle.merge_sketch(&edge).unwrap();
+    quiesce(&mut clients, &oracle);
+
+    // epoch rotation mid-stream, applied to every node and the oracle
+    // at the same quiesced point of the stream
+    for c in clients.iter_mut() {
+        c.advance_epoch().unwrap();
+    }
+    oracle.advance_epoch();
+    drive(&mut clients, &oracle, 180, &mut rng);
+    quiesce(&mut clients, &oracle);
+
+    // every replica answers bit-identically to the union-stream oracle,
+    // over the whole key universe
+    for (n, client) in clients.iter_mut().enumerate() {
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.updates, oracle.updates(), "node {n} update count diverges");
+        assert_eq!(stats.epoch, oracle.epoch(), "node {n} epoch diverges");
+        for i in 0..cfg.n1 {
+            for j in 0..cfg.n2 {
+                let got = client.query(i, j).unwrap();
+                let want = oracle.point_query(i, j);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "node {n} diverges at ({i}, {j}): {got} vs {want}"
+                );
+            }
+        }
+        // replication counters are live on every node
+        let (_, repl) = client.stats_full().unwrap();
+        let repl = repl.expect("replication stats");
+        assert_eq!(repl.peers, 2, "node {n} peer count");
+        assert!(repl.ships > 0, "node {n} never shipped");
+        assert!(repl.merges_applied > 0, "node {n} never applied a peer frame");
+    }
+    // node 0 ran with a full-ship cadence: its counters must show them
+    let (_, repl0) = clients[0].stats_full().unwrap();
+    assert!(repl0.unwrap().full_ships >= 1, "full-ship cadence never fired");
+    for s in servers {
+        s.shutdown();
+    }
 }
 
 #[test]
