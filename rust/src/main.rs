@@ -16,7 +16,7 @@ use hocs::runtime::Runtime;
 use hocs::store::{ClientOptions, StoreClient, StoreConfig, StoreServer, StoreServerConfig};
 use hocs::util::cli::Args;
 
-const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench> [options]\n\
+const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault-crash|bench> [options]\n\
 \n\
   info                              artifact summary\n\
   train --model NAME [--steps N] [--lr F] [--eval-every N] [--seed N]\n\
@@ -26,6 +26,10 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|bench
         [--data-dir DIR] [--fsync] [--no-group-commit] [--with-coordinator]\n\
         [--peer ADDR[,ADDR…]] [--sync-interval-ms N] [--full-ship-every N]\n\
         [--replica-timeout-ms N]   (peers make this node a replica-cluster member)\n\
+        [--read-timeout-ms N] [--max-connections N]   (overload guards; 0 = off)\n\
+  fault-crash --dir DIR [--ops N] [--start K] [--snapshot-at K] [--fsync]\n\
+        [--seed S] [--peer ADDR] [--op-delay-us N]\n\
+        (crash-harness child: scripted workload under HOCS_FAULTS failpoints)\n\
   store-client <update|update-batch|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
         [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
@@ -47,6 +51,7 @@ fn main() {
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("serve") => cmd_serve(&args),
         Some("store-client") => cmd_store_client(&args),
+        Some("fault-crash") => cmd_fault_crash(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -210,6 +215,8 @@ fn cmd_serve(args: &Args) -> i32 {
         sync_interval_ms: args.get_u64("sync-interval-ms", 100),
         full_ship_every: args.get_u64("full-ship-every", 0),
         replica_timeout_ms: args.get_u64("replica-timeout-ms", 2000),
+        read_timeout_ms: args.get_u64("read-timeout-ms", 30_000),
+        max_connections: args.get_u64("max-connections", 1024),
     };
     let n_peers = cfg.peers.len();
     match StoreServer::start(cfg) {
@@ -321,6 +328,109 @@ fn cmd_store_client(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Crash-harness child mode: run a deterministic scripted workload against a
+/// durable store, acknowledging each completed operation to `<dir>/acks.log`.
+///
+/// The parent test arms failpoints through the `HOCS_FAULTS` environment
+/// variable, so this process may die (abort) or fail-stop (injected error) at
+/// a chosen WAL/snapshot/replication site. On recovery the parent asserts
+/// that the surviving state is an exact prefix of the workload at least as
+/// long as the acknowledged prefix. `--start K` resumes the same workload at
+/// op `K` (run 2 of a crash/recover/continue sequence); `--peer ADDR` ships
+/// the stream to a receiver store and waits for the cursor to settle before
+/// exiting cleanly.
+fn cmd_fault_crash(args: &Args) -> i32 {
+    use hocs::store::faults;
+    use std::io::Write as _;
+    faults::arm_from_env();
+    let Some(dir) = args.get("dir") else {
+        eprintln!("fault-crash needs --dir DIR\n{USAGE}");
+        return 2;
+    };
+    let ops = args.get_usize("ops", 120);
+    let start = args.get_usize("start", 0);
+    let snapshot_at = args.get_usize("snapshot-at", 0);
+    let seed = args.get_u64("seed", 77);
+    let op_delay_us = args.get_u64("op-delay-us", 0);
+    let cfg = faults::crash_config();
+    let opts = hocs::store::DurableOptions { fsync: args.flag("fsync"), group_commit: true };
+    let store = match hocs::store::DurableStore::open_opts(std::path::Path::new(dir), cfg, opts) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("fault-crash: open failed: {e}");
+            return 1;
+        }
+    };
+    let cfg = store.config().clone();
+    let mut _replicator = None;
+    let mut counters = None;
+    if let Some(peer) = args.get("peer") {
+        store.enable_replication();
+        let c = std::sync::Arc::new(hocs::store::replica::ReplicationCounters::new(1));
+        let rcfg = hocs::store::ReplicaConfig {
+            peers: vec![peer.to_string()],
+            sync_interval_ms: 10,
+            ..Default::default()
+        };
+        match hocs::store::Replicator::start(store.clone(), rcfg, c.clone()) {
+            Ok(r) => {
+                _replicator = Some(r);
+                counters = Some(c);
+            }
+            Err(e) => {
+                eprintln!("fault-crash: replicator failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let ack_path = std::path::Path::new(dir).join("acks.log");
+    let mut ack = match std::fs::OpenOptions::new().create(true).append(true).open(&ack_path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("fault-crash: cannot open {}: {e}", ack_path.display());
+            return 1;
+        }
+    };
+    let workload = faults::crash_workload(&cfg, start + ops, seed);
+    for (k, op) in workload.iter().enumerate().skip(start).take(ops) {
+        if snapshot_at > 0 && k == snapshot_at {
+            if let Err(e) = store.snapshot() {
+                eprintln!("fault-crash: snapshot failed at op {k}: {e}");
+                return 3;
+            }
+        }
+        if let Err(e) = faults::apply_crash_op(&store, &cfg, op) {
+            eprintln!("fault-crash: op {k} failed: {e}");
+            return 3;
+        }
+        // an op is "acknowledged" only once its WAL frame is flushed — the
+        // line below is the durability contract the parent test checks
+        if writeln!(ack, "{k}").and_then(|()| ack.flush()).is_err() {
+            eprintln!("fault-crash: ack log write failed");
+            return 1;
+        }
+        if op_delay_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(op_delay_us));
+        }
+    }
+    if let Some(c) = counters {
+        // wait (bounded) for the replicator's durable cursor to catch the
+        // local origin version so a clean exit implies a converged peer
+        let target = store.origin_version();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while c.snapshot().cursor_version < target {
+            if std::time::Instant::now() >= deadline {
+                eprintln!("fault-crash: replication did not settle (target version {target})");
+                return 4;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+    let live = store.stats().updates;
+    println!("fault-crash: ops [{start}, {}) done — {live} updates live", start + ops);
+    0
 }
 
 /// Parse `"i,j,w;i,j,w;…"` into update triples for the batched RPC.

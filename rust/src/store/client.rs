@@ -15,6 +15,17 @@
 //! replicator (one dead peer would stall anti-entropy to every peer)
 //! and bad for the CLI; with them every RPC fails within a bound and
 //! the caller decides whether to back off and reconnect.
+//!
+//! **Retry policy.** Read-only RPCs (QUERY / TOPK / HEAVY / STATS) are
+//! idempotent, so a transport failure triggers one automatic
+//! reconnect-and-retry of the identical request — a server restart or
+//! an idle-timeout disconnect costs the caller nothing. Everything
+//! else (UPDATE / UPDATE_BATCH / MERGE / SNAPSHOT / ADVANCE_EPOCH /
+//! SHUTDOWN) never retries: after an ambiguous transport failure the
+//! request may have been applied, and a blind re-send would
+//! double-count (headerless writes carry no origin sequence for the
+//! server to dedup). Server-side `STATUS_ERR` rejections are never
+//! retried either — the connection is healthy and the answer is final.
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
@@ -23,7 +34,7 @@ use super::server::{op, read_frame_into, write_frame, STATUS_OK};
 use super::sharded::StoreStats;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{anyhow, bail, ensure, Context, Result};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 /// Prefix every server-side (STATUS_ERR) rejection carries, as opposed
@@ -55,6 +66,10 @@ impl ClientOptions {
 
 pub struct StoreClient {
     stream: TcpStream,
+    /// resolved server addresses — kept so idempotent RPCs can
+    /// reconnect-and-retry after a transient disconnect
+    addrs: Vec<SocketAddr>,
+    opts: ClientOptions,
     /// request scratch, reused across calls
     req: Vec<u8>,
     /// response scratch, reused across calls
@@ -71,35 +86,41 @@ impl StoreClient {
     /// should then be considered dead (a late response would desynchronize
     /// the request/response framing), so reconnect before retrying.
     pub fn connect_with<A: ToSocketAddrs>(addr: A, opts: ClientOptions) -> Result<Self> {
-        let stream = match opts.connect_timeout {
-            None => TcpStream::connect(&addr).context("connecting to store server")?,
-            Some(timeout) => {
-                let addrs: Vec<_> =
-                    addr.to_socket_addrs().context("resolving store server address")?.collect();
-                ensure!(!addrs.is_empty(), "store server address resolved to nothing");
-                let mut last_err = None;
-                let mut connected = None;
-                for a in &addrs {
-                    match TcpStream::connect_timeout(a, timeout) {
-                        Ok(s) => {
-                            connected = Some(s);
-                            break;
-                        }
-                        Err(e) => last_err = Some(e),
-                    }
+        let addrs: Vec<SocketAddr> =
+            addr.to_socket_addrs().context("resolving store server address")?.collect();
+        ensure!(!addrs.is_empty(), "store server address resolved to nothing");
+        let stream = Self::open_stream(&addrs, opts)?;
+        Ok(Self { stream, addrs, opts, req: Vec::new(), resp: Vec::new() })
+    }
+
+    /// Dial the first reachable resolved address and apply the I/O
+    /// options — shared by first connect and idempotent-retry reconnect.
+    fn open_stream(addrs: &[SocketAddr], opts: ClientOptions) -> Result<TcpStream> {
+        let mut last_err = None;
+        let mut connected = None;
+        for a in addrs {
+            let attempt = match opts.connect_timeout {
+                None => TcpStream::connect(a),
+                Some(timeout) => TcpStream::connect_timeout(a, timeout),
+            };
+            match attempt {
+                Ok(s) => {
+                    connected = Some(s);
+                    break;
                 }
-                connected.ok_or_else(|| {
-                    anyhow!(
-                        "connecting to store server within {timeout:?}: {}",
-                        last_err.expect("at least one address attempted")
-                    )
-                })?
+                Err(e) => last_err = Some(e),
             }
-        };
+        }
+        let stream = connected.ok_or_else(|| {
+            anyhow!(
+                "connecting to store server: {}",
+                last_err.expect("at least one address attempted")
+            )
+        })?;
         stream.set_read_timeout(opts.io_timeout).context("setting read timeout")?;
         stream.set_write_timeout(opts.io_timeout).context("setting write timeout")?;
         let _ = stream.set_nodelay(true);
-        Ok(Self { stream, req: Vec::new(), resp: Vec::new() })
+        Ok(stream)
     }
 
     /// Start a request in the reused buffer.
@@ -109,21 +130,48 @@ impl StoreClient {
         &mut self.req
     }
 
-    /// Send the staged request and read the response into the reused
-    /// buffer, surfacing server-side errors as `Err`. Returns the
-    /// response body (after the status byte), borrowed from the buffer.
-    fn call(&mut self) -> Result<&[u8]> {
+    /// Send the staged request and read the raw response frame into the
+    /// reused buffer. An `Err` here is a *transport* failure (or a clean
+    /// close) — the staged request is intact and can be re-sent on a
+    /// fresh connection if (and only if) it is idempotent.
+    fn exchange(&mut self) -> Result<()> {
         write_frame(&mut self.stream, &self.req)?;
         ensure!(
             read_frame_into(&mut self.stream, &mut self.resp)?,
             "server closed the connection"
         );
         ensure!(!self.resp.is_empty(), "empty response frame");
+        Ok(())
+    }
+
+    /// The received response body, surfacing server-side `STATUS_ERR`
+    /// rejections as `Err` (never retried: the connection is healthy
+    /// and the rejection is the answer).
+    fn body(&self) -> Result<&[u8]> {
         if self.resp[0] == STATUS_OK {
             Ok(&self.resp[1..])
         } else {
             bail!("{SERVER_ERR_PREFIX}{}", String::from_utf8_lossy(&self.resp[1..]))
         }
+    }
+
+    /// One shot: exactly one delivery attempt — the write path, where a
+    /// retried request could double-count.
+    fn call(&mut self) -> Result<&[u8]> {
+        self.exchange()?;
+        self.body()
+    }
+
+    /// [`StoreClient::call`] with one automatic reconnect-and-retry on
+    /// transport failure — only for idempotent (read-only) RPCs, where
+    /// re-delivering the identical request cannot change server state.
+    fn call_idempotent(&mut self) -> Result<&[u8]> {
+        if let Err(e) = self.exchange() {
+            self.stream = Self::open_stream(&self.addrs, self.opts)
+                .with_context(|| format!("reconnecting after transport error ({e})"))?;
+            self.exchange()?;
+        }
+        self.body()
     }
 
     /// Send one raw request payload and return the response body, with
@@ -162,27 +210,30 @@ impl StoreClient {
         self.call().map(|_| ())
     }
 
-    /// Windowed point estimate for key `(i, j)`.
+    /// Windowed point estimate for key `(i, j)`. Idempotent: retried
+    /// once on a fresh connection after a transient disconnect.
     pub fn query(&mut self, i: usize, j: usize) -> Result<f64> {
         let req = self.begin(op::QUERY);
         Self::put_key(req, i, j)?;
-        let body = self.call()?;
+        let body = self.call_idempotent()?;
         Reader::new(body).f64()
     }
 
-    /// The k heaviest keys in the live window.
+    /// The k heaviest keys in the live window. Idempotent: retried once
+    /// on a fresh connection after a transient disconnect.
     pub fn top_k(&mut self, k: usize) -> Result<Vec<(usize, usize, f64)>> {
         let req = self.begin(op::TOPK);
         codec::put_u32(req, u32::try_from(k).context("k exceeds u32")?);
-        let body = self.call()?;
+        let body = self.call_idempotent()?;
         parse_entries(body)
     }
 
-    /// All keys with windowed weight ≥ `threshold`.
+    /// All keys with windowed weight ≥ `threshold`. Idempotent: retried
+    /// once on a fresh connection after a transient disconnect.
     pub fn heavy_hitters(&mut self, threshold: f64) -> Result<Vec<(usize, usize, f64)>> {
         let req = self.begin(op::HEAVY);
         codec::put_f64(req, threshold);
-        let body = self.call()?;
+        let body = self.call_idempotent()?;
         parse_entries(body)
     }
 
@@ -238,10 +289,11 @@ impl StoreClient {
     /// [`StoreClient::stats`] plus the replication counters (peer
     /// count, last-sync age, cursor version, ship/byte/dedup totals).
     /// `None` for pre-replication servers whose STATS body ends after
-    /// the store fields.
+    /// the store fields. Idempotent: retried once on a fresh connection
+    /// after a transient disconnect.
     pub fn stats_full(&mut self) -> Result<(StoreStats, Option<ReplicationStats>)> {
         self.begin(op::STATS);
-        let body = self.call()?;
+        let body = self.call_idempotent()?;
         let mut rd = Reader::new(body);
         let store = StoreStats {
             shards: rd.u32()? as usize,
@@ -307,6 +359,8 @@ fn parse_entries(body: &[u8]) -> Result<Vec<(usize, usize, f64)>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::server::{StoreServer, StoreServerConfig};
+    use crate::store::sharded::StoreConfig;
     use std::net::TcpListener;
     use std::time::Instant;
 
@@ -316,6 +370,47 @@ mod tests {
         assert!(opts.connect_timeout.is_none() && opts.io_timeout.is_none());
         let opts = ClientOptions::timeout_ms(250);
         assert_eq!(opts.io_timeout, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn idempotent_reads_survive_a_disconnect_but_writes_do_not() {
+        // a server that reaps idle connections quickly gives us a
+        // deterministic transient disconnect to recover from
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            store: StoreConfig {
+                n1: 64,
+                n2: 64,
+                m1: 16,
+                m2: 16,
+                d: 5,
+                seed: 99,
+                shards: 2,
+                window: 4,
+            },
+            read_timeout_ms: 50,
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return;
+            }
+        };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        client.update(1, 1, 5.0).unwrap();
+        // idle past the server's read timeout: the connection is dead,
+        // and the idempotent read recovers through its one retry
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(client.query(1, 1).unwrap(), 5.0, "idempotent retry did not recover");
+        assert_eq!(client.stats().unwrap().updates, 1);
+        // writes never retry: the same disconnect surfaces as an error
+        std::thread::sleep(Duration::from_millis(250));
+        assert!(client.update(1, 1, 1.0).is_err(), "non-idempotent write was retried");
+        // ... and the client recovers again on its next idempotent call
+        assert_eq!(client.query(1, 1).unwrap(), 5.0);
+        assert_eq!(client.stats().unwrap().updates, 1, "failed write landed anyway");
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! Deterministic fault-injection plane for the durable and replication
+//! paths.
+//!
+//! Every crash-sensitive file or socket operation in [`super::wal`] and
+//! [`super::replica`] passes through a **named failpoint** ([`fire`] /
+//! [`write_all`]). In debug builds a process-global registry can arm a
+//! site with an action:
+//!
+//! - `Error` — the operation returns an injected `io::Error` (exercises
+//!   the error-handling path: fail-stop, rollback, backoff);
+//! - `Torn(n)` — write only the first `n` bytes, flush them, then
+//!   [`std::process::abort`] (a torn write followed by a crash — the
+//!   worst thing a kernel or disk can do short of corruption);
+//! - `Abort` — abort before the operation runs (a crash at the site);
+//! - `Delay(ms)` — sleep, then proceed (races and slow-I/O windows).
+//!
+//! Sites are armed programmatically ([`arm`]) or, for child-process
+//! crash tests, from the `HOCS_FAULTS` environment variable parsed by
+//! [`arm_from_env`]:
+//!
+//! ```text
+//! HOCS_FAULTS="site=action[:arg][@nth];site2=…"
+//!   actions: error | torn:BYTES | panic | abort | delay:MS
+//!   @nth:    1-based hit at which the site starts firing (default 1;
+//!            it keeps firing on every later hit)
+//! ```
+//!
+//! **Release builds compile the whole plane to a no-op**: the registry
+//! module only exists under `cfg(debug_assertions)`, and the release
+//! stubs below are `#[inline(always)]` identities, so the hot path
+//! carries no failpoint branches when disarmed-by-construction. `cargo
+//! test` runs in debug, so the same binaries the tests exercise have
+//! the plane armed-able.
+//!
+//! The module also hosts the **scripted crash workload** shared by the
+//! `hocs fault-crash` child-process mode and `rust/tests/faults.rs`:
+//! a deterministic op sequence ([`crash_workload`]) in which every op
+//! advances the store's update counter by a known amount, so a parent
+//! process can recover a crashed child's directory and infer exactly
+//! which op-prefix survived (see `CrashOp::updates`).
+
+use super::sharded::StoreConfig;
+use super::wal::DurableStore;
+use crate::rng::Pcg64;
+use std::io::{self, Write};
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The shimmed operation returns an injected [`io::Error`].
+    Error,
+    /// Write only the first `n` bytes of the buffer, flush, then abort
+    /// the process. At a non-write site ([`fire`]) this acts as
+    /// [`FaultAction::Abort`].
+    Torn(usize),
+    /// Abort the process before the operation runs.
+    Abort,
+    /// Sleep this many milliseconds, then run the operation normally.
+    Delay(u64),
+}
+
+#[cfg(debug_assertions)]
+mod armed {
+    use super::FaultAction;
+    use std::collections::HashMap;
+    use std::io::{self, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, Once, OnceLock};
+    use std::time::Duration;
+
+    struct Site {
+        action: FaultAction,
+        /// 1-based hit number at which the site starts firing.
+        nth: u64,
+        hits: u64,
+    }
+
+    /// Fast path: skip the registry lock entirely while nothing is
+    /// armed (the common case even in debug test runs).
+    static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+    fn registry() -> &'static Mutex<HashMap<String, Site>> {
+        static REG: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn injected(site: &str) -> io::Error {
+        io::Error::other(format!("injected fault at {site}"))
+    }
+
+    /// Count a hit at `site`; return the action to take if the site is
+    /// armed and its trigger threshold has been reached. The registry
+    /// lock is released before the action runs.
+    fn triggered(site: &str) -> Option<FaultAction> {
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return None;
+        }
+        let mut reg = registry().lock().unwrap();
+        let st = reg.get_mut(site)?;
+        st.hits += 1;
+        (st.hits >= st.nth).then_some(st.action)
+    }
+
+    /// Failpoint at a non-write operation (rename, sync, truncate,
+    /// socket call, …).
+    pub fn fire(site: &str) -> io::Result<()> {
+        match triggered(site) {
+            None => Ok(()),
+            Some(FaultAction::Error) => Err(injected(site)),
+            Some(FaultAction::Abort | FaultAction::Torn(_)) => std::process::abort(),
+            Some(FaultAction::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+        }
+    }
+
+    /// Failpoint shimming a buffer write: `Torn(n)` leaves exactly the
+    /// first `n` bytes behind (flushed, so they reach the file before
+    /// the process dies), every other action behaves as at [`fire`].
+    pub fn write_all<W: Write>(site: &str, w: &mut W, buf: &[u8]) -> io::Result<()> {
+        match triggered(site) {
+            None => w.write_all(buf),
+            Some(FaultAction::Error) => Err(injected(site)),
+            Some(FaultAction::Abort) => std::process::abort(),
+            Some(FaultAction::Torn(n)) => {
+                let n = n.min(buf.len());
+                let _ = w.write_all(&buf[..n]);
+                let _ = w.flush();
+                std::process::abort();
+            }
+            Some(FaultAction::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                w.write_all(buf)
+            }
+        }
+    }
+
+    /// Arm `site` with `action`, firing from the `nth` hit on (1-based;
+    /// 0 is treated as 1). Resets the site's hit counter.
+    pub fn arm(site: &str, action: FaultAction, nth: u64) {
+        let mut reg = registry().lock().unwrap();
+        reg.insert(site.to_string(), Site { action, nth: nth.max(1), hits: 0 });
+        ANY_ARMED.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disarm(site: &str) {
+        let mut reg = registry().lock().unwrap();
+        reg.remove(site);
+        if reg.is_empty() {
+            ANY_ARMED.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Disarm every site and zero all hit counters.
+    pub fn reset() {
+        let mut reg = registry().lock().unwrap();
+        reg.clear();
+        ANY_ARMED.store(false, Ordering::Relaxed);
+    }
+
+    /// Hits recorded at `site` since it was armed (0 if never armed).
+    pub fn hits(site: &str) -> u64 {
+        registry().lock().unwrap().get(site).map_or(0, |s| s.hits)
+    }
+
+    /// Arm every site named in the `HOCS_FAULTS` spec (see the module
+    /// docs for the grammar). Parses at most once per process; child
+    /// crash processes call this before opening the store. Panics on a
+    /// malformed spec — this is test-only plumbing and a typo should
+    /// fail loudly, not silently disarm the fault.
+    pub fn arm_from_env() {
+        static ONCE: Once = Once::new();
+        ONCE.call_once(|| {
+            let Ok(spec) = std::env::var("HOCS_FAULTS") else { return };
+            for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+                let (site, rest) = part
+                    .split_once('=')
+                    .unwrap_or_else(|| panic!("HOCS_FAULTS entry {part:?} is not site=action"));
+                let (action_spec, nth) = match rest.split_once('@') {
+                    Some((a, n)) => (
+                        a,
+                        n.parse::<u64>()
+                            .unwrap_or_else(|_| panic!("bad @nth in HOCS_FAULTS entry {part:?}")),
+                    ),
+                    None => (rest, 1),
+                };
+                let (name, arg) = match action_spec.split_once(':') {
+                    Some((n, a)) => (n, Some(a)),
+                    None => (action_spec, None),
+                };
+                let bad = |what: &str| -> ! {
+                    panic!("bad {what} in HOCS_FAULTS entry {part:?}")
+                };
+                let action = match (name, arg) {
+                    ("error", None) => FaultAction::Error,
+                    ("panic" | "abort", None) => FaultAction::Abort,
+                    ("torn", Some(n)) => {
+                        FaultAction::Torn(n.parse().unwrap_or_else(|_| bad("torn byte count")))
+                    }
+                    ("delay", Some(ms)) => {
+                        FaultAction::Delay(ms.parse().unwrap_or_else(|_| bad("delay millis")))
+                    }
+                    _ => bad("action"),
+                };
+                arm(site, action, nth);
+            }
+        });
+    }
+}
+
+#[cfg(debug_assertions)]
+pub use armed::{arm, arm_from_env, disarm, fire, hits, reset, write_all};
+
+#[cfg(not(debug_assertions))]
+mod disarmed {
+    use super::FaultAction;
+    use std::io::{self, Write};
+
+    #[inline(always)]
+    pub fn fire(_site: &str) -> io::Result<()> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn write_all<W: Write>(_site: &str, w: &mut W, buf: &[u8]) -> io::Result<()> {
+        w.write_all(buf)
+    }
+
+    #[inline(always)]
+    pub fn arm(_site: &str, _action: FaultAction, _nth: u64) {}
+
+    #[inline(always)]
+    pub fn disarm(_site: &str) {}
+
+    #[inline(always)]
+    pub fn reset() {}
+
+    #[inline(always)]
+    pub fn hits(_site: &str) -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    pub fn arm_from_env() {}
+}
+
+#[cfg(not(debug_assertions))]
+pub use disarmed::{arm, arm_from_env, disarm, fire, hits, reset, write_all};
+
+/// Origin id used by the scripted crash workload's ingest merges.
+pub const CRASH_ORIGIN: u64 = 0xC0FFEE;
+
+/// Store geometry for the crash-consistency harness: small enough that
+/// full-universe bit-identity sweeps are cheap, sharded and windowed
+/// enough to exercise the fan-out and rotation paths.
+pub fn crash_config() -> StoreConfig {
+    StoreConfig { n1: 40, n2: 32, m1: 10, m2: 8, d: 5, seed: 131, shards: 3, window: 4 }
+}
+
+/// One scripted operation of the crash workload. Every variant advances
+/// the store's `stats().updates` counter by [`CrashOp::updates`] ≥ 1,
+/// so the counter recovered from a crashed directory uniquely
+/// identifies the surviving op-prefix (cumulative update counts are
+/// strictly increasing in the prefix length).
+#[derive(Clone, Debug)]
+pub enum CrashOp {
+    Update { i: usize, j: usize, w: f64 },
+    Batch(Vec<(u32, u32, f64)>),
+    /// Edge-ingest origin merge (WAL-logged; replay re-commits the
+    /// dedup horizon). `seq` is the 1-based index among merge ops, so a
+    /// continuation run picks up the channel without a gap.
+    OriginMerge { seq: u64, i: usize, j: usize, w: f64 },
+}
+
+impl CrashOp {
+    /// How many sketch updates this op contributes to `stats().updates`.
+    pub fn updates(&self) -> u64 {
+        match self {
+            CrashOp::Update { .. } | CrashOp::OriginMerge { .. } => 1,
+            CrashOp::Batch(items) => items.len() as u64,
+        }
+    }
+}
+
+/// Deterministic crash workload: mostly single updates, with a 3-item
+/// batch every 10th op and an edge-ingest origin merge every 10th —
+/// the three durable write paths (per-record append, group frame,
+/// origin-merge record), integer weights so recovered f64 state is
+/// exactly comparable.
+pub fn crash_workload(cfg: &StoreConfig, total: usize, seed: u64) -> Vec<CrashOp> {
+    let mut rng = Pcg64::new(seed);
+    let mut merges = 0u64;
+    let mut ops = Vec::with_capacity(total);
+    for k in 0..total {
+        let i = rng.gen_range(cfg.n1 as u64) as usize;
+        let j = rng.gen_range(cfg.n2 as u64) as usize;
+        let w = (1 + rng.gen_range(9)) as f64;
+        if k % 10 == 9 {
+            merges += 1;
+            ops.push(CrashOp::OriginMerge { seq: merges, i, j, w });
+        } else if k % 10 == 4 {
+            let mut items = vec![(i as u32, j as u32, w)];
+            for _ in 0..2 {
+                items.push((
+                    rng.gen_range(cfg.n1 as u64) as u32,
+                    rng.gen_range(cfg.n2 as u64) as u32,
+                    (1 + rng.gen_range(9)) as f64,
+                ));
+            }
+            ops.push(CrashOp::Batch(items));
+        } else {
+            ops.push(CrashOp::Update { i, j, w });
+        }
+    }
+    ops
+}
+
+/// Execute one workload op against a store (shared by `hocs
+/// fault-crash` and the harness's in-memory shadow replays).
+pub fn apply_crash_op(store: &DurableStore, cfg: &StoreConfig, op: &CrashOp) -> anyhow::Result<()> {
+    match op {
+        CrashOp::Update { i, j, w } => store.update(*i, *j, *w),
+        CrashOp::Batch(items) => store.update_batch(items),
+        CrashOp::OriginMerge { seq, i, j, w } => {
+            let mut sk = cfg.fresh_sketch();
+            sk.update(*i, *j, *w);
+            store
+                .apply_origin_merge(CRASH_ORIGIN, *seq, super::replica::wire::MODE_DELTA, true, sk)
+                .map(|_| ())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// The registry is process-global; tests that arm it must not
+    /// overlap (cargo's test threads share the process).
+    fn serial() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap()
+    }
+
+    #[test]
+    fn disarmed_sites_pass_through() {
+        let _guard = serial();
+        reset();
+        assert!(fire("nope").is_ok());
+        let mut out = Vec::new();
+        write_all("nope", &mut out, b"abc").unwrap();
+        assert_eq!(out, b"abc");
+        assert_eq!(hits("nope"), 0);
+    }
+
+    #[test]
+    fn error_fires_from_nth_hit_on() {
+        let _guard = serial();
+        reset();
+        arm("x", FaultAction::Error, 3);
+        assert!(fire("x").is_ok());
+        assert!(fire("x").is_ok());
+        let err = fire("x").unwrap_err();
+        assert!(err.to_string().contains("injected fault at x"), "{err}");
+        // keeps firing on every later hit
+        assert!(fire("x").is_err());
+        assert_eq!(hits("x"), 4);
+        disarm("x");
+        assert!(fire("x").is_ok());
+    }
+
+    #[test]
+    fn torn_write_at_a_plain_error_site_is_an_error_for_write_all() {
+        let _guard = serial();
+        reset();
+        // Error at a write site: nothing written
+        arm("w", FaultAction::Error, 1);
+        let mut out = Vec::new();
+        assert!(write_all("w", &mut out, b"abcdef").is_err());
+        assert!(out.is_empty());
+        reset();
+        // Delay at a write site: full write proceeds
+        arm("w", FaultAction::Delay(1), 1);
+        let mut out2 = Vec::new();
+        write_all("w", &mut out2, b"abcdef").unwrap();
+        assert_eq!(out2, b"abcdef");
+        reset();
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_update_counts_are_exact() {
+        let cfg = crash_config();
+        let a = crash_workload(&cfg, 50, 7);
+        let b = crash_workload(&cfg, 50, 7);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(format!("{x:?}"), format!("{y:?}"));
+        }
+        // op mix: batches at k%10==4, merges at k%10==9 with contiguous seqs
+        let mut merges = 0;
+        for (k, op) in a.iter().enumerate() {
+            match op {
+                CrashOp::Batch(items) => {
+                    assert_eq!(k % 10, 4);
+                    assert_eq!(items.len(), 3);
+                    assert_eq!(op.updates(), 3);
+                }
+                CrashOp::OriginMerge { seq, .. } => {
+                    assert_eq!(k % 10, 9);
+                    merges += 1;
+                    assert_eq!(*seq, merges);
+                }
+                CrashOp::Update { .. } => assert_eq!(op.updates(), 1),
+            }
+        }
+        // replaying against an in-memory store advances updates by
+        // exactly the per-op counts (the m-inference invariant)
+        let store = DurableStore::in_memory(cfg.clone());
+        let mut expect = 0u64;
+        for op in &a {
+            apply_crash_op(&store, &cfg, op).unwrap();
+            expect += op.updates();
+            assert_eq!(store.stats().updates, expect);
+        }
+    }
+}

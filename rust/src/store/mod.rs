@@ -50,10 +50,13 @@
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
 //! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
 //! [`replica`] (anti-entropy replication: delta cursors, origin dedup,
-//! the replicator thread), [`codec`] (bytes + CRC-32).
+//! the replicator thread), [`codec`] (bytes + CRC-32), [`faults`] (the
+//! deterministic fault-injection plane + scripted crash workload;
+//! compiles to no-ops in release builds).
 
 pub mod client;
 pub mod codec;
+pub mod faults;
 pub mod mergeable;
 pub mod replica;
 pub mod server;

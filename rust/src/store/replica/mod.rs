@@ -46,29 +46,46 @@
 //! exponential reconnect backoff — a hung peer can neither stall the
 //! replicator nor starve the other peers.
 //!
-//! **Durability split.** The *receiver* side is durable: the per-origin
-//! dedup table is part of every snapshot, ingest origin-merges are
-//! WAL-logged ([`super::wal`]), and replication-plane merges are
-//! deliberately not — the snapshot's origin records and store image
-//! describe the same instant, so after a receiver restart the sender's
-//! gap-triggered full ship re-delivers exactly the since-snapshot
-//! remainder. The *sender* side is per process incarnation: origin
-//! accumulators are volatile and the origin id is fresh on restart.
-//! **Known limitation:** acknowledged local writes that were
-//! WAL-recovered but had not shipped before the crash are served
-//! locally yet never re-shipped (shipping all recovered mass under the
-//! new origin id would instead double-count at peers that already hold
-//! part of it) — until sender cursors are made durable (ROADMAP),
-//! a crash in the ship window leaves replicas missing that mass, and a
-//! replica-side operator re-sync (e.g. replaying the writer's WAL tail
-//! through edge ingest) is the recovery. Window expiry is local —
-//! peers expire by their own rotations, so a replica's slot assignment
-//! for remote mass lags by the staleness the bench measures.
+//! # Failure model
+//!
+//! Both sides of a channel are durable. The *receiver* persists the
+//! per-origin dedup table in every snapshot and WAL-logs ingest
+//! origin-merges ([`super::wal`]); replication-plane merges are
+//! deliberately not logged — the snapshot's origin records and store
+//! image describe the same instant, so after a receiver restart the
+//! sender's gap-triggered full ship re-delivers exactly the
+//! since-snapshot remainder. The *sender* persists its origin id (a
+//! WAL record, minted once per store lifetime), its cumulative origin
+//! accumulator (in every snapshot, rebuilt by WAL replay — recovery
+//! re-enables replication *before* replay on a node that ever
+//! replicated), and a per-peer cursor `(acked seq, acked origin
+//! version)` logged only **after** the peer acknowledged the frame.
+//!
+//! The ack/advance ordering is the safety argument. If logging a
+//! cursor advance fails, the channel does **not** move forward: the
+//! staged frame is kept and re-sent identically (the receiver dedups
+//! it into an acknowledged no-op), so the durable cursor trails the
+//! receiver's dedup horizon by at most one frame. A restarted sender
+//! therefore resumes at `acked seq + 2` — strictly above any horizon
+//! the receiver can hold — with `synced_once = false`, so its first
+//! frame is a dense full-state ship under the *recovered* origin id:
+//! the receiver applies `full − its cumulative per-origin record`,
+//! which is exactly the WAL-recovered-but-unshipped remainder. No
+//! double-count (the record subtracts what already landed), no loss
+//! (the accumulator is rebuilt from snapshot + WAL). A sender whose
+//! WAL has fail-stopped ([`DurableStore::wal_healthy`]) stops spending
+//! idle heartbeats — it could not durably record the advances they
+//! produce — but still delivers already-staged mass; the receiver
+//! converges even when the sender can no longer record that it did.
+//! Window expiry is local — peers expire by their own rotations, so a
+//! replica's slot assignment for remote mass lags by the staleness the
+//! bench measures.
 
 pub mod origins;
 pub mod wire;
 
 use super::client::{ClientOptions, StoreClient, SERVER_ERR_PREFIX};
+use super::faults;
 use super::sharded::StoreConfig;
 use super::wal::DurableStore;
 use crate::rng::SplitMix64;
@@ -323,10 +340,12 @@ impl Drop for Replicator {
     }
 }
 
-/// Fresh origin id per process incarnation: a restarted node opens new
-/// channels instead of colliding with its old sequence space (whose
-/// horizon the peers still remember).
-fn derive_origin_id() -> u64 {
+/// Mint a fresh origin id. Normally called once per store *lifetime*
+/// (via [`DurableStore::replica_id`], which persists it): keeping the
+/// id across restarts is what lets a recovered sender resume its old
+/// channels and ship exactly the unshipped remainder instead of
+/// double-counting under a new identity.
+pub(crate) fn derive_origin_id() -> u64 {
     let nanos = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_nanos() as u64)
@@ -340,9 +359,37 @@ fn run(
     counters: Arc<ReplicationCounters>,
     stop: Arc<Stop>,
 ) {
-    let origin_id = derive_origin_id();
+    let origin_id = match store.replica_id() {
+        Ok(id) => id,
+        Err(e) => {
+            // fail-stopped WAL before the id was ever minted: replicate
+            // under a volatile id rather than not at all (peers dedup
+            // per id, so a later durable incarnation still converges)
+            crate::log_warn!("replicator: cannot persist origin id ({e}); using a volatile one");
+            derive_origin_id()
+        }
+    };
     let family = store.config().clone();
-    let mut peers: Vec<Peer> = cfg.peers.iter().map(|a| Peer::new(a.clone(), &family)).collect();
+    let mut peers: Vec<Peer> = cfg
+        .peers
+        .iter()
+        .map(|a| {
+            let mut p = Peer::new(a.clone(), &family);
+            if let Some((seq, version)) = store.replica_cursor(&p.addr) {
+                // resume strictly above any dedup horizon the receiver
+                // can hold (the durable cursor trails it by ≤ 1 frame);
+                // synced_once stays false, so the first frame is a full
+                // ship of the recovered accumulator and the receiver
+                // applies exactly the unshipped remainder
+                p.next_seq = seq + 2;
+                crate::log_info!(
+                    "replicator: resuming {} from durable cursor (seq {seq}, version {version})",
+                    p.addr
+                );
+            }
+            p
+        })
+        .collect();
     let interval = Duration::from_millis(cfg.sync_interval_ms.max(1));
     crate::log_info!(
         "replicator: origin {origin_id:#x}, {} peer(s), sync every {}ms",
@@ -369,6 +416,10 @@ fn run(
         // local writes.
         let stamp = store.origin_version();
         let now = Instant::now();
+        // a fail-stopped WAL cannot durably record cursor advances, so
+        // idle heartbeats (whose only product is an advance) stop;
+        // already-staged mass still delivers — see the module docs
+        let healthy = store.wal_healthy();
         let mut need = false;
         for p in peers.iter_mut() {
             if now < p.backoff_until {
@@ -376,7 +427,7 @@ fn run(
             }
             if p.pending.is_some() || p.acked_version != stamp || !p.synced_once {
                 need = true;
-            } else {
+            } else if healthy {
                 p.idle_ticks += 1;
                 if p.idle_ticks >= HEARTBEAT_TICKS {
                     need = true;
@@ -384,9 +435,16 @@ fn run(
             }
         }
         if need {
+            let ctx = SyncCtx {
+                store: &store,
+                cfg: &cfg,
+                counters: &counters,
+                origin_id,
+                allow_heartbeat: healthy,
+            };
             let (version, snap) = store.origin_snapshot();
             for peer in peers.iter_mut() {
-                sync_peer(peer, &snap, version, &cfg, origin_id, &counters);
+                sync_peer(peer, &snap, version, &ctx);
             }
         }
         let cursor = peers.iter().map(|p| p.acked_version).min().unwrap_or(0);
@@ -403,23 +461,27 @@ fn run(
     crate::log_info!("replicator: stopping");
 }
 
+/// Per-tick context shared by every peer's [`sync_peer`] call.
+struct SyncCtx<'a> {
+    store: &'a DurableStore,
+    cfg: &'a ReplicaConfig,
+    counters: &'a ReplicationCounters,
+    origin_id: u64,
+    /// heartbeats allowed this tick (off while the WAL is fail-stopped
+    /// — their only product is a cursor advance it could not record)
+    allow_heartbeat: bool,
+}
+
 /// One peer's share of a sync tick: stage a frame if there is unshipped
 /// mass, then try to deliver whatever is staged (possibly a retry from
 /// an earlier tick). At most two delivery attempts per tick (the second
 /// only for the gap → full-ship fallback).
-fn sync_peer(
-    p: &mut Peer,
-    snap: &StreamSketch,
-    version: u64,
-    cfg: &ReplicaConfig,
-    origin_id: u64,
-    counters: &ReplicationCounters,
-) {
+fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>) {
     if Instant::now() < p.backoff_until {
         return;
     }
     if p.client.is_none() {
-        match StoreClient::connect_with(&p.addr, cfg.client_options()) {
+        match StoreClient::connect_with(&p.addr, ctx.cfg.client_options()) {
             Ok(c) => {
                 p.client = Some(c);
                 p.backoff_ms = 0;
@@ -438,24 +500,45 @@ fn sync_peer(
         // with a tiny empty-delta heartbeat (a receiver that restarted
         // and lost un-snapshotted replica mass answers it with a
         // sequence gap, which triggers the healing full ship)
-        let heartbeat = p.synced_once && p.idle_ticks >= HEARTBEAT_TICKS;
+        let heartbeat = p.synced_once && p.idle_ticks >= HEARTBEAT_TICKS && ctx.allow_heartbeat;
         if version == p.acked_version && p.synced_once && !heartbeat {
             return; // unchanged cursor — zero bytes on idle channels
         }
         p.idle_ticks = 0;
         let force_full = !p.synced_once
-            || (cfg.full_ship_every > 0 && p.syncs_since_full + 1 >= cfg.full_ship_every);
-        p.pending = Some(stage(p.next_seq, origin_id, snap, &p.acked, version, force_full));
+            || (ctx.cfg.full_ship_every > 0 && p.syncs_since_full + 1 >= ctx.cfg.full_ship_every);
+        p.pending = Some(stage(p.next_seq, ctx.origin_id, snap, &p.acked, version, force_full));
     }
     for attempt in 0..2 {
         let Some(pending) = p.pending.as_ref() else { return };
         let client = p.client.as_mut().expect("client connected above");
-        match client.raw_call(&pending.frame) {
+        let sent = faults::fire("repl.send")
+            .map_err(anyhow::Error::from)
+            .and_then(|()| client.raw_call(&pending.frame));
+        match sent {
             Ok(_) => {
                 // applied or deduped — both mean the peer now holds
-                // everything up to this frame's snapshot
+                // everything up to this frame's snapshot. Record the
+                // advance durably BEFORE moving the channel forward: if
+                // the cursor log fails, the frame stays staged and the
+                // next tick re-sends identical bytes (the receiver
+                // dedups them into an acknowledged no-op), so the
+                // durable cursor never trails the receiver's horizon by
+                // more than one frame — the restart-resume invariant.
                 let done = p.pending.take().expect("pending present");
-                counters.note_ship(done.frame.len() as u64, done.full);
+                if let Err(e) = ctx.store.advance_replica_cursor(&p.addr, p.next_seq, done.version)
+                {
+                    crate::log_warn!(
+                        "replicator: {} acked seq {} but the cursor advance did not \
+                         persist ({e}); keeping the frame staged for a dedup-safe retry",
+                        p.addr,
+                        p.next_seq
+                    );
+                    p.pending = Some(done);
+                    p.bump_backoff();
+                    return;
+                }
+                ctx.counters.note_ship(done.frame.len() as u64, done.full);
                 p.acked = done.snap;
                 p.acked_version = done.version;
                 p.next_seq += 1;
@@ -476,7 +559,8 @@ fn sync_peer(
                          full-state ship",
                         p.addr
                     );
-                    p.pending = Some(stage(p.next_seq, origin_id, snap, &p.acked, version, true));
+                    p.pending =
+                        Some(stage(p.next_seq, ctx.origin_id, snap, &p.acked, version, true));
                     continue;
                 }
                 if msg.contains(SERVER_ERR_PREFIX) {

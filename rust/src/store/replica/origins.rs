@@ -29,6 +29,13 @@
 //! [`OriginTable::commit`] records it only after the store merge
 //! succeeded, so a failed merge (e.g. a fail-stopped WAL on the ingest
 //! path) leaves the channel ready for an exact retry.
+//!
+//! **Crash durability.** The horizons and cumulative records ride in
+//! every snapshot, and ingest merges replay from their own WAL record,
+//! so a recovered receiver keeps deduping at or below its horizon and
+//! full-ship remainders stay exact across restarts. The crash harness
+//! (`rust/tests/faults.rs`) kills stores at armed WAL/snapshot
+//! failpoints and asserts the horizon is monotone across recovery.
 
 use super::super::codec::{self, Reader};
 use super::super::mergeable::MergeableSketch;

@@ -168,6 +168,17 @@ pub struct StoreServerConfig {
     pub full_ship_every: u64,
     /// connect + I/O timeout for the replicator's peer connections
     pub replica_timeout_ms: u64,
+    /// per-connection read timeout in ms (`0` = none). A client that
+    /// stops mid-frame or goes half-open is disconnected after this
+    /// long instead of pinning its thread forever (slowloris
+    /// protection). The CLI default is 30 s; the struct default is off
+    /// so embedded/test servers keep their patient behaviour.
+    pub read_timeout_ms: u64,
+    /// accepted-connection bound (`0` = unlimited). Over-limit
+    /// connections are rejected gracefully: one framed
+    /// "connection limit" error, then close — a fast client-visible
+    /// failure instead of an unbounded thread pile-up.
+    pub max_connections: u64,
 }
 
 impl Default for StoreServerConfig {
@@ -184,6 +195,8 @@ impl Default for StoreServerConfig {
             sync_interval_ms: 100,
             full_ship_every: 0,
             replica_timeout_ms: 2_000,
+            read_timeout_ms: 0,
+            max_connections: 1024,
         }
     }
 }
@@ -197,6 +210,13 @@ struct Shared {
     repl: Arc<ReplicationCounters>,
     stop: AtomicBool,
     connections: AtomicU64,
+    /// currently-open connections (accept-loop admission gate)
+    active: AtomicU64,
+    /// connections inside handle-request-and-respond right now — what
+    /// the shutdown drain waits on
+    busy: AtomicU64,
+    read_timeout: Option<std::time::Duration>,
+    max_connections: u64,
 }
 
 /// Handle to a running server. Dropping it (or calling
@@ -274,6 +294,11 @@ impl StoreServer {
             repl,
             stop: AtomicBool::new(false),
             connections: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            read_timeout: (cfg.read_timeout_ms > 0)
+                .then(|| std::time::Duration::from_millis(cfg.read_timeout_ms)),
+            max_connections: cfg.max_connections,
         });
         let ashared = shared.clone();
         let accept = std::thread::Builder::new()
@@ -316,6 +341,17 @@ impl Drop for StoreServer {
             let _ = TcpStream::connect(self.addr);
             let _ = h.join();
         }
+        // drain: requests already being handled get a bounded window to
+        // finish and flush their response before the process moves on
+        // (connection threads then observe the stop flag and close)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while self.shared.busy.load(Ordering::SeqCst) > 0 {
+            if std::time::Instant::now() >= deadline {
+                crate::log_warn!("store: shutdown drain timed out with requests in flight");
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
     }
 }
 
@@ -325,13 +361,29 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             break;
         }
         match conn {
-            Ok(stream) => {
+            Ok(mut stream) => {
+                // admission gate: past the bound, reject gracefully —
+                // one framed error the client can read and report,
+                // instead of an unbounded thread pile-up or a silent
+                // RST. `active` was incremented by still-open
+                // connections and is released as each loop exits.
+                if shared.max_connections > 0
+                    && shared.active.load(Ordering::SeqCst) >= shared.max_connections
+                {
+                    let mut err = vec![STATUS_ERR];
+                    err.extend_from_slice(b"connection limit reached");
+                    let _ = write_frame(&mut stream, &err);
+                    crate::log_debug!("store: connection rejected (limit reached)");
+                    continue;
+                }
+                shared.active.fetch_add(1, Ordering::SeqCst);
                 let cshared = shared.clone();
                 let id = cshared.connections.fetch_add(1, Ordering::Relaxed);
                 let spawned = std::thread::Builder::new()
                     .name(format!("hocs-store-conn-{id}"))
                     .spawn(move || connection_loop(stream, cshared));
                 if spawned.is_err() {
+                    shared.active.fetch_sub(1, Ordering::SeqCst);
                     crate::log_warn!("store: could not spawn connection thread");
                 }
             }
@@ -343,6 +395,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_nodelay(true);
+    // half-open / slowloris protection: a peer that stops mid-frame (or
+    // vanishes without a FIN) costs at most the read timeout, not a
+    // thread forever
+    if let Some(t) = shared.read_timeout {
+        let _ = stream.set_read_timeout(Some(t));
+    }
     // one request and one response buffer per connection, reused across
     // requests — the settled request loop allocates nothing
     let mut req = Vec::new();
@@ -356,8 +414,14 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
                 break;
             }
         }
+        // `busy` spans handle + respond: the shutdown drain in
+        // [`StoreServer::drop`] waits for in-flight requests to finish
+        // and flush, so an acknowledged write is never cut off mid-frame
+        shared.busy.fetch_add(1, Ordering::SeqCst);
         let shutdown = handle_request(&req, &shared, &mut resp);
-        if write_frame(&mut stream, &resp).is_err() {
+        let responded = write_frame(&mut stream, &resp).is_ok();
+        shared.busy.fetch_sub(1, Ordering::SeqCst);
+        if !responded {
             break;
         }
         if shutdown {
@@ -368,7 +432,14 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
             }
             break;
         }
+        if shared.stop.load(Ordering::SeqCst) {
+            // drain semantics: the request in flight when SHUTDOWN
+            // arrived was answered above; the connection then closes
+            // instead of serving a stopped store forever
+            break;
+        }
     }
+    shared.active.fetch_sub(1, Ordering::SeqCst);
 }
 
 /// Run [`dispatch`] straight into the reused response buffer as a
@@ -721,6 +792,98 @@ mod tests {
             Err(_) => true,
         };
         assert!(failed, "server still answering after shutdown");
+    }
+
+    #[test]
+    fn over_limit_connections_are_rejected_gracefully() {
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            store: test_cfg(),
+            max_connections: 1,
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return;
+            }
+        };
+        let mut first = StoreClient::connect(server.local_addr()).unwrap();
+        first.update(1, 1, 1.0).unwrap(); // admission observed: RPC served
+        // the second connection is over the bound: it must fail fast
+        // with a readable reason, not hang or get a silent RST
+        let mut second = StoreClient::connect(server.local_addr()).unwrap();
+        let err = second.query(1, 1).unwrap_err().to_string();
+        assert!(err.contains("connection limit"), "unexpected rejection: {err}");
+        // releasing the first slot re-admits new connections
+        drop(first);
+        drop(second);
+        let mut served = false;
+        for _ in 0..200 {
+            if let Ok(mut c) = StoreClient::connect(server.local_addr()) {
+                if let Ok(v) = c.query(1, 1) {
+                    assert_eq!(v, 1.0);
+                    served = true;
+                    break;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(served, "slot never released after disconnect");
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_connections_time_out_but_fast_clients_are_served() {
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            store: test_cfg(),
+            read_timeout_ms: 50,
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return;
+            }
+        };
+        let mut slow = StoreClient::connect(server.local_addr()).unwrap();
+        slow.update(2, 2, 2.0).unwrap();
+        // a half-open/slowloris peer: sends nothing past the timeout and
+        // finds its connection closed. UPDATE (never retried — not
+        // idempotent) observes the dead channel directly, where an
+        // idempotent call would mask it behind the client's
+        // reconnect-and-retry.
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        assert!(
+            slow.update(2, 2, 1.0).is_err(),
+            "idle connection survived the read timeout"
+        );
+        // prompt clients on fresh connections are unaffected
+        let mut fast = StoreClient::connect(server.local_addr()).unwrap();
+        assert_eq!(fast.query(2, 2).unwrap(), 2.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_in_flight_then_drains_connections() {
+        let Some(server) = start_server(None) else { return };
+        let mut ctl = StoreClient::connect(server.local_addr()).unwrap();
+        let mut other = StoreClient::connect(server.local_addr()).unwrap();
+        other.update(4, 4, 4.0).unwrap();
+        ctl.shutdown_server().unwrap();
+        // `other` was idle when SHUTDOWN landed; its next request may
+        // still be answered (drain finishes work in flight) but the
+        // connection must then close instead of serving forever
+        let mut closed = false;
+        for _ in 0..50 {
+            if other.query(4, 4).is_err() {
+                closed = true;
+                break;
+            }
+        }
+        assert!(closed, "connection kept being served after shutdown");
+        server.wait();
     }
 
     #[test]

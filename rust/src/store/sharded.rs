@@ -663,9 +663,11 @@ impl ShardedStore {
 
     /// Turn the per-shard origin accumulators on (or off). The server
     /// flips this on **before** serving when peers are configured, so
-    /// every locally-originated write is captured; mass written while
-    /// the flag is off (e.g. WAL replay during recovery) is not
-    /// replicated — anti-entropy state is per process incarnation.
+    /// every locally-originated write is captured. The flag (and the
+    /// accumulator it guards) is durable: snapshots carry both, and
+    /// [`super::DurableStore`] recovery re-enables it *before* WAL
+    /// replay on a node that ever replicated — so recovered-but-
+    /// unshipped mass re-enters the accumulator and is re-shipped.
     pub fn set_replication(&self, on: bool) {
         self.replicate.store(on, Ordering::SeqCst);
     }
@@ -779,6 +781,22 @@ impl ShardedStore {
             }
             sh.total.encode(out);
         }
+        // replication section (snapshot format v4): the cumulative
+        // local-origin accumulator and its version stamp, captured under
+        // the same all-locks instant as the shard images above — so a
+        // recovered sender diffs peers against exactly the mass the
+        // snapshot holds, and WAL replay rebuilds only the tail. A node
+        // that never replicated writes one zero byte.
+        let replicate = self.replicate.load(Ordering::SeqCst);
+        codec::put_u8(out, u8::from(replicate));
+        if replicate {
+            codec::put_u64(out, self.origin_version.load(Ordering::SeqCst));
+            let mut origin = self.cfg.fresh_sketch();
+            for sh in &guards {
+                origin.merge_scaled(&sh.origin, 1.0);
+            }
+            origin.encode(out);
+        }
     }
 
     /// Bit-exact inverse of [`ShardedStore::encode_into`].
@@ -799,9 +817,7 @@ impl ShardedStore {
             ensure!(cfg.matches(&total), "corrupt snapshot: total sketch family mismatch");
             // pendings are redundant state (already inside the totals),
             // so snapshots do not carry them: a decoded store starts
-            // with clean deltas and a never-built scan cache. Origin
-            // accumulators are volatile too (replication state is per
-            // process incarnation; see `set_replication`).
+            // with clean deltas and a never-built scan cache.
             shards.push(Mutex::new(Shard {
                 ring,
                 cur,
@@ -811,6 +827,21 @@ impl ShardedStore {
                 origin: cfg.fresh_sketch(),
             }));
         }
+        // replication section (v4): a replicating node's cumulative
+        // origin accumulator is durable — recovery must re-ship exactly
+        // the WAL-recovered-but-unshipped remainder, which only works if
+        // the accumulator survives bit-exactly. The whole image lands in
+        // shard 0 (the per-shard split is an implementation detail; only
+        // the all-shards merge is ever shipped, and new local mass keeps
+        // landing per-shard on top).
+        let replicate = rd.u8()? != 0;
+        let mut origin_version = 0u64;
+        if replicate {
+            origin_version = rd.u64()?;
+            let origin = StreamSketch::decode(rd)?;
+            ensure!(cfg.matches(&origin), "corrupt snapshot: origin sketch family mismatch");
+            shards[0].get_mut().expect("shard lock").origin = origin;
+        }
         let router_salt = Self::derive_salt(cfg.seed);
         let probe = cfg.fresh_sketch();
         let scan = ScanCache::empty(&cfg);
@@ -819,8 +850,8 @@ impl ShardedStore {
             shards,
             epoch: AtomicU64::new(epoch),
             version: AtomicU64::new(0),
-            replicate: AtomicBool::new(false),
-            origin_version: AtomicU64::new(0),
+            replicate: AtomicBool::new(replicate),
+            origin_version: AtomicU64::new(origin_version),
             scan,
             lockall_fallbacks: AtomicU64::new(0),
             router_salt,
@@ -1291,6 +1322,42 @@ mod tests {
         for r in 0..cfg.d {
             assert_eq!(after.table(r), reference.table(r));
         }
+    }
+
+    #[test]
+    fn snapshot_carries_origin_accumulator_when_replicating() {
+        let cfg = small_cfg(3, 2);
+        let store = ShardedStore::new(cfg.clone());
+        store.set_replication(true);
+        let mut rng = Pcg64::new(71);
+        for _ in 0..300 {
+            store.update(
+                rng.gen_range(48) as usize,
+                rng.gen_range(40) as usize,
+                int_weight(&mut rng),
+            );
+        }
+        store.advance_epoch(); // expiry must not touch the accumulator
+        let (v, origin) = store.origin_snapshot();
+        assert!(v > 0);
+        let mut bytes = Vec::new();
+        store.encode_into(&mut bytes);
+        let got = ShardedStore::decode_from(&mut Reader::new(&bytes)).unwrap();
+        assert!(got.replication_enabled(), "replicate flag lost in snapshot");
+        let (gv, gorigin) = got.origin_snapshot();
+        assert_eq!(gv, v, "origin version stamp lost");
+        assert_eq!(gorigin.updates, origin.updates);
+        for r in 0..cfg.d {
+            assert_eq!(gorigin.table(r), origin.table(r), "origin table {r} diverges");
+        }
+        // a non-replicating store writes (and reads back) the flag off
+        let plain = ShardedStore::new(small_cfg(2, 2));
+        plain.update(1, 1, 1.0);
+        let mut pb = Vec::new();
+        plain.encode_into(&mut pb);
+        let pg = ShardedStore::decode_from(&mut Reader::new(&pb)).unwrap();
+        assert!(!pg.replication_enabled());
+        assert_eq!(pg.origin_snapshot().1.updates, 0);
     }
 
     #[test]

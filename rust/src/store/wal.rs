@@ -94,13 +94,60 @@
 //! the WAL *fails*, the store **fail-stops** writes: appending to the
 //! stale-generation log would be acknowledged and then silently skipped
 //! by that same recovery rule, which is data loss. Reads keep working.
+//!
+//! # Failure model
+//!
+//! Every crash-sensitive operation below passes through a named
+//! failpoint ([`super::faults`]; a no-op in release builds), and
+//! `rust/tests/faults.rs` kills a scripted child process at each site
+//! and asserts these guarantees. What each durability level promises:
+//!
+//! - **flush mode** (default): an acknowledged write survives a
+//!   *process* crash (the bytes reached the OS page cache), not a power
+//!   failure. Recovery returns a clean **op-prefix** of the history —
+//!   never torn state.
+//! - **fsync mode**: an acknowledged write also survives power loss
+//!   (`sync_data` per commit, amortized by group commit). Same prefix
+//!   guarantee.
+//!
+//! Which faults *heal* on the next open and which *fail-stop* the
+//! running process:
+//!
+//! - Torn or corrupt WAL tail (crash mid-append, at any byte offset):
+//!   **heals** — replay stops at the last whole frame, `open()`
+//!   re-snapshots, and the store accepts writes again.
+//! - Crash between snapshot rename and WAL recreation: **heals** — the
+//!   generation stamp makes recovery skip the stale log (no
+//!   double-apply), and everything acknowledged is in the snapshot.
+//! - Failed group write, failed WAL rotation, or a snapshot installed
+//!   without a durable directory sync: **fail-stop** — writes error,
+//!   reads keep serving, reopening recovers. Fail-stop exists precisely
+//!   because appending past the failure would acknowledge records that
+//!   recovery silently drops.
+//! - Failed snapshot *before* the rename: **rollback** — nothing was
+//!   installed, the old snapshot + WAL pair stays live and writes
+//!   continue.
+//!
+//! **Cursor durability rules.** The snapshot also carries the sender
+//! side of replication: this node's stable origin id and the per-peer
+//! acknowledged cursor positions ([`WalRecord::CursorAdvance`] /
+//! [`WalRecord::ReplicaId`] cover the stretch between snapshots). The
+//! replicator logs a cursor advance only *after* the peer acknowledged
+//! the frame, and refuses to ship the next sequence until the previous
+//! advance is durable — so the durable cursor trails the receiver's
+//! dedup horizon by at most one frame, and a restarted sender resuming
+//! at `acked + 2` with a full-state ship re-delivers exactly the
+//! WAL-recovered-but-unshipped remainder (the receiver applies
+//! `full − received` against its cumulative per-origin record).
 
 use super::codec::{self, Reader};
+use super::faults;
 use super::mergeable::MergeableSketch;
 use super::replica::origins::{Admit, OriginTable, MAX_ORIGINS};
 use super::sharded::{ShardedStore, StoreConfig, StoreStats};
 use crate::sketch::stream::StreamSketch;
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -110,11 +157,15 @@ use std::sync::{Condvar, Mutex, RwLock};
 const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
 const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
 /// Bumped to 2 when the embedded [`StreamSketch`] encoding grew its
-/// turnstile flags byte (group-commit PR), and to 3 when snapshots
-/// grew the per-origin replication dedup table and the WAL its
-/// `OriginMerge` record (replication PR); older files are rejected
-/// with a version error rather than misparsed.
-const FORMAT_VERSION: u32 = 3;
+/// turnstile flags byte (group-commit PR), to 3 when snapshots grew
+/// the per-origin replication dedup table and the WAL its
+/// `OriginMerge` record (replication PR), and to 4 when snapshots grew
+/// the durable sender-side replication section (origin id + per-peer
+/// cursors + the origin accumulator behind the store's replicate flag)
+/// and the WAL its `CursorAdvance` / `ReplicaId` records
+/// (fault-injection PR); older files are rejected with a version error
+/// rather than misparsed.
+const FORMAT_VERSION: u32 = 4;
 /// magic + version + generation
 const HEADER_LEN: usize = 20;
 /// Cap on a batch frame's item count, shared with the server's
@@ -138,6 +189,15 @@ pub enum WalRecord {
     /// plus the (origin, seq) whose dedup horizon replay must re-commit
     /// — a recovered node keeps recognizing re-delivered frames.
     OriginMerge { origin: u64, seq: u64, sketch: StreamSketch },
+    /// Sender-side cursor advance: `peer` acknowledged the frame at
+    /// `seq`, which covered the origin snapshot stamped `version`.
+    /// Logged *after* the ack, so replaying every record leaves the
+    /// durable cursor at most one frame behind the receiver's horizon.
+    CursorAdvance { peer: String, seq: u64, version: u64 },
+    /// This node's stable replication origin id, logged when first
+    /// derived so a restarted sender keeps its channel (and the
+    /// receiver's cumulative per-origin record keeps matching).
+    ReplicaId(u64),
 }
 
 const TAG_UPDATE: u8 = 1;
@@ -145,6 +205,15 @@ const TAG_ADVANCE: u8 = 2;
 const TAG_MERGE: u8 = 3;
 const TAG_UPDATE_BATCH: u8 = 4;
 const TAG_ORIGIN_MERGE: u8 = 5;
+const TAG_CURSOR_ADVANCE: u8 = 6;
+const TAG_REPLICA_ID: u8 = 7;
+
+/// Decode cap on a peer address embedded in a cursor record or
+/// snapshot — keeps a corrupt length from driving a huge allocation.
+const MAX_PEER_ADDR: usize = 1024;
+/// Decode cap on the number of per-peer cursors in a snapshot (a
+/// static mesh is small; this only bounds corrupt counts).
+const MAX_PEER_CURSORS: usize = 4096;
 
 impl WalRecord {
     fn encode(&self, out: &mut Vec<u8>) {
@@ -173,6 +242,17 @@ impl WalRecord {
                 codec::put_u64(out, *origin);
                 codec::put_u64(out, *seq);
                 sketch.encode(out);
+            }
+            WalRecord::CursorAdvance { peer, seq, version } => {
+                codec::put_u8(out, TAG_CURSOR_ADVANCE);
+                codec::put_u32(out, u32::try_from(peer.len()).expect("peer addr fits u32"));
+                out.extend_from_slice(peer.as_bytes());
+                codec::put_u64(out, *seq);
+                codec::put_u64(out, *version);
+            }
+            WalRecord::ReplicaId(id) => {
+                codec::put_u8(out, TAG_REPLICA_ID);
+                codec::put_u64(out, *id);
             }
         }
     }
@@ -212,8 +292,72 @@ impl WalRecord {
                 let sketch = StreamSketch::decode(rd)?;
                 Ok(WalRecord::OriginMerge { origin, seq, sketch })
             }
+            TAG_CURSOR_ADVANCE => {
+                let len = rd.u32()? as usize;
+                ensure!(len <= MAX_PEER_ADDR, "cursor peer address of {len} bytes");
+                let peer = String::from_utf8(rd.take(len)?.to_vec())
+                    .context("cursor peer address is not UTF-8")?;
+                let seq = rd.u64()?;
+                let version = rd.u64()?;
+                Ok(WalRecord::CursorAdvance { peer, seq, version })
+            }
+            TAG_REPLICA_ID => Ok(WalRecord::ReplicaId(rd.u64()?)),
             other => bail!("unknown WAL record tag {other}"),
         }
+    }
+}
+
+/// Durable sender-side replication state: this node's stable origin id
+/// plus, per peer address, the last *durably acknowledged* (sequence,
+/// origin-version) pair. Snapshots embed it ([`FORMAT_VERSION`] 4) and
+/// [`WalRecord::CursorAdvance`] / [`WalRecord::ReplicaId`] replay
+/// rebuilds the stretch since — so a restarted sender re-ships exactly
+/// the recovered-but-unshipped remainder instead of forgetting its
+/// channels (see the module docs' cursor durability rules).
+#[derive(Default)]
+struct ReplicaCursors {
+    /// 0 = never derived (this node has never replicated)
+    origin_id: u64,
+    /// peer addr → (acked seq, acked origin version); `BTreeMap` so
+    /// identical states encode identically
+    peers: BTreeMap<String, (u64, u64)>,
+}
+
+impl ReplicaCursors {
+    /// Monotone advance (replay order is WAL order, but a re-delivered
+    /// snapshot + tail must never move a cursor backwards).
+    fn advance(&mut self, peer: &str, seq: u64, version: u64) {
+        let ent = self.peers.entry(peer.to_string()).or_insert((0, 0));
+        ent.0 = ent.0.max(seq);
+        ent.1 = ent.1.max(version);
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.origin_id);
+        codec::put_u32(out, u32::try_from(self.peers.len()).expect("peer count fits u32"));
+        for (addr, (seq, version)) in &self.peers {
+            codec::put_u32(out, u32::try_from(addr.len()).expect("peer addr fits u32"));
+            out.extend_from_slice(addr.as_bytes());
+            codec::put_u64(out, *seq);
+            codec::put_u64(out, *version);
+        }
+    }
+
+    fn decode_from(rd: &mut Reader<'_>) -> Result<Self> {
+        let origin_id = rd.u64()?;
+        let count = rd.u32()? as usize;
+        ensure!(count <= MAX_PEER_CURSORS, "snapshot claims {count} peer cursors");
+        let mut peers = BTreeMap::new();
+        for _ in 0..count {
+            let len = rd.u32()? as usize;
+            ensure!(len <= MAX_PEER_ADDR, "snapshot peer address of {len} bytes");
+            let addr = String::from_utf8(rd.take(len)?.to_vec())
+                .context("snapshot peer address is not UTF-8")?;
+            let seq = rd.u64()?;
+            let version = rd.u64()?;
+            peers.insert(addr, (seq, version));
+        }
+        Ok(Self { origin_id, peers })
     }
 }
 
@@ -240,6 +384,7 @@ impl WalWriter {
     /// the new one is fully formed.
     fn create(path: &Path, generation: u64, sync: bool) -> Result<Self> {
         let tmp = path.with_extension("tmp");
+        faults::fire("wal.create.tmp").with_context(|| format!("creating WAL tmp {tmp:?}"))?;
         let mut file =
             File::create(&tmp).with_context(|| format!("creating WAL tmp {tmp:?}"))?;
         file.write_all(WAL_MAGIC)?;
@@ -249,6 +394,7 @@ impl WalWriter {
         if sync {
             file.sync_data().context("syncing new WAL header")?;
         }
+        faults::fire("wal.create.rename").with_context(|| format!("installing WAL {path:?}"))?;
         fs::rename(&tmp, path).with_context(|| format!("installing WAL {path:?}"))?;
         if sync {
             // the rename itself must survive power loss too; an error
@@ -276,7 +422,9 @@ impl WalWriter {
             // recovery. Best effort: the log fail-stops either way, and
             // see committed_len for the residual ambiguity of an
             // errored commit.
-            if self.file.set_len(self.committed_len).is_ok() {
+            if faults::fire("wal.truncate").is_ok()
+                && self.file.set_len(self.committed_len).is_ok()
+            {
                 let _ = self.file.sync_data();
             }
             return Err(e);
@@ -286,9 +434,10 @@ impl WalWriter {
     }
 
     fn write_and_sync(&mut self, framed: &[u8]) -> Result<()> {
-        self.file.write_all(framed)?;
+        faults::write_all("wal.append", &mut self.file, framed)?;
         self.file.flush()?;
         if self.sync {
+            faults::fire("wal.sync")?;
             self.file.sync_data().context("syncing WAL append")?;
         }
         Ok(())
@@ -484,6 +633,10 @@ pub struct DurableStore {
     /// horizons + cumulative records, persisted with every snapshot
     /// and re-committed by `OriginMerge` replay (see the module docs)
     origins: Mutex<OriginTable>,
+    /// sender side of the replication plane: the durable origin id and
+    /// per-peer acked cursors (snapshot section + `CursorAdvance` /
+    /// `ReplicaId` records — see the module docs' cursor rules)
+    replica: Mutex<ReplicaCursors>,
     /// leader/follower commit queue; fail-stop lives inside it
     log: Option<GroupCommitLog>,
     /// shared by every append→apply pair, exclusive for snapshot and
@@ -506,6 +659,7 @@ impl DurableStore {
         Self {
             store: ShardedStore::new(cfg),
             origins: Mutex::new(OriginTable::new(MAX_ORIGINS)),
+            replica: Mutex::new(ReplicaCursors::default()),
             log: None,
             commit: RwLock::new(()),
             dir: None,
@@ -547,7 +701,7 @@ impl DurableStore {
         let snap_path = dir.join(SNAPSHOT_FILE);
         let wal_path = dir.join(WAL_FILE);
 
-        let (store, mut origins, snap_generation) = if snap_path.exists() {
+        let (store, mut origins, mut cursors, snap_generation) = if snap_path.exists() {
             let bytes = fs::read(&snap_path).with_context(|| format!("reading {snap_path:?}"))?;
             ensure!(bytes.len() >= HEADER_LEN, "snapshot shorter than its header");
             ensure!(&bytes[..8] == SNAP_MAGIC, "bad snapshot magic");
@@ -561,21 +715,36 @@ impl DurableStore {
                 "on-disk store config {:?} does not match requested {cfg:?}",
                 store.config()
             );
-            // the origin dedup table is part of the same instant as the
-            // store image — decoding them together is what keeps
-            // full-ship remainders exact across restarts
+            // the origin dedup table and the sender cursors are part of
+            // the same instant as the store image — decoding all three
+            // together is what keeps full-ship remainders exact across
+            // restarts on both sides of a channel
             let origins = OriginTable::decode_from(&mut rd, store.config())?;
-            (store, origins, generation)
+            let cursors = ReplicaCursors::decode_from(&mut rd)?;
+            (store, origins, cursors, generation)
         } else {
-            (ShardedStore::new(cfg), OriginTable::new(MAX_ORIGINS), 0)
+            (ShardedStore::new(cfg), OriginTable::new(MAX_ORIGINS), ReplicaCursors::default(), 0)
         };
 
         if wal_path.exists() {
             let (wal_generation, records) = read_wal(&wal_path)?;
             if wal_generation == snap_generation {
                 crate::log_debug!("store: replaying {} WAL record(s)", records.len());
+                // a node that was replicating must rebuild its origin
+                // accumulator *during* replay: the snapshot's replicate
+                // flag covers the snapshot instant, and a `ReplicaId`
+                // record covers the first-enable-after-open case (the
+                // initial snapshot predates `enable_replication`). The
+                // replayed local records are exactly the recovered-but-
+                // possibly-unshipped mass the durable cursors exist for.
+                if !store.replication_enabled()
+                    && (cursors.origin_id != 0
+                        || records.iter().any(|r| matches!(r, WalRecord::ReplicaId(_))))
+                {
+                    store.set_replication(true);
+                }
                 for rec in &records {
-                    apply(&store, &mut origins, rec)?;
+                    apply(&store, &mut origins, &mut cursors, rec)?;
                 }
             } else {
                 // crash between snapshot rename and WAL truncation: the
@@ -591,6 +760,7 @@ impl DurableStore {
         let mut ds = Self {
             store,
             origins: Mutex::new(origins),
+            replica: Mutex::new(cursors),
             log: None,
             commit: RwLock::new(()),
             dir: Some(dir.to_path_buf()),
@@ -781,12 +951,70 @@ impl DurableStore {
     }
 
     /// Start capturing locally-originated mass for the replicator (see
-    /// [`ShardedStore::set_replication`]). Called after recovery, so
-    /// replication state is per process incarnation: WAL-replayed mass
-    /// was either already shipped by the previous incarnation or is not
-    /// replicated.
+    /// [`ShardedStore::set_replication`]). Once a node has replicated,
+    /// recovery re-enables this *before* WAL replay (the snapshot's
+    /// replicate flag, a nonzero durable origin id, or a `ReplicaId`
+    /// record in the tail), so replayed local records rebuild the
+    /// origin accumulator and the durable cursors ship exactly the
+    /// recovered-but-unshipped remainder.
     pub fn enable_replication(&self) {
         self.store.set_replication(true);
+    }
+
+    /// This node's stable replication origin id: derived once, logged
+    /// as a [`WalRecord::ReplicaId`], and persisted in every snapshot,
+    /// so a restarted sender keeps its channel identity and the
+    /// receivers' cumulative per-origin records stay exact.
+    pub fn replica_id(&self) -> Result<u64> {
+        let _shared = self.commit.read().expect("commit gate");
+        let mut rc = self.replica.lock().expect("replica cursors lock");
+        if rc.origin_id == 0 {
+            let id = super::replica::derive_origin_id();
+            if self.log.is_some() {
+                self.append_record(&WalRecord::ReplicaId(id))?;
+            }
+            rc.origin_id = id;
+        }
+        Ok(rc.origin_id)
+    }
+
+    /// The durably acknowledged (sequence, origin-version) cursor for
+    /// `peer`, if this node has ever logged an advance for it.
+    pub fn replica_cursor(&self, peer: &str) -> Option<(u64, u64)> {
+        self.replica.lock().expect("replica cursors lock").peers.get(peer).copied()
+    }
+
+    /// Durably record that `peer` acknowledged the frame at `seq`
+    /// covering origin version `version`: logged first (one small WAL
+    /// frame), then applied in memory. The replicator calls this after
+    /// every ack and refuses to advance the channel until it succeeds —
+    /// that discipline is what bounds the durable-cursor lag to one
+    /// frame (see the module docs' cursor rules).
+    pub fn advance_replica_cursor(&self, peer: &str, seq: u64, version: u64) -> Result<()> {
+        let _shared = self.commit.read().expect("commit gate");
+        if self.log.is_some() {
+            self.append_record(&WalRecord::CursorAdvance {
+                peer: peer.to_string(),
+                seq,
+                version,
+            })?;
+        }
+        self.replica.lock().expect("replica cursors lock").advance(peer, seq, version);
+        Ok(())
+    }
+
+    /// `false` once the WAL has fail-stopped (a failed group write or
+    /// rotation). The replicator gates idle heartbeats on this: a
+    /// fail-stopped node must not keep advancing receiver horizons it
+    /// can no longer durably record.
+    pub fn wal_healthy(&self) -> bool {
+        match &self.log {
+            None => true,
+            Some(log) => {
+                let st = log.state.lock().expect("wal lock");
+                st.writer.is_some() || st.writing
+            }
+        }
     }
 
     /// The (origin-version, cumulative local-origin sketch) pair the
@@ -908,11 +1136,13 @@ impl DurableStore {
             codec::put_u32(&mut out, FORMAT_VERSION);
             codec::put_u64(&mut out, self.generation.load(Ordering::SeqCst));
             self.store.encode_into(&mut out);
-            // the origin dedup table rides in the same image: both are
-            // one instant here (open() is single-threaded; snapshot()
-            // holds the commit gate exclusively, and every origin merge
-            // runs under a shared guard)
+            // the origin dedup table and the sender cursors ride in the
+            // same image: all three are one instant here (open() is
+            // single-threaded; snapshot() holds the commit gate
+            // exclusively, and every origin merge / cursor advance runs
+            // under a shared guard)
             self.origins.lock().expect("origin table lock").encode_into(&mut out);
+            self.replica.lock().expect("replica cursors lock").encode_into(&mut out);
             let tmp = dir.join("snapshot.tmp");
             {
                 let mut f = OpenOptions::new()
@@ -921,15 +1151,17 @@ impl DurableStore {
                     .truncate(true)
                     .open(&tmp)
                     .with_context(|| format!("creating {tmp:?}"))?;
-                f.write_all(&out)?;
+                faults::write_all("snap.write", &mut f, &out)?;
                 f.flush()?;
                 // in fsync mode the rotation that follows makes this
                 // snapshot the only copy of older records, so its bytes
                 // must hit the platter before the rename installs it
                 if self.fsync {
+                    faults::fire("snap.sync")?;
                     f.sync_data().context("syncing snapshot")?;
                 }
             }
+            faults::fire("snap.rename").context("atomically replacing snapshot")?;
             fs::rename(&tmp, dir.join(SNAPSHOT_FILE))
                 .context("atomically replacing snapshot")?;
             Ok(())
@@ -939,6 +1171,9 @@ impl DurableStore {
             // rename durability: until the directory entry is synced,
             // power loss can surface the old snapshot next to a newer
             // WAL — callers must treat a failure here as fail-stop
+            faults::fire("snap.dirsync")
+                .context("syncing store dir after snapshot rename")
+                .map_err(SnapInstall::Installed)?;
             File::open(dir)
                 .and_then(|d| d.sync_all())
                 .context("syncing store dir after snapshot rename")
@@ -959,9 +1194,15 @@ enum SnapInstall {
 
 /// Replay one record onto the store, validating against the config so a
 /// corrupt-but-CRC-clean record cannot panic the recovery path. Origin
-/// merges also re-commit their dedup horizon into `origins`, so a
-/// recovered node keeps recognizing re-delivered frames.
-fn apply(store: &ShardedStore, origins: &mut OriginTable, rec: &WalRecord) -> Result<()> {
+/// merges also re-commit their dedup horizon into `origins`, and cursor
+/// records rebuild the sender state in `cursors`, so a recovered node
+/// keeps recognizing re-delivered frames on both sides of a channel.
+fn apply(
+    store: &ShardedStore,
+    origins: &mut OriginTable,
+    cursors: &mut ReplicaCursors,
+    rec: &WalRecord,
+) -> Result<()> {
     let cfg = store.config();
     match rec {
         WalRecord::Update { i, j, w } => {
@@ -993,6 +1234,14 @@ fn apply(store: &ShardedStore, origins: &mut OriginTable, rec: &WalRecord) -> Re
             // same fused kernel the live path used — replay stays
             // bit-identical
             store.update_batch(&batch);
+            Ok(())
+        }
+        WalRecord::CursorAdvance { peer, seq, version } => {
+            cursors.advance(peer, *seq, *version);
+            Ok(())
+        }
+        WalRecord::ReplicaId(id) => {
+            cursors.origin_id = *id;
             Ok(())
         }
     }
@@ -1030,6 +1279,8 @@ mod tests {
             WalRecord::MergeSketch(sk),
             WalRecord::UpdateBatch(vec![(1, 2, 3.5), (4, 5, -6.0), (0, 0, 0.25)]),
             WalRecord::OriginMerge { origin: 0xBEEF, seq: 42, sketch: osk },
+            WalRecord::CursorAdvance { peer: "10.0.0.7:7878".to_string(), seq: 9, version: 17 },
+            WalRecord::ReplicaId(0xABCD_EF01),
         ] {
             let mut out = Vec::new();
             rec.encode(&mut out);
@@ -1062,6 +1313,11 @@ mod tests {
                     assert!(sketch.same_family(gsk));
                     assert_eq!(sketch.table(0), gsk.table(0));
                 }
+                (
+                    WalRecord::CursorAdvance { peer, seq, version },
+                    WalRecord::CursorAdvance { peer: gp, seq: gs, version: gv },
+                ) => assert_eq!((peer, seq, version), (gp, gs, gv)),
+                (WalRecord::ReplicaId(a), WalRecord::ReplicaId(b)) => assert_eq!(a, b),
                 other => panic!("variant mismatch: {other:?}"),
             }
         }
@@ -1525,5 +1781,75 @@ mod tests {
         ds.update(1, 1, 1.0).unwrap();
         assert!(ds.snapshot().is_err());
         assert_eq!(ds.point_query(1, 1), 1.0);
+    }
+
+    #[test]
+    fn replica_id_and_cursors_survive_wal_replay_and_snapshot() {
+        let dir = tmpdir("cursors");
+        let id = {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.enable_replication();
+            let id = live.replica_id().unwrap();
+            assert_ne!(id, 0);
+            assert_eq!(live.replica_id().unwrap(), id, "id must be derived once");
+            assert_eq!(live.replica_cursor("peer:1"), None);
+            live.advance_replica_cursor("peer:1", 3, 7).unwrap();
+            live.advance_replica_cursor("peer:1", 4, 9).unwrap();
+            live.advance_replica_cursor("peer:2", 1, 2).unwrap();
+            // a replayed stale advance must never move a cursor back
+            live.advance_replica_cursor("peer:1", 2, 5).unwrap();
+            assert_eq!(live.replica_cursor("peer:1"), Some((4, 9)));
+            id
+            // crash without snapshot: everything must replay from the WAL
+        };
+        {
+            let re = DurableStore::open(&dir, cfg()).unwrap();
+            assert_eq!(re.replica_id().unwrap(), id, "durable origin id lost");
+            assert_eq!(re.replica_cursor("peer:1"), Some((4, 9)));
+            assert_eq!(re.replica_cursor("peer:2"), Some((1, 2)));
+            assert!(
+                re.store().replication_enabled(),
+                "a node that ever replicated must recover replicating"
+            );
+            re.snapshot().unwrap(); // cursors now persisted in the image
+        }
+        let re2 = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(re2.replica_id().unwrap(), id);
+        assert_eq!(re2.replica_cursor("peer:1"), Some((4, 9)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn origin_accumulator_recovers_recovered_but_unshipped_mass() {
+        // the durable-cursor contract: after a sender crash, the origin
+        // accumulator rebuilt from snapshot + WAL replay holds exactly
+        // the cumulative local mass, so `full − receiver's record` is
+        // exactly the unshipped remainder
+        let dir = tmpdir("origin_acc");
+        let mut expect = cfg().fresh_sketch();
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.enable_replication();
+            live.replica_id().unwrap();
+            live.update(1, 2, 3.0).unwrap();
+            live.update_batch(&[(4, 5, 6.0), (7, 7, 2.0)]).unwrap();
+            expect.update(1, 2, 3.0);
+            expect.update(4, 5, 6.0);
+            expect.update(7, 7, 2.0);
+            live.snapshot().unwrap(); // accumulator rides in the image
+            live.update(9, 9, 4.0).unwrap(); // post-snapshot: WAL only
+            expect.update(9, 9, 4.0);
+        }
+        let re = DurableStore::open(&dir, cfg()).unwrap();
+        let (version, acc) = re.origin_snapshot();
+        assert!(version > 0, "recovered origin version must be stamped");
+        assert!(expect.same_family(&acc));
+        assert_eq!(acc.updates, expect.updates, "accumulator lost or doubled mass");
+        for r in 0..expect.d {
+            for (a, b) in acc.table(r).iter().zip(expect.table(r).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "repeat {r}");
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,489 @@
+//! Crash-consistency harness for the durable and replication paths.
+//!
+//! The matrix tests spawn `hocs fault-crash` child processes with a
+//! failpoint armed through `HOCS_FAULTS` (see `store::faults`), let the
+//! child die at the injection site, then recover the directory
+//! in-process and assert the durability contract:
+//!
+//! - **no acknowledged write is lost** — every op the child logged to
+//!   `acks.log` is in the recovered state;
+//! - **no torn state, ever** — the recovered update counter matches an
+//!   exact prefix of the scripted workload, and the sketch contents are
+//!   bit-identical to an in-memory replay of that prefix (integer
+//!   weights make f64 comparisons exact);
+//! - **dedup horizons are monotone** — a re-delivered origin sequence
+//!   at or below the recovered horizon is dropped, the next one applies;
+//! - **recovery heals** — the reopened store accepts writes that
+//!   survive a further reopen.
+//!
+//! Failpoints compile out of release builds, so the child-process tests
+//! skip themselves under `--release`; the in-process rotation-fault and
+//! torn-tail tests run everywhere they can arm the registry (debug).
+//! `HOCS_FAULT_QUICK=1` trims the matrix for the CI smoke job.
+
+use hocs::store::faults::{self, CrashOp, FaultAction};
+use hocs::store::{DurableOptions, DurableStore, StoreConfig, StoreServer, StoreServerConfig};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+const TOTAL_OPS: usize = 120;
+const SEED: u64 = 77;
+
+/// The failpoint registry is process-global, and several tests here arm
+/// it (or must not see it armed); the whole file serializes on this.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hocs_faults_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).expect("creating test dir");
+    d
+}
+
+/// One `hocs fault-crash` child invocation (see `cmd_fault_crash`).
+#[derive(Default)]
+struct Child<'a> {
+    fsync: bool,
+    ops: usize,
+    start: usize,
+    snapshot_at: usize,
+    seed: u64,
+    op_delay_us: u64,
+    fault: Option<&'a str>,
+    peer: Option<&'a str>,
+}
+
+impl Child<'_> {
+    fn run(&self, dir: &Path) -> std::process::Output {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_hocs"));
+        cmd.arg("fault-crash").arg("--dir").arg(dir);
+        cmd.args(["--ops", &self.ops.to_string()]);
+        cmd.args(["--start", &self.start.to_string()]);
+        cmd.args(["--seed", &self.seed.to_string()]);
+        if self.snapshot_at > 0 {
+            cmd.args(["--snapshot-at", &self.snapshot_at.to_string()]);
+        }
+        if self.fsync {
+            cmd.arg("--fsync");
+        }
+        if let Some(p) = self.peer {
+            cmd.args(["--peer", p]);
+        }
+        if self.op_delay_us > 0 {
+            cmd.args(["--op-delay-us", &self.op_delay_us.to_string()]);
+        }
+        cmd.env_remove("HOCS_FAULTS");
+        if let Some(f) = self.fault {
+            cmd.env("HOCS_FAULTS", f);
+        }
+        cmd.output().expect("spawning hocs fault-crash child")
+    }
+}
+
+/// Ops the child acknowledged (durably committed, then logged) before
+/// it died.
+fn acked_ops(dir: &Path) -> usize {
+    match fs::read_to_string(dir.join("acks.log")) {
+        Ok(s) => s.lines().filter(|l| !l.trim().is_empty()).count(),
+        Err(_) => 0,
+    }
+}
+
+/// Infer which workload prefix a recovered update counter corresponds
+/// to. Every op advances the counter by ≥ 1, so cumulative counts are
+/// strictly increasing and the prefix length is unique; `None` means
+/// the counter matches no prefix — torn state.
+fn recovered_prefix(ops: &[CrashOp], updates: u64) -> Option<usize> {
+    if updates == 0 {
+        return Some(0);
+    }
+    let mut cum = 0u64;
+    for (k, op) in ops.iter().enumerate() {
+        cum += op.updates();
+        if cum == updates {
+            return Some(k + 1);
+        }
+        if cum > updates {
+            return None;
+        }
+    }
+    None
+}
+
+fn replay_shadow(cfg: &StoreConfig, ops: &[CrashOp]) -> DurableStore {
+    let s = DurableStore::in_memory(cfg.clone());
+    for op in ops {
+        faults::apply_crash_op(&s, cfg, op).expect("shadow replay");
+    }
+    s
+}
+
+/// Bit-exact full-universe comparison (the crash geometry is small
+/// enough to sweep; integer weights make every estimate exact in f64).
+fn assert_same_universe(got: &DurableStore, want: &DurableStore, cfg: &StoreConfig, what: &str) {
+    assert_eq!(got.stats().updates, want.stats().updates, "{what}: update counters differ");
+    for i in 0..cfg.n1 {
+        for j in 0..cfg.n2 {
+            let (x, y) = (got.point_query(i, j), want.point_query(i, j));
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: ({i}, {j}) differs: {x} vs {y}");
+        }
+    }
+}
+
+struct CrashCase {
+    name: &'static str,
+    fault: &'static str,
+    fsync: bool,
+    snapshot_at: usize,
+}
+
+/// Every registered WAL/snapshot failpoint, killed at a mid-workload
+/// hit. `@nth` picks the hit: append/sync sites fire once per op frame;
+/// snapshot/rotation sites fire once during `open` (hit 1), so `@2` is
+/// the first runtime `snapshot()` — which the `snapshot_at: 60` cases
+/// trigger at op 60.
+fn crash_cases() -> Vec<CrashCase> {
+    vec![
+        CrashCase {
+            name: "torn WAL append (flush mode)",
+            fault: "wal.append=torn:5@40",
+            fsync: false,
+            snapshot_at: 0,
+        },
+        CrashCase {
+            name: "abort at WAL append (flush mode)",
+            fault: "wal.append=abort@25",
+            fsync: false,
+            snapshot_at: 0,
+        },
+        CrashCase {
+            name: "torn WAL append (fsync mode)",
+            fault: "wal.append=torn:9@60",
+            fsync: true,
+            snapshot_at: 0,
+        },
+        CrashCase {
+            name: "abort before WAL sync (fsync mode)",
+            fault: "wal.sync=abort@30",
+            fsync: true,
+            snapshot_at: 0,
+        },
+        CrashCase {
+            name: "torn snapshot body",
+            fault: "snap.write=torn:64@2",
+            fsync: false,
+            snapshot_at: 60,
+        },
+        CrashCase {
+            name: "abort at snapshot rename",
+            fault: "snap.rename=abort@2",
+            fsync: false,
+            snapshot_at: 60,
+        },
+        CrashCase {
+            name: "abort at WAL rotation rename",
+            fault: "wal.create.rename=abort@2",
+            fsync: false,
+            snapshot_at: 60,
+        },
+        CrashCase {
+            name: "abort at snapshot dir sync (fsync mode)",
+            fault: "snap.dirsync=abort@2",
+            fsync: true,
+            snapshot_at: 60,
+        },
+        CrashCase {
+            name: "abort at WAL rotation tmp (fsync mode)",
+            fault: "wal.create.tmp=abort@2",
+            fsync: true,
+            snapshot_at: 60,
+        },
+    ]
+}
+
+#[test]
+fn crash_matrix_loses_no_acked_write_and_leaves_no_torn_state() {
+    let _g = serial();
+    faults::reset();
+    if !cfg!(debug_assertions) {
+        eprintln!("skipping: failpoints compile out of release builds");
+        return;
+    }
+    let quick = std::env::var("HOCS_FAULT_QUICK").is_ok_and(|v| v == "1");
+    let cfg = faults::crash_config();
+    let ops = faults::crash_workload(&cfg, TOTAL_OPS, SEED);
+    let cases = crash_cases();
+    let cases = if quick { &cases[..4] } else { &cases[..] };
+    for case in cases {
+        let tag = format!("matrix_{}", case.fault.replace(['=', ':', '@', '.'], "_"));
+        let dir = tmpdir(&tag);
+        let out = Child {
+            fsync: case.fsync,
+            ops: TOTAL_OPS,
+            seed: SEED,
+            snapshot_at: case.snapshot_at,
+            fault: Some(case.fault),
+            ..Default::default()
+        }
+        .run(&dir);
+        assert!(
+            !out.status.success(),
+            "{}: child should have crashed\nstdout: {}\nstderr: {}",
+            case.name,
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let acked = acked_ops(&dir);
+        assert!(acked > 0, "{}: fault fired before any op was acknowledged", case.name);
+
+        let opts = DurableOptions { fsync: case.fsync, group_commit: true };
+        let rec = DurableStore::open_opts(&dir, cfg.clone(), opts)
+            .unwrap_or_else(|e| panic!("{}: recovery failed: {e}", case.name));
+        let recovered = rec.stats().updates;
+        let m = recovered_prefix(&ops, recovered).unwrap_or_else(|| {
+            panic!("{}: recovered {recovered} updates — not any workload prefix", case.name)
+        });
+        assert!(
+            acked <= m,
+            "{}: {acked} ops were acknowledged but only {m} survived recovery",
+            case.name
+        );
+        assert!(m <= TOTAL_OPS, "{}: recovered more ops than were executed", case.name);
+        let shadow = replay_shadow(&cfg, &ops[..m]);
+        assert_same_universe(&rec, &shadow, &cfg, case.name);
+
+        // dedup horizon is monotone across the crash: the recovered
+        // channel still drops everything at or below it, and admits the
+        // next sequence
+        let horizon =
+            ops[..m].iter().filter(|o| matches!(o, CrashOp::OriginMerge { .. })).count() as u64;
+        let before = rec.stats().updates;
+        if horizon > 0 {
+            let dup = CrashOp::OriginMerge { seq: horizon, i: 1, j: 1, w: 1.0 };
+            faults::apply_crash_op(&rec, &cfg, &dup).expect(case.name);
+            assert_eq!(
+                rec.stats().updates,
+                before,
+                "{}: re-delivered merge seq {horizon} was not deduped",
+                case.name
+            );
+        }
+        let next = CrashOp::OriginMerge { seq: horizon + 1, i: 1, j: 1, w: 1.0 };
+        faults::apply_crash_op(&rec, &cfg, &next).expect(case.name);
+        assert_eq!(rec.stats().updates, before + 1, "{}: next merge seq must apply", case.name);
+
+        // heal: the recovered store accepts writes that survive another
+        // crash-free reopen
+        rec.update(0, 0, 1.0).expect(case.name);
+        let want = before + 2;
+        drop(rec);
+        let re = DurableStore::open_opts(&dir, cfg.clone(), opts)
+            .unwrap_or_else(|e| panic!("{}: reopen after heal failed: {e}", case.name));
+        assert_eq!(re.stats().updates, want, "{}: post-recovery writes lost on reopen", case.name);
+        drop(re);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn torn_wal_tail_is_dropped_at_every_byte_offset() {
+    let _g = serial();
+    faults::reset();
+    let cfg = faults::crash_config();
+    let dir = tmpdir("torn_tail");
+    let wal = dir.join("wal.bin");
+    let snap = dir.join("snapshot.bin");
+    let mut len5 = 0u64;
+    {
+        let store = DurableStore::open(&dir, cfg.clone()).expect("open");
+        for k in 0..6usize {
+            store.update(k, k, (k + 1) as f64).expect("update");
+            if k == 4 {
+                len5 = fs::metadata(&wal).expect("wal metadata").len();
+            }
+        }
+    }
+    let wal_bytes = fs::read(&wal).expect("reading pristine wal");
+    let snap_bytes = fs::read(&snap).expect("reading pristine snapshot");
+    assert!(len5 > 0 && (len5 as usize) < wal_bytes.len(), "need a final frame to truncate");
+
+    let five: Vec<CrashOp> =
+        (0..5usize).map(|k| CrashOp::Update { i: k, j: k, w: (k + 1) as f64 }).collect();
+    let six: Vec<CrashOp> =
+        (0..6usize).map(|k| CrashOp::Update { i: k, j: k, w: (k + 1) as f64 }).collect();
+    let shadow5 = replay_shadow(&cfg, &five);
+    let shadow6 = replay_shadow(&cfg, &six);
+
+    // every cut inside the final frame (header, CRC, payload — all of
+    // it) must recover exactly the first five updates; the uncut
+    // control recovers all six. Reopening heals (fresh snapshot + WAL),
+    // so both files are restored from pristine bytes each round.
+    for cut in (len5 as usize)..=wal_bytes.len() {
+        fs::write(&snap, &snap_bytes).expect("restoring snapshot");
+        fs::write(&wal, &wal_bytes[..cut]).expect("truncating wal");
+        let store = DurableStore::open(&dir, cfg.clone()).expect("recovery open");
+        let want = if cut == wal_bytes.len() { &shadow6 } else { &shadow5 };
+        assert_same_universe(&store, want, &cfg, &format!("cut at byte {cut}"));
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+fn snapshot_rename_failure_rolls_back_and_the_store_keeps_serving() {
+    let _g = serial();
+    faults::reset();
+    let cfg = faults::crash_config();
+    let dir = tmpdir("snap_rename");
+    let store = DurableStore::open(&dir, cfg.clone()).expect("open");
+    store.update(1, 1, 2.0).expect("update");
+    faults::arm("snap.rename", FaultAction::Error, 1);
+    let err = store.snapshot().expect_err("snapshot must fail at the rename");
+    assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+    faults::reset();
+    // nothing was installed: the old snapshot + WAL pair still matches,
+    // so the store keeps accepting writes and a later snapshot succeeds
+    assert!(store.wal_healthy(), "a rolled-back snapshot must not fail-stop writes");
+    store.update(2, 2, 3.0).expect("write after rolled-back snapshot");
+    store.snapshot().expect("snapshot after the fault is disarmed");
+    drop(store);
+    let re = DurableStore::open(&dir, cfg).expect("reopen");
+    assert_eq!(re.stats().updates, 2);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+fn wal_rotation_failure_fail_stops_writes_and_heals_on_reopen() {
+    let _g = serial();
+    faults::reset();
+    let cfg = faults::crash_config();
+    let dir = tmpdir("wal_rotate");
+    let store = DurableStore::open(&dir, cfg.clone()).expect("open");
+    store.update(1, 1, 2.0).expect("update");
+    faults::arm("wal.create.rename", FaultAction::Error, 1);
+    let err = store.snapshot().expect_err("rotation must fail at the WAL rename");
+    assert!(format!("{err:#}").contains("fail-stopping"), "{err:#}");
+    faults::reset();
+    // snapshot g+1 is installed but the live WAL is gone: writes must
+    // fail-stop (appending to the stale log would be silently lost),
+    // while reads keep working off the in-memory store
+    assert!(!store.wal_healthy(), "failed rotation must fail-stop the log");
+    assert!(store.update(2, 2, 1.0).is_err(), "writes must be refused after fail-stop");
+    assert_eq!(store.point_query(1, 1).to_bits(), 2.0f64.to_bits(), "reads must keep working");
+    drop(store);
+    let re = DurableStore::open(&dir, cfg).expect("reopen heals");
+    assert!(re.wal_healthy());
+    assert_eq!(re.stats().updates, 1, "the pre-rotation write lives in the installed snapshot");
+    re.update(2, 2, 1.0).expect("writes work again after healing");
+    assert_eq!(re.stats().updates, 2);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+fn snapshot_dirsync_failure_fail_stops_in_fsync_mode() {
+    let _g = serial();
+    faults::reset();
+    let cfg = faults::crash_config();
+    let dir = tmpdir("snap_dirsync");
+    let store = DurableStore::open_with(&dir, cfg.clone(), true).expect("open");
+    store.update(1, 1, 4.0).expect("update");
+    faults::arm("snap.dirsync", FaultAction::Error, 1);
+    let err = store.snapshot().expect_err("snapshot must fail at the dir sync");
+    assert!(format!("{err:#}").contains("fail-stopping"), "{err:#}");
+    faults::reset();
+    // the rename is installed but its durability is in doubt next to a
+    // stale-generation WAL — same fail-stop contract as a failed
+    // rotation
+    assert!(!store.wal_healthy());
+    assert!(store.update(2, 2, 1.0).is_err());
+    drop(store);
+    let re = DurableStore::open_with(&dir, cfg, true).expect("reopen heals");
+    assert!(re.wal_healthy());
+    assert_eq!(re.stats().updates, 1);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sender_crash_mid_stream_resumes_from_durable_cursors_and_converges() {
+    let _g = serial();
+    faults::reset();
+    if !cfg!(debug_assertions) {
+        eprintln!("skipping: failpoints compile out of release builds");
+        return;
+    }
+    const STREAM: usize = 300;
+    const STREAM_SEED: u64 = 909;
+    let cfg = faults::crash_config();
+    let receiver = match StoreServer::start(StoreServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        store: cfg.clone(),
+        ..Default::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: cannot bind loopback ({e})");
+            return;
+        }
+    };
+    let addr = receiver.local_addr().to_string();
+    let dir = tmpdir("sender_crash");
+    let ops = faults::crash_workload(&cfg, STREAM, STREAM_SEED);
+
+    // run 1: paced writes shipping to the receiver; the replicator's
+    // socket send aborts the whole process on its 6th ship — a sender
+    // crash mid-stream with acknowledged-but-partially-shipped state
+    let out1 = Child {
+        ops: STREAM,
+        seed: STREAM_SEED,
+        op_delay_us: 1_000,
+        fault: Some("repl.send=abort@6"),
+        peer: Some(addr.as_str()),
+        ..Default::default()
+    }
+    .run(&dir);
+    assert!(
+        !out1.status.success(),
+        "sender should abort at its 6th ship\nstderr: {}",
+        String::from_utf8_lossy(&out1.stderr)
+    );
+    let m1 = {
+        let s = DurableStore::open(&dir, cfg.clone()).expect("recovering crashed sender");
+        recovered_prefix(&ops, s.stats().updates)
+            .expect("crashed sender recovered to a non-prefix state")
+    };
+    assert!(m1 < STREAM, "fault fired too late — the whole stream already ran (m1 = {m1})");
+
+    // run 2: resume the same workload at the recovered prefix with no
+    // fault armed. The child re-derives its durable origin id and
+    // per-peer cursor, full-ships the recovered-but-unshipped
+    // remainder, streams the rest, and exits only once its durable
+    // cursor covers the whole origin stream.
+    let out2 = Child {
+        ops: STREAM - m1,
+        start: m1,
+        seed: STREAM_SEED,
+        peer: Some(addr.as_str()),
+        ..Default::default()
+    }
+    .run(&dir);
+    assert!(
+        out2.status.success(),
+        "resumed sender failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out2.stdout),
+        String::from_utf8_lossy(&out2.stderr)
+    );
+
+    // the receiver must now hold exactly the 300-op stream: nothing
+    // lost across the crash, nothing double-applied across the resume
+    let shadow = replay_shadow(&cfg, &ops);
+    assert_same_universe(receiver.store(), &shadow, &cfg, "receiver after crash + resume");
+    drop(receiver);
+    let _ = fs::remove_dir_all(&dir);
+}
