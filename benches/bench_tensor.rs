@@ -1,0 +1,348 @@
+//! Tensor-store headline bench: order-3 HCS vs a flat count sketch.
+//!
+//! Two experiments, both against exact dense oracles:
+//!
+//! 1. **Memory at matched error** — an order-3 HCS and a flat count
+//!    sketch over the flattened key space ingest the same stream with
+//!    the same counter budget (`Π m_k` buckets × d repeats) and the
+//!    point-query error of both is measured against a dense array.
+//!    Hash state is accounted at the hot-path tabulated representation
+//!    (`ModeHash::bucket_table`/`sign_table`: one u32 bucket plus one
+//!    f64 sign per input index, per repeat): HCS tabulates `Σ n_k`
+//!    entries per repeat where the flat sketch tabulates `Π n_k` — the
+//!    paper's structural memory win. The bench asserts HCS total bytes
+//!    ≤ 1/4 of flat CS while staying within 4× of its measured error.
+//! 2. **CONTRACT accuracy** — `⟨A, B⟩` estimated by `contract_scalar`
+//!    on same-family sketches vs the exact dense inner product, with
+//!    the absolute error asserted within the Ahle–Knudsen-style bound
+//!    `8·‖A‖·‖B‖/√(Π m_k)`.
+//!
+//! Writes `BENCH_tensor.json`. `HOCS_BENCH_QUICK=1` shrinks problem
+//! sizes (CI) — the JSON schema is identical in both modes.
+
+use hocs::rng::Pcg64;
+use hocs::store::tensor::{contract_scalar, HcsStream};
+use hocs::util::bench::Table;
+use hocs::util::json::Json;
+
+const OUT_PATH: &str = "BENCH_tensor.json";
+
+/// Repeats for every sketch in this bench (median-of-d estimation).
+const D: usize = 5;
+
+/// Memory headline floor asserted per row: flat CS bytes must be at
+/// least this multiple of HCS bytes (ISSUE acceptance: HCS ≤ 1/4).
+const MEM_RATIO_FLOOR: f64 = 4.0;
+
+/// Matched-error slack: HCS point-query MAE may exceed the flat CS MAE
+/// by at most this factor (both use the same counter budget; per-mode
+/// hashing correlates partial collisions, costing a small constant).
+const ERR_SLACK: f64 = 4.0;
+
+fn quick() -> bool {
+    std::env::var("HOCS_BENCH_QUICK").is_ok()
+}
+
+/// Total bytes of one sketch family: `Π m_k · d` f64 counters plus the
+/// tabulated per-mode hashes (`Σ n_k` entries × d repeats × (u32 bucket
+/// + f64 sign)).
+fn sketch_bytes(dims: &[usize], sketch_dims: &[usize], d: usize) -> f64 {
+    let counters = sketch_dims.iter().product::<usize>() * d * 8;
+    let hashes = dims.iter().sum::<usize>() * d * (4 + 8);
+    (counters + hashes) as f64
+}
+
+fn flatten(dims: &[usize], key: &[usize]) -> usize {
+    let mut idx = 0;
+    for (i, (&k, &n)) in key.iter().zip(dims.iter()).enumerate() {
+        debug_assert!(k < n, "key out of range at mode {i}");
+        idx = idx * n + k;
+    }
+    idx
+}
+
+fn random_key(rng: &mut Pcg64, dims: &[usize]) -> Vec<usize> {
+    dims.iter().map(|&n| rng.gen_range(n as u64) as usize).collect()
+}
+
+struct MemRow {
+    dims: Vec<usize>,
+    sketch_dims: Vec<usize>,
+    updates: usize,
+    hcs_bytes: f64,
+    flat_bytes: f64,
+    hcs_mae: f64,
+    flat_mae: f64,
+}
+
+impl MemRow {
+    fn ratio(&self) -> f64 {
+        self.flat_bytes / self.hcs_bytes
+    }
+}
+
+/// Feed one stream (a few heavy keys over uniform background) into an
+/// order-3 HCS and a flat CS with the same counter budget; measure
+/// point-query MAE for both against the dense oracle.
+fn run_mem_row(dims: &[usize], sketch_dims: &[usize], updates: usize, samples: usize) -> MemRow {
+    let space: usize = dims.iter().product();
+    let flat_m: usize = sketch_dims.iter().product();
+    let mut dense = vec![0.0f64; space];
+    let mut hcs = HcsStream::new(dims, sketch_dims, D, 42);
+    let mut flat = HcsStream::new(&[space], &[flat_m], D, 4242);
+
+    let mut rng = Pcg64::new(0xB_E4C); // stream generator, independent of both sketches
+    let heavy: Vec<Vec<usize>> = (0..24).map(|_| random_key(&mut rng, dims)).collect();
+    for step in 0..updates {
+        let key = if step % 4 == 0 {
+            heavy[rng.gen_range(heavy.len() as u64) as usize].clone()
+        } else {
+            random_key(&mut rng, dims)
+        };
+        let fk = flatten(dims, &key);
+        dense[fk] += 1.0;
+        hcs.update(&key, 1.0);
+        flat.update(&[fk], 1.0);
+    }
+
+    // error sample: every heavy key plus `samples` uniform keys
+    let mut probe: Vec<Vec<usize>> = heavy.clone();
+    probe.extend((0..samples).map(|_| random_key(&mut rng, dims)));
+    let (mut hcs_mae, mut flat_mae) = (0.0, 0.0);
+    for key in &probe {
+        let truth = dense[flatten(dims, key)];
+        hcs_mae += (hcs.query(key) - truth).abs();
+        flat_mae += (flat.query(&[flatten(dims, key)]) - truth).abs();
+    }
+    hcs_mae /= probe.len() as f64;
+    flat_mae /= probe.len() as f64;
+
+    MemRow {
+        dims: dims.to_vec(),
+        sketch_dims: sketch_dims.to_vec(),
+        updates,
+        hcs_bytes: sketch_bytes(dims, sketch_dims, D),
+        flat_bytes: sketch_bytes(&[space], &[flat_m], D),
+        hcs_mae,
+        flat_mae,
+    }
+}
+
+struct ContractRow {
+    dims: Vec<usize>,
+    sketch_dims: Vec<usize>,
+    norm_a: f64,
+    norm_b: f64,
+    true_ip: f64,
+    est_ip: f64,
+    bound_abs: f64,
+}
+
+impl ContractRow {
+    fn abs_err(&self) -> f64 {
+        (self.est_ip - self.true_ip).abs()
+    }
+
+    fn rel_err(&self) -> f64 {
+        self.abs_err() / (self.norm_a * self.norm_b)
+    }
+}
+
+/// Sketch two random order-3 tensors into the same family, estimate
+/// `⟨A, B⟩` with `contract_scalar`, and compare against the exact dense
+/// inner product. B reuses A's support half the time so the true inner
+/// product is well away from zero.
+fn run_contract_row(dims: &[usize], sketch_dims: &[usize], per_tensor: usize) -> ContractRow {
+    let space: usize = dims.iter().product();
+    let mut dense_a = vec![0.0f64; space];
+    let mut dense_b = vec![0.0f64; space];
+    let mut sa = HcsStream::new(dims, sketch_dims, D, 42);
+    let mut sb = HcsStream::new(dims, sketch_dims, D, 42);
+
+    let mut rng = Pcg64::new(0xC0_17AC);
+    let weight = |rng: &mut Pcg64| {
+        let w = 1.0 + rng.gen_range(3) as f64;
+        if rng.gen_range(2) == 0 {
+            -w
+        } else {
+            w
+        }
+    };
+    let mut a_keys = Vec::with_capacity(per_tensor);
+    for _ in 0..per_tensor {
+        let key = random_key(&mut rng, dims);
+        let w = weight(&mut rng);
+        dense_a[flatten(dims, &key)] += w;
+        sa.update(&key, w);
+        a_keys.push(key);
+    }
+    for _ in 0..per_tensor {
+        let key = if rng.gen_range(2) == 0 {
+            a_keys[rng.gen_range(a_keys.len() as u64) as usize].clone()
+        } else {
+            random_key(&mut rng, dims)
+        };
+        let w = weight(&mut rng);
+        dense_b[flatten(dims, &key)] += w;
+        sb.update(&key, w);
+    }
+
+    let norm_a = dense_a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let norm_b = dense_b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let true_ip: f64 = dense_a.iter().zip(dense_b.iter()).map(|(x, y)| x * y).sum();
+    let m_prod: usize = sketch_dims.iter().product();
+    ContractRow {
+        dims: dims.to_vec(),
+        sketch_dims: sketch_dims.to_vec(),
+        norm_a,
+        norm_b,
+        true_ip,
+        est_ip: contract_scalar(&sa, &sb),
+        bound_abs: 8.0 * norm_a * norm_b / (m_prod as f64).sqrt(),
+    }
+}
+
+fn fmt_dims(dims: &[usize]) -> String {
+    dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+fn main() {
+    let mem_rows: Vec<MemRow> = if quick() {
+        vec![run_mem_row(&[16, 16, 16], &[6, 6, 6], 6_000, 400)]
+    } else {
+        vec![
+            run_mem_row(&[24, 24, 24], &[8, 8, 8], 20_000, 2_000),
+            run_mem_row(&[32, 32, 32], &[8, 8, 8], 30_000, 2_000),
+        ]
+    };
+    let contract_rows: Vec<ContractRow> = if quick() {
+        vec![run_contract_row(&[10, 10, 10], &[6, 6, 6], 1_000)]
+    } else {
+        vec![
+            run_contract_row(&[16, 16, 16], &[6, 6, 6], 3_000),
+            run_contract_row(&[16, 16, 16], &[8, 8, 8], 3_000),
+            run_contract_row(&[16, 16, 16], &[10, 10, 10], 3_000),
+        ]
+    };
+
+    let mut t = Table::new(
+        "order-3 HCS vs flat CS (same counter budget, same stream)",
+        &["dims", "sketch", "updates", "hcs bytes", "flat bytes", "flat/hcs", "hcs mae", "flat mae"],
+    );
+    for r in &mem_rows {
+        t.row(vec![
+            fmt_dims(&r.dims),
+            fmt_dims(&r.sketch_dims),
+            r.updates.to_string(),
+            format!("{:.0}", r.hcs_bytes),
+            format!("{:.0}", r.flat_bytes),
+            format!("{:.1}x", r.ratio()),
+            format!("{:.2}", r.hcs_mae),
+            format!("{:.2}", r.flat_mae),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "CONTRACT <A,B> vs dense oracle",
+        &["dims", "sketch", "true", "est", "abs err", "bound", "rel err"],
+    );
+    for r in &contract_rows {
+        t.row(vec![
+            fmt_dims(&r.dims),
+            fmt_dims(&r.sketch_dims),
+            format!("{:.1}", r.true_ip),
+            format!("{:.1}", r.est_ip),
+            format!("{:.1}", r.abs_err()),
+            format!("{:.1}", r.bound_abs),
+            format!("{:.4}", r.rel_err()),
+        ]);
+    }
+    t.print();
+
+    // acceptance asserts — a violated bound fails the bench (and CI)
+    let mut headline = f64::INFINITY;
+    for r in &mem_rows {
+        assert!(
+            r.ratio() >= MEM_RATIO_FLOOR,
+            "memory ratio {:.1} below floor {MEM_RATIO_FLOOR} for dims {:?}",
+            r.ratio(),
+            r.dims
+        );
+        assert!(
+            r.hcs_mae <= ERR_SLACK * r.flat_mae + 1e-6,
+            "HCS error {:.3} not matched to flat CS error {:.3} (slack {ERR_SLACK})",
+            r.hcs_mae,
+            r.flat_mae
+        );
+        headline = headline.min(r.ratio());
+    }
+    for r in &contract_rows {
+        assert!(
+            r.abs_err() <= r.bound_abs,
+            "CONTRACT error {:.2} exceeds 8*|A||B|/sqrt(prod m) = {:.2} at sketch {:?}",
+            r.abs_err(),
+            r.bound_abs,
+            r.sketch_dims
+        );
+    }
+    println!(
+        "\nheadline: HCS uses {:.1}x less memory than flat CS at matched error \
+         (floor {MEM_RATIO_FLOOR}x); all CONTRACT errors within the 8/sqrt(prod m) bound",
+        headline
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("tensor".into())),
+        ("quick", Json::Bool(quick())),
+        ("d", Json::Num(D as f64)),
+        ("mem_ratio_floor", Json::Num(MEM_RATIO_FLOOR)),
+        ("headline_mem_ratio", Json::Num(headline)),
+        (
+            "memory",
+            Json::Arr(
+                mem_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("dims", Json::arr_usize(&r.dims)),
+                            ("sketch_dims", Json::arr_usize(&r.sketch_dims)),
+                            ("updates", Json::Num(r.updates as f64)),
+                            ("hcs_bytes", Json::Num(r.hcs_bytes)),
+                            ("flat_bytes", Json::Num(r.flat_bytes)),
+                            ("mem_ratio", Json::Num(r.ratio())),
+                            ("hcs_mae", Json::Num(r.hcs_mae)),
+                            ("flat_mae", Json::Num(r.flat_mae)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "contract",
+            Json::Arr(
+                contract_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("dims", Json::arr_usize(&r.dims)),
+                            ("sketch_dims", Json::arr_usize(&r.sketch_dims)),
+                            ("norm_a", Json::Num(r.norm_a)),
+                            ("norm_b", Json::Num(r.norm_b)),
+                            ("true_ip", Json::Num(r.true_ip)),
+                            ("est_ip", Json::Num(r.est_ip)),
+                            ("abs_err", Json::Num(r.abs_err())),
+                            ("rel_err", Json::Num(r.rel_err())),
+                            ("bound_abs", Json::Num(r.bound_abs)),
+                            ("within_bound", Json::Bool(r.abs_err() <= r.bound_abs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write(OUT_PATH, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
+    }
+}

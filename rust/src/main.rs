@@ -13,7 +13,10 @@ use hocs::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
 use hocs::experiments::{self, ExpConfig};
 use hocs::rng::Pcg64;
 use hocs::runtime::Runtime;
-use hocs::store::{ClientOptions, StoreClient, StoreConfig, StoreServer, StoreServerConfig};
+use hocs::store::{
+    ClientOptions, StoreClient, StoreConfig, StoreServer, StoreServerConfig, TensorContraction,
+    TensorFamily,
+};
 use hocs::util::cli::Args;
 
 const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault-crash|bench> [options]\n\
@@ -34,6 +37,11 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
         [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
         [--timeout-ms N]   (connect + per-RPC timeout; 0 = wait forever)\n\
+  store-client <tcreate|tupdate|tquery|marginal|slice-topk|contract>\n\
+        --name T [--dims \"n1,n2,…\" --sketch-dims \"m1,m2,…\" --d D --seed S]\n\
+        [--key \"i1,i2,…\" --w W] [--spec \"i,*,j\"]   (marginal: * sums a mode out)\n\
+        [--mode M --index I --k K]   (slice-topk: dense scan of one slice)\n\
+        [--other T2 --modes \"0,1,…\" [--dense]]   (contract: sketched contraction)\n\
   bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
         [--quick] [--seed N]\n\
 \n\
@@ -315,6 +323,148 @@ fn cmd_store_client(args: &Args) -> i32 {
         }),
         "snapshot" => client.snapshot().map(|()| println!("snapshot written")),
         "advance-epoch" => client.advance_epoch().map(|()| println!("epoch advanced")),
+        "tcreate" => {
+            let name = args.get_str("name", "t");
+            let dims = match parse_index_list(&args.get_str("dims", "")) {
+                Ok(d) if !d.is_empty() => d,
+                Ok(_) => {
+                    eprintln!("tcreate needs --dims \"n1,n2,…\"\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let sketch_dims = match parse_index_list(&args.get_str("sketch-dims", "")) {
+                Ok(m) if m.len() == dims.len() => m,
+                Ok(_) => {
+                    eprintln!("tcreate needs --sketch-dims with one entry per mode\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let family = TensorFamily {
+                dims,
+                sketch_dims,
+                d: args.get_usize("d", 5),
+                seed: args.get_u64("seed", 0x5EED),
+            };
+            client.tensor_create(&name, &family).map(|created| {
+                println!(
+                    "{}: {name:?} {:?} -> {:?} (d={})",
+                    if created { "created" } else { "already exists" },
+                    family.dims,
+                    family.sketch_dims,
+                    family.d
+                )
+            })
+        }
+        "tupdate" => {
+            let name = args.get_str("name", "t");
+            match parse_index_list(&args.get_str("key", "")) {
+                Ok(key) if !key.is_empty() => {
+                    let w = args.get_f64("w", 1.0);
+                    client.tensor_update(&name, &key, w).map(|()| {
+                        println!("ok: {name:?}{key:?} += {w}");
+                    })
+                }
+                Ok(_) => {
+                    eprintln!("tupdate needs --key \"i1,i2,…\"\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        "tquery" => {
+            let name = args.get_str("name", "t");
+            match parse_index_list(&args.get_str("key", "")) {
+                Ok(key) if !key.is_empty() => client.tensor_query(&name, &key).map(|est| {
+                    println!("estimate({name:?}, {key:?}) = {est}");
+                }),
+                Ok(_) => {
+                    eprintln!("tquery needs --key \"i1,i2,…\"\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        "marginal" => {
+            let name = args.get_str("name", "t");
+            let raw = args.get_str("spec", "");
+            match parse_marginal_spec(&raw) {
+                Ok(spec) if !spec.is_empty() => client.tensor_marginal(&name, &spec).map(|est| {
+                    println!("marginal({name:?}, \"{raw}\") = {est}");
+                }),
+                Ok(_) => {
+                    eprintln!("marginal needs --spec \"i,*,j\" (* sums a mode out)\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        "slice-topk" => {
+            let name = args.get_str("name", "t");
+            let mode = args.get_usize("mode", 0);
+            let index = args.get_usize("index", 0);
+            let k = args.get_usize("k", 10);
+            client.tensor_slice_topk(&name, mode, index, k).map(|entries| {
+                if entries.is_empty() {
+                    println!("(no keys)");
+                }
+                for (rank, (key, w)) in entries.iter().enumerate() {
+                    println!("{:>3}. {key:?}  ~{w:.1}", rank + 1);
+                }
+            })
+        }
+        "contract" => {
+            let name = args.get_str("name", "t");
+            let other = args.get_str("other", "");
+            if other.is_empty() {
+                eprintln!("contract needs --other T2\n{USAGE}");
+                return 2;
+            }
+            match parse_index_list(&args.get_str("modes", "")) {
+                Ok(modes) if !modes.is_empty() => client
+                    .tensor_contract(&name, &other, &modes, args.flag("dense"))
+                    .map(|out| match out {
+                        TensorContraction::Scalar(v) => println!("<{name:?}, {other:?}> = {v}"),
+                        TensorContraction::Sketch(cs) => println!(
+                            "contracted sketch: kept modes {:?}, dims {:?}, sketch {:?}, d={}",
+                            cs.kept_modes, cs.kept_dims, cs.kept_sketch_dims, cs.d
+                        ),
+                        TensorContraction::Dense { dims, values } => {
+                            println!("dense result {dims:?} ({} value(s)):", values.len());
+                            for (i, v) in values.iter().enumerate().take(20) {
+                                println!("  [{i}] {v}");
+                            }
+                            if values.len() > 20 {
+                                println!("  … {} more", values.len() - 20);
+                            }
+                        }
+                    }),
+                Ok(_) => {
+                    eprintln!("contract needs --modes \"0,1,…\"\n{USAGE}");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
         "shutdown" => client.shutdown_server().map(|()| println!("server stopping")),
         other => {
             eprintln!("unknown store-client action {other:?}\n{USAGE}");
@@ -427,10 +577,57 @@ fn cmd_fault_crash(args: &Args) -> i32 {
             }
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
+        // then wait for one settled tick that began after the cursor
+        // caught up: the replicator's settled predicate covers the
+        // tensor plane too, so a fresh settle implies every tensor ship
+        // is acked (the cursor version alone only tracks the 2-D plane).
+        // The small epsilon absorbs last_sync_age_ms rounding.
+        let reached = std::time::Instant::now() + std::time::Duration::from_millis(5);
+        loop {
+            let settled_at = c
+                .snapshot()
+                .last_sync_age_ms
+                .map(|age| std::time::Instant::now() - std::time::Duration::from_millis(age));
+            if settled_at.is_some_and(|t| t >= reached) {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                eprintln!("fault-crash: tensor replication did not settle");
+                return 4;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
     }
     let live = store.stats().updates;
     println!("fault-crash: ops [{start}, {}) done — {live} updates live", start + ops);
     0
+}
+
+/// Parse a comma-separated index list like `"20,16,12"` (tensor dims,
+/// multi-mode keys, contraction mode ids).
+fn parse_index_list(spec: &str) -> Result<Vec<usize>, String> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<usize>().map_err(|_| format!("bad index {p:?} in {spec:?}")))
+        .collect()
+}
+
+/// Parse a marginal spec like `"3,*,1"`: a `*` sums that mode out.
+fn parse_marginal_spec(spec: &str) -> Result<Vec<Option<usize>>, String> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            if p == "*" {
+                Ok(None)
+            } else {
+                p.parse::<usize>()
+                    .map(Some)
+                    .map_err(|_| format!("bad index {p:?} in {spec:?} (use * to sum a mode out)"))
+            }
+        })
+        .collect()
 }
 
 /// Parse `"i,j,w;i,j,w;…"` into update triples for the batched RPC.

@@ -16,13 +16,15 @@
 //! and bad for the CLI; with them every RPC fails within a bound and
 //! the caller decides whether to back off and reconnect.
 //!
-//! **Retry policy.** Read-only RPCs (QUERY / TOPK / HEAVY / STATS) are
+//! **Retry policy.** Read-only RPCs (QUERY / TOPK / HEAVY / STATS and
+//! the tensor reads TQUERY / MARGINAL / SLICE_TOPK / CONTRACT) are
 //! idempotent, so a transport failure triggers one automatic
 //! reconnect-and-retry of the identical request — a server restart or
 //! an idle-timeout disconnect costs the caller nothing. Everything
 //! else (UPDATE / UPDATE_BATCH / MERGE / SNAPSHOT / ADVANCE_EPOCH /
-//! SHUTDOWN) never retries: after an ambiguous transport failure the
-//! request may have been applied, and a blind re-send would
+//! SHUTDOWN and the tensor writes) never retries: after an ambiguous
+//! transport failure the request may have been applied, and a blind
+//! re-send would
 //! double-count (headerless writes carry no origin sequence for the
 //! server to dedup). Server-side `STATUS_ERR` rejections are never
 //! retried either — the connection is healthy and the answer is final.
@@ -32,6 +34,7 @@ use super::mergeable::MergeableSketch;
 use super::replica::{wire, ReplicationStats};
 use super::server::{op, read_frame_into, write_frame, STATUS_OK};
 use super::sharded::StoreStats;
+use super::tensor::{ContractedSketch, HcsStream, TensorFamily};
 use crate::sketch::stream::StreamSketch;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -338,11 +341,189 @@ impl StoreClient {
         Ok(out)
     }
 
+    // ---------- tensor plane ----------
+
+    /// Register a named HCS tensor on the server. Returns `true` when
+    /// created, `false` when an identical tensor already existed (a
+    /// different family for the same name is a server error).
+    pub fn tensor_create(&mut self, name: &str, family: &TensorFamily) -> Result<bool> {
+        let req = self.begin(op::TCREATE);
+        codec::put_name(req, name);
+        family.encode(req);
+        let body = self.call()?;
+        Ok(body.first().copied() == Some(1))
+    }
+
+    /// One multi-mode update: key `key` (one index per mode) with
+    /// weight `w`. Never retried — not idempotent.
+    pub fn tensor_update(&mut self, name: &str, key: &[usize], w: f64) -> Result<()> {
+        let req = self.begin(op::TUPDATE);
+        codec::put_name(req, name);
+        codec::put_mode_key(req, key);
+        codec::put_f64(req, w);
+        self.call().map(|_| ())
+    }
+
+    /// Batched multi-mode updates in one frame: `keys` holds
+    /// `ws.len() × order` flat indices. One WAL group-commit frame and
+    /// one fused apply server-side, all-or-nothing on validation.
+    pub fn tensor_update_batch(&mut self, name: &str, keys: &[usize], ws: &[f64]) -> Result<()> {
+        if ws.is_empty() {
+            return Ok(());
+        }
+        ensure!(
+            keys.len() % ws.len() == 0,
+            "batch of {} weights cannot split {} indices evenly",
+            ws.len(),
+            keys.len()
+        );
+        let order = keys.len() / ws.len();
+        let req = self.begin(op::TUPDATE_BATCH);
+        codec::put_name(req, name);
+        codec::put_u32(req, u32::try_from(ws.len()).context("batch exceeds u32")?);
+        for (key, &w) in keys.chunks_exact(order).zip(ws.iter()) {
+            codec::put_mode_key(req, key);
+            codec::put_f64(req, w);
+        }
+        self.call().map(|_| ())
+    }
+
+    /// Median-of-d point estimate for a multi-mode key. Idempotent:
+    /// retried once on a fresh connection after a transient disconnect.
+    pub fn tensor_query(&mut self, name: &str, key: &[usize]) -> Result<f64> {
+        let req = self.begin(op::TQUERY);
+        codec::put_name(req, name);
+        codec::put_mode_key(req, key);
+        let body = self.call_idempotent()?;
+        Reader::new(body).f64()
+    }
+
+    /// Marginal with `Some(i)` modes pinned to index `i` and `None`
+    /// modes summed out on the sketch (one spec entry per mode).
+    /// Idempotent.
+    pub fn tensor_marginal(&mut self, name: &str, spec: &[Option<usize>]) -> Result<f64> {
+        let req = self.begin(op::MARGINAL);
+        codec::put_name(req, name);
+        for entry in spec {
+            match entry {
+                None => codec::put_u8(req, 0),
+                Some(i) => {
+                    codec::put_u8(req, 1);
+                    codec::put_u32(req, u32::try_from(*i).context("mode index exceeds u32")?);
+                }
+            }
+        }
+        let body = self.call_idempotent()?;
+        Reader::new(body).f64()
+    }
+
+    /// Top-k keys within the slice `mode = index`, heaviest first.
+    /// Idempotent.
+    pub fn tensor_slice_topk(
+        &mut self,
+        name: &str,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<(Vec<usize>, f64)>> {
+        let req = self.begin(op::SLICE_TOPK);
+        codec::put_name(req, name);
+        codec::put_u32(req, u32::try_from(mode).context("mode exceeds u32")?);
+        codec::put_u32(req, u32::try_from(index).context("index exceeds u32")?);
+        codec::put_u32(req, u32::try_from(k).context("k exceeds u32")?);
+        let body = self.call_idempotent()?;
+        let mut rd = Reader::new(body);
+        let n = rd.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let order = rd.u8()? as usize;
+            let mut key = Vec::with_capacity(order);
+            for _ in 0..order {
+                key.push(rd.u32()? as usize);
+            }
+            out.push((key, rd.f64()?));
+        }
+        Ok(out)
+    }
+
+    /// Server-side sketched contraction of two stored same-family
+    /// tensors over `modes`. `want_dense` asks the server to densify a
+    /// partial contraction (subject to its dense-output cap); a full
+    /// contraction always comes back as a scalar. Idempotent.
+    pub fn tensor_contract(
+        &mut self,
+        a_name: &str,
+        b_name: &str,
+        modes: &[usize],
+        want_dense: bool,
+    ) -> Result<TensorContraction> {
+        let req = self.begin(op::CONTRACT);
+        codec::put_name(req, a_name);
+        codec::put_name(req, b_name);
+        codec::put_u8(req, u8::try_from(modes.len()).context("mode count exceeds u8")?);
+        for &m in modes {
+            codec::put_u8(req, u8::try_from(m).context("mode id exceeds u8")?);
+        }
+        codec::put_u8(req, u8::from(want_dense));
+        let body = self.call_idempotent()?;
+        let mut rd = Reader::new(body);
+        match rd.u8()? {
+            0 => Ok(TensorContraction::Scalar(rd.f64()?)),
+            1 => Ok(TensorContraction::Sketch(ContractedSketch::decode(&mut rd)?)),
+            2 => {
+                let order = rd.u8()? as usize;
+                let mut dims = Vec::with_capacity(order);
+                for _ in 0..order {
+                    dims.push(rd.u32()? as usize);
+                }
+                let len = rd.u32()? as usize;
+                let mut values = Vec::with_capacity(len);
+                for _ in 0..len {
+                    values.push(rd.f64()?);
+                }
+                Ok(TensorContraction::Dense { dims, values })
+            }
+            other => bail!("unknown contraction result kind {other}"),
+        }
+    }
+
+    /// Tensor replication frame: ship `full` as origin `origin`'s
+    /// cumulative state for tensor `name` at sequence `seq`. The server
+    /// applies only the unseen remainder and dedups retries per
+    /// (origin, tensor) channel, so this is safe to re-send. Returns
+    /// `true` when mass was applied, `false` on a dedup.
+    pub fn tensor_merge_origin(
+        &mut self,
+        origin: u64,
+        seq: u64,
+        name: &str,
+        full: &HcsStream,
+    ) -> Result<bool> {
+        let req = self.begin(op::TMERGE_ORIGIN);
+        codec::put_u64(req, origin);
+        codec::put_u64(req, seq);
+        codec::put_name(req, name);
+        full.encode(req);
+        let body = self.call()?;
+        Ok(body.first().copied() == Some(1))
+    }
+
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown_server(&mut self) -> Result<()> {
         self.begin(op::SHUTDOWN);
         self.call().map(|_| ())
     }
+}
+
+/// A [`StoreClient::tensor_contract`] result: a scalar for a full
+/// contraction, and for partial contractions either the sketched result
+/// or its server-densified expansion (`values` laid out `kept keys of a
+/// × kept keys of b`, row-major over `dims` twice).
+#[derive(Debug)]
+pub enum TensorContraction {
+    Scalar(f64),
+    Sketch(ContractedSketch),
+    Dense { dims: Vec<usize>, values: Vec<f64> },
 }
 
 fn parse_entries(body: &[u8]) -> Result<Vec<(usize, usize, f64)>> {

@@ -41,6 +41,66 @@ pub fn put_update(out: &mut Vec<u8>, i: u32, j: u32, w: f64) {
     put_f64(out, w);
 }
 
+/// Longest tensor name accepted on the wire and in WAL records. Names
+/// key the registry's `BTreeMap`; an unbounded length would let one
+/// corrupt frame allocate arbitrarily.
+pub const MAX_TENSOR_NAME: usize = 128;
+
+/// One multi-mode key: `u8 order` then `order` little-endian `u32`
+/// indices — the shared unit of the tensor wire bodies (TUPDATE /
+/// TQUERY / …) and the WAL's tensor frames. The explicit order byte is
+/// what lets [`read_mode_key`] catch an order-mismatched frame instead
+/// of silently misaligning every field after the key.
+pub fn put_mode_key(out: &mut Vec<u8>, key: &[usize]) {
+    debug_assert!(key.len() <= u8::MAX as usize, "tensor order exceeds wire format");
+    put_u8(out, key.len() as u8);
+    for &i in key {
+        put_u32(out, u32::try_from(i).expect("mode index fits u32"));
+    }
+}
+
+/// Inverse of [`put_mode_key`], validated against the target tensor's
+/// mode dims: rejects an order mismatch, any out-of-range mode index,
+/// and a truncated key vector with a decode error — never a panic or a
+/// wrapped offset. WAL frames and network payloads are untrusted.
+pub fn read_mode_key(rd: &mut Reader<'_>, dims: &[usize]) -> Result<Vec<usize>> {
+    let order = rd.u8()? as usize;
+    if order != dims.len() {
+        bail!("tensor key order {order} does not match tensor order {}", dims.len());
+    }
+    let mut key = Vec::with_capacity(order);
+    for (k, &n) in dims.iter().enumerate() {
+        let i = rd.u32()? as usize;
+        if i >= n {
+            bail!("tensor key mode {k} index {i} out of range (dim {n})");
+        }
+        key.push(i);
+    }
+    Ok(key)
+}
+
+/// A length-prefixed UTF-8 tensor name (`u32 len | bytes`), capped at
+/// [`MAX_TENSOR_NAME`].
+pub fn put_name(out: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= MAX_TENSOR_NAME, "tensor name exceeds MAX_TENSOR_NAME");
+    put_u32(out, name.len() as u32);
+    out.extend_from_slice(name.as_bytes());
+}
+
+/// Inverse of [`put_name`]: rejects over-cap lengths *before*
+/// allocating, and non-UTF-8 bytes.
+pub fn read_name(rd: &mut Reader<'_>) -> Result<String> {
+    let len = rd.u32()? as usize;
+    if len > MAX_TENSOR_NAME {
+        bail!("tensor name of {len} bytes exceeds cap {MAX_TENSOR_NAME}");
+    }
+    let bytes = rd.take(len)?;
+    match std::str::from_utf8(bytes) {
+        Ok(s) => Ok(s.to_string()),
+        Err(_) => bail!("tensor name is not valid UTF-8"),
+    }
+}
+
 // ---------- reader ----------
 
 /// Bounds-checked cursor over a byte slice. Every take returns a
@@ -178,6 +238,47 @@ mod tests {
         assert_eq!(rd.remaining(), 4);
         assert_eq!(rd.u32().unwrap(), 1);
         assert!(rd.u8().is_err());
+    }
+
+    #[test]
+    fn mode_keys_roundtrip_and_reject_corrupt_frames() {
+        let dims = [24usize, 18, 12];
+        let key = [23usize, 0, 11];
+        let mut out = Vec::new();
+        put_mode_key(&mut out, &key);
+        assert_eq!(read_mode_key(&mut Reader::new(&out), &dims).unwrap(), key);
+        // order mismatch: the frame says order 3, the tensor is order 2
+        assert!(read_mode_key(&mut Reader::new(&out), &[24, 18]).is_err());
+        // out-of-range index on any mode
+        let mut big = Vec::new();
+        put_mode_key(&mut big, &[5, 18, 3]);
+        assert!(read_mode_key(&mut Reader::new(&big), &dims).is_err());
+        // truncated key vector: order promises 3 indices, bytes hold 2
+        let trunc = &out[..out.len() - 2];
+        assert!(read_mode_key(&mut Reader::new(trunc), &dims).is_err());
+        // empty buffer
+        assert!(read_mode_key(&mut Reader::new(&[]), &dims).is_err());
+    }
+
+    #[test]
+    fn names_roundtrip_and_reject_corrupt_frames() {
+        let mut out = Vec::new();
+        put_name(&mut out, "user×feature×time");
+        assert_eq!(read_name(&mut Reader::new(&out)).unwrap(), "user×feature×time");
+        // an over-cap length prefix is rejected before allocating
+        let mut huge = Vec::new();
+        put_u32(&mut huge, u32::MAX);
+        assert!(read_name(&mut Reader::new(&huge)).is_err());
+        // length prefix promising more bytes than the buffer holds
+        let mut short = Vec::new();
+        put_u32(&mut short, 10);
+        short.extend_from_slice(b"abc");
+        assert!(read_name(&mut Reader::new(&short)).is_err());
+        // invalid UTF-8
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 2);
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(read_name(&mut Reader::new(&bad)).is_err());
     }
 
     #[test]

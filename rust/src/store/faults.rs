@@ -251,6 +251,22 @@ pub use disarmed::{arm, arm_from_env, disarm, fire, hits, reset, write_all};
 /// Origin id used by the scripted crash workload's ingest merges.
 pub const CRASH_ORIGIN: u64 = 0xC0FFEE;
 
+/// Name of the crash workload's tensor-plane sketch. Created lazily —
+/// and idempotently — when the first [`CrashOp::TensorUpdate`] is
+/// applied, so `--start K` continuation runs find it already durable.
+pub const CRASH_TENSOR: &str = "crash";
+
+/// Family of the crash workload's tensor: order 3, small enough that
+/// full bit-identity sweeps of the key space are cheap.
+pub fn crash_tensor_family() -> super::tensor::TensorFamily {
+    super::tensor::TensorFamily {
+        dims: vec![12, 10, 8],
+        sketch_dims: vec![5, 4, 3],
+        d: 3,
+        seed: 167,
+    }
+}
+
 /// Store geometry for the crash-consistency harness: small enough that
 /// full-universe bit-identity sweeps are cheap, sharded and windowed
 /// enough to exercise the fan-out and rotation paths.
@@ -271,24 +287,33 @@ pub enum CrashOp {
     /// dedup horizon). `seq` is the 1-based index among merge ops, so a
     /// continuation run picks up the channel without a gap.
     OriginMerge { seq: u64, i: usize, j: usize, w: f64 },
+    /// One multi-mode update to the [`CRASH_TENSOR`] HCS (tensor-plane
+    /// WAL record; the tensor itself is created idempotently on first
+    /// application). Counts once in `stats().updates` — the sharded
+    /// store folds the tensor registry's update count in.
+    TensorUpdate { key: Vec<usize>, w: f64 },
 }
 
 impl CrashOp {
     /// How many sketch updates this op contributes to `stats().updates`.
     pub fn updates(&self) -> u64 {
         match self {
-            CrashOp::Update { .. } | CrashOp::OriginMerge { .. } => 1,
+            CrashOp::Update { .. } | CrashOp::OriginMerge { .. } | CrashOp::TensorUpdate { .. } => {
+                1
+            }
             CrashOp::Batch(items) => items.len() as u64,
         }
     }
 }
 
 /// Deterministic crash workload: mostly single updates, with a 3-item
-/// batch every 10th op and an edge-ingest origin merge every 10th —
-/// the three durable write paths (per-record append, group frame,
-/// origin-merge record), integer weights so recovered f64 state is
-/// exactly comparable.
+/// batch every 10th op, an edge-ingest origin merge every 10th, and a
+/// tensor-plane HCS update every 10th — the four durable write paths
+/// (per-record append, group frame, origin-merge record, tensor
+/// record), integer weights so recovered f64 state is exactly
+/// comparable.
 pub fn crash_workload(cfg: &StoreConfig, total: usize, seed: u64) -> Vec<CrashOp> {
+    let tdims = crash_tensor_family().dims;
     let mut rng = Pcg64::new(seed);
     let mut merges = 0u64;
     let mut ops = Vec::with_capacity(total);
@@ -299,6 +324,9 @@ pub fn crash_workload(cfg: &StoreConfig, total: usize, seed: u64) -> Vec<CrashOp
         if k % 10 == 9 {
             merges += 1;
             ops.push(CrashOp::OriginMerge { seq: merges, i, j, w });
+        } else if k % 10 == 2 {
+            let key = vec![i % tdims[0], j % tdims[1], rng.gen_range(tdims[2] as u64) as usize];
+            ops.push(CrashOp::TensorUpdate { key, w });
         } else if k % 10 == 4 {
             let mut items = vec![(i as u32, j as u32, w)];
             for _ in 0..2 {
@@ -328,6 +356,10 @@ pub fn apply_crash_op(store: &DurableStore, cfg: &StoreConfig, op: &CrashOp) -> 
             store
                 .apply_origin_merge(CRASH_ORIGIN, *seq, super::replica::wire::MODE_DELTA, true, sk)
                 .map(|_| ())
+        }
+        CrashOp::TensorUpdate { key, w } => {
+            store.tensor_create(CRASH_TENSOR, &crash_tensor_family())?;
+            store.tensor_update(CRASH_TENSOR, key, *w)
         }
     }
 }
@@ -398,7 +430,9 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(format!("{x:?}"), format!("{y:?}"));
         }
-        // op mix: batches at k%10==4, merges at k%10==9 with contiguous seqs
+        // op mix: batches at k%10==4, merges at k%10==9 with contiguous
+        // seqs, tensor updates at k%10==2 with in-range keys
+        let tfam = crash_tensor_family();
         let mut merges = 0;
         for (k, op) in a.iter().enumerate() {
             match op {
@@ -411,6 +445,14 @@ mod tests {
                     assert_eq!(k % 10, 9);
                     merges += 1;
                     assert_eq!(*seq, merges);
+                }
+                CrashOp::TensorUpdate { key, .. } => {
+                    assert_eq!(k % 10, 2);
+                    assert_eq!(key.len(), tfam.dims.len());
+                    for (idx, dim) in key.iter().zip(tfam.dims.iter()) {
+                        assert!(idx < dim, "tensor key {key:?} out of range for {:?}", tfam.dims);
+                    }
+                    assert_eq!(op.updates(), 1);
                 }
                 CrashOp::Update { .. } => assert_eq!(op.updates(), 1),
             }

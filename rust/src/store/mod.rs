@@ -47,8 +47,18 @@
 //! thread-local scratch, allocating nothing per request once warm — and
 //! can reuse the PR-1 coordinator worker pool for batch sketch jobs.
 //!
+//! The **tensor plane** ([`tensor`]) lifts all of this to multi-mode
+//! keys: a named catalog of Higher-order Count Sketches (one small hash
+//! pair per mode — the paper's exponential hash-state saving) served
+//! through TCREATE / TUPDATE / TUPDATE_BATCH / TQUERY / MARGINAL /
+//! SLICE_TOPK / CONTRACT, durable behind the same snapshot+WAL, and
+//! replicated by idempotent full-ship origin frames (HCS is linear too,
+//! so the remainder rule `full − received` applies exactly the unseen
+//! mass).
+//!
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
-//! epoch rings), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
+//! epoch rings), [`tensor`] (the HCS tensor plane: sketches, catalog,
+//! contraction), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
 //! [`replica`] (anti-entropy replication: delta cursors, origin dedup,
 //! the replicator thread), [`codec`] (bytes + CRC-32), [`faults`] (the
 //! deterministic fault-injection plane + scripted crash workload;
@@ -61,6 +71,7 @@ pub mod mergeable;
 pub mod replica;
 pub mod server;
 pub mod sharded;
+pub mod tensor;
 pub mod wal;
 
 /// One shared cap on a batch of updates, enforced in lockstep at the
@@ -71,9 +82,10 @@ pub mod wal;
 /// acknowledged data).
 pub(crate) const MAX_UPDATE_BATCH: usize = 1 << 20;
 
-pub use client::{ClientOptions, StoreClient};
+pub use client::{ClientOptions, StoreClient, TensorContraction};
 pub use mergeable::MergeableSketch;
 pub use replica::{ReplicaConfig, ReplicationStats, Replicator};
 pub use server::{StoreServer, StoreServerConfig};
 pub use sharded::{ShardedStore, StoreConfig, StoreStats};
+pub use tensor::{ContractOutput, ContractedSketch, HcsStream, TensorFamily};
 pub use wal::{DurableOptions, DurableStore};

@@ -80,6 +80,19 @@
 //! Window expiry is local — peers expire by their own rotations, so a
 //! replica's slot assignment for remote mass lags by the staleness the
 //! bench measures.
+//!
+//! **Tensor plane.** Named HCS tensors ([`super::tensor`]) ride the
+//! same loop with a deliberately simpler protocol: each sync that
+//! touches a peer also ships every tensor whose registry version is
+//! above that peer's per-tensor ack (`TMERGE_ORIGIN`,
+//! [`wire::build_tensor_merge`]) as an idempotent dense full-state
+//! frame — the receiver applies only the remainder it has not seen and
+//! dedups per `(origin, tensor)` sequence, so there is no staged-retry
+//! state to carry and a lost ack just re-ships next tick. Tensors are
+//! small (sketch space, not key space), so full ships are cheap enough
+//! to skip the delta-cursor machinery. A 2-D full ship (the
+//! receiver-restart signal) clears the per-tensor acks too, so a
+//! restarted receiver gets its tensor mass re-delivered alongside.
 
 pub mod origins;
 pub mod wire;
@@ -91,6 +104,7 @@ use super::wal::DurableStore;
 use crate::rng::SplitMix64;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{ensure, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -273,6 +287,15 @@ struct Peer {
     pending: Option<Pending>,
     backoff_ms: u64,
     backoff_until: Instant,
+    /// per-tensor registry version known applied at the peer (tensor
+    /// frames are idempotent full ships — no staged retry, no cursor
+    /// sketch; a lost ack just re-ships next tick). In-memory only:
+    /// after a sender restart every tensor re-ships once and dedups.
+    tensor_acked: HashMap<String, u64>,
+    /// registry version stamp as of the last tick whose dirty-tensor
+    /// scan came back empty for this peer (the cheap-probe analogue of
+    /// `acked_version` for the tensor plane)
+    tensor_synced: u64,
 }
 
 impl Peer {
@@ -289,6 +312,8 @@ impl Peer {
             pending: None,
             backoff_ms: 0,
             backoff_until: Instant::now(),
+            tensor_acked: HashMap::new(),
+            tensor_synced: 0,
         }
     }
 
@@ -415,6 +440,7 @@ fn run(
         // credit here so receiver restarts are probed even with no
         // local writes.
         let stamp = store.origin_version();
+        let tstamp = store.tensor_version();
         let now = Instant::now();
         // a fail-stopped WAL cannot durably record cursor advances, so
         // idle heartbeats (whose only product is an advance) stop;
@@ -425,7 +451,11 @@ fn run(
             if now < p.backoff_until {
                 continue;
             }
-            if p.pending.is_some() || p.acked_version != stamp || !p.synced_once {
+            if p.pending.is_some()
+                || p.acked_version != stamp
+                || p.tensor_synced != tstamp
+                || !p.synced_once
+            {
                 need = true;
             } else if healthy {
                 p.idle_ticks += 1;
@@ -445,6 +475,7 @@ fn run(
             let (version, snap) = store.origin_snapshot();
             for peer in peers.iter_mut() {
                 sync_peer(peer, &snap, version, &ctx);
+                sync_tensors(peer, tstamp, &ctx);
             }
         }
         let cursor = peers.iter().map(|p| p.acked_version).min().unwrap_or(0);
@@ -453,9 +484,12 @@ fn run(
         // the probed stamp — a partitioned or never-reached peer makes
         // the age grow (or stay "never") instead of masking the outage
         // behind a liveness tick
-        let settled = peers
-            .iter()
-            .all(|p| p.synced_once && p.pending.is_none() && p.acked_version >= stamp);
+        let settled = peers.iter().all(|p| {
+            p.synced_once
+                && p.pending.is_none()
+                && p.acked_version >= stamp
+                && p.tensor_synced >= tstamp
+        });
         counters.note_tick(cursor, settled);
     }
     crate::log_info!("replicator: stopping");
@@ -507,6 +541,14 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
         p.idle_ticks = 0;
         let force_full = !p.synced_once
             || (ctx.cfg.full_ship_every > 0 && p.syncs_since_full + 1 >= ctx.cfg.full_ship_every);
+        if force_full {
+            // a dense 2-D full ship means the channel may be starting
+            // from nothing (first contact / healing cadence) — forget
+            // the tensor acks so every tensor re-ships too; duplicates
+            // dedup on the receiver's (origin, tensor) sequence
+            p.tensor_acked.clear();
+            p.tensor_synced = 0;
+        }
         p.pending = Some(stage(p.next_seq, ctx.origin_id, snap, &p.acked, version, force_full));
     }
     for attempt in 0..2 {
@@ -561,6 +603,11 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
                     );
                     p.pending =
                         Some(stage(p.next_seq, ctx.origin_id, snap, &p.acked, version, true));
+                    // the gap means the receiver restarted and lost its
+                    // un-logged replica-plane mass — tensor mass
+                    // included, so those channels reset alongside
+                    p.tensor_acked.clear();
+                    p.tensor_synced = 0;
                     continue;
                 }
                 if msg.contains(SERVER_ERR_PREFIX) {
@@ -583,6 +630,64 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
             }
         }
     }
+}
+
+/// One peer's tensor-plane share of a sync tick: ship every tensor
+/// whose registry version is above this peer's ack as an idempotent
+/// dense full-state `TMERGE_ORIGIN` frame (sequence = that version, so
+/// the receiver's per-`(origin, tensor)` horizon dedups re-delivery).
+/// Deliberately no staged-retry state: a failed or ambiguous send just
+/// re-ships the then-current full sketch next tick, which subsumes the
+/// lost frame by linearity. Runs only on a channel [`sync_peer`] has
+/// already established this incarnation (`synced_once`), so tensor
+/// frames never race ahead of the first-contact 2-D full ship.
+fn sync_tensors(p: &mut Peer, tstamp: u64, ctx: &SyncCtx<'_>) {
+    if !p.synced_once || p.client.is_none() || Instant::now() < p.backoff_until {
+        return;
+    }
+    let dirty = ctx.store.tensor_dirty_origins(&p.tensor_acked);
+    if dirty.is_empty() {
+        p.tensor_synced = tstamp;
+        return;
+    }
+    for (name, version, full) in dirty {
+        // re-borrow each iteration: the error arm below may drop the
+        // connection, and `tensor_acked` needs `p` back in the Ok arm
+        let Some(client) = p.client.as_mut() else { return };
+        let frame = wire::build_tensor_merge(ctx.origin_id, version, &name, &full);
+        let sent = faults::fire("repl.send")
+            .map_err(anyhow::Error::from)
+            .and_then(|()| client.raw_call(&frame));
+        match sent {
+            Ok(_) => {
+                // applied or deduped — either way the peer holds this
+                // tensor's mass through `version`
+                ctx.counters.note_ship(frame.len() as u64, true);
+                p.tensor_acked.insert(name, version);
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.contains(SERVER_ERR_PREFIX) {
+                    // server-side rejection (e.g. a family mismatch at
+                    // the receiver): back off rather than re-send a
+                    // doomed frame at full tick rate
+                    crate::log_warn!(
+                        "replicator: {} rejected tensor {name:?} frame: {msg}",
+                        p.addr
+                    );
+                } else {
+                    crate::log_debug!(
+                        "replicator: {} transport error on tensor ship: {msg}",
+                        p.addr
+                    );
+                    p.client = None;
+                }
+                p.bump_backoff();
+                return;
+            }
+        }
+    }
+    p.tensor_synced = tstamp;
 }
 
 /// Build the staged frame for `seq`: a dense full-state ship of the

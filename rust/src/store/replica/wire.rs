@@ -170,6 +170,27 @@ pub fn encode_sketch_auto(sk: &StreamSketch, out: &mut Vec<u8>) -> u8 {
 /// full-ship baseline); deltas pick the smaller encoding.
 ///
 /// [`StoreClient::merge_origin`]: super::super::client::StoreClient::merge_origin
+/// Build a complete `TMERGE_ORIGIN` request payload (opcode byte
+/// included): the tensor plane's replication frame. Always a dense
+/// full-state ship of the sender's cumulative per-tensor origin sketch
+/// — the receiver applies only the remainder it has not seen and
+/// dedups per `(origin, tensor)` sequence ([`super::origins`]'s rule,
+/// per tensor), so re-sending any frame is a no-op.
+pub fn build_tensor_merge(
+    origin: u64,
+    seq: u64,
+    name: &str,
+    full: &crate::store::tensor::HcsStream,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(super::super::server::op::TMERGE_ORIGIN);
+    codec::put_u64(&mut out, origin);
+    codec::put_u64(&mut out, seq);
+    codec::put_name(&mut out, name);
+    full.encode(&mut out);
+    out
+}
+
 pub fn build_merge_origin(
     origin: u64,
     seq: u64,

@@ -32,6 +32,15 @@
 //! ([`super::sharded`]), which re-merges and re-scans only after a
 //! write invalidates its stamp.
 //!
+//! **Tensor plane.** The TCREATE / TUPDATE / TUPDATE_BATCH / TQUERY /
+//! MARGINAL / SLICE_TOPK / CONTRACT opcodes serve the named HCS catalog
+//! ([`super::tensor`]) over the same framing: the server resolves the
+//! target tensor's family first and decodes the multi-mode key payload
+//! against its declared dims ([`codec::read_mode_key`]), so a
+//! mis-ordered or out-of-range key is a framed error, never a
+//! misaligned parse. TMERGE_ORIGIN is the tensor replication frame
+//! (full cumulative origin state, per-(origin, tensor) sequence dedup).
+//!
 //! `BATCH_SKETCH` reuses the PR-1 coordinator worker pool
 //! ([`crate::coordinator::Coordinator`]) when the server is started
 //! `with_coordinator` and AOT artifacts are present; otherwise the
@@ -51,6 +60,7 @@ use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
 use super::replica::{wire, ReplicaConfig, ReplicationCounters, Replicator};
 use super::sharded::StoreConfig;
+use super::tensor::{ContractOutput, HcsStream, TensorFamily};
 use super::wal::{DurableOptions, DurableStore};
 use crate::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Job};
 use crate::sketch::stream::StreamSketch;
@@ -93,6 +103,35 @@ pub mod op {
     /// ingest): `u64 origin | u64 seq | u8 mode | u8 enc | u8 ingest |
     /// sketch`, deduplicated per origin — see [`crate::store::replica`].
     pub const MERGE_ORIGIN: u8 = 12;
+    // ---- tensor plane (multi-mode HCS catalog — see `store::tensor`) ----
+    /// `name | TensorFamily` → `u8 created` (0 = identical tensor
+    /// already existed; a different family errors).
+    pub const TCREATE: u8 = 13;
+    /// `name | mode_key | f64 w` — one multi-mode update.
+    pub const TUPDATE: u8 = 14;
+    /// `name | u32 count | count × (mode_key | f64 w)` — one WAL
+    /// group-commit frame and one fused apply for the whole batch.
+    pub const TUPDATE_BATCH: u8 = 15;
+    /// `name | mode_key` → `f64` median-of-d point estimate.
+    pub const TQUERY: u8 = 16;
+    /// `name | per mode (u8 flag | u32 index if flag = 1)` → `f64`:
+    /// marginal with flagged modes pinned and the rest summed out on
+    /// the sketch.
+    pub const MARGINAL: u8 = 17;
+    /// `name | u32 mode | u32 index | u32 k` → `u32 count | count ×
+    /// (mode_key | f64)`: top-k keys within one fixed slice.
+    pub const SLICE_TOPK: u8 = 18;
+    /// `a_name | b_name | u8 n | n × u8 modes | u8 want_dense` →
+    /// `u8 kind | payload`: kind 0 = `f64` scalar (all modes
+    /// contracted), 1 = encoded `ContractedSketch`, 2 = dense result
+    /// (`u8 n_kept | n_kept × u32 dims | u32 len | len × f64`, laid out
+    /// `kept keys of a × kept keys of b`, row-major).
+    pub const CONTRACT: u8 = 19;
+    /// Tensor replication frame: `u64 origin | u64 seq | name |
+    /// HcsStream (full cumulative origin state)` → `u8 applied`.
+    /// Unknown tensors are auto-created from the frame's family;
+    /// per-(origin, tensor) sequence dedup makes retries no-ops.
+    pub const TMERGE_ORIGIN: u8 = 20;
 }
 
 pub const STATUS_OK: u8 = 0;
@@ -596,10 +635,134 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
                 codec::put_f32(body, v);
             }
         }
+        op::TCREATE => {
+            let name = codec::read_name(&mut rd)?;
+            let family = TensorFamily::decode(&mut rd)?;
+            let created = shared.store.tensor_create(&name, &family)?;
+            codec::put_u8(body, u8::from(created));
+        }
+        op::TUPDATE => {
+            let name = codec::read_name(&mut rd)?;
+            let family = tensor_family(shared, &name)?;
+            let key = codec::read_mode_key(&mut rd, &family.dims)?;
+            let w = rd.f64()?;
+            ensure!(w.is_finite(), "non-finite update weight");
+            shared.store.tensor_update(&name, &key, w)?;
+        }
+        op::TUPDATE_BATCH => {
+            let name = codec::read_name(&mut rd)?;
+            let family = tensor_family(shared, &name)?;
+            let count = rd.u32()? as usize;
+            ensure!(count <= MAX_BATCH_UPDATES, "tensor batch of {count} updates exceeds cap");
+            // decode + validate everything before applying anything —
+            // the all-or-nothing rule of the 2-D batch path
+            let mut keys = Vec::with_capacity(count * family.order());
+            let mut ws = Vec::with_capacity(count);
+            for _ in 0..count {
+                let key = codec::read_mode_key(&mut rd, &family.dims)?;
+                keys.extend_from_slice(&key);
+                let w = rd.f64()?;
+                ensure!(w.is_finite(), "non-finite update weight in batch");
+                ws.push(w);
+            }
+            shared.store.tensor_update_batch(&name, &keys, &ws)?;
+            codec::put_u32(body, count as u32);
+        }
+        op::TQUERY => {
+            let name = codec::read_name(&mut rd)?;
+            let family = tensor_family(shared, &name)?;
+            let key = codec::read_mode_key(&mut rd, &family.dims)?;
+            codec::put_f64(body, shared.store.tensor_query(&name, &key)?);
+        }
+        op::MARGINAL => {
+            let name = codec::read_name(&mut rd)?;
+            let family = tensor_family(shared, &name)?;
+            let mut spec = Vec::with_capacity(family.order());
+            for (k, &n) in family.dims.iter().enumerate() {
+                match rd.u8()? {
+                    0 => spec.push(None),
+                    1 => {
+                        let i = rd.u32()? as usize;
+                        ensure!(i < n, "marginal mode {k} index {i} out of range (dim {n})");
+                        spec.push(Some(i));
+                    }
+                    other => bail!("bad marginal mode flag {other}"),
+                }
+            }
+            codec::put_f64(body, shared.store.tensor_marginal(&name, &spec)?);
+        }
+        op::SLICE_TOPK => {
+            let name = codec::read_name(&mut rd)?;
+            let mode = rd.u32()? as usize;
+            let index = rd.u32()? as usize;
+            let k = rd.u32()? as usize;
+            ensure!(k <= MAX_TOPK, "slice top-k of {k} exceeds cap {MAX_TOPK}");
+            let entries = shared.store.tensor_slice_top_k(&name, mode, index, k)?;
+            codec::put_u32(body, u32::try_from(entries.len()).expect("entry count fits u32"));
+            for (key, w) in &entries {
+                codec::put_mode_key(body, key);
+                codec::put_f64(body, *w);
+            }
+        }
+        op::CONTRACT => {
+            let a_name = codec::read_name(&mut rd)?;
+            let b_name = codec::read_name(&mut rd)?;
+            let n = rd.u8()? as usize;
+            let mut modes = Vec::with_capacity(n);
+            for _ in 0..n {
+                modes.push(rd.u8()? as usize);
+            }
+            let want_dense = rd.u8()? != 0;
+            match shared.store.tensor_contract(&a_name, &b_name, &modes)? {
+                ContractOutput::Scalar(v) => {
+                    codec::put_u8(body, 0);
+                    codec::put_f64(body, v);
+                }
+                ContractOutput::Sketch(cs) if want_dense => {
+                    let (dims, vals) = cs.to_dense()?;
+                    codec::put_u8(body, 2);
+                    codec::put_u8(body, u8::try_from(dims.len()).expect("order fits u8"));
+                    for &d in &dims {
+                        codec::put_u32(body, u32::try_from(d).expect("dim fits u32"));
+                    }
+                    codec::put_u32(body, u32::try_from(vals.len()).expect("len fits u32"));
+                    for v in vals {
+                        codec::put_f64(body, v);
+                    }
+                }
+                ContractOutput::Sketch(cs) => {
+                    codec::put_u8(body, 1);
+                    cs.encode(body);
+                }
+            }
+        }
+        op::TMERGE_ORIGIN => {
+            let origin = rd.u64()?;
+            let seq = rd.u64()?;
+            let name = codec::read_name(&mut rd)?;
+            let full = HcsStream::decode(&mut rd)?;
+            for r in 0..full.d {
+                ensure!(
+                    full.table(r).iter().all(|v| v.is_finite()),
+                    "tensor replication frame contains non-finite counters"
+                );
+            }
+            let applied = shared.store.tensor_apply_origin_merge(origin, &name, seq, full)?;
+            if applied {
+                shared.repl.note_applied();
+            } else {
+                shared.repl.note_deduped();
+            }
+            codec::put_u8(body, u8::from(applied));
+        }
         op::SHUTDOWN => return Ok(true),
         other => bail!("unknown opcode {other}"),
     }
     Ok(false)
+}
+
+fn tensor_family(shared: &Shared, name: &str) -> Result<TensorFamily> {
+    shared.store.tensor_family(name).ok_or_else(|| anyhow!("unknown tensor {name:?}"))
 }
 
 fn put_entries(out: &mut Vec<u8>, entries: &[(usize, usize, f64)]) {
@@ -884,6 +1047,168 @@ mod tests {
         }
         assert!(closed, "connection kept being served after shutdown");
         server.wait();
+    }
+
+    fn test_tfam() -> TensorFamily {
+        TensorFamily { dims: vec![20, 16, 12], sketch_dims: vec![6, 5, 4], d: 3, seed: 42 }
+    }
+
+    #[test]
+    fn tensor_rpcs_roundtrip_against_in_process_oracle() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        let oracle = ShardedStore::new(test_cfg());
+        oracle.tensor_create("act", &test_tfam()).unwrap();
+        assert!(client.tensor_create("act", &test_tfam()).unwrap());
+        assert!(!client.tensor_create("act", &test_tfam()).unwrap(), "re-create not a no-op");
+        let mut other = test_tfam();
+        other.d = 5;
+        let err = client.tensor_create("act", &other).unwrap_err().to_string();
+        assert!(err.contains("family"), "unexpected error: {err}");
+
+        let mut rng = Pcg64::new(11);
+        let mut keys = Vec::new();
+        let mut ws = Vec::new();
+        for _ in 0..120 {
+            let key = [
+                rng.gen_range(20) as usize,
+                rng.gen_range(16) as usize,
+                rng.gen_range(12) as usize,
+            ];
+            let w = (1 + rng.gen_range(9)) as f64;
+            keys.extend_from_slice(&key);
+            ws.push(w);
+        }
+        // half singly, half batched
+        for (key, &w) in keys.chunks_exact(3).zip(ws.iter()).take(60) {
+            client.tensor_update("act", key, w).unwrap();
+        }
+        client.tensor_update_batch("act", &keys[180..], &ws[60..]).unwrap();
+        oracle.tensor_update_batch("act", &keys, &ws).unwrap();
+
+        for _ in 0..60 {
+            let key = [
+                rng.gen_range(20) as usize,
+                rng.gen_range(16) as usize,
+                rng.gen_range(12) as usize,
+            ];
+            assert_eq!(
+                client.tensor_query("act", &key).unwrap().to_bits(),
+                oracle.tensor_query("act", &key).unwrap().to_bits(),
+                "key {key:?}"
+            );
+        }
+        let spec = [Some(3), None, None];
+        assert_eq!(
+            client.tensor_marginal("act", &spec).unwrap().to_bits(),
+            oracle.tensor_marginal("act", &spec).unwrap().to_bits()
+        );
+        let got = client.tensor_slice_topk("act", 0, 3, 5).unwrap();
+        let want = oracle.tensor_slice_top_k("act", 0, 3, 5).unwrap();
+        assert_eq!(got.len(), want.len());
+        for ((gk, gw), (wk, ww)) in got.iter().zip(want.iter()) {
+            assert_eq!(gk, wk);
+            assert_eq!(gw.to_bits(), ww.to_bits());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn tensor_contract_over_the_wire_matches_local() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        client.tensor_create("a", &test_tfam()).unwrap();
+        client.tensor_create("b", &test_tfam()).unwrap();
+        let mut la = test_tfam().fresh();
+        let mut lb = test_tfam().fresh();
+        let mut rng = Pcg64::new(13);
+        for _ in 0..40 {
+            let key = [
+                rng.gen_range(20) as usize,
+                rng.gen_range(16) as usize,
+                rng.gen_range(12) as usize,
+            ];
+            let w = (1 + rng.gen_range(9)) as f64;
+            client.tensor_update("a", &key, w).unwrap();
+            la.update(&key, w);
+            let key2 = [
+                rng.gen_range(20) as usize,
+                rng.gen_range(16) as usize,
+                rng.gen_range(12) as usize,
+            ];
+            client.tensor_update("b", &key2, w).unwrap();
+            lb.update(&key2, w);
+        }
+        // full contraction: scalar, bit-identical to the local result
+        match client.tensor_contract("a", "b", &[0, 1, 2], false).unwrap() {
+            crate::store::TensorContraction::Scalar(v) => {
+                assert_eq!(
+                    v.to_bits(),
+                    crate::store::tensor::contract_scalar(&la, &lb).to_bits()
+                );
+            }
+            other => panic!("expected scalar, got {other:?}"),
+        }
+        // partial contraction: sketch result queryable client-side
+        let local = match crate::store::tensor::contract(&la, &lb, &[1, 2]).unwrap() {
+            ContractOutput::Sketch(cs) => cs,
+            ContractOutput::Scalar(_) => unreachable!(),
+        };
+        match client.tensor_contract("a", "b", &[1, 2], false).unwrap() {
+            crate::store::TensorContraction::Sketch(cs) => {
+                assert_eq!(
+                    cs.query(&[3], &[7]).to_bits(),
+                    local.query(&[3], &[7]).to_bits()
+                );
+            }
+            other => panic!("expected sketch, got {other:?}"),
+        }
+        // dense expansion matches the local densification
+        let (ldims, lvals) = local.to_dense().unwrap();
+        match client.tensor_contract("a", "b", &[1, 2], true).unwrap() {
+            crate::store::TensorContraction::Dense { dims, values } => {
+                assert_eq!(dims, ldims);
+                assert_eq!(values.len(), lvals.len());
+                for (a, b) in values.iter().zip(lvals.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected dense, got {other:?}"),
+        }
+        // unknown tensors / bad modes are framed errors
+        assert!(client.tensor_contract("a", "ghost", &[0], false).is_err());
+        assert!(client.tensor_contract("a", "b", &[9], false).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn retried_tensor_origin_merge_is_a_no_op_and_auto_creates() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        let mut full = test_tfam().fresh();
+        full.update(&[1, 2, 3], 5.0);
+        // the receiver has never heard of "act": the frame's family
+        // auto-creates it (replicas learn tensors from their peers)
+        assert!(client.tensor_merge_origin(0xAB, 1, "act", &full).unwrap());
+        assert!(!client.tensor_merge_origin(0xAB, 1, "act", &full).unwrap(), "retry applied");
+        assert_eq!(
+            client.tensor_query("act", &[1, 2, 3]).unwrap().to_bits(),
+            full.query(&[1, 2, 3]).to_bits(),
+            "retried frame double-counted"
+        );
+        // a later full ship lands only the remainder
+        full.update(&[4, 5, 6], 2.0);
+        assert!(client.tensor_merge_origin(0xAB, 2, "act", &full).unwrap());
+        assert_eq!(
+            client.tensor_query("act", &[4, 5, 6]).unwrap().to_bits(),
+            full.query(&[4, 5, 6]).to_bits()
+        );
+        assert_eq!(
+            client.tensor_query("act", &[1, 2, 3]).unwrap().to_bits(),
+            full.query(&[1, 2, 3]).to_bits(),
+            "full ship double-counted earlier mass"
+        );
+        server.shutdown();
     }
 
     #[test]

@@ -40,10 +40,14 @@
 
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
+use super::tensor::contract::ContractOutput;
+use super::tensor::hcs::HcsStream;
+use super::tensor::registry::{TensorFamily, TensorRegistry};
 use crate::rng::SplitMix64;
 use crate::sketch::stream::StreamSketch;
 use anyhow::{ensure, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
@@ -257,6 +261,12 @@ pub struct ShardedStore {
     /// unchanged stamp means "nothing new to ship".
     origin_version: AtomicU64,
     scan: Mutex<ScanCache>,
+    /// the HCS tensor plane: named multi-mode sketches + their
+    /// replication channel table ([`super::tensor::registry`]). One
+    /// lock domain — tensor ops never touch the 2-D shard locks, and
+    /// the only place both are held is [`ShardedStore::encode_into`]
+    /// (shards first, then this — the store-wide lock order).
+    tensors: Mutex<TensorRegistry>,
     /// rotation-storm fallbacks taken by the optimistic readers
     /// ([`ShardedStore::point_query`] / [`ShardedStore::stats`]) —
     /// diagnostics, and how the tests prove the lock-all path runs
@@ -293,6 +303,7 @@ impl ShardedStore {
             replicate: AtomicBool::new(false),
             origin_version: AtomicU64::new(0),
             scan,
+            tensors: Mutex::new(TensorRegistry::new()),
             lockall_fallbacks: AtomicU64::new(0),
             router_salt,
             probe,
@@ -697,6 +708,107 @@ impl ShardedStore {
         (self.origin_version.load(Ordering::SeqCst), out)
     }
 
+    // ---------- tensor plane ----------
+
+    fn tensor_lock(&self) -> MutexGuard<'_, TensorRegistry> {
+        self.tensors.lock().expect("tensor registry lock")
+    }
+
+    /// Register a named tensor. Idempotent on an identical family;
+    /// returns `Ok(true)` iff the tensor was newly created.
+    pub fn tensor_create(&self, name: &str, family: &TensorFamily) -> Result<bool> {
+        self.tensor_lock().create(name, family)
+    }
+
+    /// One multi-mode stream item. With replication on it also lands in
+    /// the tensor's origin accumulator (same fused fan-out discipline
+    /// as the 2-D [`ShardedStore::update`]).
+    pub fn tensor_update(&self, name: &str, key: &[usize], w: f64) -> Result<()> {
+        let originate = self.replicate.load(Ordering::Relaxed);
+        self.tensor_lock().update(name, key, w, originate)
+    }
+
+    /// A whole multi-mode batch through the fused multi-key kernel
+    /// (`ws.len()` items, item `i`'s key at `keys[i·order ..]`).
+    pub fn tensor_update_batch(&self, name: &str, keys: &[usize], ws: &[f64]) -> Result<()> {
+        let originate = self.replicate.load(Ordering::Relaxed);
+        self.tensor_lock().update_batch(name, keys, ws, originate)
+    }
+
+    /// Median-of-d point estimate at a multi-mode key.
+    pub fn tensor_query(&self, name: &str, key: &[usize]) -> Result<f64> {
+        self.tensor_lock().query(name, key)
+    }
+
+    /// Marginal over any mode subset, computed on the sketch.
+    pub fn tensor_marginal(&self, name: &str, spec: &[Option<usize>]) -> Result<f64> {
+        self.tensor_lock().marginal(name, spec)
+    }
+
+    /// Top-k keys within a fixed slice of one mode.
+    pub fn tensor_slice_top_k(
+        &self,
+        name: &str,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<(Vec<usize>, f64)>> {
+        self.tensor_lock().slice_top_k(name, mode, index, k)
+    }
+
+    /// Sketched contraction between two stored same-family tensors.
+    pub fn tensor_contract(
+        &self,
+        a_name: &str,
+        b_name: &str,
+        contracted: &[usize],
+    ) -> Result<ContractOutput> {
+        self.tensor_lock().contract(a_name, b_name, contracted)
+    }
+
+    /// Family of a registered tensor (`None` if unknown) — the wire
+    /// layer fetches this to decode key payloads with full validation.
+    pub fn tensor_family(&self, name: &str) -> Option<TensorFamily> {
+        self.tensor_lock().family(name)
+    }
+
+    /// Registered tensor names, in catalog order.
+    pub fn tensor_names(&self) -> Vec<String> {
+        self.tensor_lock().names()
+    }
+
+    /// Tensor-plane origin-version stamp — the replicator's cheap
+    /// "anything new to ship on the tensor plane?" probe. Only
+    /// originating mutations move it (mirrors
+    /// [`ShardedStore::origin_version`]).
+    pub fn tensor_version(&self) -> u64 {
+        self.tensor_lock().version()
+    }
+
+    /// Tensors with unshipped locally-originated mass relative to the
+    /// caller's per-tensor acked map: `(name, version, cumulative
+    /// origin sketch)` triples, each shipped as one full-state frame.
+    pub fn tensor_dirty_origins(
+        &self,
+        acked: &HashMap<String, u64>,
+    ) -> Vec<(String, u64, HcsStream)> {
+        self.tensor_lock().dirty_origins(acked)
+    }
+
+    /// Apply one tensor replication frame (full cumulative state from a
+    /// peer). Returns `Ok(true)` if mass was applied, `Ok(false)` on a
+    /// dedup. Never re-originates and is never WAL-logged — see the
+    /// registry docs.
+    pub fn tensor_apply_origin_merge(
+        &self,
+        origin: u64,
+        name: &str,
+        seq: u64,
+        full: HcsStream,
+    ) -> Result<bool> {
+        self.tensor_lock().apply_origin_merge(origin, name, seq, full)
+    }
+
     /// Slide the window one epoch: in every shard the expiring slot is
     /// subtracted out of the running total and cleared for reuse.
     ///
@@ -742,12 +854,16 @@ impl ShardedStore {
     /// retried while rotations interleave with the per-shard sums, with
     /// the same bounded (and counted) fall-back to a fully-locked read.
     /// Already allocation-free — the sums are scalar accumulators.
+    /// Includes the tensor plane's update count (tensors never expire,
+    /// so the total stays monotone for a rotation-free workload — the
+    /// crash harness's prefix-inference invariant).
     pub fn stats(&self) -> StoreStats {
+        let tensor_updates = self.tensor_lock().updates();
         let mk = |epoch: u64, updates: u64| StoreStats {
             shards: self.cfg.shards,
             window: self.cfg.window,
             epoch,
-            updates,
+            updates: updates + tensor_updates,
         };
         for _ in 0..EPOCH_RETRY_LIMIT {
             let e0 = self.epoch();
@@ -797,6 +913,12 @@ impl ShardedStore {
             }
             origin.encode(out);
         }
+        // tensor plane (snapshot format v5): the whole catalog + its
+        // replication channel table, appended after the 2-D image so
+        // every pre-existing byte offset into the encoding stays put.
+        // The registry lock is taken while the shard locks are held —
+        // the one sanctioned shards→registry order (see the field doc).
+        self.tensor_lock().encode_into(out);
     }
 
     /// Bit-exact inverse of [`ShardedStore::encode_into`].
@@ -842,6 +964,8 @@ impl ShardedStore {
             ensure!(cfg.matches(&origin), "corrupt snapshot: origin sketch family mismatch");
             shards[0].get_mut().expect("shard lock").origin = origin;
         }
+        // tensor plane (v5): bit-exact catalog + channel table
+        let tensors = TensorRegistry::decode_from(rd)?;
         let router_salt = Self::derive_salt(cfg.seed);
         let probe = cfg.fresh_sketch();
         let scan = ScanCache::empty(&cfg);
@@ -853,6 +977,7 @@ impl ShardedStore {
             replicate: AtomicBool::new(replicate),
             origin_version: AtomicU64::new(origin_version),
             scan,
+            tensors: Mutex::new(tensors),
             lockall_fallbacks: AtomicU64::new(0),
             router_salt,
             probe,
@@ -1358,6 +1483,49 @@ mod tests {
         let pg = ShardedStore::decode_from(&mut Reader::new(&pb)).unwrap();
         assert!(!pg.replication_enabled());
         assert_eq!(pg.origin_snapshot().1.updates, 0);
+    }
+
+    #[test]
+    fn tensor_plane_rides_in_the_store_snapshot() {
+        use super::super::tensor::registry::TensorFamily;
+        let cfg = small_cfg(2, 2);
+        let store = ShardedStore::new(cfg);
+        let fam = TensorFamily {
+            dims: vec![20, 16, 12],
+            sketch_dims: vec![6, 5, 4],
+            d: 3,
+            seed: 42,
+        };
+        assert!(store.tensor_create("t", &fam).unwrap());
+        assert!(!store.tensor_create("t", &fam).unwrap(), "re-create must be a no-op");
+        store.tensor_update("t", &[1, 2, 3], 5.0).unwrap();
+        store
+            .tensor_update_batch("t", &[4, 5, 6, 1, 2, 3], &[2.0, 1.0])
+            .unwrap();
+        store.update(0, 0, 9.0); // 2-D plane still works alongside
+        assert_eq!(store.tensor_query("t", &[1, 2, 3]).unwrap(), 6.0);
+        // STATS counts both planes
+        assert_eq!(store.stats().updates, 4);
+        // replication off: nothing accumulates for shipping
+        assert!(store.tensor_dirty_origins(&HashMap::new()).is_empty());
+
+        let mut bytes = Vec::new();
+        store.encode_into(&mut bytes);
+        let got = ShardedStore::decode_from(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got.tensor_family("t"), Some(fam));
+        assert_eq!(
+            got.tensor_query("t", &[1, 2, 3]).unwrap().to_bits(),
+            store.tensor_query("t", &[1, 2, 3]).unwrap().to_bits()
+        );
+        assert_eq!(got.stats().updates, store.stats().updates);
+
+        // replication on: tensor writes feed the origin accumulator
+        store.set_replication(true);
+        store.tensor_update("t", &[7, 8, 9], 4.0).unwrap();
+        let dirty = store.tensor_dirty_origins(&HashMap::new());
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].2.updates, 1, "pre-replication mass must not ship");
+        assert_eq!(store.tensor_version(), dirty[0].1);
     }
 
     #[test]

@@ -1,0 +1,477 @@
+//! Sketched tensor contraction between two stored same-family
+//! [`HcsStream`]s — the CONTRACT RPC's compute kernel, FCS-style (Cao &
+//! Liu, "Efficient Tensor Contraction via Fast Count Sketch"): the
+//! contraction is evaluated **on the sketches**, never on dense data.
+//!
+//! Both operands share one hash family (the registry only admits
+//! CONTRACT between same-family tensors), so for every contracted mode
+//! the two tables are aligned bucket-by-bucket and
+//!
+//! ```text
+//! Σ_{i_S} A[i_keep, i_S] · B[j_keep, i_S]
+//!   ≈ Σ_{t_S} HCS(A)[t_keep, t_S] · HCS(B)[u_keep, t_S]
+//! ```
+//!
+//! per repeat: the diagonal terms survive with sign² = 1 and every
+//! cross term carries an odd sign product with zero expectation. With
+//! **all** modes contracted this is the classic count-sketch inner
+//! product estimator — unbiased, with variance `O(‖A‖² ‖B‖² / Π m_k)`
+//! per repeat (the Ahle–Knudsen-style bound `benches/bench_tensor.rs`
+//! and the acceptance test assert); the median over the d repeats
+//! tightens the tail as usual.
+//!
+//! A **partial** contraction returns a [`ContractedSketch`]: the d
+//! contracted tables over `[kept A buckets] × [kept B buckets]`, still
+//! a sketch — point estimates re-apply the kept-mode signs and take the
+//! median, and a dense materialization is just that estimate at every
+//! kept key pair. One honest caveat, documented rather than hidden:
+//! because the kept modes of both sides use the *same* hash pair (the
+//! price of keeping every stored tensor in one mergeable family), the
+//! estimator picks up an `O(1/m_keep)` diagonal bias on entries whose
+//! A-side and B-side indices collide under `h` — exact two-sided
+//! independence would need a second family per tensor. The scalar path
+//! has no such term.
+
+use super::hcs::{row_major_strides, HcsStream, MAX_ORDER};
+use crate::hash::{HashSeeds, ModeHash};
+use crate::store::codec::{self, Reader};
+use crate::store::mergeable::MAX_DECODE_ELEMS;
+use crate::util::stats::median_inplace;
+use anyhow::{bail, ensure, Result};
+
+/// Largest dense materialization [`ContractedSketch::to_dense`] will
+/// produce (f64 elements) — a CONTRACT RPC asking for a dense result
+/// beyond it is rejected instead of allocating unboundedly.
+pub const CONTRACT_DENSE_CAP: usize = 1 << 20;
+
+/// Result of [`contract`]: a scalar when every mode was contracted, a
+/// sketch of the contracted tensor otherwise.
+#[derive(Clone, Debug)]
+pub enum ContractOutput {
+    Scalar(f64),
+    Sketch(ContractedSketch),
+}
+
+/// Contract `a` and `b` over the mode subset `contracted` (mode ids of
+/// the shared family; each used once). Requires `a.same_family(b)`.
+pub fn contract(a: &HcsStream, b: &HcsStream, contracted: &[usize]) -> Result<ContractOutput> {
+    ensure!(a.same_family(b), "CONTRACT requires same-family sketches");
+    ensure!(!contracted.is_empty(), "CONTRACT needs at least one contracted mode");
+    let order = a.order();
+    let mut seen = vec![false; order];
+    for &k in contracted {
+        ensure!(k < order, "contracted mode {k} out of order {order}");
+        ensure!(!seen[k], "contracted mode {k} repeated");
+        seen[k] = true;
+    }
+    if contracted.len() == order {
+        return Ok(ContractOutput::Scalar(contract_scalar(a, b)));
+    }
+    let kept: Vec<usize> = (0..order).filter(|k| !seen[*k]).collect();
+    Ok(ContractOutput::Sketch(contract_partial(a, b, &kept, &seen)))
+}
+
+/// Full contraction `⟨A, B⟩ = Σ_i A[i]·B[i]`: per repeat the dot
+/// product of the two aligned tables, median over repeats. Unbiased.
+pub fn contract_scalar(a: &HcsStream, b: &HcsStream) -> f64 {
+    assert!(a.same_family(b), "CONTRACT requires same-family sketches");
+    let mut est: Vec<f64> = (0..a.d)
+        .map(|r| a.table(r).iter().zip(b.table(r).iter()).map(|(x, y)| x * y).sum())
+        .collect();
+    median_inplace(&mut est)
+}
+
+/// Partial contraction: per repeat, reshape both tables to
+/// `[kept buckets × contracted buckets]` matrices and multiply
+/// `A · Bᵀ`, giving the contracted table over
+/// `[kept A buckets] × [kept B buckets]`.
+fn contract_partial(
+    a: &HcsStream,
+    b: &HcsStream,
+    kept: &[usize],
+    contracted: &[bool],
+) -> ContractedSketch {
+    let kept_m: Vec<usize> = kept.iter().map(|&k| a.sketch_dims()[k]).collect();
+    let ka: usize = kept_m.iter().product();
+    let s_total: usize = a
+        .sketch_dims()
+        .iter()
+        .enumerate()
+        .filter(|(k, _)| contracted[*k])
+        .map(|(_, &m)| m)
+        .product();
+    // per full-table offset, the (kept combo, contracted combo) split —
+    // computed once, shared by both operands and every repeat
+    let table_len = a.table(0).len();
+    let mut split = Vec::with_capacity(table_len);
+    {
+        let order = a.order();
+        let mut idx = vec![0usize; order];
+        let kept_strides = row_major_strides(&kept_m);
+        let s_dims: Vec<usize> = (0..order).filter(|&k| contracted[k]).map(|k| a.sketch_dims()[k]).collect();
+        let s_strides = row_major_strides(&s_dims);
+        loop {
+            let mut kk = 0usize;
+            for (slot, &k) in kept.iter().enumerate() {
+                kk += idx[k] * kept_strides[slot];
+            }
+            let mut ss = 0usize;
+            let mut slot = 0usize;
+            for k in 0..order {
+                if contracted[k] {
+                    ss += idx[k] * s_strides[slot];
+                    slot += 1;
+                }
+            }
+            split.push((kk, ss));
+            let mut carry = true;
+            for k in (0..order).rev() {
+                idx[k] += 1;
+                if idx[k] < a.sketch_dims()[k] {
+                    carry = false;
+                    break;
+                }
+                idx[k] = 0;
+            }
+            if carry {
+                break;
+            }
+        }
+    }
+    let mut tables = Vec::with_capacity(a.d);
+    for r in 0..a.d {
+        // reshape to [kept × contracted] row-major
+        let mut amat = vec![0.0; ka * s_total];
+        let mut bmat = vec![0.0; ka * s_total];
+        for (off, &(kk, ss)) in split.iter().enumerate() {
+            amat[kk * s_total + ss] = a.table(r)[off];
+            bmat[kk * s_total + ss] = b.table(r)[off];
+        }
+        // C = A · Bᵀ over the contracted axis
+        let mut c = vec![0.0; ka * ka];
+        for i in 0..ka {
+            let arow = &amat[i * s_total..(i + 1) * s_total];
+            for j in 0..ka {
+                let brow = &bmat[j * s_total..(j + 1) * s_total];
+                c[i * ka + j] = arow.iter().zip(brow.iter()).map(|(x, y)| x * y).sum();
+            }
+        }
+        tables.push(c);
+    }
+    let kept_n: Vec<usize> = kept.iter().map(|&k| a.dims()[k]).collect();
+    let modes = (0..a.d)
+        .map(|r| kept.iter().map(|&k| a.mode_hash(r, k).clone()).collect())
+        .collect();
+    ContractedSketch {
+        kept_modes: kept.to_vec(),
+        kept_dims: kept_n,
+        kept_sketch_dims: kept_m,
+        d: a.d,
+        seed: a.seed,
+        modes,
+        tables,
+    }
+}
+
+/// The sketch of a partially-contracted tensor `C[i_keep, j_keep] =
+/// Σ_{i_S} A[i_keep, i_S]·B[j_keep, i_S]`: d tables over
+/// `[kept buckets]²`, queryable like any HCS (kept-mode signs on both
+/// sides, median over repeats).
+#[derive(Clone, Debug)]
+pub struct ContractedSketch {
+    /// kept mode ids of the operands' shared family
+    pub kept_modes: Vec<usize>,
+    /// per kept mode: key universe `n_k`
+    pub kept_dims: Vec<usize>,
+    /// per kept mode: table extent `m_k`
+    pub kept_sketch_dims: Vec<usize>,
+    pub d: usize,
+    pub seed: u64,
+    /// `modes[r][slot]` — hash pair of kept mode `kept_modes[slot]`
+    modes: Vec<Vec<ModeHash>>,
+    /// `[d][Π m_kept · Π m_kept]`, row-major `[a-side, b-side]`
+    tables: Vec<Vec<f64>>,
+}
+
+impl ContractedSketch {
+    /// Kept-bucket combo and sign for one side's key.
+    fn side(&self, r: usize, key: &[usize]) -> (usize, f64) {
+        let strides = row_major_strides(&self.kept_sketch_dims);
+        let mut b = 0usize;
+        let mut s = 1.0;
+        for (slot, &i) in key.iter().enumerate() {
+            b += self.modes[r][slot].h(i) * strides[slot];
+            s *= self.modes[r][slot].s(i);
+        }
+        (b, s)
+    }
+
+    /// Median-of-d estimate of `C[key_a, key_b]` (one index per kept
+    /// mode, in `kept_modes` order, per side).
+    pub fn query(&self, key_a: &[usize], key_b: &[usize]) -> f64 {
+        assert_eq!(key_a.len(), self.kept_modes.len());
+        assert_eq!(key_b.len(), self.kept_modes.len());
+        for (slot, (&i, &j)) in key_a.iter().zip(key_b.iter()).enumerate() {
+            assert!(i < self.kept_dims[slot] && j < self.kept_dims[slot]);
+        }
+        let ka: usize = self.kept_sketch_dims.iter().product();
+        let mut est: Vec<f64> = (0..self.d)
+            .map(|r| {
+                let (ba, sa) = self.side(r, key_a);
+                let (bb, sb) = self.side(r, key_b);
+                sa * sb * self.tables[r][ba * ka + bb]
+            })
+            .collect();
+        median_inplace(&mut est)
+    }
+
+    /// Dense materialization: the estimate at every kept key pair,
+    /// dims `[kept A dims…, kept B dims…]` row-major. Rejected above
+    /// [`CONTRACT_DENSE_CAP`] elements.
+    pub fn to_dense(&self) -> Result<(Vec<usize>, Vec<f64>)> {
+        let per_side: usize = self.kept_dims.iter().product();
+        let total = per_side.saturating_mul(per_side);
+        ensure!(
+            total <= CONTRACT_DENSE_CAP,
+            "dense contraction of {total} elements exceeds cap {CONTRACT_DENSE_CAP}"
+        );
+        let mut dims = self.kept_dims.clone();
+        dims.extend_from_slice(&self.kept_dims);
+        let mut data = Vec::with_capacity(total);
+        let mut key_a = vec![0usize; self.kept_dims.len()];
+        'outer_a: loop {
+            let mut key_b = vec![0usize; self.kept_dims.len()];
+            loop {
+                data.push(self.query(&key_a, &key_b));
+                if !advance(&mut key_b, &self.kept_dims) {
+                    break;
+                }
+            }
+            if !advance(&mut key_a, &self.kept_dims) {
+                break 'outer_a;
+            }
+        }
+        Ok((dims, data))
+    }
+
+    /// Wire form: kept-mode metadata plus the d contracted tables; the
+    /// hash pairs are rebuilt from the seed on decode.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_u8(out, u8::try_from(self.kept_modes.len()).expect("order fits u8"));
+        for &k in &self.kept_modes {
+            codec::put_u8(out, u8::try_from(k).expect("mode id fits u8"));
+        }
+        for &n in &self.kept_dims {
+            codec::put_u32(out, u32::try_from(n).expect("dim fits u32"));
+        }
+        for &m in &self.kept_sketch_dims {
+            codec::put_u32(out, u32::try_from(m).expect("sketch dim fits u32"));
+        }
+        codec::put_u32(out, u32::try_from(self.d).expect("d fits u32"));
+        codec::put_u64(out, self.seed);
+        for t in &self.tables {
+            for &v in t {
+                codec::put_f64(out, v);
+            }
+        }
+    }
+
+    /// Bit-exact inverse of [`ContractedSketch::encode`].
+    pub fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let n_kept = rd.u8()? as usize;
+        ensure!((1..=MAX_ORDER).contains(&n_kept), "kept-mode count {n_kept} out of range");
+        let mut kept_modes = Vec::with_capacity(n_kept);
+        for _ in 0..n_kept {
+            let k = rd.u8()? as usize;
+            ensure!(k < MAX_ORDER, "kept mode id {k} out of range");
+            if kept_modes.contains(&k) {
+                bail!("kept mode id {k} repeated");
+            }
+            kept_modes.push(k);
+        }
+        let mut kept_dims = Vec::with_capacity(n_kept);
+        for _ in 0..n_kept {
+            let n = rd.u32()? as usize;
+            ensure!(n > 0, "corrupt contracted sketch: zero kept dim");
+            kept_dims.push(n);
+        }
+        let mut kept_sketch_dims = Vec::with_capacity(n_kept);
+        for _ in 0..n_kept {
+            let m = rd.u32()? as usize;
+            ensure!(m > 0, "corrupt contracted sketch: zero kept sketch dim");
+            kept_sketch_dims.push(m);
+        }
+        let d = rd.u32()? as usize;
+        ensure!(d >= 1, "corrupt contracted sketch: d = 0");
+        let ka: usize = kept_sketch_dims.iter().product();
+        let elems = d.saturating_mul(ka).saturating_mul(ka);
+        ensure!(elems <= MAX_DECODE_ELEMS, "contracted sketch of {elems} counters exceeds cap");
+        let seed = rd.u64()?;
+        let seeds = HashSeeds::new(seed);
+        let modes: Vec<Vec<ModeHash>> = (0..d)
+            .map(|r| {
+                kept_modes
+                    .iter()
+                    .zip(kept_dims.iter().zip(kept_sketch_dims.iter()))
+                    .map(|(&k, (&n, &m))| ModeHash::new(n, m, seeds.seed_for(r, k)))
+                    .collect()
+            })
+            .collect();
+        let mut tables = Vec::with_capacity(d);
+        for _ in 0..d {
+            let mut t = Vec::with_capacity(ka * ka);
+            for _ in 0..ka * ka {
+                t.push(rd.f64()?);
+            }
+            tables.push(t);
+        }
+        Ok(Self { kept_modes, kept_dims, kept_sketch_dims, d, seed, modes, tables })
+    }
+}
+
+/// Row-major odometer step; false once the key wrapped to all-zero.
+fn advance(key: &mut [usize], dims: &[usize]) -> bool {
+    for k in (0..key.len()).rev() {
+        key[k] += 1;
+        if key[k] < dims[k] {
+            return true;
+        }
+        key[k] = 0;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn offset(strides: &[usize], key: &[usize]) -> usize {
+        key.iter().zip(strides.iter()).map(|(i, s)| i * s).sum()
+    }
+
+    /// Two dense order-3 tensors + their same-family sketches.
+    fn pair(
+        dims: &[usize],
+        mdims: &[usize],
+        d: usize,
+        seed: u64,
+        n_items: usize,
+    ) -> (Vec<f64>, Vec<f64>, HcsStream, HcsStream) {
+        let strides = row_major_strides(dims);
+        let total: usize = dims.iter().product();
+        let (mut da, mut db) = (vec![0.0; total], vec![0.0; total]);
+        let mut a = HcsStream::new(dims, mdims, d, seed);
+        let mut b = HcsStream::new(dims, mdims, d, seed);
+        let mut rng = Pcg64::new(seed ^ 0xABCD);
+        for _ in 0..n_items {
+            let key: Vec<usize> =
+                dims.iter().map(|&n| rng.gen_range(n as u64) as usize).collect();
+            let w = (1 + rng.gen_range(9)) as f64;
+            if rng.uniform() < 0.5 {
+                a.update(&key, w);
+                da[offset(&strides, &key)] += w;
+            } else {
+                b.update(&key, w);
+                db[offset(&strides, &key)] += w;
+            }
+        }
+        (da, db, a, b)
+    }
+
+    #[test]
+    fn scalar_contraction_tracks_the_oracle_inner_product() {
+        let dims = [12, 10, 8];
+        let (da, db, a, b) = pair(&dims, &[10, 8, 8], 7, 3, 4000);
+        let truth: f64 = da.iter().zip(db.iter()).map(|(x, y)| x * y).sum();
+        let ContractOutput::Scalar(est) = contract(&a, &b, &[0, 1, 2]).unwrap() else {
+            panic!("full contraction must be scalar");
+        };
+        let norm: f64 = (da.iter().map(|x| x * x).sum::<f64>()
+            * db.iter().map(|y| y * y).sum::<f64>())
+        .sqrt();
+        // Ahle–Knudsen-style: per-repeat std is O(‖A‖‖B‖/√Πm); allow a
+        // generous constant over the median of d repeats
+        let m: usize = [10usize, 8, 8].iter().product();
+        let bound = 8.0 * norm / (m as f64).sqrt();
+        assert!(
+            (est - truth).abs() <= bound.max(0.05 * truth.abs()),
+            "estimate {est} vs truth {truth} (bound {bound})"
+        );
+    }
+
+    #[test]
+    fn partial_contraction_matches_the_dense_oracle() {
+        let dims = [6usize, 5, 8];
+        let strides = row_major_strides(&dims);
+        let (da, db, a, b) = pair(&dims, &[6, 5, 6], 7, 11, 2500);
+        // contract mode 2, keep modes 0 and 1 on each side
+        let ContractOutput::Sketch(cs) = contract(&a, &b, &[2]).unwrap() else {
+            panic!("partial contraction must return a sketch");
+        };
+        assert_eq!(cs.kept_modes, vec![0, 1]);
+        // oracle C[(i0,i1),(j0,j1)] = Σ_k A[i0,i1,k]·B[j0,j1,k]
+        let oracle = |ka: &[usize], kb: &[usize]| -> f64 {
+            (0..dims[2])
+                .map(|k| {
+                    da[offset(&strides, &[ka[0], ka[1], k])]
+                        * db[offset(&strides, &[kb[0], kb[1], k])]
+                })
+                .sum()
+        };
+        let norm: f64 = (da.iter().map(|x| x * x).sum::<f64>()
+            * db.iter().map(|y| y * y).sum::<f64>())
+        .sqrt();
+        let mut worst: f64 = 0.0;
+        for ka in [[0usize, 0], [3, 2], [5, 4], [1, 3]] {
+            for kb in [[0usize, 1], [2, 2], [4, 0]] {
+                let est = cs.query(&ka, &kb);
+                worst = worst.max((est - oracle(&ka, &kb)).abs());
+            }
+        }
+        // loose bound: kept modes stay hashed, so per-entry noise is
+        // O(‖A‖‖B‖/√m_S) plus the documented O(1/m_keep) bias
+        assert!(worst <= norm, "worst partial-contraction error {worst} vs norm {norm}");
+        // dense materialization is exactly the per-entry estimates
+        let (ddims, data) = cs.to_dense().unwrap();
+        assert_eq!(ddims, vec![6, 5, 6, 5]);
+        let kstr = row_major_strides(&ddims);
+        let est = cs.query(&[3, 2], &[2, 2]);
+        assert_eq!(data[offset(&kstr, &[3, 2, 2, 2])].to_bits(), est.to_bits());
+    }
+
+    #[test]
+    fn contracted_sketch_roundtrips_bit_exact() {
+        let dims = [6usize, 5, 8];
+        let (_, _, a, b) = pair(&dims, &[6, 5, 6], 5, 21, 800);
+        let ContractOutput::Sketch(cs) = contract(&a, &b, &[2]).unwrap() else {
+            panic!("expected sketch");
+        };
+        let mut out = Vec::new();
+        cs.encode(&mut out);
+        let got = ContractedSketch::decode(&mut Reader::new(&out)).unwrap();
+        assert_eq!(got.kept_modes, cs.kept_modes);
+        assert_eq!(got.kept_dims, cs.kept_dims);
+        for ka in [[0usize, 0], [5, 4], [2, 3]] {
+            for kb in [[1usize, 1], [3, 0]] {
+                assert_eq!(got.query(&ka, &kb).to_bits(), cs.query(&ka, &kb).to_bits());
+            }
+        }
+        // truncated frames are rejected
+        let mut trunc = out.clone();
+        trunc.truncate(out.len() - 3);
+        assert!(ContractedSketch::decode(&mut Reader::new(&trunc)).is_err());
+    }
+
+    #[test]
+    fn contract_validates_its_inputs() {
+        let a = HcsStream::new(&[8, 8], &[4, 4], 3, 1);
+        let b = HcsStream::new(&[8, 8], &[4, 4], 3, 2); // different seed
+        assert!(contract(&a, &b, &[0]).is_err());
+        let c = HcsStream::new(&[8, 8], &[4, 4], 3, 1);
+        assert!(contract(&a, &c, &[]).is_err());
+        assert!(contract(&a, &c, &[2]).is_err());
+        assert!(contract(&a, &c, &[0, 0]).is_err());
+        assert!(matches!(contract(&a, &c, &[0, 1]), Ok(ContractOutput::Scalar(_))));
+    }
+}

@@ -1,0 +1,951 @@
+//! [`HcsStream`] — a streaming, mergeable Higher-order Count Sketch of
+//! arbitrary order, the per-tensor engine behind the store's named
+//! tensor registry ([`super::registry`]).
+//!
+//! This is [`crate::sketch::stream::StreamSketch`] generalized from the
+//! fixed 2-D `(i, j)` key space to N modes. Each repeat keeps **one
+//! small hash pair per mode** (`h_k : [n_k] → [m_k]`, `s_k : [n_k] →
+//! {±1}`, the paper's tensor-product family via [`ModeHash`], seeded
+//! exactly like [`crate::sketch::mts::MtsSketcher`] with
+//! `HashSeeds::seed_for(repeat, mode)`), so the hash state is
+//! `Σ_k n_k` entries instead of the `Π_k n_k` a flat count sketch over
+//! the linearized key space would need — the paper's exponential-saving
+//! claim, measured by `benches/bench_tensor.rs`.
+//!
+//! An update at key `(i_1, …, i_N)` lands at bucket `(h_1(i_1), …,
+//! h_N(i_N))` of each repeat's `Π_k m_k` table with sign
+//! `Π_k s_k(i_k)`; a point query reads the bucket back, re-applies the
+//! sign, and takes the median over the `d` repeats. Everything the
+//! store's planes rely on carries over unchanged from `StreamSketch`:
+//!
+//! - the **fused fan-out kernels** ([`HcsStream::update_fanout`] /
+//!   [`HcsStream::update_batch_fanout`]) evaluate each repeat's bucket
+//!   and signed contribution once and apply it to every same-family
+//!   target, so one hash walk can feed a running total *and* an
+//!   origin accumulator (the replication plane's input);
+//! - the **raw-accumulate / finalize split**
+//!   ([`HcsStream::accumulate_raw`] / [`HcsStream::finalize_estimates`])
+//!   sums raw counters across sketches of disjoint substreams and
+//!   applies the signs once, which keeps sharded fan-out point queries
+//!   bit-identical to a single sketch fed the union stream (signed
+//!   zeros included);
+//! - the sticky [`HcsStream::has_deletions`] flag routes the
+//!   marginal-pruned [`HcsStream::slice_top_k`] scan to the dense
+//!   variant once any negative-weight update has been absorbed —
+//!   deletion-cancelled marginals can hide surviving heavy cells;
+//! - [`HcsStream::merge_scaled`] is exact by linearity (merge,
+//!   subtraction, delta shipping).
+//!
+//! Marginals ([`HcsStream::marginal`]) sum out **any mode subset**
+//! directly on the sketch: summing mode k with the per-bucket signed
+//! count `u_k[t] = Σ_{h_k(i)=t} s_k(i)` contracts the table's k-th axis
+//! in O(Π m) per repeat — no decompression, the paper's
+//! "tensor operations on sketched data" served online.
+
+use crate::hash::{HashSeeds, ModeHash};
+use crate::store::codec::{self, Reader};
+use crate::store::mergeable::{MergeableSketch, MAX_DECODE_ELEMS};
+use crate::util::stats::median_inplace;
+use anyhow::{ensure, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Early-exit slack for the pruned [`HcsStream::slice_top_k`] scan:
+/// stop once the current line's marginal estimate, inflated by this
+/// factor, cannot reach the k-th best point estimate found so far
+/// (same constant discipline as `StreamSketch`).
+const TOP_K_SLACK: f64 = 2.0;
+
+/// Hard cap on tensor order. Keys travel with a one-byte order on the
+/// wire, and every per-mode loop is O(order); 16 matches the dense
+/// [`crate::tensor::Tensor`] decode cap.
+pub const MAX_ORDER: usize = 16;
+
+/// d independent `Π m_k`-bucket HCS tables over keys `[n_1]×…×[n_N]`.
+#[derive(Clone, Debug)]
+pub struct HcsStream {
+    /// per-mode key universe `n_k`
+    dims: Vec<usize>,
+    /// per-mode table extent `m_k`
+    sketch_dims: Vec<usize>,
+    pub d: usize,
+    /// root seed the d·N mode hashes were derived from (part of the
+    /// sketch identity: only same-seed sketches are mergeable)
+    pub seed: u64,
+    /// `modes[r][k]` — repeat r's hash pair for mode k
+    modes: Vec<Vec<ModeHash>>,
+    /// row-major strides of `sketch_dims` (shared by every repeat)
+    strides: Vec<usize>,
+    tables: Vec<Vec<f64>>,
+    /// total updates processed
+    pub updates: u64,
+    /// true once any negative-weight update has been absorbed (directly
+    /// or via merge). Sticky; see `StreamSketch::has_deletions` — the
+    /// marginal-pruned slice scan is only sound for non-negative
+    /// streams.
+    pub has_deletions: bool,
+}
+
+/// Min-heap entry for [`HcsStream::slice_top_k`] (ordered by estimate;
+/// key as a deterministic tie-break so `Ord` is total).
+struct TopEntry {
+    est: f64,
+    key: Vec<usize>,
+}
+
+impl PartialEq for TopEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for TopEntry {}
+
+impl PartialOrd for TopEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TopEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.est.total_cmp(&other.est).then_with(|| self.key.cmp(&other.key))
+    }
+}
+
+impl HcsStream {
+    /// One sketch dim per mode; `d ≥ 1` repeats; order in `1..=MAX_ORDER`.
+    pub fn new(dims: &[usize], sketch_dims: &[usize], d: usize, seed: u64) -> Self {
+        assert!(d >= 1, "need at least one repeat");
+        assert_eq!(dims.len(), sketch_dims.len(), "one sketch dim per mode");
+        assert!(!dims.is_empty() && dims.len() <= MAX_ORDER, "order must be in 1..={MAX_ORDER}");
+        assert!(dims.iter().all(|&n| n > 0) && sketch_dims.iter().all(|&m| m > 0));
+        let seeds = HashSeeds::new(seed);
+        let modes: Vec<Vec<ModeHash>> = (0..d)
+            .map(|r| {
+                dims.iter()
+                    .zip(sketch_dims.iter())
+                    .enumerate()
+                    .map(|(k, (&n, &m))| ModeHash::new(n, m, seeds.seed_for(r, k)))
+                    .collect()
+            })
+            .collect();
+        let strides = row_major_strides(sketch_dims);
+        let table_len: usize = sketch_dims.iter().product();
+        Self {
+            dims: dims.to_vec(),
+            sketch_dims: sketch_dims.to_vec(),
+            d,
+            seed,
+            modes,
+            strides,
+            tables: vec![vec![0.0; table_len]; d],
+            updates: 0,
+            has_deletions: false,
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn sketch_dims(&self) -> &[usize] {
+        &self.sketch_dims
+    }
+
+    /// Space used, in f64 counters (`d · Π m_k`).
+    pub fn space(&self) -> usize {
+        self.d * self.tables[0].len()
+    }
+
+    /// Repeat r's table offset for `key` — `Σ_k h_k(i_k)·stride_k`.
+    #[inline]
+    fn bucket(&self, r: usize, key: &[usize]) -> usize {
+        debug_assert_eq!(key.len(), self.order());
+        let hashes = &self.modes[r];
+        let mut b = 0;
+        for (k, &i) in key.iter().enumerate() {
+            debug_assert!(i < self.dims[k], "mode {k} index {i} out of {}", self.dims[k]);
+            b += hashes[k].h(i) * self.strides[k];
+        }
+        b
+    }
+
+    /// Repeat r's sign for `key` — `Π_k s_k(i_k)`.
+    #[inline]
+    fn sign(&self, r: usize, key: &[usize]) -> f64 {
+        let hashes = &self.modes[r];
+        let mut s = 1.0;
+        for (k, &i) in key.iter().enumerate() {
+            s *= hashes[k].s(i);
+        }
+        s
+    }
+
+    /// Process one stream item: multi-mode key with weight `w`.
+    pub fn update(&mut self, key: &[usize], w: f64) {
+        for r in 0..self.d {
+            let b = self.bucket(r, key);
+            let v = self.sign(r, key) * w;
+            self.tables[r][b] += v;
+        }
+        self.updates += 1;
+        if w < 0.0 {
+            self.has_deletions = true;
+        }
+    }
+
+    /// Apply one update to several **same-family** sketches at once,
+    /// evaluating each repeat's bucket and signed contribution a single
+    /// time. The registry's write path fans one update into the running
+    /// tensor *and* its origin accumulator — one hash walk instead of
+    /// two. Bit-identical to calling [`HcsStream::update`] per target.
+    pub fn update_fanout(targets: &mut [&mut HcsStream], key: &[usize], w: f64) {
+        let Some((first, rest)) = targets.split_first_mut() else {
+            return;
+        };
+        debug_assert!(rest.iter().all(|t| first.same_family(t)));
+        for r in 0..first.d {
+            let b = first.bucket(r, key);
+            let v = first.sign(r, key) * w;
+            first.tables[r][b] += v;
+            for t in rest.iter_mut() {
+                t.tables[r][b] += v;
+            }
+        }
+        first.updates += 1;
+        for t in rest.iter_mut() {
+            t.updates += 1;
+        }
+        if w < 0.0 {
+            first.has_deletions = true;
+            for t in rest.iter_mut() {
+                t.has_deletions = true;
+            }
+        }
+    }
+
+    /// Fused multi-key update over a flat key buffer (`keys.len() ==
+    /// ws.len() · order`, item i's key at `keys[i·order ..]` — the wire
+    /// and WAL layout, applied without re-packing). Each repeat's hash
+    /// pairs and counter table are walked once for the whole batch; per
+    /// table, items land in batch order — bit-identical to calling
+    /// [`HcsStream::update`] per item.
+    pub fn update_batch(&mut self, keys: &[usize], ws: &[f64]) {
+        let order = self.order();
+        debug_assert_eq!(keys.len(), ws.len() * order);
+        for r in 0..self.d {
+            for (key, &w) in keys.chunks_exact(order).zip(ws.iter()) {
+                let b = self.bucket(r, key);
+                self.tables[r][b] += self.sign(r, key) * w;
+            }
+        }
+        self.updates += ws.len() as u64;
+        if ws.iter().any(|&w| w < 0.0) {
+            self.has_deletions = true;
+        }
+    }
+
+    /// Batched [`HcsStream::update_fanout`]: the fused table walk of
+    /// [`HcsStream::update_batch`], broadcast to every target.
+    pub fn update_batch_fanout(targets: &mut [&mut HcsStream], keys: &[usize], ws: &[f64]) {
+        let Some((first, rest)) = targets.split_first_mut() else {
+            return;
+        };
+        debug_assert!(rest.iter().all(|t| first.same_family(t)));
+        let order = first.order();
+        debug_assert_eq!(keys.len(), ws.len() * order);
+        for r in 0..first.d {
+            for (key, &w) in keys.chunks_exact(order).zip(ws.iter()) {
+                let b = first.bucket(r, key);
+                let v = first.sign(r, key) * w;
+                first.tables[r][b] += v;
+                for t in rest.iter_mut() {
+                    t.tables[r][b] += v;
+                }
+            }
+        }
+        let n = ws.len() as u64;
+        let deletions = ws.iter().any(|&w| w < 0.0);
+        first.updates += n;
+        if deletions {
+            first.has_deletions = true;
+        }
+        for t in rest.iter_mut() {
+            t.updates += n;
+            if deletions {
+                t.has_deletions = true;
+            }
+        }
+    }
+
+    /// Point query: median-of-d estimate of the total weight at `key`.
+    pub fn query(&self, key: &[usize]) -> f64 {
+        let mut est = vec![0.0; self.d];
+        self.query_scratch(key, &mut est)
+    }
+
+    /// [`HcsStream::query`] into caller-owned scratch (scan paths call
+    /// this per cell; one allocation per scan instead of per key).
+    fn query_scratch(&self, key: &[usize], est: &mut [f64]) -> f64 {
+        debug_assert_eq!(est.len(), self.d);
+        for (r, e) in est.iter_mut().enumerate() {
+            *e = self.sign(r, key) * self.tables[r][self.bucket(r, key)];
+        }
+        median_inplace(est)
+    }
+
+    /// Add this sketch's raw bucket counters for `key` into `acc[r]` —
+    /// no signs yet. Summing raw counters across same-family sketches
+    /// of disjoint substreams and applying the signs once
+    /// ([`HcsStream::finalize_estimates`]) is bit-identical to querying
+    /// the merged sketch, signed zeros included.
+    pub fn accumulate_raw(&self, key: &[usize], acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.d, "accumulator length {} != d {}", acc.len(), self.d);
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a += self.tables[r][self.bucket(r, key)];
+        }
+    }
+
+    /// Turn counters summed by [`HcsStream::accumulate_raw`] into the
+    /// median-of-d point estimate for `key`.
+    pub fn finalize_estimates(&self, key: &[usize], acc: &mut [f64]) -> f64 {
+        assert_eq!(acc.len(), self.d, "accumulator length {} != d {}", acc.len(), self.d);
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a *= self.sign(r, key);
+        }
+        median_inplace(acc)
+    }
+
+    // ---------- marginals ----------
+
+    /// Estimate of the tensor marginal with the given per-mode spec:
+    /// `Some(i_k)` fixes mode k at index `i_k`, `None` sums it out.
+    /// All-`Some` degenerates to the point query; all-`None` estimates
+    /// the total stream mass.
+    ///
+    /// Computed directly on the sketch: summing mode k replaces its
+    /// table axis with the signed bucket totals `u_k[t] =
+    /// Σ_{h_k(i)=t} s_k(i)` — an exact contraction of the estimator,
+    /// O(Π m + Σ n_summed) per repeat, never a dense decompression.
+    /// Unbiased (every per-key estimate is, and expectation is linear).
+    pub fn marginal(&self, spec: &[Option<usize>]) -> f64 {
+        assert_eq!(spec.len(), self.order(), "one spec entry per mode");
+        for (k, s) in spec.iter().enumerate() {
+            if let Some(i) = s {
+                assert!(*i < self.dims[k], "mode {k} index {i} out of {}", self.dims[k]);
+            }
+        }
+        let mut est: Vec<f64> = (0..self.d)
+            .map(|r| {
+                // fixed modes contribute a base offset and a sign; each
+                // summed mode contributes a weight vector over its axis
+                let hashes = &self.modes[r];
+                let mut base = 0usize;
+                let mut sign = 1.0;
+                let mut summed: Vec<(usize, Vec<f64>)> = Vec::new(); // (mode, u_k)
+                for (k, s) in spec.iter().enumerate() {
+                    match s {
+                        Some(i) => {
+                            base += hashes[k].h(*i) * self.strides[k];
+                            sign *= hashes[k].s(*i);
+                        }
+                        None => {
+                            let mut u = vec![0.0; self.sketch_dims[k]];
+                            for i in 0..self.dims[k] {
+                                u[hashes[k].h(i)] += hashes[k].s(i);
+                            }
+                            summed.push((k, u));
+                        }
+                    }
+                }
+                // odometer over the summed modes' buckets: accumulate
+                // (Π_k u_k[t_k]) · table[base + Σ t_k·stride_k]
+                let t = &self.tables[r];
+                let mut acc = 0.0;
+                let mut idx = vec![0usize; summed.len()];
+                loop {
+                    let mut off = base;
+                    let mut uw = 1.0;
+                    for (slot, &(k, ref u)) in summed.iter().enumerate() {
+                        off += idx[slot] * self.strides[k];
+                        uw *= u[idx[slot]];
+                    }
+                    acc += uw * t[off];
+                    // advance the odometer (empty summed set: one pass)
+                    let mut carry = true;
+                    for (slot, &(k, _)) in summed.iter().enumerate().rev() {
+                        idx[slot] += 1;
+                        if idx[slot] < self.sketch_dims[k] {
+                            carry = false;
+                            break;
+                        }
+                        idx[slot] = 0;
+                    }
+                    if carry {
+                        break;
+                    }
+                }
+                sign * acc
+            })
+            .collect();
+        median_inplace(&mut est)
+    }
+
+    // ---------- slice top-k ----------
+
+    /// The k keys with the largest estimated weight inside the slice
+    /// `mode = index`, sorted descending (full keys returned, fixed
+    /// mode included).
+    ///
+    /// Non-negative streams go through a marginal-pruned scan: the
+    /// slice's remaining key grid is walked line by line along its
+    /// first free mode, lines visited in decreasing marginal-estimate
+    /// order with a size-k min-heap, stopping once a line's marginal
+    /// (×[`TOP_K_SLACK`] for estimator noise) cannot beat the k-th best
+    /// — for non-negative streams no cell exceeds its line marginal.
+    /// Once any deletion has been absorbed
+    /// ([`HcsStream::has_deletions`]) that bound is unsound (a
+    /// cancelled marginal can hide a surviving heavy cell) and the scan
+    /// falls back to [`HcsStream::slice_top_k_dense`].
+    pub fn slice_top_k(&self, mode: usize, index: usize, k: usize) -> Vec<(Vec<usize>, f64)> {
+        assert!(mode < self.order(), "mode {mode} out of order {}", self.order());
+        assert!(index < self.dims[mode], "index {index} out of {}", self.dims[mode]);
+        if k == 0 {
+            return Vec::new();
+        }
+        if self.has_deletions {
+            return self.slice_top_k_dense(mode, index, k);
+        }
+        // order-1: the slice is a single cell
+        let Some(line_mode) = (0..self.order()).find(|&a| a != mode) else {
+            return vec![(vec![index], self.query(&[index]))];
+        };
+        // per-line marginal bound: fix (mode=index, line_mode=i), sum
+        // out everything else
+        let mut spec: Vec<Option<usize>> = vec![None; self.order()];
+        spec[mode] = Some(index);
+        let bounds: Vec<f64> = (0..self.dims[line_mode])
+            .map(|i| {
+                spec[line_mode] = Some(i);
+                self.marginal(&spec)
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..self.dims[line_mode]).collect();
+        order.sort_by(|&a, &b| bounds[b].total_cmp(&bounds[a]));
+        self.slice_top_k_scan(mode, index, k, line_mode, &order, Some(&bounds))
+    }
+
+    /// Unpruned slice top-k: the slice's full key grid through a size-k
+    /// min-heap. Correct for arbitrary turnstile streams; same ranking
+    /// semantics as [`HcsStream::slice_top_k`] (estimate-descending,
+    /// deterministic key tie-break) — both go through the one scan loop.
+    pub fn slice_top_k_dense(&self, mode: usize, index: usize, k: usize) -> Vec<(Vec<usize>, f64)> {
+        assert!(mode < self.order() && index < self.dims[mode]);
+        if k == 0 {
+            return Vec::new();
+        }
+        let Some(line_mode) = (0..self.order()).find(|&a| a != mode) else {
+            return vec![(vec![index], self.query(&[index]))];
+        };
+        let order: Vec<usize> = (0..self.dims[line_mode]).collect();
+        self.slice_top_k_scan(mode, index, k, line_mode, &order, None)
+    }
+
+    /// The shared min-heap scan: visit the slice line by line along
+    /// `line_mode` in the given order, rank every cell; with `bound`
+    /// (per-line upper bounds, lines sorted bound-descending) stop at
+    /// the first line whose slack-inflated bound cannot beat the k-th
+    /// best.
+    fn slice_top_k_scan(
+        &self,
+        mode: usize,
+        index: usize,
+        k: usize,
+        line_mode: usize,
+        lines: &[usize],
+        bound: Option<&[f64]>,
+    ) -> Vec<(Vec<usize>, f64)> {
+        let free: Vec<usize> =
+            (0..self.order()).filter(|&a| a != mode && a != line_mode).collect();
+        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> = BinaryHeap::with_capacity(k + 1);
+        let mut est = vec![0.0; self.d];
+        let mut key = vec![0usize; self.order()];
+        key[mode] = index;
+        for &line in lines {
+            if let Some(bm) = bound {
+                if heap.len() == k {
+                    let kth = heap.peek().expect("heap non-empty").0.est;
+                    if bm[line] * TOP_K_SLACK < kth {
+                        break;
+                    }
+                }
+            }
+            key[line_mode] = line;
+            // odometer over the remaining free modes
+            for f in &free {
+                key[*f] = 0;
+            }
+            loop {
+                let e = self.query_scratch(&key, &mut est);
+                if heap.len() < k {
+                    heap.push(std::cmp::Reverse(TopEntry { est: e, key: key.clone() }));
+                } else if e > heap.peek().expect("heap non-empty").0.est {
+                    heap.pop();
+                    heap.push(std::cmp::Reverse(TopEntry { est: e, key: key.clone() }));
+                }
+                let mut carry = true;
+                for &f in free.iter().rev() {
+                    key[f] += 1;
+                    if key[f] < self.dims[f] {
+                        carry = false;
+                        break;
+                    }
+                    key[f] = 0;
+                }
+                if carry {
+                    break;
+                }
+            }
+        }
+        let mut out: Vec<(Vec<usize>, f64)> =
+            heap.into_iter().map(|std::cmp::Reverse(e)| (e.key, e.est)).collect();
+        out.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    // ---------- linearity (merge / scale / clear) ----------
+
+    /// True when `other` was built over the same key universe, sketch
+    /// geometry, and hash-family seed — the precondition for
+    /// elementwise merging (and for sketched contraction,
+    /// [`super::contract`]).
+    pub fn same_family(&self, other: &Self) -> bool {
+        self.dims == other.dims
+            && self.sketch_dims == other.sketch_dims
+            && self.d == other.d
+            && self.seed == other.seed
+    }
+
+    /// `self += a · other`, elementwise over all d tables. Exact by
+    /// linearity; `a = -1` deletes a previously-added substream (delta
+    /// cursors), which is why a negative `a` does not set
+    /// [`HcsStream::has_deletions`] by itself — `other`'s own flag
+    /// always propagates.
+    pub fn merge_scaled(&mut self, other: &Self, a: f64) {
+        assert!(self.same_family(other), "merge of incompatible HCS streams");
+        for (t, o) in self.tables.iter_mut().zip(other.tables.iter()) {
+            for (x, y) in t.iter_mut().zip(o.iter()) {
+                *x += a * y;
+            }
+        }
+        if a >= 0.0 {
+            self.updates += other.updates;
+        } else {
+            self.updates = self.updates.saturating_sub(other.updates);
+        }
+        self.has_deletions |= other.has_deletions;
+    }
+
+    /// `self *= a` (decay weighting). `updates` counts stream items,
+    /// not mass — untouched.
+    pub fn scale_tables(&mut self, a: f64) {
+        for t in &mut self.tables {
+            for x in t.iter_mut() {
+                *x *= a;
+            }
+        }
+    }
+
+    /// Zero all counters.
+    pub fn clear(&mut self) {
+        for t in &mut self.tables {
+            t.fill(0.0);
+        }
+        self.updates = 0;
+        self.has_deletions = false;
+    }
+
+    /// Raw counter table of repeat `r` (serialization / contraction).
+    pub fn table(&self, r: usize) -> &[f64] {
+        &self.tables[r]
+    }
+
+    /// Mutable raw counter table of repeat `r` (deserialization only).
+    pub fn table_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.tables[r]
+    }
+
+    /// Repeat r's hash pair for mode `k` (contraction layer).
+    pub(crate) fn mode_hash(&self, r: usize, k: usize) -> &ModeHash {
+        &self.modes[r][k]
+    }
+}
+
+/// Row-major strides of `dims` (last mode fastest).
+pub(crate) fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; dims.len()];
+    for k in (0..dims.len().saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * dims[k + 1];
+    }
+    strides
+}
+
+impl MergeableSketch for HcsStream {
+    fn mergeable_with(&self, other: &Self) -> bool {
+        self.same_family(other)
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        ensure!(
+            self.mergeable_with(other),
+            "cannot merge HCS streams from different geometries/hash families"
+        );
+        self.merge_scaled(other, 1.0);
+        Ok(())
+    }
+
+    fn scale_by(&mut self, a: f64) {
+        self.scale_tables(a);
+    }
+
+    /// Counters and identity only; the hash families are rebuilt from
+    /// the seed on decode (pure functions of it). A one-byte flags
+    /// field carries [`HcsStream::has_deletions`], mirroring the
+    /// `StreamSketch` codec.
+    fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_u8(out, u8::try_from(self.order()).expect("order fits u8"));
+        for &n in &self.dims {
+            codec::put_u32(out, u32::try_from(n).expect("dim too large to encode"));
+        }
+        for &m in &self.sketch_dims {
+            codec::put_u32(out, u32::try_from(m).expect("sketch dim too large to encode"));
+        }
+        codec::put_u32(out, u32::try_from(self.d).expect("d fits u32"));
+        codec::put_u64(out, self.seed);
+        codec::put_u64(out, self.updates);
+        codec::put_u8(out, u8::from(self.has_deletions));
+        for r in 0..self.d {
+            for &v in self.table(r) {
+                codec::put_f64(out, v);
+            }
+        }
+    }
+
+    fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let order = rd.u8()? as usize;
+        ensure!((1..=MAX_ORDER).contains(&order), "HCS order {order} outside 1..={MAX_ORDER}");
+        let mut dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            let n = rd.u32()? as usize;
+            ensure!(n > 0, "corrupt HCS header: zero mode dim");
+            dims.push(n);
+        }
+        let mut sketch_dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            let m = rd.u32()? as usize;
+            ensure!(m > 0, "corrupt HCS header: zero sketch dim");
+            sketch_dims.push(m);
+        }
+        let d = rd.u32()? as usize;
+        ensure!(d >= 1, "corrupt HCS header: d = 0");
+        let mut elems = d;
+        for &m in &sketch_dims {
+            elems = elems.saturating_mul(m);
+        }
+        ensure!(elems <= MAX_DECODE_ELEMS, "HCS sketch of {elems} counters exceeds decode cap");
+        let seed = rd.u64()?;
+        let updates = rd.u64()?;
+        let flags = rd.u8()?;
+        ensure!(flags <= 1, "corrupt HCS flags byte {flags}");
+        let mut sk = HcsStream::new(&dims, &sketch_dims, d, seed);
+        for r in 0..d {
+            for x in sk.table_mut(r).iter_mut() {
+                *x = rd.f64()?;
+            }
+        }
+        sk.updates = updates;
+        sk.has_deletions = flags == 1;
+        Ok(sk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn dense_oracle(dims: &[usize]) -> (Vec<f64>, Vec<usize>) {
+        (vec![0.0; dims.iter().product()], row_major_strides(dims))
+    }
+
+    fn offset(strides: &[usize], key: &[usize]) -> usize {
+        key.iter().zip(strides.iter()).map(|(i, s)| i * s).sum()
+    }
+
+    fn random_key(rng: &mut Pcg64, dims: &[usize]) -> Vec<usize> {
+        dims.iter().map(|&n| rng.gen_range(n as u64) as usize).collect()
+    }
+
+    #[test]
+    fn point_queries_track_true_counts() {
+        let dims = [24, 18, 12];
+        let mut sk = HcsStream::new(&dims, &[10, 8, 6], 5, 42);
+        let (mut truth, strides) = dense_oracle(&dims);
+        let mut rng = Pcg64::new(1);
+        // skewed stream: a few heavy keys plus noise
+        let heavy: Vec<Vec<usize>> = (0..4).map(|_| random_key(&mut rng, &dims)).collect();
+        for _ in 0..300 {
+            for key in &heavy {
+                sk.update(key, 10.0);
+                truth[offset(&strides, key)] += 10.0;
+            }
+            let key = random_key(&mut rng, &dims);
+            sk.update(&key, 1.0);
+            truth[offset(&strides, &key)] += 1.0;
+        }
+        for key in &heavy {
+            let est = sk.query(key);
+            let t = truth[offset(&strides, key)];
+            assert!((est - t).abs() < 0.25 * t, "estimate {est} vs true {t}");
+        }
+    }
+
+    #[test]
+    fn update_batch_and_fanout_bit_identical_to_single_updates() {
+        let dims = [16, 12, 10];
+        let mdims = [6, 5, 4];
+        let mut rng = Pcg64::new(7);
+        let mut keys = Vec::new();
+        let mut ws = Vec::new();
+        let mut items: Vec<(Vec<usize>, f64)> = Vec::new();
+        for _ in 0..200 {
+            let key = random_key(&mut rng, &dims);
+            let w = (1 + rng.gen_range(9)) as f64 * if rng.uniform() < 0.2 { -1.0 } else { 1.0 };
+            keys.extend_from_slice(&key);
+            ws.push(w);
+            items.push((key, w));
+        }
+        let mut single = HcsStream::new(&dims, &mdims, 3, 9);
+        for (key, w) in &items {
+            single.update(key, *w);
+        }
+        let mut batched = HcsStream::new(&dims, &mdims, 3, 9);
+        batched.update_batch(&keys, &ws);
+        let mut fan_a = HcsStream::new(&dims, &mdims, 3, 9);
+        let mut fan_b = HcsStream::new(&dims, &mdims, 3, 9);
+        {
+            let mut targets = [&mut fan_a, &mut fan_b];
+            HcsStream::update_batch_fanout(&mut targets, &keys, &ws);
+        }
+        let mut fan_c = HcsStream::new(&dims, &mdims, 3, 9);
+        let mut fan_d = HcsStream::new(&dims, &mdims, 3, 9);
+        for (key, w) in &items {
+            let mut targets = [&mut fan_c, &mut fan_d];
+            HcsStream::update_fanout(&mut targets, key, *w);
+        }
+        for got in [&batched, &fan_a, &fan_b, &fan_c, &fan_d] {
+            assert_eq!(got.updates, single.updates);
+            assert_eq!(got.has_deletions, single.has_deletions);
+            for r in 0..single.d {
+                for (a, b) in single.table(r).iter().zip(got.table(r).iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_raw_accumulation_matches_merged_query_bitwise() {
+        // K sketches over disjoint substreams: raw-sum + finalize must
+        // equal both the merged sketch's query and a single union-fed
+        // sketch, bit for bit (integer weights: f64 sums are exact)
+        let dims = [20, 14, 8];
+        let mdims = [7, 6, 5];
+        for shards in [2usize, 4, 8] {
+            let mut rng = Pcg64::new(shards as u64);
+            let mut parts: Vec<HcsStream> =
+                (0..shards).map(|_| HcsStream::new(&dims, &mdims, 5, 33)).collect();
+            let mut union = HcsStream::new(&dims, &mdims, 5, 33);
+            for n in 0..400 {
+                let key = random_key(&mut rng, &dims);
+                let w = (1 + rng.gen_range(20)) as f64;
+                parts[n % shards].update(&key, w);
+                union.update(&key, w);
+            }
+            let mut merged = HcsStream::new(&dims, &mdims, 5, 33);
+            for p in &parts {
+                merged.merge_scaled(p, 1.0);
+            }
+            for _ in 0..60 {
+                let key = random_key(&mut rng, &dims);
+                let mut acc = vec![0.0; 5];
+                for p in &parts {
+                    p.accumulate_raw(&key, &mut acc);
+                }
+                let est = parts[0].finalize_estimates(&key, &mut acc);
+                assert_eq!(est.to_bits(), union.query(&key).to_bits());
+                assert_eq!(est.to_bits(), merged.query(&key).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn marginal_tracks_dense_oracle() {
+        let dims = [12, 10, 8];
+        let mut sk = HcsStream::new(&dims, &[8, 8, 6], 7, 5);
+        let (mut truth, strides) = dense_oracle(&dims);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..500 {
+            let key = random_key(&mut rng, &dims);
+            let w = (1 + rng.gen_range(5)) as f64;
+            sk.update(&key, w);
+            truth[offset(&strides, &key)] += w;
+        }
+        let total: f64 = truth.iter().sum();
+        // sum out one mode at a fixed (i, j)
+        for (i, j) in [(3usize, 4usize), (0, 0), (11, 9)] {
+            let est = sk.marginal(&[Some(i), Some(j), None]);
+            let t: f64 = (0..dims[2]).map(|k| truth[offset(&strides, &[i, j, k])]).sum();
+            assert!((est - t).abs() < 0.3 * total.max(1.0) / 10.0, "marginal {est} vs {t}");
+        }
+        // sum out two modes
+        let est = sk.marginal(&[Some(5), None, None]);
+        let t: f64 = (0..dims[1])
+            .flat_map(|j| (0..dims[2]).map(move |k| (j, k)))
+            .map(|(j, k)| truth[offset(&strides, &[5, j, k])])
+            .sum();
+        assert!((est - t).abs() < 0.3 * total / 4.0, "marginal {est} vs {t}");
+        // all-fixed spec degenerates to the point query, bit-identically
+        let key = [2usize, 3, 4];
+        let spec: Vec<Option<usize>> = key.iter().map(|&i| Some(i)).collect();
+        assert_eq!(sk.marginal(&spec).to_bits(), sk.query(&key).to_bits());
+        // all-None estimates the total mass
+        let est_total = sk.marginal(&[None, None, None]);
+        assert!((est_total - total).abs() < 0.35 * total, "total {est_total} vs {total}");
+    }
+
+    #[test]
+    fn slice_top_k_matches_dense_scan_on_nonnegative_streams() {
+        let dims = [10, 12, 6];
+        let mut sk = HcsStream::new(&dims, &[8, 9, 5], 5, 17);
+        let mut rng = Pcg64::new(11);
+        let heavy: Vec<Vec<usize>> = (0..5).map(|_| random_key(&mut rng, &dims)).collect();
+        for _ in 0..200 {
+            for key in &heavy {
+                sk.update(key, 8.0);
+            }
+            sk.update(&random_key(&mut rng, &dims), 1.0);
+        }
+        assert!(!sk.has_deletions);
+        for mode in 0..3 {
+            let idx = heavy[0][mode];
+            let pruned = sk.slice_top_k(mode, idx, 4);
+            let dense = sk.slice_top_k_dense(mode, idx, 4);
+            assert_eq!(pruned, dense, "mode {mode}");
+            assert!(pruned.iter().all(|(key, _)| key[mode] == idx));
+            // the slice's heavy keys surface first
+            assert_eq!(pruned[0].0, heavy[0]);
+        }
+    }
+
+    #[test]
+    fn turnstile_updates_route_slice_top_k_to_the_dense_scan() {
+        let dims = [8, 8, 8];
+        let mut sk = HcsStream::new(&dims, &[6, 6, 6], 5, 23);
+        for i in 0..8 {
+            sk.update(&[i, i, i], 50.0);
+        }
+        // cancel most of one slice's mass so its marginal goes to ~0
+        // while a heavy cell survives — the pruned bound would skip it
+        sk.update(&[3, 3, 3], -45.0);
+        sk.update(&[3, 4, 5], 30.0);
+        assert!(sk.has_deletions);
+        let got = sk.slice_top_k(0, 3, 2);
+        let dense = sk.slice_top_k_dense(0, 3, 2);
+        assert_eq!(got, dense, "turnstile slice scan must be the dense scan");
+        assert_eq!(got[0].0, vec![3, 4, 5], "surviving heavy cell found: {got:?}");
+    }
+
+    #[test]
+    fn merge_equals_concatenated_stream_and_rejects_other_families() {
+        let dims = [14, 9];
+        let mut a = HcsStream::new(&dims, &[6, 5], 3, 1);
+        let mut b = HcsStream::new(&dims, &[6, 5], 3, 1);
+        let mut whole = HcsStream::new(&dims, &[6, 5], 3, 1);
+        let mut rng = Pcg64::new(9);
+        for n in 0..200 {
+            let key = random_key(&mut rng, &dims);
+            let w = (1 + rng.gen_range(6)) as f64;
+            if n % 2 == 0 {
+                a.update(&key, w);
+            } else {
+                b.update(&key, w);
+            }
+            whole.update(&key, w);
+        }
+        a.merge_scaled(&b, 1.0);
+        assert_eq!(a.updates, whole.updates);
+        for r in 0..3 {
+            for (x, y) in a.table(r).iter().zip(whole.table(r).iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // subtracting b recovers a's own stream exactly
+        a.merge_scaled(&b, -1.0);
+        let key = random_key(&mut rng, &dims);
+        let _ = a.query(&key); // still queryable
+        // different seed / dims / order are not mergeable
+        let other_seed = HcsStream::new(&dims, &[6, 5], 3, 2);
+        assert!(!a.same_family(&other_seed));
+        let other_dims = HcsStream::new(&[14, 10], &[6, 5], 3, 1);
+        assert!(!a.same_family(&other_dims));
+    }
+
+    #[test]
+    fn codec_roundtrips_bit_exact_and_rejects_corruption() {
+        let dims = [10, 8, 6];
+        let mut sk = HcsStream::new(&dims, &[5, 4, 4], 5, 77);
+        let mut rng = Pcg64::new(13);
+        for _ in 0..150 {
+            let key = random_key(&mut rng, &dims);
+            sk.update(&key, if rng.uniform() < 0.3 { -2.0 } else { 3.0 });
+        }
+        let mut out = Vec::new();
+        sk.encode(&mut out);
+        let got = HcsStream::decode(&mut Reader::new(&out)).unwrap();
+        assert!(sk.same_family(&got));
+        assert_eq!(sk.updates, got.updates);
+        assert!(sk.has_deletions && got.has_deletions);
+        for r in 0..sk.d {
+            for (a, b) in sk.table(r).iter().zip(got.table(r).iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // truncated payload
+        let mut trunc = out.clone();
+        trunc.truncate(trunc.len() - 1);
+        assert!(HcsStream::decode(&mut Reader::new(&trunc)).is_err());
+        // zero order
+        let mut bad_order = out.clone();
+        bad_order[0] = 0;
+        assert!(HcsStream::decode(&mut Reader::new(&bad_order)).is_err());
+        // garbage flags byte (one byte before the d·Πm f64 tables)
+        let flags_off = out.len() - sk.space() * 8 - 1;
+        let mut bad_flags = out;
+        bad_flags[flags_off] = 9;
+        assert!(HcsStream::decode(&mut Reader::new(&bad_flags)).is_err());
+    }
+
+    #[test]
+    fn space_is_sum_of_mode_tables_not_product_universe() {
+        // the paper's claim in miniature: the hash table is d·Πm_k
+        // counters regardless of the Πn_k universe size
+        let sk = HcsStream::new(&[1 << 10, 1 << 10, 1 << 10], &[16, 16, 16], 3, 1);
+        assert_eq!(sk.space(), 3 * 16 * 16 * 16);
+    }
+}

@@ -1,0 +1,47 @@
+//! HCS-native tensor plane: the store's multi-mode sketch subsystem.
+//!
+//! The 2-D store serves flat `(i, j)` keys through a `StreamSketch`;
+//! this module serves arbitrary-order keys through [`HcsStream`], the
+//! paper's Higher-order Count Sketch. One small hash pair per mode
+//! (`h_k : [n_k] → [m_k]`, `s_k : [n_k] → {±1}`) replaces the flat
+//! sketch's one giant pair over `Π n_k` — hash state shrinks from the
+//! product of the mode sizes to their *sum*, the paper's exponential
+//! saving, measured in `benches/bench_tensor.rs`.
+//!
+//! **Key encoding.** A multi-mode key travels as `u8 order` followed by
+//! `order` little-endian `u32` indices ([`super::codec::put_mode_key`]);
+//! the explicit order byte lets decoders reject an order-mismatched
+//! frame instead of misaligning everything after it. Inside a sketch
+//! the key maps to table offset `Σ_k h_k(i_k) · stride_k` (row-major
+//! strides over the sketch dims) with sign `Π_k s_k(i_k)`.
+//!
+//! **Estimator.** `d` independent repeats; a point estimate is the
+//! median of the d signed counters ([`HcsStream::query`]). Marginals
+//! sum table counters against per-mode sign sums *on the sketch*
+//! ([`HcsStream::marginal`]) — no densification. Slice top-k prunes by
+//! marginal mass for insert-only streams and routes itself to a dense
+//! scan once the sticky `has_deletions` flag is set, mirroring the 2-D
+//! scan plane.
+//!
+//! **Contraction protocol.** Two same-family sketches contract directly
+//! on their tables ([`contract`]): a full contraction is the per-repeat
+//! table dot product (median over d — unbiased, the Ahle–Knudsen-style
+//! bound asserted in tests), a partial contraction reshapes each table
+//! to kept × contracted matrices and multiplies (FCS-style, returning a
+//! [`ContractedSketch`] that can be queried or densified).
+//!
+//! **Serving.** [`registry`] is the named-tensor catalog inside
+//! `ShardedStore`/`DurableStore`: durable behind the v5 snapshot format
+//! and the TCREATE/TUPDATE/TUPDATE_BATCH WAL records, replicated by
+//! full-ship origin frames (idempotent via the cumulative-remainder
+//! rule — see the registry docs), and exposed over the wire as
+//! TCREATE / TUPDATE / TUPDATE_BATCH / TQUERY / MARGINAL / SLICE_TOPK /
+//! CONTRACT.
+
+pub mod contract;
+pub mod hcs;
+pub mod registry;
+
+pub use contract::{contract, contract_scalar, ContractOutput, ContractedSketch};
+pub use hcs::{HcsStream, MAX_ORDER};
+pub use registry::{TensorFamily, TensorRegistry, MAX_TENSORS, MAX_TENSOR_SPACE};

@@ -1,0 +1,898 @@
+//! Named-tensor catalog: the server-side registry of [`HcsStream`]
+//! sketches, plus the receiver-side replication channel table for the
+//! tensor plane.
+//!
+//! A store holds many named tensors (e.g. `user×feature×time`), each
+//! with its own mode dims / sketch family. The registry is the single
+//! mutation point: every originating write lands in the tensor's live
+//! sketch *and* (when replication is on) its lazily-allocated origin
+//! accumulator through the same fused fan-out kernel the 2-D plane
+//! uses, and stamps the entry with a registry-global version counter.
+//! That stamp doubles as the replication sequence number: it only moves
+//! on locally-originated mutations, so an unchanged stamp means
+//! "nothing new to ship" — exactly the 2-D `origin_version` contract.
+//!
+//! **Tensor replication is full-ship only.** The 2-D plane earns its
+//! delta cursors from a strict `seq == last + 1` channel; per-tensor
+//! deltas would need one durable cursor per (peer, tensor) to keep that
+//! invariant across restarts. Instead every tensor frame carries the
+//! origin's *entire* cumulative accumulator: [`TensorOriginTable`]
+//! applies `full − received` (linearity — exactly the unseen mass), so
+//! frames are idempotent at any sequence, a receiver restart heals on
+//! the next frame without gap protocol, and `seq ≤ last` is still a
+//! full-history dedup horizon. The price is frame size; tensors are
+//! sketches (fixed `d · Π m_k` counters), so a full ship is the same
+//! O(space) as a delta.
+//!
+//! Replica-plane merges land in the tensor's live sketch only — never
+//! the origin accumulator (no re-origination: a mesh with more than one
+//! path must not deliver mass twice) and never the WAL (anti-entropy,
+//! not the log, restores replica mass after a crash).
+
+use super::super::codec::{self, Reader};
+use super::super::mergeable::MergeableSketch;
+use super::contract::{self, ContractOutput};
+use super::hcs::{HcsStream, MAX_ORDER};
+use anyhow::{bail, ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+
+/// Cap on registered tensors: each costs `d · Π m_k` counters (plus an
+/// equal-sized origin accumulator on a replicating node), so an
+/// unbounded catalog would let any client grow server memory without
+/// limit. Creates past the cap are rejected — tensors are never
+/// deleted, so unlike the origin tables there is no safe eviction.
+pub const MAX_TENSORS: usize = 64;
+
+/// Cap on one tensor's counter space (`d · Π m_k` f64 slots, ≈ 32 MiB).
+/// Sketch dims are the *compressed* geometry — a family this large is a
+/// misconfiguration (or a hostile TCREATE), not a workload.
+pub const MAX_TENSOR_SPACE: usize = 1 << 22;
+
+/// Cap on tracked (origin, tensor) replication channels, mirroring
+/// [`super::super::replica::origins::MAX_ORIGINS`]: each retains one
+/// sketch-sized cumulative record. At the cap the least-recently-active
+/// channel is evicted; because tensor frames are full-ship only, an
+/// evicted-but-live channel degrades gracefully — its next frame is
+/// admitted as unknown and re-applies mass the table no longer
+/// remembers, never a protocol halt.
+pub const MAX_TENSOR_CHANNELS: usize = 64;
+
+/// Identity of one tensor's sketch family: key universe, sketch
+/// geometry, repeats, and hash-family seed. Two sketches interoperate
+/// (merge / contract) iff their families are equal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorFamily {
+    pub dims: Vec<usize>,
+    pub sketch_dims: Vec<usize>,
+    pub d: usize,
+    pub seed: u64,
+}
+
+impl TensorFamily {
+    /// The family an existing sketch belongs to.
+    pub fn of(sk: &HcsStream) -> Self {
+        Self {
+            dims: sk.dims().to_vec(),
+            sketch_dims: sk.sketch_dims().to_vec(),
+            d: sk.d,
+            seed: sk.seed,
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Counter space of one sketch of this family (`d · Π m_k`).
+    pub fn space(&self) -> usize {
+        let mut s = self.d;
+        for &m in &self.sketch_dims {
+            s = s.saturating_mul(m);
+        }
+        s
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let order = self.dims.len();
+        ensure!(
+            (1..=MAX_ORDER).contains(&order),
+            "tensor order {order} outside 1..={MAX_ORDER}"
+        );
+        ensure!(
+            self.sketch_dims.len() == order,
+            "tensor family has {} sketch dims for {order} modes",
+            self.sketch_dims.len()
+        );
+        ensure!(
+            self.dims.iter().all(|&n| n > 0) && self.sketch_dims.iter().all(|&m| m > 0),
+            "tensor family has an empty mode"
+        );
+        ensure!(
+            self.dims.iter().zip(self.sketch_dims.iter()).all(|(&n, &m)| m <= n),
+            "tensor sketch dim exceeds its mode dim (sketches compress, never expand)"
+        );
+        ensure!(self.d >= 1, "tensor family needs at least one repeat");
+        ensure!(
+            self.space() <= MAX_TENSOR_SPACE,
+            "tensor family of {} counters exceeds cap {MAX_TENSOR_SPACE}",
+            self.space()
+        );
+        // every dim must survive the u32 wire/WAL encoding
+        ensure!(
+            self.dims.iter().chain(self.sketch_dims.iter()).all(|&v| v <= u32::MAX as usize)
+                && self.d <= u32::MAX as usize,
+            "tensor family field too large to encode"
+        );
+        Ok(())
+    }
+
+    pub fn fresh(&self) -> HcsStream {
+        HcsStream::new(&self.dims, &self.sketch_dims, self.d, self.seed)
+    }
+
+    /// Does `sk` belong to this family?
+    pub fn matches(&self, sk: &HcsStream) -> bool {
+        sk.dims() == self.dims.as_slice()
+            && sk.sketch_dims() == self.sketch_dims.as_slice()
+            && sk.d == self.d
+            && sk.seed == self.seed
+    }
+
+    /// `u8 order | order×u32 dims | order×u32 sketch dims | u32 d |
+    /// u64 seed` — shared by the TCREATE wire body and the WAL's
+    /// TensorCreate record.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_u8(out, self.order() as u8);
+        for &n in &self.dims {
+            codec::put_u32(out, n as u32);
+        }
+        for &m in &self.sketch_dims {
+            codec::put_u32(out, m as u32);
+        }
+        codec::put_u32(out, self.d as u32);
+        codec::put_u64(out, self.seed);
+    }
+
+    /// Inverse of [`TensorFamily::encode`], fully validated — WAL
+    /// frames and network payloads are untrusted.
+    pub fn decode(rd: &mut Reader<'_>) -> Result<Self> {
+        let order = rd.u8()? as usize;
+        ensure!((1..=MAX_ORDER).contains(&order), "tensor order {order} outside 1..={MAX_ORDER}");
+        let mut dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            dims.push(rd.u32()? as usize);
+        }
+        let mut sketch_dims = Vec::with_capacity(order);
+        for _ in 0..order {
+            sketch_dims.push(rd.u32()? as usize);
+        }
+        let d = rd.u32()? as usize;
+        let seed = rd.u64()?;
+        let fam = Self { dims, sketch_dims, d, seed };
+        fam.validate()?;
+        Ok(fam)
+    }
+}
+
+/// Reject a multi-mode key against a tensor's dims with an error (never
+/// a panic): tensor keys arrive from the wire and the WAL.
+pub(crate) fn validate_key(dims: &[usize], key: &[usize]) -> Result<()> {
+    ensure!(
+        key.len() == dims.len(),
+        "tensor key order {} does not match tensor order {}",
+        key.len(),
+        dims.len()
+    );
+    for (k, (&i, &n)) in key.iter().zip(dims.iter()).enumerate() {
+        ensure!(i < n, "tensor key mode {k} index {i} out of range (dim {n})");
+    }
+    Ok(())
+}
+
+/// One registered tensor.
+struct TensorEntry {
+    /// the live, queryable sketch (local + replicated mass)
+    hcs: HcsStream,
+    /// cumulative locally-originated mass — what the replicator ships.
+    /// Allocated lazily on the first originating write under
+    /// replication, so a standalone store pays nothing.
+    origin: Option<HcsStream>,
+    /// registry-global version stamp of the last *originating* mutation
+    /// (replica-plane merges do not move it) — the replication sequence
+    /// number for this tensor's channel.
+    version: u64,
+}
+
+/// Outcome of admitting one tensor replication frame.
+pub enum TensorAdmit {
+    /// Merge this (remainder) sketch into the tensor, then commit.
+    Apply(HcsStream),
+    /// Retry at or below the dedup horizon — acknowledged no-op.
+    Dedup,
+}
+
+struct TensorChannel {
+    last_seq: u64,
+    /// eviction clock stamp of the last applied frame
+    last_active: u64,
+    /// cumulative mass applied on this channel (deliveries, not live
+    /// state)
+    received: HcsStream,
+}
+
+/// Receiver-side per-(origin, tensor) replay protection. Full-ship
+/// only: see the module docs for why the tensor plane drops the delta
+/// protocol entirely.
+pub struct TensorOriginTable {
+    channels: HashMap<(u64, String), TensorChannel>,
+    cap: usize,
+    clock: u64,
+}
+
+impl TensorOriginTable {
+    pub fn new(cap: usize) -> Self {
+        Self { channels: HashMap::new(), cap, clock: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.channels.is_empty()
+    }
+
+    /// Validate one full-state frame and return the unseen remainder to
+    /// merge. Does not mutate — call [`TensorOriginTable::commit`]
+    /// after the store merge succeeds, so a failed merge leaves the
+    /// channel ready for an exact retry.
+    pub fn admit(&self, origin: u64, name: &str, seq: u64, full: HcsStream) -> TensorAdmit {
+        match self.channels.get(&(origin, name.to_string())) {
+            None => TensorAdmit::Apply(full),
+            Some(ch) => {
+                if seq <= ch.last_seq {
+                    return TensorAdmit::Dedup;
+                }
+                // apply only the unseen remainder; merge_scaled with -1
+                // also subtracts update counts, so the remainder counts
+                // exactly the new items
+                let mut delta = full;
+                delta.merge_scaled(&ch.received, -1.0);
+                TensorAdmit::Apply(delta)
+            }
+        }
+    }
+
+    /// Record a successfully-applied frame: advance the dedup horizon
+    /// and fold the applied mass into the channel's cumulative record.
+    /// A new channel at the cap evicts the least-recently-active one
+    /// (safe: full-ship frames re-admit an evicted channel as unknown).
+    pub fn commit(&mut self, origin: u64, name: &str, seq: u64, applied: &HcsStream) {
+        self.clock += 1;
+        let key = (origin, name.to_string());
+        if !self.channels.contains_key(&key) && self.channels.len() >= self.cap {
+            let stalest = self
+                .channels
+                .iter()
+                .min_by_key(|(_, ch)| ch.last_active)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = stalest {
+                crate::log_warn!(
+                    "store: tensor channel table at cap ({}); evicting stalest channel \
+                     (origin {:#x}, tensor {:?}) to admit (origin {origin:#x}, tensor {name:?})",
+                    self.cap,
+                    k.0,
+                    k.1
+                );
+                self.channels.remove(&k);
+            }
+        }
+        let clock = self.clock;
+        let ch = self.channels.entry(key).or_insert_with(|| TensorChannel {
+            last_seq: 0,
+            last_active: 0,
+            received: {
+                let mut empty = applied.clone();
+                empty.clear();
+                empty
+            },
+        });
+        ch.received.merge_scaled(applied, 1.0);
+        ch.last_seq = seq;
+        ch.last_active = clock;
+    }
+
+    /// Serialize (snapshot persistence), in sorted (origin, name) order
+    /// so identical tables encode identically.
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.clock);
+        codec::put_u32(out, self.channels.len() as u32);
+        let mut keys: Vec<&(u64, String)> = self.channels.keys().collect();
+        keys.sort();
+        for key in keys {
+            let ch = &self.channels[key];
+            codec::put_u64(out, key.0);
+            codec::put_name(out, &key.1);
+            codec::put_u64(out, ch.last_seq);
+            codec::put_u64(out, ch.last_active);
+            ch.received.encode(out);
+        }
+    }
+
+    /// Bit-exact inverse of `encode_into`; each channel's cumulative
+    /// record is validated against its tensor's family via `lookup`.
+    fn decode_from(
+        rd: &mut Reader<'_>,
+        lookup: impl Fn(&str) -> Option<TensorFamily>,
+    ) -> Result<Self> {
+        let clock = rd.u64()?;
+        let count = rd.u32()? as usize;
+        ensure!(
+            count <= MAX_TENSOR_CHANNELS,
+            "snapshot tensor channel table of {count} entries exceeds cap"
+        );
+        let mut channels = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let origin = rd.u64()?;
+            let name = codec::read_name(rd)?;
+            let last_seq = rd.u64()?;
+            let last_active = rd.u64()?;
+            let received = HcsStream::decode(rd)?;
+            let fam = match lookup(&name) {
+                Some(f) => f,
+                None => bail!("corrupt snapshot: tensor channel for unknown tensor {name:?}"),
+            };
+            ensure!(
+                fam.matches(&received),
+                "corrupt snapshot: tensor channel {name:?} family mismatch"
+            );
+            channels.insert((origin, name), TensorChannel { last_seq, last_active, received });
+        }
+        Ok(Self { channels, cap: MAX_TENSOR_CHANNELS, clock })
+    }
+}
+
+/// The named-tensor catalog for one store, plus its receiver-side
+/// channel table. Owned by `ShardedStore` behind one mutex — tensor
+/// sketches are small and their ops never touch the 2-D shard locks, so
+/// a single lock domain suffices (and keeps the snapshot image of the
+/// whole catalog trivially consistent).
+pub struct TensorRegistry {
+    tensors: BTreeMap<String, TensorEntry>,
+    /// registry-global mutation counter: bumped by every originating
+    /// mutation, stamped onto the mutated entry. Strictly increasing
+    /// across the catalog, so per-tensor stamps are strictly increasing
+    /// too — a valid replication sequence.
+    version: u64,
+    channels: TensorOriginTable,
+}
+
+impl Default for TensorRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorRegistry {
+    pub fn new() -> Self {
+        Self {
+            tensors: BTreeMap::new(),
+            version: 0,
+            channels: TensorOriginTable::new(MAX_TENSOR_CHANNELS),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Registry-global version stamp — the replicator's cheap "anything
+    /// new on the tensor plane?" probe. Only originating mutations move
+    /// it.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Total updates across every tensor's live sketch (STATS; also the
+    /// crash harness's prefix-inference counter, so every tensor op
+    /// must advance it).
+    pub fn updates(&self) -> u64 {
+        self.tensors.values().map(|e| e.hcs.updates).sum()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tensors.keys().cloned().collect()
+    }
+
+    pub fn family(&self, name: &str) -> Option<TensorFamily> {
+        self.tensors.get(name).map(|e| TensorFamily::of(&e.hcs))
+    }
+
+    fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        match self.tensors.get(name) {
+            Some(e) => Ok(e),
+            None => bail!("unknown tensor {name:?}"),
+        }
+    }
+
+    /// Register `name` with `family`. Idempotent on an identical
+    /// family (re-running a recovered WAL / a retried TCREATE must not
+    /// fail); a *different* family under a live name is a hard error —
+    /// silently replacing it would orphan every sketch shipped or
+    /// merged under the old family.
+    pub fn create(&mut self, name: &str, family: &TensorFamily) -> Result<bool> {
+        family.validate()?;
+        ensure!(!name.is_empty(), "tensor name must be non-empty");
+        ensure!(
+            name.len() <= codec::MAX_TENSOR_NAME,
+            "tensor name of {} bytes exceeds cap {}",
+            name.len(),
+            codec::MAX_TENSOR_NAME
+        );
+        if let Some(e) = self.tensors.get(name) {
+            ensure!(
+                family.matches(&e.hcs),
+                "tensor {name:?} already exists with a different family"
+            );
+            return Ok(false);
+        }
+        ensure!(
+            self.tensors.len() < MAX_TENSORS,
+            "tensor catalog at cap ({MAX_TENSORS}); cannot create {name:?}"
+        );
+        self.tensors.insert(
+            name.to_string(),
+            TensorEntry { hcs: family.fresh(), origin: None, version: 0 },
+        );
+        Ok(true)
+    }
+
+    /// One multi-mode stream item. With `originate` (replication on),
+    /// the fused fan-out kernel lands it in the live sketch *and* the
+    /// origin accumulator with one hash walk, and the entry is stamped
+    /// with a fresh global version.
+    pub fn update(&mut self, name: &str, key: &[usize], w: f64, originate: bool) -> Result<()> {
+        let version = &mut self.version;
+        let e = match self.tensors.get_mut(name) {
+            Some(e) => e,
+            None => bail!("unknown tensor {name:?}"),
+        };
+        validate_key(e.hcs.dims(), key)?;
+        if originate {
+            let origin = e.origin.get_or_insert_with(|| {
+                let mut empty = e.hcs.clone();
+                empty.clear();
+                empty
+            });
+            HcsStream::update_fanout(&mut [&mut e.hcs, origin], key, w);
+            *version += 1;
+            e.version = *version;
+        } else {
+            e.hcs.update(key, w);
+            *version += 1;
+            e.version = *version;
+        }
+        Ok(())
+    }
+
+    /// A whole batch through the fused multi-key kernel: `ws.len()`
+    /// items, item `i`'s key at `keys[i·order .. (i+1)·order]`. Every
+    /// key is validated before any lands (all-or-nothing, like the 2-D
+    /// batch path).
+    pub fn update_batch(
+        &mut self,
+        name: &str,
+        keys: &[usize],
+        ws: &[f64],
+        originate: bool,
+    ) -> Result<()> {
+        let version = &mut self.version;
+        let e = match self.tensors.get_mut(name) {
+            Some(e) => e,
+            None => bail!("unknown tensor {name:?}"),
+        };
+        let order = e.hcs.order();
+        ensure!(
+            keys.len() == ws.len() * order,
+            "tensor batch key buffer of {} indices does not match {} items of order {order}",
+            keys.len(),
+            ws.len()
+        );
+        ensure!(
+            ws.len() <= super::super::MAX_UPDATE_BATCH,
+            "tensor batch of {} items exceeds cap {}",
+            ws.len(),
+            super::super::MAX_UPDATE_BATCH
+        );
+        for key in keys.chunks_exact(order) {
+            validate_key(e.hcs.dims(), key)?;
+        }
+        if ws.is_empty() {
+            return Ok(());
+        }
+        if originate {
+            let origin = e.origin.get_or_insert_with(|| {
+                let mut empty = e.hcs.clone();
+                empty.clear();
+                empty
+            });
+            HcsStream::update_batch_fanout(&mut [&mut e.hcs, origin], keys, ws);
+        } else {
+            e.hcs.update_batch(keys, ws);
+        }
+        *version += 1;
+        e.version = *version;
+        Ok(())
+    }
+
+    pub fn query(&self, name: &str, key: &[usize]) -> Result<f64> {
+        let e = self.entry(name)?;
+        validate_key(e.hcs.dims(), key)?;
+        Ok(e.hcs.query(key))
+    }
+
+    /// Marginal over any mode subset (`None` = sum the mode out,
+    /// `Some(i)` = pin it), computed on the sketch.
+    pub fn marginal(&self, name: &str, spec: &[Option<usize>]) -> Result<f64> {
+        let e = self.entry(name)?;
+        let dims = e.hcs.dims();
+        ensure!(
+            spec.len() == dims.len(),
+            "marginal spec order {} does not match tensor order {}",
+            spec.len(),
+            dims.len()
+        );
+        for (k, (s, &n)) in spec.iter().zip(dims.iter()).enumerate() {
+            if let Some(i) = s {
+                ensure!(*i < n, "marginal spec mode {k} index {i} out of range (dim {n})");
+            }
+        }
+        Ok(e.hcs.marginal(spec))
+    }
+
+    pub fn slice_top_k(
+        &self,
+        name: &str,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<(Vec<usize>, f64)>> {
+        let e = self.entry(name)?;
+        let dims = e.hcs.dims();
+        ensure!(mode < dims.len(), "slice mode {mode} out of range (order {})", dims.len());
+        ensure!(
+            index < dims[mode],
+            "slice index {index} out of range (mode {mode} dim {})",
+            dims[mode]
+        );
+        Ok(e.hcs.slice_top_k(mode, index, k))
+    }
+
+    /// Sketched contraction between two stored tensors (FCS-style:
+    /// computed directly on the sketch tables, see [`contract`]).
+    pub fn contract(
+        &self,
+        a_name: &str,
+        b_name: &str,
+        contracted: &[usize],
+    ) -> Result<ContractOutput> {
+        let a = self.entry(a_name)?;
+        let b = self.entry(b_name)?;
+        ensure!(
+            a.hcs.same_family(&b.hcs),
+            "tensors {a_name:?} and {b_name:?} are not the same sketch family"
+        );
+        contract::contract(&a.hcs, &b.hcs, contracted)
+    }
+
+    /// Tensors with unshipped locally-originated mass: every entry
+    /// whose origin accumulator exists and whose version stamp is ahead
+    /// of the caller's per-tensor acknowledgement map. Returns
+    /// `(name, version, cumulative origin sketch)` triples — the
+    /// replicator ships each as one full-state frame with `version` as
+    /// the channel sequence.
+    pub fn dirty_origins(
+        &self,
+        acked: &HashMap<String, u64>,
+    ) -> Vec<(String, u64, HcsStream)> {
+        self.tensors
+            .iter()
+            .filter_map(|(name, e)| {
+                let origin = e.origin.as_ref()?;
+                if acked.get(name).copied().unwrap_or(0) >= e.version {
+                    return None;
+                }
+                Some((name.clone(), e.version, origin.clone()))
+            })
+            .collect()
+    }
+
+    /// Apply one tensor replication frame: full cumulative state from
+    /// `origin` for tensor `name` at channel sequence `seq`. An unknown
+    /// tensor is auto-created from the frame's family (the catalog is
+    /// replicated implicitly — peers learn tensors from their mass).
+    /// Returns `Ok(true)` if mass was applied, `Ok(false)` on a dedup.
+    /// The merge lands in the live sketch only — never the origin
+    /// accumulator, never the WAL (see the module docs).
+    pub fn apply_origin_merge(
+        &mut self,
+        origin: u64,
+        name: &str,
+        seq: u64,
+        full: HcsStream,
+    ) -> Result<bool> {
+        let fam = TensorFamily::of(&full);
+        fam.validate()?;
+        match self.tensors.get(name) {
+            Some(e) => ensure!(
+                fam.matches(&e.hcs),
+                "tensor replication frame for {name:?} does not match the stored family"
+            ),
+            None => {
+                self.create(name, &fam)?;
+            }
+        }
+        match self.channels.admit(origin, name, seq, full) {
+            TensorAdmit::Dedup => Ok(false),
+            TensorAdmit::Apply(delta) => {
+                let e = self.tensors.get_mut(name).expect("tensor created above");
+                e.hcs.merge_scaled(&delta, 1.0);
+                self.channels.commit(origin, name, seq, &delta);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Serialize the whole catalog + channel table (appended at the end
+    /// of the `ShardedStore` snapshot image). Deterministic: tensors in
+    /// `BTreeMap` order, channels in sorted key order.
+    pub(crate) fn encode_into(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, self.tensors.len() as u32);
+        for (name, e) in &self.tensors {
+            codec::put_name(out, name);
+            codec::put_u64(out, e.version);
+            codec::put_u8(out, u8::from(e.origin.is_some()));
+            e.hcs.encode(out);
+            if let Some(origin) = &e.origin {
+                origin.encode(out);
+            }
+        }
+        codec::put_u64(out, self.version);
+        self.channels.encode_into(out);
+    }
+
+    /// Bit-exact inverse of [`TensorRegistry::encode_into`].
+    pub(crate) fn decode_from(rd: &mut Reader<'_>) -> Result<Self> {
+        let count = rd.u32()? as usize;
+        ensure!(count <= MAX_TENSORS, "snapshot tensor catalog of {count} entries exceeds cap");
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name = codec::read_name(rd)?;
+            let entry_version = rd.u64()?;
+            let has_origin = rd.u8()?;
+            ensure!(has_origin <= 1, "corrupt snapshot: tensor origin flag {has_origin}");
+            let hcs = HcsStream::decode(rd)?;
+            TensorFamily::of(&hcs).validate()?;
+            let origin = if has_origin == 1 {
+                let o = HcsStream::decode(rd)?;
+                ensure!(
+                    hcs.same_family(&o),
+                    "corrupt snapshot: tensor {name:?} origin family mismatch"
+                );
+                Some(o)
+            } else {
+                None
+            };
+            ensure!(
+                !tensors.contains_key(&name),
+                "corrupt snapshot: duplicate tensor {name:?}"
+            );
+            tensors.insert(name, TensorEntry { hcs, origin, version: entry_version });
+        }
+        let version = rd.u64()?;
+        let channels = TensorOriginTable::decode_from(rd, |name| {
+            tensors.get(name).map(|e: &TensorEntry| TensorFamily::of(&e.hcs))
+        })?;
+        Ok(Self { tensors, version, channels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fam() -> TensorFamily {
+        TensorFamily { dims: vec![20, 16, 12], sketch_dims: vec![6, 5, 4], d: 3, seed: 42 }
+    }
+
+    #[test]
+    fn create_is_idempotent_and_rejects_family_changes() {
+        let mut reg = TensorRegistry::new();
+        assert!(reg.create("t", &fam()).unwrap());
+        assert!(!reg.create("t", &fam()).unwrap(), "identical re-create must be a no-op");
+        let mut other = fam();
+        other.seed = 7;
+        assert!(reg.create("t", &other).is_err(), "family change under a live name");
+        assert!(reg.create("", &fam()).is_err(), "empty name");
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn family_validation_rejects_bad_geometries() {
+        let mut f = fam();
+        f.sketch_dims = vec![6, 5]; // order mismatch
+        assert!(f.validate().is_err());
+        let mut f = fam();
+        f.sketch_dims[0] = 0;
+        assert!(f.validate().is_err());
+        let mut f = fam();
+        f.sketch_dims[0] = f.dims[0] + 1; // sketch larger than the mode
+        assert!(f.validate().is_err());
+        let mut f = fam();
+        f.d = 0;
+        assert!(f.validate().is_err());
+        let f = TensorFamily {
+            dims: vec![1 << 20; 4],
+            sketch_dims: vec![1 << 10; 4],
+            d: 8,
+            seed: 1,
+        };
+        assert!(f.validate().is_err(), "space cap must hold");
+        // encode/decode roundtrip of a good family
+        let good = fam();
+        let mut bytes = Vec::new();
+        good.encode(&mut bytes);
+        assert_eq!(TensorFamily::decode(&mut Reader::new(&bytes)).unwrap(), good);
+    }
+
+    #[test]
+    fn updates_land_in_live_and_origin_planes() {
+        let mut reg = TensorRegistry::new();
+        reg.create("t", &fam()).unwrap();
+        assert_eq!(reg.version(), 0);
+        reg.update("t", &[1, 2, 3], 5.0, true).unwrap();
+        reg.update("t", &[4, 5, 6], 3.0, false).unwrap(); // non-originating
+        let keys = [7usize, 8, 9, 1, 2, 3];
+        reg.update_batch("t", &keys, &[2.0, 1.0], true).unwrap();
+        assert_eq!(reg.query("t", &[1, 2, 3]).unwrap(), 6.0);
+        assert_eq!(reg.updates(), 4);
+        // the origin accumulator holds exactly the originating mass
+        let dirty = reg.dirty_origins(&HashMap::new());
+        assert_eq!(dirty.len(), 1);
+        let (name, version, origin) = &dirty[0];
+        assert_eq!(name, "t");
+        assert_eq!(*version, reg.version());
+        assert_eq!(origin.updates, 3);
+        assert_eq!(origin.query(&[1, 2, 3]), 6.0);
+        assert_eq!(origin.query(&[4, 5, 6]), 0.0, "non-originating mass shipped");
+        // acked at the current version: nothing left to ship
+        let mut acked = HashMap::new();
+        acked.insert("t".to_string(), *version);
+        assert!(reg.dirty_origins(&acked).is_empty());
+        // bad keys error, never panic
+        assert!(reg.update("t", &[1, 2], 1.0, true).is_err());
+        assert!(reg.update("t", &[1, 2, 99], 1.0, true).is_err());
+        assert!(reg.update("missing", &[1, 2, 3], 1.0, true).is_err());
+        assert!(reg.update_batch("t", &keys[..5], &[1.0, 1.0], true).is_err());
+    }
+
+    #[test]
+    fn replication_frames_are_idempotent_and_auto_create() {
+        let mut sender = TensorRegistry::new();
+        sender.create("t", &fam()).unwrap();
+        sender.update("t", &[1, 2, 3], 5.0, true).unwrap();
+        sender.update("t", &[4, 0, 1], 2.0, true).unwrap();
+
+        let mut receiver = TensorRegistry::new();
+        let ship = |reg: &TensorRegistry| {
+            let mut d = reg.dirty_origins(&HashMap::new());
+            assert_eq!(d.len(), 1);
+            d.pop().unwrap()
+        };
+        let (name, seq1, full1) = ship(&sender);
+        // unknown tensor: auto-created from the frame's family
+        assert!(receiver.apply_origin_merge(9, &name, seq1, full1.clone()).unwrap());
+        assert_eq!(receiver.query("t", &[1, 2, 3]).unwrap(), 5.0);
+        // exact retry: dedup, bit-identical state
+        assert!(!receiver.apply_origin_merge(9, &name, seq1, full1).unwrap());
+        assert_eq!(receiver.query("t", &[1, 2, 3]).unwrap(), 5.0);
+        assert_eq!(receiver.updates(), 2);
+        // grown cumulative state: only the remainder lands
+        sender.update("t", &[1, 2, 3], 4.0, true).unwrap();
+        let (_, seq2, full2) = ship(&sender);
+        assert!(seq2 > seq1);
+        assert!(receiver.apply_origin_merge(9, "t", seq2, full2).unwrap());
+        assert_eq!(receiver.query("t", &[1, 2, 3]).unwrap(), 9.0);
+        assert_eq!(receiver.updates(), 3);
+        // replica-plane mass is not re-originated
+        assert!(receiver.dirty_origins(&HashMap::new()).is_empty());
+        // family-mismatched frame for a live name is rejected
+        let mut other = fam();
+        other.seed = 1;
+        let alien = other.fresh();
+        assert!(receiver.apply_origin_merge(9, "t", seq2 + 1, alien).is_err());
+    }
+
+    #[test]
+    fn registry_roundtrips_bit_exact() {
+        let mut reg = TensorRegistry::new();
+        reg.create("a", &fam()).unwrap();
+        let mut f2 = fam();
+        f2.dims = vec![10, 10];
+        f2.sketch_dims = vec![4, 4];
+        reg.create("b", &f2).unwrap();
+        reg.update("a", &[1, 2, 3], 5.0, true).unwrap();
+        reg.update("b", &[0, 9], -2.0, false).unwrap();
+        // a replication channel with history
+        let mut remote = fam().fresh();
+        remote.update(&[3, 3, 3], 7.0);
+        reg.apply_origin_merge(0xAB, "a", 4, remote).unwrap();
+
+        let mut bytes = Vec::new();
+        reg.encode_into(&mut bytes);
+        let got = TensorRegistry::decode_from(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got.version(), reg.version());
+        assert_eq!(got.updates(), reg.updates());
+        assert_eq!(
+            got.query("a", &[1, 2, 3]).unwrap().to_bits(),
+            reg.query("a", &[1, 2, 3]).unwrap().to_bits()
+        );
+        assert_eq!(
+            got.query("b", &[0, 9]).unwrap().to_bits(),
+            reg.query("b", &[0, 9]).unwrap().to_bits()
+        );
+        // identical registries encode identically (deterministic order)
+        let mut bytes2 = Vec::new();
+        got.encode_into(&mut bytes2);
+        assert_eq!(bytes, bytes2);
+        // the recovered channel still dedups: a stale retry is a no-op
+        let mut re = got;
+        let mut stale = fam().fresh();
+        stale.update(&[3, 3, 3], 7.0);
+        assert!(!re.apply_origin_merge(0xAB, "a", 4, stale).unwrap());
+        // and the recovered origin accumulator still ships
+        let dirty = re.dirty_origins(&HashMap::new());
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].0, "a");
+        // truncated snapshot bytes error cleanly
+        assert!(TensorRegistry::decode_from(&mut Reader::new(&bytes[..bytes.len() - 3]))
+            .is_err());
+    }
+
+    #[test]
+    fn channel_table_evicts_stalest_at_cap() {
+        let mut reg = TensorRegistry::new();
+        reg.create("t", &fam()).unwrap();
+        let mut table = TensorOriginTable::new(2);
+        let mut sk = fam().fresh();
+        sk.update(&[1, 1, 1], 1.0);
+        for (origin, seq) in [(1u64, 1u64), (2, 1)] {
+            match table.admit(origin, "t", seq, sk.clone()) {
+                TensorAdmit::Apply(d) => table.commit(origin, "t", seq, &d),
+                TensorAdmit::Dedup => panic!("fresh channel deduped"),
+            }
+        }
+        // touch channel 1 so channel 2 is stalest
+        sk.update(&[2, 2, 2], 1.0);
+        match table.admit(1, "t", 2, sk.clone()) {
+            TensorAdmit::Apply(d) => table.commit(1, "t", 2, &d),
+            TensorAdmit::Dedup => panic!("grown frame deduped"),
+        }
+        // a third channel evicts channel 2
+        match table.admit(3, "t", 1, sk.clone()) {
+            TensorAdmit::Apply(d) => table.commit(3, "t", 1, &d),
+            TensorAdmit::Dedup => panic!("new channel deduped"),
+        }
+        assert_eq!(table.len(), 2);
+        // channel 1's horizon is intact
+        assert!(matches!(table.admit(1, "t", 2, sk.clone()), TensorAdmit::Dedup));
+        // channel 2 was forgotten: its next full frame re-applies as
+        // unknown (full-ship idempotence, not a protocol halt)
+        assert!(matches!(table.admit(2, "t", 2, sk.clone()), TensorAdmit::Apply(_)));
+    }
+}

@@ -145,9 +145,12 @@ use super::faults;
 use super::mergeable::MergeableSketch;
 use super::replica::origins::{Admit, OriginTable, MAX_ORIGINS};
 use super::sharded::{ShardedStore, StoreConfig, StoreStats};
+use super::tensor::contract::ContractOutput;
+use super::tensor::hcs::{HcsStream, MAX_ORDER};
+use super::tensor::registry::{self, TensorFamily};
 use crate::sketch::stream::StreamSketch;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -163,9 +166,12 @@ const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
 /// the durable sender-side replication section (origin id + per-peer
 /// cursors + the origin accumulator behind the store's replicate flag)
 /// and the WAL its `CursorAdvance` / `ReplicaId` records
-/// (fault-injection PR); older files are rejected with a version error
-/// rather than misparsed.
-const FORMAT_VERSION: u32 = 4;
+/// (fault-injection PR), and to 5 when snapshots grew the tensor-plane
+/// section (the named HCS catalog + its replication channel table,
+/// appended to the store image) and the WAL its `TensorCreate` /
+/// `TensorUpdate` / `TensorUpdateBatch` records (tensor-store PR);
+/// older files are rejected with a version error rather than misparsed.
+const FORMAT_VERSION: u32 = 5;
 /// magic + version + generation
 const HEADER_LEN: usize = 20;
 /// Cap on a batch frame's item count, shared with the server's
@@ -198,6 +204,14 @@ pub enum WalRecord {
     /// derived so a restarted sender keeps its channel (and the
     /// receiver's cumulative per-origin record keeps matching).
     ReplicaId(u64),
+    /// Tensor-plane DDL: register `name` with `family` in the catalog.
+    TensorCreate { name: String, family: TensorFamily },
+    /// One multi-mode tensor update.
+    TensorUpdate { name: String, key: Vec<usize>, w: f64 },
+    /// A whole multi-mode batch in one frame: `ws.len()` items, item
+    /// `i`'s key at `keys[i·order .. (i+1)·order]` — the same flat
+    /// layout the fused [`HcsStream::update_batch`] kernel consumes.
+    TensorUpdateBatch { name: String, keys: Vec<usize>, ws: Vec<f64> },
 }
 
 const TAG_UPDATE: u8 = 1;
@@ -207,6 +221,29 @@ const TAG_UPDATE_BATCH: u8 = 4;
 const TAG_ORIGIN_MERGE: u8 = 5;
 const TAG_CURSOR_ADVANCE: u8 = 6;
 const TAG_REPLICA_ID: u8 = 7;
+const TAG_TENSOR_CREATE: u8 = 8;
+const TAG_TENSOR_UPDATE: u8 = 9;
+const TAG_TENSOR_UPDATE_BATCH: u8 = 10;
+
+/// Context-free multi-mode key decode for WAL replay: the record's own
+/// order byte (validated against [`MAX_ORDER`], so a corrupt byte
+/// cannot drive a huge allocation) followed by raw `u32` indices.
+/// Unlike [`codec::read_mode_key`] — the wire-path reader, which
+/// validates against the target tensor's dims up front — WAL decode has
+/// no registry in scope; range validation happens when the record is
+/// applied through the registry's own `ensure`-based checks.
+fn read_mode_key_raw(rd: &mut Reader<'_>) -> Result<Vec<usize>> {
+    let order = rd.u8()? as usize;
+    ensure!(
+        (1..=MAX_ORDER).contains(&order),
+        "WAL tensor key order {order} outside 1..={MAX_ORDER}"
+    );
+    let mut key = Vec::with_capacity(order);
+    for _ in 0..order {
+        key.push(rd.u32()? as usize);
+    }
+    Ok(key)
+}
 
 /// Decode cap on a peer address embedded in a cursor record or
 /// snapshot — keeps a corrupt length from driving a huge allocation.
@@ -253,6 +290,30 @@ impl WalRecord {
             WalRecord::ReplicaId(id) => {
                 codec::put_u8(out, TAG_REPLICA_ID);
                 codec::put_u64(out, *id);
+            }
+            WalRecord::TensorCreate { name, family } => {
+                codec::put_u8(out, TAG_TENSOR_CREATE);
+                codec::put_name(out, name);
+                family.encode(out);
+            }
+            WalRecord::TensorUpdate { name, key, w } => {
+                codec::put_u8(out, TAG_TENSOR_UPDATE);
+                codec::put_name(out, name);
+                codec::put_mode_key(out, key);
+                codec::put_f64(out, *w);
+            }
+            WalRecord::TensorUpdateBatch { name, keys, ws } => {
+                codec::put_u8(out, TAG_TENSOR_UPDATE_BATCH);
+                codec::put_name(out, name);
+                let order = if ws.is_empty() { 1 } else { keys.len() / ws.len() };
+                codec::put_u8(out, u8::try_from(order).expect("tensor order fits u8"));
+                codec::put_u32(out, u32::try_from(ws.len()).expect("WAL tensor batch too large"));
+                for &i in keys {
+                    codec::put_u32(out, u32::try_from(i).expect("mode index fits u32"));
+                }
+                for &w in ws {
+                    codec::put_f64(out, w);
+                }
             }
         }
     }
@@ -302,6 +363,39 @@ impl WalRecord {
                 Ok(WalRecord::CursorAdvance { peer, seq, version })
             }
             TAG_REPLICA_ID => Ok(WalRecord::ReplicaId(rd.u64()?)),
+            TAG_TENSOR_CREATE => {
+                let name = codec::read_name(rd).context("WAL tensor create name")?;
+                let family = TensorFamily::decode(rd).context("WAL tensor create family")?;
+                Ok(WalRecord::TensorCreate { name, family })
+            }
+            TAG_TENSOR_UPDATE => {
+                let name = codec::read_name(rd).context("WAL tensor update name")?;
+                let key = read_mode_key_raw(rd)?;
+                let w = rd.f64()?;
+                Ok(WalRecord::TensorUpdate { name, key, w })
+            }
+            TAG_TENSOR_UPDATE_BATCH => {
+                let name = codec::read_name(rd).context("WAL tensor batch name")?;
+                let order = rd.u8()? as usize;
+                ensure!(
+                    (1..=MAX_ORDER).contains(&order),
+                    "WAL tensor batch order {order} outside 1..={MAX_ORDER}"
+                );
+                let count = rd.u32()? as usize;
+                ensure!(
+                    count <= MAX_WAL_BATCH,
+                    "WAL tensor batch of {count} updates exceeds cap {MAX_WAL_BATCH}"
+                );
+                let mut keys = Vec::with_capacity(count * order);
+                for _ in 0..count * order {
+                    keys.push(rd.u32()? as usize);
+                }
+                let mut ws = Vec::with_capacity(count);
+                for _ in 0..count {
+                    ws.push(rd.f64()?);
+                }
+                Ok(WalRecord::TensorUpdateBatch { name, keys, ws })
+            }
             other => bail!("unknown WAL record tag {other}"),
         }
     }
@@ -651,6 +745,12 @@ pub struct DurableStore {
     generation: AtomicU64,
     /// `sync_data` on every WAL append (power-loss durability)
     fsync: bool,
+    /// serializes tensor DDL (`tensor_create`): the validate→log→apply
+    /// sequence must be atomic against a racing create of the same name
+    /// with a different family, or the WAL could record two
+    /// contradictory creates and replay would fail where the live path
+    /// succeeded. Plain updates never take it.
+    ddl: Mutex<()>,
 }
 
 impl DurableStore {
@@ -665,6 +765,7 @@ impl DurableStore {
             dir: None,
             generation: AtomicU64::new(0),
             fsync: false,
+            ddl: Mutex::new(()),
         }
     }
 
@@ -766,6 +867,7 @@ impl DurableStore {
             dir: Some(dir.to_path_buf()),
             generation: AtomicU64::new(next_generation),
             fsync,
+            ddl: Mutex::new(()),
         };
         // snapshot the replayed state first (at the bumped generation),
         // then start a clean same-generation log: a crash between the
@@ -1029,6 +1131,189 @@ impl DurableStore {
         self.store.origin_version()
     }
 
+    // -------- tensor plane --------
+    //
+    // Same log-then-apply discipline as the 2-D paths, with every check
+    // that could fail at replay performed *before* the append — once a
+    // tensor record is in the WAL it must apply, both live and on
+    // recovery. Families are immutable and tensors are never deleted,
+    // so a validation that passes pre-log stays true post-log.
+
+    /// Create (or idempotently re-create) a named HCS tensor. The whole
+    /// validate→log→apply sequence holds the `ddl` mutex, so two racing
+    /// creates of the same name cannot both log — the WAL never records
+    /// two contradictory families for one name. Returns `Ok(true)` when
+    /// the tensor was created, `Ok(false)` (without logging) when an
+    /// identical tensor already exists.
+    pub fn tensor_create(&self, name: &str, family: &TensorFamily) -> Result<bool> {
+        let _ddl = self.ddl.lock().expect("tensor ddl lock");
+        family.validate()?;
+        ensure!(!name.is_empty(), "tensor name is empty");
+        ensure!(
+            name.len() <= codec::MAX_TENSOR_NAME,
+            "tensor name of {} bytes exceeds cap {}",
+            name.len(),
+            codec::MAX_TENSOR_NAME
+        );
+        if let Some(existing) = self.store.tensor_family(name) {
+            ensure!(
+                existing == *family,
+                "tensor {name:?} already exists with a different family"
+            );
+            return Ok(false);
+        }
+        ensure!(
+            self.store.tensor_names().len() < registry::MAX_TENSORS,
+            "tensor catalog is full ({} tensors)",
+            registry::MAX_TENSORS
+        );
+        if self.log.is_some() {
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_record(&WalRecord::TensorCreate {
+                name: name.to_string(),
+                family: family.clone(),
+            })?;
+            self.store.tensor_create(name, family)
+        } else {
+            self.store.tensor_create(name, family)
+        }
+    }
+
+    /// One multi-mode update against a registered tensor: key validated
+    /// against the tensor's declared dims, logged, applied.
+    pub fn tensor_update(&self, name: &str, key: &[usize], w: f64) -> Result<()> {
+        let family = self
+            .store
+            .tensor_family(name)
+            .with_context(|| format!("unknown tensor {name:?}"))?;
+        registry::validate_key(&family.dims, key)?;
+        if self.log.is_some() {
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_record(&WalRecord::TensorUpdate {
+                name: name.to_string(),
+                key: key.to_vec(),
+                w,
+            })?;
+            self.store.tensor_update(name, key, w)
+        } else {
+            self.store.tensor_update(name, key, w)
+        }
+    }
+
+    /// Batched multi-mode updates: `keys` is `ws.len() × order` flat
+    /// indices. One WAL frame, one fused in-memory apply — the tensor
+    /// analogue of [`DurableStore::update_batch`], with the same
+    /// validate-everything-before-logging rule.
+    pub fn tensor_update_batch(&self, name: &str, keys: &[usize], ws: &[f64]) -> Result<()> {
+        let family = self
+            .store
+            .tensor_family(name)
+            .with_context(|| format!("unknown tensor {name:?}"))?;
+        let order = family.order();
+        ensure!(
+            keys.len() == ws.len() * order,
+            "batch of {} weights needs {} indices, got {}",
+            ws.len(),
+            ws.len() * order,
+            keys.len()
+        );
+        ensure!(
+            ws.len() <= MAX_WAL_BATCH,
+            "tensor batch of {} updates exceeds the {MAX_WAL_BATCH}-item cap (split it)",
+            ws.len()
+        );
+        for key in keys.chunks_exact(order) {
+            registry::validate_key(&family.dims, key)?;
+        }
+        if ws.is_empty() {
+            return Ok(());
+        }
+        if self.log.is_some() {
+            let rec = WalRecord::TensorUpdateBatch {
+                name: name.to_string(),
+                keys: keys.to_vec(),
+                ws: ws.to_vec(),
+            };
+            let _shared = self.commit.read().expect("commit gate");
+            self.append_record(&rec)?;
+            self.store.tensor_update_batch(name, keys, ws)
+        } else {
+            self.store.tensor_update_batch(name, keys, ws)
+        }
+    }
+
+    /// Apply one tensor replication frame (a peer's full cumulative
+    /// origin state). Shared commit gate (so a snapshot captures the
+    /// channel table and the sketch at the same instant), deliberately
+    /// **not** WAL-logged — exactly like the 2-D replica-plane merges:
+    /// the peer's next full-state ship re-delivers whatever a restart
+    /// forgot, so anti-entropy is the redo log for remote tensor mass.
+    pub fn tensor_apply_origin_merge(
+        &self,
+        origin: u64,
+        name: &str,
+        seq: u64,
+        full: HcsStream,
+    ) -> Result<bool> {
+        let _shared = self.commit.read().expect("commit gate");
+        self.store.tensor_apply_origin_merge(origin, name, seq, full)
+    }
+
+    /// Point estimate for a multi-mode key (never logged).
+    pub fn tensor_query(&self, name: &str, key: &[usize]) -> Result<f64> {
+        self.store.tensor_query(name, key)
+    }
+
+    /// Marginal over any mode subset, computed on the sketch.
+    pub fn tensor_marginal(&self, name: &str, spec: &[Option<usize>]) -> Result<f64> {
+        self.store.tensor_marginal(name, spec)
+    }
+
+    /// Top-k keys within a fixed slice of one mode.
+    pub fn tensor_slice_top_k(
+        &self,
+        name: &str,
+        mode: usize,
+        index: usize,
+        k: usize,
+    ) -> Result<Vec<(Vec<usize>, f64)>> {
+        self.store.tensor_slice_top_k(name, mode, index, k)
+    }
+
+    /// Sketched contraction between two stored same-family tensors.
+    pub fn tensor_contract(
+        &self,
+        a_name: &str,
+        b_name: &str,
+        contracted: &[usize],
+    ) -> Result<ContractOutput> {
+        self.store.tensor_contract(a_name, b_name, contracted)
+    }
+
+    /// Family of a registered tensor (`None` if unknown).
+    pub fn tensor_family(&self, name: &str) -> Option<TensorFamily> {
+        self.store.tensor_family(name)
+    }
+
+    /// Registered tensor names, in catalog order.
+    pub fn tensor_names(&self) -> Vec<String> {
+        self.store.tensor_names()
+    }
+
+    /// Tensor-plane origin-version probe for the replicator.
+    pub fn tensor_version(&self) -> u64 {
+        self.store.tensor_version()
+    }
+
+    /// Tensors with unshipped locally-originated mass (see
+    /// [`ShardedStore::tensor_dirty_origins`]).
+    pub fn tensor_dirty_origins(
+        &self,
+        acked: &HashMap<String, u64>,
+    ) -> Vec<(String, u64, HcsStream)> {
+        self.store.tensor_dirty_origins(acked)
+    }
+
     // -------- queries (never logged) --------
 
     pub fn point_query(&self, i: usize, j: usize) -> f64 {
@@ -1244,6 +1529,15 @@ fn apply(
             cursors.origin_id = *id;
             Ok(())
         }
+        // Tensor records replay through the same ShardedStore entry
+        // points the live path used, so an update re-originates exactly
+        // when replication was re-enabled before replay — matching the
+        // 2-D records above.
+        WalRecord::TensorCreate { name, family } => store.tensor_create(name, family).map(|_| ()),
+        WalRecord::TensorUpdate { name, key, w } => store.tensor_update(name, key, *w),
+        WalRecord::TensorUpdateBatch { name, keys, ws } => {
+            store.tensor_update_batch(name, keys, ws)
+        }
     }
 }
 
@@ -1281,6 +1575,13 @@ mod tests {
             WalRecord::OriginMerge { origin: 0xBEEF, seq: 42, sketch: osk },
             WalRecord::CursorAdvance { peer: "10.0.0.7:7878".to_string(), seq: 9, version: 17 },
             WalRecord::ReplicaId(0xABCD_EF01),
+            WalRecord::TensorCreate { name: "act".to_string(), family: tfam() },
+            WalRecord::TensorUpdate { name: "act".to_string(), key: vec![1, 2, 3], w: -2.5 },
+            WalRecord::TensorUpdateBatch {
+                name: "act".to_string(),
+                keys: vec![1, 2, 3, 19, 15, 11],
+                ws: vec![4.0, -0.5],
+            },
         ] {
             let mut out = Vec::new();
             rec.encode(&mut out);
@@ -1318,6 +1619,27 @@ mod tests {
                     WalRecord::CursorAdvance { peer: gp, seq: gs, version: gv },
                 ) => assert_eq!((peer, seq, version), (gp, gs, gv)),
                 (WalRecord::ReplicaId(a), WalRecord::ReplicaId(b)) => assert_eq!(a, b),
+                (
+                    WalRecord::TensorCreate { name, family },
+                    WalRecord::TensorCreate { name: gn, family: gf },
+                ) => assert_eq!((name, family), (gn, gf)),
+                (
+                    WalRecord::TensorUpdate { name, key, w },
+                    WalRecord::TensorUpdate { name: gn, key: gk, w: gw },
+                ) => {
+                    assert_eq!((name, key), (gn, gk));
+                    assert_eq!(w.to_bits(), gw.to_bits());
+                }
+                (
+                    WalRecord::TensorUpdateBatch { name, keys, ws },
+                    WalRecord::TensorUpdateBatch { name: gn, keys: gk, ws: gw },
+                ) => {
+                    assert_eq!((name, keys), (gn, gk));
+                    assert_eq!(ws.len(), gw.len());
+                    for (a, b) in ws.iter().zip(gw.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
                 other => panic!("variant mismatch: {other:?}"),
             }
         }
@@ -1850,6 +2172,118 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "repeat {r}");
             }
         }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn tfam() -> TensorFamily {
+        TensorFamily { dims: vec![20, 16, 12], sketch_dims: vec![6, 5, 4], d: 3, seed: 42 }
+    }
+
+    #[test]
+    fn tensor_plane_survives_crash_and_snapshot() {
+        // create + updates + batch before the snapshot, a WAL-only tail
+        // after it; recovery must rebuild the catalog bit-identically to
+        // a shadow store fed the same stream
+        let dir = tmpdir("tensor");
+        let shadow = ShardedStore::new(cfg());
+        shadow.tensor_create("act", &tfam()).unwrap();
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            assert!(live.tensor_create("act", &tfam()).unwrap());
+            assert!(!live.tensor_create("act", &tfam()).unwrap(), "re-create must be a no-op");
+            let mut other = tfam();
+            other.d = 5;
+            assert!(live.tensor_create("act", &other).is_err(), "family change must fail");
+            assert!(live.tensor_update("ghost", &[0, 0, 0], 1.0).is_err());
+            assert!(live.tensor_update("act", &[20, 0, 0], 1.0).is_err(), "index out of range");
+            assert!(live.tensor_update("act", &[1, 2], 1.0).is_err(), "order mismatch");
+
+            let mut rng = Pcg64::new(7);
+            for _ in 0..60 {
+                let key = [
+                    rng.gen_range(20) as usize,
+                    rng.gen_range(16) as usize,
+                    rng.gen_range(12) as usize,
+                ];
+                let w = int_weight(&mut rng);
+                live.tensor_update("act", &key, w).unwrap();
+                shadow.tensor_update("act", &key, w).unwrap();
+            }
+            live.snapshot().unwrap();
+            // post-snapshot tail: one batch + one point update, WAL only
+            let keys = [1usize, 2, 3, 19, 15, 11, 0, 0, 0];
+            let ws = [4.0, -1.0, 2.5];
+            live.tensor_update_batch("act", &keys, &ws).unwrap();
+            shadow.tensor_update_batch("act", &keys, &ws).unwrap();
+            live.tensor_update("act", &[5, 6, 7], 9.0).unwrap();
+            shadow.tensor_update("act", &[5, 6, 7], 9.0).unwrap();
+        }
+        let re = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(re.tensor_names(), vec!["act".to_string()]);
+        assert_eq!(re.tensor_family("act"), Some(tfam()));
+        let mut rng = Pcg64::new(8);
+        for _ in 0..200 {
+            let key = [
+                rng.gen_range(20) as usize,
+                rng.gen_range(16) as usize,
+                rng.gen_range(12) as usize,
+            ];
+            assert_eq!(
+                re.tensor_query("act", &key).unwrap().to_bits(),
+                shadow.tensor_query("act", &key).unwrap().to_bits(),
+                "key {key:?}"
+            );
+        }
+        let spec = [Some(1), None, None];
+        assert_eq!(
+            re.tensor_marginal("act", &spec).unwrap().to_bits(),
+            shadow.tensor_marginal("act", &spec).unwrap().to_bits()
+        );
+        assert_eq!(re.stats(), shadow.stats(), "tensor updates lost from stats");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tensor_replica_mass_is_volatile_and_full_ships_resync_exactly() {
+        // replica-plane tensor merges are never WAL-logged: after a
+        // crash the peer's next full-state ship must re-deliver exactly
+        // what was forgotten (the channel record rides in snapshots, and
+        // here the crash predates any snapshot of it)
+        let dir = tmpdir("tensor_replica");
+        let mut full = tfam().fresh();
+        full.update(&[1, 2, 3], 5.0);
+        full.update(&[4, 5, 6], 2.0);
+        {
+            let live = DurableStore::open(&dir, cfg()).unwrap();
+            live.tensor_create("act", &tfam()).unwrap();
+            assert!(live.tensor_apply_origin_merge(0xBEEF, "act", 3, full.clone()).unwrap());
+            assert!(
+                !live.tensor_apply_origin_merge(0xBEEF, "act", 3, full.clone()).unwrap(),
+                "same seq must dedup"
+            );
+            assert_eq!(
+                live.tensor_query("act", &[1, 2, 3]).unwrap().to_bits(),
+                full.query(&[1, 2, 3]).to_bits()
+            );
+            // crash without snapshot: the create replays, the merge does not
+        }
+        let re = DurableStore::open(&dir, cfg()).unwrap();
+        assert_eq!(
+            re.tensor_query("act", &[1, 2, 3]).unwrap(),
+            0.0,
+            "unlogged replica mass must not replay"
+        );
+        // anti-entropy redo: the peer re-ships its cumulative state and
+        // the recovered (empty) channel record admits all of it
+        assert!(re.tensor_apply_origin_merge(0xBEEF, "act", 3, full.clone()).unwrap());
+        assert_eq!(
+            re.tensor_query("act", &[1, 2, 3]).unwrap().to_bits(),
+            full.query(&[1, 2, 3]).to_bits()
+        );
+        assert_eq!(
+            re.tensor_query("act", &[4, 5, 6]).unwrap().to_bits(),
+            full.query(&[4, 5, 6]).to_bits()
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -125,12 +125,41 @@ fn replay_shadow(cfg: &StoreConfig, ops: &[CrashOp]) -> DurableStore {
 
 /// Bit-exact full-universe comparison (the crash geometry is small
 /// enough to sweep; integer weights make every estimate exact in f64).
+/// Covers both planes: the 2-D sketch and the crash tensor's full
+/// multi-mode key space.
 fn assert_same_universe(got: &DurableStore, want: &DurableStore, cfg: &StoreConfig, what: &str) {
     assert_eq!(got.stats().updates, want.stats().updates, "{what}: update counters differ");
     for i in 0..cfg.n1 {
         for j in 0..cfg.n2 {
             let (x, y) = (got.point_query(i, j), want.point_query(i, j));
             assert_eq!(x.to_bits(), y.to_bits(), "{what}: ({i}, {j}) differs: {x} vs {y}");
+        }
+    }
+    assert_same_tensor(got, want, what);
+}
+
+/// Bit-exact sweep of the crash tensor's key space. A crash can land
+/// between a tensor op's create record and its update record, leaving
+/// one side with a created-but-empty tensor the prefix replay never
+/// made — an empty HCS reads all-zero, so absence and emptiness are
+/// deliberately treated as equal here (the op was never acknowledged).
+fn assert_same_tensor(got: &DurableStore, want: &DurableStore, what: &str) {
+    let fam = faults::crash_tensor_family();
+    let query = |s: &DurableStore, key: &[usize]| -> f64 {
+        if s.tensor_family(faults::CRASH_TENSOR).is_some() {
+            s.tensor_query(faults::CRASH_TENSOR, key)
+                .unwrap_or_else(|e| panic!("{what}: tensor query {key:?} failed: {e}"))
+        } else {
+            0.0
+        }
+    };
+    for i in 0..fam.dims[0] {
+        for j in 0..fam.dims[1] {
+            for k in 0..fam.dims[2] {
+                let key = [i, j, k];
+                let (x, y) = (query(got, &key), query(want, &key));
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: tensor {key:?} differs: {x} vs {y}");
+            }
         }
     }
 }

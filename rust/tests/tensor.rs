@@ -1,0 +1,364 @@
+//! End-to-end tests for the HCS tensor plane.
+//!
+//! The unit tests in `store::tensor`, `store::wal`, and `store::server`
+//! pin down each layer in isolation; this file exercises the stack the
+//! way a deployment does:
+//!
+//! - **wire + durability** — every tensor RPC round-trips through a
+//!   real TCP server backed by snapshot+WAL, and a server restart
+//!   recovers the sketch bit-identically (full key-space sweep against
+//!   an in-process oracle fed the same stream);
+//! - **replication** — a 2-node replica pair fed interleaved turnstile
+//!   writes converges, bit-identically, to the union-stream oracle via
+//!   the idempotent tensor full-ship frames;
+//! - **marginals** — the sketch-side MARGINAL contraction equals the
+//!   explicitly-summed dense oracle: per repeat, the sum of the
+//!   slice's single-repeat point estimates (integer weights keep every
+//!   intermediate exact in f64, so the comparison is bit-for-bit).
+
+use hocs::rng::Pcg64;
+use hocs::store::{
+    ContractOutput, HcsStream, ShardedStore, StoreClient, StoreConfig, StoreServer,
+    StoreServerConfig, TensorContraction, TensorFamily,
+};
+use hocs::util::prop::{forall, prop_assert, Gen};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// 2-D store geometry backing the servers (the tensor plane rides the
+/// same store; the 2-D plane stays idle in these tests).
+fn base_cfg() -> StoreConfig {
+    StoreConfig { n1: 24, n2: 20, m1: 8, m2: 7, d: 3, seed: 99, shards: 2, window: 3 }
+}
+
+/// The order-3 family used across the tensor test suite.
+fn tfam() -> TensorFamily {
+    TensorFamily { dims: vec![20, 16, 12], sketch_dims: vec![6, 5, 4], d: 3, seed: 42 }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hocs_tensor_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("creating test dir");
+    d
+}
+
+fn random_key(rng: &mut Pcg64, dims: &[usize]) -> Vec<usize> {
+    dims.iter().map(|&n| rng.gen_range(n as u64) as usize).collect()
+}
+
+/// Integer weights, ~20% negative (turnstile deletions) — counter sums
+/// stay exact in f64, so recovered/replicated state compares bit-exact.
+fn int_weight(rng: &mut Pcg64) -> f64 {
+    let w = (1 + rng.gen_range(9)) as f64;
+    if rng.gen_range(5) == 0 {
+        -w
+    } else {
+        w
+    }
+}
+
+/// Reserve distinct loopback addresses by binding port 0 and releasing
+/// — replica peers must be named before the servers boot.
+fn reserve_addrs(n: usize) -> Option<Vec<String>> {
+    let mut listeners = Vec::new();
+    for _ in 0..n {
+        match std::net::TcpListener::bind("127.0.0.1:0") {
+            Ok(l) => listeners.push(l),
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return None;
+            }
+        }
+    }
+    Some(listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect())
+}
+
+#[test]
+fn tensor_plane_survives_a_server_restart_bit_identically() {
+    let dir = tmpdir("srv_restart");
+    let dirs = dir.to_string_lossy().to_string();
+    let fam = tfam();
+    // oracle: an in-process store fed the identical stream
+    let oracle = ShardedStore::new(base_cfg());
+    oracle.tensor_create("act", &fam).unwrap();
+    oracle.tensor_create("wts", &fam).unwrap();
+    let mut rng = Pcg64::new(0x7E5707);
+    {
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            store: base_cfg(),
+            data_dir: Some(dirs.clone()),
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot bind loopback ({e})");
+                return;
+            }
+        };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        assert!(client.tensor_create("act", &fam).unwrap());
+        assert!(!client.tensor_create("act", &fam).unwrap(), "re-create must be a no-op");
+        assert!(client.tensor_create("wts", &fam).unwrap());
+        for _ in 0..80 {
+            let key = random_key(&mut rng, &fam.dims);
+            let w = int_weight(&mut rng);
+            client.tensor_update("act", &key, w).unwrap();
+            oracle.tensor_update("act", &key, w).unwrap();
+        }
+        for _ in 0..40 {
+            let key = random_key(&mut rng, &fam.dims);
+            let w = int_weight(&mut rng);
+            client.tensor_update("wts", &key, w).unwrap();
+            oracle.tensor_update("wts", &key, w).unwrap();
+        }
+        client.snapshot().unwrap();
+        // a post-snapshot batch: lives only in one TensorUpdateBatch
+        // WAL frame, plus one point update in its own frame
+        let mut keys = Vec::new();
+        let mut ws = Vec::new();
+        for _ in 0..30 {
+            keys.extend(random_key(&mut rng, &fam.dims));
+            ws.push(int_weight(&mut rng));
+        }
+        client.tensor_update_batch("act", &keys, &ws).unwrap();
+        oracle.tensor_update_batch("act", &keys, &ws).unwrap();
+        client.tensor_update("act", &[5, 6, 7], 9.0).unwrap();
+        oracle.tensor_update("act", &[5, 6, 7], 9.0).unwrap();
+        server.shutdown();
+    }
+    let server = match StoreServer::start(StoreServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        store: base_cfg(),
+        data_dir: Some(dirs),
+        ..Default::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: cannot bind loopback ({e})");
+            return;
+        }
+    };
+    let mut client = StoreClient::connect(server.local_addr()).unwrap();
+    // the recovered sketch answers every point query bit-identically —
+    // the full 20×16×12 key space is cheap to sweep over loopback
+    for i in 0..fam.dims[0] {
+        for j in 0..fam.dims[1] {
+            for k in 0..fam.dims[2] {
+                let key = [i, j, k];
+                let got = client.tensor_query("act", &key).unwrap();
+                let want = oracle.tensor_query("act", &key).unwrap();
+                assert_eq!(got.to_bits(), want.to_bits(), "({i},{j},{k}): {got} vs {want}");
+            }
+        }
+    }
+    // marginals, slice scans, and contractions serve off the recovered
+    // state too
+    let spec = [Some(3), None, None];
+    assert_eq!(
+        client.tensor_marginal("act", &spec).unwrap().to_bits(),
+        oracle.tensor_marginal("act", &spec).unwrap().to_bits(),
+        "recovered marginal diverges"
+    );
+    assert_eq!(
+        client.tensor_slice_topk("act", 0, 3, 5).unwrap(),
+        oracle.tensor_slice_top_k("act", 0, 3, 5).unwrap(),
+        "recovered slice top-k diverges"
+    );
+    let got = client.tensor_contract("act", "wts", &[0, 1, 2], false).unwrap();
+    let want = oracle.tensor_contract("act", "wts", &[0, 1, 2]).unwrap();
+    match (got, want) {
+        (TensorContraction::Scalar(g), ContractOutput::Scalar(w)) => {
+            assert_eq!(g.to_bits(), w.to_bits(), "recovered contraction diverges: {g} vs {w}");
+        }
+        other => panic!("full contraction must be scalar on both sides: {other:?}"),
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tensor_writes_converge_across_a_two_node_replica_pair() {
+    // Two replica servers peering at each other; interleaved turnstile
+    // writes split across the nodes. The oracle is one store fed the
+    // union stream — anti-entropy must deliver every node's origin
+    // mass to its peer exactly once (idempotent full ships, per-tensor
+    // sequence dedup), and integer weights make the counter sums exact
+    // under any arrival order.
+    let cfg = base_cfg();
+    let fam = tfam();
+    let Some(addrs) = reserve_addrs(2) else { return };
+    let mut servers = Vec::new();
+    for (n, addr) in addrs.iter().enumerate() {
+        let server = match StoreServer::start(StoreServerConfig {
+            addr: addr.clone(),
+            store: cfg.clone(),
+            peers: vec![addrs[1 - n].clone()],
+            sync_interval_ms: 15,
+            // node 0 self-heals with periodic 2-D full ships, which
+            // also reset its tensor acks — the re-ship must dedup
+            full_ship_every: if n == 0 { 4 } else { 0 },
+            replica_timeout_ms: 2_000,
+            ..Default::default()
+        }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping: cannot boot replica server ({e})");
+                return;
+            }
+        };
+        servers.push(server);
+    }
+    let mut clients: Vec<StoreClient> =
+        servers.iter().map(|s| StoreClient::connect(s.local_addr()).unwrap()).collect();
+    for c in clients.iter_mut() {
+        c.tensor_create("act", &fam).unwrap();
+    }
+    let oracle = ShardedStore::new(cfg.clone());
+    oracle.tensor_create("act", &fam).unwrap();
+
+    let mut rng = Pcg64::new(0xFACADE);
+    for step in 0..200 {
+        let key = random_key(&mut rng, &fam.dims);
+        let w = int_weight(&mut rng);
+        let node = step % clients.len();
+        if step % 9 == 0 {
+            // single-item batch: the TUPDATE_BATCH path replicates too
+            clients[node].tensor_update_batch("act", &key, &[w]).unwrap();
+        } else {
+            clients[node].tensor_update("act", &key, w).unwrap();
+        }
+        oracle.tensor_update("act", &key, w).unwrap();
+    }
+
+    // a node's update counter reaches the union total exactly when the
+    // peer's mass has arrived exactly once — tensor frames carry their
+    // update counts, and the per-tensor sequence dedup forbids doubles
+    let want = oracle.stats().updates;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let counts: Vec<u64> = clients.iter_mut().map(|c| c.stats().unwrap().updates).collect();
+        if counts.iter().all(|&u| u == want) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "tensor anti-entropy did not quiesce: node counts {counts:?}, want {want}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // both replicas answer bit-identically to the union-stream oracle
+    // over the whole multi-mode key space, and the derived reads
+    // (marginal, turnstile-routed slice top-k) agree too
+    for (n, client) in clients.iter_mut().enumerate() {
+        for i in 0..fam.dims[0] {
+            for j in 0..fam.dims[1] {
+                for k in 0..fam.dims[2] {
+                    let key = [i, j, k];
+                    let got = client.tensor_query("act", &key).unwrap();
+                    let exp = oracle.tensor_query("act", &key).unwrap();
+                    assert_eq!(
+                        got.to_bits(),
+                        exp.to_bits(),
+                        "node {n} diverges at {key:?}: {got} vs {exp}"
+                    );
+                }
+            }
+        }
+        let spec = [None, Some(2), None];
+        assert_eq!(
+            client.tensor_marginal("act", &spec).unwrap().to_bits(),
+            oracle.tensor_marginal("act", &spec).unwrap().to_bits(),
+            "node {n} marginal diverges"
+        );
+        assert_eq!(
+            client.tensor_slice_topk("act", 1, 2, 4).unwrap(),
+            oracle.tensor_slice_top_k("act", 1, 2, 4).unwrap(),
+            "node {n} slice top-k diverges"
+        );
+        let (_, repl) = client.stats_full().unwrap();
+        let repl = repl.expect("replication stats");
+        assert!(repl.ships > 0, "node {n} never shipped");
+        assert!(repl.merges_applied > 0, "node {n} never applied a peer frame");
+    }
+}
+
+#[test]
+fn marginal_matches_the_explicitly_summed_dense_oracle() {
+    // MARGINAL is an exact contraction of the estimator: per repeat it
+    // must equal the sum, over every key in the slice, of that key's
+    // single-repeat point estimate — then the median over repeats. The
+    // oracle recomputes that sum the explicit dense way: enumerate the
+    // slice's keys, recover each key's (bucket, sign) by probing a
+    // fresh same-family sketch with one unit update (the single
+    // nonzero table entry is the sign at the bucket), and dot against
+    // the live sketch's tables. Integer weights keep every
+    // intermediate an exact small integer, so the two summation orders
+    // agree bit-for-bit.
+    forall("marginal vs summed dense oracle", 6, |g: &mut Gen| {
+        let d = 3usize;
+        let seed = g.rng().next_u64();
+        let dims = vec![g.usize_in(3, 6), g.usize_in(3, 5), g.usize_in(2, 4)];
+        let sketch_dims = vec![g.usize_in(2, 4), g.usize_in(2, 3), g.usize_in(2, 3)];
+        let mut s = HcsStream::new(&dims, &sketch_dims, d, seed);
+        for _ in 0..(30 + g.usize_in(0, 40)) {
+            let key: Vec<usize> = dims.iter().map(|&n| g.usize_in(0, n - 1)).collect();
+            let mag = (1 + g.usize_in(0, 8)) as f64;
+            s.update(&key, if g.usize_in(0, 4) == 0 { -mag } else { mag });
+        }
+        // random spec; force at least one summed-out mode so the test
+        // never degenerates to a pure point query
+        let mut spec: Vec<Option<usize>> = dims
+            .iter()
+            .map(|&n| if g.usize_in(0, 1) == 0 { None } else { Some(g.usize_in(0, n - 1)) })
+            .collect();
+        let wild = g.usize_in(0, dims.len() - 1);
+        spec[wild] = None;
+
+        let mut per_repeat = vec![0.0f64; d];
+        let mut key = vec![0usize; dims.len()];
+        loop {
+            let in_slice =
+                spec.iter().zip(key.iter()).all(|(sp, &i)| sp.map_or(true, |f| f == i));
+            if in_slice {
+                let mut probe = HcsStream::new(&dims, &sketch_dims, d, seed);
+                probe.update(&key, 1.0);
+                for (r, acc) in per_repeat.iter_mut().enumerate() {
+                    let t = probe.table(r);
+                    let b = t.iter().position(|&v| v != 0.0).expect("probe bucket");
+                    *acc += t[b] * s.table(r)[b];
+                }
+            }
+            let mut done = true;
+            for k in (0..key.len()).rev() {
+                key[k] += 1;
+                if key[k] < dims[k] {
+                    done = false;
+                    break;
+                }
+                key[k] = 0;
+            }
+            if done {
+                break;
+            }
+        }
+        per_repeat.sort_by(f64::total_cmp);
+        let want = per_repeat[d / 2]; // d = 3: the middle element
+        let got = s.marginal(&spec);
+        prop_assert(
+            got.to_bits() == want.to_bits(),
+            &format!("marginal {spec:?}: {got} vs dense oracle {want}"),
+        )?;
+
+        // all-Some degenerates to the point query, bit-for-bit
+        let pkey: Vec<usize> = dims.iter().map(|&n| g.usize_in(0, n - 1)).collect();
+        let full: Vec<Option<usize>> = pkey.iter().map(|&i| Some(i)).collect();
+        prop_assert(
+            s.marginal(&full).to_bits() == s.query(&pkey).to_bits(),
+            "all-Some marginal must equal the point query",
+        )?;
+        Ok(())
+    });
+}
