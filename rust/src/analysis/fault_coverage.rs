@@ -1,0 +1,66 @@
+//! `fault-coverage`: every durable-path filesystem mutation under
+//! `store/` must be reachable by the deterministic fault plane.
+//!
+//! The store's crash-safety story rests on `store::faults` wrapping
+//! (or guarding) each write/sync/rename so the fault harness can fail
+//! it on demand. A raw `File::create` / `.write_all` / `.sync_data` /
+//! `.sync_all` / `fs::rename` that the harness cannot reach is a
+//! durability claim the crash tests silently stop exercising. The rule
+//! is function-granular: the enclosing `fn` must touch `faults::`
+//! somewhere (a shim call, or a `faults::fire` checkpoint before the
+//! raw op). `store/faults.rs` itself and `#[cfg(test)]` modules are
+//! exempt; anything else needs a `// lint: allow(fault-coverage)`
+//! annotation with a reason.
+
+use super::lex::SourceFile;
+use super::Violation;
+
+pub const PASS: &str = "fault-coverage";
+
+/// Tokens that mutate durable state. Matched against cleaned text, so
+/// string literals and comments cannot trip them; `faults::write_all(`
+/// does not match `.write_all(` (the leading dot is part of the
+/// token).
+const TOKENS: &[&str] =
+    &["File::create(", ".write_all(", ".sync_data(", ".sync_all(", "fs::rename("];
+
+pub fn check(sf: &SourceFile) -> Vec<Violation> {
+    if !sf.path.starts_with("store/") || sf.path == "store/faults.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let spans = sf.fn_spans();
+    let tests = sf.test_spans();
+    for token in TOKENS {
+        let mut at = 0;
+        while let Some(rel) = sf.cleaned[at..].find(token) {
+            let off = at + rel;
+            at = off + token.len();
+            let line = sf.line_of(off);
+            if tests.iter().any(|t| t.contains(&line)) {
+                continue;
+            }
+            // innermost enclosing fn: the last span (file order ~
+            // nesting order) whose body contains the offset
+            let encl = spans.iter().rev().find(|s| s.body.contains(&off));
+            let covered = encl
+                .map(|s| sf.cleaned[s.body.clone()].contains("faults::"))
+                .unwrap_or(false);
+            if !covered {
+                let what = token.trim_start_matches('.').trim_end_matches('(');
+                let fn_name = encl.map_or("<no enclosing fn>", |s| s.name.as_str());
+                out.push(Violation {
+                    pass: PASS,
+                    file: sf.path.clone(),
+                    line,
+                    message: format!(
+                        "raw `{what}` in `{fn_name}` is invisible to the fault plane; \
+                         route it through a `store::faults` shim or add a `faults::fire` \
+                         checkpoint in this fn"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,23 @@
+// Seeded-bad fixture for annotation handling: malformed annotations
+// are `lint-annotation` findings; the one well-formed annotation
+// suppresses exactly its own fn, and only for its own pass.
+// Never compiled — fed to the pass as text by analysis/mod.rs tests.
+
+// lint: allow(fault-coverage)
+pub fn reasonless(req: &[u8]) -> u8 {
+    req.len() as u8
+}
+
+// lint: allow(no-such-pass) the pass name is wrong, so this is flagged
+pub fn unknown_pass(req: &[u8]) -> u8 {
+    req.len() as u8
+}
+
+// lint: allow(no-panic-paths) fixture: poison here is unreachable by construction
+pub fn annotated(req: &[u8]) -> u8 {
+    req[0]
+}
+
+pub fn unannotated(req: &[u8]) -> u8 {
+    req[0]
+}

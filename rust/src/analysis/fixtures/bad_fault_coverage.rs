@@ -1,0 +1,23 @@
+// Seeded-bad fixture for the `fault-coverage` pass: durable-path
+// filesystem mutations that never route through `store::faults`.
+// Never compiled — fed to the pass as text by analysis/mod.rs tests.
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Four raw durable ops, zero `faults::` reach — four findings.
+pub fn install_unchecked(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_data()?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// The same shape with a fault checkpoint — covered, no findings.
+pub fn install_shimmed(path: &Path) -> std::io::Result<()> {
+    faults::fire("fixture.create")?;
+    let _f = File::create(path)?;
+    Ok(())
+}

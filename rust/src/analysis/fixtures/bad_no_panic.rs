@@ -1,0 +1,12 @@
+// Seeded-bad fixture for the `no-panic-paths` pass: every banned
+// token class in one served-path fn.
+// Never compiled — fed to the pass as text by analysis/mod.rs tests.
+
+pub fn dispatch(req: &[u8]) -> u8 {
+    let first = req[0];
+    let parsed: u8 = std::str::from_utf8(&req[1..]).unwrap().parse().expect("digits");
+    if first == 0 {
+        panic!("zero opcode");
+    }
+    parsed
+}

@@ -1,0 +1,18 @@
+// Seeded-bad fixture for the `opcode-symmetry` pass: a mini wire-op
+// table where every layer is out of sync with some row.
+// Never compiled — fed to the pass as text by analysis/mod.rs tests.
+
+/// Served by the fixture server, client has `fn ping`, but the fixture
+/// `main.rs` lists no `ping` verb — two CLI findings.
+pub const PING: u8 = 1;
+/// Declared but absent from ALL — an orphan const finding.
+pub const ORPHAN: u8 = 2;
+/// In ALL but with no dispatch arm and no client method.
+pub const PING2: u8 = 3;
+
+pub const ALL: &[WireOp] = &[
+    WireOp { code: PING, name: "PING", client_method: "ping", cli: Some("ping") },
+    WireOp { code: PING2, name: "PING2", client_method: "orphan", cli: None },
+    // `GONE` is never declared — an undeclared-const finding
+    WireOp { code: GONE, name: "GONE", client_method: "gone", cli: None },
+];

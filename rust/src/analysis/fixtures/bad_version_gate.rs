@@ -1,0 +1,28 @@
+// Seeded-bad fixture for the `version-gate` pass: a wal.rs-shaped
+// source declaring FORMAT_VERSION 7, used to exercise the
+// missing-pin and manifest-drift findings against synthetic pins.
+// Never compiled — fed to the pass as text by analysis/mod.rs tests.
+
+const SNAP_MAGIC: &[u8; 8] = b"FIXSNAP0";
+const WAL_MAGIC: &[u8; 8] = b"FIXWAL00";
+const FORMAT_VERSION: u32 = 7;
+const HEADER_LEN: usize = 20;
+
+pub enum WalRecord {
+    /// a doc comment between variants must not enter the manifest
+    Ping { nonce: u64 },
+    Pong,
+}
+
+const TAG_PING: u8 = 1;
+const TAG_PONG: u8 = 2; // trailing comments are cut before pinning
+
+impl Fixture {
+    fn write_snapshot_file(&self) -> std::io::Result<()> {
+        let mut out = Vec::new();
+        out.extend_from_slice(SNAP_MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        self.body.encode_into(&mut out);
+        install(&out)
+    }
+}

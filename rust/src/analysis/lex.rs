@@ -1,0 +1,464 @@
+//! Comment- and string-aware source model for the lint passes.
+//!
+//! Deliberately **not** a Rust parser. [`SourceFile`] blanks comment
+//! text and string/char-literal contents with spaces — preserving byte
+//! offsets and line structure exactly — records every line comment,
+//! and recovers `fn` spans and `#[cfg(test)]` module spans by brace
+//! matching over the cleaned text. That is enough for the token-level
+//! passes to scan without being fooled by `panic!` in a doc comment or
+//! `File::create` inside an error-message string, while staying a few
+//! hundred lines with zero dependencies.
+//!
+//! Handled literal forms: `//` and nested `/* */` comments, plain and
+//! byte strings (`"…"`, `b"…"`), raw and raw-byte strings
+//! (`r"…"`, `r#"…"#`, `br#"…"#`), char and byte-char literals
+//! (`'x'`, `b'x'`, `'\n'`, `'\u{…}'`), and lifetimes/labels (`'a`,
+//! `'outer:`). Accepted limitation, absent from this codebase:
+//! a multibyte char literal (`'é'`) is treated as a lifetime. The
+//! self-run lint test is the backstop if a blind spot ever matters.
+
+use std::ops::Range;
+
+/// One source file, cleaned for token scanning.
+pub struct SourceFile {
+    /// display path, `/`-separated, relative to the lint root
+    pub path: String,
+    /// original text (string literals visible — table parsing)
+    pub raw: String,
+    /// same byte length as `raw`: comment text and literal contents
+    /// replaced by spaces (delimiters kept), newlines preserved
+    pub cleaned: String,
+    /// byte offset of each line start (index 0 = line 1)
+    line_starts: Vec<usize>,
+    /// every `//`-style comment, in file order
+    pub comments: Vec<Comment>,
+}
+
+/// One `//` comment (doc comments included — callers filter).
+pub struct Comment {
+    /// 1-based line
+    pub line: usize,
+    /// full text including the leading slashes
+    pub text: String,
+    /// code precedes it on the same line (a trailing comment)
+    pub trailing: bool,
+}
+
+/// A `fn` item: where it starts, where its body ends, and the body's
+/// byte range in `cleaned`/`raw`. Bodyless trait methods are skipped.
+pub struct FnSpan {
+    pub name: String,
+    /// 1-based line of the `fn` keyword
+    pub start_line: usize,
+    /// 1-based line of the closing brace
+    pub end_line: usize,
+    /// byte range strictly inside the braces
+    pub body: Range<usize>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, raw: &str) -> Self {
+        let (cleaned, comments) = clean(raw);
+        debug_assert_eq!(cleaned.len(), raw.len(), "cleaning must preserve offsets");
+        let mut line_starts = vec![0];
+        for (i, b) in raw.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        Self { path: path.to_string(), raw: raw.to_string(), cleaned, line_starts, comments }
+    }
+
+    /// 1-based line containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= offset)
+    }
+
+    pub fn line_count(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// Cleaned text of a 1-based line (without the newline).
+    pub fn line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self.line_starts.get(line).map_or(self.cleaned.len(), |&e| e - 1);
+        &self.cleaned[start..end.max(start)]
+    }
+
+    /// Every `fn` item with a body, nested ones included, in order of
+    /// the `fn` keyword. `fn(u32) -> u32` pointer *types* never match:
+    /// the keyword must be followed by an identifier.
+    pub fn fn_spans(&self) -> Vec<FnSpan> {
+        let c = self.cleaned.as_bytes();
+        let mut spans = Vec::new();
+        let mut i = 0;
+        while i + 2 < c.len() {
+            let at_kw = c[i] == b'f'
+                && c[i + 1] == b'n'
+                && (i == 0 || !is_ident(c[i - 1]))
+                && c[i + 2].is_ascii_whitespace();
+            if !at_kw {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 2;
+            while j < c.len() && c[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            let name_start = j;
+            while j < c.len() && is_ident(c[j]) {
+                j += 1;
+            }
+            if j == name_start {
+                i = j.max(i + 1);
+                continue;
+            }
+            let name = self.cleaned[name_start..j].to_string();
+            // body opens at the first `{` before any `;` (a `;` first
+            // means a bodyless trait-method declaration)
+            let mut k = j;
+            while k < c.len() && c[k] != b'{' && c[k] != b';' {
+                k += 1;
+            }
+            if k < c.len() && c[k] == b'{' {
+                if let Some(end) = match_brace(c, k) {
+                    spans.push(FnSpan {
+                        name,
+                        start_line: self.line_of(i),
+                        end_line: self.line_of(end),
+                        body: k + 1..end,
+                    });
+                }
+            }
+            // resume right after the name so nested fns are still seen
+            i = j;
+        }
+        spans
+    }
+
+    /// Line ranges (1-based, inclusive) of `#[cfg(test)]` modules —
+    /// test code is exempt from the production-path passes.
+    pub fn test_spans(&self) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut line = 1;
+        while line <= self.line_count() {
+            if self.line(line).trim() == "#[cfg(test)]" {
+                let attr_end = self.line_starts[line - 1] + self.line(line).len();
+                if let Some(rel) = self.cleaned[attr_end..].find('{') {
+                    let open = attr_end + rel;
+                    if let Some(end) = match_brace(self.cleaned.as_bytes(), open) {
+                        let end_line = self.line_of(end);
+                        out.push(line..end_line + 1);
+                        line = end_line + 1;
+                        continue;
+                    }
+                }
+            }
+            line += 1;
+        }
+        out
+    }
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offset of the `}` matching the `{` at `open`.
+pub fn match_brace(bytes: &[u8], open: usize) -> Option<usize> {
+    debug_assert_eq!(bytes[open], b'{');
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The state machine: blank comments and literal contents, keep
+/// delimiters and newlines, collect line comments.
+fn clean(raw: &str) -> (String, Vec<Comment>) {
+    let b = raw.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut line_has_code = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\n' => {
+                out.push(b'\n');
+                line += 1;
+                line_has_code = false;
+                i += 1;
+            }
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                comments.push(Comment {
+                    line,
+                    text: raw[start..i].to_string(),
+                    trailing: line_has_code,
+                });
+                out.resize(out.len() + (i - start), b' ');
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                out.extend_from_slice(b"  ");
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                        line_has_code = false;
+                        i += 1;
+                    } else {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                line_has_code = true;
+                i = blank_quoted(b, i, &mut out, &mut line);
+            }
+            b'b' if !prev_is_ident(b, i) => {
+                line_has_code = true;
+                match b.get(i + 1) {
+                    Some(&b'"') => {
+                        out.push(b'b');
+                        i = blank_quoted(b, i + 1, &mut out, &mut line);
+                    }
+                    Some(&b'\'') => {
+                        out.push(b'b');
+                        i = char_or_lifetime(b, i + 1, &mut out);
+                    }
+                    Some(&b'r') if raw_str_quote(b, i + 2).is_some() => {
+                        out.extend_from_slice(b"br");
+                        i = blank_raw(b, i + 2, &mut out, &mut line);
+                    }
+                    _ => {
+                        out.push(b'b');
+                        i += 1;
+                    }
+                }
+            }
+            b'r' if !prev_is_ident(b, i) && raw_str_quote(b, i + 1).is_some() => {
+                line_has_code = true;
+                out.push(b'r');
+                i = blank_raw(b, i + 1, &mut out, &mut line);
+            }
+            b'\'' => {
+                line_has_code = true;
+                i = char_or_lifetime(b, i, &mut out);
+            }
+            c => {
+                if c != b' ' && c != b'\t' {
+                    line_has_code = true;
+                }
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    let cleaned = String::from_utf8(out).unwrap_or_else(|_| raw.to_string());
+    (cleaned, comments)
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && is_ident(b[i - 1])
+}
+
+/// `#`-count + quote check for a raw-string start at `i` (the byte
+/// after `r` / `br`). Returns the offset of the opening `"`.
+fn raw_str_quote(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    (b.get(j) == Some(&b'"')).then_some(j)
+}
+
+/// Blank a plain/byte string starting at the `"` at `i`; returns the
+/// index past the closing quote. Escapes are blanked pairwise so `\"`
+/// cannot terminate early; newlines inside survive for line tracking —
+/// including one consumed by a `\`-newline continuation escape.
+fn blank_quoted(b: &[u8], i: usize, out: &mut Vec<u8>, line: &mut usize) -> usize {
+    out.push(b'"');
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' if j + 1 < b.len() => {
+                if b[j + 1] == b'\n' {
+                    out.extend_from_slice(b" \n");
+                    *line += 1;
+                } else {
+                    out.extend_from_slice(b"  ");
+                }
+                j += 2;
+            }
+            b'"' => {
+                out.push(b'"');
+                return j + 1;
+            }
+            b'\n' => {
+                out.push(b'\n');
+                *line += 1;
+                j += 1;
+            }
+            _ => {
+                out.push(b' ');
+                j += 1;
+            }
+        }
+    }
+    j
+}
+
+/// Blank a raw (byte) string: `i` points at the first `#` or the `"`;
+/// contents end at `"` followed by the same number of `#`s.
+fn blank_raw(b: &[u8], i: usize, out: &mut Vec<u8>, line: &mut usize) -> usize {
+    let quote = match raw_str_quote(b, i) {
+        Some(q) => q,
+        None => return i,
+    };
+    let hashes = quote - i;
+    out.resize(out.len() + hashes, b'#');
+    out.push(b'"');
+    let mut j = quote + 1;
+    while j < b.len() {
+        let closes = b[j] == b'"'
+            && b.get(j + 1..j + 1 + hashes).is_some_and(|tail| tail.iter().all(|&h| h == b'#'));
+        if closes {
+            out.push(b'"');
+            out.resize(out.len() + hashes, b'#');
+            return j + 1 + hashes;
+        }
+        if b[j] == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Disambiguate `'` at `i`: a char literal (`'x'`, `'\n'`, `'\u{…}'`)
+/// is blanked; a lifetime or loop label passes through untouched.
+fn char_or_lifetime(b: &[u8], i: usize, out: &mut Vec<u8>) -> usize {
+    if b.get(i + 1) == Some(&b'\\') {
+        // escaped char literal: blank through the closing quote
+        out.push(b'\'');
+        out.extend_from_slice(b"  ");
+        let mut j = i + 3;
+        while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+            out.push(b' ');
+            j += 1;
+        }
+        if b.get(j) == Some(&b'\'') {
+            out.push(b'\'');
+            j += 1;
+        }
+        return j;
+    }
+    if b.get(i + 2) == Some(&b'\'') && b.get(i + 1).is_some_and(|&c| c != b'\'' && c != b'\\') {
+        out.extend_from_slice(b"' '");
+        return i + 3;
+    }
+    out.push(b'\'');
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cleaning_blanks_comments_and_literals_but_keeps_offsets() {
+        let src = r#"fn f() -> u8 { // panic! here is prose
+    let s = "a panic! inside a string";
+    let c = 'x';
+    let lt: &'static str = s; /* and panic!
+       across lines */
+    0
+}
+"#;
+        let sf = SourceFile::parse("t.rs", src);
+        assert_eq!(sf.cleaned.len(), src.len());
+        assert!(!sf.cleaned.contains("panic!"), "no panic token may survive cleaning");
+        assert!(sf.cleaned.contains("'static"), "lifetimes survive");
+        assert_eq!(sf.comments.len(), 1);
+        assert!(sf.comments[0].trailing);
+        // every newline is preserved, so line math holds
+        assert_eq!(
+            sf.cleaned.bytes().filter(|&b| b == b'\n').count(),
+            src.bytes().filter(|&b| b == b'\n').count()
+        );
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = "let a = r#\"panic! \"quoted\"\"#; let b = b\"panic!\"; let c = br#\"x\"#;";
+        let sf = SourceFile::parse("t.rs", src);
+        assert_eq!(sf.cleaned.len(), src.len());
+        assert!(!sf.cleaned.contains("panic!"));
+        assert!(!sf.cleaned.contains("quoted"));
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_skip_trait_decls() {
+        let src = concat!(
+            "trait T { fn decl(&self); }\n",
+            "fn outer() {\n    fn inner() { let _ = 1; }\n    inner();\n}\n"
+        );
+        let sf = SourceFile::parse("t.rs", src);
+        let spans = sf.fn_spans();
+        let names: Vec<_> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["outer", "inner"], "decl has no body; nested fns are seen");
+        let outer = &spans[0];
+        assert_eq!((outer.start_line, outer.end_line), (2, 5));
+        assert!(sf.cleaned[outer.body.clone()].contains("inner()"));
+    }
+
+    #[test]
+    fn test_spans_find_cfg_test_modules() {
+        let src = concat!(
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n",
+            "    #[test]\n    fn t() { assert!(true); }\n}\n"
+        );
+        let sf = SourceFile::parse("t.rs", src);
+        let spans = sf.test_spans();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].contains(&5), "test fn line is inside the span");
+        assert!(!spans[0].contains(&1), "live code is outside");
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_unbalance_strings() {
+        let src = "let q = '\"'; let s = \"after\"; let esc = '\\''; let done = 1;";
+        let sf = SourceFile::parse("t.rs", src);
+        assert_eq!(sf.cleaned.len(), src.len());
+        assert!(!sf.cleaned.contains("after"), "string after a quote char literal is blanked");
+        assert!(sf.cleaned.contains("done"), "code after an escaped-quote literal survives");
+    }
+}

@@ -1,0 +1,379 @@
+//! Self-checking invariant plane: `hocs lint`.
+//!
+//! The store's correctness arguments lean on cross-cutting invariants
+//! that no single `#[test]` can see: every durable write must be
+//! fault-injectable, every wire opcode must exist at every protocol
+//! layer, served paths must not panic, and the on-disk format must not
+//! drift without a version bump. This module is a purpose-built static
+//! analyzer for exactly those four contracts — a few hundred lines of
+//! comment/string-aware scanning (see [`lex`]), no parser dependency,
+//! run as `hocs lint` and as a unit test over the shipped tree.
+//!
+//! # Pass catalog
+//!
+//! | pass | scope | contract |
+//! |------|-------|----------|
+//! | `fault-coverage` ([`fault_coverage`]) | `store/**` | raw `File::create` / `.write_all` / `.sync_data` / `.sync_all` / `fs::rename` only inside fns that touch `store::faults` |
+//! | `opcode-symmetry` ([`opcode_symmetry`]) | wire_ops / server / client / main | every `ALL`-table row has a dispatch arm, a client method, and (if named) a CLI verb in `USAGE` plus a match arm; no orphan consts or dangling `op::` refs |
+//! | `no-panic-paths` ([`no_panic`]) | scoped fns (see `no_panic::SCOPES`) | no `unwrap` / `expect` / panicking macros / indexing on request-serving and durability paths |
+//! | `version-gate` ([`version_gate`]) | `store/wal.rs` | WAL record shapes, tags, header consts, and snapshot sections match the manifest pinned for the current `FORMAT_VERSION` |
+//!
+//! # Annotation grammar
+//!
+//! A violation that is *provably fine* is silenced in place:
+//!
+//! ```text
+//! // lint: allow(<pass>) <reason>
+//! ```
+//!
+//! A **trailing** comment covers its own line. An **own-line** comment
+//! covers the next code line (attribute lines are skipped) — or, if
+//! that line starts a `fn`, the whole fn. The reason is mandatory and
+//! the pass name must exist: an empty reason or an unknown pass is
+//! itself a violation (`lint-annotation`), so the escape hatch cannot
+//! rot into a blanket mute.
+//!
+//! # Adding a pass
+//!
+//! 1. Create `analysis/<pass>.rs` with `pub const PASS: &str` and a
+//!    `check(&SourceFile) -> Vec<Violation>` (take extra inputs via an
+//!    `Inputs` struct if the pass is cross-file, keeping it callable
+//!    on fixtures).
+//! 2. Wire it into [`run_lint`] and add `PASS` to [`PASS_NAMES`] so
+//!    annotations can reference it.
+//! 3. Seed a known-bad fixture under `analysis/fixtures/` and assert
+//!    in this module's tests that the pass flags it — a pass without a
+//!    failing fixture is a pass that may silently match nothing.
+//!
+//! The `fixtures/` directory is not compiled (no `mod` declarations)
+//! and the source walker skips it, so the deliberately-bad code never
+//! reaches rustc, clippy, or the lint's own self-run.
+
+pub mod fault_coverage;
+pub mod lex;
+pub mod no_panic;
+pub mod opcode_symmetry;
+pub mod version_gate;
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use self::lex::SourceFile;
+
+/// Pass names an annotation may reference.
+pub const PASS_NAMES: &[&str] =
+    &[fault_coverage::PASS, opcode_symmetry::PASS, no_panic::PASS, version_gate::PASS];
+
+/// Malformed annotations are violations of this pseudo-pass (and are
+/// themselves not annotatable away).
+pub const ANNOTATION_PASS: &str = "lint-annotation";
+
+/// One finding. `line` 0 means the finding is about the file (or a
+/// cross-file relationship) rather than a specific line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.file, self.pass, self.message)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+        }
+    }
+}
+
+pub fn render(violations: &[Violation]) -> String {
+    violations.iter().map(|v| format!("{v}\n")).collect()
+}
+
+/// Lint every `.rs` file under `root` (paths in findings are
+/// `/`-separated and root-relative). The cross-file `opcode-symmetry`
+/// pass runs when all four of its surfaces are present under `root`;
+/// `version-gate` runs on `store/wal.rs`.
+pub fn run_lint(root: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect(root, root, &mut files)?;
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    let sources: Vec<SourceFile> =
+        files.iter().map(|(rel, text)| SourceFile::parse(rel, text)).collect();
+
+    let mut violations = Vec::new();
+    let mut allows = Vec::new();
+    for sf in &sources {
+        violations.extend(fault_coverage::check(sf));
+        violations.extend(no_panic::check(sf));
+        if sf.path == "store/wal.rs" {
+            violations.extend(version_gate::check(sf));
+        }
+        let (file_allows, bad) = parse_allows(sf);
+        allows.extend(file_allows);
+        violations.extend(bad);
+    }
+    let find = |p: &str| sources.iter().find(|sf| sf.path == p);
+    if let (Some(wire_ops), Some(server), Some(client), Some(main)) = (
+        find("store/wire_ops.rs"),
+        find("store/server.rs"),
+        find("store/client.rs"),
+        find("main.rs"),
+    ) {
+        let inputs = opcode_symmetry::Inputs { wire_ops, server, client, main };
+        violations.extend(opcode_symmetry::check(&inputs));
+    }
+
+    violations.retain(|v| {
+        v.pass == ANNOTATION_PASS
+            || !allows.iter().any(|a| {
+                a.file == v.file && a.pass == v.pass && v.line >= a.first && v.line <= a.last
+            })
+    });
+    violations.sort_by(|a, b| (&a.file, a.line, a.pass).cmp(&(&b.file, b.line, b.pass)));
+    Ok(violations)
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {dir:?}"))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            if entry.file_name() != "fixtures" {
+                collect(root, &path, out)?;
+            }
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+/// A resolved `// lint: allow(<pass>) <reason>` annotation: silences
+/// `pass` findings on lines `first..=last` of `file`.
+struct Allow {
+    file: String,
+    pass: &'static str,
+    first: usize,
+    last: usize,
+}
+
+fn parse_allows(sf: &SourceFile) -> (Vec<Allow>, Vec<Violation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    let spans = sf.fn_spans();
+    for c in &sf.comments {
+        // doc comments (`///`, `//!`) never carry directives — a
+        // literal example in module docs must not become an allow
+        if c.text.starts_with("///") || c.text.starts_with("//!") {
+            continue;
+        }
+        let body = c.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:") else { continue };
+        let mut flag = |message: String| {
+            bad.push(Violation {
+                pass: ANNOTATION_PASS,
+                file: sf.path.clone(),
+                line: c.line,
+                message,
+            });
+        };
+        let rest = rest.trim();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            flag(format!(
+                "unrecognized lint directive `{rest}`; expected `allow(<pass>) <reason>`"
+            ));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            flag("unterminated `allow(` in lint annotation".to_string());
+            continue;
+        };
+        let pass_name = &inner[..close];
+        let Some(pass) = PASS_NAMES.iter().copied().find(|p| *p == pass_name) else {
+            flag(format!(
+                "unknown pass `{}` in lint annotation (known: {})",
+                &inner[..close],
+                PASS_NAMES.join(", ")
+            ));
+            continue;
+        };
+        if inner[close + 1..].trim().is_empty() {
+            flag(format!("`allow({pass})` needs a reason — say why this site is safe"));
+            continue;
+        }
+        let (first, last) = if c.trailing {
+            (c.line, c.line)
+        } else {
+            let mut t = c.line + 1;
+            while t <= sf.line_count() {
+                let l = sf.line(t).trim();
+                if !l.is_empty() && !l.starts_with("#[") {
+                    break;
+                }
+                t += 1;
+            }
+            if t > sf.line_count() {
+                flag(format!("`allow({pass})` covers no code (end of file)"));
+                continue;
+            }
+            match spans.iter().find(|s| s.start_line == t) {
+                Some(s) => (t, s.end_line),
+                None => (t, t),
+            }
+        };
+        allows.push(Allow { file: sf.path.clone(), pass, first, last });
+    }
+    (allows, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn src_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+    }
+
+    /// The shipped tree holds its own invariants — the same check CI
+    /// runs as `hocs lint --deny`.
+    #[test]
+    fn shipped_tree_is_lint_clean() {
+        let violations = run_lint(&src_root()).expect("lint run");
+        assert!(
+            violations.is_empty(),
+            "lint violations on the shipped tree:\n{}",
+            render(&violations)
+        );
+    }
+
+    #[test]
+    fn fault_coverage_flags_unrouted_durable_writes() {
+        let sf = SourceFile::parse(
+            "store/fixture.rs",
+            include_str!("fixtures/bad_fault_coverage.rs"),
+        );
+        let vs = fault_coverage::check(&sf);
+        assert_eq!(vs.len(), 4, "create/write_all/sync_data/rename all flagged:\n{}", render(&vs));
+        assert!(vs.iter().all(|v| v.pass == fault_coverage::PASS));
+        // the shimmed sibling fn in the same fixture is covered
+        assert!(!render(&vs).contains("install_shimmed"));
+    }
+
+    #[test]
+    fn no_panic_flags_every_token_class() {
+        let sf = SourceFile::parse("store/fixture.rs", include_str!("fixtures/bad_no_panic.rs"));
+        let vs = no_panic::check_fns(&sf, &["dispatch"]);
+        let text = render(&vs);
+        for needle in ["`.unwrap()`", "`.expect`", "`panic!`", "indexing"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        // and a missing scoped fn is itself a finding
+        let missing = no_panic::check_fns(&sf, &["dispatch", "gone"]);
+        assert!(render(&missing).contains("scoped fn `gone` not found"));
+    }
+
+    #[test]
+    fn opcode_symmetry_flags_every_missing_layer() {
+        let wire_ops = SourceFile::parse(
+            "store/wire_ops.rs",
+            include_str!("fixtures/bad_opcode_symmetry.rs"),
+        );
+        let server = SourceFile::parse(
+            "store/server.rs",
+            "fn dispatch(opcode: u8) {\n    match opcode {\n        op::PING => {}\n        op::GHOST => {}\n        _ => {}\n    }\n}\n",
+        );
+        let client = SourceFile::parse(
+            "store/client.rs",
+            "impl Client {\n    pub fn ping(&self) {}\n}\n",
+        );
+        let main = SourceFile::parse(
+            "main.rs",
+            "const USAGE: &str = \"usage: hocs <status>\";\nfn main() {\n    match verb {\n        \"status\" => {}\n        _ => {}\n    }\n}\n",
+        );
+        let vs = opcode_symmetry::check(&opcode_symmetry::Inputs {
+            wire_ops: &wire_ops,
+            server: &server,
+            client: &client,
+            main: &main,
+        });
+        let text = render(&vs);
+        for needle in [
+            "`ORPHAN` is missing from the ALL table",
+            "undeclared opcode const `GONE`",
+            "no dispatch arm `op::PING2 =>`",
+            "no client method `fn orphan(`",
+            "CLI verb `ping` (wire op PING) is not listed in USAGE",
+            "CLI verb `ping` (wire op PING) has no match arm",
+            "no unknown-opcode rejection",
+            "`op::GHOST` does not name a declared wire-op const",
+        ] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn version_gate_flags_drift_and_missing_pins() {
+        let sf = SourceFile::parse("store/wal.rs", include_str!("fixtures/bad_version_gate.rs"));
+        let (manifest, version) = version_gate::extract_manifest(&sf.raw).expect("extracts");
+        assert_eq!(version, 7);
+        // matching pin: clean
+        assert!(version_gate::check_against(&sf, &[(7, &manifest)]).is_empty());
+        // no pin for the declared version
+        let vs = version_gate::check_against(&sf, &[(6, &manifest)]);
+        assert!(render(&vs).contains("no pinned manifest"), "{}", render(&vs));
+        // pinned but drifted (one tag renamed)
+        let drifted = manifest.replace("TAG_PING", "TAG_RENAMED");
+        let vs = version_gate::check_against(&sf, &[(7, &drifted)]);
+        assert!(render(&vs).contains("drifted without a FORMAT_VERSION bump"), "{}", render(&vs));
+    }
+
+    #[test]
+    fn annotations_require_reasons_and_known_passes() {
+        let sf = SourceFile::parse("store/fixture.rs", include_str!("fixtures/bad_annotation.rs"));
+        let (allows, bad) = parse_allows(&sf);
+        let text = render(&bad);
+        assert!(text.contains("needs a reason"), "{text}");
+        assert!(text.contains("unknown pass `no-such-pass`"), "{text}");
+        // the one well-formed annotation resolved to a fn-level allow
+        assert_eq!(allows.len(), 1);
+        assert!(allows[0].last > allows[0].first, "fn-level span covers the body");
+    }
+
+    #[test]
+    fn annotations_suppress_only_their_pass_and_span() {
+        let sf = SourceFile::parse("store/fixture.rs", include_str!("fixtures/bad_annotation.rs"));
+        let (allows, _) = parse_allows(&sf);
+        let vs = no_panic::check_fns(&sf, &["annotated", "unannotated"]);
+        let survivors: Vec<_> = vs
+            .iter()
+            .filter(|v| {
+                !allows.iter().any(|a| {
+                    a.file == v.file && a.pass == v.pass && v.line >= a.first && v.line <= a.last
+                })
+            })
+            .collect();
+        assert!(!vs.is_empty(), "fixture produces raw findings");
+        assert!(
+            survivors.iter().all(|v| render(&[(*v).clone()]).contains("unannotated")),
+            "only the unannotated fn's findings survive:\n{}",
+            render(&vs)
+        );
+        assert!(!survivors.is_empty(), "the unannotated fn is still flagged");
+    }
+}

@@ -1,0 +1,139 @@
+//! `no-panic-paths`: request-serving and durability code must return
+//! errors, not panic.
+//!
+//! A panic in the server loop kills the connection task; a panic while
+//! holding the WAL commit gate can poison it for every other writer; a
+//! panic in the replicator silently stops anti-entropy. The scoped
+//! functions below are the paths where an attacker-supplied frame or a
+//! torn file on disk must surface as `Err`, so `.unwrap()`,
+//! `.expect(…)`, the panicking macros, and slice/array indexing are
+//! all flagged inside them.
+//!
+//! The scope list is intentionally explicit (file + fn names): renames
+//! fail the lint until the list is updated, which is the point — the
+//! panic-freedom contract should not silently evaporate in a refactor.
+//! Indexing is detected heuristically: a `[` immediately preceded by
+//! an identifier, `)`, or `]`. Attributes (`#[…]`), array types
+//! (`[u8; 4]`), and `vec![…]` do not match. Sites that are provably
+//! fine (e.g. a lock poisoned only by a panic elsewhere, where
+//! propagating would double-fail) carry
+//! `// lint: allow(no-panic-paths) <reason>` annotations.
+
+use super::lex::SourceFile;
+use super::Violation;
+
+pub const PASS: &str = "no-panic-paths";
+
+/// (file path, scoped fn names). Every name must resolve to at least
+/// one non-test `fn` in that file.
+pub const SCOPES: &[(&str, &[&str])] = &[
+    (
+        "store/server.rs",
+        &[
+            "accept_loop",
+            "connection_loop",
+            "handle_request",
+            "dispatch",
+            "write_frame",
+            "read_frame_into",
+            "put_entries",
+            "tensor_family",
+        ],
+    ),
+    (
+        "store/wal.rs",
+        &[
+            "commit_frame",
+            "append_frames",
+            "write_and_sync",
+            "append_record",
+            "append_payload",
+            "gate_shared",
+            "gate_excl",
+        ],
+    ),
+    ("store/replica/mod.rs", &["run", "sync_peer", "sync_tensors", "stage"]),
+];
+
+const TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+pub fn check(sf: &SourceFile) -> Vec<Violation> {
+    let Some((_, fns)) = SCOPES.iter().find(|(path, _)| *path == sf.path) else {
+        return Vec::new();
+    };
+    check_fns(sf, fns)
+}
+
+/// Split from [`check`] so fixtures can be scanned under an arbitrary
+/// fn list without masquerading as a scoped file.
+pub fn check_fns(sf: &SourceFile, fns: &[&str]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let spans = sf.fn_spans();
+    let tests = sf.test_spans();
+    for name in fns {
+        let mut found = false;
+        for span in spans.iter().filter(|s| s.name == *name) {
+            if tests.iter().any(|t| t.contains(&span.start_line)) {
+                continue;
+            }
+            found = true;
+            scan_body(sf, span.body.clone(), name, &mut out);
+        }
+        if !found {
+            out.push(Violation {
+                pass: PASS,
+                file: sf.path.clone(),
+                line: 0,
+                message: format!(
+                    "scoped fn `{name}` not found — update the no-panic-paths scope list \
+                     in analysis/no_panic.rs to match the refactor"
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn scan_body(
+    sf: &SourceFile,
+    body: std::ops::Range<usize>,
+    fn_name: &str,
+    out: &mut Vec<Violation>,
+) {
+    let text = &sf.cleaned[body.clone()];
+    for token in TOKENS {
+        let mut at = 0;
+        while let Some(rel) = text[at..].find(token) {
+            let off = at + rel;
+            at = off + token.len();
+            out.push(Violation {
+                pass: PASS,
+                file: sf.path.clone(),
+                line: sf.line_of(body.start + off),
+                message: format!(
+                    "`{}` in `{fn_name}` can panic on a served path; return an error instead",
+                    token.trim_end_matches('(')
+                ),
+            });
+        }
+    }
+    // indexing heuristic: `[` directly after an ident / `)` / `]`
+    let bytes = text.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'[' && i > 0 {
+            let p = bytes[i - 1];
+            if super::lex::is_ident(p) || p == b')' || p == b']' {
+                out.push(Violation {
+                    pass: PASS,
+                    file: sf.path.clone(),
+                    line: sf.line_of(body.start + i),
+                    message: format!(
+                        "indexing in `{fn_name}` can panic on a served path; \
+                         use `.get(…)` and return an error"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! `opcode-symmetry`: the wire-protocol table is the single source of
+//! truth, and every surface that speaks the protocol must cover it.
+//!
+//! `store/wire_ops.rs` declares each opcode once, in the `ALL` table,
+//! with its canonical name, client method, and optional CLI verb. This
+//! pass re-parses that table from source and checks, for every row:
+//!
+//! * the `code` identifier is a declared `u8` const (and every
+//!   non-`STATUS_*` const appears in some row — no orphan opcodes);
+//! * `store/server.rs` has a dispatch arm `op::<NAME> =>` plus an
+//!   unknown-opcode rejection path (`op::unknown(`);
+//! * `store/client.rs` defines `fn <client_method>(` (the method may
+//!   build its frame via helpers, so no `op::` reference is required);
+//! * if the row names a CLI verb, `main.rs` lists it in `USAGE` and
+//!   matches it (`"<verb>" =>`);
+//! * every `op::<UPPERCASE>` reference in server/client resolves to a
+//!   declared const (catches dispatch arms for deleted opcodes).
+//!
+//! Adding an opcode and forgetting any one of those layers is exactly
+//! the drift this pass exists to stop.
+
+use super::lex::{is_ident, match_brace, SourceFile};
+use super::Violation;
+
+pub const PASS: &str = "opcode-symmetry";
+
+/// The four files the pass correlates. Split out so tests can feed
+/// seeded-bad fixtures for any single surface.
+pub struct Inputs<'a> {
+    pub wire_ops: &'a SourceFile,
+    pub server: &'a SourceFile,
+    pub client: &'a SourceFile,
+    pub main: &'a SourceFile,
+}
+
+struct OpRow {
+    const_name: String,
+    client_method: String,
+    cli: Option<String>,
+    line: usize,
+}
+
+pub fn check(inp: &Inputs) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let rows = parse_table(inp.wire_ops, &mut out);
+    let consts = parse_consts(inp.wire_ops);
+    let usage = usage_text(inp.main);
+
+    for (name, line) in &consts {
+        if !name.starts_with("STATUS_") && !rows.iter().any(|r| &r.const_name == name) {
+            out.push(Violation {
+                pass: PASS,
+                file: inp.wire_ops.path.clone(),
+                line: *line,
+                message: format!("opcode const `{name}` is missing from the ALL table"),
+            });
+        }
+    }
+
+    for row in &rows {
+        let name = &row.const_name;
+        if !consts.iter().any(|(n, _)| n == name) {
+            out.push(Violation {
+                pass: PASS,
+                file: inp.wire_ops.path.clone(),
+                line: row.line,
+                message: format!("ALL table references undeclared opcode const `{name}`"),
+            });
+            continue;
+        }
+        if !inp.server.cleaned.contains(&format!("op::{name} =>")) {
+            out.push(Violation {
+                pass: PASS,
+                file: inp.server.path.clone(),
+                line: 0,
+                message: format!("no dispatch arm `op::{name} =>` for wire op {name}"),
+            });
+        }
+        let method = &row.client_method;
+        if !inp.client.cleaned.contains(&format!("fn {method}(")) {
+            out.push(Violation {
+                pass: PASS,
+                file: inp.client.path.clone(),
+                line: 0,
+                message: format!("no client method `fn {method}(` for wire op {name}"),
+            });
+        }
+        if let Some(verb) = &row.cli {
+            if !contains_verb(&usage, verb) {
+                out.push(Violation {
+                    pass: PASS,
+                    file: inp.main.path.clone(),
+                    line: 0,
+                    message: format!("CLI verb `{verb}` (wire op {name}) is not listed in USAGE"),
+                });
+            }
+            if !inp.main.raw.contains(&format!("\"{verb}\" =>")) {
+                out.push(Violation {
+                    pass: PASS,
+                    file: inp.main.path.clone(),
+                    line: 0,
+                    message: format!("CLI verb `{verb}` (wire op {name}) has no match arm"),
+                });
+            }
+        }
+    }
+
+    if !inp.server.cleaned.contains("op::unknown(") {
+        out.push(Violation {
+            pass: PASS,
+            file: inp.server.path.clone(),
+            line: 0,
+            message: "server dispatch has no unknown-opcode rejection (`op::unknown(`)".to_string(),
+        });
+    }
+
+    for sf in [inp.server, inp.client] {
+        for (ident, line) in op_refs(sf) {
+            if !consts.iter().any(|(n, _)| *n == ident) {
+                out.push(Violation {
+                    pass: PASS,
+                    file: sf.path.clone(),
+                    line,
+                    message: format!("`op::{ident}` does not name a declared wire-op const"),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+/// Re-parse the `ALL` table rows from raw source (the string fields
+/// live inside literals, which cleaning blanks). Each row is a
+/// `WireOp { … }` struct expression; the `struct WireOp {` declaration
+/// itself is skipped.
+fn parse_table(wire: &SourceFile, out: &mut Vec<Violation>) -> Vec<OpRow> {
+    let mut rows = Vec::new();
+    let raw = &wire.raw;
+    let mut at = 0;
+    while let Some(rel) = raw[at..].find("WireOp {") {
+        let start = at + rel;
+        at = start + "WireOp ".len();
+        if raw[..start].trim_end().ends_with("struct") {
+            continue;
+        }
+        let open = start + "WireOp ".len();
+        let Some(end) = match_brace(raw.as_bytes(), open) else { break };
+        let body = &raw[open + 1..end];
+        let line = wire.line_of(start);
+        at = end + 1;
+        let Some(const_name) = field_ident(body, "code:") else {
+            out.push(Violation {
+                pass: PASS,
+                file: wire.path.clone(),
+                line,
+                message: "WireOp row has no parsable `code:` field".to_string(),
+            });
+            continue;
+        };
+        let Some(client_method) = field_str(body, "client_method:") else {
+            out.push(Violation {
+                pass: PASS,
+                file: wire.path.clone(),
+                line,
+                message: format!("WireOp row {const_name} has no parsable `client_method:` field"),
+            });
+            continue;
+        };
+        let cli = match field_cli(body) {
+            Ok(cli) => cli,
+            Err(()) => {
+                out.push(Violation {
+                    pass: PASS,
+                    file: wire.path.clone(),
+                    line,
+                    message: format!("WireOp row {const_name} has no parsable `cli:` field"),
+                });
+                continue;
+            }
+        };
+        rows.push(OpRow { const_name, client_method, cli, line });
+    }
+    if rows.is_empty() {
+        out.push(Violation {
+            pass: PASS,
+            file: wire.path.clone(),
+            line: 0,
+            message: "no WireOp rows found — ALL table missing or unparsable".to_string(),
+        });
+    }
+    rows
+}
+
+/// `pub const NAME: u8 = …;` declarations, with their lines.
+fn parse_consts(wire: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in wire.raw.lines().enumerate() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            if let Some(name) = rest.split(':').next() {
+                if rest[name.len()..].starts_with(": u8 = ") {
+                    out.push((name.to_string(), idx + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn field_ident(body: &str, key: &str) -> Option<String> {
+    let rest = body[body.find(key)? + key.len()..].trim_start();
+    let end = rest.bytes().position(|b| !is_ident(b)).unwrap_or(rest.len());
+    (end > 0).then(|| rest[..end].to_string())
+}
+
+fn field_str(body: &str, key: &str) -> Option<String> {
+    let rest = body[body.find(key)? + key.len()..].trim_start();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn field_cli(body: &str) -> Result<Option<String>, ()> {
+    let rest = body[body.find("cli:").ok_or(())? + "cli:".len()..].trim_start();
+    if rest.starts_with("None") {
+        return Ok(None);
+    }
+    let rest = rest.strip_prefix("Some(").ok_or(())?;
+    field_str(rest, "").map(Some).ok_or(())
+}
+
+/// Extract the `USAGE` string contents from `main.rs` raw text so the
+/// verb check looks at the help screen, not at incidental mentions.
+fn usage_text(main: &SourceFile) -> String {
+    let Some(p) = main.raw.find("const USAGE:") else { return String::new() };
+    let Some(q) = main.raw[p..].find('"') else { return String::new() };
+    let bytes = main.raw.as_bytes();
+    let mut i = p + q + 1;
+    let start = i;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => break,
+            _ => i += 1,
+        }
+    }
+    main.raw[start..i.min(bytes.len())].to_string()
+}
+
+/// `verb` appears in `text` delimited by non-verb characters, so
+/// `update` inside `update-batch` does not count.
+fn contains_verb(text: &str, verb: &str) -> bool {
+    let is_verb_char = |b: u8| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-';
+    let bytes = text.as_bytes();
+    let mut at = 0;
+    while let Some(rel) = text[at..].find(verb) {
+        let off = at + rel;
+        at = off + 1;
+        let before_ok = off == 0 || !is_verb_char(bytes[off - 1]);
+        let after_ok = off + verb.len() >= bytes.len() || !is_verb_char(bytes[off + verb.len()]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Every `op::IDENT` reference with an uppercase identifier in cleaned
+/// text (lowercase refs like `op::unknown` / `op::name` are helper
+/// calls, not opcode consts).
+fn op_refs(sf: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let needle = "op::";
+    let mut at = 0;
+    while let Some(rel) = sf.cleaned[at..].find(needle) {
+        let off = at + rel;
+        at = off + needle.len();
+        if off > 0 && is_ident(sf.cleaned.as_bytes()[off - 1]) {
+            continue; // wire_ops:: or some_op:: — not the `op` alias
+        }
+        let rest = &sf.cleaned[off + needle.len()..];
+        let end = rest.bytes().position(|b| !is_ident(b)).unwrap_or(rest.len());
+        let ident = &rest[..end];
+        if ident.starts_with(|c: char| c.is_ascii_uppercase()) {
+            out.push((ident.to_string(), sf.line_of(off)));
+        }
+    }
+    out
+}

@@ -1,0 +1,162 @@
+//! `version-gate`: the on-disk format cannot drift without a
+//! `FORMAT_VERSION` bump.
+//!
+//! The durable format is defined entirely in `store/wal.rs`: the
+//! header consts, the `WalRecord` enum (what the log can contain), the
+//! `TAG_*` record tags (how each variant is framed), and the snapshot
+//! section list in `write_snapshot_file` (what the image contains, in
+//! order). This pass extracts all four into a canonical text manifest
+//! and compares it against the pinned manifest for the current
+//! version, shipped as `analysis/format_manifest_v<N>.txt`.
+//!
+//! A deliberate format change is a three-line ritual: bump
+//! `FORMAT_VERSION`, run `hocs lint --print-manifest
+//! > rust/src/analysis/format_manifest_v<N>.txt`, add the
+//! `include_str!` pin below. An *accidental* change — a new enum
+//! variant, a reordered snapshot section, a retagged record — fails
+//! the lint with the first drifted line. The manifest is plain
+//! diffable text rather than a hash precisely so the failure shows
+//! *what* moved.
+//!
+//! Extraction is line-based over raw source: each candidate line is
+//! cut at its first `//` and trimmed, so comments move freely without
+//! touching the manifest. (A `//` inside a string literal on a
+//! format-defining line would cut early; none of the extracted line
+//! shapes carry URLs or comment-like strings.)
+
+use super::lex::SourceFile;
+use super::Violation;
+
+pub const PASS: &str = "version-gate";
+
+/// Pinned manifests, one per shipped `FORMAT_VERSION`.
+const PINS: &[(u32, &str)] = &[(5, include_str!("format_manifest_v5.txt"))];
+
+pub fn check(sf: &SourceFile) -> Vec<Violation> {
+    check_against(sf, PINS)
+}
+
+/// Split from [`check`] so fixtures can be validated against synthetic
+/// pin sets.
+pub fn check_against(sf: &SourceFile, pins: &[(u32, &str)]) -> Vec<Violation> {
+    let (manifest, version) = match extract_manifest(&sf.raw) {
+        Ok(m) => m,
+        Err(msg) => {
+            return vec![Violation { pass: PASS, file: sf.path.clone(), line: 0, message: msg }]
+        }
+    };
+    let Some((_, pinned)) = pins.iter().find(|(v, _)| *v == version) else {
+        return vec![Violation {
+            pass: PASS,
+            file: sf.path.clone(),
+            line: 0,
+            message: format!(
+                "FORMAT_VERSION {version} has no pinned manifest; generate one with \
+                 `hocs lint --print-manifest > rust/src/analysis/format_manifest_v{version}.txt` \
+                 and pin it in analysis/version_gate.rs"
+            ),
+        }];
+    };
+    if manifest == *pinned {
+        return Vec::new();
+    }
+    let drift = first_diff(&manifest, pinned);
+    vec![Violation {
+        pass: PASS,
+        file: sf.path.clone(),
+        line: 0,
+        message: format!(
+            "on-disk format drifted without a FORMAT_VERSION bump ({drift}); if the \
+             change is intentional, bump FORMAT_VERSION and re-pin the manifest"
+        ),
+    }]
+}
+
+/// Canonical format manifest for a `wal.rs`-shaped source, plus the
+/// `FORMAT_VERSION` it declares.
+pub fn extract_manifest(raw: &str) -> Result<(String, u32), String> {
+    let lines: Vec<&str> = raw.lines().collect();
+    let mut out = Vec::new();
+
+    out.push("[format]".to_string());
+    let mut version = None;
+    for prefix in
+        ["const FORMAT_VERSION:", "const SNAP_MAGIC:", "const WAL_MAGIC:", "const HEADER_LEN:"]
+    {
+        let Some(line) = lines.iter().map(|l| cut(l)).find(|l| l.starts_with(prefix)) else {
+            return Err(format!("format const `{prefix}` not found"));
+        };
+        if prefix == "const FORMAT_VERSION:" {
+            version = line
+                .split('=')
+                .nth(1)
+                .and_then(|v| v.trim().trim_end_matches(';').parse::<u32>().ok());
+        }
+        out.push(line.to_string());
+    }
+    let Some(version) = version else {
+        return Err("FORMAT_VERSION value is not a literal integer".to_string());
+    };
+
+    out.push("[wal-record-tags]".to_string());
+    let mut tags = 0;
+    for line in lines.iter().map(|l| cut(l)) {
+        if line.starts_with("const TAG_") {
+            out.push(line.to_string());
+            tags += 1;
+        }
+    }
+    if tags == 0 {
+        return Err("no `const TAG_` record tags found".to_string());
+    }
+
+    out.push("[wal-record-shapes]".to_string());
+    let Some(open) = lines.iter().position(|l| l.trim() == "pub enum WalRecord {") else {
+        return Err("`pub enum WalRecord {` not found".to_string());
+    };
+    let Some(close) = lines[open + 1..].iter().position(|l| l.starts_with('}')) else {
+        return Err("WalRecord enum is unterminated".to_string());
+    };
+    for line in &lines[open + 1..open + 1 + close] {
+        let line = cut(line);
+        if !line.is_empty() {
+            out.push(line.to_string());
+        }
+    }
+
+    out.push("[snapshot-sections]".to_string());
+    let Some(snap) = lines.iter().position(|l| l.contains("fn write_snapshot_file")) else {
+        return Err("`fn write_snapshot_file` not found".to_string());
+    };
+    let Some(end) = lines[snap..].iter().position(|l| *l == "    }") else {
+        return Err("write_snapshot_file is unterminated".to_string());
+    };
+    let mut sections = 0;
+    for line in &lines[snap..snap + end] {
+        let line = cut(line);
+        if line.starts_with("out.") || line.contains("&mut out") {
+            out.push(line.to_string());
+            sections += 1;
+        }
+    }
+    if sections == 0 {
+        return Err("no snapshot section lines found in write_snapshot_file".to_string());
+    }
+
+    Ok((out.join("\n") + "\n", version))
+}
+
+/// Cut a raw line at its first `//` and trim both ends.
+fn cut(line: &str) -> &str {
+    line.find("//").map_or(line, |p| &line[..p]).trim()
+}
+
+fn first_diff(got: &str, pinned: &str) -> String {
+    for (i, (g, p)) in got.lines().zip(pinned.lines()).enumerate() {
+        if g != p {
+            return format!("manifest line {}: pinned `{p}` vs source `{g}`", i + 1);
+        }
+    }
+    let (g, p) = (got.lines().count(), pinned.lines().count());
+    format!("manifest length changed: pinned {p} lines vs source {g}")
+}

@@ -43,6 +43,7 @@
 //! assert_eq!(approx.dims(), t.dims());
 //! ```
 
+pub mod analysis;
 pub mod coordinator;
 pub mod decomp;
 pub mod experiments;

@@ -19,7 +19,7 @@ use hocs::store::{
 };
 use hocs::util::cli::Args;
 
-const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault-crash|bench> [options]\n\
+const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault-crash|bench|lint> [options]\n\
 \n\
   info                              artifact summary\n\
   train --model NAME [--steps N] [--lr F] [--eval-every N] [--seed N]\n\
@@ -44,6 +44,10 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault
         [--other T2 --modes \"0,1,…\" [--dense]]   (contract: sketched contraction)\n\
   bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
         [--quick] [--seed N]\n\
+  lint [--root DIR] [--deny] [--print-manifest]\n\
+        (invariant checks: fault-coverage, opcode-symmetry, no-panic-paths,\n\
+        version-gate; --deny exits 1 on findings, --print-manifest emits the\n\
+        on-disk-format manifest for pinning after a FORMAT_VERSION bump)\n\
 \n\
   global options: --artifacts DIR (AOT artifacts, default artifacts/),\n\
                   --debug (verbose logging)";
@@ -61,6 +65,7 @@ fn main() {
         Some("store-client") => cmd_store_client(&args),
         Some("fault-crash") => cmd_fault_crash(&args),
         Some("bench") => cmd_bench(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!("{USAGE}");
             2
@@ -742,5 +747,51 @@ fn cmd_bench(args: &Args) -> i32 {
         0
     } else {
         run(which)
+    }
+}
+
+fn cmd_lint(args: &Args) -> i32 {
+    let root = args.get_str("root", "rust/src");
+    let root = std::path::Path::new(&root);
+    if args.flag("print-manifest") {
+        let wal = root.join("store").join("wal.rs");
+        let raw = match std::fs::read_to_string(&wal) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: reading {}: {e}", wal.display());
+                return 1;
+            }
+        };
+        return match hocs::analysis::version_gate::extract_manifest(&raw) {
+            Ok((manifest, _version)) => {
+                print!("{manifest}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        };
+    }
+    let violations = match hocs::analysis::run_lint(root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        eprintln!("lint: clean");
+        0
+    } else {
+        eprintln!("lint: {} violation(s)", violations.len());
+        if args.flag("deny") {
+            1
+        } else {
+            0
+        }
     }
 }

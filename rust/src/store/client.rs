@@ -32,7 +32,8 @@
 use super::codec::{self, Reader};
 use super::mergeable::MergeableSketch;
 use super::replica::{wire, ReplicationStats};
-use super::server::{op, read_frame_into, write_frame, STATUS_OK};
+use super::server::{read_frame_into, write_frame};
+use super::wire_ops::{self as op, STATUS_OK};
 use super::sharded::StoreStats;
 use super::tensor::{ContractedSketch, HcsStream, TensorFamily};
 use crate::sketch::stream::StreamSketch;

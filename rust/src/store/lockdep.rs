@@ -1,0 +1,415 @@
+//! Debug-build lock-order checker — the machine-checked lock-ordering
+//! contract for the store.
+//!
+//! Every guarantee about deadlock freedom in this subsystem used to be
+//! folklore: the PR-2 sharding work fixed a scan/write ordering bug and
+//! the PR-3/PR-4 durability work fixed a gate/queue one, and both fixes
+//! survive only as comments. This module turns the convention into a
+//! checker with the same shape as [`super::faults`]: fully armed under
+//! `#[cfg(debug_assertions)]` (so `cargo test` and the crash matrix's
+//! debug children run every suite under it) and compiled to inlineable
+//! no-ops in release builds (verified by the `is_armed` cfg test).
+//!
+//! ## The lock hierarchy
+//!
+//! Acquisitions must respect this class order, top to bottom:
+//!
+//! ```text
+//! DDL              tensor DDL mutex (serializes create/replicate-create)
+//!   COMMIT_GATE    RwLock: shared for append→apply, exclusive for
+//!                  snapshot / advance_epoch / truncation
+//!     SCAN_CACHE   version-stamped merged-scan cache mutex
+//!       WAL_QUEUE  group-commit leader/follower queue mutex
+//!         SHARD    per-shard mutexes, ascending shard index only
+//!           TENSOR_REGISTRY  the one tensor-catalog mutex
+//! ```
+//!
+//! Skipping levels is fine (a point query takes only `SHARD`); taking a
+//! *higher* class while holding a lower one, or two shards out of index
+//! order, is a bug even if it does not deadlock on this run — some
+//! interleaving will. Each [`acquire`] records the edge
+//! `held-class → acquiring-class` in a global acquisition-order graph
+//! and panics (with the current held stack and the recorded stack of
+//! the conflicting edge) as soon as any cycle appears, on the *first*
+//! run that exhibits both orders — no unlucky timing needed.
+//!
+//! **Registration order matters**: call [`acquire`] *before* blocking
+//! on the real lock, so an ordering violation panics loudly instead of
+//! deadlocking the test suite.
+//!
+//! ## Deliberate exclusions
+//!
+//! The origin-snapshot table and replica-cursor mutexes are *not*
+//! classes: `apply_origin_merge` takes origins → WAL queue while
+//! `snapshot` takes WAL queue → origins, which a naive order graph
+//! would call a cycle. Both paths hold the commit gate (shared vs
+//! exclusive), which serializes them — the "cycle" is unreachable.
+//! Gate-serialized leaf mutexes stay out of the graph; everything that
+//! can actually interleave is in it. The replicator's stop-signal
+//! mutex/condvar pair is its own single-lock domain and is likewise
+//! not a class.
+//!
+//! ## Adding a lock
+//!
+//! Give it a class here (or reuse one), place it in the hierarchy
+//! comment above, and wrap each acquisition site:
+//!
+//! ```ignore
+//! let _ld = lockdep::acquire(lockdep::SHARD, shard_index as u32);
+//! let guard = shard.lock().expect("shard lock");
+//! ```
+//!
+//! The returned [`Held`] token unregisters on drop (by identity, not
+//! LIFO — guard vectors from `lock_all` drop front-to-back and that is
+//! fine).
+
+/// A lock class — one level of the store's lock hierarchy. The `u16`
+/// is an arbitrary id; ids ≥ 100 are reserved for tests.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Class(pub u16);
+
+/// Tensor DDL mutex (`DurableStore::ddl`).
+pub const DDL: Class = Class(0);
+/// Commit gate RwLock (`DurableStore::commit`).
+pub const COMMIT_GATE: Class = Class(1);
+/// Merged-scan cache mutex (`ShardedStore::scan`).
+pub const SCAN_CACHE: Class = Class(2);
+/// Group-commit queue mutex (`GroupCommitLog::state`).
+pub const WAL_QUEUE: Class = Class(3);
+/// Per-shard mutexes — ascending shard index order enforced.
+pub const SHARD: Class = Class(4);
+/// Tensor registry mutex (`ShardedStore::tensors`).
+pub const TENSOR_REGISTRY: Class = Class(5);
+
+impl Class {
+    fn label(self, index: u32) -> String {
+        match self {
+            DDL => "ddl".into(),
+            COMMIT_GATE => "commit-gate".into(),
+            SCAN_CACHE => "scan-cache".into(),
+            WAL_QUEUE => "wal-queue".into(),
+            SHARD => format!("shard[{index}]"),
+            TENSOR_REGISTRY => "tensor-registry".into(),
+            Class(n) => format!("class-{n}"),
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+mod armed {
+    use super::Class;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    #[derive(Clone, Copy)]
+    struct Entry {
+        id: u64,
+        class: u16,
+        index: u32,
+    }
+
+    thread_local! {
+        /// Locks this thread currently holds, in acquisition order.
+        static HELD: RefCell<Vec<Entry>> = const { RefCell::new(Vec::new()) };
+    }
+
+    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+    /// Where an order edge was first observed — enough to print "the
+    /// other side" of a cycle without capturing OS backtraces.
+    struct EdgeInfo {
+        thread: String,
+        stack: Vec<(u16, u32)>,
+    }
+
+    /// `edges[(a, b)]` = some thread acquired class `b` while holding
+    /// class `a`. A cycle in this graph is an ordering bug.
+    struct Graph {
+        edges: HashMap<(u16, u16), EdgeInfo>,
+    }
+
+    impl Graph {
+        /// Is `to` reachable from `from` over recorded edges?
+        fn reaches(&self, from: u16, to: u16) -> bool {
+            let mut stack = vec![from];
+            let mut seen = std::collections::HashSet::new();
+            while let Some(c) = stack.pop() {
+                if c == to {
+                    return true;
+                }
+                if seen.insert(c) {
+                    stack.extend(self.edges.keys().filter(|(a, _)| *a == c).map(|(_, b)| *b));
+                }
+            }
+            false
+        }
+    }
+
+    fn graph() -> &'static Mutex<Graph> {
+        static GRAPH: OnceLock<Mutex<Graph>> = OnceLock::new();
+        GRAPH.get_or_init(|| Mutex::new(Graph { edges: HashMap::new() }))
+    }
+
+    fn render(stack: &[(u16, u32)]) -> String {
+        if stack.is_empty() {
+            return "(none)".into();
+        }
+        stack
+            .iter()
+            .map(|&(c, i)| Class(c).label(i))
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+
+    /// An acquisition registered on this thread's held stack; dropping
+    /// it (by identity) unregisters.
+    #[must_use = "dropping the token immediately unregisters the acquisition"]
+    pub struct Held {
+        id: u64,
+    }
+
+    impl Drop for Held {
+        fn drop(&mut self) {
+            // try_with: thread-local teardown during process exit must
+            // not turn into a second panic
+            let _ = HELD.try_with(|h| {
+                let mut v = h.borrow_mut();
+                if let Some(pos) = v.iter().rposition(|e| e.id == self.id) {
+                    v.remove(pos);
+                }
+            });
+        }
+    }
+
+    /// `true` when the checker is compiled in (debug builds).
+    pub fn is_armed() -> bool {
+        true
+    }
+
+    /// Register acquiring `class` (shard `index` for [`super::SHARD`],
+    /// 0 otherwise). Call *before* blocking on the real lock. Panics on
+    /// any ordering violation.
+    pub fn acquire(class: Class, index: u32) -> Held {
+        let snapshot: Vec<(u16, u32)> =
+            HELD.with(|h| h.borrow().iter().map(|e| (e.class, e.index)).collect());
+
+        // intra-thread rules: shards ascend strictly; no other class is
+        // re-entrant
+        for &(c, i) in &snapshot {
+            if c != class.0 {
+                continue;
+            }
+            if class == super::SHARD && i < index {
+                continue;
+            }
+            let what = if class == super::SHARD {
+                "out-of-index-order shard acquisition"
+            } else {
+                "re-entrant acquisition"
+            };
+            panic!(
+                "lockdep: {what}: thread {:?} acquiring {} while holding [{}]",
+                std::thread::current().name().unwrap_or("?"),
+                class.label(index),
+                render(&snapshot),
+            );
+        }
+
+        // cross-thread rule: record held -> acquiring edges; any cycle
+        // means two threads disagree on the order
+        let mut cycle: Option<String> = None;
+        {
+            let mut g = graph().lock().unwrap_or_else(|p| p.into_inner());
+            for &(c, _) in &snapshot {
+                if c == class.0 || g.edges.contains_key(&(c, class.0)) {
+                    continue;
+                }
+                if g.reaches(class.0, c) {
+                    // don't insert the bad edge — later tests must not
+                    // inherit a poisoned graph
+                    let reverse = g
+                        .edges
+                        .iter()
+                        .filter(|((a, b), _)| (g.reaches(class.0, *a) && *b == c) || *a == class.0)
+                        .map(|((a, b), info)| {
+                            format!(
+                                "  edge {} -> {} first seen on thread {:?} holding [{}]",
+                                Class(*a).label(0),
+                                Class(*b).label(0),
+                                info.thread,
+                                render(&info.stack),
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                        .join("\n");
+                    cycle = Some(format!(
+                        "lockdep: ordering cycle: thread {:?} acquiring {} while holding [{}], \
+                         but the reverse order is already on record:\n{reverse}",
+                        std::thread::current().name().unwrap_or("?"),
+                        class.label(index),
+                        render(&snapshot),
+                    ));
+                    break;
+                }
+                g.edges.insert(
+                    (c, class.0),
+                    EdgeInfo {
+                        thread: std::thread::current().name().unwrap_or("?").to_string(),
+                        stack: snapshot.clone(),
+                    },
+                );
+            }
+        }
+        if let Some(msg) = cycle {
+            panic!("{msg}");
+        }
+
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        HELD.with(|h| h.borrow_mut().push(Entry { id, class: class.0, index }));
+        Held { id }
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod disarmed {
+    use super::Class;
+
+    /// Release-build token: a ZST with no `Drop` — the whole checker
+    /// inlines away.
+    #[must_use = "dropping the token immediately unregisters the acquisition"]
+    pub struct Held;
+
+    /// `false` in release builds: [`acquire`] is a no-op.
+    #[inline(always)]
+    pub fn is_armed() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn acquire(_class: Class, _index: u32) -> Held {
+        Held
+    }
+}
+
+#[cfg(debug_assertions)]
+pub use armed::{acquire, is_armed, Held};
+#[cfg(not(debug_assertions))]
+pub use disarmed::{acquire, is_armed, Held};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::catch_unwind;
+
+    /// Acceptance gate: armed exactly in debug builds, no-op in release
+    /// (`cargo test --release` runs this same assertion).
+    #[test]
+    fn armed_matches_debug_assertions() {
+        assert_eq!(is_armed(), cfg!(debug_assertions));
+    }
+
+    #[cfg(debug_assertions)]
+    mod debug_only {
+        use super::*;
+
+        #[test]
+        fn ascending_shards_and_identity_release_are_clean() {
+            let a = acquire(SHARD, 0);
+            let b = acquire(SHARD, 3);
+            let c = acquire(TENSOR_REGISTRY, 0);
+            // guard vectors drop front-to-back; identity-based release
+            // must not care
+            drop(a);
+            drop(b);
+            drop(c);
+            let _again = acquire(SHARD, 0);
+        }
+
+        #[test]
+        fn reversed_shard_acquisition_panics() {
+            let err = catch_unwind(|| {
+                let _hi = acquire(SHARD, 3);
+                let _lo = acquire(SHARD, 1);
+            })
+            .expect_err("reversed shard order must panic");
+            let msg = err.downcast_ref::<String>().expect("string panic payload");
+            assert!(msg.contains("out-of-index-order"), "got: {msg}");
+            assert!(msg.contains("shard[3]"), "held stack missing: {msg}");
+        }
+
+        #[test]
+        fn same_shard_twice_panics() {
+            let err = catch_unwind(|| {
+                let _a = acquire(SHARD, 2);
+                let _b = acquire(SHARD, 2);
+            })
+            .expect_err("re-acquiring the same shard must panic");
+            let msg = err.downcast_ref::<String>().expect("string panic payload");
+            assert!(msg.contains("shard[2]"), "got: {msg}");
+        }
+
+        #[test]
+        fn non_shard_reentrancy_panics() {
+            let err = catch_unwind(|| {
+                let _a = acquire(Class(100), 0);
+                let _b = acquire(Class(100), 0);
+            })
+            .expect_err("re-entrant class must panic");
+            let msg = err.downcast_ref::<String>().expect("string panic payload");
+            assert!(msg.contains("re-entrant"), "got: {msg}");
+        }
+
+        #[test]
+        fn order_cycle_panics_with_both_stacks() {
+            // establish A -> B, then attempt B -> A; classes unique to
+            // this test so the global graph stays clean for others
+            let (a, b) = (Class(110), Class(111));
+            {
+                let _a = acquire(a, 0);
+                let _b = acquire(b, 0);
+            }
+            let err = catch_unwind(|| {
+                let _b = acquire(b, 0);
+                let _a = acquire(a, 0);
+            })
+            .expect_err("reverse order after a recorded edge must panic");
+            let msg = err.downcast_ref::<String>().expect("string panic payload");
+            assert!(msg.contains("cycle"), "got: {msg}");
+            assert!(msg.contains("class-111"), "current stack missing: {msg}");
+            assert!(msg.contains("class-110 -> class-111"), "recorded edge missing: {msg}");
+        }
+
+        #[test]
+        fn transitive_cycle_is_caught() {
+            // A -> B and B -> C on record; C -> A must panic even though
+            // the direct reverse edge was never seen
+            let (a, b, c) = (Class(120), Class(121), Class(122));
+            {
+                let _a = acquire(a, 0);
+                let _b = acquire(b, 0);
+            }
+            {
+                let _b = acquire(b, 0);
+                let _c = acquire(c, 0);
+            }
+            let err = catch_unwind(|| {
+                let _c = acquire(c, 0);
+                let _a = acquire(a, 0);
+            })
+            .expect_err("transitive reverse order must panic");
+            let msg = err.downcast_ref::<String>().expect("string panic payload");
+            assert!(msg.contains("cycle"), "got: {msg}");
+        }
+
+        #[test]
+        fn skipping_levels_is_clean() {
+            // the documented DAG, acquired with gaps, in order
+            let _g = acquire(COMMIT_GATE, 0);
+            let _q = acquire(WAL_QUEUE, 0);
+            let _s = acquire(SHARD, 1);
+            let _r = acquire(TENSOR_REGISTRY, 0);
+        }
+    }
+}

@@ -59,20 +59,36 @@
 //! Module map: [`mergeable`] (the trait + impls), [`sharded`] (shards +
 //! epoch rings), [`tensor`] (the HCS tensor plane: sketches, catalog,
 //! contraction), [`wal`] (snapshot/WAL), [`server`]/[`client`] (wire),
-//! [`replica`] (anti-entropy replication: delta cursors, origin dedup,
-//! the replicator thread), [`codec`] (bytes + CRC-32), [`faults`] (the
-//! deterministic fault-injection plane + scripted crash workload;
-//! compiles to no-ops in release builds).
+//! [`wire_ops`] (the opcode table — single source of truth for the
+//! protocol surface), [`replica`] (anti-entropy replication: delta
+//! cursors, origin dedup, the replicator thread), [`codec`] (bytes +
+//! CRC-32), [`faults`] (the deterministic fault-injection plane +
+//! scripted crash workload; compiles to no-ops in release builds),
+//! [`lockdep`] (debug-build lock-order checker).
+//!
+//! **Lock ordering.** The store's cross-thread locks form a fixed
+//! hierarchy — tensor DDL mutex, then commit gate, then scan cache,
+//! then WAL commit queue, then shard mutexes in ascending index order,
+//! then the tensor registry. [`lockdep`] is the machine-checked
+//! contract: every acquisition of those locks registers with a
+//! debug-build checker that panics on any cross-thread ordering cycle
+//! or out-of-index-order shard acquisition, so the whole test suite
+//! (and the crash matrix, which runs debug children) continuously
+//! proves the hierarchy. See the `lockdep` module docs for the full
+//! class DAG and the one documented exclusion (the origin-table and
+//! replica-cursor mutexes, which are serialized by the commit gate).
 
 pub mod client;
 pub mod codec;
 pub mod faults;
+pub mod lockdep;
 pub mod mergeable;
 pub mod replica;
 pub mod server;
 pub mod sharded;
 pub mod tensor;
 pub mod wal;
+pub mod wire_ops;
 
 /// One shared cap on a batch of updates, enforced in lockstep at the
 /// RPC boundary ([`server`]), at the durable API

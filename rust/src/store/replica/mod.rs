@@ -357,7 +357,11 @@ impl Replicator {
 
 impl Drop for Replicator {
     fn drop(&mut self) {
-        *self.stop.stopped.lock().expect("replicator stop lock") = true;
+        // a poisoned stop lock means the replicator thread already
+        // panicked out of its loop — nothing left to signal
+        if let Ok(mut stopped) = self.stop.stopped.lock() {
+            *stopped = true;
+        }
         self.stop.cv.notify_all();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -423,11 +427,16 @@ fn run(
     );
     loop {
         {
-            let guard = stop.stopped.lock().expect("replicator stop lock");
-            let (guard, _) = stop
-                .cv
-                .wait_timeout_while(guard, interval, |stopped| !*stopped)
-                .expect("replicator stop cv");
+            // a poisoned stop lock means the owning thread panicked;
+            // winding the replicator down beats panicking a second
+            // thread (and taking the whole process's locks with it)
+            let Ok(guard) = stop.stopped.lock() else {
+                break;
+            };
+            let Ok((guard, _)) = stop.cv.wait_timeout_while(guard, interval, |stopped| !*stopped)
+            else {
+                break;
+            };
             if *guard {
                 break;
             }
@@ -553,7 +562,10 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
     }
     for attempt in 0..2 {
         let Some(pending) = p.pending.as_ref() else { return };
-        let client = p.client.as_mut().expect("client connected above");
+        // connected above (or the function already returned); if that
+        // invariant ever breaks, skip the tick instead of killing the
+        // replicator thread
+        let Some(client) = p.client.as_mut() else { return };
         let sent = faults::fire("repl.send")
             .map_err(anyhow::Error::from)
             .and_then(|()| client.raw_call(&pending.frame));
@@ -567,7 +579,7 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
                 // dedups them into an acknowledged no-op), so the
                 // durable cursor never trails the receiver's horizon by
                 // more than one frame — the restart-resume invariant.
-                let done = p.pending.take().expect("pending present");
+                let Some(done) = p.pending.take() else { return };
                 if let Err(e) = ctx.store.advance_replica_cursor(&p.addr, p.next_seq, done.version)
                 {
                     crate::log_warn!(

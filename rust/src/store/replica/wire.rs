@@ -183,7 +183,7 @@ pub fn build_tensor_merge(
     full: &crate::store::tensor::HcsStream,
 ) -> Vec<u8> {
     let mut out = Vec::new();
-    out.push(super::super::server::op::TMERGE_ORIGIN);
+    out.push(super::super::wire_ops::TMERGE_ORIGIN);
     codec::put_u64(&mut out, origin);
     codec::put_u64(&mut out, seq);
     codec::put_name(&mut out, name);
@@ -199,7 +199,7 @@ pub fn build_merge_origin(
     sk: &StreamSketch,
 ) -> Vec<u8> {
     let mut out = Vec::new();
-    out.push(super::super::server::op::MERGE_ORIGIN);
+    out.push(super::super::wire_ops::MERGE_ORIGIN);
     // one serializer for the header layout: the enc byte is a
     // placeholder until the payload encoding is chosen below
     put_header(&mut out, &OriginHeader { origin, seq, mode, enc: ENC_DENSE, ingest });
@@ -310,7 +310,7 @@ mod tests {
         let sk = sample_sketch(12);
         let frame = build_merge_origin(7, 3, MODE_DELTA, false, &sk);
         let mut rd = Reader::new(&frame);
-        assert_eq!(rd.u8().unwrap(), super::super::super::server::op::MERGE_ORIGIN);
+        assert_eq!(rd.u8().unwrap(), super::super::super::wire_ops::MERGE_ORIGIN);
         let h = read_header(&mut rd).unwrap();
         assert_eq!((h.origin, h.seq, h.mode, h.ingest), (7, 3, MODE_DELTA, false));
         let got = match h.enc {

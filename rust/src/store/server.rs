@@ -78,64 +78,11 @@ thread_local! {
     static BATCH_SCRATCH: RefCell<Vec<(usize, usize, f64)>> = RefCell::new(Vec::new());
 }
 
-/// Request opcodes (first payload byte).
-///
-/// TOPK and HEAVY run the marginal-pruned scans for non-negative
-/// workloads; once any deletion has been absorbed the merged sketch
-/// carries its turnstile flag and the scans route themselves to the
-/// dense variants (see [`crate::sketch::stream`]), so both opcodes are
-/// correct under any workload. QUERY is exact either way.
-/// UPDATE_BATCH is the write hot path: one WAL group-commit frame and
-/// one lock acquisition per destination shard for the whole batch.
-pub mod op {
-    pub const UPDATE: u8 = 1;
-    pub const UPDATE_BATCH: u8 = 2;
-    pub const QUERY: u8 = 3;
-    pub const TOPK: u8 = 4;
-    pub const HEAVY: u8 = 5;
-    pub const MERGE: u8 = 6;
-    pub const SNAPSHOT: u8 = 7;
-    pub const ADVANCE_EPOCH: u8 = 8;
-    pub const STATS: u8 = 9;
-    pub const BATCH_SKETCH: u8 = 10;
-    pub const SHUTDOWN: u8 = 11;
-    /// Origin-headered merge (replication plane + retry-safe edge
-    /// ingest): `u64 origin | u64 seq | u8 mode | u8 enc | u8 ingest |
-    /// sketch`, deduplicated per origin — see [`crate::store::replica`].
-    pub const MERGE_ORIGIN: u8 = 12;
-    // ---- tensor plane (multi-mode HCS catalog — see `store::tensor`) ----
-    /// `name | TensorFamily` → `u8 created` (0 = identical tensor
-    /// already existed; a different family errors).
-    pub const TCREATE: u8 = 13;
-    /// `name | mode_key | f64 w` — one multi-mode update.
-    pub const TUPDATE: u8 = 14;
-    /// `name | u32 count | count × (mode_key | f64 w)` — one WAL
-    /// group-commit frame and one fused apply for the whole batch.
-    pub const TUPDATE_BATCH: u8 = 15;
-    /// `name | mode_key` → `f64` median-of-d point estimate.
-    pub const TQUERY: u8 = 16;
-    /// `name | per mode (u8 flag | u32 index if flag = 1)` → `f64`:
-    /// marginal with flagged modes pinned and the rest summed out on
-    /// the sketch.
-    pub const MARGINAL: u8 = 17;
-    /// `name | u32 mode | u32 index | u32 k` → `u32 count | count ×
-    /// (mode_key | f64)`: top-k keys within one fixed slice.
-    pub const SLICE_TOPK: u8 = 18;
-    /// `a_name | b_name | u8 n | n × u8 modes | u8 want_dense` →
-    /// `u8 kind | payload`: kind 0 = `f64` scalar (all modes
-    /// contracted), 1 = encoded `ContractedSketch`, 2 = dense result
-    /// (`u8 n_kept | n_kept × u32 dims | u32 len | len × f64`, laid out
-    /// `kept keys of a × kept keys of b`, row-major).
-    pub const CONTRACT: u8 = 19;
-    /// Tensor replication frame: `u64 origin | u64 seq | name |
-    /// HcsStream (full cumulative origin state)` → `u8 applied`.
-    /// Unknown tensors are auto-created from the frame's family;
-    /// per-(origin, tensor) sequence dedup makes retries no-ops.
-    pub const TMERGE_ORIGIN: u8 = 20;
-}
-
-pub const STATUS_OK: u8 = 0;
-pub const STATUS_ERR: u8 = 1;
+// Request opcodes (first payload byte) and response status bytes live
+// in `store::wire_ops` — the single source of truth the
+// `opcode-symmetry` lint pass cross-checks against this file's
+// dispatch match, the typed `StoreClient` methods, and the CLI.
+use super::wire_ops::{self as op, STATUS_ERR, STATUS_OK};
 
 /// Hard cap on a single frame — a hostile length prefix must not be
 /// able to allocate gigabytes.
@@ -148,6 +95,7 @@ const MAX_TOPK: usize = 4096;
 const MAX_SKETCH_INPUT: usize = 1 << 22;
 
 /// Write one `len | payload` frame.
+// lint: allow(fault-coverage) socket writes, not durable-path filesystem I/O — the fault plane covers disks, not the network
 pub(crate) fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     let len = u32::try_from(payload.len()).context("frame too large")?;
     ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds protocol cap");
@@ -555,12 +503,12 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
         op::TOPK => {
             let k = rd.u32()? as usize;
             ensure!(k <= MAX_TOPK, "top-k of {k} exceeds cap {MAX_TOPK}");
-            put_entries(body, &shared.store.top_k(k));
+            put_entries(body, &shared.store.top_k(k))?;
         }
         op::HEAVY => {
             let threshold = rd.f64()?;
             ensure!(threshold.is_finite(), "non-finite heavy-hitter threshold");
-            put_entries(body, &shared.store.heavy_hitters(threshold));
+            put_entries(body, &shared.store.heavy_hitters(threshold))?;
         }
         op::MERGE => {
             let sk = StreamSketch::decode(&mut rd)?;
@@ -630,7 +578,7 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
                 x.push(rd.f32()?);
             }
             let out = co.call(Job::CsSketch(x)).map_err(|e| anyhow!("sketch job: {e}"))?;
-            codec::put_u32(body, u32::try_from(out.len()).expect("sketch output fits u32"));
+            codec::put_u32(body, u32::try_from(out.len()).context("sketch output too large")?);
             for v in out {
                 codec::put_f32(body, v);
             }
@@ -698,7 +646,7 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
             let k = rd.u32()? as usize;
             ensure!(k <= MAX_TOPK, "slice top-k of {k} exceeds cap {MAX_TOPK}");
             let entries = shared.store.tensor_slice_top_k(&name, mode, index, k)?;
-            codec::put_u32(body, u32::try_from(entries.len()).expect("entry count fits u32"));
+            codec::put_u32(body, u32::try_from(entries.len()).context("entry count too large")?);
             for (key, w) in &entries {
                 codec::put_mode_key(body, key);
                 codec::put_f64(body, *w);
@@ -721,11 +669,11 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
                 ContractOutput::Sketch(cs) if want_dense => {
                     let (dims, vals) = cs.to_dense()?;
                     codec::put_u8(body, 2);
-                    codec::put_u8(body, u8::try_from(dims.len()).expect("order fits u8"));
+                    codec::put_u8(body, u8::try_from(dims.len()).context("contraction order too large")?);
                     for &d in &dims {
-                        codec::put_u32(body, u32::try_from(d).expect("dim fits u32"));
+                        codec::put_u32(body, u32::try_from(d).context("contraction dim too large")?);
                     }
-                    codec::put_u32(body, u32::try_from(vals.len()).expect("len fits u32"));
+                    codec::put_u32(body, u32::try_from(vals.len()).context("dense result too large")?);
                     for v in vals {
                         codec::put_f64(body, v);
                     }
@@ -756,7 +704,7 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
             codec::put_u8(body, u8::from(applied));
         }
         op::SHUTDOWN => return Ok(true),
-        other => bail!("unknown opcode {other}"),
+        other => bail!("{}", op::unknown(other)),
     }
     Ok(false)
 }
@@ -765,13 +713,14 @@ fn tensor_family(shared: &Shared, name: &str) -> Result<TensorFamily> {
     shared.store.tensor_family(name).ok_or_else(|| anyhow!("unknown tensor {name:?}"))
 }
 
-fn put_entries(out: &mut Vec<u8>, entries: &[(usize, usize, f64)]) {
-    codec::put_u32(out, u32::try_from(entries.len()).expect("entry count fits u32"));
+fn put_entries(out: &mut Vec<u8>, entries: &[(usize, usize, f64)]) -> Result<()> {
+    codec::put_u32(out, u32::try_from(entries.len()).context("entry count too large")?);
     for &(i, j, w) in entries {
         codec::put_u32(out, i as u32);
         codec::put_u32(out, j as u32);
         codec::put_f64(out, w);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -881,6 +830,49 @@ mod tests {
         // connection still serves after all of those
         client.update(1, 1, 1.0).unwrap();
         assert_eq!(client.query(1, 1).unwrap(), 1.0);
+        server.shutdown();
+    }
+
+    /// Regression guard for the `no-panic-paths` lint findings: hostile
+    /// or truncated frames through every formerly-panicking dispatch
+    /// path must come back as framed errors on a connection that keeps
+    /// serving — a bad frame must never kill the connection thread.
+    #[test]
+    fn hostile_frames_never_kill_the_connection_thread() {
+        let Some(server) = start_server(None) else { return };
+        let mut client = StoreClient::connect(server.local_addr()).unwrap();
+        // empty frame: no opcode byte at all
+        assert!(client.raw_call(&[]).is_err());
+        // truncated bodies across the dispatch surface
+        for opc in [
+            op::UPDATE,
+            op::UPDATE_BATCH,
+            op::QUERY,
+            op::MERGE,
+            op::MERGE_ORIGIN,
+            op::TCREATE,
+            op::TUPDATE,
+            op::MARGINAL,
+            op::SLICE_TOPK,
+            op::CONTRACT,
+            op::TMERGE_ORIGIN,
+        ] {
+            assert!(client.raw_call(&[opc]).is_err(), "opcode {opc} accepted an empty body");
+        }
+        // a hostile batch count far past the cap must be rejected before
+        // any decode or allocation
+        let mut huge = vec![op::UPDATE_BATCH];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = client.raw_call(&huge).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "unexpected error: {err}");
+        // slice top-k past the response cap errors instead of building it
+        let mut req = vec![op::SLICE_TOPK];
+        req.extend_from_slice(&4u32.to_le_bytes()); // name length
+        req.extend_from_slice(b"tttt"); // unknown tensor — also an error path
+        assert!(client.raw_call(&req).is_err());
+        // the connection thread survived every one of those
+        client.update(2, 2, 4.0).unwrap();
+        assert_eq!(client.query(2, 2).unwrap(), 4.0);
         server.shutdown();
     }
 

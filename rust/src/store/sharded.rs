@@ -39,6 +39,7 @@
 //! sketch seed: that is what makes their tables addable.
 
 use super::codec::{self, Reader};
+use super::lockdep;
 use super::mergeable::MergeableSketch;
 use super::tensor::contract::ContractOutput;
 use super::tensor::hcs::HcsStream;
@@ -50,6 +51,29 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
+
+/// Guard over the tensor registry: the registry mutex plus its
+/// [`lockdep`] registration (`TENSOR_REGISTRY` is the bottom of the
+/// store's lock hierarchy — see [`lockdep`]'s module docs). Derefs to
+/// [`TensorRegistry`]; field order keeps the mutex guard dropping
+/// before the lockdep token.
+pub(crate) struct TensorLock<'a> {
+    guard: MutexGuard<'a, TensorRegistry>,
+    _held: lockdep::Held,
+}
+
+impl std::ops::Deref for TensorLock<'_> {
+    type Target = TensorRegistry;
+    fn deref(&self) -> &TensorRegistry {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for TensorLock<'_> {
+    fn deref_mut(&mut self) -> &mut TensorRegistry {
+        &mut self.guard
+    }
+}
 
 thread_local! {
     /// Per-thread accumulator for the point-query fan-out (and any
@@ -339,6 +363,7 @@ impl ShardedStore {
             self.cfg.n2
         );
         let s = self.shard_of(i, j);
+        let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
         let mut guard = self.shards[s].lock().expect("shard lock");
         let sh = &mut *guard;
         let cur = sh.cur;
@@ -421,6 +446,7 @@ impl ShardedStore {
             if group.is_empty() {
                 continue;
             }
+            let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
             let mut guard = self.shards[s].lock().expect("shard lock");
             let sh = &mut *guard;
             let cur = sh.cur;
@@ -445,9 +471,22 @@ impl ShardedStore {
     /// cross-shard operation (epoch rotation, merged scans, snapshot
     /// encoding) must use, so none of them can deadlock against another
     /// and none can observe shard 0 post-rotation next to shard 1
-    /// pre-rotation (the torn multi-shard read).
-    fn lock_all(&self) -> Vec<MutexGuard<'_, Shard>> {
-        self.shards.iter().map(|shm| shm.lock().expect("shard lock")).collect()
+    /// pre-rotation (the torn multi-shard read). The paired
+    /// [`lockdep::Held`] tokens keep the debug-build order checker
+    /// informed for the whole guard lifetime (bind them alongside the
+    /// guards; drop order between the vectors does not matter).
+    fn lock_all(&self) -> (Vec<lockdep::Held>, Vec<MutexGuard<'_, Shard>>) {
+        let mut held = Vec::with_capacity(self.shards.len());
+        let guards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, shm)| {
+                held.push(lockdep::acquire(lockdep::SHARD, s as u32));
+                shm.lock().expect("shard lock")
+            })
+            .collect();
+        (held, guards)
     }
 
     /// Fan-out point query: raw bucket counters summed across shard
@@ -478,7 +517,8 @@ impl ShardedStore {
             for _ in 0..EPOCH_RETRY_LIMIT {
                 let e0 = self.epoch();
                 acc.fill(0.0);
-                for shm in &self.shards {
+                for (s, shm) in self.shards.iter().enumerate() {
+                    let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
                     shm.lock().expect("shard lock").total.accumulate_raw(i, j, acc);
                 }
                 if self.epoch() == e0 {
@@ -488,7 +528,7 @@ impl ShardedStore {
             // rotation storm: fall back to one consistent fully-locked
             // read (counted, so tests can prove this path runs)
             self.lockall_fallbacks.fetch_add(1, Ordering::Relaxed);
-            let guards = self.lock_all();
+            let (_ld, guards) = self.lock_all();
             acc.fill(0.0);
             for sh in &guards {
                 sh.total.accumulate_raw(i, j, acc);
@@ -511,6 +551,7 @@ impl ShardedStore {
     /// [`ShardedStore::merged_uncached`] over exactly-representable
     /// weights — the store's standing contract.
     pub fn merged(&self) -> StreamSketch {
+        let _ld = lockdep::acquire(lockdep::SCAN_CACHE, 0);
         let mut cache = self.scan.lock().expect("scan cache lock");
         self.refresh_scan_cache(&mut cache);
         cache.merged.clone()
@@ -522,7 +563,7 @@ impl ShardedStore {
     /// public as the oracle for the cache-identity property tests and
     /// the uncached side of the scan bench.
     pub fn merged_uncached(&self) -> StreamSketch {
-        let guards = self.lock_all();
+        let (_ld, guards) = self.lock_all();
         let mut out = self.cfg.fresh_sketch();
         for sh in &guards {
             out.merge_scaled(&sh.total, 1.0);
@@ -543,6 +584,7 @@ impl ShardedStore {
     /// dense variant, so turnstile streams get correct answers without
     /// caller intervention; point queries are exact either way.
     pub fn top_k(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        let _ld = lockdep::acquire(lockdep::SCAN_CACHE, 0);
         let mut cache = self.scan.lock().expect("scan cache lock");
         self.refresh_scan_cache(&mut cache);
         if let Some((ck, hits)) = &cache.top_k {
@@ -559,6 +601,7 @@ impl ShardedStore {
     /// [`ShardedStore::top_k`] (exact threshold match, by bit pattern).
     /// Same pruned-vs-dense routing as [`ShardedStore::top_k`].
     pub fn heavy_hitters(&self, threshold: f64) -> Vec<(usize, usize, f64)> {
+        let _ld = lockdep::acquire(lockdep::SCAN_CACHE, 0);
         let mut cache = self.scan.lock().expect("scan cache lock");
         self.refresh_scan_cache(&mut cache);
         if let Some((ct, hits)) = &cache.heavy {
@@ -596,7 +639,8 @@ impl ShardedStore {
         if cache.epoch == self.epoch() {
             for _ in 0..SCAN_REFRESH_RETRY_LIMIT {
                 let v0 = self.version.load(Ordering::SeqCst);
-                for shm in &self.shards {
+                for (s, shm) in self.shards.iter().enumerate() {
+                    let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
                     let mut guard = shm.lock().expect("shard lock");
                     let sh = &mut *guard;
                     if sh.pending_dirty {
@@ -619,7 +663,7 @@ impl ShardedStore {
         // are frozen while we hold them all, so the stamp is exact):
         // the post-rotation path, and the bounded fallback when writers
         // keep racing the incremental fold
-        let mut guards = self.lock_all();
+        let (_ld, mut guards) = self.lock_all();
         let mut merged = self.cfg.fresh_sketch();
         for guard in guards.iter_mut() {
             let sh = &mut **guard;
@@ -656,6 +700,7 @@ impl ShardedStore {
             self.cfg.d,
             self.cfg.seed
         );
+        let _ld = lockdep::acquire(lockdep::SHARD, 0);
         let mut guard = self.shards[0].lock().expect("shard lock");
         let sh = &mut *guard;
         let cur = sh.cur;
@@ -700,7 +745,7 @@ impl ShardedStore {
     /// replicator diffs per-peer cursors against. O(K·d·m1·m2) per call,
     /// paid once per sync tick, never on the write path.
     pub fn origin_snapshot(&self) -> (u64, StreamSketch) {
-        let guards = self.lock_all();
+        let (_ld, guards) = self.lock_all();
         let mut out = self.cfg.fresh_sketch();
         for sh in &guards {
             out.merge_scaled(&sh.origin, 1.0);
@@ -710,8 +755,9 @@ impl ShardedStore {
 
     // ---------- tensor plane ----------
 
-    fn tensor_lock(&self) -> MutexGuard<'_, TensorRegistry> {
-        self.tensors.lock().expect("tensor registry lock")
+    fn tensor_lock(&self) -> TensorLock<'_> {
+        let held = lockdep::acquire(lockdep::TENSOR_REGISTRY, 0);
+        TensorLock { guard: self.tensors.lock().expect("tensor registry lock"), _held: held }
     }
 
     /// Register a named tensor. Idempotent on an identical family;
@@ -818,7 +864,7 @@ impl ShardedStore {
     /// every shard pre-rotation or every shard post-rotation — never a
     /// torn mix. Point updates still only contend on their own shard.
     pub fn advance_epoch(&self) {
-        let mut guards = self.lock_all();
+        let (_ld, mut guards) = self.lock_all();
         for guard in guards.iter_mut() {
             let sh = &mut **guard;
             let next = (sh.cur + 1) % self.cfg.window;
@@ -870,14 +916,18 @@ impl ShardedStore {
             let updates = self
                 .shards
                 .iter()
-                .map(|shm| shm.lock().expect("shard lock").total.updates)
+                .enumerate()
+                .map(|(s, shm)| {
+                    let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
+                    shm.lock().expect("shard lock").total.updates
+                })
                 .sum();
             if self.epoch() == e0 {
                 return mk(e0, updates);
             }
         }
         self.lockall_fallbacks.fetch_add(1, Ordering::Relaxed);
-        let guards = self.lock_all();
+        let (_ld, guards) = self.lock_all();
         mk(self.epoch(), guards.iter().map(|sh| sh.total.updates).sum())
     }
 
@@ -887,7 +937,7 @@ impl ShardedStore {
     /// [`ShardedStore::advance_epoch`] lands entirely before or entirely
     /// after it, never halfway through the shards.
     pub(crate) fn encode_into(&self, out: &mut Vec<u8>) {
-        let guards = self.lock_all();
+        let (_ld, guards) = self.lock_all();
         self.cfg.encode(out);
         codec::put_u64(out, self.epoch());
         for sh in &guards {

@@ -142,6 +142,7 @@
 
 use super::codec::{self, Reader};
 use super::faults;
+use super::lockdep;
 use super::mergeable::MergeableSketch;
 use super::replica::origins::{Admit, OriginTable, MAX_ORIGINS};
 use super::sharded::{ShardedStore, StoreConfig, StoreStats};
@@ -155,7 +156,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, RwLock};
+use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 const SNAP_MAGIC: &[u8; 8] = b"HOCSSNAP";
 const WAL_MAGIC: &[u8; 8] = b"HOCSWAL0";
@@ -595,14 +596,21 @@ impl GroupCommitLog {
     /// (flushed; synced in fsync mode) — or with the fail-stop error if
     /// a write failed before it got there.
     fn commit_frame(&self, frame: &[u8]) -> Result<()> {
+        let mut ldq = lockdep::acquire(lockdep::WAL_QUEUE, 0);
+        // lint: allow(no-panic-paths) queue poison means a writer thread panicked mid-commit; propagating the panic is the fail-stop
         let mut st = self.state.lock().expect("wal lock");
         if st.writer.is_none() && !st.writing {
             return Err(failstop_error());
         }
         if !self.group {
             // per-record baseline: one write + flush per frame,
-            // serialized on the queue mutex (PR-3 behaviour)
-            let writer = st.writer.as_mut().expect("writer present");
+            // serialized on the queue mutex (PR-3 behaviour). The
+            // writer is present here — checked above, and `writing` is
+            // never set in this mode — but fail-stop beats panicking in
+            // a commit path if that invariant ever breaks.
+            let Some(writer) = st.writer.as_mut() else {
+                return Err(failstop_error());
+            };
             if let Err(e) = writer.append_frames(frame) {
                 st.writer = None;
                 return Err(e.context("WAL append failed; store is now fail-stopped"));
@@ -625,13 +633,22 @@ impl GroupCommitLog {
             if !st.writing {
                 // leader election is implicit: we found no write in
                 // flight and our frame is still staged, so we take the
-                // writer and commit everything staged so far
+                // writer and commit everything staged so far. Both
+                // checks above guarantee the writer is present; treat a
+                // broken invariant as fail-stop, not a panic.
                 let chunk = std::mem::take(&mut st.staged);
                 let group_lsn = st.staged_lsn;
-                let mut writer = st.writer.take().expect("writer present when not writing");
+                let Some(mut writer) = st.writer.take() else {
+                    return Err(failstop_error());
+                };
                 st.writing = true;
+                // the queue lock (and its lockdep registration) drops
+                // across the group write so followers can stage
                 drop(st);
+                drop(ldq);
                 let res = writer.append_frames(&chunk);
+                ldq = lockdep::acquire(lockdep::WAL_QUEUE, 0);
+                // lint: allow(no-panic-paths) queue poison propagates the fail-stop panic, as above
                 st = self.state.lock().expect("wal lock");
                 st.writing = false;
                 match res {
@@ -653,6 +670,7 @@ impl GroupCommitLog {
                     }
                 }
             } else {
+                // lint: allow(no-panic-paths) condvar poison mirrors the queue-poison fail-stop above
                 st = self.cv.wait(st).expect("wal cv");
             }
         }
@@ -884,6 +902,24 @@ impl DurableStore {
         Ok(ds)
     }
 
+    /// Take the commit gate **shared** (append→apply pairs), with its
+    /// [`lockdep`] registration — COMMIT_GATE sits above the WAL queue,
+    /// the shard locks, and the registry in the lock hierarchy. The
+    /// tuple keeps guard and token alive together; bind it whole.
+    fn gate_shared(&self) -> (lockdep::Held, RwLockReadGuard<'_, ()>) {
+        let held = lockdep::acquire(lockdep::COMMIT_GATE, 0);
+        // lint: allow(no-panic-paths) gate poison means a holder panicked mid-commit; propagating the panic is the fail-stop
+        (held, self.commit.read().expect("commit gate"))
+    }
+
+    /// Take the commit gate **exclusively** (snapshot / epoch rotation),
+    /// with its [`lockdep`] registration.
+    fn gate_excl(&self) -> (lockdep::Held, RwLockWriteGuard<'_, ()>) {
+        let held = lockdep::acquire(lockdep::COMMIT_GATE, 0);
+        // lint: allow(no-panic-paths) gate poison means a holder panicked mid-commit; propagating the panic is the fail-stop
+        (held, self.commit.write().expect("commit gate"))
+    }
+
     /// Append one record to the live WAL through the commit queue.
     /// Errors when writes are fail-stopped; a group write that itself
     /// fails (possibly leaving a torn frame mid-log) also fail-stops,
@@ -900,9 +936,10 @@ impl DurableStore {
     /// CRC frame is built outside any lock; the commit queue only ever
     /// sees ready-to-write bytes.
     fn append_payload(&self, payload: &[u8]) -> Result<()> {
-        let log = self.log.as_ref().expect("append requires a durable store");
+        let log = self.log.as_ref().context("append requires a durable store")?;
+        let len = u32::try_from(payload.len()).context("WAL record too large for a frame")?;
         let mut frame = Vec::with_capacity(payload.len() + 8);
-        codec::put_u32(&mut frame, u32::try_from(payload.len()).expect("WAL record too large"));
+        codec::put_u32(&mut frame, len);
         codec::put_u32(&mut frame, codec::crc32(payload));
         frame.extend_from_slice(payload);
         log.commit_frame(&frame)
@@ -931,7 +968,7 @@ impl DurableStore {
             cfg.n2
         );
         if self.log.is_some() {
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_record(&WalRecord::Update { i: i as u32, j: j as u32, w })?;
             self.store.update(i, j, w);
         } else {
@@ -973,7 +1010,7 @@ impl DurableStore {
             // of the batch on the hot path
             let mut payload = Vec::with_capacity(5 + items.len() * 16);
             WalRecord::encode_update_batch(&mut payload, items);
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_payload(&payload)?;
             self.store.update_batch(items);
         } else {
@@ -988,7 +1025,7 @@ impl DurableStore {
     /// straddling update to a different epoch than the live store did.
     pub fn advance_epoch(&self) -> Result<()> {
         if self.log.is_some() {
-            let _excl = self.commit.write().expect("commit gate");
+            let _excl = self.gate_excl();
             self.append_record(&WalRecord::AdvanceEpoch)?;
             self.store.advance_epoch();
         } else {
@@ -1002,7 +1039,7 @@ impl DurableStore {
         if self.log.is_some() {
             // merges are counter additions — they commute with updates,
             // so a shared guard suffices (same as the update paths)
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_record(&WalRecord::MergeSketch(sk.clone()))?;
             self.store.merge_sketch(sk)
         } else {
@@ -1036,7 +1073,7 @@ impl DurableStore {
         sk: StreamSketch,
     ) -> Result<bool> {
         ensure!(self.store.config().matches(&sk), "sketch family does not match this store");
-        let _shared = self.commit.read().expect("commit gate");
+        let _shared = self.gate_shared();
         let mut origins = self.origins.lock().expect("origin table lock");
         let to_apply = match origins.admit(origin, seq, mode, sk)? {
             Admit::Dedup => return Ok(false),
@@ -1068,7 +1105,7 @@ impl DurableStore {
     /// so a restarted sender keeps its channel identity and the
     /// receivers' cumulative per-origin records stay exact.
     pub fn replica_id(&self) -> Result<u64> {
-        let _shared = self.commit.read().expect("commit gate");
+        let _shared = self.gate_shared();
         let mut rc = self.replica.lock().expect("replica cursors lock");
         if rc.origin_id == 0 {
             let id = super::replica::derive_origin_id();
@@ -1093,7 +1130,7 @@ impl DurableStore {
     /// that discipline is what bounds the durable-cursor lag to one
     /// frame (see the module docs' cursor rules).
     pub fn advance_replica_cursor(&self, peer: &str, seq: u64, version: u64) -> Result<()> {
-        let _shared = self.commit.read().expect("commit gate");
+        let _shared = self.gate_shared();
         if self.log.is_some() {
             self.append_record(&WalRecord::CursorAdvance {
                 peer: peer.to_string(),
@@ -1113,6 +1150,7 @@ impl DurableStore {
         match &self.log {
             None => true,
             Some(log) => {
+                let _ld = lockdep::acquire(lockdep::WAL_QUEUE, 0);
                 let st = log.state.lock().expect("wal lock");
                 st.writer.is_some() || st.writing
             }
@@ -1146,6 +1184,7 @@ impl DurableStore {
     /// the tensor was created, `Ok(false)` (without logging) when an
     /// identical tensor already exists.
     pub fn tensor_create(&self, name: &str, family: &TensorFamily) -> Result<bool> {
+        let _ld = lockdep::acquire(lockdep::DDL, 0);
         let _ddl = self.ddl.lock().expect("tensor ddl lock");
         family.validate()?;
         ensure!(!name.is_empty(), "tensor name is empty");
@@ -1168,7 +1207,7 @@ impl DurableStore {
             registry::MAX_TENSORS
         );
         if self.log.is_some() {
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_record(&WalRecord::TensorCreate {
                 name: name.to_string(),
                 family: family.clone(),
@@ -1188,7 +1227,7 @@ impl DurableStore {
             .with_context(|| format!("unknown tensor {name:?}"))?;
         registry::validate_key(&family.dims, key)?;
         if self.log.is_some() {
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_record(&WalRecord::TensorUpdate {
                 name: name.to_string(),
                 key: key.to_vec(),
@@ -1234,7 +1273,7 @@ impl DurableStore {
                 keys: keys.to_vec(),
                 ws: ws.to_vec(),
             };
-            let _shared = self.commit.read().expect("commit gate");
+            let _shared = self.gate_shared();
             self.append_record(&rec)?;
             self.store.tensor_update_batch(name, keys, ws)
         } else {
@@ -1255,7 +1294,7 @@ impl DurableStore {
         seq: u64,
         full: HcsStream,
     ) -> Result<bool> {
-        let _shared = self.commit.read().expect("commit gate");
+        let _shared = self.gate_shared();
         self.store.tensor_apply_origin_merge(origin, name, seq, full)
     }
 
@@ -1354,7 +1393,8 @@ impl DurableStore {
         let Some(log) = &self.log else {
             bail!("in-memory store has no snapshot directory (start with a data dir)");
         };
-        let _excl = self.commit.write().expect("commit gate");
+        let _excl = self.gate_excl();
+        let _ldq = lockdep::acquire(lockdep::WAL_QUEUE, 0);
         let mut st = log.state.lock().expect("wal lock");
         // Every commit returns only after its frame is durable, and the
         // exclusive gate waits out every in-flight append→apply pair —

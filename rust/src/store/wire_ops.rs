@@ -1,0 +1,197 @@
+//! Wire opcodes — the single source of truth for the store protocol's
+//! request surface.
+//!
+//! Every opcode lives here exactly once, together with the name of the
+//! typed [`super::client::StoreClient`] method that speaks it and the
+//! `hocs store-client` CLI verb that exposes it (when one does — pure
+//! machine-plane opcodes like replication frames deliberately have
+//! none). The [`ALL`] table is what the `opcode-symmetry` lint pass
+//! ([`crate::analysis`]) cross-checks: an opcode added here without a
+//! server dispatch arm, a client method, or its declared CLI verb —
+//! or an `op::X` reference in server/client code that this table does
+//! not know — fails `hocs lint`.
+//!
+//! TOPK and HEAVY run the marginal-pruned scans for non-negative
+//! workloads; once any deletion has been absorbed the merged sketch
+//! carries its turnstile flag and the scans route themselves to the
+//! dense variants (see [`crate::sketch::stream`]), so both opcodes are
+//! correct under any workload. QUERY is exact either way.
+//! UPDATE_BATCH is the write hot path: one WAL group-commit frame and
+//! one lock acquisition per destination shard for the whole batch.
+
+pub const UPDATE: u8 = 1;
+pub const UPDATE_BATCH: u8 = 2;
+pub const QUERY: u8 = 3;
+pub const TOPK: u8 = 4;
+pub const HEAVY: u8 = 5;
+pub const MERGE: u8 = 6;
+pub const SNAPSHOT: u8 = 7;
+pub const ADVANCE_EPOCH: u8 = 8;
+pub const STATS: u8 = 9;
+pub const BATCH_SKETCH: u8 = 10;
+pub const SHUTDOWN: u8 = 11;
+/// Origin-headered merge (replication plane + retry-safe edge
+/// ingest): `u64 origin | u64 seq | u8 mode | u8 enc | u8 ingest |
+/// sketch`, deduplicated per origin — see [`crate::store::replica`].
+pub const MERGE_ORIGIN: u8 = 12;
+// ---- tensor plane (multi-mode HCS catalog — see `store::tensor`) ----
+/// `name | TensorFamily` → `u8 created` (0 = identical tensor
+/// already existed; a different family errors).
+pub const TCREATE: u8 = 13;
+/// `name | mode_key | f64 w` — one multi-mode update.
+pub const TUPDATE: u8 = 14;
+/// `name | u32 count | count × (mode_key | f64 w)` — one WAL
+/// group-commit frame and one fused apply for the whole batch.
+pub const TUPDATE_BATCH: u8 = 15;
+/// `name | mode_key` → `f64` median-of-d point estimate.
+pub const TQUERY: u8 = 16;
+/// `name | per mode (u8 flag | u32 index if flag = 1)` → `f64`:
+/// marginal with flagged modes pinned and the rest summed out on
+/// the sketch.
+pub const MARGINAL: u8 = 17;
+/// `name | u32 mode | u32 index | u32 k` → `u32 count | count ×
+/// (mode_key | f64)`: top-k keys within one fixed slice.
+pub const SLICE_TOPK: u8 = 18;
+/// `a_name | b_name | u8 n | n × u8 modes | u8 want_dense` →
+/// `u8 kind | payload`: kind 0 = `f64` scalar (all modes
+/// contracted), 1 = encoded `ContractedSketch`, 2 = dense result
+/// (`u8 n_kept | n_kept × u32 dims | u32 len | len × f64`, laid out
+/// `kept keys of a × kept keys of b`, row-major).
+pub const CONTRACT: u8 = 19;
+/// Tensor replication frame: `u64 origin | u64 seq | name |
+/// HcsStream (full cumulative origin state)` → `u8 applied`.
+/// Unknown tensors are auto-created from the frame's family;
+/// per-(origin, tensor) sequence dedup makes retries no-ops.
+pub const TMERGE_ORIGIN: u8 = 20;
+
+/// First response byte: request handled, body follows.
+pub const STATUS_OK: u8 = 0;
+/// First response byte: error message follows.
+pub const STATUS_ERR: u8 = 1;
+
+/// One row of the protocol surface: the opcode, its constant's name,
+/// the typed [`super::client::StoreClient`] method that speaks it, and
+/// the `hocs store-client` verb exposing it (`None` = machine-plane
+/// only, deliberately not a CLI action).
+pub struct WireOp {
+    pub code: u8,
+    pub name: &'static str,
+    pub client_method: &'static str,
+    pub cli: Option<&'static str>,
+}
+
+/// Every opcode the protocol speaks, in opcode order. The
+/// `opcode-symmetry` lint pass walks this table; keep it exhaustive.
+pub const ALL: &[WireOp] = &[
+    WireOp { code: UPDATE, name: "UPDATE", client_method: "update", cli: Some("update") },
+    WireOp {
+        code: UPDATE_BATCH,
+        name: "UPDATE_BATCH",
+        client_method: "update_batch",
+        cli: Some("update-batch"),
+    },
+    WireOp { code: QUERY, name: "QUERY", client_method: "query", cli: Some("query") },
+    WireOp { code: TOPK, name: "TOPK", client_method: "top_k", cli: Some("topk") },
+    WireOp { code: HEAVY, name: "HEAVY", client_method: "heavy_hitters", cli: Some("heavy") },
+    // federation-plane ingest: edge nodes ship serialized sketches
+    // programmatically; there is no CLI verb that reads a sketch file
+    WireOp { code: MERGE, name: "MERGE", client_method: "merge", cli: None },
+    WireOp { code: SNAPSHOT, name: "SNAPSHOT", client_method: "snapshot", cli: Some("snapshot") },
+    WireOp {
+        code: ADVANCE_EPOCH,
+        name: "ADVANCE_EPOCH",
+        client_method: "advance_epoch",
+        cli: Some("advance-epoch"),
+    },
+    WireOp { code: STATS, name: "STATS", client_method: "stats", cli: Some("stats") },
+    // coordinator-pool compute job, not a store action
+    WireOp { code: BATCH_SKETCH, name: "BATCH_SKETCH", client_method: "batch_sketch", cli: None },
+    WireOp {
+        code: SHUTDOWN,
+        name: "SHUTDOWN",
+        client_method: "shutdown_server",
+        cli: Some("shutdown"),
+    },
+    // replication plane: spoken by the replicator thread, never by hand
+    WireOp { code: MERGE_ORIGIN, name: "MERGE_ORIGIN", client_method: "merge_origin", cli: None },
+    WireOp {
+        code: TCREATE,
+        name: "TCREATE",
+        client_method: "tensor_create",
+        cli: Some("tcreate"),
+    },
+    WireOp {
+        code: TUPDATE,
+        name: "TUPDATE",
+        client_method: "tensor_update",
+        cli: Some("tupdate"),
+    },
+    // batched tensor writes are a programmatic hot path; the CLI's
+    // one-shot tupdate covers the interactive case
+    WireOp {
+        code: TUPDATE_BATCH,
+        name: "TUPDATE_BATCH",
+        client_method: "tensor_update_batch",
+        cli: None,
+    },
+    WireOp { code: TQUERY, name: "TQUERY", client_method: "tensor_query", cli: Some("tquery") },
+    WireOp {
+        code: MARGINAL,
+        name: "MARGINAL",
+        client_method: "tensor_marginal",
+        cli: Some("marginal"),
+    },
+    WireOp {
+        code: SLICE_TOPK,
+        name: "SLICE_TOPK",
+        client_method: "tensor_slice_topk",
+        cli: Some("slice-topk"),
+    },
+    WireOp {
+        code: CONTRACT,
+        name: "CONTRACT",
+        client_method: "tensor_contract",
+        cli: Some("contract"),
+    },
+    // replication plane (tensor full ships), replicator-only
+    WireOp {
+        code: TMERGE_ORIGIN,
+        name: "TMERGE_ORIGIN",
+        client_method: "tensor_merge_origin",
+        cli: None,
+    },
+];
+
+/// The name of an opcode, if the table knows it.
+pub fn name(code: u8) -> Option<&'static str> {
+    ALL.iter().find(|o| o.code == code).map(|o| o.name)
+}
+
+/// The one place the `unknown opcode` error message is spelled — the
+/// server's dispatch fallback arm formats through here so the error
+/// path stays tied to this table.
+pub fn unknown(code: u8) -> String {
+    format!("unknown opcode {code}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_exhaustive_and_consistent() {
+        // codes are dense 1..=20, unique, in table order
+        let mut seen = std::collections::HashSet::new();
+        for (i, o) in ALL.iter().enumerate() {
+            assert_eq!(o.code as usize, i + 1, "opcode {} out of order", o.name);
+            assert!(seen.insert(o.code), "duplicate opcode {}", o.code);
+            assert!(!o.client_method.is_empty());
+        }
+        assert_eq!(ALL.len(), 20);
+        assert_eq!(name(UPDATE), Some("UPDATE"));
+        assert_eq!(name(TMERGE_ORIGIN), Some("TMERGE_ORIGIN"));
+        assert_eq!(name(0), None);
+        assert_eq!(name(21), None);
+        assert!(unknown(42).contains("42"));
+    }
+}

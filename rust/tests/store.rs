@@ -557,3 +557,86 @@ fn recovery_is_idempotent_across_reopens() {
     assert_eq!(q1.1, 6.0);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Drive every WAL record kind and snapshot section with fixed inputs:
+/// point + batch updates, an epoch rotation, a plain merge, deduped
+/// origin merges (delta then full), sender cursor advances, the tensor
+/// plane (DDL, point, batch), a snapshot, and a post-snapshot WAL tail
+/// in the next generation. Nothing here touches wall clocks or derived
+/// origin ids, so two runs must produce identical durable bytes.
+fn golden_format_workload(dir: &std::path::Path) {
+    use hocs::store::replica::wire::{MODE_DELTA, MODE_FULL};
+    use hocs::store::TensorFamily;
+    let cfg = store_cfg(2, 3, 0x601D_F0D5);
+    let live = DurableStore::open(dir, cfg.clone()).unwrap();
+    let mut rng = Pcg64::new(7);
+    for _ in 0..40 {
+        let (i, j) = random_key(&mut rng, &cfg);
+        live.update(i, j, int_weight(&mut rng)).unwrap();
+    }
+    live.update_batch(&[(1, 2, 3.0), (4, 5, -2.0), (6, 7, 9.0)]).unwrap();
+    live.advance_epoch().unwrap();
+    let mut remote = reference_sketch(&cfg);
+    remote.update(3, 4, 5.0);
+    remote.update(8, 9, -1.0);
+    live.merge_sketch(&remote).unwrap();
+    let mut delta = reference_sketch(&cfg);
+    delta.update(10, 11, 2.0);
+    assert!(live.apply_origin_merge(9, 1, MODE_DELTA, true, delta).unwrap());
+    let mut full = reference_sketch(&cfg);
+    full.update(12, 13, 4.0);
+    assert!(live.apply_origin_merge(9, 2, MODE_FULL, true, full).unwrap());
+    live.advance_replica_cursor("peer:a", 3, 7).unwrap();
+    live.advance_replica_cursor("peer:b", 1, 2).unwrap();
+    let family = TensorFamily { dims: vec![6, 5, 4], sketch_dims: vec![4, 3, 2], d: 3, seed: 99 };
+    assert!(live.tensor_create("golden", &family).unwrap());
+    live.tensor_update("golden", &[1, 2, 3], 2.5).unwrap();
+    live.tensor_update_batch("golden", &[0, 1, 2, 5, 4, 3], &[1.0, -2.0]).unwrap();
+    live.snapshot().unwrap();
+    live.update(2, 2, 2.0).unwrap();
+    live.tensor_update("golden", &[2, 2, 2], 1.0).unwrap();
+}
+
+/// Golden on-disk-format pin: FNV-64 over `snapshot.bin` + `wal.bin`
+/// from the fixed workload above, pinned per `FORMAT_VERSION` in
+/// `rust/tests/golden/` (see the README there for the bless ritual).
+/// Complements the `version-gate` lint: the lint pins what the source
+/// *says* the format is, this pins what the code actually *writes*.
+#[test]
+fn on_disk_format_bytes_are_pinned_per_format_version() {
+    let dir_a = tmpdir("golden_a");
+    let dir_b = tmpdir("golden_b");
+    golden_format_workload(&dir_a);
+    golden_format_workload(&dir_b);
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
+    for name in ["snapshot.bin", "wal.bin"] {
+        let a = std::fs::read(dir_a.join(name)).unwrap();
+        let b = std::fs::read(dir_b.join(name)).unwrap();
+        // determinism first: identical runs must leave identical bytes
+        assert_eq!(a, b, "{name} differs between two identical runs");
+        for &byte in &a {
+            digest ^= u64::from(byte);
+            digest = digest.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    let got = format!("{digest:016x}\n");
+    let pin =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/format_v5.fnv");
+    match std::fs::read_to_string(&pin) {
+        Ok(pinned) => assert_eq!(
+            got.trim(),
+            pinned.trim(),
+            "durable bytes drifted from the v5 golden pin; if the format change is \
+             deliberate, bump FORMAT_VERSION in store/wal.rs, re-pin the lint manifest, \
+             and bless a new rust/tests/golden/format_v<N>.fnv (delete the old pin file \
+             and re-run this test)"
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(pin.parent().unwrap()).unwrap();
+            std::fs::write(&pin, &got).unwrap();
+            eprintln!("blessed new golden format pin {} = {}", pin.display(), got.trim());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
