@@ -18,6 +18,7 @@
 //! seconds-long sweep with the same schema.
 
 use hocs::rng::Pcg64;
+use hocs::sketch::stream::StreamSketch;
 use hocs::store::{
     DurableOptions, DurableStore, ShardedStore, StoreClient, StoreConfig, StoreServer,
     StoreServerConfig,
@@ -379,6 +380,85 @@ fn scan_rows() -> Vec<ScanRow> {
     rows
 }
 
+// ---------- fused kernel: scalar walk vs two-phase vectorized ----------
+
+struct KernelRow {
+    op: String,
+    batch: usize,
+    scalar_per_sec: f64,
+    kernel_per_sec: f64,
+    speedup: f64,
+}
+
+/// Scalar oracle vs the two-phase kernel on the same batch, for the
+/// plain fused walk and the width-3 fan-out. `HOCS_KERNEL` still
+/// applies, so the CI scalar-forced leg reports a ~1x speedup — the
+/// schema is the same either way.
+fn kernel_rows() -> Vec<KernelRow> {
+    let (n1, n2, m1, m2, d) = (1usize << 14, 1 << 14, 64, 64, 5);
+    let mut rows = Vec::new();
+    for batch in [64usize, 1024, 8192] {
+        let reps = scaled((2_000_000 / batch).max(1));
+        let mut rng = Pcg64::new(17);
+        let items: Vec<(usize, usize, f64)> = (0..batch)
+            .map(|_| {
+                (rng.gen_range(n1 as u64) as usize, rng.gen_range(n2 as u64) as usize, 1.0)
+            })
+            .collect();
+
+        let mut sk = StreamSketch::new(n1, n2, m1, m2, d, 42);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sk.update_batch_scalar(&items);
+        }
+        let scalar = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(sk.query(1, 1));
+        let mut sk = StreamSketch::new(n1, n2, m1, m2, d, 42);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sk.update_batch(&items);
+        }
+        let kernel = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(sk.query(1, 1));
+        rows.push(KernelRow {
+            op: "update_batch".to_string(),
+            batch,
+            scalar_per_sec: scalar,
+            kernel_per_sec: kernel,
+            speedup: kernel / scalar,
+        });
+
+        let fan_reps = (reps / 2).max(1);
+        let mk = || {
+            (0..3).map(|_| StreamSketch::new(n1, n2, m1, m2, d, 42)).collect::<Vec<_>>()
+        };
+        let mut fans = mk();
+        let t0 = Instant::now();
+        for _ in 0..fan_reps {
+            let mut targets: Vec<&mut StreamSketch> = fans.iter_mut().collect();
+            StreamSketch::update_batch_fanout_scalar(&mut targets, &items);
+        }
+        let scalar = (fan_reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(fans[0].query(1, 1));
+        let mut fans = mk();
+        let t0 = Instant::now();
+        for _ in 0..fan_reps {
+            let mut targets: Vec<&mut StreamSketch> = fans.iter_mut().collect();
+            StreamSketch::update_batch_fanout(&mut targets, &items);
+        }
+        let kernel = (fan_reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(fans[0].query(1, 1));
+        rows.push(KernelRow {
+            op: "update_batch_fanout x3".to_string(),
+            batch,
+            scalar_per_sec: scalar,
+            kernel_per_sec: kernel,
+            speedup: kernel / scalar,
+        });
+    }
+    rows
+}
+
 // ---------- concurrent un-batched writers: group commit on/off ----------
 
 struct ConcRow {
@@ -546,6 +626,30 @@ fn main() {
         );
     }
 
+    let kernels = kernel_rows();
+    let mut kernel_table = Table::new(
+        "fused kernel: scalar walk vs two-phase vectorized",
+        &["op", "batch", "scalar items/s", "kernel items/s", "speedup"],
+    );
+    for r in &kernels {
+        kernel_table.row(vec![
+            r.op.clone(),
+            r.batch.to_string(),
+            format!("{:.0}", r.scalar_per_sec),
+            format!("{:.0}", r.kernel_per_sec),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    println!();
+    kernel_table.print();
+    if let Some(r) = kernels.iter().find(|r| r.op == "update_batch" && r.batch == 8192) {
+        println!(
+            "\nvectorized update_batch speedup at batch=8192: {:.1}x over the scalar walk \
+             (target >= 4x)",
+            r.speedup
+        );
+    }
+
     let json = Json::obj(vec![
         (
             "store",
@@ -576,6 +680,23 @@ fn main() {
                             ("shards", Json::Num(r.shards as f64)),
                             ("cached_per_sec", Json::Num(r.cached_per_sec)),
                             ("uncached_per_sec", Json::Num(r.uncached_per_sec)),
+                            ("speedup", Json::Num(r.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "kernel",
+            Json::Arr(
+                kernels
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("op", Json::Str(r.op.clone())),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("scalar_per_sec", Json::Num(r.scalar_per_sec)),
+                            ("kernel_per_sec", Json::Num(r.kernel_per_sec)),
                             ("speedup", Json::Num(r.speedup)),
                         ])
                     })

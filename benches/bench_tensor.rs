@@ -202,6 +202,56 @@ fn run_contract_row(dims: &[usize], sketch_dims: &[usize], per_tensor: usize) ->
     }
 }
 
+struct KernelRow {
+    batch: usize,
+    scalar_per_sec: f64,
+    kernel_per_sec: f64,
+    speedup: f64,
+}
+
+/// ND fused batch walk: scalar oracle vs the two-phase kernel
+/// (per-mode hash memoization + cache-blocked apply) on an order-3
+/// stream. Batch 64 keeps every mode on the direct hash path; 8192
+/// tabulates all of them. `HOCS_KERNEL=scalar` (the CI bit-identity
+/// leg) collapses the speedup to ~1x with the same schema.
+fn kernel_rows() -> Vec<KernelRow> {
+    let dims = [1usize << 10, 1 << 10, 1 << 8];
+    let mdims = [32usize, 32, 16];
+    let total = if quick() { 200_000 } else { 2_000_000 };
+    let mut rows = Vec::new();
+    for batch in [64usize, 1024, 8192] {
+        let reps = (total / batch).max(1);
+        let mut rng = Pcg64::new(23);
+        let mut keys = Vec::with_capacity(batch * dims.len());
+        for _ in 0..batch {
+            keys.extend(random_key(&mut rng, &dims));
+        }
+        let ws = vec![1.0f64; batch];
+
+        let mut sk = HcsStream::new(&dims, &mdims, D, 42);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            sk.update_batch_scalar(&keys, &ws);
+        }
+        let scalar = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(sk.query(&[1, 1, 1]));
+        let mut sk = HcsStream::new(&dims, &mdims, D, 42);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            sk.update_batch(&keys, &ws);
+        }
+        let kernel = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(sk.query(&[1, 1, 1]));
+        rows.push(KernelRow {
+            batch,
+            scalar_per_sec: scalar,
+            kernel_per_sec: kernel,
+            speedup: kernel / scalar,
+        });
+    }
+    rows
+}
+
 fn fmt_dims(dims: &[usize]) -> String {
     dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
 }
@@ -292,6 +342,28 @@ fn main() {
         headline
     );
 
+    let kernels = kernel_rows();
+    let mut t = Table::new(
+        "ND fused kernel: scalar walk vs two-phase vectorized",
+        &["batch", "scalar items/s", "kernel items/s", "speedup"],
+    );
+    for r in &kernels {
+        t.row(vec![
+            r.batch.to_string(),
+            format!("{:.0}", r.scalar_per_sec),
+            format!("{:.0}", r.kernel_per_sec),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    println!();
+    t.print();
+    if let Some(r) = kernels.iter().find(|r| r.batch == 8192) {
+        println!(
+            "\nvectorized ND update_batch speedup at batch=8192: {:.1}x over the scalar walk",
+            r.speedup
+        );
+    }
+
     let json = Json::obj(vec![
         ("bench", Json::Str("tensor".into())),
         ("quick", Json::Bool(quick())),
@@ -313,6 +385,22 @@ fn main() {
                             ("mem_ratio", Json::Num(r.ratio())),
                             ("hcs_mae", Json::Num(r.hcs_mae)),
                             ("flat_mae", Json::Num(r.flat_mae)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "kernel",
+            Json::Arr(
+                kernels
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("scalar_per_sec", Json::Num(r.scalar_per_sec)),
+                            ("kernel_per_sec", Json::Num(r.kernel_per_sec)),
+                            ("speedup", Json::Num(r.speedup)),
                         ])
                     })
                     .collect(),

@@ -53,6 +53,10 @@ pub const SCOPES: &[(&str, &[&str])] = &[
         ],
     ),
     ("store/replica/mod.rs", &["run", "sync_peer", "sync_tensors", "stage"]),
+    // kernel dispatch sits under every batched write: resolving the
+    // path (env probe + CPU feature detection) must never panic, or a
+    // misspelt HOCS_KERNEL could take down the serve loop
+    ("sketch/kernel.rs", &["configured", "best_vector_path"]),
 ];
 
 const TOKENS: &[&str] =

@@ -31,6 +31,9 @@ pub struct ModeHash {
     pub m: usize,
     bucket: MultiplyShiftHash,
     sign: MultiplyShiftHash,
+    /// strength-reduced `% m` (precomputed once; the batch kernels
+    /// evaluate it millions of times per second)
+    red: ModReduce,
 }
 
 impl ModeHash {
@@ -40,10 +43,16 @@ impl ModeHash {
         let mut sm = SplitMix64::new(seed ^ 0xA5A5_5A5A_DEAD_BEEF);
         let bucket = MultiplyShiftHash::new(&mut sm);
         let sign = MultiplyShiftHash::new(&mut sm);
-        Self { n, m, bucket, sign }
+        Self { n, m, bucket, sign, red: ModReduce::new(m as u64) }
     }
 
     /// Bucket for index `i`.
+    ///
+    /// Straight-line reference: a hardware divide per call. The fused
+    /// batch kernels ([`crate::sketch::kernel`]) use [`ModeHash::h_fast`]
+    /// instead; this form is kept verbatim as the scalar oracle the
+    /// kernels' bit-identity tests (and the bench baseline) compare
+    /// against.
     #[inline]
     pub fn h(&self, i: usize) -> usize {
         debug_assert!(i < self.n);
@@ -58,6 +67,43 @@ impl ModeHash {
         } else {
             -1.0
         }
+    }
+
+    /// [`ModeHash::h`] through the precomputed [`ModReduce`] — the same
+    /// bucket for every index (property-tested), without the hardware
+    /// divide. Hot paths that cannot batch (single-item fan-out) call
+    /// this directly; the batch kernels inline the same reduction.
+    #[inline]
+    pub fn h_fast(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        self.red.reduce(self.bucket.eval(i as u64)) as usize
+    }
+
+    /// Sign *bit* for index `i`: `0` ↦ `+1.0`, `1` ↦ `−1.0`, i.e.
+    /// `s(i) == f64::from_bits(f64::to_bits(1.0) | (s_bit(i) << 63))`.
+    /// The kernels combine mode signs by XOR-ing bits instead of
+    /// branching per index.
+    #[inline]
+    pub fn s_bit(&self, i: usize) -> u64 {
+        (self.sign.eval(i as u64) >> 62) & 1
+    }
+
+    /// The precomputed reducer for this mode's `% m`.
+    #[inline]
+    pub(crate) fn reducer(&self) -> ModReduce {
+        self.red
+    }
+
+    /// The raw multiply-shift bucket hash (kernel hash phase).
+    #[inline]
+    pub(crate) fn bucket_hash(&self) -> &MultiplyShiftHash {
+        &self.bucket
+    }
+
+    /// The raw multiply-shift sign hash (kernel hash phase).
+    #[inline]
+    pub(crate) fn sign_hash(&self) -> &MultiplyShiftHash {
+        &self.sign
     }
 
     /// Materialize the bucket map as a `Vec` (hot-path friendly).
@@ -101,6 +147,71 @@ impl MultiplyShiftHash {
     pub fn eval(&self, x: u64) -> u64 {
         let v = self.a.wrapping_mul(x as u128).wrapping_add(self.b);
         (v >> 65) as u64 // top 63 bits
+    }
+
+    /// `(a_lo, a_hi, b_lo, b_hi)` — the 64-bit limbs of the hash
+    /// constants, for the lane kernels (which track only the high limb
+    /// of `a·x + b` plus the low limb's carry).
+    #[inline]
+    pub(crate) fn limbs(&self) -> (u64, u64, u64, u64) {
+        (self.a as u64, (self.a >> 64) as u64, self.b as u64, (self.b >> 64) as u64)
+    }
+}
+
+/// Exact strength reduction of `x % m` for the 63-bit values
+/// [`MultiplyShiftHash::eval`] produces.
+///
+/// Power-of-two moduli become a mask. Everything else goes through a
+/// Granlund–Montgomery style reciprocal `M = ⌊2^127 / m⌋ + 1`:
+/// `⌊M·x / 2^127⌋ = ⌊x / m⌋` exactly for all `x < 2^63`, because the
+/// reciprocal's rounding error contributes at most `m·x / (m·2^127) =
+/// x/2^127 < 2^-64`, strictly below the `1/m` gap to the next integer
+/// (any `m < 2^64`). Two 64×64→128 multiplies replace a hardware
+/// divide — the single most expensive instruction on the old hash walk.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ModReduce {
+    /// `m` is a power of two: reduce with `x & (m − 1)`.
+    Mask(u64),
+    /// General `m`: `(m, M_hi, M_lo)` with `M = ⌊2^127/m⌋ + 1`.
+    Magic { m: u64, m_hi: u64, m_lo: u64 },
+}
+
+impl ModReduce {
+    pub(crate) fn new(m: u64) -> Self {
+        assert!(m > 0, "modulus must be positive");
+        if m.is_power_of_two() {
+            ModReduce::Mask(m - 1)
+        } else {
+            // m ≥ 3 here (1 and 2 are powers of two), so M < 2^126
+            let recip = (1u128 << 127) / m as u128 + 1;
+            ModReduce::Magic { m, m_hi: (recip >> 64) as u64, m_lo: recip as u64 }
+        }
+    }
+
+    /// `x % m`; exact for `x < 2^63` (debug-asserted).
+    #[inline]
+    pub(crate) fn reduce(self, x: u64) -> u64 {
+        debug_assert!(x < 1 << 63);
+        match self {
+            ModReduce::Mask(mask) => x & mask,
+            ModReduce::Magic { m, m_hi, m_lo } => {
+                // q = ⌊M·x / 2^127⌋ via the high limbs of a 128×64 product
+                let t = ((m_lo as u128) * (x as u128)) >> 64;
+                let q = (((m_hi as u128) * (x as u128) + t) >> 63) as u64;
+                x - q * m
+            }
+        }
+    }
+
+    /// The mask when `m` is a power of two (the AVX2 hash phase only
+    /// handles mask reducers; magic moduli fall back to the portable
+    /// lanes).
+    #[inline]
+    pub(crate) fn pow2_mask(self) -> Option<u64> {
+        match self {
+            ModReduce::Mask(mask) => Some(mask),
+            ModReduce::Magic { .. } => None,
+        }
     }
 }
 
@@ -268,6 +379,49 @@ mod tests {
         for &c in &buckets {
             assert!((c as i64 - 1000).unsigned_abs() < 250);
         }
+    }
+
+    #[test]
+    fn mod_reduce_matches_hardware_modulo() {
+        // every reducer shape: powers of two (mask), tiny, prime, and
+        // near-2^63 magic moduli, against 63-bit inputs of every flavor
+        let mut sm = SplitMix64::new(0xFEED);
+        let mut moduli = vec![1u64, 2, 3, 4, 5, 7, 10, 12, 16, 37, 63, 64, 65, 1000, 4096];
+        moduli.extend([4095, 4097, (1 << 32) - 5, (1 << 48) + 1, (1 << 62) + 3, (1 << 63) - 1]);
+        for m in moduli {
+            let red = ModReduce::new(m);
+            for x in [0u64, 1, m - 1, m % (1 << 63), (1 << 63) - 1] {
+                assert_eq!(red.reduce(x), x % m, "m={m} x={x}");
+            }
+            for _ in 0..2000 {
+                let x = sm.next_u64() >> 1; // 63-bit
+                assert_eq!(red.reduce(x), x % m, "m={m} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn h_fast_and_s_bit_match_reference() {
+        for (n, m, seed) in [(1000, 37, 42u64), (512, 64, 7), (4096, 12, 99), (64, 1, 3)] {
+            let mh = ModeHash::new(n, m, seed);
+            for i in 0..n {
+                assert_eq!(mh.h_fast(i), mh.h(i), "n={n} m={m} i={i}");
+                let s = f64::from_bits(f64::to_bits(1.0) | (mh.s_bit(i) << 63));
+                assert_eq!(s.to_bits(), mh.s(i).to_bits(), "n={n} m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn limbs_reassemble_the_constants() {
+        let mut sm = SplitMix64::new(5);
+        let h = MultiplyShiftHash::new(&mut sm);
+        let (a_lo, a_hi, b_lo, b_hi) = h.limbs();
+        let a = (a_hi as u128) << 64 | a_lo as u128;
+        let b = (b_hi as u128) << 64 | b_lo as u128;
+        assert_eq!(a, h.a);
+        assert_eq!(b, h.b);
+        assert_eq!(a & 1, 1, "multiply-shift a must be odd");
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod cs;
 pub mod cts;
 pub mod estimate;
 pub mod inner;
+pub mod kernel;
 pub mod kron;
 pub mod matmul;
 pub mod mts;

@@ -22,9 +22,18 @@
 //! same hash family elementwise with zero accuracy loss.
 
 use crate::hash::{HashSeeds, ModeHash};
+use crate::sketch::kernel;
 use crate::util::stats::median_inplace;
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+thread_local! {
+    /// Per-thread median scratch for [`StreamSketch::query`]: the serve
+    /// path calls it once per key and `d` is tiny and constant, so one
+    /// warm buffer removes a heap allocation per query.
+    static QUERY_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 /// Marginal-pruning slack for [`StreamSketch::heavy_hitters`]: a
 /// row/column survives when its estimated marginal clears
@@ -150,8 +159,11 @@ impl StreamSketch {
         debug_assert!(i < first.n1 && j < first.n2);
         debug_assert!(rest.iter().all(|t| first.same_family(t)));
         for r in 0..first.d {
-            let b = first.rows[r].h(i) * first.m2 + first.cols[r].h(j);
-            let v = first.rows[r].s(i) * first.cols[r].s(j) * w;
+            // divless single-point walk: precomputed reducers + sign
+            // bits (bit-identical to `h`/`s`, property-tested)
+            let b = first.rows[r].h_fast(i) * first.m2 + first.cols[r].h_fast(j);
+            let sb = first.rows[r].s_bit(i) ^ first.cols[r].s_bit(j);
+            let v = kernel::sign_from_bit(sb) * w;
             first.tables[r][b] += v;
             for t in rest.iter_mut() {
                 t.tables[r][b] += v;
@@ -169,11 +181,58 @@ impl StreamSketch {
         }
     }
 
-    /// Batched [`StreamSketch::update_fanout`]: the fused table walk of
-    /// [`StreamSketch::update_batch`], broadcast to every target. Per
-    /// target and table, items land in batch order — bit-identical to
-    /// calling [`StreamSketch::update_batch`] on each target.
+    /// Batched [`StreamSketch::update_fanout`]: one kernel hash phase
+    /// per repeat and tile ([`crate::sketch::kernel`]), with the staged
+    /// runs replayed into every target's table — the hash work is paid
+    /// once no matter how many sketches the store fans into. Per target
+    /// and table, items land in batch order — bit-identical to calling
+    /// [`StreamSketch::update_batch`] on each target (and to
+    /// [`StreamSketch::update_batch_fanout_scalar`]).
     pub fn update_batch_fanout(targets: &mut [&mut StreamSketch], items: &[(usize, usize, f64)]) {
+        let Some(first) = targets.first() else {
+            return;
+        };
+        let path = kernel::configured();
+        if path == kernel::KernelPath::Scalar || first.m1 * first.m2 > u32::MAX as usize {
+            Self::update_batch_fanout_scalar(targets, items);
+            return;
+        }
+        debug_assert!(targets.windows(2).all(|p| p[0].same_family(&p[1])));
+        let d = targets[0].d;
+        let m2 = targets[0].m2;
+        kernel::with_scratch(|s| {
+            for r in 0..d {
+                let hash = kernel::Hash2d::new(&targets[0].rows[r], &targets[0].cols[r], m2);
+                let table_len = targets[0].tables[r].len();
+                for tile in items.chunks(kernel::TILE) {
+                    kernel::hash_tile_2d(path, &hash, tile, &mut s.b, &mut s.v);
+                    s.stage(table_len);
+                    for t in targets.iter_mut() {
+                        let (bs, vs) = s.runs();
+                        kernel::apply_runs(&mut t.tables[r], bs, vs);
+                    }
+                }
+            }
+        });
+        let n = items.len() as u64;
+        let deletions = items.iter().any(|&(_, _, w)| w < 0.0);
+        for t in targets.iter_mut() {
+            t.updates += n;
+            if deletions {
+                t.has_deletions = true;
+            }
+        }
+    }
+
+    /// The pre-kernel scalar fan-out walk: hardware `%` and branchy
+    /// signs, one fused pass per repeat. Kept public as the bit-identity
+    /// oracle and bench baseline for the kernel path
+    /// (`HOCS_KERNEL=scalar` routes
+    /// [`StreamSketch::update_batch_fanout`] here).
+    pub fn update_batch_fanout_scalar(
+        targets: &mut [&mut StreamSketch],
+        items: &[(usize, usize, f64)],
+    ) {
         let Some((first, rest)) = targets.split_first_mut() else {
             return;
         };
@@ -203,13 +262,44 @@ impl StreamSketch {
         }
     }
 
-    /// Fused multi-key update: each repeat's hash pair and counter table
-    /// is walked once for the whole batch instead of once per item, so a
-    /// batch costs d table passes rather than `items.len() · d` scattered
-    /// ones. Per table, items land in batch order — exactly the order
-    /// the single-item path would apply them — so the result is
-    /// **bit-identical** to calling [`StreamSketch::update`] per item.
+    /// Fused multi-key update, routed through the two-phase kernel
+    /// ([`crate::sketch::kernel`]): a lane-parallel hash phase turns
+    /// each tile of items into flat `(bucket, signed_w)` runs, and a
+    /// cache-blocked apply phase adds them into the repeat's table in
+    /// batch order. **Bit-identical** to calling
+    /// [`StreamSketch::update`] per item and to
+    /// [`StreamSketch::update_batch_scalar`] on every dispatch path —
+    /// see the kernel module's bit-identity argument.
     pub fn update_batch(&mut self, items: &[(usize, usize, f64)]) {
+        let path = kernel::configured();
+        if path == kernel::KernelPath::Scalar || self.m1 * self.m2 > u32::MAX as usize {
+            self.update_batch_scalar(items);
+            return;
+        }
+        kernel::with_scratch(|s| {
+            for r in 0..self.d {
+                let hash = kernel::Hash2d::new(&self.rows[r], &self.cols[r], self.m2);
+                let table = &mut self.tables[r];
+                for tile in items.chunks(kernel::TILE) {
+                    kernel::hash_tile_2d(path, &hash, tile, &mut s.b, &mut s.v);
+                    s.stage(table.len());
+                    let (bs, vs) = s.runs();
+                    kernel::apply_runs(table, bs, vs);
+                }
+            }
+        });
+        self.updates += items.len() as u64;
+        if items.iter().any(|&(_, _, w)| w < 0.0) {
+            self.has_deletions = true;
+        }
+    }
+
+    /// The pre-kernel fused walk: each repeat's hash pair and counter
+    /// table walked once for the whole batch, hardware `%` and branchy
+    /// signs per item. Kept public as the bit-identity oracle for the
+    /// kernel paths and as the bench baseline (`HOCS_KERNEL=scalar`
+    /// routes [`StreamSketch::update_batch`] here).
+    pub fn update_batch_scalar(&mut self, items: &[(usize, usize, f64)]) {
         for r in 0..self.d {
             let row = &self.rows[r];
             let col = &self.cols[r];
@@ -227,9 +317,15 @@ impl StreamSketch {
     }
 
     /// Point query: median-of-d estimate of the total weight of (i, j).
+    /// Runs through per-thread scratch, so the steady-state serve path
+    /// allocates nothing per query.
     pub fn query(&self, i: usize, j: usize) -> f64 {
-        let mut est = vec![0.0; self.d];
-        self.query_scratch(i, j, &mut est)
+        QUERY_SCRATCH.with(|cell| {
+            let mut est = cell.borrow_mut();
+            est.clear();
+            est.resize(self.d, 0.0);
+            self.query_scratch(i, j, &mut est)
+        })
     }
 
     /// [`StreamSketch::query`] into caller-owned scratch (the scan paths
@@ -963,6 +1059,90 @@ mod tests {
                 let est = probe.finalize_estimates(i, j, &mut acc);
                 assert_eq!(est.to_bits(), sk.query(i, j).to_bits(), "key ({i}, {j})");
             }
+        }
+    }
+
+    fn table_bits(sk: &StreamSketch, r: usize) -> Vec<u64> {
+        sk.table(r).iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn kernel_batch_bit_identical_across_remainders_and_tiles() {
+        // batch sizes exercising the lane remainder (0, 1, LANES±1) and
+        // the tile boundary (4096 ± 1), over pow2 geometry (AVX2
+        // eligible) and non-pow2 geometry (portable lanes + magic
+        // reducers); weights include deletions
+        for (m1, m2) in [(16usize, 16usize), (12, 10)] {
+            for n in [0usize, 1, 7, 8, 9, 4095, 4096, 4097] {
+                let mut kern = StreamSketch::new(64, 64, m1, m2, 3, 29);
+                let mut scal = StreamSketch::new(64, 64, m1, m2, 3, 29);
+                let mut rng = Pcg64::new(n as u64 + 1);
+                let items: Vec<(usize, usize, f64)> = (0..n)
+                    .map(|_| {
+                        (rng.gen_range(64) as usize, rng.gen_range(64) as usize, rng.normal())
+                    })
+                    .collect();
+                kern.update_batch(&items);
+                scal.update_batch_scalar(&items);
+                assert_eq!(kern.updates, scal.updates);
+                assert_eq!(kern.has_deletions, scal.has_deletions);
+                for r in 0..3 {
+                    assert_eq!(
+                        table_bits(&kern, r),
+                        table_bits(&scal, r),
+                        "m=({m1},{m2}) n={n} table {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_fanout_bit_identical_for_widths_1_to_4() {
+        for width in 1usize..=4 {
+            let mk = || StreamSketch::new(48, 40, 16, 16, 3, 31);
+            let mut fan: Vec<StreamSketch> = (0..width).map(|_| mk()).collect();
+            let mut solo: Vec<StreamSketch> = (0..width).map(|_| mk()).collect();
+            let mut rng = Pcg64::new(width as u64);
+            let items: Vec<(usize, usize, f64)> = (0..700)
+                .map(|_| {
+                    (rng.gen_range(48) as usize, rng.gen_range(40) as usize, rng.normal())
+                })
+                .collect();
+            {
+                let mut refs: Vec<&mut StreamSketch> = fan.iter_mut().collect();
+                StreamSketch::update_batch_fanout(&mut refs, &items);
+            }
+            for s in solo.iter_mut() {
+                s.update_batch_scalar(&items);
+            }
+            for (f, s) in fan.iter().zip(solo.iter()) {
+                assert_eq!(f.updates, s.updates);
+                assert_eq!(f.has_deletions, s.has_deletions);
+                for r in 0..3 {
+                    assert_eq!(table_bits(f, r), table_bits(s, r), "width {width} table {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_blocked_apply_engages_on_large_tables() {
+        // 512·256 = 131072 counters, past the kernel's direct-apply cap,
+        // with enough items that the staged (block-partitioned) apply
+        // path runs — results must stay bit-identical to batch order
+        let mut kern = StreamSketch::new(4096, 4096, 512, 256, 2, 37);
+        let mut scal = StreamSketch::new(4096, 4096, 512, 256, 2, 37);
+        let mut rng = Pcg64::new(41);
+        let items: Vec<(usize, usize, f64)> = (0..3000)
+            .map(|_| {
+                (rng.gen_range(4096) as usize, rng.gen_range(4096) as usize, rng.normal())
+            })
+            .collect();
+        kern.update_batch(&items);
+        scal.update_batch_scalar(&items);
+        for r in 0..2 {
+            assert_eq!(table_bits(&kern, r), table_bits(&scal, r), "table {r}");
         }
     }
 }

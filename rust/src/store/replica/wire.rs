@@ -88,7 +88,14 @@ pub fn read_header(rd: &mut Reader<'_>) -> Result<OriginHeader> {
     Ok(OriginHeader { origin, seq, mode, enc, ingest: ingest == 1 })
 }
 
-/// Sparse-encode `sk` (only non-zero counters travel).
+/// Sparse-encode `sk` (only non-zero counters travel). One pass per
+/// table instead of a count pass plus an emit pass: the `nnz` slot is
+/// reserved up front and backpatched after the scan, and a chunk-of-8
+/// prefilter ORs the sign-stripped bit patterns (`bits << 1` maps both
+/// `±0.0` — and only them — to 0) to skip all-zero runs, the common
+/// case in a short sync interval's delta. The per-counter predicate is
+/// the same `v != ±0.0` as before (NaN bits survive the shift), so the
+/// emitted bytes are identical to the two-pass form.
 pub fn encode_sparse(sk: &StreamSketch, out: &mut Vec<u8>) {
     for v in [sk.n1, sk.n2, sk.m1, sk.m2, sk.d] {
         codec::put_u32(out, u32::try_from(v).expect("sketch dim too large to encode"));
@@ -98,14 +105,36 @@ pub fn encode_sparse(sk: &StreamSketch, out: &mut Vec<u8>) {
     codec::put_u8(out, u8::from(sk.has_deletions));
     for r in 0..sk.d {
         let table = sk.table(r);
-        let nnz = table.iter().filter(|&&v| v != 0.0).count();
-        codec::put_u32(out, u32::try_from(nnz).expect("nnz fits u32"));
-        for (idx, &v) in table.iter().enumerate() {
-            if v != 0.0 {
-                codec::put_u32(out, idx as u32);
+        let nnz_pos = out.len();
+        codec::put_u32(out, 0); // reserved; backpatched below
+        let mut nnz: u64 = 0;
+        let mut base = 0usize;
+        let mut chunks = table.chunks_exact(8);
+        for chunk in &mut chunks {
+            let mut any = 0u64;
+            for &v in chunk {
+                any |= v.to_bits() << 1;
+            }
+            if any != 0 {
+                for (off, &v) in chunk.iter().enumerate() {
+                    if v.to_bits() << 1 != 0 {
+                        codec::put_u32(out, (base + off) as u32);
+                        codec::put_f64(out, v);
+                        nnz += 1;
+                    }
+                }
+            }
+            base += 8;
+        }
+        for (off, &v) in chunks.remainder().iter().enumerate() {
+            if v.to_bits() << 1 != 0 {
+                codec::put_u32(out, (base + off) as u32);
                 codec::put_f64(out, v);
+                nnz += 1;
             }
         }
+        let nnz = u32::try_from(nnz).expect("nnz fits u32");
+        out[nnz_pos..nnz_pos + 4].copy_from_slice(&nnz.to_le_bytes());
     }
 }
 
@@ -150,8 +179,9 @@ pub fn decode_sparse(rd: &mut Reader<'_>) -> Result<StreamSketch> {
 /// sync interval are usually sparse; a saturated cumulative state is
 /// not). Returns the [`ENC_DENSE`] / [`ENC_SPARSE`] tag that was used.
 pub fn encode_sketch_auto(sk: &StreamSketch, out: &mut Vec<u8>) -> u8 {
+    // same sign-stripped-bits nonzero test as the encode_sparse scan
     let nnz: usize =
-        (0..sk.d).map(|r| sk.table(r).iter().filter(|&&v| v != 0.0).count()).sum();
+        (0..sk.d).map(|r| sk.table(r).iter().filter(|&&v| v.to_bits() << 1 != 0).count()).sum();
     // shared header is identical; per repeat sparse pays 4 + 12·nnz
     // bytes against the dense 8·m1·m2
     if 4 * sk.d + 12 * nnz < 8 * sk.space() {
@@ -265,6 +295,37 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "n={n} table {r}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn single_pass_sparse_matches_two_pass_reference_bytes() {
+        for n in [0usize, 3, 57, 1000] {
+            let mut sk = sample_sketch(n);
+            // plant a -0.0: it equals 0.0 and must stay skipped
+            sk.table_mut(0)[0] = -0.0;
+            let mut got = Vec::new();
+            encode_sparse(&sk, &mut got);
+            // reference: the pre-backpatch two-pass form
+            let mut want = Vec::new();
+            for v in [sk.n1, sk.n2, sk.m1, sk.m2, sk.d] {
+                codec::put_u32(&mut want, v as u32);
+            }
+            codec::put_u64(&mut want, sk.seed);
+            codec::put_u64(&mut want, sk.updates);
+            codec::put_u8(&mut want, u8::from(sk.has_deletions));
+            for r in 0..sk.d {
+                let table = sk.table(r);
+                let nnz = table.iter().filter(|&&v| v != 0.0).count();
+                codec::put_u32(&mut want, nnz as u32);
+                for (idx, &v) in table.iter().enumerate() {
+                    if v != 0.0 {
+                        codec::put_u32(&mut want, idx as u32);
+                        codec::put_f64(&mut want, v);
+                    }
+                }
+            }
+            assert_eq!(got, want, "n={n}");
         }
     }
 

@@ -84,6 +84,23 @@ thread_local! {
     /// [`with_zeroed_scratch`] catches a caller that leaks a dirty
     /// scratch back.
     static POINT_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+
+    /// Per-thread counting-sort scratch for the batched write path
+    /// ([`ShardedStore::update_batch`] groups items by destination
+    /// shard): warm buffers make the grouping allocation-free, matching
+    /// the allocation-free kernel walk it feeds.
+    static GROUP_SCRATCH: RefCell<GroupScratch> = RefCell::new(GroupScratch::default());
+}
+
+/// Buffers for the stable counting sort in
+/// [`ShardedStore::update_batch`]; see `GROUP_SCRATCH`.
+#[derive(Default)]
+struct GroupScratch {
+    dests: Vec<usize>,
+    counts: Vec<usize>,
+    starts: Vec<usize>,
+    fill: Vec<usize>,
+    grouped: Vec<(usize, usize, f64)>,
 }
 
 /// Hand `f` a zeroed `d`-length slice from the thread-local scratch and
@@ -415,56 +432,66 @@ impl ShardedStore {
             return;
         }
         // counting-sort by destination shard: one flat buffer plus
-        // exact-sized offset tables, no per-shard Vec growth on the
-        // write hot path
-        let mut dests = Vec::with_capacity(items.len());
-        let mut counts = vec![0usize; k];
-        for &(i, j, _) in items {
-            assert!(
-                i < self.cfg.n1 && j < self.cfg.n2,
-                "key ({i}, {j}) outside universe {}x{}",
-                self.cfg.n1,
-                self.cfg.n2
-            );
-            let s = self.shard_of(i, j);
-            dests.push(s);
-            counts[s] += 1;
-        }
-        let mut starts = vec![0usize; k + 1];
-        for s in 0..k {
-            starts[s + 1] = starts[s] + counts[s];
-        }
-        // stable fill: per-shard arrival order is preserved
-        let mut grouped: Vec<(usize, usize, f64)> = vec![(0, 0, 0.0); items.len()];
-        let mut fill = starts[..k].to_vec();
-        for (&s, &item) in dests.iter().zip(items.iter()) {
-            grouped[fill[s]] = item;
-            fill[s] += 1;
-        }
-        for s in 0..k {
-            let group = &grouped[starts[s]..starts[s + 1]];
-            if group.is_empty() {
-                continue;
-            }
-            let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
-            let mut guard = self.shards[s].lock().expect("shard lock");
-            let sh = &mut *guard;
-            let cur = sh.cur;
-            if self.replicate.load(Ordering::Relaxed) {
-                StreamSketch::update_batch_fanout(
-                    &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending, &mut sh.origin],
-                    group,
+        // exact-sized offset tables, reused across batches via the
+        // thread-local scratch — no allocation on the write hot path
+        // after warm-up
+        GROUP_SCRATCH.with(|cell| {
+            let g = &mut *cell.borrow_mut();
+            g.dests.clear();
+            g.dests.reserve(items.len());
+            g.counts.clear();
+            g.counts.resize(k, 0);
+            for &(i, j, _) in items {
+                assert!(
+                    i < self.cfg.n1 && j < self.cfg.n2,
+                    "key ({i}, {j}) outside universe {}x{}",
+                    self.cfg.n1,
+                    self.cfg.n2
                 );
-                self.origin_version.fetch_add(1, Ordering::SeqCst);
-            } else {
-                StreamSketch::update_batch_fanout(
-                    &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
-                    group,
-                );
+                let s = self.shard_of(i, j);
+                g.dests.push(s);
+                g.counts[s] += 1;
             }
-            sh.pending_dirty = true;
-            self.version.fetch_add(1, Ordering::SeqCst);
-        }
+            g.starts.clear();
+            g.starts.resize(k + 1, 0);
+            for s in 0..k {
+                g.starts[s + 1] = g.starts[s] + g.counts[s];
+            }
+            // stable fill: per-shard arrival order is preserved
+            g.grouped.clear();
+            g.grouped.resize(items.len(), (0, 0, 0.0));
+            g.fill.clear();
+            g.fill.extend_from_slice(&g.starts[..k]);
+            for (&s, &item) in g.dests.iter().zip(items.iter()) {
+                let pos = g.fill[s];
+                g.grouped[pos] = item;
+                g.fill[s] = pos + 1;
+            }
+            for s in 0..k {
+                let group = &g.grouped[g.starts[s]..g.starts[s + 1]];
+                if group.is_empty() {
+                    continue;
+                }
+                let _ld = lockdep::acquire(lockdep::SHARD, s as u32);
+                let mut guard = self.shards[s].lock().expect("shard lock");
+                let sh = &mut *guard;
+                let cur = sh.cur;
+                if self.replicate.load(Ordering::Relaxed) {
+                    StreamSketch::update_batch_fanout(
+                        &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending, &mut sh.origin],
+                        group,
+                    );
+                    self.origin_version.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    StreamSketch::update_batch_fanout(
+                        &mut [&mut sh.ring[cur], &mut sh.total, &mut sh.pending],
+                        group,
+                    );
+                }
+                sh.pending_dirty = true;
+                self.version.fetch_add(1, Ordering::SeqCst);
+            }
+        });
     }
 
     /// Every shard lock, acquired in index order — the one order every

@@ -43,12 +43,21 @@
 //! "tensor operations on sketched data" served online.
 
 use crate::hash::{HashSeeds, ModeHash};
+use crate::sketch::kernel;
 use crate::store::codec::{self, Reader};
 use crate::store::mergeable::{MergeableSketch, MAX_DECODE_ELEMS};
 use crate::util::stats::median_inplace;
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+thread_local! {
+    /// Per-thread median scratch for [`HcsStream::query`]: the serve
+    /// path calls it once per key and `d` is tiny and constant, so one
+    /// warm buffer removes a heap allocation per query.
+    static QUERY_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 /// Early-exit slack for the pruned [`HcsStream::slice_top_k`] scan:
 /// stop once the current line's marginal estimate, inflated by this
@@ -231,11 +240,47 @@ impl HcsStream {
 
     /// Fused multi-key update over a flat key buffer (`keys.len() ==
     /// ws.len() · order`, item i's key at `keys[i·order ..]` — the wire
-    /// and WAL layout, applied without re-packing). Each repeat's hash
-    /// pairs and counter table are walked once for the whole batch; per
-    /// table, items land in batch order — bit-identical to calling
-    /// [`HcsStream::update`] per item.
+    /// and WAL layout, applied without re-packing), routed through the
+    /// two-phase kernel ([`crate::sketch::kernel`]). The hash phase
+    /// memoizes per-(repeat, mode) `(h·stride, s)` tables whenever the
+    /// batch is at least as long as a mode's key range, so the per-mode
+    /// `Σ h_k·stride_k` walk amortizes across repeats; the apply phase
+    /// adds the runs in batch order. **Bit-identical** to calling
+    /// [`HcsStream::update`] per item and to
+    /// [`HcsStream::update_batch_scalar`] on every dispatch path.
     pub fn update_batch(&mut self, keys: &[usize], ws: &[f64]) {
+        let order = self.order();
+        debug_assert_eq!(keys.len(), ws.len() * order);
+        let path = kernel::configured();
+        if path == kernel::KernelPath::Scalar || self.tables[0].len() > u32::MAX as usize {
+            self.update_batch_scalar(keys, ws);
+            return;
+        }
+        kernel::with_scratch(|s| {
+            for r in 0..self.d {
+                let hash = kernel::HashNd::new(&self.modes[r], &self.strides, ws.len());
+                let table = &mut self.tables[r];
+                let key_tiles = keys.chunks(kernel::TILE * order);
+                for (kt, wt) in key_tiles.zip(ws.chunks(kernel::TILE)) {
+                    kernel::hash_tile_nd(&hash, order, kt, wt, &mut s.b, &mut s.v);
+                    s.stage(table.len());
+                    let (bs, vs) = s.runs();
+                    kernel::apply_runs(table, bs, vs);
+                }
+            }
+        });
+        self.updates += ws.len() as u64;
+        if ws.iter().any(|&w| w < 0.0) {
+            self.has_deletions = true;
+        }
+    }
+
+    /// The pre-kernel fused walk: each repeat's hash pairs and counter
+    /// table walked once for the whole batch, hardware `%` and branchy
+    /// signs per (item, mode). Kept public as the bit-identity oracle
+    /// for the kernel paths and as the bench baseline
+    /// (`HOCS_KERNEL=scalar` routes [`HcsStream::update_batch`] here).
+    pub fn update_batch_scalar(&mut self, keys: &[usize], ws: &[f64]) {
         let order = self.order();
         debug_assert_eq!(keys.len(), ws.len() * order);
         for r in 0..self.d {
@@ -250,9 +295,53 @@ impl HcsStream {
         }
     }
 
-    /// Batched [`HcsStream::update_fanout`]: the fused table walk of
-    /// [`HcsStream::update_batch`], broadcast to every target.
+    /// Batched [`HcsStream::update_fanout`]: one kernel hash phase per
+    /// repeat and tile, with the staged runs replayed into every
+    /// target's table. Bit-identical to calling
+    /// [`HcsStream::update_batch`] on each target (and to
+    /// [`HcsStream::update_batch_fanout_scalar`]).
     pub fn update_batch_fanout(targets: &mut [&mut HcsStream], keys: &[usize], ws: &[f64]) {
+        let Some(first) = targets.first() else {
+            return;
+        };
+        let path = kernel::configured();
+        if path == kernel::KernelPath::Scalar || first.tables[0].len() > u32::MAX as usize {
+            Self::update_batch_fanout_scalar(targets, keys, ws);
+            return;
+        }
+        debug_assert!(targets.windows(2).all(|p| p[0].same_family(&p[1])));
+        let order = targets[0].order();
+        debug_assert_eq!(keys.len(), ws.len() * order);
+        let d = targets[0].d;
+        kernel::with_scratch(|s| {
+            for r in 0..d {
+                let t0 = &targets[0];
+                let hash = kernel::HashNd::new(&t0.modes[r], &t0.strides, ws.len());
+                let table_len = t0.tables[r].len();
+                let key_tiles = keys.chunks(kernel::TILE * order);
+                for (kt, wt) in key_tiles.zip(ws.chunks(kernel::TILE)) {
+                    kernel::hash_tile_nd(&hash, order, kt, wt, &mut s.b, &mut s.v);
+                    s.stage(table_len);
+                    for t in targets.iter_mut() {
+                        let (bs, vs) = s.runs();
+                        kernel::apply_runs(&mut t.tables[r], bs, vs);
+                    }
+                }
+            }
+        });
+        let n = ws.len() as u64;
+        let deletions = ws.iter().any(|&w| w < 0.0);
+        for t in targets.iter_mut() {
+            t.updates += n;
+            if deletions {
+                t.has_deletions = true;
+            }
+        }
+    }
+
+    /// The pre-kernel scalar fan-out walk — bit-identity oracle and
+    /// bench baseline for [`HcsStream::update_batch_fanout`].
+    pub fn update_batch_fanout_scalar(targets: &mut [&mut HcsStream], keys: &[usize], ws: &[f64]) {
         let Some((first, rest)) = targets.split_first_mut() else {
             return;
         };
@@ -284,9 +373,15 @@ impl HcsStream {
     }
 
     /// Point query: median-of-d estimate of the total weight at `key`.
+    /// Routed through a thread-local scratch buffer so the per-key
+    /// serve path is allocation-free after the first call.
     pub fn query(&self, key: &[usize]) -> f64 {
-        let mut est = vec![0.0; self.d];
-        self.query_scratch(key, &mut est)
+        QUERY_SCRATCH.with(|cell| {
+            let mut est = cell.borrow_mut();
+            est.clear();
+            est.resize(self.d, 0.0);
+            self.query_scratch(key, &mut est)
+        })
     }
 
     /// [`HcsStream::query`] into caller-owned scratch (scan paths call
@@ -755,6 +850,61 @@ mod tests {
                 for (a, b) in single.table(r).iter().zip(got.table(r).iter()) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
+            }
+        }
+    }
+
+    fn table_bits(sk: &HcsStream) -> Vec<u64> {
+        (0..sk.d).flat_map(|r| sk.table(r).iter().map(|v| v.to_bits())).collect()
+    }
+
+    fn random_batch(seed: u64, dims: &[usize], n: usize) -> (Vec<usize>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut keys = Vec::new();
+        let mut ws = Vec::new();
+        for _ in 0..n {
+            keys.extend(random_key(&mut rng, dims));
+            let mag = (1 + rng.gen_range(9)) as f64 * 0.25;
+            ws.push(if rng.uniform() < 0.3 { -mag } else { mag });
+        }
+        (keys, ws)
+    }
+
+    #[test]
+    fn kernel_batch_bit_identical_across_remainders_and_memo_modes() {
+        // n < 4 keeps every mode on the direct (unmemoized) hash path;
+        // n ≥ 16 tabulates all three modes; sizes in between mix them.
+        // n = 5000 crosses the kernel tile boundary.
+        let dims = [16, 12, 10];
+        let mdims = [6, 5, 4];
+        for n in [0usize, 1, 3, 7, 8, 9, 11, 16, 200, 5000] {
+            let (keys, ws) = random_batch(n as u64 + 1, &dims, n);
+            let mut kern = HcsStream::new(&dims, &mdims, 3, 9);
+            kern.update_batch(&keys, &ws);
+            let mut scal = HcsStream::new(&dims, &mdims, 3, 9);
+            scal.update_batch_scalar(&keys, &ws);
+            assert_eq!(table_bits(&kern), table_bits(&scal), "n={n}");
+            assert_eq!(kern.updates, scal.updates);
+            assert_eq!(kern.has_deletions, scal.has_deletions);
+        }
+    }
+
+    #[test]
+    fn kernel_fanout_bit_identical_for_widths_1_to_4() {
+        let dims = [16, 12, 10];
+        let mdims = [6, 5, 4];
+        let (keys, ws) = random_batch(77, &dims, 1000);
+        for width in 1usize..=4 {
+            let mut fans: Vec<HcsStream> =
+                (0..width).map(|_| HcsStream::new(&dims, &mdims, 3, 9)).collect();
+            {
+                let mut targets: Vec<&mut HcsStream> = fans.iter_mut().collect();
+                HcsStream::update_batch_fanout(&mut targets, &keys, &ws);
+            }
+            let mut oracle = HcsStream::new(&dims, &mdims, 3, 9);
+            oracle.update_batch_scalar(&keys, &ws);
+            for f in &fans {
+                assert_eq!(table_bits(f), table_bits(&oracle), "width={width}");
             }
         }
     }

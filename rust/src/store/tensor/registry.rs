@@ -482,7 +482,10 @@ impl TensorRegistry {
     /// A whole batch through the fused multi-key kernel: `ws.len()`
     /// items, item `i`'s key at `keys[i·order .. (i+1)·order]`. Every
     /// key is validated before any lands (all-or-nothing, like the 2-D
-    /// batch path).
+    /// batch path). Both arms route through the two-phase vectorized
+    /// kernel ([`crate::sketch::kernel`]): with `originate` the hash
+    /// phase runs once and the staged runs replay into the live sketch
+    /// and the origin accumulator.
     pub fn update_batch(
         &mut self,
         name: &str,

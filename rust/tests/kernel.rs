@@ -1,0 +1,162 @@
+//! Cross-path kernel bit-identity at the public API layer.
+//!
+//! The dispatch path is fixed per process by `HOCS_KERNEL` (resolved
+//! once); CI's `kernel-smoke` job runs this binary three times — vector
+//! path forced off (`scalar`), portable lanes forced (`portable`), and
+//! auto dispatch (AVX2 where the runner has it) — so every reachable
+//! path is compared against the scalar oracle on the same inputs.
+
+use hocs::rng::Pcg64;
+use hocs::sketch::kernel;
+use hocs::sketch::stream::StreamSketch;
+use hocs::store::tensor::HcsStream;
+
+fn items_2d(seed: u64, n1: usize, n2: usize, n: usize) -> Vec<(usize, usize, f64)> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mag = (1 + rng.gen_range(9)) as f64 * 0.5;
+            let w = if rng.uniform() < 0.25 { -mag } else { mag };
+            (rng.gen_range(n1 as u64) as usize, rng.gen_range(n2 as u64) as usize, w)
+        })
+        .collect()
+}
+
+fn bits_2d(sk: &StreamSketch) -> Vec<u64> {
+    (0..sk.d).flat_map(|r| sk.table(r).iter().map(|v| v.to_bits())).collect()
+}
+
+fn bits_nd(sk: &HcsStream) -> Vec<u64> {
+    (0..sk.d).flat_map(|r| sk.table(r).iter().map(|v| v.to_bits())).collect()
+}
+
+#[test]
+fn dispatch_resolves_and_respects_env() {
+    let path = kernel::configured();
+    match std::env::var("HOCS_KERNEL").as_deref() {
+        Ok("scalar") => assert_eq!(path, kernel::KernelPath::Scalar),
+        Ok("portable") => assert_eq!(path, kernel::KernelPath::Portable),
+        _ => assert_ne!(path, kernel::KernelPath::Scalar, "auto must pick a vector path"),
+    }
+}
+
+#[test]
+fn batch_2d_bit_identical_to_scalar_oracle() {
+    let (n1, n2, m1, m2, d) = (512usize, 512, 64, 64, 5);
+    for n in [0usize, 1, 7, 8, 9, 4095, 4096, 4097, 10_000] {
+        let items = items_2d(n as u64 + 3, n1, n2, n);
+        let mut kern = StreamSketch::new(n1, n2, m1, m2, d, 11);
+        kern.update_batch(&items);
+        let mut scal = StreamSketch::new(n1, n2, m1, m2, d, 11);
+        scal.update_batch_scalar(&items);
+        assert_eq!(bits_2d(&kern), bits_2d(&scal), "n={n}");
+        assert_eq!(kern.updates, scal.updates);
+        assert_eq!(kern.has_deletions, scal.has_deletions);
+    }
+}
+
+#[test]
+fn batch_2d_non_pow2_geometry_bit_identical() {
+    // odd table dims keep the general reducer (and, under auto dispatch
+    // on x86, force the AVX2 tile's pow2-only gate to fall back)
+    let (n1, n2, m1, m2, d) = (300usize, 290, 37, 12, 3);
+    let items = items_2d(5, n1, n2, 3000);
+    let mut kern = StreamSketch::new(n1, n2, m1, m2, d, 21);
+    kern.update_batch(&items);
+    let mut scal = StreamSketch::new(n1, n2, m1, m2, d, 21);
+    scal.update_batch_scalar(&items);
+    assert_eq!(bits_2d(&kern), bits_2d(&scal));
+}
+
+#[test]
+fn fanout_2d_bit_identical_for_widths_1_to_4() {
+    let (n1, n2, m1, m2, d) = (512usize, 512, 64, 64, 5);
+    let items = items_2d(17, n1, n2, 2000);
+    let mut oracle = StreamSketch::new(n1, n2, m1, m2, d, 11);
+    oracle.update_batch_scalar(&items);
+    for width in 1usize..=4 {
+        let mut fans: Vec<StreamSketch> =
+            (0..width).map(|_| StreamSketch::new(n1, n2, m1, m2, d, 11)).collect();
+        {
+            let mut targets: Vec<&mut StreamSketch> = fans.iter_mut().collect();
+            StreamSketch::update_batch_fanout(&mut targets, &items);
+        }
+        for f in &fans {
+            assert_eq!(bits_2d(f), bits_2d(&oracle), "width={width}");
+        }
+    }
+}
+
+#[test]
+fn batch_nd_bit_identical_across_memo_modes() {
+    let dims = [40usize, 24, 10];
+    let mdims = [8usize, 6, 4];
+    // n = 5 keeps every mode direct; 24 and 64 mix memoized and direct;
+    // 9000 memoizes all modes and crosses the kernel tile boundary
+    for n in [0usize, 5, 24, 64, 9000] {
+        let mut rng = Pcg64::new(n as u64 + 9);
+        let mut keys = Vec::with_capacity(n * dims.len());
+        let mut ws = Vec::with_capacity(n);
+        for _ in 0..n {
+            for &dim in &dims {
+                keys.push(rng.gen_range(dim as u64) as usize);
+            }
+            let mag = (1 + rng.gen_range(5)) as f64 * 0.25;
+            ws.push(if rng.uniform() < 0.3 { -mag } else { mag });
+        }
+        let mut kern = HcsStream::new(&dims, &mdims, 3, 13);
+        kern.update_batch(&keys, &ws);
+        let mut scal = HcsStream::new(&dims, &mdims, 3, 13);
+        scal.update_batch_scalar(&keys, &ws);
+        assert_eq!(bits_nd(&kern), bits_nd(&scal), "n={n}");
+        assert_eq!(kern.updates, scal.updates);
+        assert_eq!(kern.has_deletions, scal.has_deletions);
+    }
+}
+
+#[test]
+fn fanout_nd_bit_identical_for_widths_1_to_4() {
+    let dims = [40usize, 24, 10];
+    let mdims = [8usize, 6, 4];
+    let mut rng = Pcg64::new(31);
+    let n = 1500usize;
+    let mut keys = Vec::with_capacity(n * dims.len());
+    let mut ws = Vec::with_capacity(n);
+    for _ in 0..n {
+        for &dim in &dims {
+            keys.push(rng.gen_range(dim as u64) as usize);
+        }
+        ws.push(1.0 + rng.gen_range(4) as f64);
+    }
+    let mut oracle = HcsStream::new(&dims, &mdims, 3, 13);
+    oracle.update_batch_scalar(&keys, &ws);
+    for width in 1usize..=4 {
+        let mut fans: Vec<HcsStream> =
+            (0..width).map(|_| HcsStream::new(&dims, &mdims, 3, 13)).collect();
+        {
+            let mut targets: Vec<&mut HcsStream> = fans.iter_mut().collect();
+            HcsStream::update_batch_fanout(&mut targets, &keys, &ws);
+        }
+        for f in &fans {
+            assert_eq!(bits_nd(f), bits_nd(&oracle), "width={width}");
+        }
+    }
+}
+
+#[test]
+fn queries_match_after_kernel_ingest() {
+    // the scratch-routed query path returns the same medians as a
+    // freshly allocated accumulator would: repeated queries from one
+    // thread must not contaminate each other
+    let (n1, n2, m1, m2, d) = (256usize, 256, 32, 32, 5);
+    let items = items_2d(41, n1, n2, 4000);
+    let mut sk = StreamSketch::new(n1, n2, m1, m2, d, 11);
+    sk.update_batch(&items);
+    let mut rng = Pcg64::new(43);
+    for _ in 0..200 {
+        let (i, j) = (rng.gen_range(n1 as u64) as usize, rng.gen_range(n2 as u64) as usize);
+        let a = sk.query(i, j);
+        let b = sk.query(i, j);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
