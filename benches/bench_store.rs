@@ -12,7 +12,10 @@
 //! per-item commits vs group-commit batches, and the
 //! concurrent-single-update-writer sweep with the leader/follower
 //! cross-connection group commit on vs off (flush-only and fsync) — the
-//! numbers that justify the batched write path and the commit queue.
+//! numbers that justify the batched write path and the commit queue —
+//! and the observability-overhead pair (span + `rpc_observe` per
+//! request, tracing off vs on) that holds the obs plane to its ≤3%
+//! contract.
 //! Writes everything to `BENCH_store.json` so future PRs have a perf
 //! trajectory. Set `HOCS_BENCH_QUICK=1` (CI's `bench-smoke` job) for a
 //! seconds-long sweep with the same schema.
@@ -459,6 +462,63 @@ fn kernel_rows() -> Vec<KernelRow> {
     rows
 }
 
+// ---------- observability: instrumentation overhead ----------
+
+struct ObsRow {
+    mode: String,
+    updates_per_sec: f64,
+    overhead_pct: f64,
+}
+
+/// The obs contract priced: per "request" the server pays one span
+/// guard plus one `rpc_observe` around the real work (here a
+/// server-sized `update_batch` chunk). Tracing off is the shipping
+/// default; tracing on must stay within ~3% of it. Best-of-3 per mode
+/// so a CI scheduler hiccup can't fake an overhead regression.
+fn obs_rows() -> Vec<ObsRow> {
+    let (n1, n2, m1, m2, d) = (1usize << 14, 1 << 14, 64, 64, 5);
+    let batch = 4096usize;
+    let reps = scaled(2_000);
+    let mut rng = Pcg64::new(23);
+    let items: Vec<(usize, usize, f64)> = (0..batch)
+        .map(|_| (rng.gen_range(n1 as u64) as usize, rng.gen_range(n2 as u64) as usize, 1.0))
+        .collect();
+
+    let run = |traced: bool| -> f64 {
+        hocs::obs::trace::set_enabled(traced);
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let mut sk = StreamSketch::new(n1, n2, m1, m2, d, 42);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let r0 = Instant::now();
+                {
+                    let _span = hocs::obs::trace::span("bench.update_batch");
+                    sk.update_batch(&items);
+                }
+                let us = r0.elapsed().as_micros() as u64;
+                hocs::obs::global().rpc_observe(2, us, true);
+            }
+            let per_sec = (reps * batch) as f64 / t0.elapsed().as_secs_f64();
+            std::hint::black_box(sk.query(1, 1));
+            best = best.max(per_sec);
+        }
+        hocs::obs::trace::set_enabled(false);
+        best
+    };
+
+    let off = run(false);
+    let on = run(true);
+    vec![
+        ObsRow { mode: "trace_off".to_string(), updates_per_sec: off, overhead_pct: 0.0 },
+        ObsRow {
+            mode: "trace_on".to_string(),
+            updates_per_sec: on,
+            overhead_pct: (off - on) / off * 100.0,
+        },
+    ]
+}
+
 // ---------- concurrent un-batched writers: group commit on/off ----------
 
 struct ConcRow {
@@ -650,6 +710,27 @@ fn main() {
         );
     }
 
+    let obs = obs_rows();
+    let mut obs_table = Table::new(
+        "observability: span + rpc_observe per batched request",
+        &["mode", "updates/s", "overhead"],
+    );
+    for r in &obs {
+        obs_table.row(vec![
+            r.mode.clone(),
+            format!("{:.0}", r.updates_per_sec),
+            format!("{:.2}%", r.overhead_pct),
+        ]);
+    }
+    println!();
+    obs_table.print();
+    if let Some(r) = obs.iter().find(|r| r.mode == "trace_on") {
+        println!(
+            "\ntracing-on instrumentation overhead: {:.2}% (target <= 3%)",
+            r.overhead_pct
+        );
+    }
+
     let json = Json::obj(vec![
         (
             "store",
@@ -698,6 +779,20 @@ fn main() {
                             ("scalar_per_sec", Json::Num(r.scalar_per_sec)),
                             ("kernel_per_sec", Json::Num(r.kernel_per_sec)),
                             ("speedup", Json::Num(r.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "obs",
+            Json::Arr(
+                obs.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("mode", Json::Str(r.mode.clone())),
+                            ("updates_per_sec", Json::Num(r.updates_per_sec)),
+                            ("overhead_pct", Json::Num(r.overhead_pct)),
                         ])
                     })
                     .collect(),

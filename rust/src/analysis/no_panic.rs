@@ -57,6 +57,11 @@ pub const SCOPES: &[(&str, &[&str])] = &[
     // path (env probe + CPU feature detection) must never panic, or a
     // misspelt HOCS_KERNEL could take down the serve loop
     ("sketch/kernel.rs", &["configured", "best_vector_path"]),
+    // observability runs inside every instrumented hot path: a panic
+    // while counting or rendering would turn telemetry into an outage
+    ("obs/registry.rs", &["rpc_observe", "render_into"]),
+    ("obs/trace.rs", &["span"]),
+    ("obs/mod.rs", &["render_text"]),
 ];
 
 const TOKENS: &[&str] =

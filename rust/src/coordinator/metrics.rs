@@ -1,11 +1,10 @@
 //! Live service metrics: lock-free counters shared between the client
-//! handle and the worker threads.
+//! handle and the worker threads. The latency histogram is the shared
+//! [`crate::obs::Histo`] (one log2 histogram implementation across the
+//! whole crate — the coordinator was the prototype, `obs` is the home).
 
+use crate::obs::Histo;
 use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Number of power-of-two latency buckets (bucket `i` covers
-/// `[2^(i-1), 2^i)` µs; bucket 0 is `< 1µs`). 32 buckets reach ~35 min.
-const LAT_BUCKETS: usize = 32;
 
 /// Coordinator counters. All `Relaxed`: these are statistics, not
 /// synchronization.
@@ -17,19 +16,13 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
     pub errors: AtomicU64,
-    /// end-to-end latency accumulators (µs)
-    pub latency_sum_us: AtomicU64,
-    pub latency_max_us: AtomicU64,
-    /// log2-bucketed latency histogram (µs) for percentile estimates
-    latency_hist: [AtomicU64; LAT_BUCKETS],
+    /// end-to-end latency (µs): sum/max/log2 buckets in one histogram
+    pub latency: Histo,
 }
 
 impl Metrics {
     pub fn record_latency(&self, us: u64) {
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        self.latency_max_us.fetch_max(us, Ordering::Relaxed);
-        let idx = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
-        self.latency_hist[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(us);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -37,28 +30,14 @@ impl Metrics {
         if n == 0 {
             return 0.0;
         }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.sum() as f64 / n as f64
     }
 
     /// Approximate latency percentile (upper edge of the log2 bucket
     /// containing the p-quantile — accurate to within 2×). `p` in
     /// `[0, 1]`, e.g. 0.5 for p50, 0.99 for p99.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
-        let mut acc = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return if i == 0 { 1 } else { 1u64 << i };
-            }
-        }
-        1u64 << (LAT_BUCKETS - 1)
+        self.latency.percentile(p)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -82,7 +61,7 @@ impl Metrics {
             self.mean_latency_us(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.99),
-            self.latency_max_us.load(Ordering::Relaxed),
+            self.latency.max(),
         )
     }
 }
@@ -99,7 +78,7 @@ mod tests {
         m.record_latency(100);
         m.record_latency(300);
         assert_eq!(m.mean_latency_us(), 200.0);
-        assert_eq!(m.latency_max_us.load(Ordering::Relaxed), 300);
+        assert_eq!(m.latency.max(), 300);
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub mod experiments;
 pub mod fft;
 pub mod hash;
 pub mod linalg;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;

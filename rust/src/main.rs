@@ -6,6 +6,7 @@
 //! hocs serve-demo [--backend xla]         # coordinator demo workload
 //! hocs serve --addr HOST:PORT ...         # sharded sketch store server
 //! hocs store-client <update|query|...>    # talk to a running store
+//! hocs top --addr HOST:PORT               # live observability view (METRICS)
 //! hocs bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|all>
 //! ```
 
@@ -19,7 +20,7 @@ use hocs::store::{
 };
 use hocs::util::cli::Args;
 
-const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault-crash|bench|lint> [options]\n\
+const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|top|fault-crash|bench|lint> [options]\n\
 \n\
   info                              artifact summary\n\
   train --model NAME [--steps N] [--lr F] [--eval-every N] [--seed N]\n\
@@ -30,10 +31,11 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault
         [--peer ADDR[,ADDR…]] [--sync-interval-ms N] [--full-ship-every N]\n\
         [--replica-timeout-ms N]   (peers make this node a replica-cluster member)\n\
         [--read-timeout-ms N] [--max-connections N]   (overload guards; 0 = off)\n\
+        (env: HOCS_TRACE=1 arms the span ring, HOCS_SLOW_US=N the slow-request log)\n\
   fault-crash --dir DIR [--ops N] [--start K] [--snapshot-at K] [--fsync]\n\
         [--seed S] [--peer ADDR] [--op-delay-us N]\n\
         (crash-harness child: scripted workload under HOCS_FAULTS failpoints)\n\
-  store-client <update|update-batch|query|topk|heavy|stats|snapshot|advance-epoch|shutdown>\n\
+  store-client <update|update-batch|query|topk|heavy|stats|metrics|snapshot|advance-epoch|shutdown>\n\
         [--addr HOST:PORT] [--i I --j J --w W] [--k K] [--threshold T]\n\
         [--items \"i,j,w;i,j,w;…\"]   (update-batch: one group-commit frame)\n\
         [--timeout-ms N]   (connect + per-RPC timeout; 0 = wait forever)\n\
@@ -42,6 +44,10 @@ const USAGE: &str = "usage: hocs <info|train|serve-demo|serve|store-client|fault
         [--key \"i1,i2,…\" --w W] [--spec \"i,*,j\"]   (marginal: * sums a mode out)\n\
         [--mode M --index I --k K]   (slice-topk: dense scan of one slice)\n\
         [--other T2 --modes \"0,1,…\" [--dense]]   (contract: sketched contraction)\n\
+  top [--addr HOST:PORT] [--interval-ms N] [--iterations N] [--once]\n\
+        (live observability view scraped from METRICS: per-RPC qps/p50/p99,\n\
+        WAL group sizes + fsync latency, scan cache, replication lag,\n\
+        kernel dispatch, contraction accuracy)\n\
   bench <fig8|fig9|fig10|fig12|table1|table3|table45|table6|variance|service|ablation|all>\n\
         [--quick] [--seed N]\n\
   lint [--root DIR] [--deny] [--print-manifest]\n\
@@ -63,6 +69,7 @@ fn main() {
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("serve") => cmd_serve(&args),
         Some("store-client") => cmd_store_client(&args),
+        Some("top") => cmd_top(&args),
         Some("fault-crash") => cmd_fault_crash(&args),
         Some("bench") => cmd_bench(&args),
         Some("lint") => cmd_lint(&args),
@@ -232,6 +239,19 @@ fn cmd_serve(args: &Args) -> i32 {
         max_connections: args.get_u64("max-connections", 1024),
     };
     let n_peers = cfg.peers.len();
+    // observability env toggles (flags would also work, but env keeps
+    // them uniform with HOCS_KERNEL / HOCS_FAULTS)
+    let trace_on = std::env::var("HOCS_TRACE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    if trace_on {
+        hocs::obs::trace::set_enabled(true);
+    }
+    if let Ok(v) = std::env::var("HOCS_SLOW_US") {
+        if let Ok(us) = v.trim().parse::<u64>() {
+            hocs::obs::trace::set_slow_threshold_us(us);
+        }
+    }
     match StoreServer::start(cfg) {
         Ok(server) => {
             let st = server.store().stats();
@@ -305,27 +325,37 @@ fn cmd_store_client(args: &Args) -> i32 {
         "heavy" => {
             client.heavy_hitters(args.get_f64("threshold", 100.0)).map(|e| print_entries(&e))
         }
-        "stats" => client.stats_full().map(|(s, repl)| {
-            println!(
-                "shards={} window={} epoch={} updates={}",
-                s.shards, s.window, s.epoch, s.updates
-            );
-            if let Some(r) = repl {
+        "stats" => match client.stats_full() {
+            Ok((s, repl)) => {
                 println!(
-                    "replication: peers={} last_sync_age_ms={} cursor_version={} \
-                     ships={} full_ships={} bytes_shipped={} merges_applied={} \
-                     merges_deduped={}",
-                    r.peers,
-                    r.last_sync_age_ms.map_or_else(|| "never".to_string(), |a| a.to_string()),
-                    r.cursor_version,
-                    r.ships,
-                    r.full_ships,
-                    r.bytes_shipped,
-                    r.merges_applied,
-                    r.merges_deduped
+                    "shards={} window={} epoch={} updates={}",
+                    s.shards, s.window, s.epoch, s.updates
                 );
+                if let Some(r) = repl {
+                    println!(
+                        "replication: peers={} last_sync_age_ms={} cursor_version={} \
+                         ships={} full_ships={} bytes_shipped={} merges_applied={} \
+                         merges_deduped={}",
+                        r.peers,
+                        r.last_sync_age_ms.map_or_else(|| "never".to_string(), |a| a.to_string()),
+                        r.cursor_version,
+                        r.ships,
+                        r.full_ships,
+                        r.bytes_shipped,
+                        r.merges_applied,
+                        r.merges_deduped
+                    );
+                }
+                // per-opcode request latency, best-effort (older servers
+                // without the METRICS opcode just skip this block)
+                if let Ok(text) = client.metrics() {
+                    print_rpc_latency(&hocs::obs::expo::parse(&text));
+                }
+                Ok(())
             }
-        }),
+            Err(e) => Err(e),
+        },
+        "metrics" => client.metrics().map(|text| print!("{text}")),
         "snapshot" => client.snapshot().map(|()| println!("snapshot written")),
         "advance-epoch" => client.advance_epoch().map(|()| println!("epoch advanced")),
         "tcreate" => {
@@ -483,6 +513,194 @@ fn cmd_store_client(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// One parsed exposition sample set; see [`hocs::obs::expo`].
+type Samples = [hocs::obs::expo::Sample];
+
+fn label_matches(s: &hocs::obs::expo::Sample, label: Option<(&str, &str)>) -> bool {
+    match label {
+        Some((k, v)) => s.label(k) == Some(v),
+        None => true,
+    }
+}
+
+/// First sample matching `name` (and, when given, a `key="val"` label).
+fn metric(samples: &Samples, name: &str, label: Option<(&str, &str)>) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| s.name == name && label_matches(s, label))
+        .map(|s| s.value)
+}
+
+/// Cumulative `(le, count)` pairs of histogram `name` (the `_bucket`
+/// suffix is appended here), filtered by an optional label.
+fn hist_buckets(samples: &Samples, name: &str, label: Option<(&str, &str)>) -> Vec<(f64, f64)> {
+    let bucket_name = format!("{name}_bucket");
+    samples
+        .iter()
+        .filter(|s| s.name == bucket_name && label_matches(s, label))
+        .map(|s| {
+            let le = s.label("le").unwrap_or("0");
+            let edge = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap_or(0.0) };
+            (edge, s.value)
+        })
+        .collect()
+}
+
+/// Per-opcode request/latency lines shared by `store-client stats` and
+/// `hocs top`: one line per opcode that has served traffic.
+fn print_rpc_latency(samples: &Samples) {
+    use hocs::obs::expo::percentile_from_buckets;
+    for s in samples.iter().filter(|s| s.name == "hocs_rpc_requests_total" && s.value > 0.0) {
+        let Some(op) = s.label("op") else { continue };
+        let errors = metric(samples, "hocs_rpc_errors_total", Some(("op", op))).unwrap_or(0.0);
+        let buckets = hist_buckets(samples, "hocs_rpc_latency_us", Some(("op", op)));
+        if buckets.is_empty() {
+            println!("rpc {op}: requests={} errors={errors}", s.value);
+        } else {
+            println!(
+                "rpc {op}: requests={} errors={errors} p50={}us p99={}us",
+                s.value,
+                percentile_from_buckets(&buckets, 0.5),
+                percentile_from_buckets(&buckets, 0.99)
+            );
+        }
+    }
+}
+
+/// `hocs top` — poll the METRICS opcode and render a live view of the
+/// whole observability plane; rates (qps) are first-differences between
+/// consecutive scrapes.
+fn cmd_top(args: &Args) -> i32 {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let once = args.flag("once");
+    let interval_ms = args.get_u64("interval-ms", 1000).max(50);
+    let iterations = args.get_usize("iterations", 0);
+    let opts = ClientOptions::timeout_ms(args.get_u64("timeout-ms", 10_000));
+    let mut client = match StoreClient::connect_with(&addr, opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut prev: Option<(std::time::Instant, Vec<hocs::obs::expo::Sample>)> = None;
+    let mut rounds = 0usize;
+    loop {
+        let text = match client.metrics() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let now = std::time::Instant::now();
+        let samples = hocs::obs::expo::parse(&text);
+        let rates = prev
+            .as_ref()
+            .map(|(t0, old)| (now.duration_since(*t0).as_secs_f64(), old.as_slice()));
+        render_top(&addr, &samples, rates);
+        rounds += 1;
+        if once || (iterations > 0 && rounds >= iterations) {
+            return 0;
+        }
+        prev = Some((now, samples));
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
+}
+
+fn render_top(
+    addr: &str,
+    samples: &Samples,
+    rates: Option<(f64, &Samples)>,
+) {
+    println!("--- hocs top @ {addr} ---");
+    // per-RPC: qps needs two scrapes; the first round shows totals only
+    for s in samples.iter().filter(|s| s.name == "hocs_rpc_requests_total" && s.value > 0.0) {
+        let Some(op) = s.label("op") else { continue };
+        let qps = rates
+            .and_then(|(dt, old)| {
+                let before = metric(old, "hocs_rpc_requests_total", Some(("op", op)))?;
+                (dt > 0.0).then(|| (s.value - before).max(0.0) / dt)
+            })
+            .unwrap_or(0.0);
+        let buckets = hist_buckets(samples, "hocs_rpc_latency_us", Some(("op", op)));
+        println!(
+            "rpc {op:<14} req={:<8} qps={qps:<8.1} p50={}us p99={}us",
+            s.value,
+            hocs::obs::expo::percentile_from_buckets(&buckets, 0.5),
+            hocs::obs::expo::percentile_from_buckets(&buckets, 0.99)
+        );
+    }
+    let g = |name: &str| metric(samples, name, None).unwrap_or(0.0);
+    let fsync = hist_buckets(samples, "hocs_wal_fsync_us", None);
+    let groups = hist_buckets(samples, "hocs_wal_group_frames", None);
+    println!(
+        "wal   appends={} bytes={} rotations={} fail_stops={} fsync_p99={}us \
+         group_mean={:.1} group_max={}",
+        g("hocs_wal_appends_total"),
+        g("hocs_wal_bytes_total"),
+        g("hocs_wal_rotations_total"),
+        g("hocs_wal_fail_stops_total"),
+        hocs::obs::expo::percentile_from_buckets(&fsync, 0.99),
+        if g("hocs_wal_group_frames_count") > 0.0 {
+            g("hocs_wal_group_frames_sum") / g("hocs_wal_group_frames_count")
+        } else {
+            0.0
+        },
+        hocs::obs::expo::percentile_from_buckets(&groups, 1.0),
+    );
+    println!(
+        "scan  hits={} folds={} rebuilds={} hit_ratio={:.2}",
+        g("hocs_scan_cache_hits_total"),
+        g("hocs_scan_cache_folds_total"),
+        g("hocs_scan_cache_rebuilds_total"),
+        g("hocs_scan_cache_hit_ratio"),
+    );
+    println!(
+        "kern  scalar={} portable={} avx2={}",
+        metric(samples, "hocs_kernel_dispatch_total", Some(("path", "scalar"))).unwrap_or(0.0),
+        metric(samples, "hocs_kernel_dispatch_total", Some(("path", "portable"))).unwrap_or(0.0),
+        metric(samples, "hocs_kernel_dispatch_total", Some(("path", "avx2"))).unwrap_or(0.0),
+    );
+    println!(
+        "repl  ticks={} settled={}",
+        g("hocs_repl_ticks_total"),
+        g("hocs_repl_settled_ticks_total")
+    );
+    for s in samples.iter().filter(|s| s.name == "hocs_repl_peer_synced") {
+        let Some(peer) = s.label("peer") else { continue };
+        let lag = metric(samples, "hocs_repl_peer_lag_ms", Some(("peer", peer)));
+        println!(
+            "peer  {peer}: synced={} lag_ms={} bytes={} ships={} full={}",
+            s.value,
+            lag.map_or_else(|| "-".to_string(), |l| format!("{l}")),
+            metric(samples, "hocs_repl_peer_bytes_total", Some(("peer", peer))).unwrap_or(0.0),
+            metric(samples, "hocs_repl_peer_ships_total", Some(("peer", peer))).unwrap_or(0.0),
+            metric(samples, "hocs_repl_peer_full_ships_total", Some(("peer", peer)))
+                .unwrap_or(0.0),
+        );
+    }
+    if g("hocs_contracts_total") > 0.0 {
+        println!("tensor contracts={}", g("hocs_contracts_total"));
+        for s in samples.iter().filter(|s| s.name == "hocs_contract_ratio") {
+            let Some(pair) = s.label("pair") else { continue };
+            println!(
+                "  {pair}: residual={:.4} bound={:.4} ratio={:.4}",
+                metric(samples, "hocs_contract_residual", Some(("pair", pair))).unwrap_or(0.0),
+                metric(samples, "hocs_contract_bound", Some(("pair", pair))).unwrap_or(0.0),
+                s.value,
+            );
+        }
+    }
+    println!(
+        "trace enabled={} spans={} dropped={} fault_injections={}",
+        g("hocs_trace_enabled"),
+        g("hocs_trace_spans_total"),
+        g("hocs_trace_dropped_total"),
+        g("hocs_fault_injections_total"),
+    );
 }
 
 /// Crash-harness child mode: run a deterministic scripted workload against a

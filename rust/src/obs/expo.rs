@@ -1,0 +1,256 @@
+//! Prometheus-style text exposition: render helpers used by
+//! [`super::registry::Registry::render_into`] and a tolerant parser
+//! used by `hocs top`, `store-client stats`, and the round-trip tests.
+//!
+//! Format subset: `name{label="value",...} number` lines plus `#`
+//! comments. Histograms follow the Prometheus convention — cumulative
+//! `_bucket{le="..."}` series ending in `le="+Inf"`, plus `_sum`,
+//! `_count`, and a non-standard `_max` gauge (the registry tracks
+//! exact maxima for free). Trailing empty buckets are trimmed; the
+//! `le` edges are the log2 bucket upper bounds `2^i`.
+
+use super::registry::Histo;
+
+/// One parsed exposition line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Label value by key, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn escape_label(out: &mut String, v: &str) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+}
+
+fn render_name(out: &mut String, name: &str, labels: &[(&str, &str)]) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            escape_label(out, v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+}
+
+/// Append one `name{labels} value` line.
+pub fn render_sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    render_name(out, name, labels);
+    out.push(' ');
+    if value.fract() == 0.0 && value.abs() < 1e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+/// Append a full histogram family: cumulative `_bucket` lines (log2
+/// upper edges, trailing empties trimmed), `+Inf`, `_sum`, `_count`,
+/// `_max`.
+pub fn render_histogram(out: &mut String, name: &str, labels: &[(&str, &str)], h: &Histo) {
+    let counts = h.bucket_counts();
+    let last_nonzero = counts.iter().rposition(|&c| c > 0);
+    let mut cum = 0u64;
+    if let Some(last) = last_nonzero {
+        for (i, &c) in counts.iter().enumerate().take(last + 1) {
+            cum += c;
+            let mut lbls: Vec<(&str, &str)> = labels.to_vec();
+            let le = format!("{}", 1u64 << i.min(63));
+            lbls.push(("le", le.as_str()));
+            render_sample(out, &format!("{name}_bucket"), &lbls, cum as f64);
+        }
+    }
+    let mut lbls: Vec<(&str, &str)> = labels.to_vec();
+    lbls.push(("le", "+Inf"));
+    render_sample(out, &format!("{name}_bucket"), &lbls, h.count() as f64);
+    render_sample(out, &format!("{name}_sum"), labels, h.sum() as f64);
+    render_sample(out, &format!("{name}_count"), labels, h.count() as f64);
+    render_sample(out, &format!("{name}_max"), labels, h.max() as f64);
+}
+
+/// Parse exposition text back into samples. Tolerant: `#` comments,
+/// blank lines, and malformed lines are skipped, never an error —
+/// `hocs top` must keep rendering even if a scrape is torn mid-line.
+pub fn parse(text: &str) -> Vec<Sample> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(s) = parse_line(line) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+fn parse_line(line: &str) -> Option<Sample> {
+    let (head, value_str) = match line.find('}') {
+        Some(close) => {
+            let (h, rest) = line.split_at(close + 1);
+            (h, rest.trim())
+        }
+        None => {
+            let mut it = line.split_whitespace();
+            let h = it.next()?;
+            (h, it.next()?)
+        }
+    };
+    let value: f64 = value_str.split_whitespace().next()?.parse().ok()?;
+    let (name, labels) = match head.find('{') {
+        Some(open) => {
+            let name = head.get(..open)?;
+            let body = head.get(open + 1..head.len().saturating_sub(1))?;
+            (name, parse_labels(body)?)
+        }
+        None => (head, Vec::new()),
+    };
+    if name.is_empty() {
+        return None;
+    }
+    Some(Sample { name: name.to_string(), labels, value })
+}
+
+fn parse_labels(body: &str) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest.find('=')?;
+        let key = rest.get(..eq)?.trim().to_string();
+        rest = rest.get(eq + 1..)?.trim_start();
+        rest = rest.strip_prefix('"')?;
+        // scan to the closing quote, honoring backslash escapes
+        let mut val = String::new();
+        let mut chars = rest.char_indices();
+        let mut end = None;
+        loop {
+            let Some((i, c)) = chars.next() else { break };
+            match c {
+                '\\' => {
+                    if let Some((_, e)) = chars.next() {
+                        match e {
+                            'n' => val.push('\n'),
+                            other => val.push(other),
+                        }
+                    }
+                }
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                other => val.push(other),
+            }
+        }
+        let end = end?;
+        out.push((key, val));
+        rest = rest.get(end + 1..)?.trim_start();
+        rest = rest.strip_prefix(',').unwrap_or(rest).trim_start();
+    }
+    Some(out)
+}
+
+/// Percentile from parsed cumulative histogram buckets
+/// (`(le, cumulative_count)`, any order; `+Inf` may be `f64::INFINITY`).
+/// Returns the smallest finite `le` covering the p-quantile, falling
+/// back to the largest finite edge.
+pub fn percentile_from_buckets(buckets: &[(f64, f64)], p: f64) -> f64 {
+    let mut sorted: Vec<(f64, f64)> = buckets.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let total = sorted.iter().map(|&(_, c)| c).fold(0.0f64, f64::max);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = (total * p.clamp(0.0, 1.0)).ceil().max(1.0);
+    let mut best_finite = 0.0;
+    for &(le, cum) in &sorted {
+        if le.is_finite() {
+            best_finite = le;
+        }
+        if cum >= target && le.is_finite() {
+            return le;
+        }
+    }
+    best_finite
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_round_trip() {
+        let mut text = String::new();
+        render_sample(&mut text, "hocs_rpc_requests_total", &[("op", "UPDATE")], 42.0);
+        render_sample(&mut text, "hocs_scan_cache_hit_ratio", &[], 0.75);
+        let samples = parse(&text);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].name, "hocs_rpc_requests_total");
+        assert_eq!(samples[0].label("op"), Some("UPDATE"));
+        assert_eq!(samples[0].value, 42.0);
+        assert_eq!(samples[1].value, 0.75);
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let mut text = String::new();
+        render_sample(&mut text, "m", &[("k", "a\"b\\c")], 1.0);
+        let samples = parse(&text);
+        assert_eq!(samples[0].label("k"), Some("a\"b\\c"));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_and_parses() {
+        let h = Histo::new();
+        for v in [1u64, 3, 3, 100] {
+            h.record(v);
+        }
+        let mut text = String::new();
+        render_histogram(&mut text, "lat_us", &[("op", "Q")], &h);
+        let samples = parse(&text);
+        let inf = samples
+            .iter()
+            .find(|s| s.name == "lat_us_bucket" && s.label("le") == Some("+Inf"))
+            .expect("+Inf bucket");
+        assert_eq!(inf.value, 4.0);
+        let sum = samples.iter().find(|s| s.name == "lat_us_sum").expect("sum");
+        assert_eq!(sum.value, 107.0);
+        // cumulative counts never decrease
+        let mut last = 0.0;
+        for s in samples.iter().filter(|s| s.name == "lat_us_bucket") {
+            assert!(s.value >= last);
+            last = s.value;
+        }
+    }
+
+    #[test]
+    fn percentile_from_parsed_buckets() {
+        let buckets =
+            vec![(2.0, 10.0), (4.0, 90.0), (8.0, 99.0), (16.0, 100.0), (f64::INFINITY, 100.0)];
+        assert_eq!(percentile_from_buckets(&buckets, 0.5), 4.0);
+        assert_eq!(percentile_from_buckets(&buckets, 0.99), 8.0);
+        assert_eq!(percentile_from_buckets(&buckets, 1.0), 16.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Unified observability plane: metrics registry, tracing spans, and
+//! the exposition surface behind the `METRICS` opcode / `hocs top`.
+//!
+//! Three layers, in dependency order:
+//!
+//! - [`registry`] — the process-global lock-free metric store:
+//!   [`registry::Counter`], [`registry::Gauge`], and the log2
+//!   [`registry::Histo`] (the PR-1 coordinator latency histogram,
+//!   generalized; `coordinator/metrics.rs` now embeds one). All hot
+//!   recording paths are statically-registered slots — counters cost
+//!   one relaxed `fetch_add`; histograms three adds and a
+//!   `fetch_max`. Dynamic families (per-peer replication, per-pair
+//!   contraction accuracy) take a mutex only at registration and
+//!   render time, never per sample.
+//! - [`trace`] — per-thread ring-buffer span log. `span!("name")`
+//!   opens an RAII guard stamping monotonic durations into the
+//!   calling thread's 1024-record ring (oldest overwritten on
+//!   overflow, drops counted). Disabled by default: a disabled span
+//!   is one relaxed load at open and nothing at drop. A
+//!   threshold-gated slow-request log rides alongside.
+//! - [`expo`] — Prometheus-style text rendering and a tolerant
+//!   parser, shared by the server (render) and `hocs top` /
+//!   `store-client stats` (parse).
+//!
+//! ## Overhead contract
+//!
+//! Instrumentation must be invisible at serving granularity: per-RPC
+//! cost is one `Instant` read pair + one histogram record; WAL and
+//! scan-cache sites add one counter each; kernel dispatch counts per
+//! tile/batch, not per element. With the tracing ring **disabled**
+//! (default) added cost is ~0; with it **enabled**, `bench_store`'s
+//! `obs` section measures the full update path and CI holds the
+//! regression at ≤ 3%.
+//!
+//! ## Metric catalog
+//!
+//! | family | type | labels | meaning |
+//! |---|---|---|---|
+//! | `hocs_rpc_requests_total` | counter | `op` | requests served, per opcode |
+//! | `hocs_rpc_errors_total` | counter | `op` | `STATUS_ERR` responses, per opcode |
+//! | `hocs_rpc_latency_us` | histogram | `op` | end-to-end request latency |
+//! | `hocs_wal_appends_total` | counter | | durable WAL writes (group = 1) |
+//! | `hocs_wal_bytes_total` | counter | | framed bytes appended |
+//! | `hocs_wal_fsync_us` | histogram | | `sync_data` latency per append |
+//! | `hocs_wal_group_frames` | histogram | | frames coalesced per leader write |
+//! | `hocs_wal_rotations_total` | counter | | snapshot + WAL rotations |
+//! | `hocs_wal_fail_stops_total` | counter | | WAL fail-stop transitions |
+//! | `hocs_scan_cache_hits_total` | counter | | scans served from a current stamp |
+//! | `hocs_scan_cache_folds_total` | counter | | incremental delta folds |
+//! | `hocs_scan_cache_rebuilds_total` | counter | | full K-way re-merges |
+//! | `hocs_scan_cache_hit_ratio` | gauge | | hits / (hits+folds+rebuilds) |
+//! | `hocs_kernel_dispatch_total` | counter | `path` | scalar / portable / avx2 dispatches |
+//! | `hocs_fault_injections_total` | counter | | armed fault-plane firings |
+//! | `hocs_repl_ticks_total` | counter | | replicator loop ticks |
+//! | `hocs_repl_settled_ticks_total` | counter | | ticks with all peers settled |
+//! | `hocs_repl_peer_synced` | gauge | `peer` | 1 once the channel ever settled |
+//! | `hocs_repl_peer_lag_ms` | gauge | `peer` | now − last settled tick |
+//! | `hocs_repl_peer_bytes_total` | counter | `peer` | replication bytes shipped |
+//! | `hocs_repl_peer_ships_total` | counter | `peer` | delta frames shipped |
+//! | `hocs_repl_peer_full_ships_total` | counter | `peer` | full-state frames shipped |
+//! | `hocs_contracts_total` | counter | | CONTRACT RPCs measured |
+//! | `hocs_contract_residual` | gauge | `pair` | observed per-repeat estimator spread |
+//! | `hocs_contract_bound` | gauge | `pair` | theoretical `8·‖A‖‖B‖/√Πm` |
+//! | `hocs_contract_ratio` | gauge | `pair` | residual / bound (healthy ≪ 1) |
+//! | `hocs_trace_enabled` | gauge | | tracing ring armed? |
+//! | `hocs_trace_spans_total` | counter | | spans recorded |
+//! | `hocs_trace_dropped_total` | counter | | ring overwrites |
+//!
+//! Metric names are a compatibility surface: the exposition golden
+//! test in `rust/tests/obs.rs` and the CI `obs-smoke` schema check
+//! both pin them.
+
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{global, now_ms, Counter, Gauge, Histo, Registry};
+
+/// Render the full exposition payload served by the `METRICS` opcode:
+/// the global registry, tracing-layer gauges, and any retained
+/// slow-request lines (as `# slow:` comments, so parsers skip them).
+/// Panic-free: this runs on a served route.
+pub fn render_text() -> String {
+    let mut out = String::with_capacity(4096);
+    global().render_into(&mut out);
+    expo::render_sample(
+        &mut out,
+        "hocs_trace_enabled",
+        &[],
+        if trace::enabled() { 1.0 } else { 0.0 },
+    );
+    expo::render_sample(&mut out, "hocs_trace_spans_total", &[], trace::spans_total() as f64);
+    expo::render_sample(&mut out, "hocs_trace_dropped_total", &[], trace::dropped_total() as f64);
+    for line in trace::drain_slow() {
+        let clean: String = line.chars().map(|c| if c == '\n' { ' ' } else { c }).collect();
+        out.push_str("# slow: ");
+        out.push_str(&clean);
+        out.push('\n');
+    }
+    out
+}

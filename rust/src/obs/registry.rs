@@ -1,0 +1,624 @@
+//! The lock-free metrics registry: counters, gauges, log2 histograms,
+//! and the process-global [`Registry`] every subsystem records into.
+//!
+//! Hot-path contract: recording is one (histograms: three) `Relaxed`
+//! atomic adds on statically-registered slots — no locks, no
+//! allocation, no branches beyond the bucket index. Dynamic families
+//! (per-peer replication channels, per-pair contraction accuracy) hand
+//! out `Arc` slots from a mutex-guarded table that is locked only at
+//! registration and exposition time, never per sample.
+//!
+//! Exposition ([`Registry::render_into`]) is read-only, panic-free
+//! (it runs on a served route — the `no-panic-paths` lint scopes it),
+//! and tolerant of torn reads: counters are statistics, not
+//! synchronization, so a sample raced mid-render is off by one, not
+//! wrong.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Number of power-of-two histogram buckets (bucket `i` covers
+/// `[2^(i-1), 2^i)`; bucket 0 is `< 1`). 32 buckets reach ~35 min in
+/// µs units, ~4 × 10⁹ in dimensionless units (group sizes).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Highest opcode the per-RPC table holds slots for (inclusive). Kept
+/// a power-of-two headroom above the live opcode range so adding an
+/// opcode never needs a registry change.
+pub const MAX_OPCODE: usize = 31;
+
+/// Cap on dynamic label slots (peers, contraction pairs) so a hostile
+/// or runaway workload cannot grow the registry without bound;
+/// registrations past the cap all share one overflow slot.
+pub const MAX_DYNAMIC_SLOTS: usize = 64;
+
+/// A monotonically-increasing event count. `Relaxed` everywhere:
+/// these are statistics, not synchronization.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-written-wins `f64` gauge (stored as IEEE bits in an
+/// `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log2-bucketed histogram with sum/count/max — the PR-1 coordinator
+/// latency histogram generalized and shared (the coordinator's
+/// `Metrics` now embeds one of these). Recording is three relaxed
+/// adds plus a `fetch_max`; percentile reads return the upper edge of
+/// the bucket holding the p-quantile (accurate to within 2×).
+#[derive(Debug)]
+pub struct Histo {
+    sum: AtomicU64,
+    count: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Self {
+        Self {
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one sample (µs for latencies; dimensionless for sizes).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        let idx = (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum() as f64 / n as f64
+    }
+
+    /// Snapshot of the raw (non-cumulative) bucket counts.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Approximate percentile: the upper edge of the log2 bucket
+    /// containing the p-quantile. `p` in `[0, 1]`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 { 1 } else { 1u64 << i };
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+}
+
+/// Per-opcode request-serving stats (the STATS-asymmetry fix: the
+/// store server now measures every RPC, not just the coordinator
+/// pool).
+#[derive(Debug, Default)]
+pub struct OpStats {
+    pub requests: Counter,
+    pub errors: Counter,
+    /// end-to-end request latency (decode → response serialized), µs
+    pub latency_us: Histo,
+}
+
+/// One replication channel's exported state. Handed out as an `Arc`
+/// by [`Registry::register_peer`] so the replicator writes lock-free.
+#[derive(Debug)]
+pub struct PeerObs {
+    pub addr: String,
+    /// monotonic ms ([`now_ms`]) of the last tick on which this
+    /// channel was fully settled; `u64::MAX` = never. The exported
+    /// lag gauge is `now_ms() − last_settled_ms`.
+    last_settled_ms: AtomicU64,
+    pub bytes_shipped: Counter,
+    pub ships: Counter,
+    pub full_ships: Counter,
+}
+
+impl PeerObs {
+    fn new(addr: String) -> Self {
+        Self {
+            addr,
+            last_settled_ms: AtomicU64::new(u64::MAX),
+            bytes_shipped: Counter::new(),
+            ships: Counter::new(),
+            full_ships: Counter::new(),
+        }
+    }
+
+    /// Record one delivered frame.
+    pub fn note_ship(&self, bytes: u64, full: bool) {
+        self.ships.inc();
+        self.bytes_shipped.add(bytes);
+        if full {
+            self.full_ships.inc();
+        }
+    }
+
+    /// Mark this channel settled (everything acked through the probed
+    /// stamp) as of `now` ([`now_ms`]).
+    pub fn note_settled(&self, now: u64) {
+        self.last_settled_ms.store(now, Ordering::Relaxed);
+    }
+
+    /// `Some(lag in ms)` once the channel has settled at least once.
+    pub fn lag_ms(&self, now: u64) -> Option<u64> {
+        let last = self.last_settled_ms.load(Ordering::Relaxed);
+        if last == u64::MAX {
+            None
+        } else {
+            Some(now.saturating_sub(last))
+        }
+    }
+}
+
+/// Live accuracy of one CONTRACT pair: the observed per-repeat
+/// residual spread vs the paper's `8·‖A‖‖B‖/√Πm` deviation bound —
+/// the Ahle–Knudsen-style guarantee as a gauge instead of only a
+/// bench assertion. See `store::tensor::contract::contract_accuracy`
+/// for what exactly is measured.
+#[derive(Debug)]
+pub struct ContractObs {
+    /// `"a_name/b_name"`
+    pub pair: String,
+    pub residual: Gauge,
+    pub bound: Gauge,
+    /// `residual / bound` — healthy sketches sit well below 1.0
+    pub ratio: Gauge,
+    pub contracts: Counter,
+}
+
+impl ContractObs {
+    fn new(pair: String) -> Self {
+        Self {
+            pair,
+            residual: Gauge::new(),
+            bound: Gauge::new(),
+            ratio: Gauge::new(),
+            contracts: Counter::new(),
+        }
+    }
+}
+
+/// The process-global metric surface. Every field is recordable
+/// lock-free; the two mutex-guarded tables are touched only at
+/// registration and render time.
+#[derive(Debug)]
+pub struct Registry {
+    /// per-opcode RPC stats, indexed by wire opcode (slot 0 = unknown)
+    rpc: [OpStats; MAX_OPCODE + 1],
+
+    // ---- WAL / group commit ----
+    /// successful physical appends (one per leader group write or
+    /// per-record commit)
+    pub wal_appends: Counter,
+    /// framed bytes durably appended
+    pub wal_bytes: Counter,
+    /// `sync_data` latency per append, µs (fsync mode only)
+    pub wal_fsync_us: Histo,
+    /// frames coalesced per leader group write (the group-commit win,
+    /// as a distribution)
+    pub wal_group_frames: Histo,
+    /// snapshot + WAL rotations completed
+    pub wal_rotations: Counter,
+    /// fail-stop transitions (a WAL write failed; the log refused
+    /// further appends)
+    pub wal_fail_stops: Counter,
+
+    // ---- scan cache ----
+    /// scans answered from a current cache stamp (no work)
+    pub scan_hits: Counter,
+    /// incremental pending-delta folds
+    pub scan_folds: Counter,
+    /// full K-way re-merges (post-rotation / raced fallback)
+    pub scan_rebuilds: Counter,
+
+    // ---- kernel dispatch ----
+    /// scalar-walk dispatches (per batch op)
+    pub kernel_scalar: Counter,
+    /// portable-lane tile dispatches (per tile)
+    pub kernel_portable: Counter,
+    /// AVX2 tile dispatches (per tile)
+    pub kernel_avx2: Counter,
+
+    // ---- fault plane (debug builds arm it; release counts stay 0) ----
+    pub fault_injections: Counter,
+
+    // ---- replication ----
+    pub repl_ticks: Counter,
+    pub repl_settled_ticks: Counter,
+    peers: Mutex<Vec<Arc<PeerObs>>>,
+
+    // ---- tensor plane accuracy ----
+    pub contracts_total: Counter,
+    contracts: Mutex<Vec<Arc<ContractObs>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            rpc: std::array::from_fn(|_| OpStats::default()),
+            wal_appends: Counter::new(),
+            wal_bytes: Counter::new(),
+            wal_fsync_us: Histo::new(),
+            wal_group_frames: Histo::new(),
+            wal_rotations: Counter::new(),
+            wal_fail_stops: Counter::new(),
+            scan_hits: Counter::new(),
+            scan_folds: Counter::new(),
+            scan_rebuilds: Counter::new(),
+            kernel_scalar: Counter::new(),
+            kernel_portable: Counter::new(),
+            kernel_avx2: Counter::new(),
+            fault_injections: Counter::new(),
+            repl_ticks: Counter::new(),
+            repl_settled_ticks: Counter::new(),
+            peers: Mutex::new(Vec::new()),
+            contracts_total: Counter::new(),
+            contracts: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record one served request: opcode, end-to-end latency, and
+    /// whether the response was `STATUS_OK`. Opcodes above
+    /// [`MAX_OPCODE`] account to slot 0 (unknown) — never a panic.
+    pub fn rpc_observe(&self, opcode: u8, us: u64, ok: bool) {
+        let slot = if (opcode as usize) <= MAX_OPCODE { opcode as usize } else { 0 };
+        if let Some(st) = self.rpc.get(slot) {
+            st.requests.inc();
+            if !ok {
+                st.errors.inc();
+            }
+            st.latency_us.record(us);
+        }
+    }
+
+    /// Per-opcode stats, if the opcode is in table range.
+    pub fn rpc(&self, opcode: u8) -> Option<&OpStats> {
+        self.rpc.get(opcode as usize)
+    }
+
+    /// Register (or look up) the exported slot for one replication
+    /// peer. Idempotent per address; past [`MAX_DYNAMIC_SLOTS`] every
+    /// new address shares the overflow slot.
+    pub fn register_peer(&self, addr: &str) -> Arc<PeerObs> {
+        let mut peers = match self.peers.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(p) = peers.iter().find(|p| p.addr == addr) {
+            return p.clone();
+        }
+        let effective = if peers.len() >= MAX_DYNAMIC_SLOTS {
+            "overflow".to_string()
+        } else {
+            addr.to_string()
+        };
+        if let Some(p) = peers.iter().find(|p| p.addr == effective) {
+            return p.clone();
+        }
+        let slot = Arc::new(PeerObs::new(effective));
+        peers.push(slot.clone());
+        slot
+    }
+
+    /// Update the live accuracy gauge for one contraction pair.
+    pub fn note_contract(&self, a_name: &str, b_name: &str, residual: f64, bound: f64) {
+        self.contracts_total.inc();
+        let pair = format!("{a_name}/{b_name}");
+        let mut slots = match self.contracts.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let slot = match slots.iter().find(|c| c.pair == pair) {
+            Some(c) => c.clone(),
+            None => {
+                let key =
+                    if slots.len() >= MAX_DYNAMIC_SLOTS { "overflow".to_string() } else { pair };
+                match slots.iter().find(|c| c.pair == key) {
+                    Some(c) => c.clone(),
+                    None => {
+                        let c = Arc::new(ContractObs::new(key));
+                        slots.push(c.clone());
+                        c
+                    }
+                }
+            }
+        };
+        drop(slots);
+        slot.contracts.inc();
+        slot.residual.set(residual);
+        slot.bound.set(bound);
+        slot.ratio.set(if bound > 0.0 { residual / bound } else { 0.0 });
+    }
+
+    /// Registered peer slots (render + `hocs top`).
+    pub fn peer_slots(&self) -> Vec<Arc<PeerObs>> {
+        match self.peers.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    /// Registered contraction-pair slots.
+    pub fn contract_slots(&self) -> Vec<Arc<ContractObs>> {
+        match self.contracts.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    /// Render the whole registry as Prometheus-style text. Panic-free
+    /// by construction (served through the METRICS opcode).
+    pub fn render_into(&self, out: &mut String) {
+        use super::expo::{render_histogram, render_sample};
+        // per-opcode RPC families: every table opcode renders its
+        // counters (zeros included — stable names for scrapers), but
+        // histograms only once they hold samples
+        for o in crate::store::wire_ops::ALL {
+            let Some(st) = self.rpc.get(o.code as usize) else { continue };
+            render_sample(
+                out,
+                "hocs_rpc_requests_total",
+                &[("op", o.name)],
+                st.requests.get() as f64,
+            );
+        }
+        for o in crate::store::wire_ops::ALL {
+            let Some(st) = self.rpc.get(o.code as usize) else { continue };
+            render_sample(out, "hocs_rpc_errors_total", &[("op", o.name)], st.errors.get() as f64);
+        }
+        for o in crate::store::wire_ops::ALL {
+            let Some(st) = self.rpc.get(o.code as usize) else { continue };
+            if st.latency_us.count() > 0 {
+                render_histogram(out, "hocs_rpc_latency_us", &[("op", o.name)], &st.latency_us);
+            }
+        }
+        if let Some(st) = self.rpc.first() {
+            if st.requests.get() > 0 {
+                render_sample(
+                    out,
+                    "hocs_rpc_requests_total",
+                    &[("op", "UNKNOWN")],
+                    st.requests.get() as f64,
+                );
+            }
+        }
+
+        render_sample(out, "hocs_wal_appends_total", &[], self.wal_appends.get() as f64);
+        render_sample(out, "hocs_wal_bytes_total", &[], self.wal_bytes.get() as f64);
+        render_sample(out, "hocs_wal_rotations_total", &[], self.wal_rotations.get() as f64);
+        render_sample(out, "hocs_wal_fail_stops_total", &[], self.wal_fail_stops.get() as f64);
+        render_histogram(out, "hocs_wal_fsync_us", &[], &self.wal_fsync_us);
+        render_histogram(out, "hocs_wal_group_frames", &[], &self.wal_group_frames);
+
+        render_sample(out, "hocs_scan_cache_hits_total", &[], self.scan_hits.get() as f64);
+        render_sample(out, "hocs_scan_cache_folds_total", &[], self.scan_folds.get() as f64);
+        render_sample(out, "hocs_scan_cache_rebuilds_total", &[], self.scan_rebuilds.get() as f64);
+        let scans = self.scan_hits.get() + self.scan_folds.get() + self.scan_rebuilds.get();
+        let ratio = if scans == 0 { 0.0 } else { self.scan_hits.get() as f64 / scans as f64 };
+        render_sample(out, "hocs_scan_cache_hit_ratio", &[], ratio);
+
+        render_sample(
+            out,
+            "hocs_kernel_dispatch_total",
+            &[("path", "scalar")],
+            self.kernel_scalar.get() as f64,
+        );
+        render_sample(
+            out,
+            "hocs_kernel_dispatch_total",
+            &[("path", "portable")],
+            self.kernel_portable.get() as f64,
+        );
+        render_sample(
+            out,
+            "hocs_kernel_dispatch_total",
+            &[("path", "avx2")],
+            self.kernel_avx2.get() as f64,
+        );
+
+        render_sample(out, "hocs_fault_injections_total", &[], self.fault_injections.get() as f64);
+
+        render_sample(out, "hocs_repl_ticks_total", &[], self.repl_ticks.get() as f64);
+        render_sample(
+            out,
+            "hocs_repl_settled_ticks_total",
+            &[],
+            self.repl_settled_ticks.get() as f64,
+        );
+        let now = now_ms();
+        for p in self.peer_slots() {
+            let synced = p.lag_ms(now);
+            render_sample(
+                out,
+                "hocs_repl_peer_synced",
+                &[("peer", &p.addr)],
+                if synced.is_some() { 1.0 } else { 0.0 },
+            );
+            if let Some(lag) = synced {
+                render_sample(out, "hocs_repl_peer_lag_ms", &[("peer", &p.addr)], lag as f64);
+            }
+            render_sample(
+                out,
+                "hocs_repl_peer_bytes_total",
+                &[("peer", &p.addr)],
+                p.bytes_shipped.get() as f64,
+            );
+            render_sample(
+                out,
+                "hocs_repl_peer_ships_total",
+                &[("peer", &p.addr)],
+                p.ships.get() as f64,
+            );
+            render_sample(
+                out,
+                "hocs_repl_peer_full_ships_total",
+                &[("peer", &p.addr)],
+                p.full_ships.get() as f64,
+            );
+        }
+
+        render_sample(out, "hocs_contracts_total", &[], self.contracts_total.get() as f64);
+        for c in self.contract_slots() {
+            render_sample(out, "hocs_contract_residual", &[("pair", &c.pair)], c.residual.get());
+            render_sample(out, "hocs_contract_bound", &[("pair", &c.pair)], c.bound.get());
+            render_sample(out, "hocs_contract_ratio", &[("pair", &c.pair)], c.ratio.get());
+        }
+    }
+}
+
+/// The process-global registry every instrumentation site records
+/// into. Unit tests that need isolation construct their own
+/// [`Registry`] instead.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Monotonic milliseconds since the first observability call in this
+/// process — the clock behind replication-lag gauges and the tracing
+/// ring's span stamps.
+pub fn now_ms() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_percentiles_bracket_samples() {
+        let h = Histo::new();
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(50_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 50_000);
+        let p50 = h.percentile(0.5);
+        assert!((64..=128).contains(&p50), "p50={p50}");
+        assert!(h.percentile(0.999) >= 32_768);
+    }
+
+    #[test]
+    fn rpc_slots_are_total_over_u8() {
+        let r = Registry::new();
+        // no opcode value may panic or be dropped
+        for code in 0..=u8::MAX {
+            r.rpc_observe(code, 5, code % 2 == 0);
+        }
+        let total: u64 = (0..=MAX_OPCODE)
+            .filter_map(|i| r.rpc.get(i))
+            .map(|s| s.requests.get())
+            .sum();
+        assert_eq!(total, 256);
+    }
+
+    #[test]
+    fn peer_registration_is_idempotent_and_bounded() {
+        let r = Registry::new();
+        let a = r.register_peer("n1:7000");
+        let b = r.register_peer("n1:7000");
+        assert!(Arc::ptr_eq(&a, &b));
+        for i in 0..(MAX_DYNAMIC_SLOTS + 10) {
+            r.register_peer(&format!("peer-{i}"));
+        }
+        assert!(r.peer_slots().len() <= MAX_DYNAMIC_SLOTS + 2);
+    }
+
+    #[test]
+    fn contract_gauge_tracks_last_value() {
+        let r = Registry::new();
+        r.note_contract("a", "b", 0.5, 2.0);
+        r.note_contract("a", "b", 1.0, 4.0);
+        let slots = r.contract_slots();
+        assert_eq!(slots.len(), 1);
+        let c = &slots[0];
+        assert_eq!(c.pair, "a/b");
+        assert_eq!(c.contracts.get(), 2);
+        assert_eq!(c.residual.get(), 1.0);
+        assert_eq!(c.ratio.get(), 0.25);
+    }
+}

@@ -1,0 +1,278 @@
+//! Low-overhead tracing: per-thread ring-buffer span log + slow-request log.
+//!
+//! A [`span`] guard stamps a monotonic start time on construction and
+//! records `(name, start, duration, thread)` into the calling thread's
+//! ring on drop. When tracing is disabled (the default) the guard
+//! holds `None` and both ends cost one relaxed atomic load — no clock
+//! read, no ring touch, no allocation. Rings are fixed-size (
+//! [`RING_CAP`] records) and overwrite oldest-first on overflow,
+//! counting what they dropped; they are registered once per thread in
+//! a global table and drained on demand by [`drain`] (exposition,
+//! `hocs top`) without stopping writers.
+//!
+//! The slow-request log is orthogonal: when a threshold is armed via
+//! [`set_slow_threshold_us`], the server loop calls [`note_slow`] for
+//! any request over it, into a bounded deque drained alongside
+//! METRICS output.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Records per thread ring. 1024 × 32 B keeps a busy thread's recent
+/// ~millisecond history without measurable cache pressure.
+pub const RING_CAP: usize = 1024;
+
+/// Cap on retained slow-request lines.
+pub const SLOW_LOG_CAP: usize = 64;
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// start, monotonic ms since process obs epoch (see
+    /// [`super::registry::now_ms`])
+    pub start_ms: u64,
+    pub dur_us: u64,
+    /// recording thread, as `thread::current().id()` debug text
+    /// (shared — formatted once per thread, refcounted per record)
+    pub thread: Arc<str>,
+}
+
+#[derive(Debug, Default)]
+struct RingInner {
+    buf: Vec<SpanRec>,
+    /// next write position once `buf` is full (wraparound overwrite)
+    next: usize,
+    dropped: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    inner: Mutex<RingInner>,
+}
+
+impl Ring {
+    /// Returns `true` when the push overwrote (dropped) an old record.
+    fn push(&self, rec: SpanRec) -> bool {
+        let mut st = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if st.buf.len() < RING_CAP {
+            st.buf.push(rec);
+            false
+        } else {
+            let at = st.next;
+            if let Some(slot) = st.buf.get_mut(at) {
+                *slot = rec;
+            }
+            st.next = (at + 1) % RING_CAP;
+            st.dropped += 1;
+            true
+        }
+    }
+
+    /// Oldest-first snapshot plus the overwrite count, leaving the
+    /// ring empty.
+    fn drain(&self) -> (Vec<SpanRec>, u64) {
+        let mut st = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let split = st.next.min(st.buf.len());
+        let mut out: Vec<SpanRec> = st.buf.get(split..).map(|s| s.to_vec()).unwrap_or_default();
+        out.extend(st.buf.get(..split).map(|s| s.to_vec()).unwrap_or_default());
+        let dropped = st.dropped;
+        st.buf.clear();
+        st.next = 0;
+        st.dropped = 0;
+        (out, dropped)
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SPANS_TOTAL: AtomicU64 = AtomicU64::new(0);
+static DROPPED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static SLOW_THRESHOLD_US: AtomicU64 = AtomicU64::new(0);
+
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn slow_log() -> &'static Mutex<std::collections::VecDeque<String>> {
+    static LOG: OnceLock<Mutex<std::collections::VecDeque<String>>> = OnceLock::new();
+    LOG.get_or_init(|| Mutex::new(std::collections::VecDeque::new()))
+}
+
+thread_local! {
+    static THREAD_RING: Arc<Ring> = {
+        let ring = Arc::new(Ring::default());
+        if let Ok(mut table) = rings().lock() {
+            table.push(ring.clone());
+        }
+        ring
+    };
+
+    /// Thread id debug text, formatted once — span drops must not
+    /// allocate (the ≤3% instrumentation-overhead contract).
+    static THREAD_LABEL: Arc<str> = format!("{:?}", std::thread::current().id()).into();
+}
+
+/// Turn span recording on/off process-wide. Off is the default and
+/// makes every [`span`] guard a near-no-op.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Total spans recorded since process start (across all threads).
+pub fn spans_total() -> u64 {
+    SPANS_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Total ring overwrites (recorded spans that were evicted unread).
+pub fn dropped_total() -> u64 {
+    DROPPED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// RAII span guard: created by [`span`] / the `span!` macro, records
+/// its duration into the thread ring on drop.
+#[derive(Debug)]
+pub struct Span {
+    name: &'static str,
+    /// `None` when tracing was disabled at construction — drop is a
+    /// no-op then
+    start: Option<Instant>,
+    start_ms: u64,
+}
+
+impl Span {
+    /// Duration so far, µs (0 when tracing is disabled).
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0)
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let rec = SpanRec {
+            name: self.name,
+            start_ms: self.start_ms,
+            dur_us: start.elapsed().as_micros() as u64,
+            thread: THREAD_LABEL.with(Arc::clone),
+        };
+        SPANS_TOTAL.fetch_add(1, Ordering::Relaxed);
+        THREAD_RING.with(|ring| {
+            if ring.push(rec) {
+                DROPPED_TOTAL.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+}
+
+/// Open a span. One relaxed load when tracing is off; `name` must be
+/// a static literal (dot-separated convention: `"wal.group_commit"`).
+pub fn span(name: &'static str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { name, start: None, start_ms: 0 };
+    }
+    Span { name, start: Some(Instant::now()), start_ms: super::registry::now_ms() }
+}
+
+/// `span!("wal.group_commit")` — sugar for [`span`] that binds the
+/// guard to a hidden local so it lives to end of scope.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        let _obs_span = $crate::obs::trace::span($name);
+    };
+}
+
+/// Drain every thread's ring: oldest-first per thread, rings left
+/// empty. Returns all records plus the total overwrite count since
+/// the last drain.
+pub fn drain() -> (Vec<SpanRec>, u64) {
+    let table: Vec<Arc<Ring>> = match rings().lock() {
+        Ok(g) => g.clone(),
+        Err(p) => p.into_inner().clone(),
+    };
+    let mut out = Vec::new();
+    let mut dropped = 0;
+    for ring in table {
+        let (mut recs, d) = ring.drain();
+        out.append(&mut recs);
+        dropped += d;
+    }
+    (out, dropped)
+}
+
+/// Drain only the calling thread's ring (deterministic for tests).
+pub fn drain_current() -> (Vec<SpanRec>, u64) {
+    THREAD_RING.with(|ring| ring.drain())
+}
+
+/// Arm (µs > 0) or disarm (0) the slow-request log.
+pub fn set_slow_threshold_us(us: u64) {
+    SLOW_THRESHOLD_US.store(us, Ordering::Relaxed);
+}
+
+pub fn slow_threshold_us() -> u64 {
+    SLOW_THRESHOLD_US.load(Ordering::Relaxed)
+}
+
+/// Append one line to the slow-request log (oldest evicted past
+/// [`SLOW_LOG_CAP`]). Callers check [`slow_threshold_us`] first so
+/// the common case never formats anything.
+pub fn note_slow(line: String) {
+    let mut log = match slow_log().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    if log.len() >= SLOW_LOG_CAP {
+        log.pop_front();
+    }
+    log.push_back(line);
+}
+
+/// Take every retained slow-request line.
+pub fn drain_slow() -> Vec<String> {
+    let mut log = match slow_log().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    log.drain(..).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        set_enabled(false);
+        drain_current();
+        {
+            let s = span("test.noop");
+            assert_eq!(s.elapsed_us(), 0);
+        }
+        let (recs, _) = drain_current();
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn slow_log_is_bounded() {
+        drain_slow();
+        for i in 0..(SLOW_LOG_CAP + 10) {
+            note_slow(format!("req {i}"));
+        }
+        let lines = drain_slow();
+        assert_eq!(lines.len(), SLOW_LOG_CAP);
+        assert_eq!(lines.first().map(String::as_str), Some("req 10"));
+    }
+}

@@ -264,6 +264,8 @@ pub(crate) fn hash_tile_2d(
     out_b: &mut Vec<u32>,
     out_v: &mut Vec<f64>,
 ) {
+    // dispatch counters record the branch actually taken (per tile,
+    // not per element — negligible against the tile's hash work)
     match path {
         KernelPath::Avx2 => {
             #[cfg(target_arch = "x86_64")]
@@ -272,11 +274,16 @@ pub(crate) fn hash_tile_2d(
                 // `is_x86_feature_detected!("avx2")` succeeded, and the
                 // guard pins the pow2 geometry the AVX2 tile requires.
                 unsafe { avx2::hash_tile(h, items, out_b, out_v) };
+                crate::obs::global().kernel_avx2.inc();
                 return;
             }
+            crate::obs::global().kernel_portable.inc();
             hash_tile_2d_portable(h, items, out_b, out_v);
         }
-        _ => hash_tile_2d_portable(h, items, out_b, out_v),
+        _ => {
+            crate::obs::global().kernel_portable.inc();
+            hash_tile_2d_portable(h, items, out_b, out_v);
+        }
     }
 }
 

@@ -194,6 +194,7 @@ impl StreamSketch {
         };
         let path = kernel::configured();
         if path == kernel::KernelPath::Scalar || first.m1 * first.m2 > u32::MAX as usize {
+            crate::obs::global().kernel_scalar.inc();
             Self::update_batch_fanout_scalar(targets, items);
             return;
         }
@@ -273,6 +274,7 @@ impl StreamSketch {
     pub fn update_batch(&mut self, items: &[(usize, usize, f64)]) {
         let path = kernel::configured();
         if path == kernel::KernelPath::Scalar || self.m1 * self.m2 > u32::MAX as usize {
+            crate::obs::global().kernel_scalar.inc();
             self.update_batch_scalar(items);
             return;
         }

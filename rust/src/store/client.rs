@@ -509,6 +509,16 @@ impl StoreClient {
         Ok(body.first().copied() == Some(1))
     }
 
+    /// Scrape the server's observability plane: Prometheus-style text
+    /// (see [`crate::obs`] for the metric catalog). Idempotent:
+    /// retried once on a fresh connection after a transient
+    /// disconnect.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.begin(op::METRICS);
+        let body = self.call_idempotent()?;
+        Ok(String::from_utf8_lossy(body).into_owned())
+    }
+
     /// Ask the server to stop accepting connections and exit.
     pub fn shutdown_server(&mut self) -> Result<()> {
         self.begin(op::SHUTDOWN);

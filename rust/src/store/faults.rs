@@ -98,7 +98,11 @@ mod armed {
         let mut reg = registry().lock().unwrap();
         let st = reg.get_mut(site)?;
         st.hits += 1;
-        (st.hits >= st.nth).then_some(st.action)
+        let action = (st.hits >= st.nth).then_some(st.action);
+        if action.is_some() {
+            crate::obs::global().fault_injections.inc();
+        }
+        action
     }
 
     /// Failpoint at a non-write operation (rename, sync, truncate,

@@ -296,10 +296,14 @@ struct Peer {
     /// scan came back empty for this peer (the cheap-probe analogue of
     /// `acked_version` for the tensor plane)
     tensor_synced: u64,
+    /// this channel's exported slot in the global metrics registry
+    /// (lag gauge, ship/byte counters)
+    obs: std::sync::Arc<crate::obs::registry::PeerObs>,
 }
 
 impl Peer {
     fn new(addr: String, cfg: &StoreConfig) -> Self {
+        let obs = crate::obs::global().register_peer(&addr);
         Self {
             addr,
             client: None,
@@ -314,6 +318,7 @@ impl Peer {
             backoff_until: Instant::now(),
             tensor_acked: HashMap::new(),
             tensor_synced: 0,
+            obs,
         }
     }
 
@@ -493,12 +498,24 @@ fn run(
         // the probed stamp — a partitioned or never-reached peer makes
         // the age grow (or stay "never") instead of masking the outage
         // behind a liveness tick
-        let settled = peers.iter().all(|p| {
-            p.synced_once
+        let now_ms = crate::obs::now_ms();
+        let mut settled = true;
+        for p in peers.iter() {
+            let peer_settled = p.synced_once
                 && p.pending.is_none()
                 && p.acked_version >= stamp
-                && p.tensor_synced >= tstamp
-        });
+                && p.tensor_synced >= tstamp;
+            if peer_settled {
+                // per-peer lag gauge: now − last settled tick
+                p.obs.note_settled(now_ms);
+            } else {
+                settled = false;
+            }
+        }
+        crate::obs::global().repl_ticks.inc();
+        if settled {
+            crate::obs::global().repl_settled_ticks.inc();
+        }
         counters.note_tick(cursor, settled);
     }
     crate::log_info!("replicator: stopping");
@@ -593,6 +610,7 @@ fn sync_peer(p: &mut Peer, snap: &StreamSketch, version: u64, ctx: &SyncCtx<'_>)
                     return;
                 }
                 ctx.counters.note_ship(done.frame.len() as u64, done.full);
+                p.obs.note_ship(done.frame.len() as u64, done.full);
                 p.acked = done.snap;
                 p.acked_version = done.version;
                 p.next_seq += 1;
@@ -675,6 +693,7 @@ fn sync_tensors(p: &mut Peer, tstamp: u64, ctx: &SyncCtx<'_>) {
                 // applied or deduped — either way the peer holds this
                 // tensor's mass through `version`
                 ctx.counters.note_ship(frame.len() as u64, true);
+                p.obs.note_ship(frame.len() as u64, true);
                 p.tensor_acked.insert(name, version);
             }
             Err(e) => {

@@ -404,10 +404,25 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
         // `busy` spans handle + respond: the shutdown drain in
         // [`StoreServer::drop`] waits for in-flight requests to finish
         // and flush, so an acknowledged write is never cut off mid-frame
+        let opcode = req.first().copied().unwrap_or(0);
+        let t0 = std::time::Instant::now();
         shared.busy.fetch_add(1, Ordering::SeqCst);
-        let shutdown = handle_request(&req, &shared, &mut resp);
+        let shutdown = {
+            let _span = crate::obs::trace::span(op::name(opcode).unwrap_or("rpc.unknown"));
+            handle_request(&req, &shared, &mut resp)
+        };
         let responded = write_frame(&mut stream, &resp).is_ok();
         shared.busy.fetch_sub(1, Ordering::SeqCst);
+        let us = t0.elapsed().as_micros() as u64;
+        let ok = resp.first().copied() == Some(STATUS_OK);
+        crate::obs::global().rpc_observe(opcode, us, ok);
+        let slow = crate::obs::trace::slow_threshold_us();
+        if slow > 0 && us >= slow {
+            crate::obs::trace::note_slow(format!(
+                "{} {us}us ok={ok}",
+                op::name(opcode).unwrap_or("UNKNOWN")
+            ));
+        }
         if !responded {
             break;
         }
@@ -702,6 +717,9 @@ fn dispatch(req: &[u8], shared: &Shared, body: &mut Vec<u8>) -> Result<bool> {
                 shared.repl.note_deduped();
             }
             codec::put_u8(body, u8::from(applied));
+        }
+        op::METRICS => {
+            body.extend_from_slice(crate::obs::render_text().as_bytes());
         }
         op::SHUTDOWN => return Ok(true),
         other => bail!("{}", op::unknown(other)),

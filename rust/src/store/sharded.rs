@@ -657,6 +657,7 @@ impl ShardedStore {
     /// a raced attempt is safe because absorbed deltas were cleared.
     fn refresh_scan_cache(&self, cache: &mut ScanCache) {
         if cache.version == self.version.load(Ordering::SeqCst) && cache.epoch == self.epoch() {
+            crate::obs::global().scan_hits.inc();
             return;
         }
         // something changed — whatever refresh path runs, the memoized
@@ -681,6 +682,7 @@ impl ShardedStore {
                 }
                 if self.version.load(Ordering::SeqCst) == v0 {
                     cache.version = v0;
+                    crate::obs::global().scan_folds.inc();
                     return;
                 }
                 // writers raced the fold; retry for an exact stamp
@@ -701,6 +703,7 @@ impl ShardedStore {
         cache.merged = merged;
         cache.version = self.version.load(Ordering::SeqCst);
         cache.epoch = self.epoch();
+        crate::obs::global().scan_rebuilds.inc();
     }
 
     /// Merge a same-family sketch from outside (another node, a batch

@@ -81,6 +81,35 @@ pub fn contract_scalar(a: &HcsStream, b: &HcsStream) -> f64 {
     median_inplace(&mut est)
 }
 
+/// Live accuracy of the scalar estimator, computed **on the sketches**
+/// (the true value is long gone in a streaming store): `(residual,
+/// bound)` where `residual` is the median absolute deviation of the d
+/// per-repeat estimates from their median — an observable proxy for
+/// the estimator's spread — and `bound` is the paper's theoretical
+/// per-repeat deviation scale `8·‖A‖·‖B‖/√Πm`, with each operand norm
+/// estimated as the median per-repeat table L2 norm (`‖HCS(A)‖₂ ≈
+/// ‖A‖₂` in expectation by sign cancellation). A healthy sketch keeps
+/// `residual / bound` well below 1; drift toward or past 1 means the
+/// sketch is too small for the mass it carries. Feeds the
+/// `hocs_contract_*` gauges (see [`crate::obs`]).
+pub fn contract_accuracy(a: &HcsStream, b: &HcsStream) -> (f64, f64) {
+    let per_repeat: Vec<f64> = (0..a.d)
+        .map(|r| a.table(r).iter().zip(b.table(r).iter()).map(|(x, y)| x * y).sum())
+        .collect();
+    let mut center = per_repeat.clone();
+    let center = median_inplace(&mut center);
+    let mut devs: Vec<f64> = per_repeat.iter().map(|e| (e - center).abs()).collect();
+    let residual = median_inplace(&mut devs);
+    let norm = |t: &HcsStream| -> f64 {
+        let mut norms: Vec<f64> =
+            (0..t.d).map(|r| t.table(r).iter().map(|v| v * v).sum::<f64>().sqrt()).collect();
+        median_inplace(&mut norms)
+    };
+    let m: f64 = a.sketch_dims().iter().map(|&m| m as f64).product();
+    let bound = 8.0 * norm(a) * norm(b) / m.sqrt();
+    (residual, bound)
+}
+
 /// Partial contraction: per repeat, reshape both tables to
 /// `[kept buckets × contracted buckets]` matrices and multiply
 /// `A · Bᵀ`, giving the contracted table over
@@ -397,6 +426,27 @@ mod tests {
         assert!(
             (est - truth).abs() <= bound.max(0.05 * truth.abs()),
             "estimate {est} vs truth {truth} (bound {bound})"
+        );
+    }
+
+    #[test]
+    fn contract_accuracy_residual_sits_inside_the_theoretical_bound() {
+        let dims = [12, 10, 8];
+        let (da, db, a, b) = pair(&dims, &[10, 8, 8], 7, 5, 4000);
+        let (residual, bound) = contract_accuracy(&a, &b);
+        assert!(residual >= 0.0 && bound > 0.0);
+        // the per-repeat spread is what the bound bounds (up to the
+        // sketch-side norm proxy), so the observed ratio stays < 1
+        assert!(residual <= bound, "residual {residual} vs bound {bound}");
+        // the sketch-side norm proxy tracks the dense norms
+        let dense_norm: f64 = (da.iter().map(|x| x * x).sum::<f64>()
+            * db.iter().map(|y| y * y).sum::<f64>())
+        .sqrt();
+        let m: usize = [10usize, 8, 8].iter().product();
+        let dense_bound = 8.0 * dense_norm / (m as f64).sqrt();
+        assert!(
+            bound <= 4.0 * dense_bound && bound >= dense_bound / 4.0,
+            "sketched bound {bound} vs dense bound {dense_bound}"
         );
     }
 

@@ -253,9 +253,12 @@ impl HcsStream {
         debug_assert_eq!(keys.len(), ws.len() * order);
         let path = kernel::configured();
         if path == kernel::KernelPath::Scalar || self.tables[0].len() > u32::MAX as usize {
+            crate::obs::global().kernel_scalar.inc();
             self.update_batch_scalar(keys, ws);
             return;
         }
+        // the N-D hash walk is the portable lane kernel (no AVX2 tile)
+        crate::obs::global().kernel_portable.inc();
         kernel::with_scratch(|s| {
             for r in 0..self.d {
                 let hash = kernel::HashNd::new(&self.modes[r], &self.strides, ws.len());
@@ -306,9 +309,11 @@ impl HcsStream {
         };
         let path = kernel::configured();
         if path == kernel::KernelPath::Scalar || first.tables[0].len() > u32::MAX as usize {
+            crate::obs::global().kernel_scalar.inc();
             Self::update_batch_fanout_scalar(targets, keys, ws);
             return;
         }
+        crate::obs::global().kernel_portable.inc();
         debug_assert!(targets.windows(2).all(|p| p[0].same_family(&p[1])));
         let order = targets[0].order();
         debug_assert_eq!(keys.len(), ws.len() * order);

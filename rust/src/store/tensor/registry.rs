@@ -589,7 +589,14 @@ impl TensorRegistry {
             a.hcs.same_family(&b.hcs),
             "tensors {a_name:?} and {b_name:?} are not the same sketch family"
         );
-        contract::contract(&a.hcs, &b.hcs, contracted)
+        let out = contract::contract(&a.hcs, &b.hcs, contracted)?;
+        if matches!(out, ContractOutput::Scalar(_)) {
+            // live accuracy gauge: observed per-repeat spread vs the
+            // paper's 8·‖A‖‖B‖/√Πm deviation scale (see obs catalog)
+            let (residual, bound) = contract::contract_accuracy(&a.hcs, &b.hcs);
+            crate::obs::global().note_contract(a_name, b_name, residual, bound);
+        }
+        Ok(out)
     }
 
     /// Tensors with unshipped locally-originated mass: every entry

@@ -533,8 +533,12 @@ impl WalWriter {
         self.file.flush()?;
         if self.sync {
             faults::fire("wal.sync")?;
+            let t0 = std::time::Instant::now();
             self.file.sync_data().context("syncing WAL append")?;
+            crate::obs::global().wal_fsync_us.record(t0.elapsed().as_micros() as u64);
         }
+        crate::obs::global().wal_appends.inc();
+        crate::obs::global().wal_bytes.add(framed.len() as u64);
         Ok(())
     }
 }
@@ -613,6 +617,7 @@ impl GroupCommitLog {
             };
             if let Err(e) = writer.append_frames(frame) {
                 st.writer = None;
+                crate::obs::global().wal_fail_stops.inc();
                 return Err(e.context("WAL append failed; store is now fail-stopped"));
             }
             return Ok(());
@@ -638,6 +643,9 @@ impl GroupCommitLog {
                 // broken invariant as fail-stop, not a panic.
                 let chunk = std::mem::take(&mut st.staged);
                 let group_lsn = st.staged_lsn;
+                // group size = LSNs this write makes durable, measured
+                // before the lock drops (durable_lsn may move after)
+                let group_frames = group_lsn.saturating_sub(st.durable_lsn);
                 let Some(mut writer) = st.writer.take() else {
                     return Err(failstop_error());
                 };
@@ -646,7 +654,10 @@ impl GroupCommitLog {
                 // across the group write so followers can stage
                 drop(st);
                 drop(ldq);
-                let res = writer.append_frames(&chunk);
+                let res = {
+                    let _span = crate::obs::trace::span("wal.group_commit");
+                    writer.append_frames(&chunk)
+                };
                 ldq = lockdep::acquire(lockdep::WAL_QUEUE, 0);
                 // lint: allow(no-panic-paths) queue poison propagates the fail-stop panic, as above
                 st = self.state.lock().expect("wal lock");
@@ -657,12 +668,14 @@ impl GroupCommitLog {
                         if group_lsn > st.durable_lsn {
                             st.durable_lsn = group_lsn;
                         }
+                        crate::obs::global().wal_group_frames.record(group_frames);
                         self.cv.notify_all();
                         // loop re-checks: durable_lsn now covers us
                     }
                     Err(e) => {
                         // fail-stop (writer stays None); wake everyone
                         // so followers observe it and error out
+                        crate::obs::global().wal_fail_stops.inc();
                         self.cv.notify_all();
                         return Err(e.context(
                             "WAL append failed; store is now fail-stopped",
@@ -1423,6 +1436,7 @@ impl DurableStore {
                 // doubt and the WAL is still at g — appends there would
                 // be skipped by recovery, so fail-stop
                 st.writer = None;
+                crate::obs::global().wal_fail_stops.inc();
                 return Err(e.context(
                     "snapshot installed but not durably synced; \
                      fail-stopping writes (reopen the store to recover)",
@@ -1437,10 +1451,12 @@ impl DurableStore {
         ) {
             Ok(w) => {
                 st.writer = Some(w);
+                crate::obs::global().wal_rotations.inc();
                 Ok(())
             }
             Err(e) => {
                 st.writer = None;
+                crate::obs::global().wal_fail_stops.inc();
                 Err(e.context(
                     "WAL rotation failed after the snapshot rename; \
                      fail-stopping writes (reopen the store to recover)",

@@ -63,6 +63,11 @@ pub const CONTRACT: u8 = 19;
 /// Unknown tensors are auto-created from the frame's family;
 /// per-(origin, tensor) sequence dedup makes retries no-ops.
 pub const TMERGE_ORIGIN: u8 = 20;
+/// Empty body → Prometheus-style text: the whole observability plane
+/// ([`crate::obs`]) — per-opcode request histograms, WAL group/fsync
+/// distributions, scan-cache ratio, per-peer replication lag, kernel
+/// dispatch counters, contraction-accuracy gauges.
+pub const METRICS: u8 = 21;
 
 /// First response byte: request handled, body follows.
 pub const STATUS_OK: u8 = 0;
@@ -160,6 +165,7 @@ pub const ALL: &[WireOp] = &[
         client_method: "tensor_merge_origin",
         cli: None,
     },
+    WireOp { code: METRICS, name: "METRICS", client_method: "metrics", cli: Some("metrics") },
 ];
 
 /// The name of an opcode, if the table knows it.
@@ -180,18 +186,19 @@ mod tests {
 
     #[test]
     fn table_is_exhaustive_and_consistent() {
-        // codes are dense 1..=20, unique, in table order
+        // codes are dense 1..=21, unique, in table order
         let mut seen = std::collections::HashSet::new();
         for (i, o) in ALL.iter().enumerate() {
             assert_eq!(o.code as usize, i + 1, "opcode {} out of order", o.name);
             assert!(seen.insert(o.code), "duplicate opcode {}", o.code);
             assert!(!o.client_method.is_empty());
         }
-        assert_eq!(ALL.len(), 20);
+        assert_eq!(ALL.len(), 21);
         assert_eq!(name(UPDATE), Some("UPDATE"));
         assert_eq!(name(TMERGE_ORIGIN), Some("TMERGE_ORIGIN"));
+        assert_eq!(name(METRICS), Some("METRICS"));
         assert_eq!(name(0), None);
-        assert_eq!(name(21), None);
+        assert_eq!(name(22), None);
         assert!(unknown(42).contains("42"));
     }
 }

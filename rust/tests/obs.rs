@@ -1,0 +1,193 @@
+//! Observability plane at the public API layer: exposition golden
+//! names + parse round-trip, tracing-ring wraparound, and multi-writer
+//! counter exactness.
+//!
+//! Registry-shape tests run on a **local** `Registry::new()` so the
+//! process-global registry (shared by every test in this binary) can't
+//! pollute the asserted values; only the `render_text` golden touches
+//! the global, and it asserts presence, not counts.
+
+use hocs::obs::registry::Registry;
+use hocs::obs::{expo, trace};
+use std::sync::Arc;
+
+/// Every metric family the exposition contract pins (scraped by the CI
+/// `obs-smoke` job and consumed by `hocs top`). Renaming any of these
+/// is a breaking change to the scrape schema.
+const GOLDEN_FAMILIES: &[&str] = &[
+    "hocs_rpc_requests_total",
+    "hocs_rpc_errors_total",
+    "hocs_rpc_latency_us",
+    "hocs_wal_appends_total",
+    "hocs_wal_bytes_total",
+    "hocs_wal_fsync_us",
+    "hocs_wal_group_frames",
+    "hocs_wal_rotations_total",
+    "hocs_wal_fail_stops_total",
+    "hocs_scan_cache_hits_total",
+    "hocs_scan_cache_folds_total",
+    "hocs_scan_cache_rebuilds_total",
+    "hocs_scan_cache_hit_ratio",
+    "hocs_kernel_dispatch_total",
+    "hocs_fault_injections_total",
+    "hocs_repl_ticks_total",
+    "hocs_repl_settled_ticks_total",
+    "hocs_repl_peer_synced",
+    "hocs_repl_peer_lag_ms",
+    "hocs_repl_peer_bytes_total",
+    "hocs_repl_peer_ships_total",
+    "hocs_contracts_total",
+    "hocs_contract_residual",
+    "hocs_contract_bound",
+    "hocs_contract_ratio",
+];
+
+/// Drive one of everything through a local registry so every family
+/// renders (histograms and peer/contract slots only render once they
+/// have data).
+fn populated_registry() -> Registry {
+    let r = Registry::new();
+    r.rpc_observe(2, 150, true);
+    r.rpc_observe(2, 90, false);
+    r.rpc_observe(9, 4_000, true);
+    r.wal_appends.inc();
+    r.wal_bytes.add(512);
+    r.wal_fsync_us.record(800);
+    r.wal_group_frames.record(3);
+    r.wal_rotations.inc();
+    r.wal_fail_stops.inc();
+    r.scan_hits.add(9);
+    r.scan_folds.inc();
+    r.scan_rebuilds.inc();
+    r.kernel_scalar.inc();
+    r.kernel_portable.add(2);
+    r.kernel_avx2.add(3);
+    r.fault_injections.inc();
+    r.repl_ticks.add(10);
+    r.repl_settled_ticks.add(7);
+    let peer = r.register_peer("127.0.0.1:7100");
+    peer.note_ship(2048, false);
+    peer.note_settled(hocs::obs::now_ms());
+    r.note_contract("a", "b", 0.5, 2.0);
+    r
+}
+
+#[test]
+fn exposition_covers_every_golden_family() {
+    let r = populated_registry();
+    let mut text = String::new();
+    r.render_into(&mut text);
+    for family in GOLDEN_FAMILIES {
+        assert!(text.contains(family), "family {family} missing from exposition:\n{text}");
+    }
+}
+
+#[test]
+fn exposition_parses_back_to_the_recorded_values() {
+    let r = populated_registry();
+    let mut text = String::new();
+    r.render_into(&mut text);
+    let samples = expo::parse(&text);
+
+    let get = |name: &str, label: Option<(&str, &str)>| -> f64 {
+        samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && label.map(|(k, v)| s.label(k) == Some(v)).unwrap_or(true)
+            })
+            .unwrap_or_else(|| panic!("sample {name} {label:?} not found"))
+            .value
+    };
+
+    // per-opcode counters carry the op label (opcode 2 = UPDATE)
+    assert_eq!(get("hocs_rpc_requests_total", Some(("op", "UPDATE"))), 2.0);
+    assert_eq!(get("hocs_rpc_errors_total", Some(("op", "UPDATE"))), 1.0);
+    assert_eq!(get("hocs_rpc_latency_us_count", Some(("op", "UPDATE"))), 2.0);
+    assert_eq!(get("hocs_rpc_latency_us_sum", Some(("op", "UPDATE"))), 240.0);
+    assert_eq!(get("hocs_wal_bytes_total", None), 512.0);
+    assert_eq!(get("hocs_wal_group_frames_count", None), 1.0);
+    assert_eq!(get("hocs_scan_cache_hits_total", None), 9.0);
+    assert!((get("hocs_scan_cache_hit_ratio", None) - 9.0 / 11.0).abs() < 1e-9);
+    assert_eq!(get("hocs_kernel_dispatch_total", Some(("path", "avx2"))), 3.0);
+    assert_eq!(get("hocs_repl_peer_synced", Some(("peer", "127.0.0.1:7100"))), 1.0);
+    assert_eq!(get("hocs_contract_ratio", Some(("pair", "a/b"))), 0.25);
+
+    // histogram buckets reconstruct a percentile consistent with the
+    // registry's own estimate
+    let buckets: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|s| {
+            s.name == "hocs_rpc_latency_us_bucket" && s.label("op") == Some("UPDATE")
+        })
+        .filter_map(|s| s.label("le").and_then(|le| le.parse::<f64>().ok().map(|l| (l, s.value))))
+        .collect();
+    assert!(!buckets.is_empty());
+    let p50 = expo::percentile_from_buckets(&buckets, 0.5);
+    let direct = r.rpc(2).map(|st| st.latency_us.percentile(0.5)).unwrap_or(0);
+    assert_eq!(p50 as u64, direct, "parsed p50 {p50} vs direct {direct}");
+}
+
+#[test]
+fn trace_ring_wraps_and_counts_drops() {
+    // dedicated thread: rings are thread-local, so this is immune to
+    // the other tests' spans even though ENABLED is process-global
+    let handle = std::thread::spawn(|| {
+        trace::set_enabled(true);
+        trace::drain_current(); // discard anything from a prior state
+        let n = trace::RING_CAP + 50;
+        for _ in 0..n {
+            let _s = trace::span("test.wrap");
+        }
+        let out = trace::drain_current();
+        trace::set_enabled(false);
+        out
+    });
+    let (recs, dropped) = handle.join().expect("trace thread");
+    assert_eq!(recs.len(), trace::RING_CAP, "ring must cap at RING_CAP");
+    assert!(dropped >= 50, "expected >=50 overwrites, got {dropped}");
+    assert!(recs.iter().all(|r| r.name == "test.wrap"));
+}
+
+#[test]
+fn slow_log_evicts_oldest_past_cap() {
+    for i in 0..(trace::SLOW_LOG_CAP + 5) {
+        trace::note_slow(format!("slow-{i}"));
+    }
+    let lines = trace::drain_slow();
+    assert_eq!(lines.len(), trace::SLOW_LOG_CAP);
+    assert_eq!(lines.first().map(String::as_str), Some("slow-5"));
+}
+
+#[test]
+fn eight_writer_threads_lose_no_counts() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 50_000;
+    let r = Arc::new(Registry::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    r.wal_appends.inc();
+                    r.wal_bytes.add(3);
+                    r.wal_fsync_us.record((t as u64) * 100 + (i % 7));
+                    r.rpc_observe(2, i % 1000, i % 10 != 0);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("writer thread");
+    }
+    let total = THREADS as u64 * PER_THREAD;
+    assert_eq!(r.wal_appends.get(), total);
+    assert_eq!(r.wal_bytes.get(), 3 * total);
+    assert_eq!(r.wal_fsync_us.count(), total);
+    let st = r.rpc(2).expect("opcode 2 slot");
+    assert_eq!(st.requests.get(), total);
+    assert_eq!(st.errors.get(), total / 10);
+    assert_eq!(st.latency_us.count(), total);
+    let hist_total: u64 = st.latency_us.bucket_counts().iter().sum();
+    assert_eq!(hist_total, total);
+}
